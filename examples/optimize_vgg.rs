@@ -1,0 +1,51 @@
+//! Reproduce Table 5: the optimal VGG-16 strategy on a 4-GPU node, with
+//! the full per-layer breakdown and cost attribution — then show how the
+//! optimum changes when the cluster's interconnect changes (an ablation
+//! the paper's cost model enables but does not print).
+//!
+//! ```sh
+//! cargo run --release --example optimize_vgg
+//! ```
+
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::{ComputeModel, DeviceGraph};
+use optcnn::graph::nets;
+use optcnn::optimizer;
+use optcnn::util::fmt_secs;
+use optcnn::util::table::Table;
+
+fn optimize_on(devices: &DeviceGraph, title: &str) {
+    let ndev = devices.num_devices();
+    let graph = nets::vgg16(32 * ndev);
+    let cm = CostModel::new(&graph, devices);
+    let tables = CostTables::build(&cm, ndev);
+    let opt = optimizer::optimize(&tables);
+
+    let mut table = Table::new(title, &["layer", "config", "t_C", "t_S"]);
+    for l in &graph.layers {
+        let cfg = opt.strategy.config(l.id);
+        table.row(vec![
+            l.name.clone(),
+            cfg.label(),
+            fmt_secs(cm.t_c(l, cfg)),
+            fmt_secs(cm.t_s(l, cfg)),
+        ]);
+    }
+    table.print();
+    println!("estimated step time: {}\n", fmt_secs(opt.cost));
+}
+
+fn main() {
+    // The paper's single node: NVLink-connected 4x P100.
+    optimize_on(
+        &DeviceGraph::p100_cluster(4),
+        "VGG-16 on 4x P100, NVLink (the paper's Table 5 setting)",
+    );
+
+    // Ablation: a PCIe-only box (4x less intra-node bandwidth). The
+    // optimum shifts toward configurations that move fewer tensor bytes.
+    optimize_on(
+        &DeviceGraph::cluster("pcie_box", 1, 4, 4e9, 4e9, 4e9, ComputeModel::p100()),
+        "ablation: same box with a 4 GB/s PCIe-only interconnect",
+    );
+}

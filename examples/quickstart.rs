@@ -1,0 +1,71 @@
+//! Quickstart: the library in ~40 lines.
+//!
+//! Build a network graph and a device graph, search for the optimal
+//! layer-wise parallelization strategy, and compare it against the
+//! standard baselines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::DeviceGraph;
+use optcnn::graph::nets;
+use optcnn::metrics::comm_volume;
+use optcnn::optimizer::{self, strategies};
+use optcnn::sim::simulate;
+use optcnn::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    // 1. The workload: AlexNet at the paper's per-GPU batch of 32, and a
+    //    single-node 4x P100 cluster.
+    let ndev = 4;
+    let graph = nets::alexnet(32 * ndev);
+    let devices = DeviceGraph::p100_cluster(ndev);
+    println!(
+        "network: {} ({} layers, {:.1}M params)",
+        graph.name,
+        graph.num_layers(),
+        graph.total_params() as f64 / 1e6
+    );
+
+    // 2. The cost model and the search (Algorithm 1).
+    let cm = CostModel::new(&graph, &devices);
+    let tables = CostTables::build(&cm, ndev);
+    let opt = optimizer::optimize(&tables);
+    println!(
+        "layer-wise optimum found: {} (K={} after {} node + {} edge eliminations)",
+        fmt_secs(opt.cost),
+        opt.stats.final_nodes,
+        opt.stats.node_eliminations,
+        opt.stats.edge_eliminations
+    );
+
+    // 3. Compare against the baselines on the simulated cluster.
+    println!("\n{:<12} {:>14} {:>16} {:>14}", "strategy", "step time", "throughput", "comm/step");
+    for (name, strat) in [
+        ("data", strategies::data_parallel(&graph, ndev)),
+        ("model", strategies::model_parallel(&graph, ndev)),
+        ("owt", strategies::owt(&graph, ndev)),
+        ("layerwise", opt.strategy.clone()),
+    ] {
+        let rep = simulate(&graph, &devices, &strat, &cm);
+        let comm = comm_volume(&cm, &strat);
+        println!(
+            "{:<12} {:>14} {:>12.0} im/s {:>14}",
+            name,
+            fmt_secs(rep.step_time),
+            rep.throughput(32 * ndev),
+            fmt_bytes(comm.total())
+        );
+    }
+
+    // 4. Show a few interesting per-layer choices of the optimum.
+    println!("\nselected layer configurations (layer-wise optimum):");
+    for l in &graph.layers {
+        let cfg = opt.strategy.config(l.id);
+        if cfg.total() < ndev || cfg.deg[1] > 1 || cfg.deg[2] > 1 {
+            println!("  {:<8} {}", l.name, cfg.label());
+        }
+    }
+}

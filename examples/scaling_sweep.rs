@@ -1,0 +1,42 @@
+//! Scalability study (the Figure 7 headline numbers): speedup of each
+//! strategy from 1 to 16 GPUs for the three benchmark CNNs, against the
+//! linear-scaling ideal.
+//!
+//! ```sh
+//! cargo run --release --example scaling_sweep
+//! ```
+
+use optcnn::pipeline::{Experiment, STRATEGY_NAMES};
+use optcnn::util::table::Table;
+
+fn main() {
+    let devices = [1usize, 2, 4, 8, 16];
+    for net in ["alexnet", "vgg16", "inception_v3"] {
+        let base = Experiment::new(net, 1).run("data").throughput;
+        let mut table = Table::new(
+            &format!("{net}: speedup over 1 GPU (per-GPU batch 32)"),
+            &["GPUs", "data", "model", "owt", "layerwise", "ideal"],
+        );
+        let mut final_speedups = Vec::new();
+        for &ndev in &devices {
+            let e = Experiment::new(net, ndev);
+            let mut row = vec![ndev.to_string()];
+            for s in STRATEGY_NAMES {
+                let sp = e.run(s).throughput / base;
+                if ndev == 16 {
+                    final_speedups.push(sp);
+                }
+                row.push(format!("{sp:.1}x"));
+            }
+            row.push(format!("{ndev}.0x"));
+            table.row(row);
+        }
+        table.print();
+        let best_baseline = final_speedups[..3].iter().cloned().fold(0.0, f64::max);
+        println!(
+            "at 16 GPUs: layer-wise {:.1}x vs best baseline {:.1}x \
+             (paper: 12.2-15.5x vs 6.1-11.2x)\n",
+            final_speedups[3], best_baseline
+        );
+    }
+}

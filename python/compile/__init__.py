@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) + AOT lowering.
+
+Nothing in this package runs at request time; `compile.aot` lowers
+everything to HLO text once and the Rust coordinator executes the
+artifacts through PJRT.
+"""

@@ -1,0 +1,263 @@
+"""AOT lowering driver: JAX/Pallas -> HLO text artifacts + manifest.
+
+Usage (what ``make artifacts`` runs)::
+
+    cd python && python -m compile.aot --out ../artifacts [--devices 4]
+
+Emits one ``<key>.hlo.txt`` per (operation, shard-shape) reachable by the
+MiniCNN end-to-end demo on up to ``--devices`` simulated devices, plus the
+single-device full-model train-step oracle, plus ``manifest.json`` mapping
+keys to files and I/O shapes.
+
+Interchange format is HLO **text**: jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The artifact *keys* are a shared contract with the Rust executor
+(``rust/src/exec/artifacts keys``); an integration test on the Rust side
+asserts every key it can request exists in the manifest.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers, model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Config-space enumeration (mirrors rust parallel::enumerate_configs for
+# the MiniCNN layer types; the Rust integration test pins the parity)
+# --------------------------------------------------------------------------
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def conv_pool_configs(shape, ndev):
+    """All (dn, dc, dh, dw) with each degree dividing the extent and
+    product <= ndev (4-D layers: sample/channel/height/width)."""
+    n, c, h, w = shape
+    out = []
+    for dn in divisors(n):
+        if dn > ndev:
+            continue
+        for dc in divisors(c):
+            if dn * dc > ndev:
+                continue
+            for dh in divisors(h):
+                if dn * dc * dh > ndev:
+                    continue
+                for dw in divisors(w):
+                    if dn * dc * dh * dw <= ndev:
+                        out.append((dn, dc, dh, dw))
+    return out
+
+
+def fc_configs(shape, ndev):
+    n, c = shape
+    return [
+        (dn, dc)
+        for dn in divisors(n)
+        if dn <= ndev
+        for dc in divisors(c)
+        if dn * dc <= ndev
+    ]
+
+
+# --------------------------------------------------------------------------
+# Artifact builders: (key, jax function, example args)
+# --------------------------------------------------------------------------
+
+
+def spec_entries(batch: int, ndev: int):
+    """Yield (key, fn, arg_shapes) for every artifact the demo may need."""
+    s = jax.ShapeDtypeStruct
+    seen = set()
+
+    def emit(key, fn, shapes):
+        if key not in seen:
+            seen.add(key)
+            yield key, fn, [s(sh, F32) for sh in shapes]
+
+    for name, kind, a in model.ARCH:
+        if kind == "conv":
+            out = conv_out_shape(name, batch)
+            cin, k, relu = a["cin"], a["k"], a["relu"]
+            for dn, dc, dh, dw in conv_pool_configs(out, ndev):
+                nt, ct = out[0] // dn, out[1] // dc
+                ht, wt = out[2] // dh, out[3] // dw
+                hs, ws = ht + k - 1, wt + k - 1  # stride-1 VALID slab
+                sig = f"n{nt}_ci{cin}_h{hs}_w{ws}_co{ct}_k{k}x{k}_s1x1_r{int(relu)}"
+                x_sh, w_sh, b_sh = (nt, cin, hs, ws), (ct, cin, k, k), (ct,)
+                dy_sh = (nt, ct, ht, wt)
+                yield from emit(
+                    f"conv2d_fwd_{sig}",
+                    lambda x, w, b, relu=relu: (layers.conv2d(x, w, b, (1, 1), relu),),
+                    [x_sh, w_sh, b_sh],
+                )
+                if relu:
+                    yield from emit(
+                        f"conv2d_bwd_{sig}",
+                        lambda x, w, b, dy: layers.conv2d_bwd(x, w, b, dy, (1, 1), True),
+                        [x_sh, w_sh, b_sh, dy_sh],
+                    )
+                else:
+                    # linear conv: bias is not an input (XLA would DCE it)
+                    yield from emit(
+                        f"conv2d_bwd_{sig}",
+                        lambda x, w, dy: layers.conv2d_bwd_norelu(x, w, dy, (1, 1)),
+                        [x_sh, w_sh, dy_sh],
+                    )
+        elif kind == "pool":
+            out = pool_out_shape(name, batch)
+            k = a["k"]
+            for dn, dc, dh, dw in conv_pool_configs(out, ndev):
+                nt, ct = out[0] // dn, out[1] // dc
+                ht, wt = out[2] // dh, out[3] // dw
+                hs, ws = ht * k, wt * k  # k=s, no halo
+                sig = f"n{nt}_c{ct}_h{hs}_w{ws}_k{k}_s{k}"
+                x_sh, dy_sh = (nt, ct, hs, ws), (nt, ct, ht, wt)
+                yield from emit(
+                    f"maxpool_fwd_{sig}",
+                    lambda x, k=k: (layers.maxpool(x, (k, k), (k, k)),),
+                    [x_sh],
+                )
+                yield from emit(
+                    f"maxpool_bwd_{sig}",
+                    lambda x, dy, k=k: (layers.maxpool_bwd(x, dy, (k, k), (k, k)),),
+                    [x_sh, dy_sh],
+                )
+        elif kind == "fc":
+            cin, cout, relu = a["cin"], a["cout"], a["relu"]
+            for dn, dc in fc_configs((batch, cout), ndev):
+                nt, ct = batch // dn, cout // dc
+                sig = f"n{nt}_ci{cin}_co{ct}_r{int(relu)}"
+                x_sh, w_sh, b_sh, dy_sh = (nt, cin), (cin, ct), (ct,), (nt, ct)
+                yield from emit(
+                    f"fc_fwd_{sig}",
+                    lambda x, w, b, relu=relu: (layers.fc(x, w, b, relu),),
+                    [x_sh, w_sh, b_sh],
+                )
+                if relu:
+                    yield from emit(
+                        f"fc_bwd_{sig}",
+                        lambda x, w, b, dy: layers.fc_bwd(x, w, b, dy, True),
+                        [x_sh, w_sh, b_sh, dy_sh],
+                    )
+                else:
+                    yield from emit(
+                        f"fc_bwd_{sig}",
+                        lambda x, w, dy: layers.fc_bwd_norelu(x, w, dy),
+                        [x_sh, w_sh, dy_sh],
+                    )
+
+    # softmax head: sample partitioning only
+    for dn in divisors(batch):
+        if dn > ndev:
+            continue
+        nt = batch // dn
+        yield from emit(
+            f"softmax_xent_n{nt}_c10",
+            lambda logits, labels: layers.softmax_xent(logits, labels),
+            [(nt, 10), (nt, 10)],
+        )
+
+    # the single-device train-step oracle
+    yield from emit(
+        f"minicnn_train_step_n{batch}",
+        model.train_step_flat,
+        [(batch, 3, 32, 32), (batch, 10), ()]
+        + [sh for n in model.param_order() for sh in param_shapes(n)],
+    )
+
+
+def conv_out_shape(name, batch):
+    return {"conv1": (batch, 8, 32, 32), "conv2": (batch, 16, 16, 16)}[name]
+
+
+def pool_out_shape(name, batch):
+    return {"pool1": (batch, 8, 16, 16), "pool2": (batch, 16, 8, 8)}[name]
+
+
+def param_shapes(name):
+    attrs = dict((n, a) for n, k, a in model.ARCH if k in ("conv", "fc"))
+    a = attrs[name]
+    if "k" in a:
+        return [(a["cout"], a["cin"], a["k"], a["k"]), (a["cout"],)]
+    return [(a["cin"], a["cout"]), (a["cout"],)]
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def build(out_dir: str, batch: int, ndev: int, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "batch": batch,
+        "devices": ndev,
+        "network": "minicnn",
+        "artifacts": {},
+    }
+    t0 = time.time()
+    count = 0
+    for key, fn, args in spec_entries(batch, ndev):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{key}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        try:
+            out_shapes = [
+                list(o.shape) for o in jax.tree_util.tree_leaves(lowered.out_info)
+            ]
+        except AttributeError:
+            out_shapes = []
+        manifest["artifacts"][key] = {
+            "file": fname,
+            "inputs": [list(a.shape) for a in args],
+            "outputs": out_shapes,
+        }
+        count += 1
+        if verbose and count % 20 == 0:
+            print(f"  lowered {count} artifacts ({time.time() - t0:.1f}s)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"wrote {count} artifacts + manifest.json to {out_dir} "
+              f"in {time.time() - t0:.1f}s")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32, help="global batch")
+    ap.add_argument("--devices", type=int, default=4)
+    args = ap.parse_args()
+    build(args.out, args.batch, args.devices)
+
+
+if __name__ == "__main__":
+    main()

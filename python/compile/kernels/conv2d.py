@@ -1,0 +1,104 @@
+"""Conv2d as im2col + the Pallas matmul kernel (L1).
+
+The paper's conv layers are cuDNN calls; on the TPU-shaped stack the same
+computation is an im2col patch extraction (pure data movement, expressed
+in jnp and fused by XLA) feeding the MXU matmul kernel. Inputs arrive
+pre-padded from the Rust executor's halo-exchange (VALID convolution on a
+slab), so the kernel itself never pads.
+
+Gradients are provided explicitly (``col2im`` transpose) because
+``pallas_call`` has no autodiff rule; `compile.layers` wires these into a
+``jax.custom_vjp``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul
+
+
+def im2col(x, kh: int, kw: int, sh: int, sw: int):
+    """Extract conv patches: ``[n, c, h, w] -> [n*oh*ow, c*kh*kw]``.
+
+    Row-major over (n, oh, ow); column-major over (c, dy, dx) to match the
+    ``[cout, cin*kh*kw]`` weight flattening.
+    """
+    n, c, h, w = x.shape
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    # gather shifted views: [kh, kw, n, c, oh, ow]
+    cols = jnp.stack(
+        [
+            jnp.stack(
+                [
+                    jax.lax.slice(
+                        x,
+                        (0, 0, dy, dx),
+                        (n, c, dy + (oh - 1) * sh + 1, dx + (ow - 1) * sw + 1),
+                        (1, 1, sh, sw),
+                    )
+                    for dx in range(kw)
+                ]
+            )
+            for dy in range(kh)
+        ]
+    )
+    # -> [n, oh, ow, c, kh, kw] -> [n*oh*ow, c*kh*kw]
+    cols = cols.transpose(2, 4, 5, 3, 0, 1)
+    return cols.reshape(n * oh * ow, c * kh * kw), (oh, ow)
+
+
+def col2im(cols, x_shape, kh: int, kw: int, sh: int, sw: int):
+    """Transpose of :func:`im2col`: scatter-add patches back to the image.
+
+    ``cols``: ``[n*oh*ow, c*kh*kw]`` -> ``[n, c, h, w]`` with overlapping
+    contributions summed (exactly the conv data-gradient semantics).
+    """
+    n, c, h, w = x_shape
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    cols = cols.reshape(n, oh, ow, c, kh, kw).transpose(4, 5, 0, 3, 1, 2)
+    # cols is now [kh, kw, n, c, oh, ow]
+    out = jnp.zeros(x_shape, dtype=cols.dtype)
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = cols[dy, dx]  # [n, c, oh, ow]
+            # scatter-add with stride: build index grids once per offset
+            hs = dy + sh * jnp.arange(oh)
+            ws = dx + sw * jnp.arange(ow)
+            out = out.at[:, :, hs[:, None], ws[None, :]].add(patch)
+    return out
+
+
+def conv2d_valid(x, w, sh: int = 1, sw: int = 1):
+    """VALID 2-D convolution via im2col + Pallas matmul.
+
+    ``x``: [n, cin, h, w] (already halo-padded by the caller),
+    ``w``: [cout, cin, kh, kw]. Returns [n, cout, oh, ow].
+    """
+    n = x.shape[0]
+    cout, cin, kh, kw = w.shape
+    assert x.shape[1] == cin, f"cin mismatch: {x.shape} vs {w.shape}"
+    cols, (oh, ow) = im2col(x, kh, kw, sh, sw)
+    wf = w.reshape(cout, cin * kh * kw).T  # [cin*kh*kw, cout]
+    y = matmul.matmul(cols, wf)  # [n*oh*ow, cout]
+    return y.reshape(n, oh, ow, cout).transpose(0, 3, 1, 2)
+
+
+def conv2d_valid_grads(x, w, dy, sh: int = 1, sw: int = 1):
+    """Explicit gradients of :func:`conv2d_valid`.
+
+    Returns ``(dx, dw)``; both matmuls run on the Pallas kernel.
+    """
+    n = x.shape[0]
+    cout, cin, kh, kw = w.shape
+    oh, ow = dy.shape[2], dy.shape[3]
+    dyf = dy.transpose(0, 2, 3, 1).reshape(n * oh * ow, cout)
+    cols, _ = im2col(x, kh, kw, sh, sw)
+    # dw = dy^T @ cols  -> [cout, cin*kh*kw]
+    dw = matmul.matmul(dyf.T, cols).reshape(cout, cin, kh, kw)
+    # dx = col2im(dy @ w_flat)
+    wf = w.reshape(cout, cin * kh * kw)
+    dcols = matmul.matmul(dyf, wf)  # [n*oh*ow, cin*kh*kw]
+    dx = col2im(dcols, x.shape, kh, kw, sh, sw)
+    return dx, dw

@@ -1,0 +1,92 @@
+"""Tiled matmul Pallas kernel (L1).
+
+The compute hot-spot of both fully-connected layers and the im2col
+formulation of convolution. The kernel follows TPU idiom even though it
+executes here under ``interpret=True`` on the CPU PJRT plugin (DESIGN.md
+§Hardware-Adaptation):
+
+* the grid walks (M/bm, N/bn) output tiles — each grid step owns one
+  VMEM-resident output block, the BlockSpec index maps express the
+  HBM->VMEM staging that a CUDA kernel would do with threadblocks;
+* the K dimension is looped *inside* the kernel in ``bk`` chunks with a
+  float32 VMEM accumulator, the MXU-friendly schedule (128-aligned tiles
+  feed the 128x128 systolic array on real hardware);
+* block shapes are clamped to the problem size so small shard shapes from
+  the partitioned executor still compile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes (clamped per call).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, bk: int, k_total: int):
+    """One (bm, bn) output tile: loop K in bk chunks, accumulate in f32."""
+    bm = x_ref.shape[0]
+    bn = w_ref.shape[1]
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    num_k = k_total // bk
+
+    def body(i, acc):
+        xs = jax.lax.dynamic_slice(x_ref[...], (0, i * bk), (bm, bk))
+        ws = jax.lax.dynamic_slice(w_ref[...], (i * bk, 0), (bk, bn))
+        return acc + jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, num_k, body, acc)
+    rem = k_total - num_k * bk
+    if rem:
+        xs = jax.lax.dynamic_slice(x_ref[...], (0, num_k * bk), (bm, rem))
+        ws = jax.lax.dynamic_slice(w_ref[...], (num_k * bk, 0), (rem, bn))
+        acc = acc + jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _clamp_pow2(x: int, cap: int) -> int:
+    """Largest divisor of x that is <= cap (keeps the grid exact)."""
+    for d in range(min(x, cap), 0, -1):
+        if x % d == 0:
+            return d
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK):
+    """``x @ w`` for 2-D operands via the Pallas kernel.
+
+    Tile sizes are clamped to divisors of the problem so every shard shape
+    the Rust executor produces is accepted.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims disagree: {x.shape} @ {w.shape}"
+    bm = _clamp_pow2(m, bm)
+    bn = _clamp_pow2(n, bn)
+    bk = min(bk, k)
+
+    kernel = functools.partial(_matmul_kernel, bk=bk, k_total=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, w)
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN) -> int:
+    """Estimated VMEM residency of one grid step (for the DESIGN.md §Perf
+    roofline estimate): x block + w block + f32 accumulator."""
+    bm = _clamp_pow2(m, bm)
+    bn = _clamp_pow2(n, bn)
+    return 4 * (bm * k + k * bn + bm * bn)

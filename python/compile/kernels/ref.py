@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+to float32 tolerance across the pytest/hypothesis shape sweep before
+`compile.aot` will emit artifacts.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    """Oracle for kernels.matmul.matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_valid_ref(x, w, sh: int = 1, sw: int = 1):
+    """Oracle for kernels.conv2d.conv2d_valid (NCHW x OIHW, VALID)."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(sh, sw),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_valid_grads_ref(x, w, dy, sh: int = 1, sw: int = 1):
+    """Oracle gradients via jax autodiff on the lax convolution."""
+    import jax
+
+    def f(x_, w_):
+        return conv2d_valid_ref(x_, w_, sh, sw)
+
+    _, vjp = jax.vjp(f, x, w)
+    return vjp(dy)
+
+
+def maxpool_ref(x, kh: int, kw: int, sh: int, sw: int):
+    """VALID max-pooling oracle (NCHW)."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, kh, kw), (1, 1, sh, sw), "VALID"
+    )

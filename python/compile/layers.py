@@ -1,0 +1,163 @@
+"""Layer-2 JAX layer functions (forward + backward).
+
+Each layer the partitioned executor schedules has a forward function and
+an explicit backward function here. Forwards route their hot loop through
+the Layer-1 Pallas kernels; because ``pallas_call`` carries no autodiff
+rule, convolution and fully-connected layers are wrapped in
+``jax.custom_vjp`` with backward passes that *also* run on the Pallas
+matmul kernel.
+
+Conventions (matching the Rust executor's repartitioning):
+* conv/pool inputs arrive **pre-padded** (halo slabs) — everything is a
+  VALID window op here;
+* activations are folded into the layer (``relu`` flag);
+* backward functions take the layer inputs and the upstream gradient and
+  return gradients for inputs and parameters.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as kconv
+from .kernels import matmul as kmm
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Convolution (+ optional fused relu)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def conv2d(x, w, b, stride=(1, 1), relu=True):
+    """VALID conv + bias + optional relu. x: [n,cin,h,w], w: [cout,cin,kh,kw]."""
+    y = kconv.conv2d_valid(x, w, stride[0], stride[1]) + b[None, :, None, None]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def _conv2d_fwd(x, w, b, stride, relu):
+    y = conv2d(x, w, b, stride, relu)
+    return y, (x, w, y)
+
+
+def _conv2d_bwd(stride, relu, res, dy):
+    x, w, y = res
+    if relu:
+        dy = jnp.where(y > 0.0, dy, 0.0)
+    dx, dw = kconv.conv2d_valid_grads(x, w, dy, stride[0], stride[1])
+    db = dy.sum(axis=(0, 2, 3))
+    return dx, dw, db
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def conv2d_bwd(x, w, b, dy, stride=(1, 1), relu=True):
+    """Standalone backward entry point for AOT lowering: returns
+    (dx, dw, db). Recomputes the forward activation for the relu mask
+    (rematerialization keeps the artifact self-contained)."""
+    _, vjp = jax.vjp(lambda x_, w_, b_: conv2d(x_, w_, b_, stride, relu), x, w, b)
+    return vjp(dy)
+
+
+def conv2d_bwd_norelu(x, w, dy, stride=(1, 1)):
+    """Backward for a linear conv. The bias does not participate in any
+    gradient (db = dy.sum), so it is *not* an input — XLA would dead-code
+    it out of the lowered module and the PJRT argument count would no
+    longer match the manifest."""
+    zero_b = jnp.zeros((w.shape[0],), x.dtype)
+    _, vjp = jax.vjp(lambda x_, w_, b_: conv2d(x_, w_, b_, stride, False), x, w, zero_b)
+    return vjp(dy)
+
+
+# --------------------------------------------------------------------------
+# Fully-connected (+ optional fused relu)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fc(x, w, b, relu=True):
+    """x: [n, cin] @ w: [cin, cout] + b, optional relu."""
+    y = kmm.matmul(x, w) + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def _fc_fwd(x, w, b, relu):
+    y = fc(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _fc_bwd(relu, res, dy):
+    x, w, y = res
+    if relu:
+        dy = jnp.where(y > 0.0, dy, 0.0)
+    dx = kmm.matmul(dy, w.T)
+    dw = kmm.matmul(x.T, dy)
+    db = dy.sum(axis=0)
+    return dx, dw, db
+
+
+fc.defvjp(_fc_fwd, _fc_bwd)
+
+
+def fc_bwd(x, w, b, dy, relu=True):
+    """Standalone backward for AOT: returns (dx, dw, db)."""
+    _, vjp = jax.vjp(lambda x_, w_, b_: fc(x_, w_, b_, relu), x, w, b)
+    return vjp(dy)
+
+
+def fc_bwd_norelu(x, w, dy):
+    """Backward for a linear FC layer (no bias input; see
+    :func:`conv2d_bwd_norelu`)."""
+    zero_b = jnp.zeros((w.shape[1],), x.dtype)
+    _, vjp = jax.vjp(lambda x_, w_, b_: fc(x_, w_, b_, False), x, w, zero_b)
+    return vjp(dy)
+
+
+def fc_from_4d(x, w, b, relu=True):
+    """FC over a flattened 4-D activation (the implicit Flatten)."""
+    return fc(x.reshape(x.shape[0], -1), w, b, relu)
+
+
+# --------------------------------------------------------------------------
+# Pooling (pure jnp: memory-bound, autodiff-native)
+# --------------------------------------------------------------------------
+
+
+def maxpool(x, kernel=(2, 2), stride=(2, 2)):
+    """VALID max pool, NCHW."""
+    return ref.maxpool_ref(x, kernel[0], kernel[1], stride[0], stride[1])
+
+
+def maxpool_bwd(x, dy, kernel=(2, 2), stride=(2, 2)):
+    """Backward of maxpool: routes gradient to the argmax positions."""
+    _, vjp = jax.vjp(lambda x_: maxpool(x_, kernel, stride), x)
+    return vjp(dy)[0]
+
+
+# --------------------------------------------------------------------------
+# Softmax + cross-entropy head
+# --------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels):
+    """Returns (summed loss over the tile's samples, dlogits).
+
+    ``labels`` are one-hot rows. dlogits is the gradient of the *sum* —
+    the executor divides by the global batch when scaling the update.
+    """
+    z = logits - jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    loss = -(labels * z).sum()
+    dlogits = jnp.exp(z) - labels
+    return loss, dlogits
+
+
+# --------------------------------------------------------------------------
+# SGD (reference; the Rust parameter server applies updates natively)
+# --------------------------------------------------------------------------
+
+
+def sgd(param, grad, lr):
+    return param - lr * grad

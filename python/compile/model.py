@@ -1,0 +1,97 @@
+"""Layer-2 model: MiniCNN forward/backward/train-step in JAX.
+
+This is the end-to-end demo network (mirrors ``graph::nets::minicnn`` on
+the Rust side): conv8-pool-conv16-pool-fc64-fc10-softmax over 32x32x3
+inputs. The full train step is lowered as a single artifact and serves as
+the single-device numerical oracle that every partitioned execution must
+match (the paper's accuracy-preservation argument, checked end-to-end).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+#: (name, kind, attrs) — keep in sync with graph::nets::minicnn.
+ARCH = [
+    ("conv1", "conv", dict(cout=8, cin=3, k=3, pad=1, relu=True)),
+    ("pool1", "pool", dict(k=2, s=2)),
+    ("conv2", "conv", dict(cout=16, cin=8, k=3, pad=1, relu=True)),
+    ("pool2", "pool", dict(k=2, s=2)),
+    ("fc1", "fc", dict(cin=16 * 8 * 8, cout=64, relu=True)),
+    ("fc2", "fc", dict(cin=64, cout=10, relu=False)),
+]
+
+
+def init_params(seed: int = 0):
+    """He-init parameters as a flat dict name -> (w, b)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, kind, a in ARCH:
+        if kind == "conv":
+            key, k1 = jax.random.split(key)
+            fan_in = a["cin"] * a["k"] * a["k"]
+            w = jax.random.normal(k1, (a["cout"], a["cin"], a["k"], a["k"]), jnp.float32)
+            params[name] = (w * jnp.sqrt(2.0 / fan_in), jnp.zeros((a["cout"],), jnp.float32))
+        elif kind == "fc":
+            key, k1 = jax.random.split(key)
+            w = jax.random.normal(k1, (a["cin"], a["cout"]), jnp.float32)
+            params[name] = (
+                w * jnp.sqrt(2.0 / a["cin"]),
+                jnp.zeros((a["cout"],), jnp.float32),
+            )
+    return params
+
+
+def param_order():
+    """Flat parameter ordering used by the AOT train-step artifact."""
+    return [name for name, kind, _ in ARCH if kind in ("conv", "fc")]
+
+
+def forward(params, x):
+    """Full forward pass to logits. Pads conv inputs explicitly (the
+    partitioned executor does the same via halo slabs)."""
+    h = x
+    for name, kind, a in ARCH:
+        if kind == "conv":
+            p = a["pad"]
+            hp = jnp.pad(h, ((0, 0), (0, 0), (p, p), (p, p)))
+            w, b = params[name]
+            h = layers.conv2d(hp, w, b, (1, 1), a["relu"])
+        elif kind == "pool":
+            h = layers.maxpool(h, (a["k"], a["k"]), (a["s"], a["s"]))
+        elif kind == "fc":
+            w, b = params[name]
+            h = layers.fc_from_4d(h, w, b, a["relu"]) if h.ndim == 4 else layers.fc(
+                h, w, b, a["relu"]
+            )
+    return h
+
+
+def loss_fn(params, x, y):
+    """Mean cross-entropy over the batch."""
+    logits = forward(params, x)
+    loss, _ = layers.softmax_xent(logits, y)
+    return loss / x.shape[0]
+
+
+def train_step(params, x, y, lr):
+    """One SGD step; returns (loss, new_params)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return loss, new_params
+
+
+def train_step_flat(x, y, lr, *flat_params):
+    """Positional-argument wrapper for AOT lowering: parameters are
+    passed/returned as a flat (w1, b1, w2, b2, ...) tuple in
+    :func:`param_order` order."""
+    names = param_order()
+    params = {
+        n: (flat_params[2 * i], flat_params[2 * i + 1]) for i, n in enumerate(names)
+    }
+    loss, new_params = train_step(params, x, y, lr)
+    out = [loss]
+    for n in names:
+        out.extend(new_params[n])
+    return tuple(out)

@@ -1,0 +1,74 @@
+"""AOT pipeline: spec enumeration, HLO text emission, manifest integrity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_divisors():
+    assert aot.divisors(12) == [1, 2, 3, 4, 6, 12]
+    assert aot.divisors(1) == [1]
+
+
+def test_conv_pool_configs_budget():
+    cfgs = aot.conv_pool_configs((32, 8, 32, 32), 4)
+    assert (1, 1, 1, 1) in cfgs
+    assert (4, 1, 1, 1) in cfgs
+    assert (1, 1, 2, 2) in cfgs
+    assert all(d1 * d2 * d3 * d4 <= 4 for d1, d2, d3, d4 in cfgs)
+
+
+def test_fc_configs():
+    cfgs = aot.fc_configs((32, 64), 4)
+    assert (4, 1) in cfgs and (1, 4) in cfgs and (2, 2) in cfgs
+
+
+def test_spec_keys_are_unique_and_cover_core_ops():
+    entries = list(aot.spec_entries(batch=32, ndev=2))
+    keys = [k for k, _, _ in entries]
+    assert len(keys) == len(set(keys)), "duplicate artifact keys"
+    kinds = {k.rsplit("_n", 1)[0].rsplit("_", 1)[0] for k in keys}
+    for prefix in ("conv2d_fwd", "conv2d_bwd", "maxpool_fwd", "maxpool_bwd",
+                   "fc_fwd", "fc_bwd"):
+        assert any(k.startswith(prefix) for k in keys), prefix
+    assert any(k.startswith("softmax_xent") for k in keys)
+    assert any(k.startswith("minicnn_train_step") for k in keys)
+
+
+def test_hlo_text_emission(tmp_path):
+    """Lower a single small artifact and sanity-check the HLO text."""
+    import jax
+    import jax.numpy as jnp
+    from compile import layers
+
+    f = lambda x, w, b: (layers.fc(x, w, b, True),)
+    s = jax.ShapeDtypeStruct
+    lowered = jax.jit(f).lower(
+        s((4, 8), jnp.float32), s((8, 3), jnp.float32), s((3,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,3]" in text  # output shape appears
+
+
+@pytest.mark.slow
+def test_full_build_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build(out, batch=8, ndev=2, verbose=False)
+    m2 = json.load(open(os.path.join(out, "manifest.json")))
+    assert m2["artifacts"].keys() == manifest["artifacts"].keys()
+    for key, meta in m2["artifacts"].items():
+        path = os.path.join(out, meta["file"])
+        assert os.path.exists(path), key
+        assert open(path).read(200).startswith("HloModule")
+
+
+def test_param_shapes_match_model():
+    params = model.init_params(0)
+    for name in model.param_order():
+        expect = [list(t.shape) for t in params[name]]
+        got = [list(s) for s in aot.param_shapes(name)]
+        assert got == expect, name

@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including the awkward non-128-aligned shard
+shapes the partitioned executor produces) and asserts allclose against
+`kernels.ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, matmul, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+)
+def test_matmul_matches_ref_shapes(m, k, n):
+    x, w = rand(0, (m, k)), rand(1, (k, n))
+    np.testing.assert_allclose(
+        matmul.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 96, 64), (1, 1, 1), (7, 13, 3)])
+def test_matmul_key_shapes(m, k, n):
+    x, w = rand(2, (m, k)), rand(3, (k, n))
+    np.testing.assert_allclose(
+        matmul.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_matmul_tile_size_invariance(bm, bn, bk):
+    x, w = rand(4, (48, 56), ), rand(5, (56, 24))
+    got = matmul.matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_inner_dim():
+    with pytest.raises(AssertionError):
+        matmul.matmul(rand(0, (4, 5)), rand(1, (6, 7)))
+
+
+def test_vmem_estimate_positive_and_monotone():
+    small = matmul.vmem_bytes(32, 32, 32)
+    big = matmul.vmem_bytes(128, 128, 512)
+    assert 0 < small < big
+
+
+# ---------------------------------------------------------------- im2col
+
+
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 4),
+    h=st.integers(3, 12),
+    kh=st.integers(1, 3),
+    s=st.integers(1, 2),
+)
+def test_im2col_col2im_adjoint(n, c, h, kh, s):
+    """col2im is the transpose of im2col: <im2col(x), y> == <x, col2im(y)>."""
+    w = h  # square inputs
+    if h < kh:
+        return
+    x = rand(6, (n, c, h, w))
+    cols, (oh, ow) = conv2d.im2col(x, kh, kh, s, s)
+    y = rand(7, cols.shape)
+    lhs = jnp.vdot(cols, y)
+    rhs = jnp.vdot(x, conv2d.col2im(y, x.shape, kh, kh, s, s))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_known_case():
+    # 1x1x3x3 iota, 2x2 kernel stride 1 -> 4 patches of 4
+    x = jnp.arange(9.0, dtype=jnp.float32).reshape(1, 1, 3, 3)
+    cols, (oh, ow) = conv2d.im2col(x, 2, 2, 1, 1)
+    assert (oh, ow) == (2, 2)
+    np.testing.assert_allclose(
+        cols,
+        jnp.array(
+            [[0, 1, 3, 4], [1, 2, 4, 5], [3, 4, 6, 7], [4, 5, 7, 8]], jnp.float32
+        ),
+    )
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@given(
+    n=st.integers(1, 3),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 4),
+    hw=st.integers(4, 10),
+    k=st.integers(1, 3),
+    s=st.integers(1, 2),
+)
+def test_conv2d_valid_matches_lax(n, cin, cout, hw, k, s):
+    x = rand(8, (n, cin, hw, hw))
+    w = rand(9, (cout, cin, k, k))
+    np.testing.assert_allclose(
+        conv2d.conv2d_valid(x, w, s, s),
+        ref.conv2d_valid_ref(x, w, s, s),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@given(
+    n=st.integers(1, 2),
+    cin=st.integers(1, 3),
+    cout=st.integers(1, 3),
+    hw=st.integers(4, 8),
+    k=st.integers(1, 3),
+)
+def test_conv2d_grads_match_autodiff(n, cin, cout, hw, k):
+    x = rand(10, (n, cin, hw, hw))
+    w = rand(11, (cout, cin, k, k))
+    oh = hw - k + 1
+    dy = rand(12, (n, cout, oh, oh))
+    dx, dw = conv2d.conv2d_valid_grads(x, w, dy)
+    dx_r, dw_r = ref.conv2d_valid_grads_ref(x, w, dy)
+    np.testing.assert_allclose(dx, dx_r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(dw, dw_r, rtol=1e-4, atol=1e-3)
+
+
+def test_conv2d_stride2_shard_shape():
+    # the exact slab shape family the executor produces (h_t + k - 1)
+    x = rand(13, (8, 3, 18, 34))
+    w = rand(14, (8, 3, 3, 3))
+    got = conv2d.conv2d_valid(x, w)
+    assert got.shape == (8, 8, 16, 32)
+    np.testing.assert_allclose(got, ref.conv2d_valid_ref(x, w), rtol=1e-4, atol=1e-4)

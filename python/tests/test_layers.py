@@ -1,0 +1,125 @@
+"""L2 layer correctness: custom_vjp layers vs pure-jnp forward + autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def conv_ref(x, w, b, relu):
+    y = ref.conv2d_valid_ref(x, w) + b[None, :, None, None]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def fc_ref(x, w, b, relu):
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+@pytest.mark.parametrize("relu", [True, False])
+def test_conv2d_forward_matches_ref(relu):
+    x, w, b = rand(0, (2, 3, 10, 10)), rand(1, (4, 3, 3, 3)), rand(2, (4,))
+    np.testing.assert_allclose(
+        layers.conv2d(x, w, b, (1, 1), relu), conv_ref(x, w, b, relu),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("relu", [True, False])
+def test_conv2d_custom_vjp_matches_autodiff(relu):
+    x, w, b = rand(3, (2, 3, 8, 8)), rand(4, (4, 3, 3, 3)), rand(5, (4,))
+
+    def loss_pallas(x, w, b):
+        return (layers.conv2d(x, w, b, (1, 1), relu) ** 2).sum()
+
+    def loss_ref(x, w, b):
+        return (conv_ref(x, w, b, relu) ** 2).sum()
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g1, g2):
+        np.testing.assert_allclose(a, r, rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_bwd_entry_point():
+    x, w, b = rand(6, (2, 3, 8, 8)), rand(7, (4, 3, 3, 3)), rand(8, (4,))
+    dy = rand(9, (2, 4, 6, 6))
+    dx, dw, db = layers.conv2d_bwd(x, w, b, dy, (1, 1), True)
+    assert dx.shape == x.shape and dw.shape == w.shape and db.shape == b.shape
+
+
+@given(n=st.integers(1, 8), cin=st.integers(1, 16), cout=st.integers(1, 12))
+def test_fc_forward_matches_ref(n, cin, cout):
+    x, w, b = rand(10, (n, cin)), rand(11, (cin, cout)), rand(12, (cout,))
+    np.testing.assert_allclose(
+        layers.fc(x, w, b, True), fc_ref(x, w, b, True), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("relu", [True, False])
+def test_fc_custom_vjp_matches_autodiff(relu):
+    x, w, b = rand(13, (6, 20)), rand(14, (20, 8)), rand(15, (8,))
+
+    def loss_pallas(x, w, b):
+        return (layers.fc(x, w, b, relu) ** 2).sum()
+
+    def loss_ref(x, w, b):
+        return (fc_ref(x, w, b, relu) ** 2).sum()
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g1, g2):
+        np.testing.assert_allclose(a, r, rtol=1e-3, atol=1e-3)
+
+
+def test_maxpool_and_bwd():
+    x = rand(16, (2, 3, 8, 8))
+    y = layers.maxpool(x)
+    assert y.shape == (2, 3, 4, 4)
+    np.testing.assert_allclose(y, ref.maxpool_ref(x, 2, 2, 2, 2))
+    dy = rand(17, y.shape)
+    dx = layers.maxpool_bwd(x, dy)
+    # gradient mass is conserved when maxima are unique
+    np.testing.assert_allclose(dx.sum(), dy.sum(), rtol=1e-5)
+
+
+def test_softmax_xent_loss_and_grad():
+    logits = rand(18, (5, 10))
+    labels = jax.nn.one_hot(jnp.arange(5), 10)
+    loss, dlogits = layers.softmax_xent(logits, labels)
+
+    def ref_loss(z):
+        z = z - jax.scipy.special.logsumexp(z, axis=1, keepdims=True)
+        return -(labels * z).sum()
+
+    np.testing.assert_allclose(loss, ref_loss(logits), rtol=1e-5)
+    np.testing.assert_allclose(
+        dlogits, jax.grad(ref_loss)(logits), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_softmax_xent_partitions_sum_to_whole():
+    # sample-partitioned softmax: partial losses/grads concatenate exactly
+    logits = rand(19, (8, 10))
+    labels = jax.nn.one_hot(jnp.arange(8) % 10, 10)
+    full_loss, full_d = layers.softmax_xent(logits, labels)
+    l1, d1 = layers.softmax_xent(logits[:4], labels[:4])
+    l2, d2 = layers.softmax_xent(logits[4:], labels[4:])
+    np.testing.assert_allclose(full_loss, l1 + l2, rtol=1e-5)
+    np.testing.assert_allclose(full_d, jnp.concatenate([d1, d2]), rtol=1e-5)
+
+
+def test_sgd():
+    p, g = jnp.ones((3,)), jnp.full((3,), 2.0)
+    np.testing.assert_allclose(layers.sgd(p, g, 0.1), jnp.full((3,), 0.8))

@@ -1,0 +1,104 @@
+"""MiniCNN model: shapes, training dynamics, and the partitioning
+equivalences the Rust executor relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import layers, model
+
+
+def data(n=8, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n, 3, 32, 32), jnp.float32)
+    y = jax.nn.one_hot(jax.random.randint(k2, (n,), 0, 10), 10)
+    return x, y
+
+
+def test_forward_shapes():
+    params = model.init_params(0)
+    x, _ = data(4)
+    logits = model.forward(params, x)
+    assert logits.shape == (4, 10)
+
+
+def test_param_order_and_shapes():
+    params = model.init_params(0)
+    names = model.param_order()
+    assert names == ["conv1", "conv2", "fc1", "fc2"]
+    assert params["conv1"][0].shape == (8, 3, 3, 3)
+    assert params["fc1"][0].shape == (1024, 64)
+
+
+def test_loss_decreases_over_training():
+    params = model.init_params(0)
+    x, y = data(8)
+    losses = []
+    for _ in range(15):
+        loss, params = model.train_step(params, x, y, 0.01)
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses
+
+
+def test_train_step_flat_matches_dict_api():
+    params = model.init_params(1)
+    x, y = data(4, seed=1)
+    loss_d, new_d = model.train_step(params, x, y, 0.02)
+    flat = [t for n in model.param_order() for t in params[n]]
+    out = model.train_step_flat(x, y, jnp.float32(0.02), *flat)
+    np.testing.assert_allclose(out[0], loss_d, rtol=1e-6)
+    i = 1
+    for n in model.param_order():
+        for t in new_d[n]:
+            np.testing.assert_allclose(out[i], t, rtol=1e-5, atol=1e-6)
+            i += 1
+
+
+def test_sample_partitioned_conv_equals_full():
+    """Data-parallel equivalence: conv over a batch == concat of conv over
+    sample shards (the executor's n-split path)."""
+    params = model.init_params(0)
+    w, b = params["conv1"]
+    x, _ = data(8)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    full = layers.conv2d(xp, w, b, (1, 1), True)
+    parts = [layers.conv2d(xp[i : i + 4], w, b, (1, 1), True) for i in (0, 4)]
+    np.testing.assert_allclose(full, jnp.concatenate(parts), rtol=1e-4, atol=1e-5)
+
+
+def test_channel_partitioned_conv_equals_full():
+    """Model-parallel equivalence: conv with a cout shard == channel slice
+    of the full conv (the executor's c-split path)."""
+    params = model.init_params(0)
+    w, b = params["conv1"]
+    x, _ = data(4)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    full = layers.conv2d(xp, w, b, (1, 1), True)
+    lo = layers.conv2d(xp, w[:4], b[:4], (1, 1), True)
+    hi = layers.conv2d(xp, w[4:], b[4:], (1, 1), True)
+    np.testing.assert_allclose(full, jnp.concatenate([lo, hi], axis=1), rtol=1e-4, atol=1e-5)
+
+
+def test_spatially_partitioned_conv_equals_full():
+    """Height-split with a halo slab == rows of the full conv (the
+    executor's h-split path with zero-padded borders)."""
+    params = model.init_params(0)
+    w, b = params["conv1"]
+    x, _ = data(2)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))  # 34x34 slab
+    full = layers.conv2d(xp, w, b, (1, 1), True)  # [2,8,32,32]
+    # top half: padded rows 0..18 (out rows 0..16); bottom: rows 16..34
+    top = layers.conv2d(xp[:, :, 0:18, :], w, b, (1, 1), True)
+    bot = layers.conv2d(xp[:, :, 16:34, :], w, b, (1, 1), True)
+    np.testing.assert_allclose(full[:, :, :16], top, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(full[:, :, 16:], bot, rtol=1e-4, atol=1e-5)
+
+
+def test_channel_partitioned_fc_equals_full():
+    params = model.init_params(0)
+    w, b = params["fc2"]
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 64), jnp.float32)
+    full = layers.fc(x, w, b, False)
+    lo = layers.fc(x, w[:, :5], b[:5], False)
+    hi = layers.fc(x, w[:, 5:], b[5:], False)
+    np.testing.assert_allclose(full, jnp.concatenate([lo, hi], axis=1), rtol=1e-4, atol=1e-5)

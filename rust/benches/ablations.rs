@@ -1,0 +1,115 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! 1. **Placement** — contiguous (the paper's implicit policy) vs
+//!    round-robin-across-nodes tile placement.
+//! 2. **Sync protocol** — sharded-PS (allreduce-equivalent) vs central
+//!    per-layer parameter server.
+//! 3. **Interconnect** — how the optimal strategy's shape shifts as the
+//!    inter-node bandwidth sweeps from 10 GbE to NVLink-class.
+
+use optcnn::cost::{CostModel, CostTables, SyncModel};
+use optcnn::device::{ComputeModel, DeviceGraph};
+use optcnn::graph::nets;
+use optcnn::optimizer::{self, strategies};
+use optcnn::parallel::Placement;
+use optcnn::util::fmt_secs;
+use optcnn::util::table::Table;
+
+fn main() {
+    placement_ablation();
+    sync_ablation();
+    bandwidth_ablation();
+}
+
+fn placement_ablation() {
+    let mut table = Table::new(
+        "ablation 1: tile placement (layer-wise optimum, est. step time)",
+        &["network", "devices", "contiguous", "round-robin nodes", "penalty"],
+    );
+    for (net, ndev) in [("alexnet", 16usize), ("vgg16", 16), ("inception_v3", 16)] {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let mut row = vec![net.to_string(), ndev.to_string()];
+        let mut times = Vec::new();
+        for p in [Placement::Contiguous, Placement::RoundRobinNodes] {
+            let cm = CostModel::new(&g, &d).with_placement(p);
+            let t = CostTables::build(&cm, ndev);
+            let opt = optimizer::optimize(&t);
+            times.push(opt.cost);
+            row.push(fmt_secs(opt.cost));
+        }
+        row.push(format!("{:.2}x", times[1] / times[0]));
+        table.row(row);
+    }
+    table.print();
+    println!(
+        "the optimizer re-plans around either placement (penalties within a few \
+         percent); placement matters for FIXED strategies, not for the search\n"
+    );
+}
+
+fn sync_ablation() {
+    let mut table = Table::new(
+        "ablation 2: parameter-sync protocol (est. step time, 16 GPUs)",
+        &["network", "strategy", "sharded PS", "central PS", "penalty"],
+    );
+    for net in ["alexnet", "vgg16"] {
+        let ndev = 16;
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        for strat in ["data", "layerwise"] {
+            let mut row = vec![net.to_string(), strat.to_string()];
+            let mut times = Vec::new();
+            for sync in [SyncModel::Sharded, SyncModel::Central] {
+                let cm = CostModel::new(&g, &d).with_sync(sync);
+                let cost = if strat == "layerwise" {
+                    optimizer::optimize(&CostTables::build(&cm, ndev)).cost
+                } else {
+                    cm.t_o(&strategies::data_parallel(&g, ndev))
+                };
+                times.push(cost);
+                row.push(fmt_secs(cost));
+            }
+            row.push(format!("{:.2}x", times[1] / times[0]));
+            table.row(row);
+        }
+    }
+    table.print();
+    println!("layer-wise search absorbs most of a slow PS by re-planning; \
+              data parallelism cannot\n");
+}
+
+fn bandwidth_ablation() {
+    let ndev = 16;
+    let g = nets::vgg16(32 * ndev);
+    let mut table = Table::new(
+        "ablation 3: inter-node bandwidth sweep (VGG-16, 16 GPUs)",
+        &["inter-node BW", "layerwise step", "data step", "gain", "fc config"],
+    );
+    for gbps in [1.25f64, 3.125, 6.25, 12.5, 15.0] {
+        let d = DeviceGraph::cluster(
+            "sweep",
+            4,
+            4,
+            15e9,
+            gbps * 1e9,
+            12e9,
+            ComputeModel::p100(),
+        );
+        let cm = CostModel::new(&g, &d);
+        let t = CostTables::build(&cm, ndev);
+        let opt = optimizer::optimize(&t);
+        let dp = cm.t_o(&strategies::data_parallel(&g, ndev));
+        let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+        table.row(vec![
+            format!("{gbps} GB/s"),
+            fmt_secs(opt.cost),
+            fmt_secs(dp),
+            format!("{:.2}x", dp / opt.cost),
+            opt.strategy.config(fc6.id).label(),
+        ]);
+    }
+    table.print();
+    println!("layer-wise's advantage grows as the interconnect shrinks — \
+              the paper's distributed-training motivation\n");
+}

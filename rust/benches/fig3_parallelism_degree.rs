@@ -1,0 +1,58 @@
+//! Figure 3: computation and communication time vs degree of parallelism
+//! for two Inception-v3 layers — an early convolution (3rd layer) and the
+//! final fully-connected layer — on the 16-GPU cluster (global batch 512),
+//! varying how many devices the layer actually uses.
+//!
+//! Expected shape: the conv layer performs best at the full 16 GPUs; the
+//! FC layer's synchronization cost makes a small degree (~4) optimal —
+//! the paper's motivation for searching the *degree* dimension.
+
+use optcnn::cost::CostModel;
+use optcnn::device::DeviceGraph;
+use optcnn::graph::nets;
+use optcnn::parallel::PConfig;
+use optcnn::util::table::Table;
+
+fn main() {
+    let g = nets::inception_v3(32 * 16);
+    let d = DeviceGraph::p100_cluster(16);
+    let cm = CostModel::new(&g, &d);
+    // 3rd layer = stem_conv3; last parameterized layer = fc
+    let conv = g.layers.iter().find(|l| l.name == "stem_conv3").unwrap();
+    let fc = g.layers.iter().find(|l| l.name == "fc").unwrap();
+
+    let mut conv_best = (0usize, f64::INFINITY);
+    let mut fc_best = (0usize, f64::INFINITY);
+    let mut table = Table::new(
+        "Figure 3: Inception-v3 on 16 GPUs — time vs degree of parallelism (ms)",
+        &["degree", "conv comp", "conv comm", "conv total", "fc comp", "fc comm", "fc total"],
+    );
+    for degree in [1usize, 2, 4, 8, 16] {
+        let cfg = PConfig::data(degree);
+        let rows: Vec<f64> = [conv, fc]
+            .iter()
+            .flat_map(|l| {
+                let comp = cm.t_c(l, &cfg) * 1e3;
+                let comm = cm.t_s(l, &cfg) * 1e3;
+                vec![comp, comm, comp + comm]
+            })
+            .collect();
+        if rows[2] < conv_best.1 {
+            conv_best = (degree, rows[2]);
+        }
+        if rows[5] < fc_best.1 {
+            fc_best = (degree, rows[5]);
+        }
+        table.row(
+            std::iter::once(degree.to_string())
+                .chain(rows.iter().map(|v| format!("{v:.3}")))
+                .collect(),
+        );
+    }
+    table.print();
+    println!(
+        "conv layer optimal at degree {}, fc layer optimal at degree {} \
+         (paper: 16 and 4)\n",
+        conv_best.0, fc_best.0
+    );
+}

@@ -1,0 +1,72 @@
+//! Micro-benchmarks for the library's hot paths (the §Perf working set):
+//! cost-table construction, the elimination DP, the simulator, and the
+//! tensor repartitioning primitives used by the executor.
+
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::DeviceGraph;
+use optcnn::graph::nets;
+use optcnn::optimizer;
+use optcnn::parallel::{output_tiles, PConfig};
+use optcnn::sim::simulate;
+use optcnn::tensor::{Region, Tensor};
+use optcnn::util::benchkit::{bench, time_once};
+
+fn main() {
+    println!("== micro: cost tables ==");
+    for (net, ndev) in [("vgg16", 4usize), ("inception_v3", 4), ("inception_v3", 16)] {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let (_, dt) = time_once(|| CostTables::build(&cm, ndev));
+        println!("cost_tables_build({net}, {ndev} dev)          {dt:>10.3}s");
+    }
+
+    println!("\n== micro: elimination DP ==");
+    for (net, ndev) in [("vgg16", 16usize), ("inception_v3", 16)] {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let tables = CostTables::build(&cm, ndev);
+        bench(&format!("optimize({net}, {ndev} dev)"), || optimizer::optimize(&tables));
+    }
+
+    println!("\n== micro: simulator ==");
+    for net in ["vgg16", "inception_v3"] {
+        let ndev = 16;
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let s = optcnn::optimizer::strategies::data_parallel(&g, ndev);
+        let r = simulate(&g, &d, &s, &cm);
+        bench(
+            &format!("simulate({net}, 16 dev, {} tasks)", r.num_tasks),
+            || simulate(&g, &d, &s, &cm),
+        );
+    }
+
+    println!("\n== micro: tensor repartitioning ==");
+    let t = Tensor::zeros(&[32, 64, 56, 56]);
+    let tiles = output_tiles(t.shape(), &PConfig::new(2, 1, 2, 1));
+    bench("slice_4tiles(32x64x56x56)", || {
+        tiles.iter().map(|r| t.slice(r).len()).sum::<usize>()
+    });
+    let mut acc = Tensor::zeros(&[32, 64, 58, 58]);
+    let slab = Tensor::zeros(&[16, 64, 31, 58]);
+    let r = Region::new(&[(0, 16), (0, 64), (27, 58), (0, 58)]);
+    bench("insert_add_halo_slab", || {
+        acc.insert_add(&r, &slab);
+        acc.data()[0]
+    });
+
+    println!("\n== micro: cost model kernels ==");
+    let g = nets::inception_v3(512);
+    let d = DeviceGraph::p100_cluster(16);
+    let cm = CostModel::new(&g, &d);
+    let concat = g.layers.iter().find(|l| l.name == "mixedB3_concat").unwrap();
+    let pred = g.predecessors(concat.id)[0];
+    let a = PConfig::data(16);
+    let b = PConfig::new(2, 4, 2, 1);
+    bench("t_x(concat 17x17x768, 16x16 tiles)", || {
+        cm.t_x(g.layer(pred), concat, 0, &a, &b)
+    });
+}

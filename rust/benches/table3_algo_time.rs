@@ -1,0 +1,56 @@
+//! Table 3: execution time for finding the optimal parallelization
+//! strategy — elimination DP (Algorithm 1) vs depth-first baseline.
+//!
+//! Paper (4 GPUs): LeNet-5 5.6s/0.01s, AlexNet 2.1h/0.02s, VGG-16 and
+//! Inception-v3 >24h/0.1s and /0.4s; K = 2 everywhere. The DFS baseline
+//! here gets a 10-second budget; networks that exceed it are reported as
+//! `> 10 s (timeout)` — the paper's `> 24 hours` analogue.
+
+use std::time::Duration;
+
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::DeviceGraph;
+use optcnn::graph::nets;
+use optcnn::optimizer::{self, dfs};
+use optcnn::util::benchkit::time_once;
+use optcnn::util::table::Table;
+
+const DFS_BUDGET: Duration = Duration::from_secs(10);
+
+fn main() {
+    let ndev = 4;
+    let mut table = Table::new(
+        "Table 3: strategy-search time, 4 GPUs",
+        &["network", "#layers", "DFS baseline", "Algorithm 1", "K", "same optimum"],
+    );
+    for net in ["lenet5", "alexnet", "vgg16", "inception_v3"] {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let tables = CostTables::build(&cm, ndev);
+
+        let (opt, t_dp) = time_once(|| optimizer::optimize(&tables));
+        let (brute, t_dfs) = time_once(|| dfs::dfs_optimal(&tables, Some(DFS_BUDGET)));
+
+        let dfs_cell = if brute.complete {
+            format!("{:.2} s", t_dfs)
+        } else {
+            format!("> {:.0} s (timeout)", t_dfs)
+        };
+        let same = if brute.complete {
+            if (brute.cost - opt.cost).abs() <= 1e-9 * opt.cost { "yes" } else { "NO" }
+        } else {
+            "n/a"
+        };
+        table.row(vec![
+            net.to_string(),
+            g.num_layers().to_string(),
+            dfs_cell,
+            format!("{:.4} s", t_dp),
+            opt.stats.final_nodes.to_string(),
+            same.to_string(),
+        ]);
+    }
+    table.print();
+    println!("complexity: DFS O(E*C^N) vs Algorithm 1 O(E*C^3 + K*C^K)\n");
+}

@@ -1,0 +1,35 @@
+//! Table 4: relative difference between the cost-model estimate
+//! `t_O(G, D, S)` (Eq. 1) and the "actual" per-step execution time — here
+//! the discrete-event cluster simulation — for the layer-wise-optimal
+//! strategy on each network/cluster.
+//!
+//! Paper: within +-10% everywhere (their "actual" is the real cluster).
+
+use optcnn::pipeline::Experiment;
+use optcnn::util::table::Table;
+
+fn main() {
+    let mut table = Table::new(
+        "Table 4: (estimate - simulated) / simulated, layer-wise strategy",
+        &["devices", "alexnet", "vgg16", "inception_v3"],
+    );
+    let mut worst: f64 = 0.0;
+    for ndev in [1usize, 2, 4, 8, 16] {
+        let mut row = vec![format!(
+            "{} GPU ({} node{})",
+            ndev,
+            ndev.div_ceil(4).max(1),
+            if ndev > 4 { "s" } else { "" }
+        )];
+        for net in ["alexnet", "vgg16", "inception_v3"] {
+            let e = Experiment::new(net, ndev);
+            let eval = e.run("layerwise");
+            let rel = (eval.estimate - eval.sim.step_time) / eval.sim.step_time;
+            worst = worst.max(rel.abs());
+            row.push(format!("{:+.0}%", rel * 100.0));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!("worst |relative difference|: {:.1}% (paper: <= 10%)\n", worst * 100.0);
+}

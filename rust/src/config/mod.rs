@@ -1,0 +1,280 @@
+//! Experiment configuration files.
+//!
+//! A TOML-subset parser (tables, string/int/float/bool scalars, and flat
+//! arrays — everything the experiment configs need; the offline registry
+//! has no `toml` crate) plus typed experiment/cluster config structs used
+//! by the CLI launcher.
+//!
+//! Example (`examples/configs/vgg16_4gpu.toml` ships with the repo):
+//!
+//! ```toml
+//! [experiment]
+//! network = "vgg16"
+//! strategy = "layerwise"
+//! per_gpu_batch = 32
+//!
+//! [cluster]
+//! nodes = 1
+//! gpus_per_node = 4
+//! intra_bw_gbps = 15.0
+//! inter_bw_gbps = 3.125
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::device::{ComputeModel, DeviceGraph};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed TOML-subset document: `section.key -> value` (keys outside any
+/// section live under the empty section name).
+#[derive(Debug, Default, Clone)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Toml {
+    /// Parse a TOML-subset document. Errors carry the line number.
+    pub fn parse(text: &str) -> Result<Toml, String> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected key = value", ln + 1));
+            };
+            let value = parse_value(v.trim()).map_err(|e| format!("line {}: {}", ln + 1, e))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no '#' inside our string values; keep it simple but quote-aware
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+/// Typed experiment configuration assembled from a TOML document (with
+/// the paper's defaults for anything unspecified).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub network: String,
+    /// `data`, `model`, `owt`, or `layerwise`.
+    pub strategy: String,
+    pub per_gpu_batch: usize,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub intra_bw: f64,
+    pub inter_bw: f64,
+    pub host_bw: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            network: "vgg16".into(),
+            strategy: "layerwise".into(),
+            per_gpu_batch: 32,
+            nodes: 1,
+            gpus_per_node: 4,
+            intra_bw: 15e9,
+            inter_bw: 3.125e9,
+            host_bw: 12e9,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(doc: &Toml) -> ExperimentConfig {
+        let d = ExperimentConfig::default();
+        ExperimentConfig {
+            network: doc.str_or("experiment", "network", &d.network),
+            strategy: doc.str_or("experiment", "strategy", &d.strategy),
+            per_gpu_batch: doc.usize_or("experiment", "per_gpu_batch", d.per_gpu_batch),
+            nodes: doc.usize_or("cluster", "nodes", d.nodes),
+            gpus_per_node: doc.usize_or("cluster", "gpus_per_node", d.gpus_per_node),
+            intra_bw: doc.f64_or("cluster", "intra_bw_gbps", d.intra_bw / 1e9) * 1e9,
+            inter_bw: doc.f64_or("cluster", "inter_bw_gbps", d.inter_bw / 1e9) * 1e9,
+            host_bw: doc.f64_or("cluster", "host_bw_gbps", d.host_bw / 1e9) * 1e9,
+        }
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Ok(ExperimentConfig::from_toml(&Toml::parse(&text)?))
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.per_gpu_batch * self.num_devices()
+    }
+
+    /// Materialize the device graph this config describes.
+    pub fn device_graph(&self) -> DeviceGraph {
+        DeviceGraph::cluster(
+            &format!("{}x{}", self.nodes, self.gpus_per_node),
+            self.nodes,
+            self.gpus_per_node,
+            self.intra_bw,
+            self.inter_bw,
+            self.host_bw,
+            ComputeModel::p100(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment file
+[experiment]
+network = "alexnet"     # the net
+strategy = "owt"
+per_gpu_batch = 64
+
+[cluster]
+nodes = 2
+gpus_per_node = 4
+intra_bw_gbps = 20.0
+extras = [1, 2.5, "x"]
+"#;
+
+    #[test]
+    fn parses_sections_scalars_comments() {
+        let t = Toml::parse(DOC).unwrap();
+        assert_eq!(t.str_or("experiment", "network", ""), "alexnet");
+        assert_eq!(t.usize_or("cluster", "nodes", 0), 2);
+        assert_eq!(t.f64_or("cluster", "intra_bw_gbps", 0.0), 20.0);
+        let arr = t.get("cluster", "extras").unwrap();
+        assert_eq!(
+            arr,
+            &Value::Array(vec![Value::Int(1), Value::Float(2.5), Value::Str("x".into())])
+        );
+    }
+
+    #[test]
+    fn experiment_config_roundtrip() {
+        let t = Toml::parse(DOC).unwrap();
+        let c = ExperimentConfig::from_toml(&t);
+        assert_eq!(c.network, "alexnet");
+        assert_eq!(c.num_devices(), 8);
+        assert_eq!(c.global_batch(), 512);
+        let d = c.device_graph();
+        assert_eq!(d.num_devices(), 8);
+        assert_eq!(d.bandwidth(0, 1), 20e9);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap());
+        assert_eq!(c.network, "vgg16");
+        assert_eq!(c.per_gpu_batch, 32);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Toml::parse("not a kv").is_err());
+        assert!(Toml::parse("x = @nope").is_err());
+    }
+}

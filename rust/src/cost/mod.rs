@@ -1,0 +1,448 @@
+//! The cost model (paper §5.1).
+//!
+//! Three cost functions drive the strategy search:
+//!
+//! * `t_C(l, c)` — time to process layer `l` under configuration `c`
+//!   (forward + backward), from a roofline device model;
+//! * `t_X(e, c_i, c_j)` — time to move edge `e`'s tensor between the
+//!   producer's and consumer's partitions;
+//! * `t_S(l, c)` — parameter-server synchronization time.
+//!
+//! `t_O(G, D, S) = Σ t_C + Σ t_S + Σ t_X` (Equation 1).
+//!
+//! The paper *measures* `t_C` per configuration on the target GPU; this
+//! reproduction defaults to an analytic roofline calibrated to the same
+//! hardware (P100) — see DESIGN.md §2 — and supports a measured mode that
+//! overrides `t_C` with timings from PJRT executions.
+
+pub mod profile;
+pub mod tables;
+
+pub use tables::{CostTables, EdgeTable};
+
+use crate::device::DeviceGraph;
+use crate::graph::{CompGraph, Layer, LayerId, OpKind};
+use crate::parallel::{
+    input_region, output_tiles, param_sharding, PConfig, Placement, Strategy, DIM_C, DIM_N,
+};
+
+/// Per-transfer fixed latency, seconds (message setup; paper assumption 2
+/// idealizes this away, we keep a small realistic constant that matters
+/// only for many-tiny-transfer configurations).
+pub(crate) const LINK_LATENCY: f64 = 2e-6;
+
+/// How parameter replicas synchronize (the `t_S` protocol).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncModel {
+    /// The parameter server for each layer is sharded across the replica
+    /// devices themselves (bandwidth-optimal, allreduce-equivalent; what
+    /// a tuned runtime achieves). Default.
+    #[default]
+    Sharded,
+    /// A central per-layer parameter server on the first replica's host:
+    /// every replica round-trips its full gradient shard through the PS
+    /// ingress, which serializes (the paper's §5.1 description, and
+    /// representative of 2018 PS deployments).
+    Central,
+}
+
+/// The cost model over one computation graph and one device graph.
+pub struct CostModel<'a> {
+    pub graph: &'a CompGraph,
+    pub devices: &'a DeviceGraph,
+    /// Parameter-synchronization protocol used by `t_S`.
+    pub sync: SyncModel,
+    /// Tile -> device placement policy.
+    pub placement: Placement,
+    /// Per-layer override of `t_C` (seconds per configuration), filled by
+    /// the measured-profile path; indexed `[layer][config index]` against
+    /// the same enumeration order as `parallel::enumerate_configs`.
+    pub measured_tc: Option<Vec<Vec<f64>>>,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(graph: &'a CompGraph, devices: &'a DeviceGraph) -> CostModel<'a> {
+        CostModel {
+            graph,
+            devices,
+            sync: SyncModel::default(),
+            placement: Placement::default(),
+            measured_tc: None,
+        }
+    }
+
+    /// Same model with a different sync protocol (ablation hook).
+    pub fn with_sync(mut self, sync: SyncModel) -> CostModel<'a> {
+        self.sync = sync;
+        self
+    }
+
+    /// Same model with a different placement policy (ablation hook).
+    pub fn with_placement(mut self, placement: Placement) -> CostModel<'a> {
+        self.placement = placement;
+        self
+    }
+
+    /// Device id running tile `t` under the placement policy.
+    pub fn dev_of(&self, t: usize) -> usize {
+        let nodes = self.devices.num_nodes();
+        let gpn = self.devices.num_devices() / nodes.max(1);
+        self.placement.device_of(t, nodes, gpn)
+    }
+
+    /// `t_C`: forward+backward time for one layer under `cfg` (the time of
+    /// one tile — tiles run in parallel on distinct devices).
+    pub fn t_c(&self, layer: &Layer, cfg: &PConfig) -> f64 {
+        if matches!(layer.op, OpKind::Input) {
+            return 0.0;
+        }
+        let total = cfg.total() as f64;
+        let cm = &self.devices.compute;
+        let flops = layer.train_flops() / total;
+        let bytes = layer.mem_bytes() / total;
+        let eff = self.efficiency(layer, cfg);
+        let t_compute = if eff > 0.0 { flops / (eff * cm.peak_flops) } else { 0.0 };
+        let t_mem = bytes / cm.mem_bw;
+        t_compute.max(t_mem) + cm.overhead
+    }
+
+    /// Sustained fraction of peak for this layer/tile. Dense ops run at
+    /// their library efficiency, attenuated when the per-device tile gets
+    /// too small to fill the execution units (this is what the paper's
+    /// measured `t_C` captures and what makes e.g. a 16-way-split FC layer
+    /// slower per-sample than a 4-way split).
+    fn efficiency(&self, layer: &Layer, cfg: &PConfig) -> f64 {
+        let cm = &self.devices.compute;
+        match &layer.op {
+            OpKind::Conv2d { .. } => {
+                // occupancy ~ output positions per device
+                let positions = (layer.out_shape[0] / cfg.deg[0])
+                    * (layer.out_shape[2] / cfg.deg[2])
+                    * (layer.out_shape[3] / cfg.deg[3]);
+                cm.conv_eff * saturate(positions as f64, 256.0)
+            }
+            OpKind::FullyConnected { .. } => {
+                // GEMM M dimension = samples per device, N = output
+                // features per device. Skinny GEMMs (small M from deep
+                // sample splits, or small N heads like a 1000-way
+                // classifier) run far below peak on real hardware — this
+                // is what makes moderate degrees optimal for FC layers
+                // (paper Figure 3).
+                let m = layer.out_shape[DIM_N] / cfg.deg[DIM_N];
+                let n = layer.out_shape[DIM_C] / cfg.deg[DIM_C];
+                cm.gemm_eff * saturate(m as f64, 8.0) * saturate(n as f64, 1500.0)
+            }
+            _ => 1.0, // memory-bound ops take the t_mem branch anyway
+        }
+    }
+
+    /// `t_S`: parameter synchronization time (paper cost function 3).
+    ///
+    /// Parameters are sharded by the channel degree and replicated across
+    /// the sample/height/width degrees; replicas must exchange gradients
+    /// and updated parameters each step. The parameter server for each
+    /// shard is itself sharded across the replica devices (the standard
+    /// bandwidth-optimal layout, and what the paper's Legion data movement
+    /// achieves): each of `R` replicas sends `(R-1)/R` of its gradient
+    /// shard out and receives `(R-1)/R` of the updated parameters back, so
+    ///
+    /// `t_S ≈ 2 · shard_bytes · (R-1)/R / bw_eff`,
+    ///
+    /// where `bw_eff` is the slowest link among the replicas (the NIC when
+    /// they span nodes). Distinct channel shards synchronize in parallel.
+    pub fn t_s(&self, layer: &Layer, cfg: &PConfig) -> f64 {
+        if !layer.has_params() {
+            return 0.0;
+        }
+        let sh = param_sharding(layer, cfg);
+        if sh.replicas <= 1 {
+            return 0.0; // unique copy, no synchronization needed
+        }
+        let tiles = cfg.total();
+        // Device of tile t is t (contiguous assignment). Group devices by
+        // shard = channel tile index.
+        let mut worst: f64 = 0.0;
+        for shard in 0..sh.shards {
+            let replicas: Vec<usize> = (0..tiles)
+                .filter(|&t| shard_of_tile(cfg, t) == shard)
+                .map(|t| self.dev_of(t))
+                .collect();
+            let r = replicas.len() as f64;
+            // The exchange runs at the slowest link in the replica group
+            // (the shared-NIC effective rate once the group spans nodes).
+            let bw = replicas
+                .iter()
+                .skip(1)
+                .map(|&d| self.devices.bandwidth(replicas[0], d))
+                .fold(self.devices.host_bw, f64::min);
+            let t = match self.sync {
+                SyncModel::Sharded => {
+                    2.0 * sh.shard_bytes * (r - 1.0) / r / bw + LINK_LATENCY * (r - 1.0)
+                }
+                SyncModel::Central => {
+                    // serialized round-trips at the PS ingress
+                    2.0 * sh.shard_bytes * r / self.devices.host_bw.min(bw)
+                        + LINK_LATENCY * r
+                }
+            };
+            worst = worst.max(t);
+        }
+        worst
+    }
+
+    /// `t_X`: time to deliver the tensor on edge `src -> dst` from the
+    /// producer's partitioning `cfg_src` to the consumer's `cfg_dst`.
+    /// `in_idx` is which input of `dst` this edge feeds.
+    ///
+    /// Bytes already resident on the consuming device are free; remote
+    /// bytes are charged at the link bandwidth (assumption 2). Transfers
+    /// towards distinct destination devices proceed in parallel, so the
+    /// cost is the worst destination's inbound time.
+    pub fn t_x(
+        &self,
+        src: &Layer,
+        dst: &Layer,
+        in_idx: usize,
+        cfg_src: &PConfig,
+        cfg_dst: &PConfig,
+    ) -> f64 {
+        let src_tiles = output_tiles(&src.out_shape, cfg_src);
+        let dst_tiles = output_tiles(&dst.out_shape, cfg_dst);
+        let mut worst: f64 = 0.0;
+        for (m, dtile) in dst_tiles.iter().enumerate() {
+            let Some(need) = input_region(dst, in_idx, dtile) else {
+                continue;
+            };
+            let dst_dev = self.dev_of(m);
+            let mut inbound = 0.0;
+            for (k, stile) in src_tiles.iter().enumerate() {
+                let src_dev = self.dev_of(k);
+                if src_dev == dst_dev {
+                    continue; // already local
+                }
+                let overlap = need.overlap_volume(stile);
+                if overlap > 0 {
+                    inbound += self.devices.transfer_time(src_dev, dst_dev, overlap as f64 * 4.0)
+                        + LINK_LATENCY;
+                }
+            }
+            worst = worst.max(inbound);
+        }
+        worst
+    }
+
+    /// Bytes moved over links for one edge (communication-cost accounting,
+    /// Figure 8). Counts every remote byte once.
+    pub fn x_bytes(
+        &self,
+        src: &Layer,
+        dst: &Layer,
+        in_idx: usize,
+        cfg_src: &PConfig,
+        cfg_dst: &PConfig,
+    ) -> f64 {
+        let src_tiles = output_tiles(&src.out_shape, cfg_src);
+        let dst_tiles = output_tiles(&dst.out_shape, cfg_dst);
+        let mut bytes = 0.0;
+        for (m, dtile) in dst_tiles.iter().enumerate() {
+            let Some(need) = input_region(dst, in_idx, dtile) else {
+                continue;
+            };
+            for (k, stile) in src_tiles.iter().enumerate() {
+                if self.dev_of(k) == self.dev_of(m) {
+                    continue;
+                }
+                bytes += need.overlap_volume(stile) as f64 * 4.0;
+            }
+        }
+        bytes
+    }
+
+    /// Bytes moved for parameter synchronization of one layer per step:
+    /// with the sharded PS each replica exchanges `2·(R-1)/R` of its shard,
+    /// so the layer total is `2 · shard_bytes · (R-1) · shards`.
+    pub fn s_bytes(&self, layer: &Layer, cfg: &PConfig) -> f64 {
+        if !layer.has_params() {
+            return 0.0;
+        }
+        let sh = param_sharding(layer, cfg);
+        if sh.replicas <= 1 {
+            return 0.0;
+        }
+        2.0 * sh.shard_bytes * (sh.replicas - 1) as f64 * sh.shards as f64
+    }
+
+    /// The input index of edge `(src, dst)` (its position among `dst`'s
+    /// predecessors, in edge order).
+    pub fn edge_in_idx(&self, src: LayerId, dst: LayerId) -> usize {
+        self.graph
+            .predecessors(dst)
+            .iter()
+            .position(|&p| p == src)
+            .expect("edge not present in graph")
+    }
+
+    /// Equation 1: estimated per-step time of a full strategy.
+    pub fn t_o(&self, strategy: &Strategy) -> f64 {
+        let mut t = 0.0;
+        for l in &self.graph.layers {
+            let cfg = strategy.config(l.id);
+            t += self.t_c(l, cfg) + self.t_s(l, cfg);
+        }
+        for &(s, d) in &self.graph.edges {
+            let in_idx = self.edge_in_idx(s, d);
+            t += self.t_x(
+                self.graph.layer(s),
+                self.graph.layer(d),
+                in_idx,
+                strategy.config(s),
+                strategy.config(d),
+            );
+        }
+        t
+    }
+}
+
+/// Which parameter shard (channel-tile index) tile `t` computes, given the
+/// row-major `[n, c, h, w]` tile order.
+pub fn shard_of_tile(cfg: &PConfig, t: usize) -> usize {
+    let chw = cfg.deg[1] * cfg.deg[2] * cfg.deg[3];
+    let within_n = t % chw;
+    within_n / (cfg.deg[2] * cfg.deg[3])
+}
+
+/// Smooth saturation `x / (x + half)` mapped to (0, 1): ~0.5 at `half`,
+/// →1 for large tiles.
+fn saturate(x: f64, half: f64) -> f64 {
+    x / (x + half)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::nets;
+
+    fn setup() -> (CompGraph, DeviceGraph) {
+        (nets::vgg16(32 * 4), DeviceGraph::p100_cluster(4))
+    }
+
+    #[test]
+    fn tc_decreases_with_parallelism() {
+        let (g, d) = setup();
+        let cm = CostModel::new(&g, &d);
+        let conv = g.layers.iter().find(|l| l.name == "conv8").unwrap();
+        let t1 = cm.t_c(conv, &PConfig::serial());
+        let t4 = cm.t_c(conv, &PConfig::data(4));
+        assert!(t4 < t1, "t1={t1} t4={t4}");
+        assert!(t4 > t1 / 4.5, "sublinear due to overhead/occupancy");
+    }
+
+    #[test]
+    fn ts_zero_without_replication() {
+        let (g, d) = setup();
+        let cm = CostModel::new(&g, &d);
+        let fc = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+        // channel partitioning shards params: no sync
+        assert_eq!(cm.t_s(fc, &PConfig::channel(4)), 0.0);
+        // data parallelism replicates them: sync cost > 0
+        assert!(cm.t_s(fc, &PConfig::data(4)) > 0.0);
+        // pool has no params at all
+        let pool = g.layers.iter().find(|l| l.name == "pool1").unwrap();
+        assert_eq!(cm.t_s(pool, &PConfig::data(4)), 0.0);
+    }
+
+    #[test]
+    fn fc_sync_dwarfs_fc_compute_under_data_parallelism() {
+        // The Figure 2 observation: synchronizing the ~102M fc6 parameters
+        // costs far more than computing the layer.
+        let (g, d) = setup();
+        let cm = CostModel::new(&g, &d);
+        let fc = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+        let cfg = PConfig::data(4);
+        assert!(cm.t_s(fc, &cfg) > 5.0 * cm.t_c(fc, &cfg));
+    }
+
+    #[test]
+    fn tx_zero_for_matching_configs() {
+        let (g, d) = setup();
+        let cm = CostModel::new(&g, &d);
+        let c8 = g.layers.iter().find(|l| l.name == "conv8").unwrap();
+        let c9 = g.layers.iter().find(|l| l.name == "conv9").unwrap();
+        let cfg = PConfig::data(4);
+        // same sample partitioning: conv9's tile needs exactly its local
+        // sample range (halo is only spatial) -> no remote bytes
+        assert_eq!(cm.t_x(c8, c9, 0, &cfg, &cfg), 0.0);
+        // but switching to channel partitioning forces an all-gather
+        assert!(cm.t_x(c8, c9, 0, &cfg, &PConfig::channel(4)) > 0.0);
+    }
+
+    #[test]
+    fn tx_halo_is_cheap_relative_to_allgather() {
+        let (g, d) = setup();
+        let cm = CostModel::new(&g, &d);
+        let c8 = g.layers.iter().find(|l| l.name == "conv8").unwrap();
+        let c9 = g.layers.iter().find(|l| l.name == "conv9").unwrap();
+        let spatial = PConfig::new(1, 1, 2, 2);
+        let halo = cm.t_x(c8, c9, 0, &spatial, &spatial);
+        let gather = cm.t_x(c8, c9, 0, &PConfig::data(4), &PConfig::channel(4));
+        assert!(halo > 0.0, "3x3 conv across a spatial split needs a halo");
+        assert!(halo < gather / 5.0, "halo {halo} vs gather {gather}");
+    }
+
+    #[test]
+    fn eq1_sums_components() {
+        let g = nets::lenet5(32);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let s = Strategy::uniform(g.num_layers(), PConfig::data(2));
+        let mut expect = 0.0;
+        for l in &g.layers {
+            expect += cm.t_c(l, &PConfig::data(2)) + cm.t_s(l, &PConfig::data(2));
+        }
+        for &(a, b) in &g.edges {
+            expect += cm.t_x(
+                g.layer(a),
+                g.layer(b),
+                cm.edge_in_idx(a, b),
+                &PConfig::data(2),
+                &PConfig::data(2),
+            );
+        }
+        assert!((cm.t_o(&s) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn channel_parallel_fc_moves_less_than_data_parallel_syncs() {
+        // Figure 2's 12x claim, at the bytes level: for fc6 the gradient
+        // sync volume under sample partitioning exceeds the input
+        // all-gather volume under channel partitioning by >10x.
+        let (g, d) = setup();
+        let cm = CostModel::new(&g, &d);
+        let fc = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+        let pool5 = g.layers.iter().find(|l| l.name == "pool5").unwrap();
+        let sync = cm.s_bytes(fc, &PConfig::data(2));
+        let gather = cm.x_bytes(pool5, fc, 0, &PConfig::data(2), &PConfig::channel(2));
+        assert!(sync > 10.0 * gather, "sync {sync} gather {gather}");
+    }
+
+    #[test]
+    fn shard_of_tile_layout() {
+        let cfg = PConfig::new(2, 2, 1, 1);
+        // tiles in row-major [n,c]: t0=(n0,c0) t1=(n0,c1) t2=(n1,c0) t3=(n1,c1)
+        assert_eq!(shard_of_tile(&cfg, 0), 0);
+        assert_eq!(shard_of_tile(&cfg, 1), 1);
+        assert_eq!(shard_of_tile(&cfg, 2), 0);
+        assert_eq!(shard_of_tile(&cfg, 3), 1);
+    }
+
+    #[test]
+    fn inter_node_sync_costs_more() {
+        let g = nets::alexnet(32 * 16);
+        let d16 = DeviceGraph::p100_cluster(16);
+        let d4 = DeviceGraph::p100_cluster(4);
+        let cm16 = CostModel::new(&g, &d16);
+        let cm4 = CostModel::new(&g, &d4);
+        let fc = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert!(cm16.t_s(fc, &PConfig::data(16)) > cm4.t_s(fc, &PConfig::data(4)));
+    }
+}

@@ -1,0 +1,151 @@
+//! Measured-mode `t_C`: profile layer configurations by executing their
+//! AOT artifacts on the PJRT runtime (the paper's §5.1 methodology —
+//! "estimated by processing the layer under that configuration multiple
+//! times on the device and measuring the average execution time").
+//!
+//! Wall-clock on this substrate is CPU interpret-mode time, so measured
+//! values are *rescaled* to the device model: we time each configuration,
+//! normalize by the serial configuration's time, and apply that relative
+//! factor to the analytic serial estimate. This preserves exactly what
+//! measurement adds over the analytic model — the relative efficiency of
+//! differently-shaped tiles — without pretending a CPU is a P100.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cost::CostModel;
+use crate::exec::keys;
+use crate::graph::{CompGraph, OpKind};
+use crate::parallel::{enumerate_configs, output_tiles, PConfig, DIM_C, DIM_H, DIM_N, DIM_W};
+use crate::runtime::{ArtifactStore, Engine};
+use crate::tensor::Tensor;
+
+/// Profile every (layer, configuration) of `graph` whose artifacts exist,
+/// producing the `measured_tc` table for [`CostModel`]. Configurations
+/// without artifacts fall back to the analytic estimate.
+///
+/// `reps` executions are averaged per configuration (paper: "multiple
+/// times ... average execution time").
+pub fn profile_graph(
+    store: &ArtifactStore,
+    graph: &CompGraph,
+    cm: &CostModel,
+    ndev: usize,
+    reps: usize,
+) -> Result<Vec<Vec<f64>>> {
+    let mut engine = Engine::new(store.clone())?;
+    let mut out = Vec::with_capacity(graph.num_layers());
+    for l in &graph.layers {
+        let cfgs = enumerate_configs(l, ndev);
+        // serial analytic anchor for rescaling
+        let serial_analytic = cm.t_c(l, &PConfig::serial());
+        let serial_measured = measure_cfg(&mut engine, graph, l.id, &PConfig::serial(), reps);
+        let mut row = Vec::with_capacity(cfgs.len());
+        for cfg in &cfgs {
+            let analytic = cm.t_c(l, cfg);
+            let t = match (serial_measured, measure_cfg(&mut engine, graph, l.id, cfg, reps)) {
+                (Some(base), Some(m)) if base > 0.0 => serial_analytic * (m / base),
+                _ => analytic,
+            };
+            row.push(t);
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Measure one configuration's per-tile forward-artifact time, seconds.
+/// Returns `None` when no artifact exists for the shard shape.
+fn measure_cfg(
+    engine: &mut Engine,
+    graph: &CompGraph,
+    id: usize,
+    cfg: &PConfig,
+    reps: usize,
+) -> Option<f64> {
+    let l = graph.layer(id);
+    let tiles = output_tiles(&l.out_shape, cfg);
+    let t0 = &tiles[0];
+    let (nt, ct) = (t0.end(DIM_N) - t0.start(DIM_N), t0.end(DIM_C) - t0.start(DIM_C));
+    let (key, inputs): (String, Vec<Tensor>) = match &l.op {
+        OpKind::Conv2d { kernel, .. } => {
+            let cin = l.in_shapes[0][DIM_C];
+            let (ht, wt) = (t0.end(DIM_H) - t0.start(DIM_H), t0.end(DIM_W) - t0.start(DIM_W));
+            let (hs, ws) = (ht + kernel.0 - 1, wt + kernel.1 - 1);
+            (
+                keys::conv2d(true, nt, cin, hs, ws, ct, kernel.0, true),
+                vec![
+                    Tensor::zeros(&[nt, cin, hs, ws]),
+                    Tensor::zeros(&[ct, cin, kernel.0, kernel.1]),
+                    Tensor::zeros(&[ct]),
+                ],
+            )
+        }
+        OpKind::Pool2d { kernel, .. } => {
+            let (ht, wt) = (t0.end(DIM_H) - t0.start(DIM_H), t0.end(DIM_W) - t0.start(DIM_W));
+            let (hs, ws) = (ht * kernel.0, wt * kernel.1);
+            (
+                keys::maxpool(true, nt, ct, hs, ws, kernel.0),
+                vec![Tensor::zeros(&[nt, ct, hs, ws])],
+            )
+        }
+        OpKind::FullyConnected { .. } => {
+            let cin: usize = l.in_shapes[0][1..].iter().product();
+            let relu = true; // profile the relu variant; cost is ~identical
+            (
+                keys::fc(true, nt, cin, ct, relu),
+                vec![
+                    Tensor::zeros(&[nt, cin]),
+                    Tensor::zeros(&[cin, ct]),
+                    Tensor::zeros(&[ct]),
+                ],
+            )
+        }
+        _ => return None,
+    };
+    if !engine.store().has(&key) {
+        return None;
+    }
+    // warmup (compile)
+    engine.run(&key, &inputs).ok()?;
+    let t0 = Instant::now();
+    for _ in 0..reps.max(1) {
+        engine.run(&key, &inputs).ok()?;
+    }
+    Some(t0.elapsed().as_secs_f64() / reps.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+
+    fn store() -> Option<ArtifactStore> {
+        ArtifactStore::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+    }
+
+    #[test]
+    fn profile_minicnn_produces_full_tables() {
+        let Some(store) = store() else {
+            eprintln!("skipping (run `make artifacts`)");
+            return;
+        };
+        let g = nets::minicnn(store.batch);
+        let d = DeviceGraph::p100_cluster(4);
+        let cm = CostModel::new(&g, &d);
+        let measured = profile_graph(&store, &g, &cm, 4, 2).unwrap();
+        assert_eq!(measured.len(), g.num_layers());
+        for (l, row) in measured.iter().enumerate() {
+            assert_eq!(row.len(), enumerate_configs(g.layer(l), 4).len());
+            assert!(row.iter().all(|&t| t.is_finite() && t >= 0.0));
+        }
+        // measured mode must flow into tables and still admit a search
+        let mut cm2 = CostModel::new(&g, &d);
+        cm2.measured_tc = Some(measured);
+        let tables = crate::cost::CostTables::build(&cm2, 4);
+        let opt = crate::optimizer::optimize(&tables);
+        assert!(opt.cost.is_finite() && opt.cost > 0.0);
+    }
+}

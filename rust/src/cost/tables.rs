@@ -1,0 +1,273 @@
+//! Precomputed cost tables.
+//!
+//! Algorithm 1 consumes `t_C`, `t_S`, `t_X` as *precomputed* functions
+//! (paper line 1). This module evaluates the cost model once for every
+//! (layer, configuration) and (edge, configuration-pair) and hands the
+//! optimizer flat arrays; the search itself then never touches tensors or
+//! regions — only table lookups.
+
+use super::{CostModel, LINK_LATENCY};
+use crate::graph::LayerId;
+use crate::parallel::{enumerate_configs, input_region, output_tiles, PConfig, Strategy};
+use crate::tensor::Region;
+
+/// Cost matrix for one graph edge: `cost[ci * num_dst_cfgs + cj]`.
+#[derive(Debug, Clone)]
+pub struct EdgeTable {
+    pub src: LayerId,
+    pub dst: LayerId,
+    pub cost: Vec<f64>,
+}
+
+impl EdgeTable {
+    #[inline]
+    pub fn at(&self, ci: usize, cj: usize, num_dst: usize) -> f64 {
+        self.cost[ci * num_dst + cj]
+    }
+}
+
+/// All tables for one (graph, device graph, device budget) triple.
+#[derive(Debug, Clone)]
+pub struct CostTables {
+    /// Per-layer candidate configurations (enumeration order is the
+    /// canonical config index used everywhere downstream).
+    pub configs: Vec<Vec<PConfig>>,
+    /// `t_C + t_S` per layer per config index.
+    pub node_cost: Vec<Vec<f64>>,
+    /// One table per graph edge, in graph edge order.
+    pub edges: Vec<EdgeTable>,
+}
+
+impl CostTables {
+    /// Evaluate the cost model exhaustively over the configuration space
+    /// for `ndev` available devices.
+    pub fn build(cm: &CostModel, ndev: usize) -> CostTables {
+        let g = cm.graph;
+        let configs: Vec<Vec<PConfig>> =
+            g.layers.iter().map(|l| enumerate_configs(l, ndev)).collect();
+        let node_cost: Vec<Vec<f64>> = g
+            .layers
+            .iter()
+            .map(|l| {
+                configs[l.id]
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, c)| {
+                        let tc = match &cm.measured_tc {
+                            Some(m) => m[l.id][idx],
+                            None => cm.t_c(l, c),
+                        };
+                        tc + cm.t_s(l, c)
+                    })
+                    .collect()
+            })
+            .collect();
+        // Tiles per (layer, config), computed once. `t_X` evaluation is the
+        // table-build hot path (O(E * C^2 * T^2) overlap tests); hoisting
+        // tile and input-region construction out of the config-pair loop
+        // removes all allocation from the inner loops (§Perf log #1).
+        let tiles: Vec<Vec<Vec<Region>>> = g
+            .layers
+            .iter()
+            .map(|l| configs[l.id].iter().map(|c| output_tiles(&l.out_shape, c)).collect())
+            .collect();
+        let max_tiles = tiles
+            .iter()
+            .flat_map(|per_cfg| per_cfg.iter().map(|t| t.len()))
+            .max()
+            .unwrap_or(1);
+        let dev_of: Vec<usize> = (0..max_tiles).map(|t| cm.dev_of(t)).collect();
+
+        // Edge tables are independent — build them on all cores
+        // (std::thread::scope; no rayon in the offline registry).
+        let nthreads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let edge_list: Vec<(LayerId, LayerId)> = g.edges.clone();
+        let build_edge = |&(s, d): &(LayerId, LayerId)| -> EdgeTable {
+            {
+                let in_idx = cm.edge_in_idx(s, d);
+                let ld = g.layer(d);
+                let (cs, cd) = (&configs[s], &configs[d]);
+                let mut cost = vec![0.0f64; cs.len() * cd.len()];
+                // flatten regions to fixed-size arrays: the (m, k) overlap
+                // loop is the hottest code in the library (§Perf log #3)
+                let flat = |r: &Region| -> [(u32, u32); 4] {
+                    let mut a = [(0u32, 1u32); 4];
+                    for dim in 0..r.rank() {
+                        a[dim] = (r.start(dim) as u32, r.end(dim) as u32);
+                    }
+                    a
+                };
+                let src_flat: Vec<Vec<[(u32, u32); 4]>> = (0..cs.len())
+                    .map(|ci| tiles[s][ci].iter().map(&flat).collect())
+                    .collect();
+                for (cj_idx, _) in cd.iter().enumerate() {
+                    let dst_tiles = &tiles[d][cj_idx];
+                    // input regions per destination tile, shared across ci
+                    let needs: Vec<Option<[(u32, u32); 4]>> = dst_tiles
+                        .iter()
+                        .map(|t| input_region(ld, in_idx, t).map(|r| flat(&r)))
+                        .collect();
+                    for (ci_idx, _) in cs.iter().enumerate() {
+                        let src_tiles = &src_flat[ci_idx];
+                        let mut worst = 0.0f64;
+                        for (m, need) in needs.iter().enumerate() {
+                            let Some(need) = need else { continue };
+                            let dst_dev = dev_of[m];
+                            let mut inbound = 0.0;
+                            for (k, stile) in src_tiles.iter().enumerate() {
+                                if dev_of[k] == dst_dev {
+                                    continue;
+                                }
+                                let mut overlap = 1u64;
+                                for dim in 0..4 {
+                                    let lo = need[dim].0.max(stile[dim].0);
+                                    let hi = need[dim].1.min(stile[dim].1);
+                                    if lo >= hi {
+                                        overlap = 0;
+                                        break;
+                                    }
+                                    overlap *= (hi - lo) as u64;
+                                }
+                                if overlap > 0 {
+                                    inbound += cm.devices.transfer_time(
+                                        dev_of[k],
+                                        dst_dev,
+                                        overlap as f64 * 4.0,
+                                    ) + LINK_LATENCY;
+                                }
+                            }
+                            if inbound > worst {
+                                worst = inbound;
+                            }
+                        }
+                        cost[ci_idx * cd.len() + cj_idx] = worst;
+                    }
+                }
+                EdgeTable { src: s, dst: d, cost }
+            }
+        };
+        // Deduplicate: edges whose (producer shape, consumer op/shapes,
+        // input slot) coincide have identical cost tables — CNNs repeat
+        // layer pairs heavily (VGG stages, Inception modules), so this
+        // cuts the expensive evaluations several-fold (§Perf log #2).
+        let signature = |&(s, d): &(LayerId, LayerId)| -> String {
+            let (ls, ld) = (g.layer(s), g.layer(d));
+            format!(
+                "{:?}|{:?}|{:?}|{:?}|{}",
+                ls.out_shape,
+                ld.op,
+                ld.out_shape,
+                ld.in_shapes,
+                cm.edge_in_idx(s, d)
+            )
+        };
+        let mut sig_to_unique: std::collections::HashMap<String, usize> =
+            std::collections::HashMap::new();
+        let mut unique_edges: Vec<(LayerId, LayerId)> = Vec::new();
+        let edge_unique: Vec<usize> = edge_list
+            .iter()
+            .map(|e| {
+                *sig_to_unique.entry(signature(e)).or_insert_with(|| {
+                    unique_edges.push(*e);
+                    unique_edges.len() - 1
+                })
+            })
+            .collect();
+
+        let chunk = unique_edges.len().div_ceil(nthreads).max(1);
+        let unique_tables: Vec<EdgeTable> = std::thread::scope(|scope| {
+            let handles: Vec<_> = unique_edges
+                .chunks(chunk)
+                .map(|es| scope.spawn(move || es.iter().map(build_edge).collect::<Vec<_>>()))
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().expect("edge builder panicked")).collect()
+        });
+        let edges: Vec<EdgeTable> = edge_list
+            .iter()
+            .zip(edge_unique.iter())
+            .map(|(&(s, d), &u)| EdgeTable { src: s, dst: d, cost: unique_tables[u].cost.clone() })
+            .collect();
+        CostTables { configs, node_cost, edges }
+    }
+
+    pub fn num_configs(&self, layer: LayerId) -> usize {
+        self.configs[layer].len()
+    }
+
+    /// Largest per-layer configuration count `C` (Table 2's parameter).
+    pub fn max_configs(&self) -> usize {
+        self.configs.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+
+    /// Full-strategy cost from config indices (must pick one index per
+    /// layer). Equals `CostModel::t_o` of the corresponding strategy.
+    pub fn strategy_cost(&self, idx: &[usize]) -> f64 {
+        let mut t = 0.0;
+        for (l, &i) in idx.iter().enumerate() {
+            t += self.node_cost[l][i];
+        }
+        for e in &self.edges {
+            t += e.at(idx[e.src], idx[e.dst], self.num_configs(e.dst));
+        }
+        t
+    }
+
+    /// Convert config indices to a `Strategy`.
+    pub fn strategy_from_indices(&self, idx: &[usize]) -> Strategy {
+        Strategy {
+            configs: idx.iter().enumerate().map(|(l, &i)| self.configs[l][i]).collect(),
+        }
+    }
+
+    /// Index of a given config in a layer's enumeration, if legal.
+    pub fn index_of(&self, layer: LayerId, cfg: &PConfig) -> Option<usize> {
+        self.configs[layer].iter().position(|c| c == cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+
+    #[test]
+    fn tables_match_direct_evaluation() {
+        let g = nets::lenet5(32);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let t = CostTables::build(&cm, 2);
+        // pick the serial config everywhere
+        let idx: Vec<usize> = (0..g.num_layers())
+            .map(|l| t.index_of(l, &PConfig::serial()).unwrap())
+            .collect();
+        let s = t.strategy_from_indices(&idx);
+        let direct = cm.t_o(&s);
+        let tabled = t.strategy_cost(&idx);
+        assert!((direct - tabled).abs() < 1e-12, "direct {direct} vs tabled {tabled}");
+    }
+
+    #[test]
+    fn every_layer_has_serial_config() {
+        let g = nets::alexnet(64);
+        let d = DeviceGraph::p100_cluster(4);
+        let t = CostTables::build(&CostModel::new(&g, &d), 4);
+        for l in 0..g.num_layers() {
+            assert!(t.index_of(l, &PConfig::serial()).is_some());
+            assert!(t.num_configs(l) >= 1);
+        }
+        assert!(t.max_configs() > 4);
+    }
+
+    #[test]
+    fn edge_tables_cover_all_graph_edges() {
+        let g = nets::inception_v3(32);
+        let d = DeviceGraph::p100_cluster(2);
+        let t = CostTables::build(&CostModel::new(&g, &d), 2);
+        assert_eq!(t.edges.len(), g.num_edges());
+        for (e, &(s, dd)) in t.edges.iter().zip(g.edges.iter()) {
+            assert_eq!((e.src, e.dst), (s, dd));
+            assert_eq!(e.cost.len(), t.num_configs(s) * t.num_configs(dd));
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Device graphs (paper §4): the hardware model.
+//!
+//! A device graph holds the accelerators, their grouping into compute
+//! nodes, pairwise link bandwidths, and the per-device compute model used
+//! by the analytic cost functions. Presets mirror the paper's testbed:
+//! 4 nodes x 4 NVIDIA P100, NVLink intra-node, 100 Gb/s EDR InfiniBand
+//! inter-node (see DESIGN.md §2 for the substitution rationale).
+
+/// Per-device compute capability (the `t_C` substrate).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeModel {
+    /// Peak f32 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s (roofline for memory-bound layers).
+    pub mem_bw: f64,
+    /// Fixed per-layer-invocation overhead, seconds (kernel launch etc).
+    pub overhead: f64,
+    /// Sustained fraction of peak for dense conv kernels.
+    pub conv_eff: f64,
+    /// Sustained fraction of peak for large GEMMs (fully-connected).
+    pub gemm_eff: f64,
+}
+
+impl ComputeModel {
+    /// NVIDIA Tesla P100 (SXM2): 10.6 TFLOP/s fp32, 732 GB/s HBM2.
+    /// Efficiency factors are the commonly reported cuDNN/cuBLAS sustained
+    /// fractions for ImageNet-scale layers.
+    pub fn p100() -> ComputeModel {
+        ComputeModel {
+            peak_flops: 10.6e12,
+            mem_bw: 732e9,
+            overhead: 10e-6,
+            conv_eff: 0.55,
+            gemm_eff: 0.70,
+        }
+    }
+}
+
+/// One accelerator.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    /// Compute-node index (devices on one node share NVLink + the NIC).
+    pub node: usize,
+    pub name: String,
+}
+
+/// The device graph: devices + link bandwidths + compute model.
+#[derive(Debug, Clone)]
+pub struct DeviceGraph {
+    pub name: String,
+    pub devices: Vec<Device>,
+    /// Effective point-to-point bandwidth between device pairs, bytes/s.
+    bw: Vec<f64>, // row-major ndev x ndev, diagonal = +inf sentinel (0 cost)
+    /// Bandwidth between a device and its node's host/parameter-server
+    /// endpoint (PCIe), bytes/s.
+    pub host_bw: f64,
+    /// Effective bandwidth between the host endpoints of two different
+    /// nodes (the NIC), bytes/s.
+    pub node_bw: f64,
+    pub compute: ComputeModel,
+}
+
+impl DeviceGraph {
+    /// Generic builder: `nodes x gpus_per_node` devices with uniform
+    /// intra-node (`intra_bw`) and effective inter-node (`inter_bw`)
+    /// point-to-point bandwidths.
+    pub fn cluster(
+        name: &str,
+        nodes: usize,
+        gpus_per_node: usize,
+        intra_bw: f64,
+        inter_bw: f64,
+        host_bw: f64,
+        compute: ComputeModel,
+    ) -> DeviceGraph {
+        assert!(nodes >= 1 && gpus_per_node >= 1);
+        let n = nodes * gpus_per_node;
+        let devices: Vec<Device> = (0..n)
+            .map(|id| Device { id, node: id / gpus_per_node, name: format!("gpu{id}") })
+            .collect();
+        let mut bw = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                bw[i * n + j] = if i == j {
+                    f64::INFINITY
+                } else if devices[i].node == devices[j].node {
+                    intra_bw
+                } else {
+                    inter_bw
+                };
+            }
+        }
+        DeviceGraph {
+            name: name.to_string(),
+            devices,
+            bw,
+            host_bw,
+            node_bw: inter_bw * gpus_per_node as f64, // the NIC itself
+            compute,
+        }
+    }
+
+    /// The paper's testbed scaled to `ngpus` in {1, 2, 4, 8, 16}: up to 4
+    /// GPUs per node (NVLink ~15 GB/s effective p2p), nodes connected by
+    /// 100 Gb/s EDR IB (12.5 GB/s per NIC, shared by the node's 4 GPUs →
+    /// ~3.1 GB/s effective p2p when fanned out), PCIe 3.0 x16 host link.
+    pub fn p100_cluster(ngpus: usize) -> DeviceGraph {
+        let gpus_per_node = ngpus.min(4);
+        let nodes = ngpus.div_ceil(gpus_per_node);
+        assert_eq!(nodes * gpus_per_node, ngpus, "ngpus must be 1,2,4 or a multiple of 4");
+        let nic = 12.5e9;
+        DeviceGraph::cluster(
+            &format!("p100x{ngpus}"),
+            nodes,
+            gpus_per_node,
+            15e9,
+            nic / gpus_per_node as f64,
+            12e9,
+            ComputeModel::p100(),
+        )
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.devices.last().map(|d| d.node + 1).unwrap_or(0)
+    }
+
+    /// Point-to-point bandwidth (bytes/s); infinite for i == j.
+    pub fn bandwidth(&self, i: usize, j: usize) -> f64 {
+        self.bw[i * self.num_devices() + j]
+    }
+
+    /// Seconds to move `bytes` from device i to device j (assumption 2).
+    pub fn transfer_time(&self, i: usize, j: usize, bytes: f64) -> f64 {
+        if i == j || bytes == 0.0 {
+            0.0
+        } else {
+            bytes / self.bandwidth(i, j)
+        }
+    }
+
+    pub fn same_node(&self, i: usize, j: usize) -> bool {
+        self.devices[i].node == self.devices[j].node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p100_presets_have_expected_topology() {
+        for (n, nodes) in [(1usize, 1usize), (2, 1), (4, 1), (8, 2), (16, 4)] {
+            let d = DeviceGraph::p100_cluster(n);
+            assert_eq!(d.num_devices(), n);
+            assert_eq!(d.num_nodes(), nodes);
+        }
+    }
+
+    #[test]
+    fn intra_beats_inter_bandwidth() {
+        let d = DeviceGraph::p100_cluster(8);
+        assert!(d.bandwidth(0, 1) > d.bandwidth(0, 4));
+        assert!(d.same_node(0, 3));
+        assert!(!d.same_node(3, 4));
+    }
+
+    #[test]
+    fn transfer_time_linear_in_bytes() {
+        let d = DeviceGraph::p100_cluster(2);
+        let t1 = d.transfer_time(0, 1, 1e9);
+        let t2 = d.transfer_time(0, 1, 2e9);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+        assert_eq!(d.transfer_time(0, 0, 1e9), 0.0);
+        assert_eq!(d.transfer_time(0, 1, 0.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn irregular_gpu_count_rejected() {
+        DeviceGraph::p100_cluster(6);
+    }
+}

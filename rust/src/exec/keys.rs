@@ -1,0 +1,69 @@
+//! Artifact key construction — the shared contract with
+//! `python/compile/aot.py` (`spec_entries`). Any change here must be
+//! mirrored there; `rust/tests/artifact_parity.rs` pins the agreement
+//! against a generated manifest.
+
+/// Key of a conv2d artifact: VALID conv over a pre-padded slab.
+/// `nt` samples, `cin` full input channels, slab `hs x ws`, `ct` output
+/// channels, square kernel `k`, stride 1, relu flag.
+pub fn conv2d(
+    fwd: bool,
+    nt: usize,
+    cin: usize,
+    hs: usize,
+    ws: usize,
+    ct: usize,
+    k: usize,
+    relu: bool,
+) -> String {
+    format!(
+        "conv2d_{}_n{nt}_ci{cin}_h{hs}_w{ws}_co{ct}_k{k}x{k}_s1x1_r{}",
+        if fwd { "fwd" } else { "bwd" },
+        relu as u8
+    )
+}
+
+/// Key of a max-pool artifact (kernel == stride == `k`, no halo).
+pub fn maxpool(fwd: bool, nt: usize, ct: usize, hs: usize, ws: usize, k: usize) -> String {
+    format!(
+        "maxpool_{}_n{nt}_c{ct}_h{hs}_w{ws}_k{k}_s{k}",
+        if fwd { "fwd" } else { "bwd" }
+    )
+}
+
+/// Key of a fully-connected artifact.
+pub fn fc(fwd: bool, nt: usize, cin: usize, ct: usize, relu: bool) -> String {
+    format!(
+        "fc_{}_n{nt}_ci{cin}_co{ct}_r{}",
+        if fwd { "fwd" } else { "bwd" },
+        relu as u8
+    )
+}
+
+/// Key of the softmax + cross-entropy head artifact.
+pub fn softmax_xent(nt: usize, classes: usize) -> String {
+    format!("softmax_xent_n{nt}_c{classes}")
+}
+
+/// Key of the single-device full-model train-step oracle.
+pub fn train_step(network: &str, batch: usize) -> String {
+    format!("{network}_train_step_n{batch}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_match_python_format() {
+        // pinned against strings observed in a generated manifest
+        assert_eq!(
+            conv2d(false, 16, 3, 18, 34, 8, 3, true),
+            "conv2d_bwd_n16_ci3_h18_w34_co8_k3x3_s1x1_r1"
+        );
+        assert_eq!(maxpool(true, 8, 8, 32, 32, 2), "maxpool_fwd_n8_c8_h32_w32_k2_s2");
+        assert_eq!(fc(true, 8, 1024, 16, true), "fc_fwd_n8_ci1024_co16_r1");
+        assert_eq!(softmax_xent(8, 10), "softmax_xent_n8_c10");
+        assert_eq!(train_step("minicnn", 32), "minicnn_train_step_n32");
+    }
+}

@@ -1,0 +1,650 @@
+//! Partitioned training executor (the end-to-end proof that layer-wise
+//! parallelism computes *the same network* as serial training).
+//!
+//! The leader (this module) owns the master parameters (acting as the
+//! parameter server), repartitions activations between differently-
+//! configured layers (scatter / halo-slab / gather built on `tensor/`),
+//! and drives one [`worker::WorkerHandle`] per simulated device; workers
+//! execute the AOT-compiled HLO artifacts through their own PJRT engines.
+//!
+//! Numerical contract: for ANY legal strategy, `Trainer::step` computes
+//! bit-comparable losses and parameter updates to the single-device
+//! [`OracleTrainer`] (the full-model JAX train-step artifact) — the
+//! executable form of the paper's claim that every configuration
+//! "performs the same computation ... and therefore maintains the same
+//! network accuracy".
+//!
+//! Topology note: repartitioning is hub-and-spoke through the leader (a
+//! parameter-server-style coordinator), so wall-clock here does not model
+//! the paper's p2p cluster — the discrete-event simulator (`sim/`) does
+//! that; this module is about numerics, liveness, and the coordinator
+//! architecture.
+
+pub mod keys;
+pub mod worker;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::graph::{CompGraph, LayerId, OpKind};
+use crate::parallel::{output_tiles, PConfig, Strategy, DIM_C, DIM_H, DIM_N, DIM_W};
+use crate::runtime::{ArtifactStore, Engine};
+use crate::tensor::{Region, Tensor};
+use crate::util::rng::Rng;
+use worker::{Req, Resp, WorkerHandle};
+
+/// Communication accounting for the executor's message traffic.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CommStats {
+    /// Activation/gradient tensor bytes (the `t_X` analogue).
+    pub xfer_bytes: u64,
+    /// Parameter + gradient shard bytes (the `t_S` analogue).
+    pub sync_bytes: u64,
+}
+
+impl CommStats {
+    pub fn total(&self) -> u64 {
+        self.xfer_bytes + self.sync_bytes
+    }
+}
+
+/// The partitioned trainer (leader + workers).
+pub struct Trainer {
+    graph: CompGraph,
+    strategy: Strategy,
+    workers: Vec<WorkerHandle>,
+    /// Master copy of each layer's parameters (`[w, b]`), the PS state.
+    params: Vec<Option<Vec<Tensor>>>,
+    relu: Vec<bool>,
+    lr: f32,
+    batch: usize,
+    pub comm: CommStats,
+    pub steps: u64,
+}
+
+impl Trainer {
+    /// Build a trainer for `graph` under `strategy` with `ndev` workers.
+    ///
+    /// Validates that the graph is a supported chain (MiniCNN-class:
+    /// conv/pool/fc/softmax) and that every (layer, config) artifact
+    /// exists in the store.
+    pub fn new(
+        store: &ArtifactStore,
+        graph: CompGraph,
+        strategy: Strategy,
+        ndev: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<Trainer> {
+        ensure!(strategy.configs.len() == graph.num_layers(), "strategy/graph size mismatch");
+        let batch = graph.layer(0).out_shape[DIM_N];
+        // chain + op support validation
+        for l in &graph.layers {
+            let preds = graph.predecessors(l.id);
+            match l.op {
+                OpKind::Input => ensure!(preds.is_empty(), "input with predecessors"),
+                OpKind::Conv2d { stride, .. } => {
+                    ensure!(stride == (1, 1), "executor supports stride-1 convs");
+                    ensure!(preds.len() == 1, "non-chain graph");
+                }
+                OpKind::Pool2d { kernel, stride, padding, .. } => {
+                    ensure!(kernel.0 == kernel.1 && stride == kernel && padding == (0, 0),
+                        "executor supports k==s unpadded pooling");
+                    ensure!(preds.len() == 1, "non-chain graph");
+                }
+                OpKind::FullyConnected { .. } | OpKind::Softmax => {
+                    ensure!(preds.len() == 1, "non-chain graph")
+                }
+                _ => bail!("executor does not support op {:?}", l.op.mnemonic()),
+            }
+            ensure!(
+                strategy.config(l.id).total() <= ndev,
+                "layer {} config {} exceeds {ndev} devices",
+                l.name,
+                strategy.config(l.id).label()
+            );
+        }
+        let relu = relu_flags(&graph);
+        let mut t = Trainer {
+            workers: (0..ndev).map(|i| WorkerHandle::spawn(i, store.clone())).collect(),
+            params: init_params(&graph, seed),
+            relu,
+            lr,
+            batch,
+            comm: CommStats::default(),
+            steps: 0,
+            graph,
+            strategy,
+        };
+        t.check_artifacts(store)?;
+        t.distribute_all_params()?;
+        Ok(t)
+    }
+
+    /// Snapshot of the master parameters (flat `[w, b]` per param layer,
+    /// in layer order) — feedable to the oracle.
+    pub fn master_params(&self) -> Vec<Tensor> {
+        self.params.iter().flatten().flat_map(|p| p.iter().cloned()).collect()
+    }
+
+    /// Verify every artifact this (graph, strategy) pair will request.
+    fn check_artifacts(&self, store: &ArtifactStore) -> Result<()> {
+        for l in &self.graph.layers {
+            for key in self.layer_keys(l.id) {
+                ensure!(
+                    store.has(&key),
+                    "missing artifact `{key}` for layer {} under {} — regenerate with \
+                     `make artifacts` (devices >= {})",
+                    l.name,
+                    self.strategy.config(l.id).label(),
+                    self.strategy.config(l.id).total()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The artifact keys layer `id` needs under the current strategy.
+    fn layer_keys(&self, id: LayerId) -> Vec<String> {
+        let l = self.graph.layer(id);
+        let cfg = self.strategy.config(id);
+        let tiles = output_tiles(&l.out_shape, cfg);
+        let t0 = &tiles[0];
+        let (nt, ct) = (t0.end(DIM_N) - t0.start(DIM_N), tile_c(t0));
+        match &l.op {
+            OpKind::Input => vec![],
+            OpKind::Conv2d { kernel, .. } => {
+                let cin = l.in_shapes[0][DIM_C];
+                let (ht, wt) = (t0.end(DIM_H) - t0.start(DIM_H), t0.end(DIM_W) - t0.start(DIM_W));
+                let (hs, ws) = (ht + kernel.0 - 1, wt + kernel.1 - 1);
+                vec![
+                    keys::conv2d(true, nt, cin, hs, ws, ct, kernel.0, self.relu[id]),
+                    keys::conv2d(false, nt, cin, hs, ws, ct, kernel.0, self.relu[id]),
+                ]
+            }
+            OpKind::Pool2d { kernel, .. } => {
+                let (ht, wt) = (t0.end(DIM_H) - t0.start(DIM_H), t0.end(DIM_W) - t0.start(DIM_W));
+                vec![
+                    keys::maxpool(true, nt, ct, ht * kernel.0, wt * kernel.1, kernel.0),
+                    keys::maxpool(false, nt, ct, ht * kernel.0, wt * kernel.1, kernel.0),
+                ]
+            }
+            OpKind::FullyConnected { .. } => {
+                let cin: usize = l.in_shapes[0][1..].iter().product();
+                vec![
+                    keys::fc(true, nt, cin, ct, self.relu[id]),
+                    keys::fc(false, nt, cin, ct, self.relu[id]),
+                ]
+            }
+            OpKind::Softmax => vec![keys::softmax_xent(nt, l.out_shape[DIM_C])],
+            _ => vec![],
+        }
+    }
+
+    /// Send every layer's parameter shards to the owning workers.
+    fn distribute_all_params(&mut self) -> Result<()> {
+        for id in 0..self.graph.num_layers() {
+            if self.params[id].is_some() {
+                self.send_params(id)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn send_params(&mut self, id: LayerId) -> Result<()> {
+        let l = self.graph.layer(id);
+        let cfg = *self.strategy.config(id);
+        let tiles = output_tiles(&l.out_shape, &cfg);
+        for (t, tile) in tiles.iter().enumerate() {
+            let shard = self.param_shard(id, tile)?;
+            self.comm.sync_bytes += shard.iter().map(|p| p.len() as u64 * 4).sum::<u64>();
+            self.workers[t]
+                .req
+                .send(Req::LoadParams { layer: id, params: shard })
+                .map_err(|_| anyhow!("worker {t} gone"))?;
+        }
+        Ok(())
+    }
+
+    /// Slice the master parameters for the tile's channel range.
+    fn param_shard(&self, id: LayerId, tile: &Region) -> Result<Vec<Tensor>> {
+        let master = self.params[id].as_ref().ok_or_else(|| anyhow!("no params"))?;
+        let (c0, c1) = (tile.start(DIM_C), tile.end(DIM_C));
+        let l = self.graph.layer(id);
+        Ok(match &l.op {
+            OpKind::Conv2d { .. } => {
+                // w: [cout, cin, kh, kw] -> rows c0..c1; b: [cout]
+                let w = &master[0];
+                let mut r = Region::full(w.shape());
+                r.set(0, c0, c1);
+                let b = &master[1];
+                vec![w.slice(&r), b.slice(&Region::new(&[(c0, c1)]))]
+            }
+            OpKind::FullyConnected { .. } => {
+                // w: [cin, cout] -> cols c0..c1
+                let w = &master[0];
+                let mut r = Region::full(w.shape());
+                r.set(1, c0, c1);
+                let b = &master[1];
+                vec![w.slice(&r), b.slice(&Region::new(&[(c0, c1)]))]
+            }
+            _ => bail!("layer {} has no params", l.name),
+        })
+    }
+
+    /// Run one synchronous training step; returns the mean loss.
+    pub fn step(&mut self, x: &Tensor, y: &Tensor) -> Result<f32> {
+        ensure!(x.shape() == self.graph.layer(0).out_shape.as_slice(), "bad input shape");
+        let n_layers = self.graph.num_layers();
+        // ---------------- forward ----------------
+        let mut acts: Vec<Option<Tensor>> = vec![None; n_layers];
+        acts[0] = Some(x.clone());
+        let mut loss_sum = 0.0f32;
+        let mut head_grad: Option<Tensor> = None;
+        for id in 1..n_layers {
+            let pred = self.graph.predecessors(id)[0];
+            let input = acts[pred].take().expect("chain order");
+            let (out, keep) = self.forward_layer(id, &input, y, &mut loss_sum)?;
+            acts[pred] = Some(input); // conv backward needs it? no — workers stash; restore for shape info
+            if let Some(out) = out {
+                acts[id] = Some(out);
+            } else {
+                head_grad = keep;
+            }
+        }
+        // ---------------- backward ----------------
+        let mut d = head_grad.ok_or_else(|| anyhow!("no softmax head in graph"))?;
+        d.scale(1.0 / self.batch as f32); // mean loss
+        for id in (1..n_layers).rev() {
+            if matches!(self.graph.layer(id).op, OpKind::Softmax | OpKind::Input) {
+                continue;
+            }
+            d = self.backward_layer(id, d)?;
+        }
+        self.steps += 1;
+        Ok(loss_sum / self.batch as f32)
+    }
+
+    /// Forward one layer. Returns `(Some(full output), None)` for normal
+    /// layers, `(None, Some(dlogits))` for the softmax head.
+    fn forward_layer(
+        &mut self,
+        id: LayerId,
+        input: &Tensor,
+        labels: &Tensor,
+        loss_sum: &mut f32,
+    ) -> Result<(Option<Tensor>, Option<Tensor>)> {
+        let l = self.graph.layer(id).clone();
+        let cfg = *self.strategy.config(id);
+        let tiles = output_tiles(&l.out_shape, &cfg);
+        let key = self.layer_keys(id);
+        match &l.op {
+            OpKind::Softmax => {
+                let mut dlogits = Tensor::zeros(&l.out_shape);
+                // dispatch
+                for (t, tile) in tiles.iter().enumerate() {
+                    let rows = Region::new(&[
+                        (tile.start(DIM_N), tile.end(DIM_N)),
+                        (0, l.out_shape[DIM_C]),
+                    ]);
+                    let logit_rows = input.slice(&rows);
+                    let label_rows = labels.slice(&rows);
+                    self.comm.xfer_bytes += (logit_rows.len() + label_rows.len()) as u64 * 4;
+                    self.workers[t]
+                        .req
+                        .send(Req::Forward {
+                            layer: id,
+                            key: key[0].clone(),
+                            inputs: vec![logit_rows, label_rows],
+                            with_params: false,
+                            stash: false,
+                        })
+                        .map_err(|_| anyhow!("worker {t} gone"))?;
+                }
+                for (t, tile) in tiles.iter().enumerate() {
+                    let Resp::Out { outputs } = self.workers[t].recv()? else {
+                        bail!("unexpected response")
+                    };
+                    *loss_sum += outputs[0].data()[0];
+                    let rows = Region::new(&[
+                        (tile.start(DIM_N), tile.end(DIM_N)),
+                        (0, l.out_shape[DIM_C]),
+                    ]);
+                    self.comm.xfer_bytes += outputs[1].len() as u64 * 4 + 4;
+                    dlogits.insert(&rows, &outputs[1]);
+                }
+                Ok((None, Some(dlogits)))
+            }
+            _ => {
+                let mut out = Tensor::zeros(&l.out_shape);
+                let (slabs, with_params) = self.make_slabs(id, input)?;
+                for (t, slab) in slabs.into_iter().enumerate() {
+                    self.comm.xfer_bytes += slab.len() as u64 * 4;
+                    self.workers[t]
+                        .req
+                        .send(Req::Forward {
+                            layer: id,
+                            key: key[0].clone(),
+                            inputs: vec![slab],
+                            with_params,
+                            stash: true,
+                        })
+                        .map_err(|_| anyhow!("worker {t} gone"))?;
+                }
+                for (t, tile) in tiles.iter().enumerate() {
+                    let Resp::Out { outputs } = self.workers[t].recv()? else {
+                        bail!("unexpected response")
+                    };
+                    self.comm.xfer_bytes += outputs[0].len() as u64 * 4;
+                    out.insert(tile, &outputs[0]);
+                }
+                Ok((Some(out), None))
+            }
+        }
+    }
+
+    /// Input slabs for each tile of layer `id` (leader-side scatter with
+    /// halo/zero-padding), plus whether the layer carries params.
+    fn make_slabs(&self, id: LayerId, input: &Tensor) -> Result<(Vec<Tensor>, bool)> {
+        let l = self.graph.layer(id);
+        let cfg = self.strategy.config(id);
+        let tiles = output_tiles(&l.out_shape, cfg);
+        match &l.op {
+            OpKind::Conv2d { kernel, padding, .. } => {
+                let p = *padding;
+                let in_sh = &l.in_shapes[0];
+                // zero-padded input, once
+                let mut padded = Tensor::zeros(&[
+                    in_sh[0],
+                    in_sh[1],
+                    in_sh[2] + 2 * p.0,
+                    in_sh[3] + 2 * p.1,
+                ]);
+                let inner = Region::new(&[
+                    (0, in_sh[0]),
+                    (0, in_sh[1]),
+                    (p.0, p.0 + in_sh[2]),
+                    (p.1, p.1 + in_sh[3]),
+                ]);
+                padded.insert(&inner, input);
+                let slabs = tiles
+                    .iter()
+                    .map(|t| {
+                        padded.slice(&Region::new(&[
+                            (t.start(DIM_N), t.end(DIM_N)),
+                            (0, in_sh[1]),
+                            (t.start(DIM_H), t.end(DIM_H) + kernel.0 - 1),
+                            (t.start(DIM_W), t.end(DIM_W) + kernel.1 - 1),
+                        ]))
+                    })
+                    .collect();
+                Ok((slabs, true))
+            }
+            OpKind::Pool2d { kernel, .. } => {
+                let slabs = tiles
+                    .iter()
+                    .map(|t| {
+                        input.slice(&Region::new(&[
+                            (t.start(DIM_N), t.end(DIM_N)),
+                            (t.start(DIM_C), t.end(DIM_C)),
+                            (t.start(DIM_H) * kernel.0, t.end(DIM_H) * kernel.0),
+                            (t.start(DIM_W) * kernel.1, t.end(DIM_W) * kernel.1),
+                        ]))
+                    })
+                    .collect();
+                Ok((slabs, false))
+            }
+            OpKind::FullyConnected { .. } => {
+                let cin: usize = l.in_shapes[0][1..].iter().product();
+                let flat = input.clone().reshape(&[l.in_shapes[0][0], cin]);
+                let slabs = tiles
+                    .iter()
+                    .map(|t| {
+                        flat.slice(&Region::new(&[(t.start(DIM_N), t.end(DIM_N)), (0, cin)]))
+                    })
+                    .collect();
+                Ok((slabs, true))
+            }
+            _ => bail!("make_slabs: unsupported op"),
+        }
+    }
+
+    /// Backward one layer: dispatch dy tiles, gather dx (scatter-add over
+    /// halos), run the parameter-server update. Returns the gradient for
+    /// the predecessor's output.
+    fn backward_layer(&mut self, id: LayerId, d: Tensor) -> Result<Tensor> {
+        let l = self.graph.layer(id).clone();
+        let cfg = *self.strategy.config(id);
+        let tiles = output_tiles(&l.out_shape, &cfg);
+        let key = &self.layer_keys(id)[1];
+        let in_sh = l.in_shapes[0].clone();
+        let with_params = l.has_params();
+        // dispatch dy tiles
+        for (t, tile) in tiles.iter().enumerate() {
+            let dy = match l.op {
+                OpKind::FullyConnected { .. } | OpKind::Softmax => d.slice(&Region::new(&[
+                    (tile.start(DIM_N), tile.end(DIM_N)),
+                    (tile.start(DIM_C), tile.end(DIM_C)),
+                ])),
+                _ => d.slice(tile),
+            };
+            self.comm.xfer_bytes += dy.len() as u64 * 4;
+            self.workers[t]
+                .req
+                .send(Req::Backward {
+                    layer: id,
+                    key: key.clone(),
+                    dy,
+                    with_params,
+                    with_bias: self.relu[id],
+                })
+                .map_err(|_| anyhow!("worker {t} gone"))?;
+        }
+        // gather
+        let shards = cfg.deg[DIM_C];
+        let mut grad_shards: Vec<Option<Vec<Tensor>>> = vec![None; shards];
+        let (mut dx_full, crop): (Tensor, Option<Region>) = match &l.op {
+            OpKind::Conv2d { padding, .. } => {
+                let padded = [
+                    in_sh[0],
+                    in_sh[1],
+                    in_sh[2] + 2 * padding.0,
+                    in_sh[3] + 2 * padding.1,
+                ];
+                let inner = Region::new(&[
+                    (0, in_sh[0]),
+                    (0, in_sh[1]),
+                    (padding.0, padding.0 + in_sh[2]),
+                    (padding.1, padding.1 + in_sh[3]),
+                ]);
+                (Tensor::zeros(&padded), Some(inner))
+            }
+            OpKind::FullyConnected { .. } => {
+                let cin: usize = in_sh[1..].iter().product();
+                (Tensor::zeros(&[in_sh[0], cin]), None)
+            }
+            _ => (Tensor::zeros(&in_sh), None),
+        };
+        for (t, tile) in tiles.iter().enumerate() {
+            let Resp::Grads { dx, dparams } = self.workers[t].recv()? else {
+                bail!("unexpected response")
+            };
+            self.comm.xfer_bytes += dx.len() as u64 * 4;
+            self.comm.sync_bytes += dparams.iter().map(|p| p.len() as u64 * 4).sum::<u64>();
+            // scatter dx into the producer-gradient accumulator
+            let dst = match &l.op {
+                OpKind::Conv2d { kernel, .. } => Region::new(&[
+                    (tile.start(DIM_N), tile.end(DIM_N)),
+                    (0, in_sh[1]),
+                    (tile.start(DIM_H), tile.end(DIM_H) + kernel.0 - 1),
+                    (tile.start(DIM_W), tile.end(DIM_W) + kernel.1 - 1),
+                ]),
+                OpKind::Pool2d { kernel, .. } => Region::new(&[
+                    (tile.start(DIM_N), tile.end(DIM_N)),
+                    (tile.start(DIM_C), tile.end(DIM_C)),
+                    (tile.start(DIM_H) * kernel.0, tile.end(DIM_H) * kernel.0),
+                    (tile.start(DIM_W) * kernel.1, tile.end(DIM_W) * kernel.1),
+                ]),
+                OpKind::FullyConnected { .. } => Region::new(&[
+                    (tile.start(DIM_N), tile.end(DIM_N)),
+                    (0, in_sh[1..].iter().product::<usize>()),
+                ]),
+                _ => bail!("unsupported backward op"),
+            };
+            dx_full.insert_add(&dst, &dx);
+            if with_params {
+                let shard = crate::cost::shard_of_tile(&cfg, t);
+                match &mut grad_shards[shard] {
+                    None => grad_shards[shard] = Some(dparams),
+                    Some(acc) => {
+                        for (a, g) in acc.iter_mut().zip(dparams.iter()) {
+                            a.add_assign(g);
+                        }
+                    }
+                }
+            }
+        }
+        // parameter-server update (SGD) + redistribute
+        if with_params {
+            self.apply_update(id, &cfg, grad_shards)?;
+            self.send_params(id)?;
+        }
+        // crop conv padding / restore producer rank
+        let mut dx = match crop {
+            Some(inner) => dx_full.slice(&inner),
+            None => dx_full,
+        };
+        if dx.shape() != in_sh.as_slice() {
+            dx = dx.reshape(&in_sh);
+        }
+        Ok(dx)
+    }
+
+    /// SGD on the master params: `w -= lr * dw` per channel shard.
+    fn apply_update(
+        &mut self,
+        id: LayerId,
+        cfg: &PConfig,
+        grad_shards: Vec<Option<Vec<Tensor>>>,
+    ) -> Result<()> {
+        let l = self.graph.layer(id).clone();
+        let shards = cfg.deg[DIM_C];
+        let master = self.params[id].as_mut().ok_or_else(|| anyhow!("no params"))?;
+        let cout = match &l.op {
+            OpKind::Conv2d { cout, .. } | OpKind::FullyConnected { cout } => *cout,
+            _ => bail!("no params"),
+        };
+        let ct = cout / shards;
+        for (s, grads) in grad_shards.into_iter().enumerate() {
+            let mut grads = grads.ok_or_else(|| anyhow!("missing grads for shard {s}"))?;
+            for g in &mut grads {
+                g.scale(self.lr);
+            }
+            let (c0, c1) = (s * ct, (s + 1) * ct);
+            // w
+            let wr = match l.op {
+                OpKind::Conv2d { .. } => {
+                    let mut r = Region::full(master[0].shape());
+                    r.set(0, c0, c1);
+                    r
+                }
+                _ => {
+                    let mut r = Region::full(master[0].shape());
+                    r.set(1, c0, c1);
+                    r
+                }
+            };
+            let mut w_shard = master[0].slice(&wr);
+            for (a, g) in w_shard.data_mut().iter_mut().zip(grads[0].data()) {
+                *a -= g;
+            }
+            master[0].insert(&wr, &w_shard);
+            // b
+            let br = Region::new(&[(c0, c1)]);
+            let mut b_shard = master[1].slice(&br);
+            for (a, g) in b_shard.data_mut().iter_mut().zip(grads[1].data()) {
+                *a -= g;
+            }
+            master[1].insert(&br, &b_shard);
+        }
+        Ok(())
+    }
+}
+
+/// Which layers fold a relu: convs and every FC not feeding the softmax
+/// head (mirrors `python/compile/model.ARCH`).
+fn relu_flags(g: &CompGraph) -> Vec<bool> {
+    g.layers
+        .iter()
+        .map(|l| match l.op {
+            OpKind::Conv2d { .. } => true,
+            OpKind::FullyConnected { .. } => !g
+                .successors(l.id)
+                .iter()
+                .any(|&s| matches!(g.layer(s).op, OpKind::Softmax)),
+            _ => false,
+        })
+        .collect()
+}
+
+/// He-initialized master parameters, deterministic in `seed`.
+fn init_params(g: &CompGraph, seed: u64) -> Vec<Option<Vec<Tensor>>> {
+    g.layers
+        .iter()
+        .map(|l| match &l.op {
+            OpKind::Conv2d { cout, kernel, .. } => {
+                let cin = l.in_shapes[0][DIM_C];
+                let mut rng = Rng::new(seed ^ (l.id as u64) << 8);
+                let fan_in = (cin * kernel.0 * kernel.1) as f64;
+                let std = (2.0 / fan_in).sqrt() as f32;
+                let w = Tensor::from_fn(&[*cout, cin, kernel.0, kernel.1], |_| {
+                    rng.next_gaussian() as f32 * std
+                });
+                Some(vec![w, Tensor::zeros(&[*cout])])
+            }
+            OpKind::FullyConnected { cout } => {
+                let cin: usize = l.in_shapes[0][1..].iter().product();
+                let mut rng = Rng::new(seed ^ (l.id as u64) << 8);
+                let std = (2.0 / cin as f64).sqrt() as f32;
+                let w = Tensor::from_fn(&[cin, *cout], |_| rng.next_gaussian() as f32 * std);
+                Some(vec![w, Tensor::zeros(&[*cout])])
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+fn tile_c(tile: &Region) -> usize {
+    tile.end(DIM_C) - tile.start(DIM_C)
+}
+
+/// Single-device oracle: executes the full-model train-step artifact.
+pub struct OracleTrainer {
+    engine: Engine,
+    key: String,
+    params: Vec<Tensor>,
+    lr: f32,
+}
+
+impl OracleTrainer {
+    /// `params` must be the flat `[w, b]` list in layer order (use
+    /// [`Trainer::master_params`] for parity runs).
+    pub fn new(store: &ArtifactStore, network: &str, batch: usize, params: Vec<Tensor>, lr: f32) -> Result<OracleTrainer> {
+        let key = keys::train_step(network, batch);
+        ensure!(store.has(&key), "missing oracle artifact `{key}`");
+        Ok(OracleTrainer { engine: Engine::new(store.clone())?, key, params, lr })
+    }
+
+    /// One SGD step; returns the mean loss.
+    pub fn step(&mut self, x: &Tensor, y: &Tensor) -> Result<f32> {
+        let mut inputs = vec![x.clone(), y.clone(), Tensor::from_vec(&[], vec![self.lr])];
+        inputs.extend(self.params.iter().cloned());
+        let mut out = self.engine.run(&self.key, &inputs).context("oracle step")?;
+        let loss = out.remove(0).data()[0];
+        self.params = out;
+        Ok(loss)
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+}

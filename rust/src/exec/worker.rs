@@ -1,0 +1,181 @@
+//! Worker threads: one per simulated device.
+//!
+//! A worker owns its own PJRT [`Engine`] (the client is not `Send`), a
+//! parameter-shard store, and an activation stash (forward inputs kept
+//! resident for the backward pass, as a real device would). The leader
+//! talks to workers over mpsc channels; every tensor crossing a channel
+//! is accounted as communication by the leader.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::LayerId;
+use crate::runtime::{ArtifactStore, Engine};
+use crate::tensor::Tensor;
+
+/// Leader -> worker requests.
+pub enum Req {
+    /// Install (or replace) this worker's parameter shard for a layer.
+    LoadParams { layer: LayerId, params: Vec<Tensor> },
+    /// Run a forward artifact. `inputs` are activation inputs; the
+    /// worker appends its parameter shard when `with_params`. When
+    /// `stash`, `inputs[0]` is kept for the backward pass.
+    Forward { layer: LayerId, key: String, inputs: Vec<Tensor>, with_params: bool, stash: bool },
+    /// Run a backward artifact with the stashed forward input, the
+    /// parameter shard (when `with_params`; `with_bias` controls whether
+    /// the bias is an artifact input — linear layers exclude it, matching
+    /// the AOT signatures), and the upstream gradient.
+    Backward { layer: LayerId, key: String, dy: Tensor, with_params: bool, with_bias: bool },
+    Shutdown,
+}
+
+/// Worker -> leader responses.
+pub enum Resp {
+    Out { outputs: Vec<Tensor> },
+    Grads { dx: Tensor, dparams: Vec<Tensor> },
+    Err(String),
+}
+
+/// A handle the leader keeps per worker.
+pub struct WorkerHandle {
+    pub id: usize,
+    pub req: Sender<Req>,
+    pub resp: Receiver<Resp>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn a worker thread with its own PJRT engine.
+    pub fn spawn(id: usize, store: ArtifactStore) -> WorkerHandle {
+        let (req_tx, req_rx) = channel::<Req>();
+        let (resp_tx, resp_rx) = channel::<Resp>();
+        let join = std::thread::Builder::new()
+            .name(format!("optcnn-worker-{id}"))
+            .spawn(move || worker_main(store, req_rx, resp_tx))
+            .expect("spawning worker thread");
+        WorkerHandle { id, req: req_tx, resp: resp_rx, join: Some(join) }
+    }
+
+    /// Await one response, turning worker-side errors into `Err`.
+    pub fn recv(&self) -> Result<Resp> {
+        match self.resp.recv() {
+            Ok(Resp::Err(e)) => Err(anyhow!("worker {}: {e}", self.id)),
+            Ok(r) => Ok(r),
+            Err(_) => Err(anyhow!("worker {} hung up", self.id)),
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.req.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct WorkerState {
+    engine: Engine,
+    /// Parameter shard per layer (w, b order).
+    params: Vec<Option<Vec<Tensor>>>,
+    /// Stashed forward input per layer (for backward).
+    stash: Vec<Option<Tensor>>,
+}
+
+fn worker_main(store: ArtifactStore, req: Receiver<Req>, resp: Sender<Resp>) {
+    let engine = match Engine::new(store) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = resp.send(Resp::Err(format!("engine init: {e:#}")));
+            return;
+        }
+    };
+    let mut st = WorkerState { engine, params: Vec::new(), stash: Vec::new() };
+    while let Ok(msg) = req.recv() {
+        match msg {
+            Req::Shutdown => break,
+            Req::LoadParams { layer, params } => {
+                grow(&mut st.params, layer);
+                st.params[layer] = Some(params);
+            }
+            Req::Forward { layer, key, inputs, with_params, stash } => {
+                let r = forward(&mut st, layer, &key, inputs, with_params, stash);
+                let _ = resp.send(unwrap_out(r));
+            }
+            Req::Backward { layer, key, dy, with_params, with_bias } => {
+                let r = backward(&mut st, layer, &key, dy, with_params, with_bias);
+                let _ = resp.send(r.unwrap_or_else(|e| Resp::Err(format!("{e:#}"))));
+            }
+        }
+    }
+}
+
+fn unwrap_out(r: Result<Vec<Tensor>>) -> Resp {
+    match r {
+        Ok(outputs) => Resp::Out { outputs },
+        Err(e) => Resp::Err(format!("{e:#}")),
+    }
+}
+
+fn grow<T>(v: &mut Vec<Option<T>>, idx: usize) {
+    if v.len() <= idx {
+        v.resize_with(idx + 1, || None);
+    }
+}
+
+fn forward(
+    st: &mut WorkerState,
+    layer: LayerId,
+    key: &str,
+    inputs: Vec<Tensor>,
+    with_params: bool,
+    stash: bool,
+) -> Result<Vec<Tensor>> {
+    if stash {
+        grow(&mut st.stash, layer);
+        st.stash[layer] = Some(inputs.first().cloned().expect("stash needs an input"));
+    }
+    let mut args = inputs;
+    if with_params {
+        let shard = st
+            .params
+            .get(layer)
+            .and_then(|p| p.as_ref())
+            .ok_or_else(|| anyhow!("layer {layer}: params not loaded"))?;
+        args.extend(shard.iter().cloned());
+    }
+    st.engine.run(key, &args)
+}
+
+fn backward(
+    st: &mut WorkerState,
+    layer: LayerId,
+    key: &str,
+    dy: Tensor,
+    with_params: bool,
+    with_bias: bool,
+) -> Result<Resp> {
+    let x = st
+        .stash
+        .get(layer)
+        .and_then(|s| s.as_ref())
+        .ok_or_else(|| anyhow!("layer {layer}: no stashed activation for backward"))?
+        .clone();
+    let mut args = vec![x];
+    if with_params {
+        let shard = st
+            .params
+            .get(layer)
+            .and_then(|p| p.as_ref())
+            .ok_or_else(|| anyhow!("layer {layer}: params not loaded"))?;
+        let take = if with_bias { shard.len() } else { 1 };
+        args.extend(shard.iter().take(take).cloned());
+    }
+    args.push(dy);
+    let mut out = st.engine.run(key, &args)?;
+    let dx = out.remove(0);
+    Ok(Resp::Grads { dx, dparams: out })
+}

@@ -1,0 +1,408 @@
+//! Computation graphs (paper §4).
+//!
+//! A node is a layer `l_i`; an edge `(l_i, l_j)` is a tensor produced by
+//! `l_i` and consumed by `l_j`. Shapes are row-major with semantic
+//! dimensions `[N, C, H, W]` for 4-D activations and `[N, C]` for
+//! fully-connected activations (N = sample, C = channel).
+//!
+//! Activation functions are folded into the producing layer (as cuDNN does
+//! and as the paper's layer counts imply: AlexNet = 11 layers,
+//! VGG-16 = 21, Inception-v3 = 102).
+
+pub mod nets;
+
+pub type LayerId = usize;
+
+/// Pooling flavor. Cost-wise identical; kept for fidelity of the builders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// The operator a layer applies. Spatial parameters follow cuDNN
+/// convention: kernel (kh, kw), stride (sh, sw), padding (ph, pw).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Graph input (the data loader). Carries no compute.
+    Input,
+    /// 2-D convolution (+ folded activation). `cout` output channels.
+    Conv2d { cout: usize, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize) },
+    /// 2-D pooling.
+    Pool2d { kind: PoolKind, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize) },
+    /// Fully-connected (+ folded activation). Flattens 4-D inputs.
+    FullyConnected { cout: usize },
+    /// Softmax + cross-entropy head.
+    Softmax,
+    /// Channel-dimension concatenation (Inception modules).
+    Concat,
+    /// Element-wise residual addition (ResNet blocks).
+    Add,
+}
+
+impl OpKind {
+    /// Short operator mnemonic for table output.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Conv2d { .. } => "conv",
+            OpKind::Pool2d { .. } => "pool",
+            OpKind::FullyConnected { .. } => "fc",
+            OpKind::Softmax => "softmax",
+            OpKind::Concat => "concat",
+            OpKind::Add => "add",
+        }
+    }
+}
+
+/// A layer (graph node): operator plus inferred output shape.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: LayerId,
+    pub name: String,
+    pub op: OpKind,
+    /// Output activation shape, `[N, C, H, W]` or `[N, C]`.
+    pub out_shape: Vec<usize>,
+    /// Input activation shapes (one per in-edge, in edge order).
+    pub in_shapes: Vec<Vec<usize>>,
+}
+
+impl Layer {
+    /// Number of trainable parameters.
+    pub fn param_count(&self) -> usize {
+        match &self.op {
+            OpKind::Conv2d { cout, kernel, .. } => {
+                let cin = self.in_shapes[0][1];
+                cout * cin * kernel.0 * kernel.1 + cout
+            }
+            OpKind::FullyConnected { cout } => {
+                let cin: usize = self.in_shapes[0][1..].iter().product();
+                cout * cin + cout
+            }
+            _ => 0,
+        }
+    }
+
+    /// Parameter bytes (f32).
+    pub fn param_bytes(&self) -> f64 {
+        self.param_count() as f64 * 4.0
+    }
+
+    /// Forward FLOPs for the **whole** layer at the stored batch size.
+    pub fn fwd_flops(&self) -> f64 {
+        let out: f64 = self.out_shape.iter().product::<usize>() as f64;
+        match &self.op {
+            OpKind::Input => 0.0,
+            OpKind::Conv2d { kernel, .. } => {
+                let cin = self.in_shapes[0][1] as f64;
+                2.0 * out * cin * (kernel.0 * kernel.1) as f64
+            }
+            OpKind::Pool2d { kernel, .. } => out * (kernel.0 * kernel.1) as f64,
+            OpKind::FullyConnected { .. } => {
+                let cin: f64 = self.in_shapes[0][1..].iter().product::<usize>() as f64;
+                2.0 * out * cin
+            }
+            OpKind::Softmax => 5.0 * out,
+            OpKind::Concat => 0.0,
+            OpKind::Add => out,
+        }
+    }
+
+    /// Total (forward + backward) FLOPs. Backward re-runs roughly two
+    /// convolution-shaped passes (data grad + weight grad), the standard
+    /// 3x-forward approximation for training compute.
+    pub fn train_flops(&self) -> f64 {
+        match &self.op {
+            OpKind::Input => 0.0,
+            _ => 3.0 * self.fwd_flops(),
+        }
+    }
+
+    /// Bytes of activation output (f32).
+    pub fn out_bytes(&self) -> f64 {
+        self.out_shape.iter().product::<usize>() as f64 * 4.0
+    }
+
+    /// Bytes touched per training step (inputs + output + params, fwd+bwd).
+    /// Used for the memory-bound roofline of cheap layers.
+    pub fn mem_bytes(&self) -> f64 {
+        let ins: f64 =
+            self.in_shapes.iter().map(|s| s.iter().product::<usize>() as f64 * 4.0).sum();
+        // fwd reads ins writes out; bwd reads grads writes grads: ~3x.
+        3.0 * (ins + self.out_bytes()) + 2.0 * self.param_bytes()
+    }
+
+    /// Does this layer carry trainable parameters?
+    pub fn has_params(&self) -> bool {
+        matches!(self.op, OpKind::Conv2d { .. } | OpKind::FullyConnected { .. })
+    }
+}
+
+/// A computation graph: layers plus directed tensor edges.
+#[derive(Debug, Clone)]
+pub struct CompGraph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub edges: Vec<(LayerId, LayerId)>,
+}
+
+impl CompGraph {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    /// Ids of layers feeding `id`, in edge order.
+    pub fn predecessors(&self, id: LayerId) -> Vec<LayerId> {
+        self.edges.iter().filter(|(_, d)| *d == id).map(|(s, _)| *s).collect()
+    }
+
+    /// Ids of layers consuming `id`'s output.
+    pub fn successors(&self, id: LayerId) -> Vec<LayerId> {
+        self.edges.iter().filter(|(s, _)| *s == id).map(|(_, d)| *d).collect()
+    }
+
+    /// Total trainable parameters.
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Total per-step training FLOPs.
+    pub fn total_train_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.train_flops()).sum()
+    }
+
+    /// Validate structural invariants (shapes on edges agree, DAG order,
+    /// single input, no dangling edges). Panics with a diagnostic on
+    /// violation; used by builder tests.
+    pub fn check(&self) {
+        assert!(!self.layers.is_empty());
+        assert!(matches!(self.layers[0].op, OpKind::Input), "layer 0 must be Input");
+        for (i, l) in self.layers.iter().enumerate() {
+            assert_eq!(l.id, i, "layer ids must be dense");
+        }
+        for &(s, d) in &self.edges {
+            assert!(s < self.layers.len() && d < self.layers.len(), "dangling edge ({s},{d})");
+            assert!(s < d, "edges must go forward in topological id order: ({s},{d})");
+        }
+        for l in &self.layers {
+            let preds = self.predecessors(l.id);
+            assert_eq!(
+                preds.len(),
+                l.in_shapes.len(),
+                "layer {} ({}) in-degree mismatch",
+                l.name,
+                l.id
+            );
+            for (k, p) in preds.iter().enumerate() {
+                assert_eq!(
+                    self.layers[*p].out_shape, l.in_shapes[k],
+                    "shape mismatch on edge {}->{}",
+                    self.layers[*p].name, l.name
+                );
+            }
+        }
+    }
+}
+
+/// Incremental graph builder with shape inference.
+pub struct GraphBuilder {
+    name: String,
+    layers: Vec<Layer>,
+    edges: Vec<(LayerId, LayerId)>,
+}
+
+fn conv_out(hw: usize, k: usize, s: usize, p: usize) -> usize {
+    assert!(hw + 2 * p >= k, "kernel {k} larger than padded extent {}", hw + 2 * p);
+    (hw + 2 * p - k) / s + 1
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder { name: name.to_string(), layers: Vec::new(), edges: Vec::new() }
+    }
+
+    fn push(&mut self, name: String, op: OpKind, inputs: &[LayerId], out_shape: Vec<usize>) -> LayerId {
+        let id = self.layers.len();
+        let in_shapes = inputs.iter().map(|&i| self.layers[i].out_shape.clone()).collect();
+        for &i in inputs {
+            self.edges.push((i, id));
+        }
+        self.layers.push(Layer { id, name, op, out_shape, in_shapes });
+        id
+    }
+
+    /// The graph input: `[n, c, h, w]` images.
+    pub fn input(&mut self, n: usize, c: usize, h: usize, w: usize) -> LayerId {
+        assert!(self.layers.is_empty(), "input must be the first layer");
+        self.push("input".into(), OpKind::Input, &[], vec![n, c, h, w])
+    }
+
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        input: LayerId,
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    ) -> LayerId {
+        let s = self.layers[input].out_shape.clone();
+        assert_eq!(s.len(), 4, "conv2d needs a 4-D input, got {:?}", s);
+        let out = vec![
+            s[0],
+            cout,
+            conv_out(s[2], kernel.0, stride.0, padding.0),
+            conv_out(s[3], kernel.1, stride.1, padding.1),
+        ];
+        self.push(name.into(), OpKind::Conv2d { cout, kernel, stride, padding }, &[input], out)
+    }
+
+    pub fn pool2d(
+        &mut self,
+        name: &str,
+        input: LayerId,
+        kind: PoolKind,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    ) -> LayerId {
+        let s = self.layers[input].out_shape.clone();
+        assert_eq!(s.len(), 4, "pool2d needs a 4-D input, got {:?}", s);
+        let out = vec![
+            s[0],
+            s[1],
+            conv_out(s[2], kernel.0, stride.0, padding.0),
+            conv_out(s[3], kernel.1, stride.1, padding.1),
+        ];
+        self.push(name.into(), OpKind::Pool2d { kind, kernel, stride, padding }, &[input], out)
+    }
+
+    pub fn fully_connected(&mut self, name: &str, input: LayerId, cout: usize) -> LayerId {
+        let s = self.layers[input].out_shape.clone();
+        let out = vec![s[0], cout];
+        self.push(name.into(), OpKind::FullyConnected { cout }, &[input], out)
+    }
+
+    pub fn softmax(&mut self, name: &str, input: LayerId) -> LayerId {
+        let s = self.layers[input].out_shape.clone();
+        assert_eq!(s.len(), 2, "softmax expects a 2-D input, got {:?}", s);
+        self.push(name.into(), OpKind::Softmax, &[input], s)
+    }
+
+    /// Channel concatenation of 4-D activations with equal N/H/W.
+    pub fn concat(&mut self, name: &str, inputs: &[LayerId]) -> LayerId {
+        assert!(inputs.len() >= 2);
+        let first = self.layers[inputs[0]].out_shape.clone();
+        let mut c = 0;
+        for &i in inputs {
+            let s = &self.layers[i].out_shape;
+            assert_eq!(s.len(), 4);
+            assert_eq!((s[0], s[2], s[3]), (first[0], first[2], first[3]), "concat NHW mismatch");
+            c += s[1];
+        }
+        let out = vec![first[0], c, first[2], first[3]];
+        self.push(name.into(), OpKind::Concat, inputs, out)
+    }
+
+    /// Element-wise residual addition; shapes must match exactly.
+    pub fn add(&mut self, name: &str, a: LayerId, b: LayerId) -> LayerId {
+        let sa = self.layers[a].out_shape.clone();
+        assert_eq!(sa, self.layers[b].out_shape, "add shape mismatch");
+        self.push(name.into(), OpKind::Add, &[a, b], sa)
+    }
+
+    pub fn finish(self) -> CompGraph {
+        let g = CompGraph { name: self.name, layers: self.layers, edges: self.edges };
+        g.check();
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n: usize) -> CompGraph {
+        let mut b = GraphBuilder::new("tiny");
+        let x = b.input(n, 3, 8, 8);
+        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), (1, 1));
+        let p1 = b.pool2d("p1", c1, PoolKind::Max, (2, 2), (2, 2), (0, 0));
+        let f1 = b.fully_connected("f1", p1, 10);
+        b.softmax("sm", f1);
+        b.finish()
+    }
+
+    #[test]
+    fn shape_inference_chain() {
+        let g = tiny(2);
+        assert_eq!(g.layer(1).out_shape, vec![2, 4, 8, 8]); // same-pad conv
+        assert_eq!(g.layer(2).out_shape, vec![2, 4, 4, 4]); // 2x2/2 pool
+        assert_eq!(g.layer(3).out_shape, vec![2, 10]);
+        assert_eq!(g.layer(4).out_shape, vec![2, 10]);
+    }
+
+    #[test]
+    fn param_counts() {
+        let g = tiny(2);
+        assert_eq!(g.layer(1).param_count(), 4 * 3 * 3 * 3 + 4);
+        assert_eq!(g.layer(3).param_count(), 10 * (4 * 4 * 4) + 10);
+        assert_eq!(g.layer(2).param_count(), 0);
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let f2 = tiny(2).total_train_flops();
+        let f4 = tiny(4).total_train_flops();
+        assert!((f4 / f2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conv_flops_formula() {
+        let g = tiny(1);
+        // conv: 2 * (1*4*8*8) * 3 * 9 fwd
+        assert_eq!(g.layer(1).fwd_flops(), 2.0 * (4.0 * 64.0) * 3.0 * 9.0);
+        assert_eq!(g.layer(1).train_flops(), 3.0 * g.layer(1).fwd_flops());
+    }
+
+    #[test]
+    fn concat_and_add_shapes() {
+        let mut b = GraphBuilder::new("branchy");
+        let x = b.input(1, 8, 4, 4);
+        let a = b.conv2d("a", x, 8, (1, 1), (1, 1), (0, 0));
+        let c = b.conv2d("c", x, 16, (1, 1), (1, 1), (0, 0));
+        let cat = b.concat("cat", &[a, c]);
+        let d = b.conv2d("d", cat, 8, (1, 1), (1, 1), (0, 0));
+        let res = b.add("res", a, d);
+        let g = {
+            let f = b.fully_connected("f", res, 10);
+            b.softmax("sm", f);
+            b.finish()
+        };
+        assert_eq!(g.layer(cat).out_shape, vec![1, 24, 4, 4]);
+        assert_eq!(g.layer(res).out_shape, vec![1, 8, 4, 4]);
+        assert_eq!(g.predecessors(res), vec![a, d]);
+        assert_eq!(g.successors(x), vec![a, c]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_add_panics() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input(1, 3, 4, 4);
+        let a = b.conv2d("a", x, 4, (1, 1), (1, 1), (0, 0));
+        b.add("bad", x, a);
+    }
+
+    #[test]
+    fn graph_check_passes_on_builders() {
+        tiny(32).check();
+    }
+}

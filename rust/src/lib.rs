@@ -1,0 +1,36 @@
+//! # OptCNN — layer-wise parallelism for CNN training
+//!
+//! Production-style reproduction of *"Exploring Hidden Dimensions in
+//! Parallelizing Convolutional Neural Networks"* (Jia, Lin, Qi, Aiken —
+//! ICML 2018).
+//!
+//! The library is organized around the paper's pipeline:
+//!
+//! 1. build a computation graph ([`graph`]) and a device graph
+//!    ([`device`]);
+//! 2. enumerate per-layer parallelization configurations ([`parallel`]);
+//! 3. evaluate candidate strategies with the cost model ([`cost`]);
+//! 4. find a globally optimal strategy with the elimination-based dynamic
+//!    program ([`optimizer`]), or use the data/model/OWT baselines;
+//! 5. validate with the discrete-event cluster simulator ([`sim`]) and/or
+//!    execute for real through the AOT-compiled HLO artifacts
+//!    ([`runtime`], [`exec`]).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod cost;
+pub mod data;
+pub mod device;
+pub mod exec;
+pub mod graph;
+pub mod metrics;
+pub mod optimizer;
+pub mod parallel;
+pub mod pipeline;
+pub mod prop;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

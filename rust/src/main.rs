@@ -1,0 +1,328 @@
+//! `optcnn` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `optimize`  — run Algorithm 1 and print the per-layer strategy
+//! * `simulate`  — evaluate a strategy on the simulated cluster
+//! * `sweep`     — the full Figure 7/8 grid (networks x devices x strategies)
+//! * `train`     — real partitioned training of MiniCNN through PJRT
+//! * `info`      — networks, artifact status, cluster presets
+//!
+//! Run `optcnn <cmd> --help-less` with no args for usage.
+
+use optcnn::config::ExperimentConfig;
+use optcnn::data::SyntheticDataset;
+use optcnn::exec::Trainer;
+use optcnn::graph::nets;
+use optcnn::pipeline::{Experiment, STRATEGY_NAMES};
+use optcnn::runtime::ArtifactStore;
+use optcnn::util::cli::Args;
+use optcnn::util::table::Table;
+use optcnn::util::{fmt_bytes, fmt_secs};
+
+const USAGE: &str = "\
+optcnn — layer-wise parallelism for CNN training (ICML'18 reproduction)
+
+USAGE:
+  optcnn optimize --network <net> --devices <n>
+  optcnn simulate --network <net> --devices <n> --strategy <s>
+  optcnn sweep    [--networks a,b] [--devices 1,2,4,8,16]
+  optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
+                  [--lr 0.01] [--artifacts artifacts]
+  optcnn profile  [--devices 4] [--reps 3]   (measured-t_C search, minicnn)
+  optcnn info
+  optcnn run      --config <file.toml>
+
+NETWORKS:   lenet5 alexnet vgg16 inception_v3 resnet18 minicnn
+STRATEGIES: data model owt layerwise
+";
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["verbose", "csv"]);
+    let code = match args.subcommand.as_deref() {
+        Some("optimize") => cmd_optimize(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("run") => cmd_run(&args),
+        _ => {
+            print!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_optimize(args: &Args) -> i32 {
+    let net = args.get_or("network", "vgg16");
+    let ndev = args.get_usize("devices", 4);
+    let e = Experiment::new(net, ndev);
+    let g = e.graph();
+    let d = e.devices();
+    let t0 = std::time::Instant::now();
+    let (strategy, stats) = e.strategy("layerwise", &g, &d);
+    let dt = t0.elapsed().as_secs_f64();
+    let mut table = Table::new(
+        &format!("optimal strategy: {net} on {ndev} GPU(s)"),
+        &["layer", "op", "configuration"],
+    );
+    for l in &g.layers {
+        table.row(vec![
+            l.name.clone(),
+            l.op.mnemonic().to_string(),
+            strategy.config(l.id).label(),
+        ]);
+    }
+    table.print();
+    let eval = e.evaluate(&g, &d, &strategy);
+    let s = stats.unwrap();
+    println!(
+        "search: {} node elims, {} edge elims, K={}, {:.3}s",
+        s.node_eliminations, s.edge_eliminations, s.final_nodes, dt
+    );
+    println!(
+        "estimated step {}  simulated step {}  throughput {:.0} img/s  comm {}/step",
+        fmt_secs(eval.estimate),
+        fmt_secs(eval.sim.step_time),
+        eval.throughput,
+        fmt_bytes(eval.comm.total())
+    );
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let net = args.get_or("network", "vgg16");
+    let ndev = args.get_usize("devices", 4);
+    let strat = args.get_or("strategy", "layerwise");
+    let e = Experiment::new(net, ndev);
+    if let Some(path) = args.get("trace") {
+        // export the simulated schedule as a Chrome trace
+        use optcnn::cost::CostModel;
+        use optcnn::sim::trace;
+        let g = e.graph();
+        let d = e.devices();
+        let (s, _) = e.strategy(strat, &g, &d);
+        let cm = CostModel::new(&g, &d);
+        let events = trace::trace_events(&g, &d, &s, &cm);
+        if let Err(err) = std::fs::write(path, trace::to_chrome_trace(&events)) {
+            eprintln!("writing {path}: {err}");
+            return 1;
+        }
+        println!("wrote {} trace events to {path} (open in chrome://tracing)", events.len());
+    }
+    let eval = e.run(strat);
+    println!("{net} on {ndev} GPU(s), strategy={strat}");
+    println!("  estimate (Eq.1): {}", fmt_secs(eval.estimate));
+    println!("  simulated step:  {}", fmt_secs(eval.sim.step_time));
+    println!("  throughput:      {:.0} images/s", eval.throughput);
+    println!("  utilization:     {:.1}%", eval.sim.utilization() * 100.0);
+    println!(
+        "  comm: {} ({} tensor moves + {} param sync)",
+        fmt_bytes(eval.comm.total()),
+        fmt_bytes(eval.comm.xfer_bytes),
+        fmt_bytes(eval.comm.sync_bytes)
+    );
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let networks: Vec<String> = args
+        .get_or("networks", "alexnet,vgg16,inception_v3")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let devices: Vec<usize> = args
+        .get_or("devices", "1,2,4,8,16")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    for net in &networks {
+        let mut table = Table::new(
+            &format!("{net}: simulated throughput (images/s)"),
+            &[&["GPUs".to_string()], STRATEGY_NAMES.map(String::from).as_slice()]
+                .concat()
+                .iter()
+                .map(String::as_str)
+                .collect::<Vec<_>>(),
+        );
+        for &ndev in &devices {
+            let e = Experiment::new(net, ndev);
+            let mut row = vec![ndev.to_string()];
+            for s in STRATEGY_NAMES {
+                row.push(format!("{:.0}", e.run(s).throughput));
+            }
+            table.row(row);
+        }
+        if args.flag("csv") {
+            print!("{}", table.to_csv());
+        } else {
+            table.print();
+        }
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let steps = args.get_usize("steps", 100);
+    let ndev = args.get_usize("devices", 4);
+    let strat_name = args.get_or("strategy", "layerwise");
+    let lr = args.get_f64("lr", 0.01) as f32;
+    let dir = args.get_or("artifacts", "artifacts");
+    let store = match ArtifactStore::load(dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let batch = store.batch;
+    let e = Experiment::new("minicnn", ndev);
+    let g = nets::minicnn(batch);
+    let d = e.devices();
+    let (strategy, _) = Experiment { per_gpu_batch: batch / ndev, ..e.clone() }
+        .strategy(strat_name, &g, &d);
+    println!("training minicnn: batch={batch} devices={ndev} strategy={strat_name} lr={lr}");
+    let mut trainer = match Trainer::new(&store, g, strategy, ndev, lr, 42) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let ds = SyntheticDataset::new(10, 3, 32, 32, 0.3, 7);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (x, y) = ds.batch(step % 16, batch);
+        match trainer.step(&x, &y) {
+            Ok(loss) => {
+                if step % 10 == 0 || step + 1 == steps {
+                    println!("step {step:>4}  loss {loss:.4}");
+                }
+            }
+            Err(e) => {
+                eprintln!("step {step}: {e:#}");
+                return 1;
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{} steps in {:.1}s ({:.1} img/s CPU-interpret), comm {} ({} sync)",
+        steps,
+        dt,
+        (steps * batch) as f64 / dt,
+        fmt_bytes(trainer.comm.total() as f64),
+        fmt_bytes(trainer.comm.sync_bytes as f64)
+    );
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("networks:");
+    for n in ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18", "minicnn"] {
+        let g = nets::by_name(n, 32).unwrap();
+        println!(
+            "  {n:<14} {:>4} layers  {:>12} params  {:>8.1} GFLOP/step(b=32)",
+            g.num_layers(),
+            g.total_params(),
+            g.total_train_flops() / 1e9
+        );
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match ArtifactStore::load(dir) {
+        Ok(s) => println!(
+            "artifacts: {} entries at {} (batch={}, devices={})",
+            s.len(),
+            dir,
+            s.batch,
+            s.devices
+        ),
+        Err(_) => println!("artifacts: none at `{dir}` (run `make artifacts`)"),
+    }
+    0
+}
+
+/// The paper's measured-`t_C` mode: profile every (layer, configuration)
+/// of MiniCNN by executing its artifacts, then run the search on the
+/// measured tables and compare against the analytic optimum.
+fn cmd_profile(args: &Args) -> i32 {
+    use optcnn::cost::{profile, CostModel, CostTables};
+    let ndev = args.get_usize("devices", 4);
+    let reps = args.get_usize("reps", 3);
+    let dir = args.get_or("artifacts", "artifacts");
+    let store = match ArtifactStore::load(dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let g = nets::minicnn(store.batch);
+    let d = Experiment::new("minicnn", ndev).devices();
+    let cm = CostModel::new(&g, &d);
+    println!("profiling minicnn artifacts ({reps} reps per config)...");
+    let measured = match profile::profile_graph(&store, &g, &cm, ndev, reps) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let analytic = optcnn::optimizer::optimize(&CostTables::build(&cm, ndev));
+    let mut cm_measured = CostModel::new(&g, &d);
+    cm_measured.measured_tc = Some(measured);
+    let profiled = optcnn::optimizer::optimize(&CostTables::build(&cm_measured, ndev));
+    let mut table = Table::new(
+        &format!("minicnn on {ndev} devices: analytic vs measured-t_C optimum"),
+        &["layer", "analytic", "measured"],
+    );
+    for l in &g.layers {
+        table.row(vec![
+            l.name.clone(),
+            analytic.strategy.config(l.id).label(),
+            profiled.strategy.config(l.id).label(),
+        ]);
+    }
+    table.print();
+    println!(
+        "estimated step: analytic {}, measured-calibrated {}",
+        fmt_secs(analytic.cost),
+        fmt_secs(profiled.cost)
+    );
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let Some(path) = args.get("config") else {
+        eprintln!("run requires --config <file.toml>");
+        return 2;
+    };
+    let cfg = match ExperimentConfig::load(path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let e = Experiment {
+        network: cfg.network.clone(),
+        ndev: cfg.num_devices(),
+        per_gpu_batch: cfg.per_gpu_batch,
+    };
+    let g = e.graph();
+    let d = cfg.device_graph();
+    let (strategy, _) = e.strategy(&cfg.strategy, &g, &d);
+    let eval = e.evaluate(&g, &d, &strategy);
+    println!(
+        "{} x{} ({}): step {} throughput {:.0} img/s comm {}",
+        cfg.network,
+        cfg.num_devices(),
+        cfg.strategy,
+        fmt_secs(eval.sim.step_time),
+        eval.throughput,
+        fmt_bytes(eval.comm.total())
+    );
+    0
+}

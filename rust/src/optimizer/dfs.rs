@@ -1,0 +1,146 @@
+//! Exhaustive depth-first baseline (paper Table 3's comparison point).
+//!
+//! Enumerates every strategy (`O(E·C^N)`) with branch-and-bound pruning
+//! and an optional wall-clock deadline, exactly the baseline the paper
+//! reports taking `> 24 hours` on VGG-16 / Inception-v3.
+
+use std::time::{Duration, Instant};
+
+use crate::cost::CostTables;
+use crate::parallel::Strategy;
+
+/// Outcome of a (possibly truncated) exhaustive search.
+#[derive(Debug, Clone)]
+pub struct DfsResult {
+    /// Best complete strategy found (None only if the deadline fired
+    /// before any leaf was reached).
+    pub strategy: Option<Strategy>,
+    pub cost: f64,
+    /// Whether the search space was fully explored.
+    pub complete: bool,
+    /// Search-tree nodes visited.
+    pub visited: u64,
+}
+
+struct Dfs<'a> {
+    tables: &'a CostTables,
+    /// For layer `l`: edge-table indices whose dst == l (src < l always).
+    in_edges: Vec<Vec<usize>>,
+    deadline: Option<Instant>,
+    best: f64,
+    best_idx: Vec<usize>,
+    sel: Vec<usize>,
+    visited: u64,
+    timed_out: bool,
+}
+
+/// Exhaustively search for the optimal strategy. `budget = None` means run
+/// to completion (only sensible for small graphs).
+pub fn dfs_optimal(tables: &CostTables, budget: Option<Duration>) -> DfsResult {
+    let n = tables.configs.len();
+    let mut in_edges = vec![Vec::new(); n];
+    for (ei, e) in tables.edges.iter().enumerate() {
+        debug_assert!(e.src < e.dst, "edges must be topological");
+        in_edges[e.dst].push(ei);
+    }
+    let mut s = Dfs {
+        tables,
+        in_edges,
+        deadline: budget.map(|b| Instant::now() + b),
+        best: f64::INFINITY,
+        best_idx: vec![0; n],
+        sel: vec![0; n],
+        visited: 0,
+        timed_out: false,
+    };
+    s.recurse(0, 0.0);
+    DfsResult {
+        strategy: if s.best.is_finite() {
+            Some(tables.strategy_from_indices(&s.best_idx))
+        } else {
+            None
+        },
+        cost: s.best,
+        complete: !s.timed_out,
+        visited: s.visited,
+    }
+}
+
+impl<'a> Dfs<'a> {
+    fn recurse(&mut self, layer: usize, acc: f64) {
+        if self.timed_out || acc >= self.best {
+            return;
+        }
+        self.visited += 1;
+        // Deadline checks are amortized: every 4096 visits.
+        if self.visited & 0xFFF == 0 {
+            if let Some(d) = self.deadline {
+                if Instant::now() >= d {
+                    self.timed_out = true;
+                    return;
+                }
+            }
+        }
+        if layer == self.tables.configs.len() {
+            self.best = acc;
+            self.best_idx.copy_from_slice(&self.sel);
+            return;
+        }
+        for c in 0..self.tables.num_configs(layer) {
+            self.sel[layer] = c;
+            let mut add = self.tables.node_cost[layer][c];
+            for &ei in &self.in_edges[layer] {
+                let e = &self.tables.edges[ei];
+                add += e.at(self.sel[e.src], c, self.tables.num_configs(layer));
+            }
+            self.recurse(layer + 1, acc + add);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, CostTables};
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+
+    #[test]
+    fn dfs_completes_on_lenet() {
+        let g = nets::lenet5(64);
+        let d = DeviceGraph::p100_cluster(2);
+        let t = CostTables::build(&CostModel::new(&g, &d), 2);
+        let r = dfs_optimal(&t, None);
+        assert!(r.complete);
+        let s = r.strategy.unwrap();
+        assert_eq!(s.configs.len(), g.num_layers());
+    }
+
+    #[test]
+    fn deadline_truncates_large_search() {
+        let g = nets::vgg16(128);
+        let d = DeviceGraph::p100_cluster(4);
+        let t = CostTables::build(&CostModel::new(&g, &d), 4);
+        let r = dfs_optimal(&t, Some(Duration::from_millis(50)));
+        assert!(!r.complete, "VGG-16 at 4 devices must not finish in 50ms");
+        assert!(r.visited > 0);
+    }
+
+    #[test]
+    fn dfs_cost_consistent_with_tables() {
+        let g = nets::lenet5(32);
+        let d = DeviceGraph::p100_cluster(2);
+        let t = CostTables::build(&CostModel::new(&g, &d), 2);
+        let r = dfs_optimal(&t, None);
+        let idx: Vec<usize> = r
+            .strategy
+            .as_ref()
+            .unwrap()
+            .configs
+            .iter()
+            .enumerate()
+            .map(|(l, c)| t.index_of(l, c).unwrap())
+            .collect();
+        assert!((t.strategy_cost(&idx) - r.cost).abs() < 1e-9 * r.cost.max(1.0));
+    }
+}

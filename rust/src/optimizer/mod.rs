@@ -1,0 +1,377 @@
+//! Strategy search (paper §5.2, Algorithm 1).
+//!
+//! The optimizer operates on precomputed [`CostTables`]: it iteratively
+//! applies **node elimination** (Eq. 2) and **edge elimination** (Eq. 3)
+//! until a fixpoint, enumerates all strategies for the reduced graph
+//! (`K` nodes, typically 2), then undoes the eliminations in reverse
+//! order, materializing the optimal configuration for every eliminated
+//! node from the recorded `argmin` tables (Theorems 1 & 2).
+//!
+//! Complexity: `O(E·C³ + K·C^K)` (Table 2), versus `O(E·C^N)` for the
+//! exhaustive DFS baseline in [`dfs`].
+
+pub mod dfs;
+pub mod strategies;
+
+use crate::cost::CostTables;
+use crate::parallel::Strategy;
+
+/// Search statistics for the Table 2/3 analysis.
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    pub node_eliminations: usize,
+    pub edge_eliminations: usize,
+    /// Nodes remaining in the final graph (the paper's `K`).
+    pub final_nodes: usize,
+    /// Strategies enumerated for the final graph.
+    pub enumerated: u64,
+}
+
+/// An optimal strategy under the cost model, with provenance.
+#[derive(Debug, Clone)]
+pub struct Optimized {
+    pub strategy: Strategy,
+    /// `t_O` of the strategy (seconds/step under Equation 1).
+    pub cost: f64,
+    pub stats: SearchStats,
+}
+
+/// A working edge: endpoints plus a dense `C_src x C_dst` cost matrix.
+#[derive(Debug, Clone)]
+struct WEdge {
+    src: usize,
+    dst: usize,
+    cost: Vec<f64>,
+}
+
+/// Undo records for the reconstruction phase (Algorithm 1, lines 15-23).
+enum Undo {
+    Node {
+        /// The eliminated node and its neighbors.
+        j: usize,
+        i: usize,
+        k: usize,
+        /// `argmin_cj` table indexed `[ci * C_k + ck]`.
+        argmin: Vec<u32>,
+    },
+    Edge,
+}
+
+/// Run Algorithm 1 on prebuilt cost tables.
+pub fn optimize(tables: &CostTables) -> Optimized {
+    let n = tables.configs.len();
+    let ncfg: Vec<usize> = (0..n).map(|l| tables.num_configs(l)).collect();
+    let node_cost: Vec<&[f64]> = tables.node_cost.iter().map(|v| v.as_slice()).collect();
+
+    let mut alive = vec![true; n];
+    let mut edges: Vec<Option<WEdge>> = tables
+        .edges
+        .iter()
+        .map(|e| Some(WEdge { src: e.src, dst: e.dst, cost: e.cost.clone() }))
+        .collect();
+    let mut undo: Vec<Undo> = Vec::new();
+    let mut stats = SearchStats::default();
+
+    // Adjacency indices over alive edges (edge ids per endpoint): keeps
+    // both elimination scans O(degree) instead of O(E) (§Perf log #4).
+    let mut in_ids: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut out_ids: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (idx, e) in edges.iter().enumerate() {
+        let e = e.as_ref().unwrap();
+        out_ids[e.src].push(idx);
+        in_ids[e.dst].push(idx);
+    }
+    let mut in_deg: Vec<usize> = in_ids.iter().map(|v| v.len()).collect();
+    let mut out_deg: Vec<usize> = out_ids.iter().map(|v| v.len()).collect();
+    // lazy deletion: entries in in_ids/out_ids may point at taken edges;
+    // skip those when scanning.
+    let live = |edges: &[Option<WEdge>], idx: usize| edges[idx].is_some();
+
+    // --- Elimination fixpoint (lines 4-13) ---
+    loop {
+        let mut changed = false;
+
+        // Node eliminations: nodes with exactly one in-edge and one
+        // out-edge. Scan until none applies.
+        loop {
+            let mut applied = false;
+            for j in 0..n {
+                if !alive[j] || in_deg[j] != 1 || out_deg[j] != 1 {
+                    continue;
+                }
+                let e1_idx = *in_ids[j].iter().find(|&&idx| live(&edges, idx)).unwrap();
+                let e2_idx = *out_ids[j].iter().find(|&&idx| live(&edges, idx)).unwrap();
+                let i = edges[e1_idx].as_ref().unwrap().src;
+                let k = edges[e2_idx].as_ref().unwrap().dst;
+                debug_assert_ne!(i, k, "DAG cannot route i->j->i");
+
+                let (ci_n, cj_n, ck_n) = (ncfg[i], ncfg[j], ncfg[k]);
+                let e1 = edges[e1_idx].take().unwrap();
+                let e2 = edges[e2_idx].take().unwrap();
+                let nj = node_cost[j];
+
+                // Eq. 2: e'(ci, ck) = min_cj nj(cj) + e1(ci,cj) + e2(cj,ck)
+                let mut cost = vec![f64::INFINITY; ci_n * ck_n];
+                let mut argmin = vec![0u32; ci_n * ck_n];
+                for ci in 0..ci_n {
+                    let e1_row = &e1.cost[ci * cj_n..(ci + 1) * cj_n];
+                    for cj in 0..cj_n {
+                        let base = nj[cj] + e1_row[cj];
+                        let e2_row = &e2.cost[cj * ck_n..(cj + 1) * ck_n];
+                        let out = &mut cost[ci * ck_n..(ci + 1) * ck_n];
+                        let arg = &mut argmin[ci * ck_n..(ci + 1) * ck_n];
+                        for ck in 0..ck_n {
+                            let v = base + e2_row[ck];
+                            if v < out[ck] {
+                                out[ck] = v;
+                                arg[ck] = cj as u32;
+                            }
+                        }
+                    }
+                }
+
+                alive[j] = false;
+                in_deg[j] = 0;
+                out_deg[j] = 0;
+                let new_idx = edges.len();
+                edges.push(Some(WEdge { src: i, dst: k, cost }));
+                // degrees: i loses out-edge to j but gains one to k (net
+                // zero); same for k's in-degree. Index the new edge.
+                out_ids[i].push(new_idx);
+                in_ids[k].push(new_idx);
+                undo.push(Undo::Node { j, i, k, argmin });
+                stats.node_eliminations += 1;
+                applied = true;
+                changed = true;
+                break;
+            }
+            if !applied {
+                break;
+            }
+        }
+
+        // Edge eliminations: parallel edges with identical endpoints.
+        // Scan each node's live out-edges grouped by destination.
+        loop {
+            let mut applied = false;
+            'outer: for src in 0..n {
+                if !alive[src] {
+                    continue;
+                }
+                let live_out: Vec<usize> =
+                    out_ids[src].iter().copied().filter(|&idx| live(&edges, idx)).collect();
+                for (p, &a) in live_out.iter().enumerate() {
+                    for &b in &live_out[p + 1..] {
+                        if edges[a].as_ref().unwrap().dst == edges[b].as_ref().unwrap().dst {
+                            let ea = edges[a].take().unwrap();
+                            let eb = edges[b].take().unwrap();
+                            let dst = ea.dst;
+                            // Eq. 3: sum the matrices.
+                            let cost: Vec<f64> =
+                                ea.cost.iter().zip(eb.cost.iter()).map(|(x, y)| x + y).collect();
+                            let new_idx = edges.len();
+                            edges.push(Some(WEdge { src, dst, cost }));
+                            out_ids[src].push(new_idx);
+                            in_ids[dst].push(new_idx);
+                            in_deg[dst] -= 1;
+                            out_deg[src] -= 1;
+                            undo.push(Undo::Edge);
+                            stats.edge_eliminations += 1;
+                            applied = true;
+                            changed = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            if !applied {
+                break;
+            }
+        }
+
+        if !changed {
+            break;
+        }
+    }
+
+    // --- Enumerate the final graph (line 14) ---
+    let final_nodes: Vec<usize> = (0..n).filter(|&i| alive[i]).collect();
+    stats.final_nodes = final_nodes.len();
+    let final_edges: Vec<&WEdge> = edges.iter().flatten().collect();
+
+    let mut chosen = vec![0usize; n];
+    let mut best = f64::INFINITY;
+    let mut best_sel = vec![0usize; final_nodes.len()];
+    let mut sel = vec![0usize; final_nodes.len()];
+    // position of each node in final_nodes (for edge lookups)
+    let mut pos = vec![usize::MAX; n];
+    for (p, &node) in final_nodes.iter().enumerate() {
+        pos[node] = p;
+    }
+    enumerate_final(
+        &final_nodes,
+        &final_edges,
+        &node_cost,
+        &ncfg,
+        &pos,
+        0,
+        0.0,
+        &mut sel,
+        &mut best,
+        &mut best_sel,
+        &mut stats.enumerated,
+    );
+    for (p, &node) in final_nodes.iter().enumerate() {
+        chosen[node] = best_sel[p];
+    }
+
+    // --- Undo phase (lines 15-23) ---
+    for u in undo.iter().rev() {
+        if let Undo::Node { j, i, k, argmin } = u {
+            let ck_n = ncfg[*k];
+            chosen[*j] = argmin[chosen[*i] * ck_n + chosen[*k]] as usize;
+        }
+    }
+
+    let cost = tables.strategy_cost(&chosen);
+    debug_assert!(
+        (cost - best).abs() <= 1e-9 * best.max(1.0),
+        "reconstructed strategy cost {cost} != DP cost {best}"
+    );
+    Optimized { strategy: tables.strategy_from_indices(&chosen), cost, stats }
+}
+
+/// Depth-first product enumeration over the final graph's nodes with
+/// branch-and-bound pruning (costs are nonnegative).
+#[allow(clippy::too_many_arguments)]
+fn enumerate_final(
+    nodes: &[usize],
+    edges: &[&WEdge],
+    node_cost: &[&[f64]],
+    ncfg: &[usize],
+    pos: &[usize],
+    depth: usize,
+    acc: f64,
+    sel: &mut Vec<usize>,
+    best: &mut f64,
+    best_sel: &mut Vec<usize>,
+    enumerated: &mut u64,
+) {
+    if acc >= *best {
+        return; // prune
+    }
+    if depth == nodes.len() {
+        *enumerated += 1;
+        *best = acc;
+        best_sel.copy_from_slice(sel);
+        return;
+    }
+    let node = nodes[depth];
+    for c in 0..ncfg[node] {
+        sel[depth] = c;
+        let mut add = node_cost[node][c];
+        // edges whose both endpoints are now assigned
+        for e in edges {
+            let (ps, pd) = (pos[e.src], pos[e.dst]);
+            if ps.max(pd) == depth {
+                let (cs, cd) = (sel[ps], sel[pd]);
+                add += e.cost[cs * ncfg[e.dst] + cd];
+            }
+        }
+        enumerate_final(
+            nodes, edges, node_cost, ncfg, pos, depth + 1, acc + add, sel, best, best_sel,
+            enumerated,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+
+    fn tables_for(net: &str, ndev: usize) -> CostTables {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        CostTables::build(&cm, ndev)
+    }
+
+    #[test]
+    fn chain_network_reduces_to_two_nodes() {
+        let t = tables_for("lenet5", 2);
+        let r = optimize(&t);
+        assert_eq!(r.stats.final_nodes, 2, "chains must collapse to K=2");
+        assert!(r.cost.is_finite());
+    }
+
+    #[test]
+    fn inception_reduces_to_two_nodes() {
+        let t = tables_for("inception_v3", 2);
+        let r = optimize(&t);
+        assert_eq!(r.stats.final_nodes, 2, "paper: K=2 for Inception-v3");
+        assert!(r.stats.edge_eliminations > 0, "branches require edge elims");
+    }
+
+    #[test]
+    fn resnet_reduces_to_two_nodes() {
+        let t = tables_for("resnet18", 2);
+        let r = optimize(&t);
+        assert_eq!(r.stats.final_nodes, 2, "paper: K=2 for ResNet too");
+    }
+
+    #[test]
+    fn dp_matches_exhaustive_on_lenet() {
+        // Theorem 1+2 end-to-end: the DP optimum equals brute force.
+        let t = tables_for("lenet5", 2);
+        let dp = optimize(&t);
+        let brute = dfs::dfs_optimal(&t, None);
+        assert!(brute.complete);
+        assert!(
+            (dp.cost - brute.cost).abs() <= 1e-9 * brute.cost,
+            "dp {} vs dfs {}",
+            dp.cost,
+            brute.cost
+        );
+    }
+
+    #[test]
+    fn optimum_beats_or_ties_baselines() {
+        for ndev in [2usize, 4] {
+            let g = nets::alexnet(32 * ndev);
+            let d = DeviceGraph::p100_cluster(ndev);
+            let cm = CostModel::new(&g, &d);
+            let t = CostTables::build(&cm, ndev);
+            let opt = optimize(&t);
+            for s in [
+                strategies::data_parallel(&g, ndev),
+                strategies::model_parallel(&g, ndev),
+                strategies::owt(&g, ndev),
+            ] {
+                let c = cm.t_o(&s);
+                assert!(
+                    opt.cost <= c * (1.0 + 1e-9),
+                    "optimal {} must not exceed baseline {}",
+                    opt.cost,
+                    c
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_cost_is_consistent() {
+        let t = tables_for("alexnet", 4);
+        let r = optimize(&t);
+        let idx: Vec<usize> = r
+            .strategy
+            .configs
+            .iter()
+            .enumerate()
+            .map(|(l, c)| t.index_of(l, c).unwrap())
+            .collect();
+        assert!((t.strategy_cost(&idx) - r.cost).abs() < 1e-9 * r.cost);
+    }
+}

@@ -1,0 +1,149 @@
+//! Baseline parallelization strategies (paper §6, "Baselines").
+//!
+//! * **Data parallelism** — every layer partitions the sample dimension
+//!   across all devices.
+//! * **Model parallelism** — every layer partitions its output-channel
+//!   dimension (Krizhevsky 2014's variant: parameters spread equally).
+//! * **OWT** ("one weird trick") — data parallelism for conv/pool layers,
+//!   model parallelism for densely-connected layers.
+//!
+//! Degrees are clipped to the largest legal divisor of the relevant
+//! extent, so every produced strategy is valid for the given graph.
+
+use crate::graph::{CompGraph, Layer, OpKind};
+use crate::parallel::{PConfig, Strategy};
+
+/// Largest divisor of `extent` that is `<= cap`.
+fn largest_divisor_leq(extent: usize, cap: usize) -> usize {
+    (1..=cap.min(extent)).rev().find(|d| extent % d == 0).unwrap_or(1)
+}
+
+fn sample_cfg(layer: &Layer, ndev: usize) -> PConfig {
+    PConfig::new(largest_divisor_leq(layer.out_shape[0], ndev), 1, 1, 1)
+}
+
+fn channel_cfg(layer: &Layer, ndev: usize) -> PConfig {
+    PConfig::new(1, largest_divisor_leq(layer.out_shape[1], ndev), 1, 1)
+}
+
+/// Pure data parallelism on `ndev` devices.
+pub fn data_parallel(g: &CompGraph, ndev: usize) -> Strategy {
+    Strategy { configs: g.layers.iter().map(|l| sample_cfg(l, ndev)).collect() }
+}
+
+/// Pure model (channel) parallelism on `ndev` devices. Layers that cannot
+/// partition channels (input, softmax) fall back to sample partitioning.
+pub fn model_parallel(g: &CompGraph, ndev: usize) -> Strategy {
+    Strategy {
+        configs: g
+            .layers
+            .iter()
+            .map(|l| match l.op {
+                OpKind::Input | OpKind::Softmax => sample_cfg(l, ndev),
+                _ => channel_cfg(l, ndev),
+            })
+            .collect(),
+    }
+}
+
+/// "One weird trick" (Krizhevsky 2014): data parallelism for
+/// convolutional/pooling layers, model parallelism for fully-connected
+/// layers.
+pub fn owt(g: &CompGraph, ndev: usize) -> Strategy {
+    Strategy {
+        configs: g
+            .layers
+            .iter()
+            .map(|l| match l.op {
+                OpKind::FullyConnected { .. } => channel_cfg(l, ndev),
+                _ => sample_cfg(l, ndev),
+            })
+            .collect(),
+    }
+}
+
+/// Look up a named baseline (CLI entry point). `layerwise` is handled by
+/// the optimizer, not here.
+pub fn by_name(name: &str, g: &CompGraph, ndev: usize) -> Option<Strategy> {
+    match name {
+        "data" => Some(data_parallel(g, ndev)),
+        "model" => Some(model_parallel(g, ndev)),
+        "owt" => Some(owt(g, ndev)),
+        _ => None,
+    }
+}
+
+/// The strategies compared throughout the paper's evaluation.
+pub const BASELINE_NAMES: [&str; 3] = ["data", "model", "owt"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, CostTables};
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+
+    #[test]
+    fn data_parallel_uses_all_devices_on_every_layer() {
+        let g = nets::alexnet(32 * 4);
+        let s = data_parallel(&g, 4);
+        assert!(s.configs.iter().all(|c| c.deg[0] == 4 && c.total() == 4));
+    }
+
+    #[test]
+    fn owt_switches_for_fc_layers() {
+        let g = nets::vgg16(32 * 4);
+        let s = owt(&g, 4);
+        for l in &g.layers {
+            let c = s.config(l.id);
+            match l.op {
+                OpKind::FullyConnected { .. } => {
+                    assert_eq!(c.deg[1], 4, "{} should be channel-split", l.name)
+                }
+                _ => assert_eq!(c.deg[1], 1, "{} should be sample-split", l.name),
+            }
+        }
+    }
+
+    #[test]
+    fn model_parallel_shards_every_param_layer() {
+        let g = nets::alexnet(32 * 8);
+        let s = model_parallel(&g, 8);
+        for l in &g.layers {
+            if l.has_params() {
+                assert!(s.config(l.id).deg[1] > 1, "{} unsharded", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn degrees_respect_divisibility() {
+        // batch 96 on 16 devices: 16 divides 96? no (96/16=6, yes it does).
+        // Try odd extents: lenet conv1 has 6 channels; channel degree on 4
+        // devices must clip to 3.
+        let g = nets::lenet5(32);
+        let s = model_parallel(&g, 4);
+        let conv1 = g.layers.iter().find(|l| l.name == "conv1").unwrap();
+        assert_eq!(s.config(conv1.id).deg[1], 3);
+    }
+
+    #[test]
+    fn baselines_are_legal_configs() {
+        for ndev in [2usize, 4] {
+            let g = nets::inception_v3(32 * ndev);
+            let d = DeviceGraph::p100_cluster(ndev);
+            let t = CostTables::build(&CostModel::new(&g, &d), ndev);
+            for name in BASELINE_NAMES {
+                let s = by_name(name, &g, ndev).unwrap();
+                for (l, c) in s.configs.iter().enumerate() {
+                    assert!(
+                        t.index_of(l, c).is_some(),
+                        "{name}: illegal config {} for layer {}",
+                        c.label(),
+                        g.layer(l).name
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,438 @@
+//! Parallelization configurations (paper §3–4).
+//!
+//! A configuration describes how a layer's **output tensor** is equally
+//! partitioned along its parallelizable dimensions (Table 1); the product
+//! of per-dimension degrees is the layer's degree of parallelism. Tiles
+//! are assigned to devices contiguously in row-major tile order (device 0
+//! first), which keeps equal configs on adjacent layers transfer-free and
+//! groups small-degree layers onto one node.
+
+pub mod placement;
+
+pub use placement::Placement;
+
+use crate::graph::{Layer, OpKind};
+use crate::tensor::Region;
+
+/// Semantic dimension indices into activation shapes.
+pub const DIM_N: usize = 0;
+pub const DIM_C: usize = 1;
+pub const DIM_H: usize = 2;
+pub const DIM_W: usize = 3;
+
+/// Per-dimension parallelism degrees `[n, c, h, w]`. For 2-D activations
+/// the h/w entries are fixed at 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PConfig {
+    pub deg: [usize; 4],
+}
+
+impl PConfig {
+    pub fn new(n: usize, c: usize, h: usize, w: usize) -> PConfig {
+        assert!(n >= 1 && c >= 1 && h >= 1 && w >= 1);
+        PConfig { deg: [n, c, h, w] }
+    }
+
+    /// The single-device configuration.
+    pub fn serial() -> PConfig {
+        PConfig { deg: [1; 4] }
+    }
+
+    /// Pure data parallelism at `d` devices.
+    pub fn data(d: usize) -> PConfig {
+        PConfig::new(d, 1, 1, 1)
+    }
+
+    /// Pure channel/model parallelism at `d` devices.
+    pub fn channel(d: usize) -> PConfig {
+        PConfig::new(1, d, 1, 1)
+    }
+
+    /// Total degree of parallelism (number of devices used).
+    pub fn total(&self) -> usize {
+        self.deg.iter().product()
+    }
+
+    /// Paper-style label, e.g. `{n=4, c=1, h=2, w=1}` printed sparsely as
+    /// `{n=4, h=2}`; the all-ones config prints `{serial}`.
+    pub fn label(&self) -> String {
+        let names = ["n", "c", "h", "w"];
+        let parts: Vec<String> = (0..4)
+            .filter(|&d| self.deg[d] > 1)
+            .map(|d| format!("{}={}", names[d], self.deg[d]))
+            .collect();
+        if parts.is_empty() {
+            "{n=1}".to_string()
+        } else {
+            format!("{{{}}}", parts.join(", "))
+        }
+    }
+}
+
+/// Which dimensions may be partitioned for a given operator (Table 1).
+/// Index order `[n, c, h, w]`.
+pub fn allowed_dims(op: &OpKind) -> [bool; 4] {
+    match op {
+        // The input "layer" is the data loader; samples only.
+        OpKind::Input => [true, false, false, false],
+        OpKind::Conv2d { .. } | OpKind::Pool2d { .. } => [true, true, true, true],
+        OpKind::Concat | OpKind::Add => [true, true, true, true],
+        OpKind::FullyConnected { .. } => [true, true, false, false],
+        // Softmax normalizes over channels; partition samples only.
+        OpKind::Softmax => [true, false, false, false],
+    }
+}
+
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// Enumerate every legal configuration for `layer` on at most `ndev`
+/// devices: each degree divides the output extent (equal partitioning),
+/// disallowed dimensions stay at 1, and the total degree is <= `ndev`.
+pub fn enumerate_configs(layer: &Layer, ndev: usize) -> Vec<PConfig> {
+    let shape = &layer.out_shape;
+    let allowed = allowed_dims(&layer.op);
+    let rank = shape.len();
+    let mut per_dim: [Vec<usize>; 4] = [vec![1], vec![1], vec![1], vec![1]];
+    for d in 0..4 {
+        if d < rank && allowed[d] {
+            per_dim[d] = divisors(shape[d]).into_iter().filter(|&k| k <= ndev).collect();
+        }
+    }
+    let mut out = Vec::new();
+    for &n in &per_dim[0] {
+        for &c in &per_dim[1] {
+            if n * c > ndev {
+                continue;
+            }
+            for &h in &per_dim[2] {
+                if n * c * h > ndev {
+                    continue;
+                }
+                for &w in &per_dim[3] {
+                    if n * c * h * w <= ndev {
+                        out.push(PConfig::new(n, c, h, w));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The output tiles of a layer under `cfg`, one per participating device,
+/// in row-major tile order (tile index == device id). Region rank matches
+/// the activation rank.
+pub fn output_tiles(out_shape: &[usize], cfg: &PConfig) -> Vec<Region> {
+    let rank = out_shape.len();
+    debug_assert!(rank == 2 || rank == 4);
+    for d in rank..4 {
+        debug_assert_eq!(cfg.deg[d], 1, "degree in missing dim must be 1");
+    }
+    let degs: Vec<usize> = (0..rank).map(|d| cfg.deg[d]).collect();
+    for d in 0..rank {
+        debug_assert_eq!(out_shape[d] % degs[d], 0, "equal partitioning violated");
+    }
+    let sizes: Vec<usize> = (0..rank).map(|d| out_shape[d] / degs[d]).collect();
+    let total: usize = degs.iter().product();
+    let mut tiles = Vec::with_capacity(total);
+    let mut idx = vec![0usize; rank];
+    for _ in 0..total {
+        let ranges: Vec<(usize, usize)> =
+            (0..rank).map(|d| (idx[d] * sizes[d], (idx[d] + 1) * sizes[d])).collect();
+        tiles.push(Region::new(&ranges));
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < degs[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    tiles
+}
+
+/// The region of input `in_idx` that a device must hold to compute
+/// `out_tile` of `layer`. Returns `None` when that input contributes
+/// nothing to the tile (possible for `Concat`). Handles the convolution /
+/// pooling receptive-field halo.
+pub fn input_region(layer: &Layer, in_idx: usize, out_tile: &Region) -> Option<Region> {
+    let in_shape = &layer.in_shapes[in_idx];
+    match &layer.op {
+        OpKind::Input => unreachable!("input layer has no inputs"),
+        OpKind::Conv2d { kernel, stride, padding, .. } => {
+            // Output tile rows [h0,h1) need input rows
+            // [h0*s - p, (h1-1)*s - p + k) clamped; all input channels.
+            let (h0, h1) = spatial_window(
+                out_tile.start(DIM_H),
+                out_tile.end(DIM_H),
+                kernel.0,
+                stride.0,
+                padding.0,
+                in_shape[DIM_H],
+            );
+            let (w0, w1) = spatial_window(
+                out_tile.start(DIM_W),
+                out_tile.end(DIM_W),
+                kernel.1,
+                stride.1,
+                padding.1,
+                in_shape[DIM_W],
+            );
+            Some(Region::new(&[
+                (out_tile.start(DIM_N), out_tile.end(DIM_N)),
+                (0, in_shape[DIM_C]),
+                (h0, h1),
+                (w0, w1),
+            ]))
+        }
+        OpKind::Pool2d { kernel, stride, padding, .. } => {
+            // Pooling is per-channel: same channel range as the out tile.
+            let (h0, h1) = spatial_window(
+                out_tile.start(DIM_H),
+                out_tile.end(DIM_H),
+                kernel.0,
+                stride.0,
+                padding.0,
+                in_shape[DIM_H],
+            );
+            let (w0, w1) = spatial_window(
+                out_tile.start(DIM_W),
+                out_tile.end(DIM_W),
+                kernel.1,
+                stride.1,
+                padding.1,
+                in_shape[DIM_W],
+            );
+            Some(Region::new(&[
+                (out_tile.start(DIM_N), out_tile.end(DIM_N)),
+                (out_tile.start(DIM_C), out_tile.end(DIM_C)),
+                (h0, h1),
+                (w0, w1),
+            ]))
+        }
+        OpKind::FullyConnected { .. } => {
+            // Any slice of output features needs the whole (flattened)
+            // input for the owned samples.
+            let mut ranges = vec![(out_tile.start(DIM_N), out_tile.end(DIM_N))];
+            for d in 1..in_shape.len() {
+                ranges.push((0, in_shape[d]));
+            }
+            Some(Region::new(&ranges))
+        }
+        OpKind::Softmax => {
+            // Normalizes over channels: full channel extent per sample.
+            Some(Region::new(&[
+                (out_tile.start(DIM_N), out_tile.end(DIM_N)),
+                (0, in_shape[DIM_C]),
+            ]))
+        }
+        OpKind::Concat => {
+            // Input `in_idx` owns channel offsets [off, off + c_k) of the
+            // output; intersect with the tile's channel range.
+            let off: usize = layer.in_shapes[..in_idx].iter().map(|s| s[DIM_C]).sum();
+            let ck = in_shape[DIM_C];
+            let lo = out_tile.start(DIM_C).max(off);
+            let hi = out_tile.end(DIM_C).min(off + ck);
+            if lo >= hi {
+                return None;
+            }
+            Some(Region::new(&[
+                (out_tile.start(DIM_N), out_tile.end(DIM_N)),
+                (lo - off, hi - off),
+                (out_tile.start(DIM_H), out_tile.end(DIM_H)),
+                (out_tile.start(DIM_W), out_tile.end(DIM_W)),
+            ]))
+        }
+        OpKind::Add => {
+            // Element-wise: identical region on both inputs.
+            let ranges: Vec<(usize, usize)> =
+                (0..out_tile.rank()).map(|d| (out_tile.start(d), out_tile.end(d))).collect();
+            Some(Region::new(&ranges))
+        }
+    }
+}
+
+/// Input window along one spatial dimension for output range [o0, o1).
+fn spatial_window(
+    o0: usize,
+    o1: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    in_extent: usize,
+) -> (usize, usize) {
+    debug_assert!(o1 > o0);
+    let lo = (o0 * s).saturating_sub(p);
+    let hi = ((o1 - 1) * s + k).saturating_sub(p).min(in_extent);
+    (lo.min(in_extent), hi.max(lo))
+}
+
+/// How a layer's parameters relate to a configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParamSharding {
+    /// Devices holding a (possibly partial) copy that must be synchronized.
+    pub replicas: usize,
+    /// Disjoint parameter shards (channel partitioning ⇒ no sync between
+    /// shards).
+    pub shards: usize,
+    /// Bytes per shard.
+    pub shard_bytes: f64,
+}
+
+/// Parameter replication/sharding under `cfg`: the channel degree shards
+/// the (output-channel-major) parameters; sample/height/width degrees
+/// replicate them (paper §3, Figure 2).
+pub fn param_sharding(layer: &Layer, cfg: &PConfig) -> ParamSharding {
+    let bytes = layer.param_bytes();
+    let shards = cfg.deg[DIM_C];
+    let replicas = cfg.deg[DIM_N] * cfg.deg[DIM_H] * cfg.deg[DIM_W];
+    ParamSharding { replicas, shards, shard_bytes: bytes / shards as f64 }
+}
+
+/// A full parallelization strategy: one configuration per layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Strategy {
+    pub configs: Vec<PConfig>,
+}
+
+impl Strategy {
+    pub fn uniform(num_layers: usize, cfg: PConfig) -> Strategy {
+        Strategy { configs: vec![cfg; num_layers] }
+    }
+
+    pub fn config(&self, layer: crate::graph::LayerId) -> &PConfig {
+        &self.configs[layer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{nets, GraphBuilder, PoolKind};
+
+    fn conv_layer() -> Layer {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(8, 4, 16, 16);
+        b.conv2d("c", x, 8, (3, 3), (1, 1), (1, 1));
+        b.finish().layers[1].clone()
+    }
+
+    #[test]
+    fn enumerate_respects_device_budget_and_divisibility() {
+        let l = conv_layer();
+        let cfgs = enumerate_configs(&l, 4);
+        assert!(cfgs.iter().all(|c| c.total() <= 4));
+        assert!(cfgs.iter().all(|c| {
+            8 % c.deg[0] == 0 && 8 % c.deg[1] == 0 && 16 % c.deg[2] == 0 && 16 % c.deg[3] == 0
+        }));
+        assert!(cfgs.contains(&PConfig::serial()));
+        assert!(cfgs.contains(&PConfig::data(4)));
+        assert!(cfgs.contains(&PConfig::new(1, 1, 2, 2)));
+        // no duplicates
+        let mut seen = std::collections::HashSet::new();
+        assert!(cfgs.iter().all(|c| seen.insert(*c)));
+    }
+
+    #[test]
+    fn fc_configs_are_2d_only() {
+        let g = nets::lenet5(8);
+        let fc = g.layers.iter().find(|l| l.name == "fc3").unwrap();
+        let cfgs = enumerate_configs(fc, 4);
+        assert!(cfgs.iter().all(|c| c.deg[DIM_H] == 1 && c.deg[DIM_W] == 1));
+        assert!(cfgs.contains(&PConfig::channel(4)));
+    }
+
+    #[test]
+    fn tiles_partition_the_output_exactly() {
+        let l = conv_layer();
+        let cfg = PConfig::new(2, 1, 2, 1);
+        let tiles = output_tiles(&l.out_shape, &cfg);
+        assert_eq!(tiles.len(), 4);
+        let total: usize = tiles.iter().map(|t| t.volume()).sum();
+        assert_eq!(total, l.out_shape.iter().product::<usize>());
+        // pairwise disjoint
+        for i in 0..tiles.len() {
+            for j in i + 1..tiles.len() {
+                assert_eq!(tiles[i].overlap_volume(&tiles[j]), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_halo_extends_input_window() {
+        let l = conv_layer(); // 3x3 stride 1 pad 1, in 16x16
+        let tiles = output_tiles(&l.out_shape, &PConfig::new(1, 1, 2, 1));
+        // lower half tile: output rows 8..16 need input rows 7..16
+        let r = input_region(&l, 0, &tiles[1]).unwrap();
+        assert_eq!((r.start(DIM_H), r.end(DIM_H)), (7, 16));
+        // upper half: output rows 0..8 need input rows 0..9 (pad clamps 0)
+        let r0 = input_region(&l, 0, &tiles[0]).unwrap();
+        assert_eq!((r0.start(DIM_H), r0.end(DIM_H)), (0, 9));
+        // channel dim: conv needs all input channels
+        assert_eq!((r0.start(DIM_C), r0.end(DIM_C)), (0, 4));
+    }
+
+    #[test]
+    fn pool_keeps_channel_range() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(2, 8, 8, 8);
+        b.pool2d("p", x, PoolKind::Max, (2, 2), (2, 2), (0, 0));
+        let g = b.finish();
+        let p = &g.layers[1];
+        let tiles = output_tiles(&p.out_shape, &PConfig::new(1, 2, 1, 1));
+        let r = input_region(p, 0, &tiles[1]).unwrap();
+        assert_eq!((r.start(DIM_C), r.end(DIM_C)), (4, 8));
+        // non-overlapping 2x2/2 pool: input rows exactly 2x
+        assert_eq!((r.start(DIM_H), r.end(DIM_H)), (0, 8));
+    }
+
+    #[test]
+    fn concat_input_mapping() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input(1, 4, 4, 4);
+        let a = b.conv2d("a", x, 6, (1, 1), (1, 1), (0, 0));
+        let c = b.conv2d("c", x, 10, (1, 1), (1, 1), (0, 0));
+        b.concat("cat", &[a, c]);
+        let g = b.finish();
+        let cat = g.layers.last().unwrap();
+        // channel tile 8..16 of the concat output overlaps input0 (ch 0..6)
+        // nowhere and input1 (ch 6..16) at local channels 2..10.
+        let tile = Region::new(&[(0, 1), (8, 16), (0, 4), (0, 4)]);
+        assert!(input_region(cat, 0, &tile).is_none());
+        let r1 = input_region(cat, 1, &tile).unwrap();
+        assert_eq!((r1.start(DIM_C), r1.end(DIM_C)), (2, 10));
+    }
+
+    #[test]
+    fn fc_needs_full_input_features() {
+        let g = nets::lenet5(8);
+        let fc = g.layers.iter().find(|l| l.name == "fc3").unwrap();
+        let tiles = output_tiles(&fc.out_shape, &PConfig::channel(4));
+        let r = input_region(fc, 0, &tiles[2]).unwrap();
+        // full 4-D input except sample range
+        assert_eq!(r.rank(), 4);
+        assert_eq!((r.start(DIM_N), r.end(DIM_N)), (0, 8));
+        assert_eq!(r.volume(), fc.in_shapes[0].iter().product::<usize>());
+    }
+
+    #[test]
+    fn param_sharding_rules() {
+        let l = conv_layer();
+        let s = param_sharding(&l, &PConfig::data(4));
+        assert_eq!((s.replicas, s.shards), (4, 1));
+        let s = param_sharding(&l, &PConfig::channel(4));
+        assert_eq!((s.replicas, s.shards), (1, 4));
+        assert!((s.shard_bytes - l.param_bytes() / 4.0).abs() < 1e-9);
+        let s = param_sharding(&l, &PConfig::new(2, 2, 1, 1));
+        assert_eq!((s.replicas, s.shards), (2, 2));
+    }
+
+    #[test]
+    fn labels_render_paper_style() {
+        assert_eq!(PConfig::new(4, 1, 1, 1).label(), "{n=4}");
+        assert_eq!(PConfig::new(1, 1, 2, 2).label(), "{h=2, w=2}");
+        assert_eq!(PConfig::serial().label(), "{n=1}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Tile -> device placement policies.
+//!
+//! The paper assigns a layer's tiles to devices contiguously (device 0
+//! first), which keeps equal-config producer/consumer pairs transfer-free
+//! and packs small-degree layers onto one node. This module makes that
+//! choice explicit and provides an alternative (round-robin across
+//! nodes) so its impact can be measured (`ablation_placement` bench).
+
+/// How a layer's tiles map onto device ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Tile `t` runs on device `t` (row-major tile order, node 0 first).
+    /// The paper's implicit policy.
+    #[default]
+    Contiguous,
+    /// Tile `t` runs on device `(t % nodes) * gpus_per_node + t / nodes`:
+    /// tiles spread across nodes first. Maximizes NIC pressure — a
+    /// deliberately adversarial baseline for the ablation.
+    RoundRobinNodes,
+}
+
+impl Placement {
+    /// Device id of tile `t` on a cluster of `nodes x gpus_per_node`.
+    pub fn device_of(&self, t: usize, nodes: usize, gpus_per_node: usize) -> usize {
+        match self {
+            Placement::Contiguous => t,
+            Placement::RoundRobinNodes => {
+                let node = t % nodes;
+                let slot = t / nodes;
+                debug_assert!(slot < gpus_per_node, "tile {t} exceeds device count");
+                node * gpus_per_node + slot
+            }
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Placement> {
+        match name {
+            "contiguous" => Some(Placement::Contiguous),
+            "roundrobin" | "round-robin" => Some(Placement::RoundRobinNodes),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_is_identity() {
+        let p = Placement::Contiguous;
+        for t in 0..16 {
+            assert_eq!(p.device_of(t, 4, 4), t);
+        }
+    }
+
+    #[test]
+    fn roundrobin_spreads_across_nodes() {
+        let p = Placement::RoundRobinNodes;
+        // 2 nodes x 2 gpus: tiles 0,1,2,3 -> devices 0,2,1,3
+        assert_eq!(p.device_of(0, 2, 2), 0);
+        assert_eq!(p.device_of(1, 2, 2), 2);
+        assert_eq!(p.device_of(2, 2, 2), 1);
+        assert_eq!(p.device_of(3, 2, 2), 3);
+    }
+
+    #[test]
+    fn roundrobin_is_a_permutation() {
+        let p = Placement::RoundRobinNodes;
+        let mut seen: Vec<usize> = (0..16).map(|t| p.device_of(t, 4, 4)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..16).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,118 @@
+//! Mini property-based testing framework.
+//!
+//! The offline registry carries no `proptest`; this module provides the
+//! subset the test-suite needs: seeded generators, a `forall` runner with
+//! iteration counts, and failure reporting that prints the seed so a
+//! failing case replays deterministically.
+//!
+//! ```
+//! use optcnn::prop::{forall, Gen};
+//! forall("addition commutes", 100, |g| {
+//!     let (a, b) = (g.usize_in(0, 1000), g.usize_in(0, 1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A generation context handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// A divisor of `n`, uniform over its divisors.
+    pub fn divisor_of(&mut self, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *self.rng.choose(&divs)
+    }
+
+    /// A vector of `len` values built by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Access the underlying RNG for anything else.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `body` for `cases` generated inputs. Panics (with the replay seed)
+/// on the first failing case. The base seed is fixed for reproducibility;
+/// set `OPTCNN_PROP_SEED` to explore a different stream, or to a failing
+/// case's printed seed to replay just that case.
+pub fn forall(name: &str, cases: usize, body: impl Fn(&mut Gen)) {
+    let base: u64 = std::env::var("OPTCNN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x0C0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (replay: OPTCNN_PROP_SEED={seed} \
+                 with cases=1)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("reverse twice is identity", 50, |g| {
+            let v = g.vec(g.case % 10, |g| g.usize_in(0, 100));
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_reports_failures() {
+        forall("all numbers are even (false)", 50, |g| {
+            let n = g.usize_in(0, 100);
+            assert_eq!(n % 2, 0);
+        });
+    }
+
+    #[test]
+    fn divisor_of_divides() {
+        forall("divisor_of returns divisors", 200, |g| {
+            let n = g.usize_in(1, 300);
+            let d = g.divisor_of(n);
+            assert_eq!(n % d, 0);
+        });
+    }
+}

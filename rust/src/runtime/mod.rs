@@ -1,0 +1,242 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). The interchange format
+//! is HLO **text** — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which sidesteps xla_extension 0.5.1's rejection of
+//! jax≥0.5's 64-bit-id protos (see /opt/xla-example/README.md).
+//!
+//! [`ArtifactStore`] is thread-safe metadata (the parsed manifest);
+//! [`Engine`] owns a PJRT client plus a lazily-populated executable cache
+//! and is deliberately `!Send` (the client is `Rc`-based) — the
+//! partitioned executor creates one `Engine` per worker thread.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`: artifact keys -> files and shapes.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub devices: usize,
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactStore {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest.json: missing artifacts object"))?;
+        let mut entries = BTreeMap::new();
+        for (key, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {key}: missing file"))?
+                .to_string();
+            let shapes = |field: &str| -> Vec<Vec<usize>> {
+                meta.get(field)
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|s| {
+                                s.as_arr()
+                                    .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            entries.insert(
+                key.clone(),
+                ArtifactMeta { file, inputs: shapes("inputs"), outputs: shapes("outputs") },
+            );
+        }
+        Ok(ArtifactStore {
+            dir,
+            batch: doc.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+            devices: doc.get("devices").and_then(|v| v.as_usize()).unwrap_or(0),
+            entries,
+        })
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn meta(&self, key: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn path_of(&self, key: &str) -> Result<PathBuf> {
+        let meta = self
+            .entries
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest (re-run `make artifacts`)"))?;
+        Ok(self.dir.join(&meta.file))
+    }
+}
+
+/// A PJRT execution engine: one CPU client + compiled-executable cache.
+/// One per worker thread (the client is reference-counted, not `Send`).
+pub struct Engine {
+    client: xla::PjRtClient,
+    store: ArtifactStore,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (for metrics/tests).
+    pub executions: u64,
+}
+
+impl Engine {
+    pub fn new(store: ArtifactStore) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, store, cache: HashMap::new(), executions: 0 })
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Compile (or fetch from cache) the artifact for `key`.
+    fn executable(&mut self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(key) {
+            let path = self.store.path_of(key)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{key}`"))?;
+            self.cache.insert(key.to_string(), exe);
+        }
+        Ok(&self.cache[key])
+    }
+
+    /// Execute artifact `key` on `inputs`, returning the output tensors
+    /// (the artifact's return tuple, flattened).
+    pub fn run(&mut self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .store
+            .meta(key)
+            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest"))?;
+        if meta.inputs.len() != inputs.len() {
+            bail!(
+                "artifact `{key}` expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, expect)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
+            if t.shape() != expect.as_slice() {
+                bail!(
+                    "artifact `{key}` input {i}: shape {:?} != manifest {:?}",
+                    t.shape(),
+                    expect
+                );
+            }
+        }
+        let out_shapes = meta.outputs.clone();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(t.data());
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(key)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{key}`"))?;
+        self.executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching `{key}` result"))?;
+        let parts = tuple.to_tuple().with_context(|| format!("untupling `{key}` result"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.into_iter().enumerate() {
+            let data = lit.to_vec::<f32>().context("reading output literal")?;
+            // prefer manifest shapes; fall back to the literal's own shape
+            let shape: Vec<usize> = match out_shapes.get(i) {
+                Some(s) => s.clone(),
+                None => lit
+                    .array_shape()
+                    .map(|s| s.dims().iter().map(|&d| d as usize).collect())
+                    .unwrap_or_else(|_| vec![data.len()]),
+            };
+            out.push(Tensor::from_vec(&shape, data));
+        }
+        Ok(out)
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("optcnn_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"batch":32,"devices":4,"artifacts":{
+                "fc_fwd_n8_ci64_co10_r0":{"file":"a.hlo.txt","inputs":[[8,64],[64,10],[10]],"outputs":[[8,10]]}
+            }}"#,
+        )
+        .unwrap();
+        let s = ArtifactStore::load(&dir).unwrap();
+        assert_eq!(s.batch, 32);
+        assert!(s.has("fc_fwd_n8_ci64_co10_r0"));
+        let m = s.meta("fc_fwd_n8_ci64_co10_r0").unwrap();
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.outputs[0], vec![8, 10]);
+        assert!(!s.has("nope"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = ArtifactStore::load("/nonexistent/path").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("make artifacts"), "{chain}");
+    }
+}

@@ -1,0 +1,516 @@
+//! Discrete-event cluster simulator — the "testbed" substitute.
+//!
+//! The cost model (Eq. 1) deliberately *sums* every cost term; the real
+//! cluster overlaps communication with computation and runs independent
+//! branches concurrently (the paper's Legion runtime does this
+//! automatically). This simulator provides that independent reference
+//! execution: it expands a (graph, strategy) pair into a task DAG —
+//! per-tile compute tasks, per-tile-pair transfer tasks, parameter-sync
+//! round-trips — and list-schedules it over contended resources
+//! (device FIFOs, NVLink pairs, per-node NICs, host links).
+//!
+//! Table 4's analogue compares Eq. 1 estimates against these simulated
+//! step times; Figure 7's throughput numbers come from here.
+
+pub mod trace;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::cost::CostModel;
+use crate::device::DeviceGraph;
+use crate::graph::{CompGraph, OpKind};
+use crate::parallel::{input_region, output_tiles, param_sharding, Strategy};
+
+/// Simulation outcome for one training step.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Makespan of the step (seconds).
+    pub step_time: f64,
+    /// Bytes moved across links for activation/tensor transfers.
+    pub xfer_bytes: f64,
+    /// Bytes moved for parameter synchronization.
+    pub sync_bytes: f64,
+    /// Per-device compute busy time (seconds).
+    pub busy: Vec<f64>,
+    pub num_tasks: usize,
+    pub num_transfers: usize,
+}
+
+impl SimReport {
+    /// Training throughput in images/second for a given global batch.
+    pub fn throughput(&self, global_batch: usize) -> f64 {
+        global_batch as f64 / self.step_time
+    }
+
+    /// Mean device utilization over the step.
+    pub fn utilization(&self) -> f64 {
+        if self.step_time == 0.0 {
+            return 0.0;
+        }
+        self.busy.iter().sum::<f64>() / (self.busy.len() as f64 * self.step_time)
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.xfer_bytes + self.sync_bytes
+    }
+}
+
+/// Resources a task occupies while running.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Resource {
+    Compute(usize),
+    /// Intra-node point-to-point link, ordered (src, dst).
+    Link(usize, usize),
+    /// A node's NIC egress / ingress.
+    NicOut(usize),
+    NicIn(usize),
+    /// A node's host (PCIe) link, used by parameter-server traffic.
+    Host(usize),
+}
+
+/// What a task represents (used only for trace export).
+#[derive(Debug, Clone, Copy)]
+enum Tag {
+    Compute { layer: usize, tile: usize },
+    Transfer { src: usize, dst: usize },
+    Sync { layer: usize },
+}
+
+struct Task {
+    duration: f64,
+    resources: [Option<Resource>; 2],
+    deps: usize,
+    dependents: Vec<usize>,
+    bytes: f64,
+    is_sync: bool,
+    tag: Tag,
+}
+
+/// Simulate one training step of `strategy` on the device graph.
+///
+/// `cm` supplies per-tile compute durations (so measured-profile mode
+/// flows through to the simulation as well).
+pub fn simulate(
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    strategy: &Strategy,
+    cm: &CostModel,
+) -> SimReport {
+    simulate_steps(graph, devices, strategy, cm, 1)
+}
+
+/// Steady-state per-step time: simulate one and three chained steps and
+/// report the marginal cost of the additional steps. Chaining puts
+/// parameter synchronization on the inter-step critical path (a layer's
+/// next forward pass cannot start before its parameters are updated),
+/// which single-step simulation would otherwise hide entirely.
+pub fn steady_state_step(
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    strategy: &Strategy,
+    cm: &CostModel,
+) -> SimReport {
+    let one = simulate_steps(graph, devices, strategy, cm, 1);
+    let three = simulate_steps(graph, devices, strategy, cm, 3);
+    let mut rep = one;
+    rep.step_time = (three.step_time - rep.step_time) / 2.0;
+    rep
+}
+
+/// Simulate `steps` chained training steps; `step_time` is the makespan
+/// of the whole chain.
+pub fn simulate_steps(
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    strategy: &Strategy,
+    cm: &CostModel,
+    steps: usize,
+) -> SimReport {
+    simulate_steps_inner(graph, devices, strategy, cm, steps, None)
+}
+
+/// Trace-producing variant of [`simulate`]: one step, with every scheduled
+/// interval recorded.
+pub(crate) fn simulate_traced(
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    strategy: &Strategy,
+    cm: &CostModel,
+) -> Vec<trace::TraceEvent> {
+    let mut events = Vec::new();
+    simulate_steps_inner(graph, devices, strategy, cm, 1, Some(&mut events));
+    events
+}
+
+fn simulate_steps_inner(
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    strategy: &Strategy,
+    cm: &CostModel,
+    steps: usize,
+    trace_out: Option<&mut Vec<trace::TraceEvent>>,
+) -> SimReport {
+    assert!(steps >= 1);
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut num_transfers = 0usize;
+    // sync task ids of the previous step, per layer
+    let mut prev_sync: Vec<Vec<usize>> = vec![Vec::new(); graph.num_layers()];
+    // all compute task ids of the previous step (synchronous-SGD barrier)
+    let mut prev_compute: Vec<usize> = Vec::new();
+
+    fn add_dep(tasks: &mut [Task], from: usize, to: usize) {
+        tasks[from].dependents.push(to);
+        tasks[to].deps += 1;
+    }
+
+    for _step in 0..steps {
+        // --- compute tasks ---
+        let mut compute_id: Vec<Vec<usize>> = Vec::with_capacity(graph.num_layers());
+        let mut this_compute: Vec<usize> = Vec::new();
+        for l in &graph.layers {
+            let cfg = strategy.config(l.id);
+            let per_tile = cm.t_c(l, cfg);
+            let ntiles = cfg.total();
+            let mut ids = Vec::with_capacity(ntiles);
+            for t in 0..ntiles {
+                ids.push(tasks.len());
+                tasks.push(Task {
+                    duration: if matches!(l.op, OpKind::Input) { 0.0 } else { per_tile },
+                    resources: [Some(Resource::Compute(cm.dev_of(t))), None],
+                    deps: 0,
+                    dependents: Vec::new(),
+                    bytes: 0.0,
+                    is_sync: false,
+                    tag: Tag::Compute { layer: l.id, tile: t },
+                });
+            }
+            // weight dependency: this step's compute waits for the
+            // previous step's parameter sync of the same layer
+            for &sync_task in &prev_sync[l.id] {
+                for &c in &ids {
+                    add_dep(&mut tasks, sync_task, c);
+                }
+            }
+            // synchronous-SGD semantics: the new batch is dispatched only
+            // after the previous iteration's compute has drained (gradient
+            // sync may still straggle into this step, handled above)
+            if matches!(l.op, OpKind::Input) {
+                for &p in &prev_compute {
+                    for &c in &ids {
+                        add_dep(&mut tasks, p, c);
+                    }
+                }
+            }
+            this_compute.extend(ids.iter().copied());
+            compute_id.push(ids);
+        }
+        prev_compute = this_compute;
+
+        // --- transfer tasks per edge ---
+        for &(s, d) in &graph.edges {
+            let (ls, ld) = (graph.layer(s), graph.layer(d));
+            let in_idx = cm.edge_in_idx(s, d);
+            let (cs, cd) = (strategy.config(s), strategy.config(d));
+            let src_tiles = output_tiles(&ls.out_shape, cs);
+            let dst_tiles = output_tiles(&ld.out_shape, cd);
+            for (m, dtile) in dst_tiles.iter().enumerate() {
+                let Some(need) = input_region(ld, in_idx, dtile) else { continue };
+                for (k, stile) in src_tiles.iter().enumerate() {
+                    let overlap = need.overlap_volume(stile);
+                    if overlap == 0 {
+                        continue;
+                    }
+                    let (src_dev, dst_dev) = (cm.dev_of(k), cm.dev_of(m));
+                    if src_dev == dst_dev {
+                        // local: direct dependency, no transfer
+                        add_dep(&mut tasks, compute_id[s][k], compute_id[d][m]);
+                        continue;
+                    }
+                    let bytes = overlap as f64 * 4.0;
+                    let (dur, res) = transfer_resources(devices, src_dev, dst_dev, bytes);
+                    let id = tasks.len();
+                    tasks.push(Task {
+                        duration: dur,
+                        resources: res,
+                        deps: 0,
+                        dependents: Vec::new(),
+                        bytes,
+                        is_sync: false,
+                        tag: Tag::Transfer { src: src_dev, dst: dst_dev },
+                    });
+                    add_dep(&mut tasks, compute_id[s][k], id);
+                    add_dep(&mut tasks, id, compute_id[d][m]);
+                    num_transfers += 1;
+                }
+            }
+        }
+
+        // --- parameter-sync tasks ---
+        for l in &graph.layers {
+            prev_sync[l.id].clear();
+            if !l.has_params() {
+                continue;
+            }
+            let cfg = strategy.config(l.id);
+            let sh = param_sharding(l, cfg);
+            if sh.replicas <= 1 {
+                continue;
+            }
+            for shard in 0..sh.shards {
+                let tiles_of_shard: Vec<usize> = (0..cfg.total())
+                    .filter(|&t| crate::cost::shard_of_tile(cfg, t) == shard)
+                    .collect();
+                let replicas: Vec<usize> =
+                    tiles_of_shard.iter().map(|&t| cm.dev_of(t)).collect();
+                // Sharded-PS / allreduce-style exchange (matches
+                // CostModel::t_s): each replica moves
+                // 2 * shard_bytes * (R-1)/R over its own uplink;
+                // same-node groups ride the host link, cross-node groups
+                // contend on their node's NIC.
+                let r = replicas.len() as f64;
+                let group_node = devices.devices[replicas[0]].node;
+                let spans_nodes =
+                    replicas.iter().any(|&dd| devices.devices[dd].node != group_node);
+                for (ri, &dev) in replicas.iter().enumerate() {
+                    let tile = tiles_of_shard[ri];
+                    let bytes = 2.0 * sh.shard_bytes * (r - 1.0) / r;
+                    let node = devices.devices[dev].node;
+                    let (dur, res) = if !spans_nodes {
+                        (bytes / devices.host_bw, [Some(Resource::Host(node)), None])
+                    } else {
+                        (
+                            bytes / devices.node_bw.min(devices.host_bw),
+                            [Some(Resource::NicOut(node)), None],
+                        )
+                    };
+                    let id = tasks.len();
+                    tasks.push(Task {
+                        duration: dur,
+                        resources: res,
+                        deps: 0,
+                        dependents: Vec::new(),
+                        bytes,
+                        is_sync: true,
+                        tag: Tag::Sync { layer: l.id },
+                    });
+                    add_dep(&mut tasks, compute_id[l.id][tile], id);
+                    prev_sync[l.id].push(id);
+                }
+            }
+        }
+    }
+
+    schedule(tasks, devices, num_transfers, trace_out.map(|e| (graph, e)))
+}
+
+/// Greedy list scheduling over contended resources.
+fn schedule(
+    tasks: Vec<Task>,
+    devices: &DeviceGraph,
+    num_transfers: usize,
+    mut trace_out: Option<(&CompGraph, &mut Vec<trace::TraceEvent>)>,
+) -> SimReport {
+    let n = tasks.len();
+    let mut free: HashMap<Resource, f64> = HashMap::new();
+    let mut ready_time = vec![0.0f64; n];
+    let mut heap: BinaryHeap<Reverse<(OrdF64, usize)>> = BinaryHeap::new();
+    let mut deps_left: Vec<usize> = tasks.iter().map(|t| t.deps).collect();
+    for (i, t) in tasks.iter().enumerate() {
+        if t.deps == 0 {
+            heap.push(Reverse((OrdF64(0.0), i)));
+        }
+    }
+    let mut makespan = 0.0f64;
+    let mut busy = vec![0.0f64; devices.num_devices()];
+    let (mut xfer_bytes, mut sync_bytes) = (0.0f64, 0.0f64);
+    let mut scheduled = 0usize;
+    while let Some(Reverse((OrdF64(rt), i))) = heap.pop() {
+        let start = tasks[i]
+            .resources
+            .iter()
+            .flatten()
+            .map(|r| *free.get(r).unwrap_or(&0.0))
+            .fold(rt, f64::max);
+        let end = start + tasks[i].duration;
+        for r in tasks[i].resources.iter().flatten() {
+            free.insert(*r, end);
+            if let Resource::Compute(d) = r {
+                busy[*d] += tasks[i].duration;
+            }
+        }
+        if let Some((graph, events)) = trace_out.as_mut() {
+            if tasks[i].duration > 0.0 {
+                let primary = tasks[i].resources[0].expect("task without resources");
+                events.push(trace::TraceEvent {
+                    track: track_name(&primary),
+                    name: tag_name(graph, &tasks[i].tag),
+                    start,
+                    end,
+                });
+            }
+        }
+        if tasks[i].bytes > 0.0 {
+            if tasks[i].is_sync {
+                sync_bytes += tasks[i].bytes;
+            } else {
+                xfer_bytes += tasks[i].bytes;
+            }
+        }
+        makespan = makespan.max(end);
+        scheduled += 1;
+        let deps: Vec<usize> = tasks[i].dependents.clone();
+        for dep in deps {
+            ready_time[dep] = ready_time[dep].max(end);
+            deps_left[dep] -= 1;
+            if deps_left[dep] == 0 {
+                heap.push(Reverse((OrdF64(ready_time[dep]), dep)));
+            }
+        }
+    }
+    assert_eq!(scheduled, n, "task DAG has a cycle or unreachable task");
+
+    SimReport { step_time: makespan, xfer_bytes, sync_bytes, busy, num_tasks: n, num_transfers }
+}
+
+/// Duration and contended resources of a device-to-device transfer.
+fn transfer_resources(
+    devices: &DeviceGraph,
+    src: usize,
+    dst: usize,
+    bytes: f64,
+) -> (f64, [Option<Resource>; 2]) {
+    if devices.same_node(src, dst) {
+        (bytes / devices.bandwidth(src, dst), [Some(Resource::Link(src, dst)), None])
+    } else {
+        // Inter-node traffic runs at the NIC rate but serializes on the
+        // endpoints' NICs — contention emerges when many GPUs of one node
+        // send at once.
+        let (sn, dn) = (devices.devices[src].node, devices.devices[dst].node);
+        (bytes / devices.node_bw, [Some(Resource::NicOut(sn)), Some(Resource::NicIn(dn))])
+    }
+}
+
+/// Trace track name for a resource.
+fn track_name(r: &Resource) -> String {
+    match r {
+        Resource::Compute(d) => format!("gpu{d}"),
+        Resource::Link(i, j) => format!("link{i}-{j}"),
+        Resource::NicOut(n) => format!("nic_out{n}"),
+        Resource::NicIn(n) => format!("nic_in{n}"),
+        Resource::Host(n) => format!("host{n}"),
+    }
+}
+
+/// Trace event name for a task tag.
+fn tag_name(graph: &CompGraph, tag: &Tag) -> String {
+    match tag {
+        Tag::Compute { layer, tile } => format!("{}[{tile}]", graph.layer(*layer).name),
+        Tag::Transfer { src, dst } => format!("xfer {src}->{dst}"),
+        Tag::Sync { layer } => format!("sync {}", graph.layer(*layer).name),
+    }
+}
+
+/// Total-order f64 wrapper for the ready queue.
+#[derive(PartialEq, PartialOrd)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::nets;
+    use crate::optimizer::strategies;
+
+    fn run(net: &str, ndev: usize, strat: &str) -> (SimReport, f64) {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::by_name(strat, &g, ndev).unwrap();
+        let rep = simulate(&g, &d, &s, &cm);
+        let est = cm.t_o(&s);
+        (rep, est)
+    }
+
+    #[test]
+    fn simulated_time_close_to_estimate_for_chains() {
+        // A chain network on data parallelism has limited overlap
+        // opportunity: sim and Eq.1 should agree within tens of percent
+        // (paper Table 4: within 10% on real hardware).
+        let (rep, est) = run("alexnet", 4, "data");
+        let rel = (est - rep.step_time) / rep.step_time;
+        assert!(rel.abs() < 0.6, "rel diff {rel}: est {est} sim {}", rep.step_time);
+    }
+
+    #[test]
+    fn sim_never_beats_critical_path() {
+        let (rep, _) = run("vgg16", 4, "data");
+        // lower bound: the busiest device's compute alone
+        let max_busy = rep.busy.iter().cloned().fold(0.0, f64::max);
+        assert!(rep.step_time >= max_busy);
+    }
+
+    #[test]
+    fn overlap_makes_sim_at_most_estimate() {
+        // Eq. 1 serializes everything, the scheduler overlaps: the sim
+        // should not exceed the estimate by more than scheduling noise.
+        for strat in ["data", "model", "owt"] {
+            let (rep, est) = run("inception_v3", 4, strat);
+            assert!(rep.step_time <= est * 1.05, "{strat}: sim {} > est {est}", rep.step_time);
+        }
+    }
+
+    #[test]
+    fn single_device_has_no_traffic() {
+        let (rep, _) = run("lenet5", 1, "data");
+        assert_eq!(rep.total_bytes(), 0.0);
+        assert_eq!(rep.num_transfers, 0);
+        assert!(rep.step_time > 0.0);
+    }
+
+    #[test]
+    fn data_parallel_syncs_whole_model() {
+        let g = nets::alexnet(32 * 4);
+        let d = DeviceGraph::p100_cluster(4);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::data_parallel(&g, 4);
+        let rep = simulate(&g, &d, &s, &cm);
+        // sharded PS: 2 x (R-1) x param bytes for R=4 replicas
+        let expect = 6.0 * g.total_params() as f64 * 4.0;
+        assert!((rep.sync_bytes - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn scaling_devices_improves_throughput() {
+        let (r4, _) = run("vgg16", 4, "data");
+        let (r16, _) = run("vgg16", 16, "data");
+        assert!(r16.throughput(32 * 16) > r4.throughput(32 * 4));
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (rep, _) = run("inception_v3", 4, "data");
+        let u = rep.utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn sync_bytes_match_cost_model_accounting() {
+        let g = nets::vgg16(32 * 2);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::data_parallel(&g, 2);
+        let rep = simulate(&g, &d, &s, &cm);
+        let expect: f64 =
+            g.layers.iter().map(|l| cm.s_bytes(l, s.config(l.id))).sum();
+        assert!((rep.sync_bytes - expect).abs() < 1.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Chrome-trace export of simulated schedules.
+//!
+//! `trace_events` re-runs the list scheduler while recording every task's
+//! (resource, start, end) and emits Chrome `chrome://tracing` /
+//! Perfetto-compatible JSON — the visual answer to "where does the step
+//! time go under this strategy?". Wired to `optcnn simulate --trace out.json`.
+
+use crate::cost::CostModel;
+use crate::device::DeviceGraph;
+use crate::graph::CompGraph;
+use crate::parallel::Strategy;
+use crate::util::json::Json;
+
+/// One scheduled interval.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Track name, e.g. `gpu3`, `nic_out0`, `host1`.
+    pub track: String,
+    pub name: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Simulate one step and return the schedule as trace events.
+///
+/// Implementation note: rather than duplicating the scheduler, this
+/// re-derives intervals from a high-resolution re-simulation — each
+/// compute/transfer/sync task contributes one event on its primary
+/// resource track.
+pub fn trace_events(
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    strategy: &Strategy,
+    cm: &CostModel,
+) -> Vec<TraceEvent> {
+    super::simulate_traced(graph, devices, strategy, cm)
+}
+
+/// Serialize events as a Chrome trace (`[{ph:"X", ...}]` complete events,
+/// microsecond timestamps).
+pub fn to_chrome_trace(events: &[TraceEvent]) -> String {
+    let arr: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num(e.start * 1e6)),
+                ("dur", Json::Num((e.end - e.start) * 1e6)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Str(e.track.clone())),
+                ("cat", Json::Str("sim".into())),
+            ])
+        })
+        .collect();
+    Json::Arr(arr).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::nets;
+    use crate::optimizer::strategies;
+
+    #[test]
+    fn trace_covers_all_compute() {
+        let g = nets::alexnet(64);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::data_parallel(&g, 2);
+        let ev = trace_events(&g, &d, &s, &cm);
+        // every non-input layer x 2 tiles appears as a compute event
+        let compute_events = ev.iter().filter(|e| e.track.starts_with("gpu")).count();
+        assert_eq!(compute_events, (g.num_layers() - 1) * 2);
+        // intervals are well-formed
+        assert!(ev.iter().all(|e| e.end >= e.start && e.start >= 0.0));
+        // sync traffic appears on host/nic tracks
+        assert!(ev.iter().any(|e| e.track.starts_with("host") || e.track.starts_with("nic")));
+    }
+
+    #[test]
+    fn chrome_json_parses_back() {
+        let g = nets::lenet5(32);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::owt(&g, 2);
+        let ev = trace_events(&g, &d, &s, &cm);
+        let json = to_chrome_trace(&ev);
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), ev.len());
+    }
+
+    #[test]
+    fn events_on_same_track_do_not_overlap() {
+        let g = nets::alexnet(64);
+        let d = DeviceGraph::p100_cluster(4);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::owt(&g, 4);
+        let mut ev = trace_events(&g, &d, &s, &cm);
+        ev.sort_by(|a, b| {
+            (a.track.clone(), a.start).partial_cmp(&(b.track.clone(), b.start)).unwrap()
+        });
+        for w in ev.windows(2) {
+            if w[0].track == w[1].track {
+                assert!(
+                    w[1].start >= w[0].end - 1e-12,
+                    "overlap on {}: {}..{} then {}..{}",
+                    w[0].track,
+                    w[0].start,
+                    w[0].end,
+                    w[1].start,
+                    w[1].end
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,404 @@
+//! Dense f32 tensor substrate.
+//!
+//! The partitioned-training executor (`exec/`) moves shards of activations,
+//! gradients, and parameters between simulated devices; this module gives it
+//! slicing (region extract/insert), concatenation, padding, and reduction
+//! over row-major dense tensors. Deliberately minimal — the heavy numerics
+//! run inside AOT-compiled HLO; Rust only repartitions.
+
+mod region;
+
+pub use region::Region;
+
+/// A dense row-major f32 tensor of arbitrary rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Tensor from an explicit buffer. Panics if sizes disagree.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match buffer of {} elements",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Build element-wise from the multi-index.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        let mut idx = vec![0usize; shape.len()];
+        for flat in 0..t.data.len() {
+            t.data[flat] = f(&idx);
+            // advance multi-index (row-major, last dim fastest)
+            for d in (0..shape.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying. Panics if element counts disagree.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            self.data.len(),
+            shape.iter().product::<usize>(),
+            "reshape {:?} -> {:?} changes element count",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for d in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[d] = s[d + 1] * self.shape[d + 1];
+        }
+        s
+    }
+
+    /// Extract the sub-tensor covered by `region` (must lie inside shape).
+    pub fn slice(&self, region: &Region) -> Tensor {
+        assert_eq!(region.rank(), self.rank(), "region rank mismatch");
+        for d in 0..self.rank() {
+            assert!(
+                region.end(d) <= self.shape[d] && region.start(d) <= region.end(d),
+                "region {:?} out of bounds for shape {:?}",
+                region,
+                self.shape
+            );
+        }
+        let out_shape = region.extents();
+        let mut out = Tensor::zeros(&out_shape);
+        copy_region(
+            &self.data,
+            &self.shape,
+            region,
+            &mut out.data,
+            &out_shape,
+            &Region::full(&out_shape),
+        );
+        out
+    }
+
+    /// Write `src` into the positions covered by `region`. `src`'s shape
+    /// must equal the region extents.
+    pub fn insert(&mut self, region: &Region, src: &Tensor) {
+        assert_eq!(region.extents(), src.shape, "insert extents mismatch");
+        let shape = self.shape.clone();
+        copy_region(
+            &src.data,
+            &src.shape,
+            &Region::full(&src.shape),
+            &mut self.data,
+            &shape,
+            region,
+        );
+    }
+
+    /// Accumulate `src` into the positions covered by `region`
+    /// (element-wise add). Used for halo-gradient scatter where adjacent
+    /// tiles' input regions overlap.
+    pub fn insert_add(&mut self, region: &Region, src: &Tensor) {
+        assert_eq!(region.extents(), src.shape, "insert_add extents mismatch");
+        // walk the region rows like copy_region but accumulate
+        let rank = self.rank();
+        if rank == 0 {
+            self.data[0] += src.data[0];
+            return;
+        }
+        let extents = region.extents();
+        let dst_strides = self.strides();
+        let row = extents[rank - 1];
+        let outer: usize = extents[..rank - 1].iter().product();
+        let mut idx = vec![0usize; rank - 1];
+        let mut s_off = 0usize;
+        for _ in 0..outer.max(1) {
+            let mut d_off = region.start(rank - 1);
+            for d in 0..rank - 1 {
+                d_off += (region.start(d) + idx[d]) * dst_strides[d];
+            }
+            // slice-window add: bounds-checked once, vectorizes
+            let dst_row = &mut self.data[d_off..d_off + row];
+            let src_row = &src.data[s_off..s_off + row];
+            for (a, b) in dst_row.iter_mut().zip(src_row) {
+                *a += b;
+            }
+            s_off += row;
+            for d in (0..rank - 1).rev() {
+                idx[d] += 1;
+                if idx[d] < extents[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
+    /// Concatenate tensors along `axis`. All shapes must agree on the other
+    /// dimensions.
+    pub fn concat(parts: &[&Tensor], axis: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let rank = parts[0].rank();
+        let mut out_shape = parts[0].shape.clone();
+        out_shape[axis] = parts.iter().map(|p| p.shape[axis]).sum();
+        for p in parts {
+            assert_eq!(p.rank(), rank);
+            for d in 0..rank {
+                if d != axis {
+                    assert_eq!(p.shape[d], parts[0].shape[d], "concat dim {d} mismatch");
+                }
+            }
+        }
+        let mut out = Tensor::zeros(&out_shape);
+        let mut offset = 0usize;
+        for p in parts {
+            let mut region = Region::full(&out_shape);
+            region.set(axis, offset, offset + p.shape[axis]);
+            out.insert(&region, p);
+            offset += p.shape[axis];
+        }
+        out
+    }
+
+    /// Element-wise in-place add. Shapes must match.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Scale every element in place.
+    pub fn scale(&mut self, k: f32) {
+        for a in self.data.iter_mut() {
+            *a *= k;
+        }
+    }
+
+    /// Sum of all elements (f64 accumulator).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// True when all elements are within `tol` of `other`.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= tol
+    }
+}
+
+/// Copy `src_region` of `src` into `dst_region` of `dst`. The two regions
+/// must have identical extents. Inner-most contiguous runs are copied with
+/// `copy_from_slice`.
+fn copy_region(
+    src: &[f32],
+    src_shape: &[usize],
+    src_region: &Region,
+    dst: &mut [f32],
+    dst_shape: &[usize],
+    dst_region: &Region,
+) {
+    assert_eq!(src_region.extents(), dst_region.extents());
+    let rank = src_shape.len();
+    if rank == 0 {
+        dst[0] = src[0];
+        return;
+    }
+    let extents = src_region.extents();
+    let src_strides = strides_of(src_shape);
+    let dst_strides = strides_of(dst_shape);
+    // Iterate over all but the last dimension; copy rows of the last dim.
+    let row = extents[rank - 1];
+    let outer: usize = extents[..rank - 1].iter().product();
+    let mut idx = vec![0usize; rank - 1];
+    for _ in 0..outer.max(1) {
+        let mut s_off = src_region.start(rank - 1);
+        let mut d_off = dst_region.start(rank - 1);
+        for d in 0..rank - 1 {
+            s_off += (src_region.start(d) + idx[d]) * src_strides[d];
+            d_off += (dst_region.start(d) + idx[d]) * dst_strides[d];
+        }
+        dst[d_off..d_off + row].copy_from_slice(&src[s_off..s_off + row]);
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < extents[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iota(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|i| i as f32).collect())
+    }
+
+    #[test]
+    fn slice_extracts_expected_block() {
+        // 2x4 matrix, take columns 1..3
+        let t = iota(&[2, 4]);
+        let r = Region::new(&[(0, 2), (1, 3)]);
+        let s = t.slice(&r);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn insert_then_slice_roundtrips() {
+        let mut t = Tensor::zeros(&[3, 3, 3]);
+        let r = Region::new(&[(1, 3), (0, 2), (2, 3)]);
+        let block = iota(&[2, 2, 1]);
+        t.insert(&r, &block);
+        assert_eq!(t.slice(&r), block);
+        // untouched corner stays zero
+        assert_eq!(t.data()[0], 0.0);
+    }
+
+    #[test]
+    fn insert_add_accumulates_overlaps() {
+        let mut t = Tensor::zeros(&[4]);
+        let block = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        t.insert_add(&Region::new(&[(0, 2)]), &block);
+        t.insert_add(&Region::new(&[(1, 3)]), &block);
+        assert_eq!(t.data(), &[1.0, 3.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn insert_add_rank2() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        let block = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        t.insert_add(&Region::new(&[(0, 2), (1, 3)]), &block);
+        t.insert_add(&Region::new(&[(0, 2), (0, 2)]), &block);
+        assert_eq!(t.data(), &[1.0, 2.0, 1.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn concat_axis0_and_axis1() {
+        let a = iota(&[1, 2]);
+        let b = Tensor::from_vec(&[1, 2], vec![10.0, 11.0]);
+        let c0 = Tensor::concat(&[&a, &b], 0);
+        assert_eq!(c0.shape(), &[2, 2]);
+        assert_eq!(c0.data(), &[0.0, 1.0, 10.0, 11.0]);
+        let c1 = Tensor::concat(&[&a, &b], 1);
+        assert_eq!(c1.shape(), &[1, 4]);
+        assert_eq!(c1.data(), &[0.0, 1.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn split_into_equal_tiles_reassembles() {
+        // emulate a 2-way sample split + reassemble
+        let t = iota(&[4, 3]);
+        let top = t.slice(&Region::new(&[(0, 2), (0, 3)]));
+        let bot = t.slice(&Region::new(&[(2, 4), (0, 3)]));
+        assert_eq!(Tensor::concat(&[&top, &bot], 0), t);
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = iota(&[2, 2]);
+        let b = iota(&[2, 2]);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn from_fn_multi_index() {
+        let t = Tensor::from_fn(&[2, 3], |ix| (ix[0] * 10 + ix[1]) as f32);
+        assert_eq!(t.data(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        let a = iota(&[2, 2]);
+        let mut b = iota(&[2, 2]);
+        b.data_mut()[3] += 1e-4;
+        assert!(a.allclose(&b, 1e-3));
+        assert!(!a.allclose(&b, 1e-5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_out_of_bounds_panics() {
+        let t = iota(&[2, 2]);
+        t.slice(&Region::new(&[(0, 3), (0, 2)]));
+    }
+
+    #[test]
+    fn rank4_nchw_slice() {
+        // NCHW tensor: slice channel 1 of sample 0
+        let t = iota(&[2, 2, 2, 2]);
+        let s = t.slice(&Region::new(&[(0, 1), (1, 2), (0, 2), (0, 2)]));
+        assert_eq!(s.shape(), &[1, 1, 2, 2]);
+        assert_eq!(s.data(), &[4.0, 5.0, 6.0, 7.0]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Hyper-rectangular regions over tensor index space.
+//!
+//! Regions are the common currency between the partitioner (`parallel/`),
+//! the cost model (bytes moved = overlap volume), and the executor
+//! (slice/insert). Half-open ranges `[start, end)` per dimension.
+
+/// A half-open hyper-rectangle `[start_d, end_d)` for each dimension `d`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Region {
+    ranges: Vec<(usize, usize)>,
+}
+
+impl Region {
+    pub fn new(ranges: &[(usize, usize)]) -> Region {
+        for &(s, e) in ranges {
+            assert!(s <= e, "range start {s} > end {e}");
+        }
+        Region { ranges: ranges.to_vec() }
+    }
+
+    /// The full region of a tensor shape.
+    pub fn full(shape: &[usize]) -> Region {
+        Region { ranges: shape.iter().map(|&n| (0, n)).collect() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn start(&self, d: usize) -> usize {
+        self.ranges[d].0
+    }
+
+    pub fn end(&self, d: usize) -> usize {
+        self.ranges[d].1
+    }
+
+    pub fn set(&mut self, d: usize, start: usize, end: usize) {
+        assert!(start <= end);
+        self.ranges[d] = (start, end);
+    }
+
+    /// Per-dimension sizes.
+    pub fn extents(&self) -> Vec<usize> {
+        self.ranges.iter().map(|&(s, e)| e - s).collect()
+    }
+
+    /// Number of index points covered.
+    pub fn volume(&self) -> usize {
+        self.ranges.iter().map(|&(s, e)| e - s).product()
+    }
+
+    pub fn is_degenerate(&self) -> bool {
+        self.ranges.iter().any(|&(s, e)| s == e)
+    }
+
+    /// Intersection with another region of the same rank; `None` when empty.
+    pub fn intersect(&self, other: &Region) -> Option<Region> {
+        assert_eq!(self.rank(), other.rank());
+        let mut ranges = Vec::with_capacity(self.rank());
+        for d in 0..self.rank() {
+            let s = self.start(d).max(other.start(d));
+            let e = self.end(d).min(other.end(d));
+            if s >= e {
+                return None;
+            }
+            ranges.push((s, e));
+        }
+        Some(Region { ranges })
+    }
+
+    /// Volume of the intersection (0 when disjoint). Cheaper than
+    /// `intersect().map(volume)` on the cost-model hot path: no allocation.
+    pub fn overlap_volume(&self, other: &Region) -> usize {
+        debug_assert_eq!(self.rank(), other.rank());
+        let mut v: usize = 1;
+        for d in 0..self.rank() {
+            let s = self.start(d).max(other.start(d));
+            let e = self.end(d).min(other.end(d));
+            if s >= e {
+                return 0;
+            }
+            v *= e - s;
+        }
+        v
+    }
+
+    /// True when `other` is fully inside `self`.
+    pub fn contains(&self, other: &Region) -> bool {
+        assert_eq!(self.rank(), other.rank());
+        (0..self.rank()).all(|d| self.start(d) <= other.start(d) && other.end(d) <= self.end(d))
+    }
+
+    /// Translate `other`'s coordinates into this region's local frame
+    /// (subtract `self.start`). Panics unless contained.
+    pub fn localize(&self, other: &Region) -> Region {
+        assert!(self.contains(other), "{other:?} not contained in {self:?}");
+        Region {
+            ranges: (0..self.rank())
+                .map(|d| (other.start(d) - self.start(d), other.end(d) - self.start(d)))
+                .collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for Region {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, (s, e)) in self.ranges.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{s}:{e}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_and_extents() {
+        let r = Region::new(&[(0, 2), (1, 4)]);
+        assert_eq!(r.volume(), 6);
+        assert_eq!(r.extents(), vec![2, 3]);
+    }
+
+    #[test]
+    fn intersect_overlapping() {
+        let a = Region::new(&[(0, 4), (0, 4)]);
+        let b = Region::new(&[(2, 6), (1, 3)]);
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(i, Region::new(&[(2, 4), (1, 3)]));
+        assert_eq!(a.overlap_volume(&b), 4);
+    }
+
+    #[test]
+    fn intersect_disjoint_is_none() {
+        let a = Region::new(&[(0, 2), (0, 2)]);
+        let b = Region::new(&[(2, 4), (0, 2)]);
+        assert!(a.intersect(&b).is_none());
+        assert_eq!(a.overlap_volume(&b), 0);
+    }
+
+    #[test]
+    fn contains_and_localize() {
+        let outer = Region::new(&[(2, 8), (4, 10)]);
+        let inner = Region::new(&[(3, 5), (4, 6)]);
+        assert!(outer.contains(&inner));
+        assert_eq!(outer.localize(&inner), Region::new(&[(1, 3), (0, 2)]));
+    }
+
+    #[test]
+    fn full_covers_shape() {
+        let r = Region::full(&[3, 5, 7]);
+        assert_eq!(r.volume(), 105);
+        assert!(!r.is_degenerate());
+    }
+
+    #[test]
+    fn display_is_compact() {
+        assert_eq!(Region::new(&[(0, 2), (3, 9)]).to_string(), "[0:2, 3:9]");
+    }
+}

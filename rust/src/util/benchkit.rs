@@ -1,0 +1,111 @@
+//! Micro-benchmark harness (no `criterion` in the offline registry).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that uses
+//! `bench()` for wall-clock measurements and the `Table` renderer for
+//! paper-style output. Measurements do warmup, then adaptively pick an
+//! iteration count targeting ~200ms of sampling, and report median and
+//! median-absolute-deviation over samples.
+
+use std::time::Instant;
+
+/// Result of one benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Median absolute deviation (robust spread), seconds.
+    pub mad: f64,
+    /// Iterations per sample.
+    pub iters: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{:>10}, {} samples x {} iters)",
+            self.name,
+            crate::util::fmt_secs(self.median),
+            crate::util::fmt_secs(self.mad),
+            self.samples,
+            self.iters
+        )
+    }
+}
+
+/// Measure `f`, returning robust per-iteration timing. `f` should perform
+/// one logical iteration per call and return a value that is consumed via
+/// `std::hint::black_box` to defeat dead-code elimination.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + calibration: find how many iters fit ~20ms.
+    let mut iters: u64 = 1;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.02 || iters >= 1 << 24 {
+            break;
+        }
+        iters = if dt <= 0.0 { iters * 16 } else { ((0.025 / dt) as u64).max(2) * iters };
+    }
+    // Sampling: up to 10 samples or ~300ms, whichever first.
+    let mut per_iter: Vec<f64> = Vec::new();
+    let budget = Instant::now();
+    while per_iter.len() < 10 && (budget.elapsed().as_secs_f64() < 0.3 || per_iter.len() < 3) {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = per_iter[per_iter.len() / 2];
+    let mut devs: Vec<f64> = per_iter.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let r = BenchResult {
+        name: name.to_string(),
+        median,
+        mad,
+        iters,
+        samples: per_iter.len(),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Time a single execution of `f` (for long-running, once-off measurements
+/// such as whole-optimizer runs in the Table 3 bench).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median > 0.0);
+        assert!(r.median < 1e-3);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Tiny CLI argument parser (no `clap` in the offline registry).
+//!
+//! Grammar: `optcnn <subcommand> [--flag] [--key value]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare `--flag`
+/// switches, and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `flag_names` lists switches that take no value; everything else
+    /// starting with `--` consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    let v = v.clone();
+                    it.next();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, flags: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string), flags)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("optimize --network vgg16 --devices 4 extra", &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("optimize"));
+        assert_eq!(a.get("network"), Some("vgg16"));
+        assert_eq!(a.get_usize("devices", 1), 4);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn flags_and_equals_form() {
+        let a = parse("train --verbose --steps=100", &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+    }
+
+    #[test]
+    fn trailing_option_without_value_becomes_flag() {
+        let a = parse("sim --dry-run", &[]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x", &[]);
+        assert_eq!(a.get_or("net", "alexnet"), "alexnet");
+        assert_eq!(a.get_f64("bw", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,53 @@
+//! Small self-contained utilities (the offline registry forbids most
+//! third-party crates, so PRNG / JSON / CLI / bench plumbing live here).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Human-readable formatting for byte counts.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{:.2} {}", v, UNITS[u])
+}
+
+/// Human-readable formatting for a duration in seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512.00 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0), "3.50 MB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(2.5e-9), "2.5 ns");
+        assert_eq!(fmt_secs(1.5e-4), "150.0 us");
+        assert_eq!(fmt_secs(0.25), "250.00 ms");
+        assert_eq!(fmt_secs(3.0), "3.000 s");
+    }
+}

@@ -1,0 +1,177 @@
+//! End-to-end partitioned-training integration tests.
+//!
+//! These exercise the whole stack: AOT artifacts (L1 Pallas kernels inside
+//! L2 JAX layer functions, lowered to HLO text) executed through PJRT by
+//! per-device worker threads under the L3 coordinator, for several
+//! parallelization strategies — and pin the paper's central claim: every
+//! strategy computes the same network (identical losses / parameters).
+//!
+//! Requires `make artifacts`. Tests self-skip with a notice when the
+//! artifact directory is absent so plain `cargo test` works in a fresh
+//! clone.
+
+use optcnn::data::SyntheticDataset;
+use optcnn::exec::{OracleTrainer, Trainer};
+use optcnn::graph::nets;
+use optcnn::optimizer::strategies;
+use optcnn::parallel::{PConfig, Strategy};
+use optcnn::runtime::ArtifactStore;
+
+const BATCH: usize = 32;
+const NDEV: usize = 4;
+const LR: f32 = 0.01;
+
+fn store() -> Option<ArtifactStore> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match ArtifactStore::load(dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping e2e test (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn dataset() -> SyntheticDataset {
+    SyntheticDataset::new(10, 3, 32, 32, 0.3, 1234)
+}
+
+/// A mixed layer-wise strategy exercising sample, channel, AND spatial
+/// partitioning in one run (the paper's "hidden dimensions").
+fn mixed_strategy() -> Strategy {
+    let g = nets::minicnn(BATCH);
+    let mut cfgs = vec![PConfig::serial(); g.num_layers()];
+    for l in &g.layers {
+        cfgs[l.id] = match l.name.as_str() {
+            "input" => PConfig::data(4),
+            "conv1" => PConfig::new(2, 1, 2, 1),      // sample x height
+            "pool1" => PConfig::new(1, 1, 2, 2),      // spatial
+            "conv2" => PConfig::new(1, 2, 1, 2),      // channel x width
+            "pool2" => PConfig::new(4, 1, 1, 1),      // sample
+            "fc1" => PConfig::new(2, 2, 1, 1),        // sample x channel
+            "fc2" => PConfig::channel(2),             // channel
+            "softmax" => PConfig::data(4),
+            _ => PConfig::serial(),
+        };
+    }
+    Strategy { configs: cfgs }
+}
+
+#[test]
+fn data_parallel_matches_oracle() {
+    let Some(store) = store() else { return };
+    let g = nets::minicnn(BATCH);
+    let strat = strategies::data_parallel(&g, NDEV);
+    let mut trainer = Trainer::new(&store, g, strat, NDEV, LR, 7).unwrap();
+    let mut oracle =
+        OracleTrainer::new(&store, "minicnn", BATCH, trainer.master_params(), LR).unwrap();
+    let ds = dataset();
+    for step in 0..4 {
+        let (x, y) = ds.batch(step, BATCH);
+        let l_par = trainer.step(&x, &y).unwrap();
+        let l_ser = oracle.step(&x, &y).unwrap();
+        assert!(
+            (l_par - l_ser).abs() < 2e-4 * l_ser.abs().max(1.0),
+            "step {step}: partitioned {l_par} vs oracle {l_ser}"
+        );
+    }
+    // parameters agree after training
+    let m = trainer.master_params();
+    for (a, b) in m.iter().zip(oracle.params()) {
+        assert!(a.allclose(b, 2e-4), "param drift: {}", a.max_abs_diff(b));
+    }
+}
+
+#[test]
+fn mixed_layerwise_strategy_matches_oracle() {
+    let Some(store) = store() else { return };
+    let g = nets::minicnn(BATCH);
+    let mut trainer = Trainer::new(&store, g, mixed_strategy(), NDEV, LR, 9).unwrap();
+    let mut oracle =
+        OracleTrainer::new(&store, "minicnn", BATCH, trainer.master_params(), LR).unwrap();
+    let ds = dataset();
+    for step in 0..4 {
+        let (x, y) = ds.batch(step, BATCH);
+        let l_par = trainer.step(&x, &y).unwrap();
+        let l_ser = oracle.step(&x, &y).unwrap();
+        assert!(
+            (l_par - l_ser).abs() < 5e-4 * l_ser.abs().max(1.0),
+            "step {step}: mixed {l_par} vs oracle {l_ser}"
+        );
+    }
+}
+
+#[test]
+fn all_baseline_strategies_compute_identical_losses() {
+    let Some(store) = store() else { return };
+    let ds = dataset();
+    let mut curves: Vec<Vec<f32>> = Vec::new();
+    for name in ["data", "model", "owt"] {
+        let g = nets::minicnn(BATCH);
+        let strat = strategies::by_name(name, &g, NDEV).unwrap();
+        let mut trainer = Trainer::new(&store, g, strat, NDEV, LR, 11).unwrap();
+        let mut curve = Vec::new();
+        for step in 0..3 {
+            let (x, y) = ds.batch(step, BATCH);
+            curve.push(trainer.step(&x, &y).unwrap());
+        }
+        curves.push(curve);
+    }
+    for c in &curves[1..] {
+        for (a, b) in c.iter().zip(curves[0].iter()) {
+            assert!((a - b).abs() < 5e-4 * b.abs().max(1.0), "{curves:?}");
+        }
+    }
+}
+
+#[test]
+fn training_reduces_loss() {
+    let Some(store) = store() else { return };
+    let g = nets::minicnn(BATCH);
+    let strat = strategies::owt(&g, NDEV);
+    let mut trainer = Trainer::new(&store, g, strat, NDEV, LR, 3).unwrap();
+    let ds = dataset();
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..25 {
+        let (x, y) = ds.batch(step % 4, BATCH);
+        let l = trainer.step(&x, &y).unwrap();
+        if step == 0 {
+            first = l;
+        }
+        last = l;
+    }
+    assert!(last < 0.5 * first, "loss did not decrease: {first} -> {last}");
+    assert!(trainer.comm.total() > 0, "communication should be accounted");
+}
+
+#[test]
+fn optimizer_strategy_is_executable() {
+    // The full pipeline: cost-model search -> executable strategy.
+    let Some(store) = store() else { return };
+    use optcnn::cost::{CostModel, CostTables};
+    use optcnn::device::DeviceGraph;
+    let g = nets::minicnn(BATCH);
+    let d = DeviceGraph::p100_cluster(NDEV);
+    let cm = CostModel::new(&g, &d);
+    let tables = CostTables::build(&cm, NDEV);
+    let opt = optcnn::optimizer::optimize(&tables);
+    let mut trainer = Trainer::new(&store, g, opt.strategy, NDEV, LR, 5).unwrap();
+    let ds = dataset();
+    let (x, y) = ds.batch(0, BATCH);
+    let loss = trainer.step(&x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn missing_artifact_is_reported_clearly() {
+    let Some(store) = store() else { return };
+    // batch 48 tiles (nt=12) were never generated
+    let g = nets::minicnn(48);
+    let strat = strategies::data_parallel(&g, NDEV);
+    let err = match Trainer::new(&store, g, strat, NDEV, LR, 1) {
+        Err(e) => e,
+        Ok(_) => panic!("expected missing-artifact error"),
+    };
+    assert!(format!("{err:#}").contains("missing artifact"), "{err:#}");
+}

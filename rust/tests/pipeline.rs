@@ -1,0 +1,185 @@
+//! Integration tests over the full search/evaluation pipeline: the
+//! paper's qualitative claims, pinned as assertions so regressions in the
+//! cost model or optimizer surface immediately.
+
+use optcnn::cost::{CostModel, CostTables, SyncModel};
+use optcnn::device::DeviceGraph;
+use optcnn::graph::{nets, OpKind};
+use optcnn::metrics::comm_volume;
+use optcnn::optimizer::{self, strategies};
+use optcnn::parallel::PConfig;
+use optcnn::pipeline::Experiment;
+
+#[test]
+fn fig2_channel_beats_sample_for_fc6() {
+    // Figure 2: channel parallelism slashes fc6 communication.
+    let g = nets::vgg16(64);
+    let d = DeviceGraph::p100_cluster(2);
+    let cm = CostModel::new(&g, &d);
+    let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+    let pool5 = g.layers.iter().find(|l| l.name == "pool5").unwrap();
+    let sample = cm.s_bytes(fc6, &PConfig::data(2))
+        + cm.x_bytes(pool5, fc6, 0, &PConfig::data(2), &PConfig::data(2));
+    let channel = cm.s_bytes(fc6, &PConfig::channel(2))
+        + cm.x_bytes(pool5, fc6, 0, &PConfig::data(2), &PConfig::channel(2));
+    assert!(sample > 10.0 * channel, "paper: ~12x; got {}", sample / channel);
+}
+
+#[test]
+fn fig3_degree_optima() {
+    // Figure 3: early conv prefers all 16 devices; the classifier FC
+    // prefers a small degree.
+    let g = nets::inception_v3(32 * 16);
+    let d = DeviceGraph::p100_cluster(16);
+    let cm = CostModel::new(&g, &d);
+    let conv = g.layers.iter().find(|l| l.name == "stem_conv3").unwrap();
+    let fc = g.layers.iter().find(|l| l.name == "fc").unwrap();
+    let best = |l: &optcnn::graph::Layer| {
+        [1usize, 2, 4, 8, 16]
+            .into_iter()
+            .min_by(|&a, &b| {
+                let t = |k: usize| {
+                    cm.t_c(l, &PConfig::data(k)) + cm.t_s(l, &PConfig::data(k))
+                };
+                t(a).partial_cmp(&t(b)).unwrap()
+            })
+            .unwrap()
+    };
+    assert_eq!(best(conv), 16, "conv should want all devices");
+    let fc_best = best(fc);
+    assert!((2..=4).contains(&fc_best), "fc should want a small degree, got {fc_best}");
+}
+
+#[test]
+fn table5_regime_transitions() {
+    // Table 5: data parallelism early, mixed/model parallelism late.
+    let e = Experiment::new("vgg16", 4);
+    let g = e.graph();
+    let d = e.devices();
+    let (s, _) = e.strategy("layerwise", &g, &d);
+    let conv1 = g.layers.iter().find(|l| l.name == "conv1").unwrap();
+    let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+    let fc8 = g.layers.iter().find(|l| l.name == "fc8").unwrap();
+    assert_eq!(s.config(conv1.id).deg[0], 4, "early conv: sample parallelism");
+    assert!(s.config(fc6.id).deg[1] > 1, "fc: channel parallelism");
+    assert_eq!(s.config(fc8.id).deg[0], 1, "fc: no sample replication");
+    // at least one layer uses a mixed/hidden-dimension configuration
+    assert!(
+        g.layers.iter().any(|l| {
+            let c = s.config(l.id);
+            let dims_used = (0..4).filter(|&d| c.deg[d] > 1).count();
+            dims_used >= 2 || c.deg[2] > 1 || c.deg[3] > 1
+        }),
+        "optimum should exploit hidden dimensions"
+    );
+}
+
+#[test]
+fn fig7_ordering_at_scale() {
+    // Figure 7's strategy ordering at 16 GPUs: layerwise >= owt >= data
+    // >> model for the paper's three networks.
+    for net in ["alexnet", "vgg16", "inception_v3"] {
+        let e = Experiment::new(net, 16);
+        let lw = e.run("layerwise").throughput;
+        let owt = e.run("owt").throughput;
+        let data = e.run("data").throughput;
+        let model = e.run("model").throughput;
+        assert!(lw >= owt * (1.0 - 1e-9), "{net}: lw {lw} < owt {owt}");
+        assert!(owt > data, "{net}: owt {owt} <= data {data}");
+        assert!(data > model, "{net}: data {data} <= model {model}");
+    }
+}
+
+#[test]
+fn fig8_owt_and_layerwise_cut_communication() {
+    // Figure 8: OWT and layer-wise dramatically reduce communication
+    // versus data/model parallelism on parameter-heavy networks.
+    for net in ["alexnet", "vgg16"] {
+        let e = Experiment::new(net, 16);
+        let g = e.graph();
+        let d = e.devices();
+        let cm = CostModel::new(&g, &d);
+        let vol = |name: &str| {
+            let (s, _) = e.strategy(name, &g, &d);
+            comm_volume(&cm, &s).total()
+        };
+        let (data, owt, lw) = (vol("data"), vol("owt"), vol("layerwise"));
+        assert!(data > 3.0 * owt, "{net}: data {data} vs owt {owt}");
+        assert!(data > 3.0 * lw, "{net}: data {data} vs lw {lw}");
+    }
+}
+
+#[test]
+fn scalability_headline() {
+    // Figure 7 headline: layer-wise reaches >= 10x at 16 GPUs on every
+    // network, and data parallelism falls well short on AlexNet.
+    for net in ["alexnet", "vgg16", "inception_v3"] {
+        let base = Experiment::new(net, 1).run("data").throughput;
+        let lw = Experiment::new(net, 16).run("layerwise").throughput / base;
+        assert!(lw >= 10.0, "{net}: layerwise speedup {lw}");
+    }
+    let base = Experiment::new("alexnet", 1).run("data").throughput;
+    let dp = Experiment::new("alexnet", 16).run("data").throughput / base;
+    assert!(dp < 6.0, "alexnet data-parallel speedup should collapse, got {dp}");
+}
+
+#[test]
+fn k_equals_2_for_all_benchmark_networks() {
+    // Paper: every evaluated CNN reduces to a 2-node final graph.
+    for net in ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18"] {
+        let g = nets::by_name(net, 64).unwrap();
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let t = CostTables::build(&cm, 2);
+        let opt = optimizer::optimize(&t);
+        assert_eq!(opt.stats.final_nodes, 2, "{net} must reduce to K=2");
+    }
+}
+
+#[test]
+fn central_ps_changes_the_optimum_but_not_correctness() {
+    // The sync-protocol ablation: under a central PS, replication gets
+    // more expensive, so the optimum shifts away from data parallelism —
+    // but it must still beat every baseline under the same model.
+    let g = nets::alexnet(32 * 4);
+    let d = DeviceGraph::p100_cluster(4);
+    let cm = CostModel::new(&g, &d).with_sync(SyncModel::Central);
+    let tables = CostTables::build(&cm, 4);
+    let opt = optimizer::optimize(&tables);
+    for name in ["data", "model", "owt"] {
+        let s = strategies::by_name(name, &g, 4).unwrap();
+        assert!(opt.cost <= cm.t_o(&s) * (1.0 + 1e-9), "central-PS optimum lost to {name}");
+    }
+}
+
+#[test]
+fn measured_tc_override_flows_through() {
+    // The measured-profile hook: overriding t_C changes strategy costs.
+    let g = nets::lenet5(32);
+    let d = DeviceGraph::p100_cluster(2);
+    let mut cm = CostModel::new(&g, &d);
+    let base_tables = CostTables::build(&cm, 2);
+    let zeroed: Vec<Vec<f64>> =
+        base_tables.configs.iter().map(|cfgs| vec![0.0; cfgs.len()]).collect();
+    cm.measured_tc = Some(zeroed);
+    let tables = CostTables::build(&cm, 2);
+    let opt = optimizer::optimize(&tables);
+    let base = optimizer::optimize(&base_tables);
+    assert!(opt.cost < base.cost, "zeroed compute must lower the optimum");
+}
+
+#[test]
+fn per_layer_costs_are_finite_and_positive() {
+    for net in ["alexnet", "vgg16", "inception_v3", "resnet18"] {
+        let g = nets::by_name(net, 128).unwrap();
+        let d = DeviceGraph::p100_cluster(4);
+        let cm = CostModel::new(&g, &d);
+        for l in &g.layers {
+            if matches!(l.op, OpKind::Input) {
+                continue;
+            }
+            let t = cm.t_c(l, &PConfig::data(4));
+            assert!(t.is_finite() && t > 0.0, "{net}/{}: t_c {t}", l.name);
+        }
+    }
+}

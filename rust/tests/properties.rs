@@ -1,0 +1,266 @@
+//! Property-based tests over the search machinery (the paper's theorems),
+//! using the in-tree `prop` mini-framework (no proptest in the offline
+//! registry; failing cases print a replay seed).
+
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::DeviceGraph;
+use optcnn::graph::{CompGraph, GraphBuilder, PoolKind};
+use optcnn::optimizer::{self, dfs, strategies};
+use optcnn::parallel::{enumerate_configs, input_region, output_tiles, PConfig};
+use optcnn::prop::{forall, Gen};
+use optcnn::tensor::{Region, Tensor};
+
+/// A random small CNN: a chain of conv/pool/fc stages with an optional
+/// two-way branch joined by a concat (exercises edge elimination).
+fn random_net(g: &mut Gen) -> CompGraph {
+    let mut b = GraphBuilder::new("random");
+    let batch = *g.choose(&[2usize, 4, 8]);
+    let mut cur = b.input(batch, *g.choose(&[1usize, 3]), 16, 16);
+    let depth = g.usize_in(1, 4);
+    for i in 0..depth {
+        let branchy = g.bool() && i == 0;
+        if branchy {
+            let c1 =
+                b.conv2d(&format!("bl{i}"), cur, *g.choose(&[4usize, 8]), (3, 3), (1, 1), (1, 1));
+            let c2 =
+                b.conv2d(&format!("br{i}"), cur, *g.choose(&[4usize, 8]), (1, 1), (1, 1), (0, 0));
+            cur = b.concat(&format!("cat{i}"), &[c1, c2]);
+        } else {
+            cur = b.conv2d(
+                &format!("c{i}"),
+                cur,
+                *g.choose(&[4usize, 6, 8]),
+                (3, 3),
+                (1, 1),
+                (1, 1),
+            );
+        }
+        cur = b.pool2d(&format!("p{i}"), cur, PoolKind::Max, (2, 2), (2, 2), (0, 0));
+    }
+    let f = b.fully_connected("fc", cur, *g.choose(&[10usize, 12]));
+    b.softmax("sm", f);
+    b.finish()
+}
+
+#[test]
+fn elimination_dp_equals_exhaustive_search() {
+    // Theorems 1 & 2, end to end: on random graphs the DP optimum equals
+    // brute force (branch-and-bound, run to completion).
+    forall("dp == dfs on random nets", 25, |g| {
+        let net = random_net(g);
+        let ndev = 2;
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&net, &d);
+        let tables = CostTables::build(&cm, ndev);
+        let dp = optimizer::optimize(&tables);
+        let brute = dfs::dfs_optimal(&tables, None);
+        assert!(brute.complete, "random net too large for exhaustive search");
+        assert!(
+            (dp.cost - brute.cost).abs() <= 1e-9 * brute.cost.max(1e-12),
+            "dp {} != dfs {} on {} layers",
+            dp.cost,
+            brute.cost,
+            net.num_layers()
+        );
+    });
+}
+
+#[test]
+fn optimum_never_worse_than_baselines() {
+    forall("optimum <= baselines", 20, |g| {
+        let net = random_net(g);
+        let ndev = 2;
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&net, &d);
+        let tables = CostTables::build(&cm, ndev);
+        let opt = optimizer::optimize(&tables);
+        for name in ["data", "model", "owt"] {
+            let s = strategies::by_name(name, &net, ndev).unwrap();
+            assert!(opt.cost <= cm.t_o(&s) * (1.0 + 1e-9));
+        }
+    });
+}
+
+#[test]
+fn tiles_partition_output_exactly() {
+    // Equal partitioning: tiles are disjoint and cover the tensor.
+    forall("tiles partition", 200, |g| {
+        let shape: Vec<usize> = vec![
+            g.divisor_of(24) * 2,
+            g.usize_in(1, 16),
+            g.usize_in(1, 20),
+            g.usize_in(1, 20),
+        ];
+        let cfg = PConfig::new(
+            g.divisor_of(shape[0]),
+            g.divisor_of(shape[1]),
+            g.divisor_of(shape[2]),
+            g.divisor_of(shape[3]),
+        );
+        let tiles = output_tiles(&shape, &cfg);
+        assert_eq!(tiles.len(), cfg.total());
+        let vol: usize = tiles.iter().map(|t| t.volume()).sum();
+        assert_eq!(vol, shape.iter().product::<usize>());
+        for i in 0..tiles.len() {
+            for j in i + 1..tiles.len() {
+                assert_eq!(tiles[i].overlap_volume(&tiles[j]), 0);
+            }
+        }
+    });
+}
+
+#[test]
+fn enumerated_configs_are_legal_and_complete() {
+    forall("config enumeration", 50, |g| {
+        let net = random_net(g);
+        let ndev = g.usize_in(1, 5);
+        for l in &net.layers {
+            let cfgs = enumerate_configs(l, ndev);
+            assert!(!cfgs.is_empty());
+            for c in &cfgs {
+                assert!(c.total() <= ndev);
+                for d in 0..l.out_shape.len() {
+                    assert_eq!(l.out_shape[d] % c.deg[d], 0);
+                }
+            }
+            // serial is always present exactly once
+            assert_eq!(cfgs.iter().filter(|c| **c == PConfig::serial()).count(), 1);
+        }
+    });
+}
+
+#[test]
+fn input_regions_cover_what_tiles_need() {
+    // Union of input regions must cover the full input tensor (every
+    // input element feeds some output tile) for conv/pool/fc layers.
+    forall("input coverage", 50, |g| {
+        let net = random_net(g);
+        let ndev = *g.choose(&[2usize, 4]);
+        for l in &net.layers {
+            if l.in_shapes.is_empty() {
+                continue;
+            }
+            let cfgs = enumerate_configs(l, ndev);
+            let cfg = *g.choose(&cfgs);
+            let tiles = output_tiles(&l.out_shape, &cfg);
+            for in_idx in 0..l.in_shapes.len() {
+                let mut covered = Tensor::zeros(&l.in_shapes[in_idx]);
+                for t in &tiles {
+                    if let Some(r) = input_region(l, in_idx, t) {
+                        let ones = Tensor::from_fn(&r.extents(), |_| 1.0);
+                        covered.insert(&r, &ones);
+                    }
+                }
+                assert!(
+                    covered.data().iter().all(|&v| v == 1.0),
+                    "uncovered input of {} under {}",
+                    l.name,
+                    cfg.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn region_algebra() {
+    forall("region algebra", 300, |g| {
+        fn mk(g: &mut Gen) -> Region {
+            let s1 = g.usize_in(0, 10);
+            let s2 = g.usize_in(0, 10);
+            let e1 = g.usize_in(1, 8);
+            let e2 = g.usize_in(1, 8);
+            Region::new(&[(s1, s1 + e1), (s2, s2 + e2)])
+        }
+        let a = mk(g);
+        let b = mk(g);
+        // intersection is commutative and bounded
+        assert_eq!(a.overlap_volume(&b), b.overlap_volume(&a));
+        assert!(a.overlap_volume(&b) <= a.volume().min(b.volume()));
+        match a.intersect(&b) {
+            Some(i) => {
+                assert_eq!(i.volume(), a.overlap_volume(&b));
+                assert!(a.contains(&i) && b.contains(&i));
+            }
+            None => assert_eq!(a.overlap_volume(&b), 0),
+        }
+        // localize preserves volume
+        if a.contains(&b) {
+            assert_eq!(a.localize(&b).volume(), b.volume());
+        }
+    });
+}
+
+#[test]
+fn slice_insert_roundtrip_random() {
+    forall("slice/insert roundtrip", 100, |g| {
+        let shape = vec![g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 8)];
+        let t = {
+            let mut rng = g.rng().clone();
+            Tensor::from_fn(&shape, |_| rng.next_f32())
+        };
+        let ranges: Vec<(usize, usize)> = shape
+            .iter()
+            .map(|&n| {
+                let s = g.usize_in(0, n);
+                let len = g.usize_in(1, n - s + 1);
+                (s, s + len)
+            })
+            .collect();
+        let r = Region::new(&ranges);
+        let block = t.slice(&r);
+        let mut t2 = t.clone();
+        t2.insert(&r, &block);
+        assert_eq!(t, t2, "insert of own slice is identity");
+    });
+}
+
+#[test]
+fn json_roundtrip_random() {
+    use optcnn::util::json::Json;
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 5) } else { g.usize_in(0, 7) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.usize_in(0, 10_000) as f64) / 8.0),
+            3 => Json::Str(format!("k{}-π-\"q\"", g.usize_in(0, 99))),
+            4 => Json::Num(-(g.usize_in(0, 100) as f64)),
+            5 => {
+                let n = g.usize_in(0, 4);
+                Json::Arr(g.vec(n, |g| random_json(g, depth - 1)))
+            }
+            _ => {
+                let n = g.usize_in(0, 4);
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..n {
+                    m.insert(format!("f{i}"), random_json(g, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    forall("json roundtrip", 200, |g| {
+        let v = random_json(g, 3);
+        let parsed = Json::parse(&v.to_string()).expect("parse own output");
+        assert_eq!(parsed, v);
+    });
+}
+
+#[test]
+fn strategy_cost_table_consistency() {
+    // Tabled strategy cost must equal direct Eq.1 evaluation for random
+    // strategies (not just the optimum).
+    forall("tables == direct", 20, |g| {
+        let net = random_net(g);
+        let ndev = 2;
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&net, &d);
+        let tables = CostTables::build(&cm, ndev);
+        let idx: Vec<usize> =
+            (0..net.num_layers()).map(|l| g.usize_in(0, tables.num_configs(l))).collect();
+        let s = tables.strategy_from_indices(&idx);
+        let direct = cm.t_o(&s);
+        let tabled = tables.strategy_cost(&idx);
+        assert!((direct - tabled).abs() <= 1e-9 * direct.max(1e-12));
+    });
+}
