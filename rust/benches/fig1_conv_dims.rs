@@ -39,7 +39,14 @@ fn main() {
     let cm_central = CostModel::new(&g, &d).with_sync(SyncModel::Central);
     let mut table = Table::new(
         "Figure 1: VGG-16 Conv8 on 4 GPUs, per-dimension parallelization",
-        &["configuration", "t_C (ms)", "t_X (ms)", "t_S central", "total (central PS)", "total (sharded)"],
+        &[
+            "configuration",
+            "t_C (ms)",
+            "t_X (ms)",
+            "t_S central",
+            "total (central PS)",
+            "total (sharded)",
+        ],
     );
     let mut best = ("", f64::INFINITY);
     let mut sample_total = 0.0;

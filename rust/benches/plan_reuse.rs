@@ -1,0 +1,47 @@
+//! Plan materialization and reuse (§Perf log #5): repeated simulation of
+//! a cached `ExecutionPlan` versus the seed's recompute-per-call path,
+//! plus the cost of plan construction and cache lookups themselves.
+//!
+//! This is the serving scenario the plan IR exists for — a planner
+//! answering many simulate/evaluate queries over a small working set of
+//! (network, strategy, cluster) triples.
+
+use optcnn::cost::CostModel;
+use optcnn::device::DeviceGraph;
+use optcnn::graph::nets;
+use optcnn::optimizer::strategies;
+use optcnn::plan::{ExecutionPlan, PlanCache};
+use optcnn::sim::{simulate, simulate_plan};
+use optcnn::util::benchkit::bench;
+
+fn main() {
+    for (net, ndev) in [("vgg16", 4usize), ("inception_v3", 4), ("inception_v3", 16)] {
+        println!("== plan reuse: {net} x{ndev} ==");
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::data_parallel(&g, ndev);
+
+        let build = bench(&format!("plan_build({net}, {ndev} dev)"), || {
+            ExecutionPlan::build(&cm, &s)
+        });
+        let plan = ExecutionPlan::build(&cm, &s);
+        let recompute = bench(&format!("simulate_recompute({net}, {ndev} dev)"), || {
+            simulate(&g, &d, &s, &cm)
+        });
+        let cached = bench(&format!("simulate_cached_plan({net}, {ndev} dev)"), || {
+            simulate_plan(&plan, &cm)
+        });
+        let mut cache = PlanCache::default();
+        cache.get_or_build(&cm, &s);
+        bench(&format!("plan_cache_hit({net}, {ndev} dev)"), || {
+            cache.get_or_build(&cm, &s)
+        });
+        println!(
+            "  -> cached-plan simulate is {:.2}x the recompute path \
+             (plan build amortized over {:.1} queries)\n",
+            recompute.median / cached.median.max(1e-12),
+            build.median / (recompute.median - cached.median).abs().max(1e-12)
+        );
+    }
+}

@@ -7,9 +7,24 @@
 //! regions — only table lookups.
 
 use super::{CostModel, LINK_LATENCY};
-use crate::graph::LayerId;
+use crate::graph::{LayerId, OpKind};
 use crate::parallel::{enumerate_configs, input_region, output_tiles, PConfig, Strategy};
+use crate::plan::overlap::{flatten, overlap_elems, FlatRegion};
 use crate::tensor::Region;
+
+/// Structural identity of an edge's cost table: edges whose producer
+/// shape, consumer operator/shapes, and input slot coincide have
+/// identical `t_X` matrices. Borrowed fields — hashing allocates nothing
+/// (replaces the former `format!`-string signature on the table-build hot
+/// path).
+#[derive(Hash, PartialEq, Eq)]
+struct EdgeSig<'a> {
+    src_out: &'a [usize],
+    dst_op: &'a OpKind,
+    dst_out: &'a [usize],
+    dst_in: &'a [Vec<usize>],
+    in_idx: usize,
+}
 
 /// Cost matrix for one graph edge: `cost[ci * num_dst_cfgs + cj]`.
 #[derive(Debug, Clone)]
@@ -89,23 +104,19 @@ impl CostTables {
                 let (cs, cd) = (&configs[s], &configs[d]);
                 let mut cost = vec![0.0f64; cs.len() * cd.len()];
                 // flatten regions to fixed-size arrays: the (m, k) overlap
-                // loop is the hottest code in the library (§Perf log #3)
-                let flat = |r: &Region| -> [(u32, u32); 4] {
-                    let mut a = [(0u32, 1u32); 4];
-                    for dim in 0..r.rank() {
-                        a[dim] = (r.start(dim) as u32, r.end(dim) as u32);
-                    }
-                    a
-                };
-                let src_flat: Vec<Vec<[(u32, u32); 4]>> = (0..cs.len())
-                    .map(|ci| tiles[s][ci].iter().map(&flat).collect())
+                // loop is the hottest code in the library (§Perf log #3);
+                // the kernel is shared with plan construction
+                // (`plan::overlap`), so cost tables and materialized plans
+                // charge bytes for exactly the same overlaps.
+                let src_flat: Vec<Vec<FlatRegion>> = (0..cs.len())
+                    .map(|ci| tiles[s][ci].iter().map(flatten).collect())
                     .collect();
                 for (cj_idx, _) in cd.iter().enumerate() {
                     let dst_tiles = &tiles[d][cj_idx];
                     // input regions per destination tile, shared across ci
-                    let needs: Vec<Option<[(u32, u32); 4]>> = dst_tiles
+                    let needs: Vec<Option<FlatRegion>> = dst_tiles
                         .iter()
-                        .map(|t| input_region(ld, in_idx, t).map(|r| flat(&r)))
+                        .map(|t| input_region(ld, in_idx, t).map(|r| flatten(&r)))
                         .collect();
                     for (ci_idx, _) in cs.iter().enumerate() {
                         let src_tiles = &src_flat[ci_idx];
@@ -118,16 +129,7 @@ impl CostTables {
                                 if dev_of[k] == dst_dev {
                                     continue;
                                 }
-                                let mut overlap = 1u64;
-                                for dim in 0..4 {
-                                    let lo = need[dim].0.max(stile[dim].0);
-                                    let hi = need[dim].1.min(stile[dim].1);
-                                    if lo >= hi {
-                                        overlap = 0;
-                                        break;
-                                    }
-                                    overlap *= (hi - lo) as u64;
-                                }
+                                let overlap = overlap_elems(need, stile);
                                 if overlap > 0 {
                                     inbound += cm.devices.transfer_time(
                                         dev_of[k],
@@ -150,25 +152,22 @@ impl CostTables {
         // input slot) coincide have identical cost tables — CNNs repeat
         // layer pairs heavily (VGG stages, Inception modules), so this
         // cuts the expensive evaluations several-fold (§Perf log #2).
-        let signature = |&(s, d): &(LayerId, LayerId)| -> String {
-            let (ls, ld) = (g.layer(s), g.layer(d));
-            format!(
-                "{:?}|{:?}|{:?}|{:?}|{}",
-                ls.out_shape,
-                ld.op,
-                ld.out_shape,
-                ld.in_shapes,
-                cm.edge_in_idx(s, d)
-            )
-        };
-        let mut sig_to_unique: std::collections::HashMap<String, usize> =
+        let mut sig_to_unique: std::collections::HashMap<EdgeSig<'_>, usize> =
             std::collections::HashMap::new();
         let mut unique_edges: Vec<(LayerId, LayerId)> = Vec::new();
         let edge_unique: Vec<usize> = edge_list
             .iter()
-            .map(|e| {
-                *sig_to_unique.entry(signature(e)).or_insert_with(|| {
-                    unique_edges.push(*e);
+            .map(|&(s, d)| {
+                let (ls, ld) = (g.layer(s), g.layer(d));
+                let sig = EdgeSig {
+                    src_out: &ls.out_shape,
+                    dst_op: &ld.op,
+                    dst_out: &ld.out_shape,
+                    dst_in: &ld.in_shapes,
+                    in_idx: cm.edge_in_idx(s, d),
+                };
+                *sig_to_unique.entry(sig).or_insert_with(|| {
+                    unique_edges.push((s, d));
                     unique_edges.len() - 1
                 })
             })

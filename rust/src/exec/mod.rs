@@ -19,6 +19,16 @@
 //! the paper's p2p cluster — the discrete-event simulator (`sim/`) does
 //! that; this module is about numerics, liveness, and the coordinator
 //! architecture.
+//!
+//! Partitioning geometry comes from a materialized
+//! [`ExecutionPlan`](crate::plan::ExecutionPlan) built at trainer
+//! construction: output tiles, per-tile input regions, and sync shards
+//! are read from the plan (the same IR the cost model and simulator
+//! consume), never re-derived inline. Two communication counters are
+//! kept: [`Trainer::comm`] is the observed hub-and-spoke leader traffic,
+//! and [`Trainer::plan_comm`] is the plan's scheduled p2p volume — the
+//! number a peer-to-peer runtime would move, and the one that matches
+//! `sim::SimReport` byte-for-byte.
 
 pub mod keys;
 pub mod worker;
@@ -26,14 +36,15 @@ pub mod worker;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::graph::{CompGraph, LayerId, OpKind};
-use crate::parallel::{output_tiles, PConfig, Strategy, DIM_C, DIM_H, DIM_N, DIM_W};
+use crate::parallel::{PConfig, Strategy, DIM_C, DIM_H, DIM_N, DIM_W};
+use crate::plan::ExecutionPlan;
 use crate::runtime::{ArtifactStore, Engine};
 use crate::tensor::{Region, Tensor};
 use crate::util::rng::Rng;
 use worker::{Req, Resp, WorkerHandle};
 
 /// Communication accounting for the executor's message traffic.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CommStats {
     /// Activation/gradient tensor bytes (the `t_X` analogue).
     pub xfer_bytes: u64,
@@ -45,19 +56,35 @@ impl CommStats {
     pub fn total(&self) -> u64 {
         self.xfer_bytes + self.sync_bytes
     }
+
+    /// The per-step p2p communication an execution plan schedules —
+    /// identical to the simulator's per-step `xfer_bytes`/`sync_bytes`
+    /// for the same (graph, strategy, devices) triple.
+    pub fn planned(plan: &ExecutionPlan) -> CommStats {
+        CommStats {
+            xfer_bytes: plan.xfer_bytes().round() as u64,
+            sync_bytes: plan.sync_bytes().round() as u64,
+        }
+    }
 }
 
 /// The partitioned trainer (leader + workers).
 pub struct Trainer {
     graph: CompGraph,
     strategy: Strategy,
+    /// Materialized partitioning consequences (tiles, input regions, sync
+    /// shards) — the single source of geometry for scatter/halo/gather.
+    plan: ExecutionPlan,
     workers: Vec<WorkerHandle>,
     /// Master copy of each layer's parameters (`[w, b]`), the PS state.
     params: Vec<Option<Vec<Tensor>>>,
     relu: Vec<bool>,
     lr: f32,
     batch: usize,
+    /// Observed leader<->worker traffic (hub-and-spoke topology).
     pub comm: CommStats,
+    /// The plan's scheduled p2p volume per step (matches the simulator).
+    pub plan_comm: CommStats,
     pub steps: u64,
 }
 
@@ -104,6 +131,24 @@ impl Trainer {
             );
         }
         let relu = relu_flags(&graph);
+        // Materialize the plan on the executor's topology: one node of
+        // `ndev` workers, tile t on worker t (contiguous placement). The
+        // plan's byte totals are topology-independent, so `plan_comm`
+        // matches a simulation of the same strategy on any cluster shape.
+        let plan = {
+            let exec_devices = crate::device::DeviceGraph::cluster(
+                "exec-workers",
+                1,
+                ndev,
+                1e9,
+                1e9,
+                1e9,
+                crate::device::ComputeModel::p100(),
+            );
+            let cm = crate::cost::CostModel::new(&graph, &exec_devices);
+            ExecutionPlan::build(&cm, &strategy)
+        };
+        let plan_comm = CommStats::planned(&plan);
         let mut t = Trainer {
             workers: (0..ndev).map(|i| WorkerHandle::spawn(i, store.clone())).collect(),
             params: init_params(&graph, seed),
@@ -111,9 +156,11 @@ impl Trainer {
             lr,
             batch,
             comm: CommStats::default(),
+            plan_comm,
             steps: 0,
             graph,
             strategy,
+            plan,
         };
         t.check_artifacts(store)?;
         t.distribute_all_params()?;
@@ -143,11 +190,27 @@ impl Trainer {
         Ok(())
     }
 
+    /// Output tiles of layer `id` from the materialized plan (tile index
+    /// == worker id under the executor's contiguous placement).
+    fn tiles(&self, id: LayerId) -> Vec<Region> {
+        self.plan.layer(id).tiles.clone()
+    }
+
+    /// The input region tile `t` of layer `id` consumes from its
+    /// predecessor, from the plan's transfer schedule (chain graphs have
+    /// exactly one in-edge, and conv/pool/fc/softmax tiles always consume
+    /// a nonempty region).
+    fn need(&self, id: LayerId, t: usize) -> Region {
+        self.plan
+            .edge_into(id)
+            .and_then(|e| e.needs[t].clone())
+            .expect("chain layer tile consumes part of its predecessor")
+    }
+
     /// The artifact keys layer `id` needs under the current strategy.
     fn layer_keys(&self, id: LayerId) -> Vec<String> {
         let l = self.graph.layer(id);
-        let cfg = self.strategy.config(id);
-        let tiles = output_tiles(&l.out_shape, cfg);
+        let tiles = &self.plan.layer(id).tiles;
         let t0 = &tiles[0];
         let (nt, ct) = (t0.end(DIM_N) - t0.start(DIM_N), tile_c(t0));
         match &l.op {
@@ -191,9 +254,7 @@ impl Trainer {
     }
 
     fn send_params(&mut self, id: LayerId) -> Result<()> {
-        let l = self.graph.layer(id);
-        let cfg = *self.strategy.config(id);
-        let tiles = output_tiles(&l.out_shape, &cfg);
+        let tiles = self.tiles(id);
         for (t, tile) in tiles.iter().enumerate() {
             let shard = self.param_shard(id, tile)?;
             self.comm.sync_bytes += shard.iter().map(|p| p.len() as u64 * 4).sum::<u64>();
@@ -274,18 +335,15 @@ impl Trainer {
         loss_sum: &mut f32,
     ) -> Result<(Option<Tensor>, Option<Tensor>)> {
         let l = self.graph.layer(id).clone();
-        let cfg = *self.strategy.config(id);
-        let tiles = output_tiles(&l.out_shape, &cfg);
+        let tiles = self.tiles(id);
         let key = self.layer_keys(id);
         match &l.op {
             OpKind::Softmax => {
                 let mut dlogits = Tensor::zeros(&l.out_shape);
-                // dispatch
-                for (t, tile) in tiles.iter().enumerate() {
-                    let rows = Region::new(&[
-                        (tile.start(DIM_N), tile.end(DIM_N)),
-                        (0, l.out_shape[DIM_C]),
-                    ]);
+                // dispatch: each tile consumes its plan-scheduled input
+                // rows (the sample range, all classes)
+                for t in 0..tiles.len() {
+                    let rows = self.need(id, t);
                     let logit_rows = input.slice(&rows);
                     let label_rows = labels.slice(&rows);
                     self.comm.xfer_bytes += (logit_rows.len() + label_rows.len()) as u64 * 4;
@@ -300,15 +358,12 @@ impl Trainer {
                         })
                         .map_err(|_| anyhow!("worker {t} gone"))?;
                 }
-                for (t, tile) in tiles.iter().enumerate() {
+                for t in 0..tiles.len() {
                     let Resp::Out { outputs } = self.workers[t].recv()? else {
                         bail!("unexpected response")
                     };
                     *loss_sum += outputs[0].data()[0];
-                    let rows = Region::new(&[
-                        (tile.start(DIM_N), tile.end(DIM_N)),
-                        (0, l.out_shape[DIM_C]),
-                    ]);
+                    let rows = self.need(id, t);
                     self.comm.xfer_bytes += outputs[1].len() as u64 * 4 + 4;
                     dlogits.insert(&rows, &outputs[1]);
                 }
@@ -346,8 +401,7 @@ impl Trainer {
     /// halo/zero-padding), plus whether the layer carries params.
     fn make_slabs(&self, id: LayerId, input: &Tensor) -> Result<(Vec<Tensor>, bool)> {
         let l = self.graph.layer(id);
-        let cfg = self.strategy.config(id);
-        let tiles = output_tiles(&l.out_shape, cfg);
+        let tiles = self.tiles(id);
         match &l.op {
             OpKind::Conv2d { kernel, padding, .. } => {
                 let p = *padding;
@@ -379,18 +433,11 @@ impl Trainer {
                     .collect();
                 Ok((slabs, true))
             }
-            OpKind::Pool2d { kernel, .. } => {
-                let slabs = tiles
-                    .iter()
-                    .map(|t| {
-                        input.slice(&Region::new(&[
-                            (t.start(DIM_N), t.end(DIM_N)),
-                            (t.start(DIM_C), t.end(DIM_C)),
-                            (t.start(DIM_H) * kernel.0, t.end(DIM_H) * kernel.0),
-                            (t.start(DIM_W) * kernel.1, t.end(DIM_W) * kernel.1),
-                        ]))
-                    })
-                    .collect();
+            OpKind::Pool2d { .. } => {
+                // non-overlapping k==s pooling: each tile's slab is
+                // exactly the plan's scheduled input region
+                let slabs =
+                    (0..tiles.len()).map(|t| input.slice(&self.need(id, t))).collect();
                 Ok((slabs, false))
             }
             OpKind::FullyConnected { .. } => {
@@ -414,7 +461,7 @@ impl Trainer {
     fn backward_layer(&mut self, id: LayerId, d: Tensor) -> Result<Tensor> {
         let l = self.graph.layer(id).clone();
         let cfg = *self.strategy.config(id);
-        let tiles = output_tiles(&l.out_shape, &cfg);
+        let tiles = self.tiles(id);
         let key = &self.layer_keys(id)[1];
         let in_sh = l.in_shapes[0].clone();
         let with_params = l.has_params();
@@ -478,12 +525,9 @@ impl Trainer {
                     (tile.start(DIM_H), tile.end(DIM_H) + kernel.0 - 1),
                     (tile.start(DIM_W), tile.end(DIM_W) + kernel.1 - 1),
                 ]),
-                OpKind::Pool2d { kernel, .. } => Region::new(&[
-                    (tile.start(DIM_N), tile.end(DIM_N)),
-                    (tile.start(DIM_C), tile.end(DIM_C)),
-                    (tile.start(DIM_H) * kernel.0, tile.end(DIM_H) * kernel.0),
-                    (tile.start(DIM_W) * kernel.1, tile.end(DIM_W) * kernel.1),
-                ]),
+                // the gradient slab goes back where the plan's scheduled
+                // input region came from
+                OpKind::Pool2d { .. } => self.need(id, t),
                 OpKind::FullyConnected { .. } => Region::new(&[
                     (tile.start(DIM_N), tile.end(DIM_N)),
                     (0, in_sh[1..].iter().product::<usize>()),
@@ -628,7 +672,13 @@ pub struct OracleTrainer {
 impl OracleTrainer {
     /// `params` must be the flat `[w, b]` list in layer order (use
     /// [`Trainer::master_params`] for parity runs).
-    pub fn new(store: &ArtifactStore, network: &str, batch: usize, params: Vec<Tensor>, lr: f32) -> Result<OracleTrainer> {
+    pub fn new(
+        store: &ArtifactStore,
+        network: &str,
+        batch: usize,
+        params: Vec<Tensor>,
+        lr: f32,
+    ) -> Result<OracleTrainer> {
         let key = keys::train_step(network, batch);
         ensure!(store.has(&key), "missing oracle artifact `{key}`");
         Ok(OracleTrainer { engine: Engine::new(store.clone())?, key, params, lr })

@@ -14,7 +14,7 @@ pub mod nets;
 pub type LayerId = usize;
 
 /// Pooling flavor. Cost-wise identical; kept for fidelity of the builders.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PoolKind {
     Max,
     Avg,
@@ -22,12 +22,19 @@ pub enum PoolKind {
 
 /// The operator a layer applies. Spatial parameters follow cuDNN
 /// convention: kernel (kh, kw), stride (sh, sw), padding (ph, pw).
-#[derive(Debug, Clone, PartialEq)]
+/// `Eq + Hash` so operators can key structural dedup maps (the cost
+/// tables fold edges with identical operator/shape signatures).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum OpKind {
     /// Graph input (the data loader). Carries no compute.
     Input,
     /// 2-D convolution (+ folded activation). `cout` output channels.
-    Conv2d { cout: usize, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize) },
+    Conv2d {
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    },
     /// 2-D pooling.
     Pool2d { kind: PoolKind, kernel: (usize, usize), stride: (usize, usize), padding: (usize, usize) },
     /// Fully-connected (+ folded activation). Flattens 4-D inputs.
@@ -229,7 +236,13 @@ impl GraphBuilder {
         GraphBuilder { name: name.to_string(), layers: Vec::new(), edges: Vec::new() }
     }
 
-    fn push(&mut self, name: String, op: OpKind, inputs: &[LayerId], out_shape: Vec<usize>) -> LayerId {
+    fn push(
+        &mut self,
+        name: String,
+        op: OpKind,
+        inputs: &[LayerId],
+        out_shape: Vec<usize>,
+    ) -> LayerId {
         let id = self.layers.len();
         let in_shapes = inputs.iter().map(|&i| self.layers[i].out_shape.clone()).collect();
         for &i in inputs {

@@ -12,9 +12,11 @@
 //! 3. evaluate candidate strategies with the cost model ([`cost`]);
 //! 4. find a globally optimal strategy with the elimination-based dynamic
 //!    program ([`optimizer`]), or use the data/model/OWT baselines;
-//! 5. validate with the discrete-event cluster simulator ([`sim`]) and/or
+//! 5. materialize the chosen strategy into an [`plan::ExecutionPlan`] —
+//!    tiles, transfer schedules, sync shards, derived once and shared;
+//! 6. validate with the discrete-event cluster simulator ([`sim`]) and/or
 //!    execute for real through the AOT-compiled HLO artifacts
-//!    ([`runtime`], [`exec`]).
+//!    ([`runtime`], [`exec`]), both driven by the same plan.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -29,6 +31,7 @@ pub mod metrics;
 pub mod optimizer;
 pub mod parallel;
 pub mod pipeline;
+pub mod plan;
 pub mod prop;
 pub mod runtime;
 pub mod sim;

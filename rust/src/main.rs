@@ -4,6 +4,7 @@
 //!
 //! * `optimize`  — run Algorithm 1 and print the per-layer strategy
 //! * `simulate`  — evaluate a strategy on the simulated cluster
+//! * `plan`      — materialize a strategy's ExecutionPlan (print/export)
 //! * `sweep`     — the full Figure 7/8 grid (networks x devices x strategies)
 //! * `train`     — real partitioned training of MiniCNN through PJRT
 //! * `info`      — networks, artifact status, cluster presets
@@ -26,6 +27,8 @@ optcnn — layer-wise parallelism for CNN training (ICML'18 reproduction)
 USAGE:
   optcnn optimize --network <net> --devices <n>
   optcnn simulate --network <net> --devices <n> --strategy <s>
+  optcnn plan     --network <net> --devices <n> [--strategy <s>]
+                  [--out plan.json]
   optcnn sweep    [--networks a,b] [--devices 1,2,4,8,16]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
@@ -42,6 +45,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("optimize") => cmd_optimize(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("plan") => cmd_plan(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(&args),
@@ -124,6 +128,75 @@ fn cmd_simulate(args: &Args) -> i32 {
         fmt_bytes(eval.comm.xfer_bytes),
         fmt_bytes(eval.comm.sync_bytes)
     );
+    0
+}
+
+/// Materialize a strategy into an `ExecutionPlan`, print its per-layer
+/// partitioning and transfer schedule summary, and optionally export the
+/// plan as JSON (`--out plan.json`) — the servable-artifact workflow.
+fn cmd_plan(args: &Args) -> i32 {
+    use optcnn::cost::CostModel;
+    use optcnn::plan::PlanCache;
+    use optcnn::util::benchkit::time_once;
+    let net = args.get_or("network", "vgg16");
+    let ndev = args.get_usize("devices", 4);
+    let strat = args.get_or("strategy", "layerwise");
+    let e = Experiment::new(net, ndev);
+    let g = e.graph();
+    let d = e.devices();
+    let (strategy, _) = e.strategy(strat, &g, &d);
+    let cm = CostModel::new(&g, &d);
+    let mut cache = PlanCache::default();
+    let (plan, cold) = time_once(|| cache.get_or_build(&cm, &strategy));
+    let (_, warm) = time_once(|| cache.get_or_build(&cm, &strategy));
+
+    let mut table = Table::new(
+        &format!("execution plan: {net} x{ndev}, strategy={strat}"),
+        &["layer", "op", "config", "tiles", "in-transfers", "sync"],
+    );
+    for l in &g.layers {
+        let lp = plan.layer(l.id);
+        let inbound: usize = plan
+            .edges
+            .iter()
+            .filter(|ep| ep.dst == l.id)
+            .map(|ep| ep.transfers.iter().filter(|t| t.is_remote()).count())
+            .sum();
+        let sync = match &lp.sync {
+            Some(s) => fmt_bytes(s.bytes()),
+            None => "-".to_string(),
+        };
+        table.row(vec![
+            l.name.clone(),
+            l.op.mnemonic().to_string(),
+            lp.cfg.label(),
+            lp.tiles.len().to_string(),
+            inbound.to_string(),
+            sync,
+        ]);
+    }
+    table.print();
+    println!(
+        "totals: {} remote transfers, {} tensor movement + {} parameter sync per step",
+        plan.num_transfers(),
+        fmt_bytes(plan.xfer_bytes()),
+        fmt_bytes(plan.sync_bytes())
+    );
+    println!(
+        "plan build {} cold, {} from cache ({} hit / {} miss)",
+        fmt_secs(cold),
+        fmt_secs(warm),
+        cache.hits,
+        cache.misses
+    );
+    if let Some(path) = args.get("out") {
+        let text = plan.to_json().to_string();
+        if let Err(err) = std::fs::write(path, &text) {
+            eprintln!("writing {path}: {err}");
+            return 1;
+        }
+        println!("wrote plan ({} bytes of JSON) to {path}", text.len());
+    }
     0
 }
 
@@ -215,6 +288,12 @@ fn cmd_train(args: &Args) -> i32 {
         (steps * batch) as f64 / dt,
         fmt_bytes(trainer.comm.total() as f64),
         fmt_bytes(trainer.comm.sync_bytes as f64)
+    );
+    println!(
+        "planned p2p volume: {}/step ({} tensor + {} sync; matches `optcnn simulate`)",
+        fmt_bytes(trainer.plan_comm.total() as f64),
+        fmt_bytes(trainer.plan_comm.xfer_bytes as f64),
+        fmt_bytes(trainer.plan_comm.sync_bytes as f64)
     );
     0
 }

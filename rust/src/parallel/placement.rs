@@ -7,7 +7,7 @@
 //! nodes) so its impact can be measured (`ablation_placement` bench).
 
 /// How a layer's tiles map onto device ids.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Placement {
     /// Tile `t` runs on device `t` (row-major tile order, node 0 first).
     /// The paper's implicit policy.

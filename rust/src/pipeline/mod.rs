@@ -9,10 +9,11 @@
 use crate::cost::{CostModel, CostTables};
 use crate::device::DeviceGraph;
 use crate::graph::{nets, CompGraph};
-use crate::metrics::{comm_volume, CommBreakdown};
+use crate::metrics::CommBreakdown;
 use crate::optimizer::{self, strategies, SearchStats};
 use crate::parallel::Strategy;
-use crate::sim::{steady_state_step, SimReport};
+use crate::plan::ExecutionPlan;
+use crate::sim::{steady_state_step_plan, SimReport};
 
 /// The paper's default per-GPU batch size.
 pub const PER_GPU_BATCH: usize = 32;
@@ -95,7 +96,9 @@ impl Experiment {
     }
 
     /// Evaluate a strategy: Eq. 1 estimate, steady-state simulation (sync
-    /// on the inter-step critical path), comm volume.
+    /// on the inter-step critical path), comm volume. Materializes the
+    /// strategy's [`ExecutionPlan`] once and derives simulation and
+    /// communication accounting from it.
     pub fn evaluate(
         &self,
         graph: &CompGraph,
@@ -103,9 +106,21 @@ impl Experiment {
         strategy: &Strategy,
     ) -> Eval {
         let cm = CostModel::new(graph, devices);
+        let plan = ExecutionPlan::build(&cm, strategy);
+        self.evaluate_plan(&cm, strategy, &plan)
+    }
+
+    /// [`Experiment::evaluate`] against a prebuilt (typically cached)
+    /// plan: repeated evaluation queries skip all tiling/overlap work.
+    pub fn evaluate_plan(
+        &self,
+        cm: &CostModel,
+        strategy: &Strategy,
+        plan: &ExecutionPlan,
+    ) -> Eval {
         let estimate = cm.t_o(strategy);
-        let sim = steady_state_step(graph, devices, strategy, &cm);
-        let comm = comm_volume(&cm, strategy);
+        let sim = steady_state_step_plan(plan, cm);
+        let comm = plan.comm();
         let throughput = self.global_batch() as f64 / estimate;
         let sim_throughput = sim.throughput(self.global_batch());
         Eval { estimate, sim, comm, throughput, sim_throughput }

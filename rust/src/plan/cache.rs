@@ -1,0 +1,228 @@
+//! LRU cache of materialized execution plans.
+//!
+//! A production planner answers many optimize/simulate requests against a
+//! small working set of (network, strategy, cluster) triples; plan
+//! construction is the per-request tiling/overlap cost that the cache
+//! amortizes away (see the `plan_reuse` bench). Keys are structural —
+//! network identity (name + input shape), per-layer degrees, device
+//! count, placement policy — so equal queries hit regardless of how the
+//! strategy object was produced.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use super::ExecutionPlan;
+use crate::cost::CostModel;
+use crate::graph::CompGraph;
+use crate::parallel::{Placement, Strategy};
+
+/// Structural fingerprint of a computation graph: name, per-layer
+/// operators and output shapes, and the edge list (input shapes are
+/// derivable from these). Two graphs with equal fingerprints produce
+/// identical plans under equal strategies/topologies.
+fn graph_fingerprint(g: &CompGraph) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    g.name.hash(&mut h);
+    for l in &g.layers {
+        l.op.hash(&mut h);
+        l.out_shape.hash(&mut h);
+    }
+    g.edges.hash(&mut h);
+    h.finish()
+}
+
+/// Structural identity of a plan: everything `ExecutionPlan::build`
+/// depends on — the graph (fingerprinted), the strategy's degrees, and
+/// the cluster's node topology/placement (which decide tile devices,
+/// transfer routes, and sync-group node spans).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Network name.
+    pub net: String,
+    /// Input-layer shape (distinguishes batch sizes under one net name).
+    pub input_shape: Vec<usize>,
+    /// Fingerprint of the full graph structure (ops, shapes, edges).
+    pub graph_fp: u64,
+    /// Per-layer parallelism degrees `[n, c, h, w]`.
+    pub degrees: Vec<[usize; 4]>,
+    pub ndev: usize,
+    /// Node index of each device (2x4 and 1x8 clusters differ here).
+    pub node_of: Vec<usize>,
+    pub placement: Placement,
+}
+
+impl PlanKey {
+    /// The key `ExecutionPlan::build(cm, strategy)` would be stored under.
+    pub fn of(cm: &CostModel<'_>, strategy: &Strategy) -> PlanKey {
+        PlanKey {
+            net: cm.graph.name.clone(),
+            input_shape: cm.graph.layers[0].out_shape.clone(),
+            graph_fp: graph_fingerprint(cm.graph),
+            degrees: strategy.configs.iter().map(|c| c.deg).collect(),
+            ndev: cm.devices.num_devices(),
+            node_of: cm.devices.devices.iter().map(|d| d.node).collect(),
+            placement: cm.placement,
+        }
+    }
+}
+
+/// A bounded least-recently-used cache of shared plans.
+pub struct PlanCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<PlanKey, (u64, Arc<ExecutionPlan>)>,
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to build.
+    pub misses: u64,
+}
+
+impl PlanCache {
+    /// A cache holding at most `cap` plans (`cap >= 1`).
+    pub fn new(cap: usize) -> PlanCache {
+        assert!(cap >= 1, "cache capacity must be positive");
+        PlanCache { cap, tick: 0, map: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Fetch the plan for (cm, strategy), building and inserting it on a
+    /// miss. Evicts the least-recently-used entry at capacity.
+    pub fn get_or_build(&mut self, cm: &CostModel<'_>, strategy: &Strategy) -> Arc<ExecutionPlan> {
+        let key = PlanKey::of(cm, strategy);
+        self.tick += 1;
+        if let Some((last_used, plan)) = self.map.get_mut(&key) {
+            *last_used = self.tick;
+            self.hits += 1;
+            return Arc::clone(plan);
+        }
+        self.misses += 1;
+        let plan = Arc::new(ExecutionPlan::build(cm, strategy));
+        if self.map.len() >= self.cap {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (last_used, _))| *last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+            }
+        }
+        self.map.insert(key, (self.tick, Arc::clone(&plan)));
+        plan
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl Default for PlanCache {
+    /// Eight plans — enough for a sweep's working set of strategies.
+    fn default() -> PlanCache {
+        PlanCache::new(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+    use crate::optimizer::strategies;
+
+    #[test]
+    fn hit_returns_the_same_plan() {
+        let g = nets::lenet5(64);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::data_parallel(&g, 2);
+        let mut cache = PlanCache::new(4);
+        let a = cache.get_or_build(&cm, &s);
+        let b = cache.get_or_build(&cm, &s);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit");
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+    }
+
+    #[test]
+    fn distinct_strategies_get_distinct_entries() {
+        let g = nets::lenet5(64);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let mut cache = PlanCache::new(4);
+        let a = cache.get_or_build(&cm, &strategies::data_parallel(&g, 2));
+        let b = cache.get_or_build(&cm, &strategies::owt(&g, 2));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let g = nets::lenet5(64);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let data = strategies::data_parallel(&g, 2);
+        let model = strategies::model_parallel(&g, 2);
+        let owt = strategies::owt(&g, 2);
+        let mut cache = PlanCache::new(2);
+        cache.get_or_build(&cm, &data); // tick 1
+        cache.get_or_build(&cm, &model); // tick 2
+        cache.get_or_build(&cm, &data); // tick 3: refresh data
+        cache.get_or_build(&cm, &owt); // evicts model (coldest)
+        assert_eq!(cache.len(), 2);
+        let before = cache.misses;
+        cache.get_or_build(&cm, &data); // still cached
+        assert_eq!(cache.misses, before);
+        cache.get_or_build(&cm, &model); // was evicted: rebuild
+        assert_eq!(cache.misses, before + 1);
+    }
+
+    #[test]
+    fn batch_size_is_part_of_the_key() {
+        let d = DeviceGraph::p100_cluster(2);
+        let g1 = nets::lenet5(32);
+        let g2 = nets::lenet5(64);
+        let k1 = PlanKey::of(&CostModel::new(&g1, &d), &strategies::data_parallel(&g1, 2));
+        let k2 = PlanKey::of(&CostModel::new(&g2, &d), &strategies::data_parallel(&g2, 2));
+        assert_ne!(k1, k2);
+    }
+
+    #[test]
+    fn node_topology_is_part_of_the_key() {
+        // Same device count, different node layouts: transfer routes and
+        // sync-group spans differ, so the plans must not be shared.
+        use crate::device::ComputeModel;
+        let g = nets::alexnet(32 * 8);
+        let s = strategies::model_parallel(&g, 8);
+        let two_by_four = DeviceGraph::p100_cluster(8);
+        let one_by_eight =
+            DeviceGraph::cluster("flat8", 1, 8, 15e9, 3e9, 12e9, ComputeModel::p100());
+        let k1 = PlanKey::of(&CostModel::new(&g, &two_by_four), &s);
+        let k2 = PlanKey::of(&CostModel::new(&g, &one_by_eight), &s);
+        assert_ne!(k1, k2);
+    }
+
+    #[test]
+    fn graph_structure_is_part_of_the_key() {
+        // Same name, same input shape, same degrees — different layer
+        // widths must still be distinguished.
+        use crate::graph::GraphBuilder;
+        let d = DeviceGraph::p100_cluster(2);
+        let build = |cout: usize| {
+            let mut b = GraphBuilder::new("same-name");
+            let x = b.input(8, 3, 16, 16);
+            let c = b.conv2d("c", x, cout, (3, 3), (1, 1), (1, 1));
+            let f = b.fully_connected("fc", c, 10);
+            b.softmax("sm", f);
+            b.finish()
+        };
+        let g1 = build(8);
+        let g2 = build(16);
+        let k1 = PlanKey::of(&CostModel::new(&g1, &d), &strategies::data_parallel(&g1, 2));
+        let k2 = PlanKey::of(&CostModel::new(&g2, &d), &strategies::data_parallel(&g2, 2));
+        assert_ne!(k1, k2);
+    }
+}

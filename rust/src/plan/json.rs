@@ -1,0 +1,378 @@
+//! JSON (de)serialization of execution plans.
+//!
+//! Plans are exchange artifacts: `optcnn plan --out plan.json` exports
+//! them, services can ship them between planner and executor processes,
+//! and the round-trip is exact (`from_json(to_json(p)) == p`). Built on
+//! `util::json` (the offline registry carries no serde).
+
+use std::collections::BTreeMap;
+
+use super::{EdgePlan, ExecutionPlan, LayerPlan, Route, SyncGroup, SyncPlan, Transfer};
+use crate::parallel::PConfig;
+use crate::tensor::Region;
+use crate::util::json::Json;
+
+const VERSION: f64 = 1.0;
+
+impl Route {
+    fn tag(&self) -> &'static str {
+        match self {
+            Route::Local => "local",
+            Route::IntraNode => "intra",
+            Route::InterNode => "inter",
+        }
+    }
+
+    fn from_tag(tag: &str) -> Result<Route, String> {
+        match tag {
+            "local" => Ok(Route::Local),
+            "intra" => Ok(Route::IntraNode),
+            "inter" => Ok(Route::InterNode),
+            other => Err(format!("unknown route `{other}`")),
+        }
+    }
+}
+
+fn region_json(r: &Region) -> Json {
+    Json::Arr(
+        (0..r.rank())
+            .map(|d| Json::Arr(vec![Json::Num(r.start(d) as f64), Json::Num(r.end(d) as f64)]))
+            .collect(),
+    )
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+impl ExecutionPlan {
+    /// Serialize the full plan.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(VERSION)),
+            ("net", Json::Str(self.net.clone())),
+            ("ndev", Json::Num(self.ndev as f64)),
+            ("layers", Json::Arr(self.layers.iter().map(layer_json).collect())),
+            ("edges", Json::Arr(self.edges.iter().map(edge_json).collect())),
+        ])
+    }
+
+    /// Parse a plan serialized by [`ExecutionPlan::to_json`]. Performs
+    /// cross-field index validation so a corrupted or hand-edited plan is
+    /// rejected here instead of panicking deep inside the simulator or
+    /// executor.
+    pub fn from_json(v: &Json) -> Result<ExecutionPlan, String> {
+        let obj = v.as_obj().ok_or("plan: expected object")?;
+        if get_f64(obj, "version")? != VERSION {
+            return Err(format!("plan: unsupported version {:?}", obj.get("version")));
+        }
+        let plan = ExecutionPlan {
+            net: get_str(obj, "net")?.to_string(),
+            ndev: get_usize(obj, "ndev")?,
+            layers: get_arr(obj, "layers")?.iter().map(layer_from).collect::<Result<_, _>>()?,
+            edges: get_arr(obj, "edges")?.iter().map(edge_from).collect::<Result<_, _>>()?,
+        };
+        validate(&plan)?;
+        Ok(plan)
+    }
+}
+
+fn layer_json(l: &LayerPlan) -> Json {
+    let sync = match &l.sync {
+        None => Json::Null,
+        Some(s) => Json::obj(vec![
+            ("shard_bytes", Json::Num(s.shard_bytes)),
+            (
+                "groups",
+                Json::Arr(
+                    s.groups
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("shard", Json::Num(g.shard as f64)),
+                                ("tiles", usize_arr(&g.tiles)),
+                                ("devices", usize_arr(&g.devices)),
+                                ("bytes_per_replica", Json::Num(g.bytes_per_replica)),
+                                ("spans_nodes", Json::Bool(g.spans_nodes)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
+    Json::obj(vec![
+        ("layer", Json::Num(l.layer as f64)),
+        ("cfg", usize_arr(&l.cfg.deg)),
+        ("tiles", Json::Arr(l.tiles.iter().map(region_json).collect())),
+        ("tile_dev", usize_arr(&l.tile_dev)),
+        ("sync", sync),
+    ])
+}
+
+fn edge_json(e: &EdgePlan) -> Json {
+    Json::obj(vec![
+        ("src", Json::Num(e.src as f64)),
+        ("dst", Json::Num(e.dst as f64)),
+        ("in_idx", Json::Num(e.in_idx as f64)),
+        (
+            "needs",
+            Json::Arr(
+                e.needs.iter().map(|n| n.as_ref().map_or(Json::Null, region_json)).collect(),
+            ),
+        ),
+        (
+            "transfers",
+            Json::Arr(
+                e.transfers
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("src_tile", Json::Num(t.src_tile as f64)),
+                            ("dst_tile", Json::Num(t.dst_tile as f64)),
+                            ("src_dev", Json::Num(t.src_dev as f64)),
+                            ("dst_dev", Json::Num(t.dst_dev as f64)),
+                            ("elems", Json::Num(t.elems as f64)),
+                            ("route", Json::Str(t.route.tag().to_string())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Structural invariants every deserialized plan must satisfy before the
+/// simulator/executor may index into it.
+fn validate(plan: &ExecutionPlan) -> Result<(), String> {
+    for (i, l) in plan.layers.iter().enumerate() {
+        if l.layer != i {
+            return Err(format!("plan: layer {i} carries id {}", l.layer));
+        }
+        if l.tiles.len() != l.tile_dev.len() {
+            return Err(format!("plan: layer {i} tiles/tile_dev length mismatch"));
+        }
+        if let Some(&d) = l.tile_dev.iter().find(|&&d| d >= plan.ndev) {
+            return Err(format!("plan: layer {i} places a tile on device {d} >= ndev"));
+        }
+        if let Some(sync) = &l.sync {
+            for g in &sync.groups {
+                if g.tiles.len() != g.devices.len() {
+                    return Err(format!("plan: layer {i} sync group tiles/devices mismatch"));
+                }
+                if g.tiles.iter().any(|&t| t >= l.tiles.len())
+                    || g.devices.iter().any(|&d| d >= plan.ndev)
+                {
+                    return Err(format!("plan: layer {i} sync group indexes out of range"));
+                }
+            }
+        }
+    }
+    for e in &plan.edges {
+        let (Some(src), Some(dst)) = (plan.layers.get(e.src), plan.layers.get(e.dst)) else {
+            return Err(format!("plan: edge ({}, {}) references missing layers", e.src, e.dst));
+        };
+        if e.needs.len() != dst.tiles.len() {
+            return Err(format!("plan: edge ({}, {}) needs/tiles mismatch", e.src, e.dst));
+        }
+        for t in &e.transfers {
+            if t.src_tile >= src.tiles.len()
+                || t.dst_tile >= dst.tiles.len()
+                || t.src_dev >= plan.ndev
+                || t.dst_dev >= plan.ndev
+            {
+                return Err(format!(
+                    "plan: edge ({}, {}) transfer indexes out of range",
+                    e.src, e.dst
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---- parsing helpers ----
+
+type Obj = BTreeMap<String, Json>;
+
+fn get<'a>(obj: &'a Obj, key: &str) -> Result<&'a Json, String> {
+    obj.get(key).ok_or_else(|| format!("plan: missing field `{key}`"))
+}
+
+fn get_f64(obj: &Obj, key: &str) -> Result<f64, String> {
+    get(obj, key)?.as_f64().ok_or_else(|| format!("plan: `{key}` must be a number"))
+}
+
+fn get_usize(obj: &Obj, key: &str) -> Result<usize, String> {
+    get(obj, key)?.as_usize().ok_or_else(|| format!("plan: `{key}` must be an integer"))
+}
+
+fn get_str<'a>(obj: &'a Obj, key: &str) -> Result<&'a str, String> {
+    get(obj, key)?.as_str().ok_or_else(|| format!("plan: `{key}` must be a string"))
+}
+
+fn get_arr<'a>(obj: &'a Obj, key: &str) -> Result<&'a [Json], String> {
+    get(obj, key)?.as_arr().ok_or_else(|| format!("plan: `{key}` must be an array"))
+}
+
+fn as_obj(v: &Json) -> Result<&Obj, String> {
+    v.as_obj().ok_or_else(|| "plan: expected object".to_string())
+}
+
+fn region_from(v: &Json) -> Result<Region, String> {
+    let dims = v.as_arr().ok_or("plan: region must be an array")?;
+    let mut ranges = Vec::with_capacity(dims.len());
+    for d in dims {
+        let pair = d.as_arr().filter(|p| p.len() == 2).ok_or("plan: region dim must be [s, e]")?;
+        let s = pair[0].as_usize().ok_or("plan: region start must be an integer")?;
+        let e = pair[1].as_usize().ok_or("plan: region end must be an integer")?;
+        if s > e {
+            return Err(format!("plan: region start {s} > end {e}"));
+        }
+        ranges.push((s, e));
+    }
+    Ok(Region::new(&ranges))
+}
+
+fn usizes_from(v: &Json) -> Result<Vec<usize>, String> {
+    v.as_arr()
+        .ok_or("plan: expected integer array")?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| "plan: expected integer".to_string()))
+        .collect()
+}
+
+fn layer_from(v: &Json) -> Result<LayerPlan, String> {
+    let obj = as_obj(v)?;
+    let deg = usizes_from(get(obj, "cfg")?)?;
+    if deg.len() != 4 {
+        return Err("plan: cfg must have 4 degrees".to_string());
+    }
+    let sync = match get(obj, "sync")? {
+        Json::Null => None,
+        s => {
+            let so = as_obj(s)?;
+            let groups = get_arr(so, "groups")?
+                .iter()
+                .map(|g| {
+                    let go = as_obj(g)?;
+                    Ok(SyncGroup {
+                        shard: get_usize(go, "shard")?,
+                        tiles: usizes_from(get(go, "tiles")?)?,
+                        devices: usizes_from(get(go, "devices")?)?,
+                        bytes_per_replica: get_f64(go, "bytes_per_replica")?,
+                        spans_nodes: match get(go, "spans_nodes")? {
+                            Json::Bool(b) => *b,
+                            _ => return Err("plan: spans_nodes must be a bool".to_string()),
+                        },
+                    })
+                })
+                .collect::<Result<_, String>>()?;
+            Some(SyncPlan { shard_bytes: get_f64(so, "shard_bytes")?, groups })
+        }
+    };
+    Ok(LayerPlan {
+        layer: get_usize(obj, "layer")?,
+        cfg: PConfig::new(deg[0], deg[1], deg[2], deg[3]),
+        tiles: get_arr(obj, "tiles")?.iter().map(region_from).collect::<Result<_, _>>()?,
+        tile_dev: usizes_from(get(obj, "tile_dev")?)?,
+        sync,
+    })
+}
+
+fn edge_from(v: &Json) -> Result<EdgePlan, String> {
+    let obj = as_obj(v)?;
+    let needs = get_arr(obj, "needs")?
+        .iter()
+        .map(|n| match n {
+            Json::Null => Ok(None),
+            r => region_from(r).map(Some),
+        })
+        .collect::<Result<_, String>>()?;
+    let transfers = get_arr(obj, "transfers")?
+        .iter()
+        .map(|t| {
+            let to = as_obj(t)?;
+            Ok(Transfer {
+                src_tile: get_usize(to, "src_tile")?,
+                dst_tile: get_usize(to, "dst_tile")?,
+                src_dev: get_usize(to, "src_dev")?,
+                dst_dev: get_usize(to, "dst_dev")?,
+                elems: get_usize(to, "elems")? as u64,
+                route: Route::from_tag(get_str(to, "route")?)?,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+    Ok(EdgePlan {
+        src: get_usize(obj, "src")?,
+        dst: get_usize(obj, "dst")?,
+        in_idx: get_usize(obj, "in_idx")?,
+        needs,
+        transfers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+    use crate::optimizer::strategies;
+
+    fn roundtrip(net: &str, ndev: usize, strat: &str) {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::by_name(strat, &g, ndev).unwrap();
+        let plan = ExecutionPlan::build(&cm, &s);
+        let text = plan.to_json().to_string();
+        let back = ExecutionPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan, "{net}@{ndev}/{strat} round-trip");
+    }
+
+    #[test]
+    fn roundtrip_chain_and_branchy_nets() {
+        roundtrip("lenet5", 2, "data");
+        roundtrip("alexnet", 4, "owt");
+        roundtrip("inception_v3", 2, "model");
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(ExecutionPlan::from_json(&Json::Null).is_err());
+        assert!(ExecutionPlan::from_json(&Json::parse(r#"{"version":1}"#).unwrap()).is_err());
+        let wrong_version =
+            r#"{"version":99,"net":"x","ndev":1,"layers":[],"edges":[]}"#;
+        assert!(ExecutionPlan::from_json(&Json::parse(wrong_version).unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_indices() {
+        let g = nets::lenet5(32);
+        let d = DeviceGraph::p100_cluster(2);
+        let cm = CostModel::new(&g, &d);
+        let plan = ExecutionPlan::build(&cm, &strategies::data_parallel(&g, 2));
+        // corrupt a device index beyond ndev and re-parse
+        let mut bad = plan.clone();
+        bad.layers[1].tile_dev[0] = 99;
+        let err = ExecutionPlan::from_json(&Json::parse(&bad.to_json().to_string()).unwrap());
+        assert!(err.is_err(), "device index out of range must be rejected");
+        // corrupt a transfer's tile index
+        let mut bad = plan;
+        if let Some(e) = bad.edges.iter_mut().find(|e| !e.transfers.is_empty()) {
+            e.transfers[0].dst_tile = 1_000;
+            let err =
+                ExecutionPlan::from_json(&Json::parse(&bad.to_json().to_string()).unwrap());
+            assert!(err.is_err(), "transfer index out of range must be rejected");
+        }
+    }
+
+    #[test]
+    fn route_tags_roundtrip() {
+        for r in [Route::Local, Route::IntraNode, Route::InterNode] {
+            assert_eq!(Route::from_tag(r.tag()).unwrap(), r);
+        }
+        assert!(Route::from_tag("bogus").is_err());
+    }
+}

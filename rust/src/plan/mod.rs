@@ -1,0 +1,425 @@
+//! Materialized execution plans — the shared IR between cost evaluation,
+//! simulation, and execution.
+//!
+//! A parallelization [`Strategy`](crate::parallel::Strategy) only names a
+//! configuration per layer; its *consequences* — output tiles, tile →
+//! device placement, per-edge transfer schedules (which src-tile overlaps
+//! which dst-tile's input region, how many bytes, over which route), and
+//! parameter-sync shard groups — used to be re-derived independently by
+//! the cost tables, the discrete-event simulator, and the partitioned
+//! executor. An [`ExecutionPlan`] materializes all of it **once** per
+//! (graph, strategy, devices) triple:
+//!
+//! * [`sim`](crate::sim) expands its task DAG straight from the plan
+//!   (`simulate_plan`), so repeated simulation queries skip all tiling /
+//!   region / overlap math;
+//! * [`exec`](crate::exec) drives leader-side scatter / halo / gather from
+//!   the same plan and reports the plan's scheduled byte totals;
+//! * [`cost::tables`](crate::cost::tables) evaluates `t_X` with the same
+//!   flattened-region overlap kernel ([`overlap`]).
+//!
+//! Plans serialize to JSON (`to_json` / `from_json`) and are cached by a
+//! [`PlanCache`] keyed on (net, strategy, device count), which makes them
+//! servable artifacts rather than transient in-memory derivations — the
+//! property PaSE-style systems rely on to answer many planning queries
+//! fast (DESIGN.md §3).
+
+pub mod cache;
+mod json;
+pub mod overlap;
+
+pub use cache::{PlanCache, PlanKey};
+
+use crate::cost::{shard_of_tile, CostModel};
+use crate::graph::LayerId;
+use crate::metrics::CommBreakdown;
+use crate::parallel::{input_region, output_tiles, param_sharding, PConfig, Strategy};
+use crate::tensor::Region;
+
+/// How a transfer travels between devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Route {
+    /// Producer and consumer tile share a device: a dependency, no bytes
+    /// on any wire.
+    Local,
+    /// Intra-node point-to-point link (NVLink-class).
+    IntraNode,
+    /// Crosses a node boundary (NIC-class).
+    InterNode,
+}
+
+/// One scheduled tile-to-tile movement on a graph edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    /// Producer tile index (== producer device under contiguous placement).
+    pub src_tile: usize,
+    /// Consumer tile index.
+    pub dst_tile: usize,
+    pub src_dev: usize,
+    pub dst_dev: usize,
+    /// Overlap volume in elements (f32); bytes = `elems * 4`.
+    pub elems: u64,
+    pub route: Route,
+}
+
+impl Transfer {
+    /// Bytes moved (0 only for degenerate overlaps; local transfers still
+    /// carry their overlap bytes — they are free, not empty).
+    pub fn bytes(&self) -> f64 {
+        self.elems as f64 * 4.0
+    }
+
+    pub fn is_remote(&self) -> bool {
+        self.route != Route::Local
+    }
+}
+
+/// The transfer schedule of one graph edge under the plan's strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgePlan {
+    pub src: LayerId,
+    pub dst: LayerId,
+    /// Which input slot of `dst` this edge feeds.
+    pub in_idx: usize,
+    /// Input region each dst tile needs from the producer's output
+    /// (producer coordinates); `None` when the tile consumes nothing from
+    /// this input (possible for `Concat`).
+    pub needs: Vec<Option<Region>>,
+    /// All overlapping (dst tile, src tile) pairs in (dst-major, src-minor)
+    /// order — the canonical expansion order shared with the simulator.
+    pub transfers: Vec<Transfer>,
+}
+
+impl EdgePlan {
+    /// Bytes that actually cross a link on this edge.
+    pub fn remote_bytes(&self) -> f64 {
+        self.transfers.iter().filter(|t| t.is_remote()).map(Transfer::bytes).sum()
+    }
+}
+
+/// One replica group of a parameter shard: the devices holding copies of
+/// the same channel shard, which must exchange gradients/updates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncGroup {
+    /// Channel-shard index.
+    pub shard: usize,
+    /// Tile indices computing this shard (one per replica).
+    pub tiles: Vec<usize>,
+    /// Devices of those tiles, aligned with `tiles`.
+    pub devices: Vec<usize>,
+    /// Bytes each replica moves over its uplink per step
+    /// (`2 · shard_bytes · (R-1)/R`, the sharded-PS exchange).
+    pub bytes_per_replica: f64,
+    /// Whether the group spans compute nodes (NIC vs host link).
+    pub spans_nodes: bool,
+}
+
+impl SyncGroup {
+    pub fn bytes(&self) -> f64 {
+        self.bytes_per_replica * self.devices.len() as f64
+    }
+}
+
+/// Parameter synchronization schedule of one layer (present only when the
+/// layer has parameters replicated across >1 device).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncPlan {
+    /// Bytes per channel shard.
+    pub shard_bytes: f64,
+    /// One group per channel shard, in shard order.
+    pub groups: Vec<SyncGroup>,
+}
+
+impl SyncPlan {
+    pub fn bytes(&self) -> f64 {
+        self.groups.iter().map(SyncGroup::bytes).sum()
+    }
+}
+
+/// A layer's materialized partitioning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub layer: LayerId,
+    pub cfg: PConfig,
+    /// Output tiles in row-major tile order (tile index == placement slot).
+    pub tiles: Vec<Region>,
+    /// Device running each tile, aligned with `tiles`.
+    pub tile_dev: Vec<usize>,
+    pub sync: Option<SyncPlan>,
+}
+
+/// The fully materialized consequences of one strategy on one cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    /// Network name (graph identity half of the cache key).
+    pub net: String,
+    /// Device count the plan was laid out for.
+    pub ndev: usize,
+    /// One entry per layer, in layer-id order.
+    pub layers: Vec<LayerPlan>,
+    /// One entry per graph edge, in graph edge order.
+    pub edges: Vec<EdgePlan>,
+}
+
+impl ExecutionPlan {
+    /// Materialize `strategy` on `cm`'s (graph, devices) pair: tiles,
+    /// placements, transfer schedules, and sync groups, computed once.
+    pub fn build(cm: &CostModel<'_>, strategy: &Strategy) -> ExecutionPlan {
+        let g = cm.graph;
+        let devices = cm.devices;
+        assert_eq!(
+            strategy.configs.len(),
+            g.num_layers(),
+            "strategy/graph size mismatch"
+        );
+
+        let layers: Vec<LayerPlan> = g
+            .layers
+            .iter()
+            .map(|l| {
+                let cfg = *strategy.config(l.id);
+                let tiles = output_tiles(&l.out_shape, &cfg);
+                let tile_dev: Vec<usize> = (0..tiles.len()).map(|t| cm.dev_of(t)).collect();
+                let sync = if l.has_params() {
+                    let sh = param_sharding(l, &cfg);
+                    if sh.replicas > 1 {
+                        let groups = (0..sh.shards)
+                            .map(|shard| {
+                                let shard_tiles: Vec<usize> = (0..cfg.total())
+                                    .filter(|&t| shard_of_tile(&cfg, t) == shard)
+                                    .collect();
+                                let devs: Vec<usize> =
+                                    shard_tiles.iter().map(|&t| tile_dev[t]).collect();
+                                let r = devs.len() as f64;
+                                let node = devices.devices[devs[0]].node;
+                                let spans_nodes =
+                                    devs.iter().any(|&d| devices.devices[d].node != node);
+                                SyncGroup {
+                                    shard,
+                                    tiles: shard_tiles,
+                                    devices: devs,
+                                    bytes_per_replica: 2.0 * sh.shard_bytes * (r - 1.0) / r,
+                                    spans_nodes,
+                                }
+                            })
+                            .collect();
+                        Some(SyncPlan { shard_bytes: sh.shard_bytes, groups })
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                };
+                LayerPlan { layer: l.id, cfg, tiles, tile_dev, sync }
+            })
+            .collect();
+
+        let edges: Vec<EdgePlan> = g
+            .edges
+            .iter()
+            .map(|&(s, d)| {
+                let in_idx = cm.edge_in_idx(s, d);
+                let ld = g.layer(d);
+                let (sp, dp) = (&layers[s], &layers[d]);
+                let src_flat: Vec<overlap::FlatRegion> =
+                    sp.tiles.iter().map(overlap::flatten).collect();
+                let mut needs = Vec::with_capacity(dp.tiles.len());
+                let mut transfers = Vec::new();
+                for (m, dtile) in dp.tiles.iter().enumerate() {
+                    let need = input_region(ld, in_idx, dtile);
+                    if let Some(need) = &need {
+                        let need_flat = overlap::flatten(need);
+                        let dst_dev = dp.tile_dev[m];
+                        for (k, stile) in src_flat.iter().enumerate() {
+                            let elems = overlap::overlap_elems(&need_flat, stile);
+                            if elems == 0 {
+                                continue;
+                            }
+                            let src_dev = sp.tile_dev[k];
+                            let route = if src_dev == dst_dev {
+                                Route::Local
+                            } else if devices.same_node(src_dev, dst_dev) {
+                                Route::IntraNode
+                            } else {
+                                Route::InterNode
+                            };
+                            transfers.push(Transfer {
+                                src_tile: k,
+                                dst_tile: m,
+                                src_dev,
+                                dst_dev,
+                                elems,
+                                route,
+                            });
+                        }
+                    }
+                    needs.push(need);
+                }
+                EdgePlan { src: s, dst: d, in_idx, needs, transfers }
+            })
+            .collect();
+
+        ExecutionPlan { net: g.name.clone(), ndev: devices.num_devices(), layers, edges }
+    }
+
+    pub fn layer(&self, id: LayerId) -> &LayerPlan {
+        &self.layers[id]
+    }
+
+    /// The edge plan feeding `dst` (first in edge order) — the common
+    /// lookup for chain graphs, where every layer has at most one input.
+    pub fn edge_into(&self, dst: LayerId) -> Option<&EdgePlan> {
+        self.edges.iter().find(|e| e.dst == dst)
+    }
+
+    /// Bytes crossing links for tensor repartitioning per step (the `t_X`
+    /// traffic). Local overlaps are free and excluded.
+    pub fn xfer_bytes(&self) -> f64 {
+        self.edges.iter().map(EdgePlan::remote_bytes).sum()
+    }
+
+    /// Bytes moved for parameter synchronization per step (the `t_S`
+    /// traffic).
+    pub fn sync_bytes(&self) -> f64 {
+        self.layers.iter().filter_map(|l| l.sync.as_ref()).map(SyncPlan::bytes).sum()
+    }
+
+    /// Number of scheduled remote transfers per step.
+    pub fn num_transfers(&self) -> usize {
+        self.edges.iter().map(|e| e.transfers.iter().filter(|t| t.is_remote()).count()).sum()
+    }
+
+    /// Per-step communication volume, in the shared metrics shape.
+    pub fn comm(&self) -> CommBreakdown {
+        CommBreakdown { xfer_bytes: self.xfer_bytes(), sync_bytes: self.sync_bytes() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+    use crate::optimizer::strategies;
+
+    fn plan_for(net: &str, ndev: usize, strat: &str) -> ExecutionPlan {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::by_name(strat, &g, ndev).unwrap();
+        ExecutionPlan::build(&cm, &s)
+    }
+
+    #[test]
+    fn layer_plans_cover_all_tiles() {
+        let p = plan_for("lenet5", 4, "data");
+        let g = nets::lenet5(32 * 4);
+        for (lp, l) in p.layers.iter().zip(g.layers.iter()) {
+            assert_eq!(lp.layer, l.id);
+            assert_eq!(lp.tiles.len(), lp.cfg.total());
+            assert_eq!(lp.tiles.len(), lp.tile_dev.len());
+            let vol: usize = lp.tiles.iter().map(|t| t.volume()).sum();
+            assert_eq!(vol, l.out_shape.iter().product::<usize>());
+        }
+        assert_eq!(p.edges.len(), g.num_edges());
+    }
+
+    #[test]
+    fn xfer_bytes_match_cost_model_accounting() {
+        for (net, ndev, strat) in
+            [("lenet5", 2, "owt"), ("alexnet", 4, "model"), ("vgg16", 4, "owt")]
+        {
+            let g = nets::by_name(net, 32 * ndev).unwrap();
+            let d = DeviceGraph::p100_cluster(ndev);
+            let cm = CostModel::new(&g, &d);
+            let s = strategies::by_name(strat, &g, ndev).unwrap();
+            let p = ExecutionPlan::build(&cm, &s);
+            let expect: f64 = g
+                .edges
+                .iter()
+                .map(|&(a, b)| {
+                    cm.x_bytes(
+                        g.layer(a),
+                        g.layer(b),
+                        cm.edge_in_idx(a, b),
+                        s.config(a),
+                        s.config(b),
+                    )
+                })
+                .sum();
+            let got = p.xfer_bytes();
+            assert!(
+                (got - expect).abs() <= 1e-6 * expect.max(1.0),
+                "{net}: plan {got} vs cost model {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn sync_bytes_match_cost_model_accounting() {
+        for (net, ndev) in [("lenet5", 2), ("alexnet", 4), ("vgg16", 4)] {
+            let g = nets::by_name(net, 32 * ndev).unwrap();
+            let d = DeviceGraph::p100_cluster(ndev);
+            let cm = CostModel::new(&g, &d);
+            let s = strategies::data_parallel(&g, ndev);
+            let p = ExecutionPlan::build(&cm, &s);
+            let expect: f64 = g.layers.iter().map(|l| cm.s_bytes(l, s.config(l.id))).sum();
+            let got = p.sync_bytes();
+            assert!(
+                (got - expect).abs() <= 1e-6 * expect.max(1.0),
+                "{net}: plan {got} vs cost model {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn matching_configs_produce_no_remote_transfers() {
+        // Data parallelism on a chain: every consumer tile's input region
+        // is its own sample range — all overlaps are local.
+        let p = plan_for("vgg16", 4, "data");
+        assert_eq!(p.xfer_bytes(), 0.0);
+        assert_eq!(p.num_transfers(), 0);
+        // ... but local dependencies are still scheduled.
+        assert!(p.edges.iter().any(|e| !e.transfers.is_empty()));
+    }
+
+    #[test]
+    fn routes_distinguish_intra_and_inter_node() {
+        // 8 devices = 2 nodes of 4; model parallelism forces all-gathers
+        // whose transfers cross both link classes.
+        let p = plan_for("alexnet", 8, "model");
+        let routes: std::collections::HashSet<Route> = p
+            .edges
+            .iter()
+            .flat_map(|e| e.transfers.iter().map(|t| t.route))
+            .collect();
+        assert!(routes.contains(&Route::IntraNode), "expected intra-node transfers");
+        assert!(routes.contains(&Route::InterNode), "expected inter-node transfers");
+    }
+
+    #[test]
+    fn sync_groups_partition_tiles() {
+        let p = plan_for("lenet5", 4, "data");
+        let g = nets::lenet5(32 * 4);
+        for (lp, l) in p.layers.iter().zip(g.layers.iter()) {
+            let Some(sync) = &lp.sync else { continue };
+            assert!(l.has_params());
+            let mut all: Vec<usize> =
+                sync.groups.iter().flat_map(|grp| grp.tiles.iter().copied()).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..lp.cfg.total()).collect::<Vec<_>>());
+            for grp in &sync.groups {
+                assert_eq!(grp.tiles.len(), grp.devices.len());
+                assert!(grp.bytes_per_replica > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn single_device_plan_is_quiet() {
+        let p = plan_for("lenet5", 1, "data");
+        assert_eq!(p.xfer_bytes(), 0.0);
+        assert_eq!(p.sync_bytes(), 0.0);
+        assert_eq!(p.num_transfers(), 0);
+    }
+}

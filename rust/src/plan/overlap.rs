@@ -1,0 +1,73 @@
+//! The region-overlap kernel shared by plan construction and cost-table
+//! evaluation.
+//!
+//! Regions are flattened to fixed-size `[(start, end); 4]` arrays so the
+//! innermost (dst-tile, src-tile) loops — the hottest code in the library
+//! — run without allocation or rank branching. Missing trailing dimensions
+//! are padded with the unit range `(0, 1)`, which is overlap-neutral, so
+//! 2-D (FC) and 4-D (conv) regions compose freely.
+
+use crate::tensor::Region;
+
+/// A rank-≤4 region flattened to a fixed array of half-open ranges.
+pub type FlatRegion = [(u32, u32); 4];
+
+/// Flatten a [`Region`] (rank ≤ 4) into a [`FlatRegion`].
+#[inline]
+pub fn flatten(r: &Region) -> FlatRegion {
+    debug_assert!(r.rank() <= 4, "FlatRegion supports rank <= 4");
+    let mut a = [(0u32, 1u32); 4];
+    for dim in 0..r.rank() {
+        a[dim] = (r.start(dim) as u32, r.end(dim) as u32);
+    }
+    a
+}
+
+/// Number of index points in the intersection of two flat regions
+/// (0 when disjoint). Equals `Region::overlap_volume` on the originals.
+#[inline]
+pub fn overlap_elems(a: &FlatRegion, b: &FlatRegion) -> u64 {
+    let mut v = 1u64;
+    for dim in 0..4 {
+        let lo = a[dim].0.max(b[dim].0);
+        let hi = a[dim].1.min(b[dim].1);
+        if lo >= hi {
+            return 0;
+        }
+        v *= (hi - lo) as u64;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_region_overlap_volume() {
+        let a = Region::new(&[(0, 4), (2, 8), (0, 3), (1, 5)]);
+        let b = Region::new(&[(2, 6), (0, 4), (1, 3), (0, 2)]);
+        assert_eq!(
+            overlap_elems(&flatten(&a), &flatten(&b)),
+            a.overlap_volume(&b) as u64
+        );
+    }
+
+    #[test]
+    fn rank2_pads_with_unit_ranges() {
+        let a = Region::new(&[(0, 8), (0, 10)]);
+        let b = Region::new(&[(4, 12), (5, 10)]);
+        assert_eq!(
+            overlap_elems(&flatten(&a), &flatten(&b)),
+            a.overlap_volume(&b) as u64
+        );
+        assert_eq!(overlap_elems(&flatten(&a), &flatten(&b)), 20);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        let a = flatten(&Region::new(&[(0, 2), (0, 2)]));
+        let b = flatten(&Region::new(&[(2, 4), (0, 2)]));
+        assert_eq!(overlap_elems(&a, &b), 0);
+    }
+}

@@ -9,14 +9,29 @@
 //! [`Engine`] owns a PJRT client plus a lazily-populated executable cache
 //! and is deliberately `!Send` (the client is `Rc`-based) — the
 //! partitioned executor creates one `Engine` per worker thread.
+//!
+//! The PJRT engine is gated behind the `pjrt` cargo feature (the `xla`
+//! bindings crate is not in the offline registry); the default build
+//! ships a stub [`Engine`] with the same API that errors at construction,
+//! so the rest of the system — cost model, optimizer, simulator, plans —
+//! builds and tests with zero external native dependencies (DESIGN.md §5).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use crate::tensor::Tensor;
 use crate::util::json::Json;
+
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+
+#[cfg(not(feature = "pjrt"))]
+mod engine_stub;
+#[cfg(not(feature = "pjrt"))]
+pub use engine_stub::Engine;
 
 /// Parsed `artifacts/manifest.json`: artifact keys -> files and shapes.
 #[derive(Debug, Clone)]
@@ -100,111 +115,13 @@ impl ArtifactStore {
         self.entries.is_empty()
     }
 
-    fn path_of(&self, key: &str) -> Result<PathBuf> {
+    /// Absolute path of the artifact file backing `key`.
+    pub fn path_of(&self, key: &str) -> Result<PathBuf> {
         let meta = self
             .entries
             .get(key)
             .ok_or_else(|| anyhow!("artifact `{key}` not in manifest (re-run `make artifacts`)"))?;
         Ok(self.dir.join(&meta.file))
-    }
-}
-
-/// A PJRT execution engine: one CPU client + compiled-executable cache.
-/// One per worker thread (the client is reference-counted, not `Send`).
-pub struct Engine {
-    client: xla::PjRtClient,
-    store: ArtifactStore,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Executions performed (for metrics/tests).
-    pub executions: u64,
-}
-
-impl Engine {
-    pub fn new(store: ArtifactStore) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, store, cache: HashMap::new(), executions: 0 })
-    }
-
-    pub fn store(&self) -> &ArtifactStore {
-        &self.store
-    }
-
-    /// Compile (or fetch from cache) the artifact for `key`.
-    fn executable(&mut self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(key) {
-            let path = self.store.path_of(key)?;
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact `{key}`"))?;
-            self.cache.insert(key.to_string(), exe);
-        }
-        Ok(&self.cache[key])
-    }
-
-    /// Execute artifact `key` on `inputs`, returning the output tensors
-    /// (the artifact's return tuple, flattened).
-    pub fn run(&mut self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let meta = self
-            .store
-            .meta(key)
-            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest"))?;
-        if meta.inputs.len() != inputs.len() {
-            bail!(
-                "artifact `{key}` expects {} inputs, got {}",
-                meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, expect)) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
-            if t.shape() != expect.as_slice() {
-                bail!(
-                    "artifact `{key}` input {i}: shape {:?} != manifest {:?}",
-                    t.shape(),
-                    expect
-                );
-            }
-        }
-        let out_shapes = meta.outputs.clone();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let lit = xla::Literal::vec1(t.data());
-                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).context("reshaping input literal")
-            })
-            .collect::<Result<_>>()?;
-        let exe = self.executable(key)?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing `{key}`"))?;
-        self.executions += 1;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching `{key}` result"))?;
-        let parts = tuple.to_tuple().with_context(|| format!("untupling `{key}` result"))?;
-        let mut out = Vec::with_capacity(parts.len());
-        for (i, lit) in parts.into_iter().enumerate() {
-            let data = lit.to_vec::<f32>().context("reading output literal")?;
-            // prefer manifest shapes; fall back to the literal's own shape
-            let shape: Vec<usize> = match out_shapes.get(i) {
-                Some(s) => s.clone(),
-                None => lit
-                    .array_shape()
-                    .map(|s| s.dims().iter().map(|&d| d as usize).collect())
-                    .unwrap_or_else(|_| vec![data.len()]),
-            };
-            out.push(Tensor::from_vec(&shape, data));
-        }
-        Ok(out)
-    }
-
-    /// Number of artifacts compiled so far.
-    pub fn compiled(&self) -> usize {
-        self.cache.len()
     }
 }
 

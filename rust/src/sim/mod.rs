@@ -11,6 +11,13 @@
 //!
 //! Table 4's analogue compares Eq. 1 estimates against these simulated
 //! step times; Figure 7's throughput numbers come from here.
+//!
+//! The task DAG is expanded from a materialized [`ExecutionPlan`] — the
+//! simulator no longer recomputes tiles, input regions, or overlaps
+//! itself. The `simulate_plan*` entry points accept a prebuilt (typically
+//! cached) plan so repeated simulation queries pay only for scheduling;
+//! the legacy `(graph, devices, strategy)` entry points build the plan
+//! internally.
 
 pub mod trace;
 
@@ -20,7 +27,8 @@ use std::collections::{BinaryHeap, HashMap};
 use crate::cost::CostModel;
 use crate::device::DeviceGraph;
 use crate::graph::{CompGraph, OpKind};
-use crate::parallel::{input_region, output_tiles, param_sharding, Strategy};
+use crate::parallel::Strategy;
+use crate::plan::ExecutionPlan;
 
 /// Simulation outcome for one training step.
 #[derive(Debug, Clone)]
@@ -100,6 +108,37 @@ pub fn simulate(
     simulate_steps(graph, devices, strategy, cm, 1)
 }
 
+/// Simulate one training step from a prebuilt [`ExecutionPlan`] (the
+/// cached-plan fast path: no tile/region/overlap recomputation).
+pub fn simulate_plan(plan: &ExecutionPlan, cm: &CostModel) -> SimReport {
+    simulate_plan_steps(plan, cm, 1)
+}
+
+/// Simulate `steps` chained steps from a prebuilt plan.
+pub fn simulate_plan_steps(plan: &ExecutionPlan, cm: &CostModel, steps: usize) -> SimReport {
+    simulate_steps_inner(plan, cm.graph, cm.devices, cm, steps, None)
+}
+
+/// [`steady_state_step`] from a prebuilt plan: the plan is expanded for
+/// the 1-step and 3-step chains without being re-derived.
+pub fn steady_state_step_plan(plan: &ExecutionPlan, cm: &CostModel) -> SimReport {
+    steady_state_inner(plan, cm.graph, cm.devices, cm)
+}
+
+/// Marginal per-step time from 1-step and 3-step chains of one plan.
+fn steady_state_inner(
+    plan: &ExecutionPlan,
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    cm: &CostModel,
+) -> SimReport {
+    let one = simulate_steps_inner(plan, graph, devices, cm, 1, None);
+    let three = simulate_steps_inner(plan, graph, devices, cm, 3, None);
+    let mut rep = one;
+    rep.step_time = (three.step_time - rep.step_time) / 2.0;
+    rep
+}
+
 /// Steady-state per-step time: simulate one and three chained steps and
 /// report the marginal cost of the additional steps. Chaining puts
 /// parameter synchronization on the inter-step critical path (a layer's
@@ -111,11 +150,8 @@ pub fn steady_state_step(
     strategy: &Strategy,
     cm: &CostModel,
 ) -> SimReport {
-    let one = simulate_steps(graph, devices, strategy, cm, 1);
-    let three = simulate_steps(graph, devices, strategy, cm, 3);
-    let mut rep = one;
-    rep.step_time = (three.step_time - rep.step_time) / 2.0;
-    rep
+    let plan = ExecutionPlan::build(cm, strategy);
+    steady_state_inner(&plan, graph, devices, cm)
 }
 
 /// Simulate `steps` chained training steps; `step_time` is the makespan
@@ -127,7 +163,8 @@ pub fn simulate_steps(
     cm: &CostModel,
     steps: usize,
 ) -> SimReport {
-    simulate_steps_inner(graph, devices, strategy, cm, steps, None)
+    let plan = ExecutionPlan::build(cm, strategy);
+    simulate_steps_inner(&plan, graph, devices, cm, steps, None)
 }
 
 /// Trace-producing variant of [`simulate`]: one step, with every scheduled
@@ -138,20 +175,36 @@ pub(crate) fn simulate_traced(
     strategy: &Strategy,
     cm: &CostModel,
 ) -> Vec<trace::TraceEvent> {
+    let plan = ExecutionPlan::build(cm, strategy);
     let mut events = Vec::new();
-    simulate_steps_inner(graph, devices, strategy, cm, 1, Some(&mut events));
+    simulate_steps_inner(&plan, graph, devices, cm, 1, Some(&mut events));
     events
 }
 
+/// Expand the plan's tiles/transfers/sync groups into `steps` chained
+/// task DAGs and list-schedule them. The plan supplies all geometry and
+/// byte counts; `cm` supplies per-tile compute durations only.
 fn simulate_steps_inner(
+    plan: &ExecutionPlan,
     graph: &CompGraph,
     devices: &DeviceGraph,
-    strategy: &Strategy,
     cm: &CostModel,
     steps: usize,
     trace_out: Option<&mut Vec<trace::TraceEvent>>,
 ) -> SimReport {
     assert!(steps >= 1);
+    assert_eq!(plan.layers.len(), graph.num_layers(), "plan built for a different graph");
+    // Plans carry device indices and routes; a plan exported from one
+    // cluster must not be scheduled on a differently-sized one (routes
+    // for an equally-sized but differently-noded cluster are caught by
+    // `PlanCache`'s key, not here).
+    assert_eq!(
+        plan.ndev,
+        devices.num_devices(),
+        "plan built for a {}-device cluster, simulating on {}",
+        plan.ndev,
+        devices.num_devices()
+    );
     let mut tasks: Vec<Task> = Vec::new();
     let mut num_transfers = 0usize;
     // sync task ids of the previous step, per layer
@@ -169,15 +222,14 @@ fn simulate_steps_inner(
         let mut compute_id: Vec<Vec<usize>> = Vec::with_capacity(graph.num_layers());
         let mut this_compute: Vec<usize> = Vec::new();
         for l in &graph.layers {
-            let cfg = strategy.config(l.id);
-            let per_tile = cm.t_c(l, cfg);
-            let ntiles = cfg.total();
-            let mut ids = Vec::with_capacity(ntiles);
-            for t in 0..ntiles {
+            let lp = plan.layer(l.id);
+            let per_tile = cm.t_c(l, &lp.cfg);
+            let mut ids = Vec::with_capacity(lp.tiles.len());
+            for t in 0..lp.tiles.len() {
                 ids.push(tasks.len());
                 tasks.push(Task {
                     duration: if matches!(l.op, OpKind::Input) { 0.0 } else { per_tile },
-                    resources: [Some(Resource::Compute(cm.dev_of(t))), None],
+                    resources: [Some(Resource::Compute(lp.tile_dev[t])), None],
                     deps: 0,
                     dependents: Vec::new(),
                     bytes: 0.0,
@@ -207,76 +259,48 @@ fn simulate_steps_inner(
         }
         prev_compute = this_compute;
 
-        // --- transfer tasks per edge ---
-        for &(s, d) in &graph.edges {
-            let (ls, ld) = (graph.layer(s), graph.layer(d));
-            let in_idx = cm.edge_in_idx(s, d);
-            let (cs, cd) = (strategy.config(s), strategy.config(d));
-            let src_tiles = output_tiles(&ls.out_shape, cs);
-            let dst_tiles = output_tiles(&ld.out_shape, cd);
-            for (m, dtile) in dst_tiles.iter().enumerate() {
-                let Some(need) = input_region(ld, in_idx, dtile) else { continue };
-                for (k, stile) in src_tiles.iter().enumerate() {
-                    let overlap = need.overlap_volume(stile);
-                    if overlap == 0 {
-                        continue;
-                    }
-                    let (src_dev, dst_dev) = (cm.dev_of(k), cm.dev_of(m));
-                    if src_dev == dst_dev {
-                        // local: direct dependency, no transfer
-                        add_dep(&mut tasks, compute_id[s][k], compute_id[d][m]);
-                        continue;
-                    }
-                    let bytes = overlap as f64 * 4.0;
-                    let (dur, res) = transfer_resources(devices, src_dev, dst_dev, bytes);
-                    let id = tasks.len();
-                    tasks.push(Task {
-                        duration: dur,
-                        resources: res,
-                        deps: 0,
-                        dependents: Vec::new(),
-                        bytes,
-                        is_sync: false,
-                        tag: Tag::Transfer { src: src_dev, dst: dst_dev },
-                    });
-                    add_dep(&mut tasks, compute_id[s][k], id);
-                    add_dep(&mut tasks, id, compute_id[d][m]);
-                    num_transfers += 1;
+        // --- transfer tasks per edge, straight from the plan's schedule ---
+        for ep in &plan.edges {
+            for tr in &ep.transfers {
+                let from = compute_id[ep.src][tr.src_tile];
+                let to = compute_id[ep.dst][tr.dst_tile];
+                if !tr.is_remote() {
+                    // local: direct dependency, no transfer
+                    add_dep(&mut tasks, from, to);
+                    continue;
                 }
+                let bytes = tr.bytes();
+                let (dur, res) = transfer_resources(devices, tr.src_dev, tr.dst_dev, bytes);
+                let id = tasks.len();
+                tasks.push(Task {
+                    duration: dur,
+                    resources: res,
+                    deps: 0,
+                    dependents: Vec::new(),
+                    bytes,
+                    is_sync: false,
+                    tag: Tag::Transfer { src: tr.src_dev, dst: tr.dst_dev },
+                });
+                add_dep(&mut tasks, from, id);
+                add_dep(&mut tasks, id, to);
+                num_transfers += 1;
             }
         }
 
-        // --- parameter-sync tasks ---
+        // --- parameter-sync tasks from the plan's shard groups ---
+        // Sharded-PS / allreduce-style exchange (matches CostModel::t_s):
+        // each replica moves 2 * shard_bytes * (R-1)/R over its own
+        // uplink; same-node groups ride the host link, cross-node groups
+        // contend on their node's NIC.
         for l in &graph.layers {
             prev_sync[l.id].clear();
-            if !l.has_params() {
-                continue;
-            }
-            let cfg = strategy.config(l.id);
-            let sh = param_sharding(l, cfg);
-            if sh.replicas <= 1 {
-                continue;
-            }
-            for shard in 0..sh.shards {
-                let tiles_of_shard: Vec<usize> = (0..cfg.total())
-                    .filter(|&t| crate::cost::shard_of_tile(cfg, t) == shard)
-                    .collect();
-                let replicas: Vec<usize> =
-                    tiles_of_shard.iter().map(|&t| cm.dev_of(t)).collect();
-                // Sharded-PS / allreduce-style exchange (matches
-                // CostModel::t_s): each replica moves
-                // 2 * shard_bytes * (R-1)/R over its own uplink;
-                // same-node groups ride the host link, cross-node groups
-                // contend on their node's NIC.
-                let r = replicas.len() as f64;
-                let group_node = devices.devices[replicas[0]].node;
-                let spans_nodes =
-                    replicas.iter().any(|&dd| devices.devices[dd].node != group_node);
-                for (ri, &dev) in replicas.iter().enumerate() {
-                    let tile = tiles_of_shard[ri];
-                    let bytes = 2.0 * sh.shard_bytes * (r - 1.0) / r;
+            let Some(sync) = &plan.layer(l.id).sync else { continue };
+            for grp in &sync.groups {
+                for (ri, &dev) in grp.devices.iter().enumerate() {
+                    let tile = grp.tiles[ri];
+                    let bytes = grp.bytes_per_replica;
                     let node = devices.devices[dev].node;
-                    let (dur, res) = if !spans_nodes {
+                    let (dur, res) = if !grp.spans_nodes {
                         (bytes / devices.host_bw, [Some(Resource::Host(node)), None])
                     } else {
                         (
@@ -500,6 +524,22 @@ mod tests {
         let (rep, _) = run("inception_v3", 4, "data");
         let u = rep.utilization();
         assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+    }
+
+    #[test]
+    fn plan_and_strategy_entry_points_agree_exactly() {
+        let g = nets::alexnet(32 * 4);
+        let d = DeviceGraph::p100_cluster(4);
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::owt(&g, 4);
+        let direct = simulate(&g, &d, &s, &cm);
+        let plan = ExecutionPlan::build(&cm, &s);
+        let via_plan = simulate_plan(&plan, &cm);
+        assert_eq!(direct.num_tasks, via_plan.num_tasks);
+        assert_eq!(direct.num_transfers, via_plan.num_transfers);
+        assert_eq!(direct.step_time, via_plan.step_time);
+        assert_eq!(direct.xfer_bytes, via_plan.xfer_bytes);
+        assert_eq!(direct.sync_bytes, via_plan.sync_bytes);
     }
 
     #[test]

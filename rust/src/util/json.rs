@@ -65,6 +65,7 @@ impl Json {
     }
 
     /// Serialize compactly.
+    #[allow(clippy::inherent_to_string)] // no Display: serialization, not formatting
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -1,0 +1,163 @@
+//! Cross-subsystem consistency of the materialized `ExecutionPlan` IR:
+//! the cost model's byte accounting, the discrete-event simulator, and
+//! the executor's planned communication must all agree because they now
+//! consume (or mirror) the same plan — plus exact JSON round-trips, the
+//! acceptance contract for plans as servable artifacts.
+
+use optcnn::cost::CostModel;
+use optcnn::device::DeviceGraph;
+use optcnn::exec::CommStats;
+use optcnn::graph::{nets, GraphBuilder, PoolKind};
+use optcnn::metrics::comm_volume;
+use optcnn::optimizer::strategies;
+use optcnn::plan::ExecutionPlan;
+use optcnn::prop::{forall, Gen};
+use optcnn::sim::{simulate, simulate_plan};
+use optcnn::util::json::Json;
+
+const NETS: [&str; 2] = ["lenet5", "alexnet"];
+const DEVICES: [usize; 2] = [2, 4];
+const STRATEGIES: [&str; 3] = ["data", "model", "owt"];
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// The acceptance matrix: for lenet5 and alexnet at 2 and 4 devices, the
+/// simulator and the executor's planned accounting consume the same plan
+/// and report identical xfer/sync byte totals.
+#[test]
+fn sim_and_exec_report_identical_bytes_from_one_plan() {
+    for net in NETS {
+        for ndev in DEVICES {
+            for strat in STRATEGIES {
+                let g = nets::by_name(net, 32 * ndev).unwrap();
+                let d = DeviceGraph::p100_cluster(ndev);
+                let cm = CostModel::new(&g, &d);
+                let s = strategies::by_name(strat, &g, ndev).unwrap();
+                let plan = ExecutionPlan::build(&cm, &s);
+
+                // the simulator consumes the plan...
+                let sim = simulate_plan(&plan, &cm);
+                assert!(
+                    close(sim.xfer_bytes, plan.xfer_bytes()),
+                    "{net}@{ndev}/{strat}: sim xfer {} vs plan {}",
+                    sim.xfer_bytes,
+                    plan.xfer_bytes()
+                );
+                assert!(
+                    close(sim.sync_bytes, plan.sync_bytes()),
+                    "{net}@{ndev}/{strat}: sim sync {} vs plan {}",
+                    sim.sync_bytes,
+                    plan.sync_bytes()
+                );
+                assert_eq!(sim.num_transfers, plan.num_transfers());
+
+                // ...the executor's CommStats mirror the same plan...
+                let exec = CommStats::planned(&plan);
+                assert!(close(exec.xfer_bytes as f64, sim.xfer_bytes));
+                assert!(close(exec.sync_bytes as f64, sim.sync_bytes));
+
+                // ...and the cost model's Figure-8 accounting agrees too.
+                let cv = comm_volume(&cm, &s);
+                assert!(close(cv.xfer_bytes, plan.xfer_bytes()));
+                assert!(close(cv.sync_bytes, plan.sync_bytes()));
+                assert!(close(plan.comm().total(), cv.total()));
+            }
+        }
+    }
+}
+
+/// Plan JSON round-trips exactly: `from_json(to_json(p)) == p`.
+#[test]
+fn plan_json_roundtrip_is_exact() {
+    for net in NETS {
+        for ndev in DEVICES {
+            for strat in STRATEGIES {
+                let g = nets::by_name(net, 32 * ndev).unwrap();
+                let d = DeviceGraph::p100_cluster(ndev);
+                let cm = CostModel::new(&g, &d);
+                let s = strategies::by_name(strat, &g, ndev).unwrap();
+                let plan = ExecutionPlan::build(&cm, &s);
+                let text = plan.to_json().to_string();
+                let parsed = Json::parse(&text).expect("plan JSON parses");
+                let back = ExecutionPlan::from_json(&parsed).expect("plan JSON loads");
+                assert_eq!(back, plan, "{net}@{ndev}/{strat}");
+                // and the deserialized plan reports the same totals
+                assert_eq!(back.xfer_bytes(), plan.xfer_bytes());
+                assert_eq!(back.sync_bytes(), plan.sync_bytes());
+            }
+        }
+    }
+}
+
+/// The two simulator entry points — recompute-from-strategy and
+/// expand-from-plan — are bit-identical.
+#[test]
+fn plan_driven_simulation_equals_strategy_driven() {
+    for net in NETS {
+        for ndev in DEVICES {
+            let g = nets::by_name(net, 32 * ndev).unwrap();
+            let d = DeviceGraph::p100_cluster(ndev);
+            let cm = CostModel::new(&g, &d);
+            let s = strategies::owt(&g, ndev);
+            let plan = ExecutionPlan::build(&cm, &s);
+            let a = simulate(&g, &d, &s, &cm);
+            let b = simulate_plan(&plan, &cm);
+            assert_eq!(a.step_time, b.step_time, "{net}@{ndev}");
+            assert_eq!(a.xfer_bytes, b.xfer_bytes);
+            assert_eq!(a.sync_bytes, b.sync_bytes);
+            assert_eq!(a.num_tasks, b.num_tasks);
+        }
+    }
+}
+
+/// A random small CNN chain with an optional concat branch (mirrors the
+/// generator in `properties.rs`).
+fn random_net(g: &mut Gen) -> optcnn::graph::CompGraph {
+    let mut b = GraphBuilder::new("random");
+    let batch = *g.choose(&[4usize, 8]);
+    let mut cur = b.input(batch, *g.choose(&[1usize, 3]), 16, 16);
+    let depth = g.usize_in(1, 4);
+    for i in 0..depth {
+        if g.bool() && i == 0 {
+            let c1 =
+                b.conv2d(&format!("bl{i}"), cur, *g.choose(&[4usize, 8]), (3, 3), (1, 1), (1, 1));
+            let c2 =
+                b.conv2d(&format!("br{i}"), cur, *g.choose(&[4usize, 8]), (1, 1), (1, 1), (0, 0));
+            cur = b.concat(&format!("cat{i}"), &[c1, c2]);
+        } else {
+            cur = b.conv2d(&format!("c{i}"), cur, *g.choose(&[4usize, 8]), (3, 3), (1, 1), (1, 1));
+        }
+        cur = b.pool2d(&format!("p{i}"), cur, PoolKind::Max, (2, 2), (2, 2), (0, 0));
+    }
+    let f = b.fully_connected("fc", cur, 10);
+    b.softmax("sm", f);
+    b.finish()
+}
+
+/// Property: for random nets and random baseline strategies, the plan's
+/// scheduled bytes equal the simulator's reported bytes and the cost
+/// model's accounting.
+#[test]
+fn plan_bytes_agree_with_sim_on_random_nets() {
+    forall("plan/sim/cost byte parity", 25, |gen| {
+        let net = random_net(gen);
+        let ndev = *gen.choose(&[2usize, 4]);
+        let d = DeviceGraph::p100_cluster(ndev);
+        let cm = CostModel::new(&net, &d);
+        let strat = *gen.choose(&["data", "model", "owt"]);
+        let s = strategies::by_name(strat, &net, ndev).unwrap();
+        let plan = ExecutionPlan::build(&cm, &s);
+        let sim = simulate_plan(&plan, &cm);
+        let cv = comm_volume(&cm, &s);
+        assert!(close(sim.xfer_bytes, plan.xfer_bytes()), "{strat}@{ndev}");
+        assert!(close(sim.sync_bytes, plan.sync_bytes()), "{strat}@{ndev}");
+        assert!(close(cv.xfer_bytes, plan.xfer_bytes()), "{strat}@{ndev}");
+        assert!(close(cv.sync_bytes, plan.sync_bytes()), "{strat}@{ndev}");
+        // JSON round-trip holds on arbitrary graphs too
+        let back =
+            ExecutionPlan::from_json(&Json::parse(&plan.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    });
+}
