@@ -1,25 +1,23 @@
 //! Reproduce Table 5: the optimal VGG-16 strategy on a 4-GPU node, with
 //! the full per-layer breakdown and cost attribution — then show how the
 //! optimum changes when the cluster's interconnect changes (an ablation
-//! the paper's cost model enables but does not print).
+//! the paper's cost model enables but does not print), expressed as two
+//! `ClusterSpec`s fed to the same Planner builder.
 //!
 //! ```sh
 //! cargo run --release --example optimize_vgg
 //! ```
 
-use optcnn::cost::{CostModel, CostTables};
-use optcnn::device::{ComputeModel, DeviceGraph};
-use optcnn::graph::nets;
-use optcnn::optimizer;
+use optcnn::cost::CostModel;
+use optcnn::planner::{ClusterSpec, Network, Planner};
 use optcnn::util::fmt_secs;
 use optcnn::util::table::Table;
 
-fn optimize_on(devices: &DeviceGraph, title: &str) {
-    let ndev = devices.num_devices();
-    let graph = nets::vgg16(32 * ndev);
-    let cm = CostModel::new(&graph, devices);
-    let tables = CostTables::build(&cm, ndev);
-    let opt = optimizer::optimize(&tables);
+fn optimize_on(cluster: ClusterSpec, title: &str) -> optcnn::Result<()> {
+    let mut planner = Planner::builder(Network::Vgg16).cluster(cluster).build()?;
+    let opt = planner.optimize()?;
+    let graph = planner.graph();
+    let cm = CostModel::new(graph, planner.device_graph());
 
     let mut table = Table::new(title, &["layer", "config", "t_C", "t_S"]);
     for l in &graph.layers {
@@ -33,19 +31,20 @@ fn optimize_on(devices: &DeviceGraph, title: &str) {
     }
     table.print();
     println!("estimated step time: {}\n", fmt_secs(opt.cost));
+    Ok(())
 }
 
-fn main() {
+fn main() -> optcnn::Result<()> {
     // The paper's single node: NVLink-connected 4x P100.
     optimize_on(
-        &DeviceGraph::p100_cluster(4),
+        ClusterSpec::p100(4)?,
         "VGG-16 on 4x P100, NVLink (the paper's Table 5 setting)",
-    );
+    )?;
 
     // Ablation: a PCIe-only box (4x less intra-node bandwidth). The
     // optimum shifts toward configurations that move fewer tensor bytes.
     optimize_on(
-        &DeviceGraph::cluster("pcie_box", 1, 4, 4e9, 4e9, 4e9, ComputeModel::p100()),
+        ClusterSpec::new(1, 4).name("pcie_box").intra_bw(4e9).inter_bw(4e9).host_bw(4e9),
         "ablation: same box with a 4 GB/s PCIe-only interconnect",
-    );
+    )
 }

@@ -1,27 +1,22 @@
-//! Quickstart: the library in ~40 lines.
+//! Quickstart: the typed Planner API in ~40 lines.
 //!
-//! Build a network graph and a device graph, search for the optimal
-//! layer-wise parallelization strategy, and compare it against the
-//! standard baselines.
+//! Open a planning session for a network on a cluster, search for the
+//! optimal layer-wise parallelization strategy, and compare it against
+//! the standard baselines — all through the fallible, typed front door.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use optcnn::cost::{CostModel, CostTables};
-use optcnn::device::DeviceGraph;
-use optcnn::graph::nets;
-use optcnn::metrics::comm_volume;
-use optcnn::optimizer::{self, strategies};
-use optcnn::sim::simulate;
+use optcnn::planner::{Network, Planner, StrategyKind};
 use optcnn::util::{fmt_bytes, fmt_secs};
 
-fn main() {
-    // 1. The workload: AlexNet at the paper's per-GPU batch of 32, and a
-    //    single-node 4x P100 cluster.
-    let ndev = 4;
-    let graph = nets::alexnet(32 * ndev);
-    let devices = DeviceGraph::p100_cluster(ndev);
+fn main() -> optcnn::Result<()> {
+    // 1. The workload: AlexNet at the paper's per-GPU batch of 32, on a
+    //    single-node 4x P100 cluster (swap in .cluster(ClusterSpec::...)
+    //    for arbitrary topologies).
+    let mut planner = Planner::builder(Network::AlexNet).devices(4).build()?;
+    let graph = planner.graph();
     println!(
         "network: {} ({} layers, {:.1}M params)",
         graph.name,
@@ -29,10 +24,8 @@ fn main() {
         graph.total_params() as f64 / 1e6
     );
 
-    // 2. The cost model and the search (Algorithm 1).
-    let cm = CostModel::new(&graph, &devices);
-    let tables = CostTables::build(&cm, ndev);
-    let opt = optimizer::optimize(&tables);
+    // 2. The search (Algorithm 1 through the session's backend).
+    let opt = planner.optimize()?;
     println!(
         "layer-wise optimum found: {} (K={} after {} node + {} edge eliminations)",
         fmt_secs(opt.cost),
@@ -41,31 +34,32 @@ fn main() {
         opt.stats.edge_eliminations
     );
 
-    // 3. Compare against the baselines on the simulated cluster.
+    // 3. Compare against the baselines on the simulated cluster. The
+    //    session reuses its cost tables and plans across these queries.
     println!("\n{:<12} {:>14} {:>16} {:>14}", "strategy", "step time", "throughput", "comm/step");
-    for (name, strat) in [
-        ("data", strategies::data_parallel(&graph, ndev)),
-        ("model", strategies::model_parallel(&graph, ndev)),
-        ("owt", strategies::owt(&graph, ndev)),
-        ("layerwise", opt.strategy.clone()),
-    ] {
-        let rep = simulate(&graph, &devices, &strat, &cm);
-        let comm = comm_volume(&cm, &strat);
+    for kind in StrategyKind::ALL {
+        let eval = planner.evaluate(kind)?;
         println!(
             "{:<12} {:>14} {:>12.0} im/s {:>14}",
-            name,
-            fmt_secs(rep.step_time),
-            rep.throughput(32 * ndev),
-            fmt_bytes(comm.total())
+            kind.name(),
+            fmt_secs(eval.sim.step_time),
+            eval.sim_throughput,
+            fmt_bytes(eval.comm.total())
         );
     }
+    let stats = planner.session_stats();
+    println!(
+        "(session: {} table build, {} search, {} plan misses for 4+1 queries)",
+        stats.table_builds, stats.searches, stats.plan_misses
+    );
 
     // 4. Show a few interesting per-layer choices of the optimum.
     println!("\nselected layer configurations (layer-wise optimum):");
-    for l in &graph.layers {
+    for l in &planner.graph().layers {
         let cfg = opt.strategy.config(l.id);
-        if cfg.total() < ndev || cfg.deg[1] > 1 || cfg.deg[2] > 1 {
+        if cfg.total() < 4 || cfg.deg[1] > 1 || cfg.deg[2] > 1 {
             println!("  {:<8} {}", l.name, cfg.label());
         }
     }
+    Ok(())
 }

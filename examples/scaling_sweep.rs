@@ -6,23 +6,27 @@
 //! cargo run --release --example scaling_sweep
 //! ```
 
-use optcnn::pipeline::{Experiment, STRATEGY_NAMES};
+use optcnn::planner::{Network, Planner, StrategyKind};
 use optcnn::util::table::Table;
 
-fn main() {
+fn main() -> optcnn::Result<()> {
     let devices = [1usize, 2, 4, 8, 16];
-    for net in ["alexnet", "vgg16", "inception_v3"] {
-        let base = Experiment::new(net, 1).run("data").throughput;
+    for net in [Network::AlexNet, Network::Vgg16, Network::InceptionV3] {
+        let base = Planner::builder(net)
+            .devices(1)
+            .build()?
+            .evaluate(StrategyKind::Data)?
+            .throughput;
         let mut table = Table::new(
             &format!("{net}: speedup over 1 GPU (per-GPU batch 32)"),
             &["GPUs", "data", "model", "owt", "layerwise", "ideal"],
         );
         let mut final_speedups = Vec::new();
         for &ndev in &devices {
-            let e = Experiment::new(net, ndev);
+            let mut planner = Planner::builder(net).devices(ndev).build()?;
             let mut row = vec![ndev.to_string()];
-            for s in STRATEGY_NAMES {
-                let sp = e.run(s).throughput / base;
+            for kind in StrategyKind::ALL {
+                let sp = planner.evaluate(kind)?.throughput / base;
                 if ndev == 16 {
                     final_speedups.push(sp);
                 }
@@ -39,4 +43,5 @@ fn main() {
             final_speedups[3], best_baseline
         );
     }
+    Ok(())
 }

@@ -16,12 +16,10 @@
 //! cargo run --release --example train_e2e [-- --steps 300]
 //! ```
 
-use optcnn::cost::{CostModel, CostTables};
 use optcnn::data::SyntheticDataset;
-use optcnn::device::DeviceGraph;
 use optcnn::exec::{OracleTrainer, Trainer};
 use optcnn::graph::nets;
-use optcnn::optimizer::{self, strategies};
+use optcnn::planner::{Network, Planner, StrategyKind};
 use optcnn::runtime::ArtifactStore;
 use optcnn::util::cli::Args;
 use optcnn::util::fmt_bytes;
@@ -31,26 +29,29 @@ const LR: f32 = 0.01;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[]);
-    let steps = args.get_usize("steps", 300);
+    let steps = args.usize_or("steps", 300)?;
     let dir = args.get_or("artifacts", "artifacts");
     let store = ArtifactStore::load(dir)?;
     let batch = store.batch;
     let ds = SyntheticDataset::new(10, 3, 32, 32, 0.3, 7);
 
-    // the cost-model-optimal layer-wise strategy for MiniCNN on 4 devices
+    // the cost-model-optimal layer-wise strategy for MiniCNN on 4 devices,
+    // resolved through the typed Planner session API
     let g = nets::minicnn(batch);
-    let d = DeviceGraph::p100_cluster(NDEV);
-    let cm = CostModel::new(&g, &d);
-    let opt = optimizer::optimize(&CostTables::build(&cm, NDEV));
+    let mut planner = Planner::builder(Network::MiniCnn)
+        .devices(NDEV)
+        .per_gpu_batch(batch / NDEV)
+        .build()?;
+    let layerwise = planner.strategy(StrategyKind::Layerwise)?;
     println!("layer-wise optimum for minicnn on {NDEV} devices:");
     for l in &g.layers {
-        println!("  {:<8} {}", l.name, opt.strategy.config(l.id).label());
+        println!("  {:<8} {}", l.name, layerwise.config(l.id).label());
     }
 
     let mut runs = vec![
-        ("data".to_string(), strategies::data_parallel(&g, NDEV)),
-        ("owt".to_string(), strategies::owt(&g, NDEV)),
-        ("layerwise".to_string(), opt.strategy),
+        ("data".to_string(), planner.strategy(StrategyKind::Data)?),
+        ("owt".to_string(), planner.strategy(StrategyKind::Owt)?),
+        ("layerwise".to_string(), layerwise),
     ];
 
     // oracle first: single-device ground truth

@@ -28,7 +28,7 @@ fn placement_ablation() {
     );
     for (net, ndev) in [("alexnet", 16usize), ("vgg16", 16), ("inception_v3", 16)] {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let mut row = vec![net.to_string(), ndev.to_string()];
         let mut times = Vec::new();
         for p in [Placement::Contiguous, Placement::RoundRobinNodes] {
@@ -56,7 +56,7 @@ fn sync_ablation() {
     for net in ["alexnet", "vgg16"] {
         let ndev = 16;
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         for strat in ["data", "layerwise"] {
             let mut row = vec![net.to_string(), strat.to_string()];
             let mut times = Vec::new();
@@ -95,7 +95,8 @@ fn bandwidth_ablation() {
             gbps * 1e9,
             12e9,
             ComputeModel::p100(),
-        );
+        )
+        .unwrap();
         let cm = CostModel::new(&g, &d);
         let t = CostTables::build(&cm, ndev);
         let opt = optimizer::optimize(&t);

@@ -19,7 +19,7 @@ use optcnn::util::table::Table;
 fn main() {
     let ndev = 4;
     let g = nets::vgg16(32 * ndev);
-    let d = DeviceGraph::p100_cluster(ndev);
+    let d = DeviceGraph::p100_cluster(ndev).unwrap();
     let cm = CostModel::new(&g, &d);
     let conv8 = g.layers.iter().find(|l| l.name == "conv8").expect("conv8");
     let conv7 = g.layers.iter().find(|l| l.name == "conv7").expect("conv7");

@@ -15,7 +15,7 @@ use optcnn::util::table::Table;
 fn main() {
     let ndev = 2;
     let g = nets::vgg16(32 * ndev);
-    let d = DeviceGraph::p100_cluster(ndev);
+    let d = DeviceGraph::p100_cluster(ndev).unwrap();
     let cm = CostModel::new(&g, &d);
     let fc6 = g.layers.iter().find(|l| l.name == "fc6").expect("fc6");
     let pool5 = g.layers.iter().find(|l| l.name == "pool5").expect("pool5");

@@ -15,7 +15,7 @@ use optcnn::util::table::Table;
 
 fn main() {
     let g = nets::inception_v3(32 * 16);
-    let d = DeviceGraph::p100_cluster(16);
+    let d = DeviceGraph::p100_cluster(16).unwrap();
     let cm = CostModel::new(&g, &d);
     // 3rd layer = stem_conv3; last parameterized layer = fc
     let conv = g.layers.iter().find(|l| l.name == "stem_conv3").unwrap();

@@ -7,25 +7,31 @@
 //! to 12.2x / 14.8x / 15.5x at 16 GPUs (vs at most 6.1x / 10.2x / 11.2x
 //! for the baselines).
 
-use optcnn::pipeline::{Experiment, STRATEGY_NAMES};
+use optcnn::planner::{Network, Planner, StrategyKind};
 use optcnn::util::table::Table;
 
 fn main() {
-    for net in ["alexnet", "vgg16", "inception_v3"] {
+    for net in [Network::AlexNet, Network::Vgg16, Network::InceptionV3] {
         let mut table = Table::new(
             &format!("Figure 7: {net} training throughput (images/s)"),
             &["GPUs (nodes)", "data", "model", "owt", "layerwise", "ideal"],
         );
-        let base = Experiment::new(net, 1).run("data").throughput;
+        let base = Planner::builder(net)
+            .devices(1)
+            .build()
+            .unwrap()
+            .evaluate(StrategyKind::Data)
+            .unwrap()
+            .throughput;
         let mut speedup_best_baseline: f64 = 0.0;
         let mut speedup_layerwise: f64 = 0.0;
         let mut max_gain: f64 = 0.0;
         for ndev in [1usize, 2, 4, 8, 16] {
-            let e = Experiment::new(net, ndev);
+            let mut p = Planner::builder(net).devices(ndev).build().unwrap();
             let mut row = vec![format!("{} ({})", ndev, ndev.div_ceil(4).max(1))];
             let mut tps = Vec::new();
-            for s in STRATEGY_NAMES {
-                let tp = e.run(s).throughput;
+            for kind in StrategyKind::ALL {
+                let tp = p.evaluate(kind).unwrap().throughput;
                 tps.push(tp);
                 row.push(format!("{tp:.0}"));
             }

@@ -4,22 +4,24 @@
 //! Paper: OWT reduces comm by 1.1-23.0x vs data/model parallelism, and
 //! layer-wise parallelism reduces it by a further 1.2-2.5x.
 
-use optcnn::pipeline::{Experiment, STRATEGY_NAMES};
+use optcnn::planner::{Network, Planner, StrategyKind};
 use optcnn::util::fmt_bytes;
 use optcnn::util::table::Table;
 
 fn main() {
     let mut owt_gain_range = (f64::INFINITY, 0.0f64);
     let mut lw_gain_range = (f64::INFINITY, 0.0f64);
-    for net in ["alexnet", "vgg16", "inception_v3"] {
+    for net in [Network::AlexNet, Network::Vgg16, Network::InceptionV3] {
         let mut table = Table::new(
             &format!("Figure 8: {net} communication cost per step"),
             &["GPUs", "data", "model", "owt", "layerwise", "lw vs owt"],
         );
         for ndev in [4usize, 8, 16] {
-            let e = Experiment::new(net, ndev);
-            let vols: Vec<f64> =
-                STRATEGY_NAMES.iter().map(|s| e.run(s).comm.total()).collect();
+            let mut p = Planner::builder(net).devices(ndev).build().unwrap();
+            let vols: Vec<f64> = StrategyKind::ALL
+                .iter()
+                .map(|&kind| p.evaluate(kind).unwrap().comm.total())
+                .collect();
             let owt_gain = vols[0].max(vols[1]) / vols[2];
             let lw_gain = vols[2] / vols[3];
             owt_gain_range = (owt_gain_range.0.min(owt_gain), owt_gain_range.1.max(owt_gain));

@@ -15,7 +15,7 @@ fn main() {
     println!("== micro: cost tables ==");
     for (net, ndev) in [("vgg16", 4usize), ("inception_v3", 4), ("inception_v3", 16)] {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let (_, dt) = time_once(|| CostTables::build(&cm, ndev));
         println!("cost_tables_build({net}, {ndev} dev)          {dt:>10.3}s");
@@ -24,7 +24,7 @@ fn main() {
     println!("\n== micro: elimination DP ==");
     for (net, ndev) in [("vgg16", 16usize), ("inception_v3", 16)] {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let tables = CostTables::build(&cm, ndev);
         bench(&format!("optimize({net}, {ndev} dev)"), || optimizer::optimize(&tables));
@@ -34,7 +34,7 @@ fn main() {
     for net in ["vgg16", "inception_v3"] {
         let ndev = 16;
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = optcnn::optimizer::strategies::data_parallel(&g, ndev);
         let r = simulate(&g, &d, &s, &cm);
@@ -60,7 +60,7 @@ fn main() {
 
     println!("\n== micro: cost model kernels ==");
     let g = nets::inception_v3(512);
-    let d = DeviceGraph::p100_cluster(16);
+    let d = DeviceGraph::p100_cluster(16).unwrap();
     let cm = CostModel::new(&g, &d);
     let concat = g.layers.iter().find(|l| l.name == "mixedB3_concat").unwrap();
     let pred = g.predecessors(concat.id)[0];

@@ -18,7 +18,7 @@ fn main() {
     for (net, ndev) in [("vgg16", 4usize), ("inception_v3", 4), ("inception_v3", 16)] {
         println!("== plan reuse: {net} x{ndev} ==");
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, ndev);
 

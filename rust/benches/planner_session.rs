@@ -1,0 +1,53 @@
+//! Planner session amortization: cold-build versus warm-session query
+//! latency for the acceptance workload (vgg16, 4 devices, layerwise).
+//!
+//! Complements PR 1's `plan_reuse` bench: that one measures plan-level
+//! caching in isolation; this one measures the full public-API path —
+//! a fresh `Planner` per query (cost tables + search + plan + sim) versus
+//! one long-lived session absorbing repeated queries, which is the
+//! serving scenario the session API exists for.
+
+use optcnn::planner::{Network, Planner, StrategyKind};
+use optcnn::util::benchkit::{bench, time_once};
+
+fn main() {
+    let net = Network::Vgg16;
+    let ndev = 4usize;
+    println!("== planner session: {net} x{ndev}, layerwise ==");
+
+    // cold path: everything from scratch, once (too slow to loop)
+    let (_cold_eval, cold) = time_once(|| {
+        let mut p = Planner::builder(net).devices(ndev).build().unwrap();
+        p.evaluate(StrategyKind::Layerwise).unwrap()
+    });
+    println!(
+        "cold_build_and_query(vgg16, 4 dev)           {:>12.3} ms  (tables + search + plan + sim)",
+        cold * 1e3
+    );
+
+    // warm path: one session, repeated queries
+    let mut session = Planner::builder(net).devices(ndev).build().unwrap();
+    session.evaluate(StrategyKind::Layerwise).unwrap(); // prime the session
+    let warm = bench("warm_session_query(vgg16, 4 dev)", || {
+        session.evaluate(StrategyKind::Layerwise).unwrap()
+    });
+
+    // strategy-only lookup (plan + tables + search all cached)
+    let strat = bench("warm_strategy_lookup(vgg16, 4 dev)", || {
+        session.strategy(StrategyKind::Layerwise).unwrap()
+    });
+
+    let stats = session.session_stats();
+    println!(
+        "session counters: {} table build(s), {} search(es), {} plan hits / {} misses",
+        stats.table_builds, stats.searches, stats.plan_hits, stats.plan_misses
+    );
+    assert_eq!(stats.table_builds, 1, "a session must build tables exactly once");
+    assert_eq!(stats.searches, 1, "a session must search exactly once");
+    println!(
+        "-> warm query is {:.0}x cheaper than cold build-and-query \
+         (strategy lookup alone: {:.0}x)\n",
+        cold / warm.median.max(1e-12),
+        cold / strat.median.max(1e-12)
+    );
+}

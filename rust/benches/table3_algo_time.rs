@@ -25,7 +25,7 @@ fn main() {
     );
     for net in ["lenet5", "alexnet", "vgg16", "inception_v3"] {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let tables = CostTables::build(&cm, ndev);
 

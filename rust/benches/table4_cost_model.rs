@@ -5,7 +5,7 @@
 //!
 //! Paper: within +-10% everywhere (their "actual" is the real cluster).
 
-use optcnn::pipeline::Experiment;
+use optcnn::planner::{Network, Planner, StrategyKind};
 use optcnn::util::table::Table;
 
 fn main() {
@@ -21,9 +21,9 @@ fn main() {
             ndev.div_ceil(4).max(1),
             if ndev > 4 { "s" } else { "" }
         )];
-        for net in ["alexnet", "vgg16", "inception_v3"] {
-            let e = Experiment::new(net, ndev);
-            let eval = e.run("layerwise");
+        for net in [Network::AlexNet, Network::Vgg16, Network::InceptionV3] {
+            let mut p = Planner::builder(net).devices(ndev).build().unwrap();
+            let eval = p.evaluate(StrategyKind::Layerwise).unwrap();
             let rel = (eval.estimate - eval.sim.step_time) / eval.sim.step_time;
             worst = worst.max(rel.abs());
             row.push(format!("{:+.0}%", rel * 100.0));

@@ -9,14 +9,14 @@
 //! by the calibrated cost model.
 
 use optcnn::graph::OpKind;
-use optcnn::pipeline::Experiment;
+use optcnn::planner::{Network, Planner};
 use optcnn::util::table::Table;
 
 fn main() {
-    let e = Experiment::new("vgg16", 4);
-    let g = e.graph();
-    let d = e.devices();
-    let (strategy, stats) = e.strategy("layerwise", &g, &d);
+    let mut p = Planner::builder(Network::Vgg16).devices(4).build().unwrap();
+    let opt = p.optimize().unwrap();
+    let strategy = &opt.strategy;
+    let g = p.graph();
 
     let mut table = Table::new(
         "Table 5: optimal VGG-16 strategy, 4 GPUs (1 node)",
@@ -53,6 +53,5 @@ fn main() {
         "fully-connected layers use channel parallelism (no param sync): {}",
         c_fc.deg[1] > 1 && c_fc.deg[0] == 1
     );
-    let stats = stats.unwrap();
-    println!("search reduced the graph to K = {} nodes\n", stats.final_nodes);
+    println!("search reduced the graph to K = {} nodes\n", opt.stats.final_nodes);
 }

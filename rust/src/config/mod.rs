@@ -5,7 +5,7 @@
 //! has no `toml` crate) plus typed experiment/cluster config structs used
 //! by the CLI launcher.
 //!
-//! Example (`examples/configs/vgg16_4gpu.toml` ships with the repo):
+//! Example (`config/experiment_vgg16.toml` ships with the repo):
 //!
 //! ```toml
 //! [experiment]
@@ -19,10 +19,15 @@
 //! intra_bw_gbps = 15.0
 //! inter_bw_gbps = 3.125
 //! ```
+//!
+//! Standalone `[cluster]` files live under `config/` at the repo root and
+//! load through [`crate::planner::ClusterSpec::load`].
 
 use std::collections::BTreeMap;
 
-use crate::device::{ComputeModel, DeviceGraph};
+use crate::device::DeviceGraph;
+use crate::error::{OptError, Result};
+use crate::planner::{ClusterSpec, Network, Planner, StrategyKind};
 
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
@@ -67,7 +72,7 @@ pub struct Toml {
 
 impl Toml {
     /// Parse a TOML-subset document. Errors carry the line number.
-    pub fn parse(text: &str) -> Result<Toml, String> {
+    pub fn parse(text: &str) -> Result<Toml> {
         let mut doc = Toml::default();
         let mut section = String::new();
         for (ln, raw) in text.lines().enumerate() {
@@ -81,9 +86,10 @@ impl Toml {
                 continue;
             }
             let Some((k, v)) = line.split_once('=') else {
-                return Err(format!("line {}: expected key = value", ln + 1));
+                return Err(OptError::Config(format!("line {}: expected key = value", ln + 1)));
             };
-            let value = parse_value(v.trim()).map_err(|e| format!("line {}: {}", ln + 1, e))?;
+            let value = parse_value(v.trim())
+                .map_err(|e| OptError::Config(format!("line {}: {}", ln + 1, e)))?;
             doc.sections
                 .entry(section.clone())
                 .or_default()
@@ -107,6 +113,39 @@ impl Toml {
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
+
+    /// Like [`Toml::str_or`], but a *present* value of the wrong type is
+    /// a config error instead of silently taking the default.
+    pub fn try_str_or(&self, section: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(v) => v.as_str().map(str::to_string).ok_or_else(|| {
+                OptError::Config(format!("{section}.{key} must be a string"))
+            }),
+        }
+    }
+
+    /// Like [`Toml::usize_or`], but a *present* value of the wrong type
+    /// is a config error instead of silently taking the default.
+    pub fn try_usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                OptError::Config(format!("{section}.{key} must be a nonnegative integer"))
+            }),
+        }
+    }
+
+    /// Like [`Toml::f64_or`], but a *present* value of the wrong type is
+    /// a config error instead of silently taking the default.
+    pub fn try_f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| OptError::Config(format!("{section}.{key} must be a number"))),
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -122,7 +161,7 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
-fn parse_value(s: &str) -> Result<Value, String> {
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
     if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
         return Ok(Value::Str(inner.to_string()));
     }
@@ -137,7 +176,7 @@ fn parse_value(s: &str) -> Result<Value, String> {
         if inner.is_empty() {
             return Ok(Value::Array(Vec::new()));
         }
-        let items: Result<Vec<Value>, String> =
+        let items: std::result::Result<Vec<Value>, String> =
             inner.split(',').map(|p| parse_value(p.trim())).collect();
         return Ok(Value::Array(items?));
     }
@@ -151,74 +190,59 @@ fn parse_value(s: &str) -> Result<Value, String> {
 }
 
 /// Typed experiment configuration assembled from a TOML document (with
-/// the paper's defaults for anything unspecified).
+/// the paper's defaults for anything unspecified). Unknown network,
+/// strategy, or compute-model names are rejected at load time.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    pub network: String,
-    /// `data`, `model`, `owt`, or `layerwise`.
-    pub strategy: String,
+    /// The network to plan for.
+    pub network: Network,
+    /// The strategy to resolve.
+    pub strategy: StrategyKind,
+    /// Per-GPU batch size.
     pub per_gpu_batch: usize,
-    pub nodes: usize,
-    pub gpus_per_node: usize,
-    pub intra_bw: f64,
-    pub inter_bw: f64,
-    pub host_bw: f64,
-}
-
-impl Default for ExperimentConfig {
-    fn default() -> Self {
-        ExperimentConfig {
-            network: "vgg16".into(),
-            strategy: "layerwise".into(),
-            per_gpu_batch: 32,
-            nodes: 1,
-            gpus_per_node: 4,
-            intra_bw: 15e9,
-            inter_bw: 3.125e9,
-            host_bw: 12e9,
-        }
-    }
+    /// The cluster the experiment runs on.
+    pub cluster: ClusterSpec,
 }
 
 impl ExperimentConfig {
-    pub fn from_toml(doc: &Toml) -> ExperimentConfig {
-        let d = ExperimentConfig::default();
-        ExperimentConfig {
-            network: doc.str_or("experiment", "network", &d.network),
-            strategy: doc.str_or("experiment", "strategy", &d.strategy),
-            per_gpu_batch: doc.usize_or("experiment", "per_gpu_batch", d.per_gpu_batch),
-            nodes: doc.usize_or("cluster", "nodes", d.nodes),
-            gpus_per_node: doc.usize_or("cluster", "gpus_per_node", d.gpus_per_node),
-            intra_bw: doc.f64_or("cluster", "intra_bw_gbps", d.intra_bw / 1e9) * 1e9,
-            inter_bw: doc.f64_or("cluster", "inter_bw_gbps", d.inter_bw / 1e9) * 1e9,
-            host_bw: doc.f64_or("cluster", "host_bw_gbps", d.host_bw / 1e9) * 1e9,
-        }
+    /// Assemble a config from a parsed TOML document.
+    pub fn from_toml(doc: &Toml) -> Result<ExperimentConfig> {
+        Ok(ExperimentConfig {
+            network: doc.try_str_or("experiment", "network", "vgg16")?.parse()?,
+            strategy: doc.try_str_or("experiment", "strategy", "layerwise")?.parse()?,
+            per_gpu_batch: doc.try_usize_or("experiment", "per_gpu_batch", 32)?,
+            cluster: ClusterSpec::from_toml(doc)?,
+        })
     }
 
-    pub fn load(path: &str) -> Result<ExperimentConfig, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        Ok(ExperimentConfig::from_toml(&Toml::parse(&text)?))
+    /// Load and validate a config file.
+    pub fn load(path: &str) -> Result<ExperimentConfig> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| OptError::Io(format!("{path}: {e}")))?;
+        ExperimentConfig::from_toml(&Toml::parse(&text)?)
     }
 
+    /// Devices in the configured cluster.
     pub fn num_devices(&self) -> usize {
-        self.nodes * self.gpus_per_node
+        self.cluster.num_devices()
     }
 
+    /// Global batch size across the cluster.
     pub fn global_batch(&self) -> usize {
         self.per_gpu_batch * self.num_devices()
     }
 
     /// Materialize the device graph this config describes.
-    pub fn device_graph(&self) -> DeviceGraph {
-        DeviceGraph::cluster(
-            &format!("{}x{}", self.nodes, self.gpus_per_node),
-            self.nodes,
-            self.gpus_per_node,
-            self.intra_bw,
-            self.inter_bw,
-            self.host_bw,
-            ComputeModel::p100(),
-        )
+    pub fn device_graph(&self) -> Result<DeviceGraph> {
+        self.cluster.device_graph()
+    }
+
+    /// Open a planning session for this config.
+    pub fn planner(&self) -> Result<Planner> {
+        Planner::builder(self.network)
+            .cluster(self.cluster.clone())
+            .per_gpu_batch(self.per_gpu_batch)
+            .build()
     }
 }
 
@@ -256,20 +280,48 @@ extras = [1, 2.5, "x"]
     #[test]
     fn experiment_config_roundtrip() {
         let t = Toml::parse(DOC).unwrap();
-        let c = ExperimentConfig::from_toml(&t);
-        assert_eq!(c.network, "alexnet");
+        let c = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(c.network, Network::AlexNet);
+        assert_eq!(c.strategy, StrategyKind::Owt);
         assert_eq!(c.num_devices(), 8);
         assert_eq!(c.global_batch(), 512);
-        let d = c.device_graph();
+        let d = c.device_graph().unwrap();
         assert_eq!(d.num_devices(), 8);
         assert_eq!(d.bandwidth(0, 1), 20e9);
     }
 
     #[test]
     fn defaults_fill_missing_fields() {
-        let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap());
-        assert_eq!(c.network, "vgg16");
+        let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(c.network, Network::Vgg16);
         assert_eq!(c.per_gpu_batch, 32);
+        assert_eq!(c.num_devices(), 4);
+    }
+
+    #[test]
+    fn unknown_names_rejected_at_load() {
+        let t = Toml::parse("[experiment]\nnetwork = \"resnet1001\"\n").unwrap();
+        assert!(matches!(
+            ExperimentConfig::from_toml(&t),
+            Err(OptError::UnknownNetwork(_))
+        ));
+        let t = Toml::parse("[experiment]\nstrategy = \"zigzag\"\n").unwrap();
+        assert!(matches!(
+            ExperimentConfig::from_toml(&t),
+            Err(OptError::UnknownStrategy(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_typed_values_rejected_not_defaulted() {
+        let t = Toml::parse("[experiment]\nper_gpu_batch = \"many\"\n").unwrap();
+        assert!(matches!(ExperimentConfig::from_toml(&t), Err(OptError::Config(_))));
+        let t = Toml::parse("[experiment]\nnetwork = 5\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[cluster]\nnodes = \"two\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[cluster]\nintra_bw_gbps = true\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
     }
 
     #[test]

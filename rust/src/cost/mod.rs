@@ -323,7 +323,7 @@ mod tests {
     use crate::graph::nets;
 
     fn setup() -> (CompGraph, DeviceGraph) {
-        (nets::vgg16(32 * 4), DeviceGraph::p100_cluster(4))
+        (nets::vgg16(32 * 4), DeviceGraph::p100_cluster(4).unwrap())
     }
 
     #[test]
@@ -392,7 +392,7 @@ mod tests {
     #[test]
     fn eq1_sums_components() {
         let g = nets::lenet5(32);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = Strategy::uniform(g.num_layers(), PConfig::data(2));
         let mut expect = 0.0;
@@ -438,8 +438,8 @@ mod tests {
     #[test]
     fn inter_node_sync_costs_more() {
         let g = nets::alexnet(32 * 16);
-        let d16 = DeviceGraph::p100_cluster(16);
-        let d4 = DeviceGraph::p100_cluster(4);
+        let d16 = DeviceGraph::p100_cluster(16).unwrap();
+        let d4 = DeviceGraph::p100_cluster(4).unwrap();
         let cm16 = CostModel::new(&g, &d16);
         let cm4 = CostModel::new(&g, &d4);
         let fc = g.layers.iter().find(|l| l.name == "fc6").unwrap();

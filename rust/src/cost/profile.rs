@@ -133,7 +133,7 @@ mod tests {
             return;
         };
         let g = nets::minicnn(store.batch);
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let measured = profile_graph(&store, &g, &cm, 4, 2).unwrap();
         assert_eq!(measured.len(), g.num_layers());

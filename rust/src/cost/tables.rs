@@ -233,7 +233,7 @@ mod tests {
     #[test]
     fn tables_match_direct_evaluation() {
         let g = nets::lenet5(32);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let t = CostTables::build(&cm, 2);
         // pick the serial config everywhere
@@ -249,7 +249,7 @@ mod tests {
     #[test]
     fn every_layer_has_serial_config() {
         let g = nets::alexnet(64);
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 4);
         for l in 0..g.num_layers() {
             assert!(t.index_of(l, &PConfig::serial()).is_some());
@@ -261,7 +261,7 @@ mod tests {
     #[test]
     fn edge_tables_cover_all_graph_edges() {
         let g = nets::inception_v3(32);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 2);
         assert_eq!(t.edges.len(), g.num_edges());
         for (e, &(s, dd)) in t.edges.iter().zip(g.edges.iter()) {

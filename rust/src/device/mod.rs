@@ -5,6 +5,40 @@
 //! by the analytic cost functions. Presets mirror the paper's testbed:
 //! 4 nodes x 4 NVIDIA P100, NVLink intra-node, 100 Gb/s EDR InfiniBand
 //! inter-node (see DESIGN.md §2 for the substitution rationale).
+//!
+//! Constructors validate their arguments and return [`OptError`] — a
+//! zero-device or zero-bandwidth cluster would otherwise surface as NaN
+//! transfer times deep inside the cost model.
+
+use crate::error::{OptError, Result};
+
+/// The paper testbed's link constants and shape rule, shared by
+/// [`DeviceGraph::p100_cluster`] and the planner's `ClusterSpec::p100`
+/// so the preset cannot drift between the two entry points.
+pub mod p100 {
+    use crate::error::{OptError, Result};
+
+    /// NVLink effective point-to-point bandwidth, bytes/s.
+    pub const INTRA_BW: f64 = 15e9;
+    /// Per-node 100 Gb/s EDR InfiniBand NIC bandwidth, bytes/s (fanned
+    /// out across the node's GPUs for the effective p2p rate).
+    pub const NIC_BW: f64 = 12.5e9;
+    /// PCIe 3.0 x16 host link bandwidth, bytes/s.
+    pub const HOST_BW: f64 = 12e9;
+
+    /// Shape `ngpus` devices into `(nodes, gpus_per_node)` the way the
+    /// paper's testbed does (up to 4 GPUs per node); errors unless
+    /// `ngpus` is 1, 2, 4 or a multiple of 4.
+    pub fn shape(ngpus: usize) -> Result<(usize, usize)> {
+        if !(ngpus == 1 || ngpus == 2 || (ngpus >= 4 && ngpus % 4 == 0)) {
+            return Err(OptError::InvalidCluster(format!(
+                "the p100 preset needs 1, 2, 4 or a multiple of 4 devices, got {ngpus}"
+            )));
+        }
+        let gpus_per_node = ngpus.min(4);
+        Ok((ngpus / gpus_per_node, gpus_per_node))
+    }
+}
 
 /// Per-device compute capability (the `t_C` substrate).
 #[derive(Debug, Clone, Copy)]
@@ -33,6 +67,64 @@ impl ComputeModel {
             conv_eff: 0.55,
             gemm_eff: 0.70,
         }
+    }
+
+    /// NVIDIA Tesla V100 (SXM2): 15.7 TFLOP/s fp32, 900 GB/s HBM2.
+    pub fn v100() -> ComputeModel {
+        ComputeModel {
+            peak_flops: 15.7e12,
+            mem_bw: 900e9,
+            overhead: 10e-6,
+            conv_eff: 0.55,
+            gemm_eff: 0.70,
+        }
+    }
+
+    /// NVIDIA A100 (SXM4, 40 GB): 19.5 TFLOP/s fp32, 1555 GB/s HBM2e.
+    pub fn a100() -> ComputeModel {
+        ComputeModel {
+            peak_flops: 19.5e12,
+            mem_bw: 1555e9,
+            overhead: 8e-6,
+            conv_eff: 0.55,
+            gemm_eff: 0.70,
+        }
+    }
+
+    /// Look a preset up by name (`p100`, `v100`, `a100`) — the config-file
+    /// entry point for non-P100 clusters.
+    pub fn named(name: &str) -> Result<ComputeModel> {
+        match name {
+            "p100" => Ok(ComputeModel::p100()),
+            "v100" => Ok(ComputeModel::v100()),
+            "a100" => Ok(ComputeModel::a100()),
+            other => Err(OptError::InvalidCluster(format!(
+                "unknown compute model `{other}` (known: p100, v100, a100)"
+            ))),
+        }
+    }
+
+    /// Validate the model: every rate must be positive and finite.
+    pub fn validate(&self) -> Result<()> {
+        for (what, v) in [
+            ("peak_flops", self.peak_flops),
+            ("mem_bw", self.mem_bw),
+            ("conv_eff", self.conv_eff),
+            ("gemm_eff", self.gemm_eff),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(OptError::InvalidCluster(format!(
+                    "compute model {what} must be positive and finite, got {v}"
+                )));
+            }
+        }
+        if !(self.overhead.is_finite() && self.overhead >= 0.0) {
+            return Err(OptError::InvalidCluster(format!(
+                "compute model overhead must be nonnegative, got {}",
+                self.overhead
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -64,7 +156,9 @@ pub struct DeviceGraph {
 impl DeviceGraph {
     /// Generic builder: `nodes x gpus_per_node` devices with uniform
     /// intra-node (`intra_bw`) and effective inter-node (`inter_bw`)
-    /// point-to-point bandwidths.
+    /// point-to-point bandwidths. Errors on degenerate shapes (zero
+    /// nodes/devices) and nonpositive or non-finite bandwidths, which
+    /// would otherwise propagate NaN/infinite transfer times.
     pub fn cluster(
         name: &str,
         nodes: usize,
@@ -73,8 +167,22 @@ impl DeviceGraph {
         inter_bw: f64,
         host_bw: f64,
         compute: ComputeModel,
-    ) -> DeviceGraph {
-        assert!(nodes >= 1 && gpus_per_node >= 1);
+    ) -> Result<DeviceGraph> {
+        if nodes == 0 || gpus_per_node == 0 {
+            return Err(OptError::InvalidCluster(format!(
+                "need at least one node and one device per node, got {nodes} x {gpus_per_node}"
+            )));
+        }
+        for (what, bw) in
+            [("intra-node", intra_bw), ("inter-node", inter_bw), ("host", host_bw)]
+        {
+            if !(bw.is_finite() && bw > 0.0) {
+                return Err(OptError::InvalidCluster(format!(
+                    "{what} bandwidth must be positive and finite, got {bw} B/s"
+                )));
+            }
+        }
+        compute.validate()?;
         let n = nodes * gpus_per_node;
         let devices: Vec<Device> = (0..n)
             .map(|id| Device { id, node: id / gpus_per_node, name: format!("gpu{id}") })
@@ -91,32 +199,30 @@ impl DeviceGraph {
                 };
             }
         }
-        DeviceGraph {
+        Ok(DeviceGraph {
             name: name.to_string(),
             devices,
             bw,
             host_bw,
             node_bw: inter_bw * gpus_per_node as f64, // the NIC itself
             compute,
-        }
+        })
     }
 
     /// The paper's testbed scaled to `ngpus` in {1, 2, 4, 8, 16}: up to 4
     /// GPUs per node (NVLink ~15 GB/s effective p2p), nodes connected by
     /// 100 Gb/s EDR IB (12.5 GB/s per NIC, shared by the node's 4 GPUs →
     /// ~3.1 GB/s effective p2p when fanned out), PCIe 3.0 x16 host link.
-    pub fn p100_cluster(ngpus: usize) -> DeviceGraph {
-        let gpus_per_node = ngpus.min(4);
-        let nodes = ngpus.div_ceil(gpus_per_node);
-        assert_eq!(nodes * gpus_per_node, ngpus, "ngpus must be 1,2,4 or a multiple of 4");
-        let nic = 12.5e9;
+    /// Errors unless `ngpus` is 1, 2, 4 or a multiple of 4 (see [`p100`]).
+    pub fn p100_cluster(ngpus: usize) -> Result<DeviceGraph> {
+        let (nodes, gpus_per_node) = p100::shape(ngpus)?;
         DeviceGraph::cluster(
             &format!("p100x{ngpus}"),
             nodes,
             gpus_per_node,
-            15e9,
-            nic / gpus_per_node as f64,
-            12e9,
+            p100::INTRA_BW,
+            p100::NIC_BW / gpus_per_node as f64,
+            p100::HOST_BW,
             ComputeModel::p100(),
         )
     }
@@ -155,7 +261,7 @@ mod tests {
     #[test]
     fn p100_presets_have_expected_topology() {
         for (n, nodes) in [(1usize, 1usize), (2, 1), (4, 1), (8, 2), (16, 4)] {
-            let d = DeviceGraph::p100_cluster(n);
+            let d = DeviceGraph::p100_cluster(n).unwrap();
             assert_eq!(d.num_devices(), n);
             assert_eq!(d.num_nodes(), nodes);
         }
@@ -163,7 +269,7 @@ mod tests {
 
     #[test]
     fn intra_beats_inter_bandwidth() {
-        let d = DeviceGraph::p100_cluster(8);
+        let d = DeviceGraph::p100_cluster(8).unwrap();
         assert!(d.bandwidth(0, 1) > d.bandwidth(0, 4));
         assert!(d.same_node(0, 3));
         assert!(!d.same_node(3, 4));
@@ -171,7 +277,7 @@ mod tests {
 
     #[test]
     fn transfer_time_linear_in_bytes() {
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let t1 = d.transfer_time(0, 1, 1e9);
         let t2 = d.transfer_time(0, 1, 2e9);
         assert!((t2 / t1 - 2.0).abs() < 1e-12);
@@ -180,8 +286,33 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
     fn irregular_gpu_count_rejected() {
-        DeviceGraph::p100_cluster(6);
+        let err = DeviceGraph::p100_cluster(6).unwrap_err();
+        assert!(err.to_string().contains("6"), "{err}");
+        assert!(DeviceGraph::p100_cluster(0).is_err());
+        assert!(DeviceGraph::p100_cluster(3).is_err(), "3 is not a testbed shape");
+        assert!(DeviceGraph::p100_cluster(12).is_ok(), "multiples of 4 are");
+    }
+
+    #[test]
+    fn degenerate_clusters_rejected() {
+        let cm = ComputeModel::p100;
+        assert!(DeviceGraph::cluster("z", 0, 4, 1e9, 1e9, 1e9, cm()).is_err());
+        assert!(DeviceGraph::cluster("z", 1, 0, 1e9, 1e9, 1e9, cm()).is_err());
+        assert!(DeviceGraph::cluster("z", 1, 4, 0.0, 1e9, 1e9, cm()).is_err());
+        assert!(DeviceGraph::cluster("z", 1, 4, 1e9, -2e9, 1e9, cm()).is_err());
+        assert!(DeviceGraph::cluster("z", 1, 4, 1e9, 1e9, f64::NAN, cm()).is_err());
+        let mut broken = ComputeModel::p100();
+        broken.peak_flops = 0.0;
+        assert!(DeviceGraph::cluster("z", 1, 4, 1e9, 1e9, 1e9, broken).is_err());
+    }
+
+    #[test]
+    fn named_compute_models_resolve() {
+        assert!(ComputeModel::named("p100").is_ok());
+        assert!(ComputeModel::named("v100").is_ok());
+        assert!(ComputeModel::named("a100").is_ok());
+        assert!(ComputeModel::named("tpu9000").is_err());
+        assert!(ComputeModel::v100().peak_flops > ComputeModel::p100().peak_flops);
     }
 }

@@ -1,0 +1,107 @@
+//! Crate-wide error boundary.
+//!
+//! Everything user-controlled — network/strategy names, cluster shapes,
+//! CLI flags, config files — flows through [`OptError`] instead of
+//! panicking. The CLI maps [`OptError::exit_code`] onto process exit
+//! codes so bad input produces a one-line message, never a backtrace.
+
+#![warn(missing_docs)]
+
+use std::fmt;
+
+/// Any error the planning library reports to its caller.
+///
+/// Variants carry a human-readable payload; [`fmt::Display`] renders the
+/// one-line message shown to CLI users.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OptError {
+    /// A network name that [`crate::planner::Network`] does not know.
+    UnknownNetwork(String),
+    /// A strategy name that [`crate::planner::StrategyKind`] does not know.
+    UnknownStrategy(String),
+    /// A search-backend name the planner does not know.
+    UnknownBackend(String),
+    /// A cluster specification that cannot describe real hardware
+    /// (zero devices, nonpositive bandwidth, ...).
+    InvalidCluster(String),
+    /// A malformed argument: CLI flag, builder parameter, or batch size.
+    InvalidArgument(String),
+    /// A malformed configuration file.
+    Config(String),
+    /// An I/O failure (missing file, unwritable path).
+    Io(String),
+    /// The search backend could not produce a complete strategy (e.g. the
+    /// exhaustive DFS hit its budget before reaching any leaf).
+    SearchFailed(String),
+}
+
+impl OptError {
+    /// The process exit code the CLI uses for this error: `2` for bad
+    /// user input (the Unix usage-error convention), `1` for runtime
+    /// failures such as I/O.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            OptError::Io(_) | OptError::SearchFailed(_) => 1,
+            _ => 2,
+        }
+    }
+}
+
+impl fmt::Display for OptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptError::UnknownNetwork(name) => write!(
+                f,
+                "unknown network `{name}` (known: lenet5, alexnet, vgg16, \
+                 inception_v3, resnet18, resnet50, minicnn)"
+            ),
+            OptError::UnknownStrategy(name) => {
+                write!(f, "unknown strategy `{name}` (known: data, model, owt, layerwise)")
+            }
+            OptError::UnknownBackend(name) => {
+                write!(f, "unknown search backend `{name}` (known: elimination, dfs)")
+            }
+            OptError::InvalidCluster(msg) => write!(f, "invalid cluster: {msg}"),
+            OptError::InvalidArgument(msg) => write!(f, "{msg}"),
+            OptError::Config(msg) => write!(f, "config error: {msg}"),
+            OptError::Io(msg) => write!(f, "{msg}"),
+            OptError::SearchFailed(msg) => write!(f, "search failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for OptError {}
+
+/// Crate-wide result alias over [`OptError`].
+pub type Result<T> = std::result::Result<T, OptError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_are_one_line() {
+        let errs = [
+            OptError::UnknownNetwork("resnet1001".into()),
+            OptError::UnknownStrategy("zigzag".into()),
+            OptError::UnknownBackend("sa".into()),
+            OptError::InvalidCluster("0 nodes".into()),
+            OptError::InvalidArgument("--devices: expected an integer".into()),
+            OptError::Config("line 3: expected key = value".into()),
+            OptError::Io("plan.json: permission denied".into()),
+            OptError::SearchFailed("budget exhausted".into()),
+        ];
+        for e in errs {
+            let msg = e.to_string();
+            assert!(!msg.contains('\n'), "multi-line message: {msg:?}");
+            assert!(!msg.is_empty());
+        }
+    }
+
+    #[test]
+    fn usage_errors_exit_2_runtime_errors_exit_1() {
+        assert_eq!(OptError::UnknownNetwork("x".into()).exit_code(), 2);
+        assert_eq!(OptError::InvalidArgument("x".into()).exit_code(), 2);
+        assert_eq!(OptError::Io("x".into()).exit_code(), 1);
+    }
+}

@@ -144,7 +144,8 @@ impl Trainer {
                 1e9,
                 1e9,
                 crate::device::ComputeModel::p100(),
-            );
+            )
+            .expect("the executor's 1-node worker topology is always valid");
             let cm = crate::cost::CostModel::new(&graph, &exec_devices);
             ExecutionPlan::build(&cm, &strategy)
         };

@@ -18,6 +18,21 @@
 //!    execute for real through the AOT-compiled HLO artifacts
 //!    ([`runtime`], [`exec`]), both driven by the same plan.
 //!
+//! The public entry point for all of this is the [`planner`] module — a
+//! typed, fallible [`planner::Planner`] session that owns steps 1-6 and
+//! amortizes the expensive ones across queries (DESIGN.md §3):
+//!
+//! ```
+//! use optcnn::planner::{Network, Planner, StrategyKind};
+//!
+//! # fn main() -> optcnn::Result<()> {
+//! let mut planner = Planner::builder(Network::LeNet5).devices(2).build()?;
+//! let eval = planner.evaluate(StrategyKind::Layerwise)?;
+//! assert!(eval.throughput > 0.0);
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
@@ -25,6 +40,7 @@ pub mod config;
 pub mod cost;
 pub mod data;
 pub mod device;
+pub mod error;
 pub mod exec;
 pub mod graph;
 pub mod metrics;
@@ -32,8 +48,11 @@ pub mod optimizer;
 pub mod parallel;
 pub mod pipeline;
 pub mod plan;
+pub mod planner;
 pub mod prop;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;
 pub mod util;
+
+pub use error::{OptError, Result};

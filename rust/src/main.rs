@@ -2,20 +2,24 @@
 //!
 //! Subcommands:
 //!
-//! * `optimize`  — run Algorithm 1 and print the per-layer strategy
+//! * `optimize`  — run the strategy search and print the per-layer strategy
 //! * `simulate`  — evaluate a strategy on the simulated cluster
 //! * `plan`      — materialize a strategy's ExecutionPlan (print/export)
 //! * `sweep`     — the full Figure 7/8 grid (networks x devices x strategies)
 //! * `train`     — real partitioned training of MiniCNN through PJRT
 //! * `info`      — networks, artifact status, cluster presets
 //!
-//! Run `optcnn <cmd> --help-less` with no args for usage.
+//! Every subcommand goes through the typed [`Planner`] session API; bad
+//! user input (unknown names, malformed flags, impossible clusters)
+//! exits 2 with a one-line message, runtime failures exit 1.
+
+use std::time::Duration;
 
 use optcnn::config::ExperimentConfig;
 use optcnn::data::SyntheticDataset;
+use optcnn::error::{OptError, Result};
 use optcnn::exec::Trainer;
-use optcnn::graph::nets;
-use optcnn::pipeline::{Experiment, STRATEGY_NAMES};
+use optcnn::planner::{backend, ClusterSpec, Network, Planner, StrategyKind};
 use optcnn::runtime::ArtifactStore;
 use optcnn::util::cli::Args;
 use optcnn::util::table::Table;
@@ -25,10 +29,12 @@ const USAGE: &str = "\
 optcnn — layer-wise parallelism for CNN training (ICML'18 reproduction)
 
 USAGE:
-  optcnn optimize --network <net> --devices <n>
+  optcnn optimize --network <net> --devices <n> [--backend elimination|dfs]
+                  [--budget-ms <ms>] [--cluster <file.toml>]
   optcnn simulate --network <net> --devices <n> --strategy <s>
+                  [--cluster <file.toml>] [--trace out.json]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
-                  [--out plan.json]
+                  [--cluster <file.toml>] [--out plan.json]
   optcnn sweep    [--networks a,b] [--devices 1,2,4,8,16]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
@@ -36,56 +42,104 @@ USAGE:
   optcnn info
   optcnn run      --config <file.toml>
 
-NETWORKS:   lenet5 alexnet vgg16 inception_v3 resnet18 minicnn
+NETWORKS:   lenet5 alexnet vgg16 inception_v3 resnet18 resnet50 minicnn
 STRATEGIES: data model owt layerwise
+CLUSTERS:   P100 preset via --devices, arbitrary via --cluster (see config/)
 ";
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1), &["verbose", "csv"]);
-    let code = match args.subcommand.as_deref() {
-        Some("optimize") => cmd_optimize(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("plan") => cmd_plan(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("train") => cmd_train(&args),
-        Some("info") => cmd_info(&args),
-        Some("profile") => cmd_profile(&args),
-        Some("run") => cmd_run(&args),
-        _ => {
-            print!("{USAGE}");
-            2
+    let code = match dispatch(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            e.exit_code()
         }
     };
     std::process::exit(code);
 }
 
-fn cmd_optimize(args: &Args) -> i32 {
-    let net = args.get_or("network", "vgg16");
-    let ndev = args.get_usize("devices", 4);
-    let e = Experiment::new(net, ndev);
-    let g = e.graph();
-    let d = e.devices();
+fn dispatch(args: &Args) -> Result<i32> {
+    match args.subcommand.as_deref() {
+        Some("optimize") => cmd_optimize(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("plan") => cmd_plan(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("train") => cmd_train(args),
+        Some("info") => cmd_info(args),
+        Some("profile") => cmd_profile(args),
+        Some("run") => cmd_run(args),
+        _ => {
+            print!("{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+/// Shared `--network/--devices/--cluster/--batch/--backend` handling: the
+/// one place CLI flags become a typed [`Planner`] session.
+fn planner_from_args(args: &Args) -> Result<Planner> {
+    let network: Network = args.get_or("network", "vgg16").parse()?;
+    let mut builder = Planner::builder(network);
+    match args.get("cluster") {
+        Some(path) => {
+            if args.get("devices").is_some() {
+                return Err(OptError::InvalidArgument(
+                    "--devices and --cluster are mutually exclusive".into(),
+                ));
+            }
+            builder = builder.cluster(ClusterSpec::load(path)?);
+        }
+        None => builder = builder.devices(args.usize_or("devices", 4)?),
+    }
+    builder = builder.per_gpu_batch(args.usize_or("batch", optcnn::planner::PER_GPU_BATCH)?);
+    let backend_name = args.get_or("backend", "elimination");
+    let budget = match args.usize_or("budget-ms", 0)? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    if budget.is_some() && backend_name != "dfs" {
+        return Err(OptError::InvalidArgument(
+            "--budget-ms only applies to --backend dfs".into(),
+        ));
+    }
+    builder = builder.backend_boxed(backend::by_name(backend_name, budget)?);
+    builder.build()
+}
+
+fn cmd_optimize(args: &Args) -> Result<i32> {
+    let mut p = planner_from_args(args)?;
     let t0 = std::time::Instant::now();
-    let (strategy, stats) = e.strategy("layerwise", &g, &d);
+    let opt = p.optimize()?;
     let dt = t0.elapsed().as_secs_f64();
+    let eval = p.evaluate(StrategyKind::Layerwise)?;
     let mut table = Table::new(
-        &format!("optimal strategy: {net} on {ndev} GPU(s)"),
+        &format!("optimal strategy: {} on {} device(s)", p.network(), p.num_devices()),
         &["layer", "op", "configuration"],
     );
-    for l in &g.layers {
+    for l in &p.graph().layers {
         table.row(vec![
             l.name.clone(),
             l.op.mnemonic().to_string(),
-            strategy.config(l.id).label(),
+            opt.strategy.config(l.id).label(),
         ]);
     }
     table.print();
-    let eval = e.evaluate(&g, &d, &strategy);
-    let s = stats.unwrap();
-    println!(
-        "search: {} node elims, {} edge elims, K={}, {:.3}s",
-        s.node_eliminations, s.edge_eliminations, s.final_nodes, dt
-    );
+    let s = &opt.stats;
+    if p.backend_name() == "dfs" {
+        // the exhaustive baseline has no elimination phase: report the
+        // search-tree size instead of elimination/K statistics
+        println!("search[dfs]: {} search-tree nodes visited, {dt:.3}s", s.enumerated);
+    } else {
+        println!(
+            "search[{}]: {} node elims, {} edge elims, K={}, {:.3}s",
+            p.backend_name(),
+            s.node_eliminations,
+            s.edge_eliminations,
+            s.final_nodes,
+            dt
+        );
+    }
     println!(
         "estimated step {}  simulated step {}  throughput {:.0} img/s  comm {}/step",
         fmt_secs(eval.estimate),
@@ -93,31 +147,25 @@ fn cmd_optimize(args: &Args) -> i32 {
         eval.throughput,
         fmt_bytes(eval.comm.total())
     );
-    0
+    Ok(0)
 }
 
-fn cmd_simulate(args: &Args) -> i32 {
-    let net = args.get_or("network", "vgg16");
-    let ndev = args.get_usize("devices", 4);
-    let strat = args.get_or("strategy", "layerwise");
-    let e = Experiment::new(net, ndev);
+fn cmd_simulate(args: &Args) -> Result<i32> {
+    let strat: StrategyKind = args.get_or("strategy", "layerwise").parse()?;
+    let mut p = planner_from_args(args)?;
     if let Some(path) = args.get("trace") {
         // export the simulated schedule as a Chrome trace
         use optcnn::cost::CostModel;
         use optcnn::sim::trace;
-        let g = e.graph();
-        let d = e.devices();
-        let (s, _) = e.strategy(strat, &g, &d);
-        let cm = CostModel::new(&g, &d);
-        let events = trace::trace_events(&g, &d, &s, &cm);
-        if let Err(err) = std::fs::write(path, trace::to_chrome_trace(&events)) {
-            eprintln!("writing {path}: {err}");
-            return 1;
-        }
+        let s = p.strategy(strat)?;
+        let cm = CostModel::new(p.graph(), p.device_graph());
+        let events = trace::trace_events(p.graph(), p.device_graph(), &s, &cm);
+        std::fs::write(path, trace::to_chrome_trace(&events))
+            .map_err(|e| OptError::Io(format!("writing {path}: {e}")))?;
         println!("wrote {} trace events to {path} (open in chrome://tracing)", events.len());
     }
-    let eval = e.run(strat);
-    println!("{net} on {ndev} GPU(s), strategy={strat}");
+    let eval = p.evaluate(strat)?;
+    println!("{} on {} device(s), strategy={strat}", p.network(), p.num_devices());
     println!("  estimate (Eq.1): {}", fmt_secs(eval.estimate));
     println!("  simulated step:  {}", fmt_secs(eval.sim.step_time));
     println!("  throughput:      {:.0} images/s", eval.throughput);
@@ -128,33 +176,27 @@ fn cmd_simulate(args: &Args) -> i32 {
         fmt_bytes(eval.comm.xfer_bytes),
         fmt_bytes(eval.comm.sync_bytes)
     );
-    0
+    Ok(0)
 }
 
 /// Materialize a strategy into an `ExecutionPlan`, print its per-layer
 /// partitioning and transfer schedule summary, and optionally export the
 /// plan as JSON (`--out plan.json`) — the servable-artifact workflow.
-fn cmd_plan(args: &Args) -> i32 {
-    use optcnn::cost::CostModel;
-    use optcnn::plan::PlanCache;
+fn cmd_plan(args: &Args) -> Result<i32> {
     use optcnn::util::benchkit::time_once;
-    let net = args.get_or("network", "vgg16");
-    let ndev = args.get_usize("devices", 4);
-    let strat = args.get_or("strategy", "layerwise");
-    let e = Experiment::new(net, ndev);
-    let g = e.graph();
-    let d = e.devices();
-    let (strategy, _) = e.strategy(strat, &g, &d);
-    let cm = CostModel::new(&g, &d);
-    let mut cache = PlanCache::default();
-    let (plan, cold) = time_once(|| cache.get_or_build(&cm, &strategy));
-    let (_, warm) = time_once(|| cache.get_or_build(&cm, &strategy));
+    let strat: StrategyKind = args.get_or("strategy", "layerwise").parse()?;
+    let mut p = planner_from_args(args)?;
+    // resolve the strategy first so the cold timing measures plan
+    // materialization alone, not the table build + search
+    let strategy = p.strategy(strat)?;
+    let (plan, cold) = time_once(|| p.plan_for(&strategy));
+    let (_, warm) = time_once(|| p.plan_for(&strategy));
 
     let mut table = Table::new(
-        &format!("execution plan: {net} x{ndev}, strategy={strat}"),
+        &format!("execution plan: {} x{}, strategy={strat}", p.network(), p.num_devices()),
         &["layer", "op", "config", "tiles", "in-transfers", "sync"],
     );
-    for l in &g.layers {
+    for l in &p.graph().layers {
         let lp = plan.layer(l.id);
         let inbound: usize = plan
             .edges
@@ -182,49 +224,36 @@ fn cmd_plan(args: &Args) -> i32 {
         fmt_bytes(plan.xfer_bytes()),
         fmt_bytes(plan.sync_bytes())
     );
+    let stats = p.session_stats();
     println!(
         "plan build {} cold, {} from cache ({} hit / {} miss)",
         fmt_secs(cold),
         fmt_secs(warm),
-        cache.hits,
-        cache.misses
+        stats.plan_hits,
+        stats.plan_misses
     );
     if let Some(path) = args.get("out") {
         let text = plan.to_json().to_string();
-        if let Err(err) = std::fs::write(path, &text) {
-            eprintln!("writing {path}: {err}");
-            return 1;
-        }
+        std::fs::write(path, &text)
+            .map_err(|e| OptError::Io(format!("writing {path}: {e}")))?;
         println!("wrote plan ({} bytes of JSON) to {path}", text.len());
     }
-    0
+    Ok(0)
 }
 
-fn cmd_sweep(args: &Args) -> i32 {
-    let networks: Vec<String> = args
-        .get_or("networks", "alexnet,vgg16,inception_v3")
-        .split(',')
-        .map(str::to_string)
-        .collect();
-    let devices: Vec<usize> = args
-        .get_or("devices", "1,2,4,8,16")
-        .split(',')
-        .filter_map(|s| s.parse().ok())
-        .collect();
-    for net in &networks {
+fn cmd_sweep(args: &Args) -> Result<i32> {
+    let networks: Vec<Network> = args.list_or("networks", "alexnet,vgg16,inception_v3")?;
+    let devices: Vec<usize> = args.list_or("devices", "1,2,4,8,16")?;
+    for &net in &networks {
         let mut table = Table::new(
             &format!("{net}: simulated throughput (images/s)"),
-            &[&["GPUs".to_string()], STRATEGY_NAMES.map(String::from).as_slice()]
-                .concat()
-                .iter()
-                .map(String::as_str)
-                .collect::<Vec<_>>(),
+            &["GPUs", "data", "model", "owt", "layerwise"],
         );
         for &ndev in &devices {
-            let e = Experiment::new(net, ndev);
+            let mut p = Planner::builder(net).devices(ndev).build()?;
             let mut row = vec![ndev.to_string()];
-            for s in STRATEGY_NAMES {
-                row.push(format!("{:.0}", e.run(s).throughput));
+            for kind in StrategyKind::ALL {
+                row.push(format!("{:.0}", p.evaluate(kind)?.throughput));
             }
             table.row(row);
         }
@@ -234,34 +263,40 @@ fn cmd_sweep(args: &Args) -> i32 {
             table.print();
         }
     }
-    0
+    Ok(0)
 }
 
-fn cmd_train(args: &Args) -> i32 {
-    let steps = args.get_usize("steps", 100);
-    let ndev = args.get_usize("devices", 4);
-    let strat_name = args.get_or("strategy", "layerwise");
-    let lr = args.get_f64("lr", 0.01) as f32;
+fn cmd_train(args: &Args) -> Result<i32> {
+    let steps = args.usize_or("steps", 100)?;
+    let ndev = args.usize_or("devices", 4)?;
+    let strat: StrategyKind = args.get_or("strategy", "layerwise").parse()?;
+    let lr = args.f64_or("lr", 0.01)? as f32;
     let dir = args.get_or("artifacts", "artifacts");
     let store = match ArtifactStore::load(dir) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: {e:#}");
-            return 1;
+            return Ok(1);
         }
     };
     let batch = store.batch;
-    let e = Experiment::new("minicnn", ndev);
-    let g = nets::minicnn(batch);
-    let d = e.devices();
-    let (strategy, _) = Experiment { per_gpu_batch: batch / ndev, ..e.clone() }
-        .strategy(strat_name, &g, &d);
-    println!("training minicnn: batch={batch} devices={ndev} strategy={strat_name} lr={lr}");
+    if ndev == 0 || batch % ndev != 0 {
+        return Err(OptError::InvalidArgument(format!(
+            "--devices {ndev} must divide the artifact batch {batch}"
+        )));
+    }
+    let mut p = Planner::builder(Network::MiniCnn)
+        .devices(ndev)
+        .per_gpu_batch(batch / ndev)
+        .build()?;
+    let strategy = p.strategy(strat)?;
+    println!("training minicnn: batch={batch} devices={ndev} strategy={strat} lr={lr}");
+    let g = Network::MiniCnn.graph(batch);
     let mut trainer = match Trainer::new(&store, g, strategy, ndev, lr, 42) {
         Ok(t) => t,
         Err(e) => {
             eprintln!("error: {e:#}");
-            return 1;
+            return Ok(1);
         }
     };
     let ds = SyntheticDataset::new(10, 3, 32, 32, 0.3, 7);
@@ -276,7 +311,7 @@ fn cmd_train(args: &Args) -> i32 {
             }
             Err(e) => {
                 eprintln!("step {step}: {e:#}");
-                return 1;
+                return Ok(1);
             }
         }
     }
@@ -295,15 +330,16 @@ fn cmd_train(args: &Args) -> i32 {
         fmt_bytes(trainer.plan_comm.xfer_bytes as f64),
         fmt_bytes(trainer.plan_comm.sync_bytes as f64)
     );
-    0
+    Ok(0)
 }
 
-fn cmd_info(args: &Args) -> i32 {
+fn cmd_info(args: &Args) -> Result<i32> {
     println!("networks:");
-    for n in ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18", "minicnn"] {
-        let g = nets::by_name(n, 32).unwrap();
+    for n in Network::ALL {
+        let g = n.graph(32);
         println!(
-            "  {n:<14} {:>4} layers  {:>12} params  {:>8.1} GFLOP/step(b=32)",
+            "  {:<14} {:>4} layers  {:>12} params  {:>8.1} GFLOP/step(b=32)",
+            n.name(),
             g.num_layers(),
             g.total_params(),
             g.total_train_flops() / 1e9
@@ -320,33 +356,33 @@ fn cmd_info(args: &Args) -> i32 {
         ),
         Err(_) => println!("artifacts: none at `{dir}` (run `make artifacts`)"),
     }
-    0
+    Ok(0)
 }
 
 /// The paper's measured-`t_C` mode: profile every (layer, configuration)
 /// of MiniCNN by executing its artifacts, then run the search on the
 /// measured tables and compare against the analytic optimum.
-fn cmd_profile(args: &Args) -> i32 {
+fn cmd_profile(args: &Args) -> Result<i32> {
     use optcnn::cost::{profile, CostModel, CostTables};
-    let ndev = args.get_usize("devices", 4);
-    let reps = args.get_usize("reps", 3);
+    let ndev = args.usize_or("devices", 4)?;
+    let reps = args.usize_or("reps", 3)?;
     let dir = args.get_or("artifacts", "artifacts");
     let store = match ArtifactStore::load(dir) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: {e:#}");
-            return 1;
+            return Ok(1);
         }
     };
-    let g = nets::minicnn(store.batch);
-    let d = Experiment::new("minicnn", ndev).devices();
+    let g = Network::MiniCnn.graph(store.batch);
+    let d = ClusterSpec::p100(ndev)?.device_graph()?;
     let cm = CostModel::new(&g, &d);
     println!("profiling minicnn artifacts ({reps} reps per config)...");
     let measured = match profile::profile_graph(&store, &g, &cm, ndev, reps) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("error: {e:#}");
-            return 1;
+            return Ok(1);
         }
     };
     let analytic = optcnn::optimizer::optimize(&CostTables::build(&cm, ndev));
@@ -370,30 +406,16 @@ fn cmd_profile(args: &Args) -> i32 {
         fmt_secs(analytic.cost),
         fmt_secs(profiled.cost)
     );
-    0
+    Ok(0)
 }
 
-fn cmd_run(args: &Args) -> i32 {
+fn cmd_run(args: &Args) -> Result<i32> {
     let Some(path) = args.get("config") else {
-        eprintln!("run requires --config <file.toml>");
-        return 2;
+        return Err(OptError::InvalidArgument("run requires --config <file.toml>".into()));
     };
-    let cfg = match ExperimentConfig::load(path) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
-        }
-    };
-    let e = Experiment {
-        network: cfg.network.clone(),
-        ndev: cfg.num_devices(),
-        per_gpu_batch: cfg.per_gpu_batch,
-    };
-    let g = e.graph();
-    let d = cfg.device_graph();
-    let (strategy, _) = e.strategy(&cfg.strategy, &g, &d);
-    let eval = e.evaluate(&g, &d, &strategy);
+    let cfg = ExperimentConfig::load(path)?;
+    let mut p = cfg.planner()?;
+    let eval = p.evaluate(cfg.strategy)?;
     println!(
         "{} x{} ({}): step {} throughput {:.0} img/s comm {}",
         cfg.network,
@@ -403,5 +425,5 @@ fn cmd_run(args: &Args) -> i32 {
         eval.throughput,
         fmt_bytes(eval.comm.total())
     );
-    0
+    Ok(0)
 }

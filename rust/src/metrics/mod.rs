@@ -60,7 +60,7 @@ mod tests {
         // AlexNet's 61M params under data parallelism: sync volume dwarfs
         // tensor movement (there is none for pure data parallelism).
         let g = nets::alexnet(32 * 4);
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let v = comm_volume(&cm, &strategies::data_parallel(&g, 4));
         assert_eq!(v.xfer_bytes, 0.0);
@@ -72,7 +72,7 @@ mod tests {
         // The paper's Figure 8: OWT cuts AlexNet comm by >10x vs data
         // parallelism (fc layers hold ~95% of AlexNet's parameters).
         let g = nets::alexnet(32 * 4);
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let dp = comm_volume(&cm, &strategies::data_parallel(&g, 4));
         let ow = comm_volume(&cm, &strategies::owt(&g, 4));

@@ -108,7 +108,7 @@ mod tests {
     #[test]
     fn dfs_completes_on_lenet() {
         let g = nets::lenet5(64);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 2);
         let r = dfs_optimal(&t, None);
         assert!(r.complete);
@@ -119,7 +119,7 @@ mod tests {
     #[test]
     fn deadline_truncates_large_search() {
         let g = nets::vgg16(128);
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 4);
         let r = dfs_optimal(&t, Some(Duration::from_millis(50)));
         assert!(!r.complete, "VGG-16 at 4 devices must not finish in 50ms");
@@ -129,7 +129,7 @@ mod tests {
     #[test]
     fn dfs_cost_consistent_with_tables() {
         let g = nets::lenet5(32);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 2);
         let r = dfs_optimal(&t, None);
         let idx: Vec<usize> = r

@@ -294,7 +294,7 @@ mod tests {
 
     fn tables_for(net: &str, ndev: usize) -> CostTables {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         CostTables::build(&cm, ndev)
     }
@@ -341,7 +341,7 @@ mod tests {
     fn optimum_beats_or_ties_baselines() {
         for ndev in [2usize, 4] {
             let g = nets::alexnet(32 * ndev);
-            let d = DeviceGraph::p100_cluster(ndev);
+            let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let cm = CostModel::new(&g, &d);
             let t = CostTables::build(&cm, ndev);
             let opt = optimize(&t);

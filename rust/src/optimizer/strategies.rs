@@ -131,7 +131,7 @@ mod tests {
     fn baselines_are_legal_configs() {
         for ndev in [2usize, 4] {
             let g = nets::inception_v3(32 * ndev);
-            let d = DeviceGraph::p100_cluster(ndev);
+            let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let t = CostTables::build(&CostModel::new(&g, &d), ndev);
             for name in BASELINE_NAMES {
                 let s = by_name(name, &g, ndev).unwrap();

@@ -1,137 +1,58 @@
-//! High-level experiment pipeline: the API the CLI, the examples, and the
-//! bench harnesses share.
+//! Legacy experiment shim.
 //!
-//! One [`Experiment`] = (network, device count, per-GPU batch). It owns
-//! graph + device-graph construction, strategy resolution (baselines or
-//! the layer-wise optimizer), and evaluation (cost model + discrete-event
-//! simulation + communication accounting).
+//! [`Experiment`] was the crate's original stringly-typed entry point;
+//! it survives as a thin delegating wrapper around the typed
+//! [`crate::planner::Planner`] session API so old call sites keep
+//! working. New code should use [`Planner`] directly — see DESIGN.md §3
+//! for the migration table.
 
-use crate::cost::{CostModel, CostTables};
-use crate::device::DeviceGraph;
-use crate::graph::{nets, CompGraph};
-use crate::metrics::CommBreakdown;
-use crate::optimizer::{self, strategies, SearchStats};
-use crate::parallel::Strategy;
-use crate::plan::ExecutionPlan;
-use crate::sim::{steady_state_step_plan, SimReport};
+use crate::error::Result;
+use crate::planner::{Network, Planner, StrategyKind};
 
-/// The paper's default per-GPU batch size.
-pub const PER_GPU_BATCH: usize = 32;
+pub use crate::planner::{Evaluation as Eval, PER_GPU_BATCH};
 
-/// All strategy names accepted by [`Experiment::strategy`].
+/// All strategy names accepted by [`Experiment::run`].
 pub const STRATEGY_NAMES: [&str; 4] = ["data", "model", "owt", "layerwise"];
 
-/// One experiment point: a network trained on a cluster.
+/// One experiment point: a network trained on a P100 cluster. A
+/// stringly-typed convenience wrapper over [`Planner`]; name resolution
+/// is deferred to [`Experiment::planner`] / [`Experiment::run`], which
+/// report unknown names as errors instead of panicking.
 #[derive(Debug, Clone)]
 pub struct Experiment {
+    /// Network name (see [`Network`] for the accepted spellings).
     pub network: String,
+    /// Device count (the paper's P100 preset shapes).
     pub ndev: usize,
+    /// Per-GPU batch size.
     pub per_gpu_batch: usize,
 }
 
-/// Evaluation of one strategy on one experiment point.
-#[derive(Debug, Clone)]
-pub struct Eval {
-    /// Equation 1 estimate (seconds/step) — the paper's validated cost
-    /// model (their Table 4 shows it within 10% of the real cluster), and
-    /// therefore the primary throughput predictor here.
-    pub estimate: f64,
-    /// Discrete-event steady-state simulation of the same step (the
-    /// independent check; it overlaps communication more aggressively
-    /// than the serial-sum estimate).
-    pub sim: SimReport,
-    /// Per-step communication volume.
-    pub comm: CommBreakdown,
-    /// Cost-model training throughput (images/s) = batch / estimate.
-    pub throughput: f64,
-    /// Simulated training throughput (images/s) = batch / sim step.
-    pub sim_throughput: f64,
-}
-
 impl Experiment {
+    /// An experiment at the paper's default per-GPU batch.
     pub fn new(network: &str, ndev: usize) -> Experiment {
         Experiment { network: network.to_string(), ndev, per_gpu_batch: PER_GPU_BATCH }
     }
 
+    /// Global batch size across the cluster.
     pub fn global_batch(&self) -> usize {
         self.per_gpu_batch * self.ndev
     }
 
-    pub fn graph(&self) -> CompGraph {
-        nets::by_name(&self.network, self.global_batch())
-            .unwrap_or_else(|| panic!("unknown network `{}`", self.network))
+    /// Open the typed planning session this experiment describes.
+    pub fn planner(&self) -> Result<Planner> {
+        let network: Network = self.network.parse()?;
+        Planner::builder(network)
+            .devices(self.ndev)
+            .per_gpu_batch(self.per_gpu_batch)
+            .build()
     }
 
-    pub fn devices(&self) -> DeviceGraph {
-        DeviceGraph::p100_cluster(self.ndev)
-    }
-
-    /// Build the cost tables for this experiment (the expensive step; call
-    /// once and reuse when resolving multiple strategies).
-    pub fn tables(&self, graph: &CompGraph, devices: &DeviceGraph) -> CostTables {
-        let cm = CostModel::new(graph, devices);
-        CostTables::build(&cm, self.ndev)
-    }
-
-    /// Resolve a strategy by name: a baseline or `layerwise` (Algorithm 1).
-    /// Returns the strategy and, for `layerwise`, the search stats.
-    pub fn strategy(
-        &self,
-        name: &str,
-        graph: &CompGraph,
-        devices: &DeviceGraph,
-    ) -> (Strategy, Option<SearchStats>) {
-        match name {
-            "layerwise" => {
-                let tables = self.tables(graph, devices);
-                let opt = optimizer::optimize(&tables);
-                (opt.strategy, Some(opt.stats))
-            }
-            _ => (
-                strategies::by_name(name, graph, self.ndev)
-                    .unwrap_or_else(|| panic!("unknown strategy `{name}`")),
-                None,
-            ),
-        }
-    }
-
-    /// Evaluate a strategy: Eq. 1 estimate, steady-state simulation (sync
-    /// on the inter-step critical path), comm volume. Materializes the
-    /// strategy's [`ExecutionPlan`] once and derives simulation and
-    /// communication accounting from it.
-    pub fn evaluate(
-        &self,
-        graph: &CompGraph,
-        devices: &DeviceGraph,
-        strategy: &Strategy,
-    ) -> Eval {
-        let cm = CostModel::new(graph, devices);
-        let plan = ExecutionPlan::build(&cm, strategy);
-        self.evaluate_plan(&cm, strategy, &plan)
-    }
-
-    /// [`Experiment::evaluate`] against a prebuilt (typically cached)
-    /// plan: repeated evaluation queries skip all tiling/overlap work.
-    pub fn evaluate_plan(
-        &self,
-        cm: &CostModel,
-        strategy: &Strategy,
-        plan: &ExecutionPlan,
-    ) -> Eval {
-        let estimate = cm.t_o(strategy);
-        let sim = steady_state_step_plan(plan, cm);
-        let comm = plan.comm();
-        let throughput = self.global_batch() as f64 / estimate;
-        let sim_throughput = sim.throughput(self.global_batch());
-        Eval { estimate, sim, comm, throughput, sim_throughput }
-    }
-
-    /// Convenience: resolve + evaluate in one call.
-    pub fn run(&self, strategy_name: &str) -> Eval {
-        let g = self.graph();
-        let d = self.devices();
-        let (s, _) = self.strategy(strategy_name, &g, &d);
-        self.evaluate(&g, &d, &s)
+    /// Resolve + evaluate a strategy by name in one call (one-shot; for
+    /// repeated queries keep the [`Experiment::planner`] session).
+    pub fn run(&self, strategy_name: &str) -> Result<Eval> {
+        let kind: StrategyKind = strategy_name.parse()?;
+        self.planner()?.evaluate(kind)
     }
 }
 
@@ -144,7 +65,7 @@ mod tests {
         let e = Experiment::new("alexnet", 4);
         let mut tps = std::collections::BTreeMap::new();
         for s in STRATEGY_NAMES {
-            let eval = e.run(s);
+            let eval = e.run(s).unwrap();
             assert!(eval.throughput > 0.0);
             assert!(eval.sim.step_time > 0.0);
             tps.insert(s, eval.throughput);
@@ -160,11 +81,27 @@ mod tests {
     #[test]
     fn single_device_strategies_coincide() {
         let e = Experiment::new("lenet5", 1);
-        let a = e.run("data");
-        let b = e.run("layerwise");
+        let a = e.run("data").unwrap();
+        let b = e.run("layerwise").unwrap();
         assert_eq!(a.comm.total(), 0.0);
         assert_eq!(b.comm.total(), 0.0);
         // identical serial execution
         assert!((a.sim.step_time - b.sim.step_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_names_error_instead_of_panicking() {
+        assert!(Experiment::new("nope", 4).run("data").is_err());
+        assert!(Experiment::new("alexnet", 4).run("nope").is_err());
+    }
+
+    #[test]
+    fn shim_matches_the_session_api() {
+        let e = Experiment::new("lenet5", 2);
+        let one_shot = e.run("owt").unwrap();
+        let mut session = e.planner().unwrap();
+        let warm = session.evaluate(crate::planner::StrategyKind::Owt).unwrap();
+        assert_eq!(one_shot.estimate, warm.estimate);
+        assert_eq!(one_shot.sim.step_time, warm.sim.step_time);
     }
 }

@@ -137,7 +137,7 @@ mod tests {
     #[test]
     fn hit_returns_the_same_plan() {
         let g = nets::lenet5(64);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 2);
         let mut cache = PlanCache::new(4);
@@ -150,7 +150,7 @@ mod tests {
     #[test]
     fn distinct_strategies_get_distinct_entries() {
         let g = nets::lenet5(64);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let mut cache = PlanCache::new(4);
         let a = cache.get_or_build(&cm, &strategies::data_parallel(&g, 2));
@@ -162,7 +162,7 @@ mod tests {
     #[test]
     fn lru_evicts_the_coldest_entry() {
         let g = nets::lenet5(64);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let data = strategies::data_parallel(&g, 2);
         let model = strategies::model_parallel(&g, 2);
@@ -182,7 +182,7 @@ mod tests {
 
     #[test]
     fn batch_size_is_part_of_the_key() {
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let g1 = nets::lenet5(32);
         let g2 = nets::lenet5(64);
         let k1 = PlanKey::of(&CostModel::new(&g1, &d), &strategies::data_parallel(&g1, 2));
@@ -197,9 +197,9 @@ mod tests {
         use crate::device::ComputeModel;
         let g = nets::alexnet(32 * 8);
         let s = strategies::model_parallel(&g, 8);
-        let two_by_four = DeviceGraph::p100_cluster(8);
+        let two_by_four = DeviceGraph::p100_cluster(8).unwrap();
         let one_by_eight =
-            DeviceGraph::cluster("flat8", 1, 8, 15e9, 3e9, 12e9, ComputeModel::p100());
+            DeviceGraph::cluster("flat8", 1, 8, 15e9, 3e9, 12e9, ComputeModel::p100()).unwrap();
         let k1 = PlanKey::of(&CostModel::new(&g, &two_by_four), &s);
         let k2 = PlanKey::of(&CostModel::new(&g, &one_by_eight), &s);
         assert_ne!(k1, k2);
@@ -210,7 +210,7 @@ mod tests {
         // Same name, same input shape, same degrees — different layer
         // widths must still be distinguished.
         use crate::graph::GraphBuilder;
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let build = |cout: usize| {
             let mut b = GraphBuilder::new("same-name");
             let x = b.input(8, 3, 16, 16);

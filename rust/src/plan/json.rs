@@ -322,7 +322,7 @@ mod tests {
 
     fn roundtrip(net: &str, ndev: usize, strat: &str) {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::by_name(strat, &g, ndev).unwrap();
         let plan = ExecutionPlan::build(&cm, &s);
@@ -350,7 +350,7 @@ mod tests {
     #[test]
     fn rejects_out_of_range_indices() {
         let g = nets::lenet5(32);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let plan = ExecutionPlan::build(&cm, &strategies::data_parallel(&g, 2));
         // corrupt a device index beyond ndev and re-parse

@@ -22,7 +22,7 @@
 //! [`PlanCache`] keyed on (net, strategy, device count), which makes them
 //! servable artifacts rather than transient in-memory derivations — the
 //! property PaSE-style systems rely on to answer many planning queries
-//! fast (DESIGN.md §3).
+//! fast (DESIGN.md §4).
 
 pub mod cache;
 mod json;
@@ -304,7 +304,7 @@ mod tests {
 
     fn plan_for(net: &str, ndev: usize, strat: &str) -> ExecutionPlan {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::by_name(strat, &g, ndev).unwrap();
         ExecutionPlan::build(&cm, &s)
@@ -330,7 +330,7 @@ mod tests {
             [("lenet5", 2, "owt"), ("alexnet", 4, "model"), ("vgg16", 4, "owt")]
         {
             let g = nets::by_name(net, 32 * ndev).unwrap();
-            let d = DeviceGraph::p100_cluster(ndev);
+            let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let cm = CostModel::new(&g, &d);
             let s = strategies::by_name(strat, &g, ndev).unwrap();
             let p = ExecutionPlan::build(&cm, &s);
@@ -359,7 +359,7 @@ mod tests {
     fn sync_bytes_match_cost_model_accounting() {
         for (net, ndev) in [("lenet5", 2), ("alexnet", 4), ("vgg16", 4)] {
             let g = nets::by_name(net, 32 * ndev).unwrap();
-            let d = DeviceGraph::p100_cluster(ndev);
+            let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let cm = CostModel::new(&g, &d);
             let s = strategies::data_parallel(&g, ndev);
             let p = ExecutionPlan::build(&cm, &s);

@@ -1,0 +1,149 @@
+//! Pluggable strategy-search backends.
+//!
+//! The planner treats "find the best per-layer parallelization" as an
+//! interchangeable component: Algorithm 1's graph-elimination dynamic
+//! program ([`Elimination`], the paper's contribution) and the exhaustive
+//! depth-first baseline it is measured against ([`ExhaustiveDfs`],
+//! Table 3's comparison point) both implement [`SearchBackend`], selected
+//! when the [`crate::planner::Planner`] is built.
+
+use std::time::Duration;
+
+use crate::cost::CostTables;
+use crate::error::{OptError, Result};
+use crate::optimizer::{self, dfs, Optimized, SearchStats};
+
+/// A strategy-search algorithm over precomputed [`CostTables`].
+///
+/// Implementations must return the globally optimal strategy for the
+/// tables — or an error if they cannot (a truncated search with no
+/// complete leaf). Backends are stateless between calls; the planner owns
+/// all caching.
+pub trait SearchBackend {
+    /// Short name for logs and CLI selection (`--backend <name>`).
+    fn name(&self) -> &'static str;
+
+    /// Search the tables for a minimum-cost strategy.
+    fn search(&self, tables: &CostTables) -> Result<Optimized>;
+}
+
+/// Algorithm 1 (paper §5.2): node/edge elimination to a small final graph,
+/// enumerate, reconstruct. `O(E·C³ + K·C^K)` — the production default.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Elimination;
+
+impl SearchBackend for Elimination {
+    fn name(&self) -> &'static str {
+        "elimination"
+    }
+
+    fn search(&self, tables: &CostTables) -> Result<Optimized> {
+        Ok(optimizer::optimize(tables))
+    }
+}
+
+/// The exhaustive `O(E·C^N)` depth-first baseline with branch-and-bound
+/// pruning and an optional wall-clock budget — the algorithm the paper
+/// reports taking `> 24 hours` on VGG-16. Only sensible for small graphs
+/// or bounded runs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExhaustiveDfs {
+    /// Wall-clock budget; `None` runs to completion. A search that hits
+    /// its budget before exploring the full space errors
+    /// ([`OptError::SearchFailed`]) — it cannot certify an optimum, and
+    /// the [`SearchBackend`] contract is optimal-or-error.
+    pub budget: Option<Duration>,
+}
+
+impl ExhaustiveDfs {
+    /// An exhaustive search capped at `budget` of wall-clock time.
+    pub fn with_budget(budget: Duration) -> ExhaustiveDfs {
+        ExhaustiveDfs { budget: Some(budget) }
+    }
+}
+
+impl SearchBackend for ExhaustiveDfs {
+    fn name(&self) -> &'static str {
+        "dfs"
+    }
+
+    fn search(&self, tables: &CostTables) -> Result<Optimized> {
+        let r = dfs::dfs_optimal(tables, self.budget);
+        if !r.complete {
+            return Err(OptError::SearchFailed(format!(
+                "exhaustive DFS hit its budget ({:?}) after {} search-tree nodes without \
+                 exploring the full space; raise the budget or use the elimination backend",
+                self.budget, r.visited
+            )));
+        }
+        let strategy = r.strategy.ok_or_else(|| {
+            OptError::SearchFailed("exhaustive DFS explored an empty search space".into())
+        })?;
+        Ok(Optimized {
+            strategy,
+            cost: r.cost,
+            stats: SearchStats {
+                node_eliminations: 0,
+                edge_eliminations: 0,
+                final_nodes: tables.configs.len(),
+                enumerated: r.visited,
+            },
+        })
+    }
+}
+
+/// Resolve a backend by CLI name: `elimination` (the default) or `dfs`
+/// (optionally budgeted).
+pub fn by_name(name: &str, dfs_budget: Option<Duration>) -> Result<Box<dyn SearchBackend>> {
+    match name {
+        "elimination" => Ok(Box::new(Elimination)),
+        "dfs" => Ok(Box::new(ExhaustiveDfs { budget: dfs_budget })),
+        other => Err(OptError::UnknownBackend(other.to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+
+    fn lenet_tables() -> CostTables {
+        let g = nets::lenet5(64);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
+        // tables only borrow the graph/devices during build
+        CostTables::build(&CostModel::new(&g, &d), 2)
+    }
+
+    #[test]
+    fn backends_agree_on_small_graphs() {
+        let t = lenet_tables();
+        let a = Elimination.search(&t).unwrap();
+        let b = ExhaustiveDfs::default().search(&t).unwrap();
+        assert!(
+            (a.cost - b.cost).abs() <= 1e-9 * a.cost,
+            "elimination {} vs dfs {}",
+            a.cost,
+            b.cost
+        );
+    }
+
+    #[test]
+    fn dfs_with_zero_budget_errors() {
+        let t = lenet_tables();
+        let r = ExhaustiveDfs::with_budget(Duration::from_nanos(0)).search(&t);
+        // either it reached a leaf before the first deadline check or it
+        // reports a clean SearchFailed — never a panic
+        if let Err(e) = r {
+            assert!(matches!(e, OptError::SearchFailed(_)));
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(by_name("elimination", None).unwrap().name(), "elimination");
+        assert_eq!(by_name("dfs", None).unwrap().name(), "dfs");
+        assert!(matches!(by_name("anneal", None), Err(OptError::UnknownBackend(_))));
+    }
+}

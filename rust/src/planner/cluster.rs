@@ -1,0 +1,256 @@
+//! Typed cluster specifications.
+//!
+//! [`ClusterSpec`] is the builder the planner consumes: device counts,
+//! per-device compute model, and intra-/inter-node bandwidths, with the
+//! paper's P100 testbed as a preset and a TOML form (`[cluster]` section,
+//! see `config/` at the repo root) for non-P100 and custom topologies.
+//! All validation happens in [`ClusterSpec::device_graph`], which is the
+//! single choke point between user-described hardware and the cost model.
+
+use crate::config::Toml;
+use crate::device::{p100, ComputeModel, DeviceGraph};
+use crate::error::{OptError, Result};
+
+/// A declarative cluster description: what the user asks for, before any
+/// validation. Turn it into hardware with [`ClusterSpec::device_graph`].
+///
+/// ```
+/// use optcnn::planner::ClusterSpec;
+/// use optcnn::device::ComputeModel;
+///
+/// let d = ClusterSpec::new(2, 8)
+///     .name("v100-pod")
+///     .compute(ComputeModel::v100())
+///     .intra_bw(50e9)
+///     .inter_bw(6e9)
+///     .device_graph()
+///     .unwrap();
+/// assert_eq!(d.num_devices(), 16);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    name: String,
+    nodes: usize,
+    gpus_per_node: usize,
+    intra_bw: f64,
+    inter_bw: f64,
+    host_bw: f64,
+    compute: ComputeModel,
+}
+
+impl ClusterSpec {
+    /// A `nodes x gpus_per_node` cluster with the paper's P100 link and
+    /// compute defaults (the inter-node default fans the NIC bandwidth
+    /// out across the node's GPUs, like the preset does); override any
+    /// field with the builder methods. Degenerate shapes are reported by
+    /// [`ClusterSpec::device_graph`], not here, so specs can be
+    /// assembled freely.
+    pub fn new(nodes: usize, gpus_per_node: usize) -> ClusterSpec {
+        ClusterSpec {
+            name: format!("{nodes}x{gpus_per_node}"),
+            nodes,
+            gpus_per_node,
+            intra_bw: p100::INTRA_BW,
+            inter_bw: p100::NIC_BW / gpus_per_node.max(1) as f64,
+            host_bw: p100::HOST_BW,
+            compute: ComputeModel::p100(),
+        }
+    }
+
+    /// The paper's testbed preset scaled to `ngpus` devices (1, 2, 4 or a
+    /// multiple of 4): up to 4 P100s per node, NVLink intra-node, the
+    /// node NIC's bandwidth fanned out across its GPUs inter-node. The
+    /// shape rule and link constants are [`crate::device::p100`]'s, so
+    /// this spec always matches [`DeviceGraph::p100_cluster`].
+    pub fn p100(ngpus: usize) -> Result<ClusterSpec> {
+        let (nodes, gpus_per_node) = p100::shape(ngpus)?;
+        Ok(ClusterSpec {
+            name: format!("p100x{ngpus}"),
+            nodes,
+            gpus_per_node,
+            intra_bw: p100::INTRA_BW,
+            inter_bw: p100::NIC_BW / gpus_per_node as f64,
+            host_bw: p100::HOST_BW,
+            compute: ComputeModel::p100(),
+        })
+    }
+
+    /// Set the cluster's display name.
+    pub fn name(mut self, name: &str) -> ClusterSpec {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Set the effective intra-node point-to-point bandwidth, bytes/s.
+    pub fn intra_bw(mut self, bw: f64) -> ClusterSpec {
+        self.intra_bw = bw;
+        self
+    }
+
+    /// Set the effective inter-node point-to-point bandwidth, bytes/s.
+    pub fn inter_bw(mut self, bw: f64) -> ClusterSpec {
+        self.inter_bw = bw;
+        self
+    }
+
+    /// Set the device-to-host (PCIe) bandwidth, bytes/s.
+    pub fn host_bw(mut self, bw: f64) -> ClusterSpec {
+        self.host_bw = bw;
+        self
+    }
+
+    /// Set the per-device compute model (see [`ComputeModel::named`] for
+    /// the presets).
+    pub fn compute(mut self, compute: ComputeModel) -> ClusterSpec {
+        self.compute = compute;
+        self
+    }
+
+    /// Total device count this spec describes.
+    pub fn num_devices(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Validate the spec and materialize the device graph the cost model,
+    /// simulator, and plans consume.
+    pub fn device_graph(&self) -> Result<DeviceGraph> {
+        DeviceGraph::cluster(
+            &self.name,
+            self.nodes,
+            self.gpus_per_node,
+            self.intra_bw,
+            self.inter_bw,
+            self.host_bw,
+            self.compute,
+        )
+    }
+
+    /// Read a spec from the `[cluster]` section of a parsed TOML document
+    /// (bandwidths in GB/s, `compute = "p100" | "v100" | "a100"` with
+    /// optional `peak_tflops` / `mem_bw_gbps` overrides). Missing keys
+    /// fall back to the P100 defaults of [`ClusterSpec::new`]; present
+    /// keys of the wrong type are config errors, never silent defaults.
+    pub fn from_toml(doc: &Toml) -> Result<ClusterSpec> {
+        let nodes = doc.try_usize_or("cluster", "nodes", 1)?;
+        let gpus_per_node = doc.try_usize_or("cluster", "gpus_per_node", 4)?;
+        let mut spec = ClusterSpec::new(nodes, gpus_per_node);
+        spec.intra_bw = doc.try_f64_or("cluster", "intra_bw_gbps", spec.intra_bw / 1e9)? * 1e9;
+        spec.inter_bw = doc.try_f64_or("cluster", "inter_bw_gbps", spec.inter_bw / 1e9)? * 1e9;
+        spec.host_bw = doc.try_f64_or("cluster", "host_bw_gbps", spec.host_bw / 1e9)? * 1e9;
+        if let Some(v) = doc.get("cluster", "compute") {
+            let name = v.as_str().ok_or_else(|| {
+                OptError::Config("cluster.compute must be a string".into())
+            })?;
+            spec.compute = ComputeModel::named(name)?;
+        }
+        if let Some(v) = doc.get("cluster", "peak_tflops") {
+            spec.compute.peak_flops = v.as_f64().ok_or_else(|| {
+                OptError::Config("cluster.peak_tflops must be a number".into())
+            })? * 1e12;
+        }
+        if let Some(v) = doc.get("cluster", "mem_bw_gbps") {
+            spec.compute.mem_bw = v.as_f64().ok_or_else(|| {
+                OptError::Config("cluster.mem_bw_gbps must be a number".into())
+            })? * 1e9;
+        }
+        if let Some(v) = doc.get("cluster", "name") {
+            spec.name = v
+                .as_str()
+                .ok_or_else(|| OptError::Config("cluster.name must be a string".into()))?
+                .to_string();
+        }
+        Ok(spec)
+    }
+
+    /// Load a spec from a TOML file (see `config/` for examples).
+    pub fn load(path: &str) -> Result<ClusterSpec> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| OptError::Io(format!("{path}: {e}")))?;
+        ClusterSpec::from_toml(&Toml::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p100_preset_matches_device_preset() {
+        for n in [1usize, 2, 4, 8, 16] {
+            let from_spec = ClusterSpec::p100(n).unwrap().device_graph().unwrap();
+            let preset = DeviceGraph::p100_cluster(n).unwrap();
+            assert_eq!(from_spec.num_devices(), preset.num_devices());
+            assert_eq!(from_spec.num_nodes(), preset.num_nodes());
+            assert_eq!(from_spec.host_bw, preset.host_bw);
+            assert_eq!(from_spec.node_bw, preset.node_bw);
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(from_spec.bandwidth(i, j), preset.bandwidth(i, j));
+                }
+            }
+        }
+        assert!(ClusterSpec::p100(6).is_err());
+    }
+
+    #[test]
+    fn builder_overrides_apply() {
+        let d = ClusterSpec::new(2, 2)
+            .name("tiny")
+            .intra_bw(40e9)
+            .inter_bw(5e9)
+            .host_bw(16e9)
+            .compute(ComputeModel::a100())
+            .device_graph()
+            .unwrap();
+        assert_eq!(d.name, "tiny");
+        assert_eq!(d.num_devices(), 4);
+        assert_eq!(d.bandwidth(0, 1), 40e9);
+        assert_eq!(d.bandwidth(0, 2), 5e9);
+        assert_eq!(d.compute.peak_flops, ComputeModel::a100().peak_flops);
+    }
+
+    #[test]
+    fn validation_happens_at_materialization() {
+        // assembling a bad spec is fine; materializing it is not
+        let spec = ClusterSpec::new(0, 4);
+        assert!(spec.device_graph().is_err());
+        assert!(ClusterSpec::new(1, 4).intra_bw(0.0).device_graph().is_err());
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let doc = Toml::parse(
+            r#"
+[cluster]
+name = "v100-pod"
+nodes = 2
+gpus_per_node = 8
+intra_bw_gbps = 130.0
+inter_bw_gbps = 6.0
+compute = "v100"
+"#,
+        )
+        .unwrap();
+        let spec = ClusterSpec::from_toml(&doc).unwrap();
+        assert_eq!(spec.num_devices(), 16);
+        let d = spec.device_graph().unwrap();
+        assert_eq!(d.name, "v100-pod");
+        assert_eq!(d.bandwidth(0, 1), 130e9);
+        assert_eq!(d.bandwidth(0, 8), 6e9);
+        assert_eq!(d.compute.peak_flops, ComputeModel::v100().peak_flops);
+    }
+
+    #[test]
+    fn toml_rejects_unknown_compute() {
+        let doc = Toml::parse("[cluster]\ncompute = \"tpu\"\n").unwrap();
+        assert!(ClusterSpec::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_compute_overrides() {
+        let doc = Toml::parse("[cluster]\npeak_tflops = 30.0\nmem_bw_gbps = 2000\n").unwrap();
+        let spec = ClusterSpec::from_toml(&doc).unwrap();
+        assert_eq!(spec.device_graph().unwrap().compute.peak_flops, 30e12);
+        assert_eq!(spec.device_graph().unwrap().compute.mem_bw, 2000e9);
+    }
+}

@@ -1,0 +1,566 @@
+//! The public planning API: a typed, fallible session facade.
+//!
+//! This is the crate's front door (DESIGN.md §3). A [`Planner`] is a
+//! long-lived session bound to one (network, cluster) pair:
+//!
+//! ```
+//! use optcnn::planner::{Network, Planner, StrategyKind};
+//!
+//! # fn main() -> optcnn::Result<()> {
+//! let mut planner = Planner::builder(Network::AlexNet).devices(4).build()?;
+//! let eval = planner.evaluate(StrategyKind::Layerwise)?;
+//! assert!(eval.throughput > 0.0);
+//! // repeated queries reuse the session's cost tables and plans
+//! let again = planner.evaluate(StrategyKind::Layerwise)?;
+//! assert_eq!(eval.estimate, again.estimate);
+//! assert_eq!(planner.session_stats().table_builds, 1);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Design points:
+//!
+//! * **Typed names.** [`Network`] and [`StrategyKind`] replace stringly
+//!   lookups; both round-trip through [`std::str::FromStr`] /
+//!   [`std::fmt::Display`] for CLI and config use, and unknown names
+//!   surface as [`OptError`] values, never panics.
+//! * **Pluggable search.** The optimization algorithm is a
+//!   [`SearchBackend`] chosen at build time: [`Elimination`]
+//!   (Algorithm 1) by default, [`ExhaustiveDfs`] for ground truth.
+//! * **Arbitrary clusters.** A [`ClusterSpec`] describes any
+//!   `nodes x gpus_per_node` topology with custom bandwidths and compute
+//!   models; [`PlannerBuilder::devices`] is shorthand for the paper's
+//!   P100 preset.
+//! * **Amortized sessions.** Cost tables are built once per session, the
+//!   layer-wise search runs once, and materialized [`ExecutionPlan`]s are
+//!   kept in an LRU [`PlanCache`] — repeated queries against the same
+//!   (network, cluster) pair skip all of that work ([`SessionStats`]
+//!   exposes the counters; the `planner_session` bench measures it).
+
+#![warn(missing_docs)]
+
+pub mod backend;
+pub mod cluster;
+
+pub use backend::{Elimination, ExhaustiveDfs, SearchBackend};
+pub use cluster::ClusterSpec;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+use crate::cost::{CostModel, CostTables};
+use crate::device::DeviceGraph;
+use crate::error::{OptError, Result};
+use crate::graph::{nets, CompGraph};
+use crate::metrics::CommBreakdown;
+use crate::optimizer::{strategies, Optimized, SearchStats};
+use crate::parallel::Strategy;
+use crate::plan::{ExecutionPlan, PlanCache};
+use crate::sim::{steady_state_step_plan, SimReport};
+
+/// The paper's default per-GPU batch size.
+pub const PER_GPU_BATCH: usize = 32;
+
+/// The benchmark networks the planner knows how to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Network {
+    /// LeNet-5 (LeCun et al.) — the small sanity-check net.
+    LeNet5,
+    /// AlexNet (Krizhevsky et al. 2012), single-tower variant.
+    AlexNet,
+    /// VGG-16 configuration D (Simonyan & Zisserman 2014).
+    Vgg16,
+    /// Inception-v3 (Szegedy et al. 2016).
+    InceptionV3,
+    /// ResNet-18 (He et al. 2016).
+    ResNet18,
+    /// ResNet-50 (He et al. 2016).
+    ResNet50,
+    /// The 8-layer CNN with AOT execution artifacts (`make artifacts`).
+    MiniCnn,
+}
+
+impl Network {
+    /// Every known network, in display order.
+    pub const ALL: [Network; 7] = [
+        Network::LeNet5,
+        Network::AlexNet,
+        Network::Vgg16,
+        Network::InceptionV3,
+        Network::ResNet18,
+        Network::ResNet50,
+        Network::MiniCnn,
+    ];
+
+    /// Canonical name; `name().parse::<Network>()` round-trips.
+    pub fn name(self) -> &'static str {
+        match self {
+            Network::LeNet5 => "lenet5",
+            Network::AlexNet => "alexnet",
+            Network::Vgg16 => "vgg16",
+            Network::InceptionV3 => "inception_v3",
+            Network::ResNet18 => "resnet18",
+            Network::ResNet50 => "resnet50",
+            Network::MiniCnn => "minicnn",
+        }
+    }
+
+    /// Build the computation graph at a **global** batch size.
+    pub fn graph(self, global_batch: usize) -> CompGraph {
+        match self {
+            Network::LeNet5 => nets::lenet5(global_batch),
+            Network::AlexNet => nets::alexnet(global_batch),
+            Network::Vgg16 => nets::vgg16(global_batch),
+            Network::InceptionV3 => nets::inception_v3(global_batch),
+            Network::ResNet18 => nets::resnet18(global_batch),
+            Network::ResNet50 => nets::resnet50(global_batch),
+            Network::MiniCnn => nets::minicnn(global_batch),
+        }
+    }
+}
+
+impl FromStr for Network {
+    type Err = OptError;
+
+    /// Accepts canonical names plus the historical aliases (`lenet`,
+    /// `vgg`, `inception`, `inceptionv3`, `resnet`).
+    fn from_str(s: &str) -> Result<Network> {
+        match s {
+            "lenet5" | "lenet" => Ok(Network::LeNet5),
+            "alexnet" => Ok(Network::AlexNet),
+            "vgg16" | "vgg" => Ok(Network::Vgg16),
+            "inception_v3" | "inception" | "inceptionv3" => Ok(Network::InceptionV3),
+            "resnet18" | "resnet" => Ok(Network::ResNet18),
+            "resnet50" => Ok(Network::ResNet50),
+            "minicnn" => Ok(Network::MiniCnn),
+            other => Err(OptError::UnknownNetwork(other.to_string())),
+        }
+    }
+}
+
+impl fmt::Display for Network {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The parallelization strategies the planner can resolve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Data parallelism: every layer partitions the sample dimension.
+    Data,
+    /// Model parallelism: parameter layers partition output channels.
+    Model,
+    /// "One weird trick": data-parallel convs, model-parallel FCs.
+    Owt,
+    /// The per-layer optimum found by the session's [`SearchBackend`].
+    Layerwise,
+}
+
+impl StrategyKind {
+    /// Every strategy, in the paper's comparison order.
+    pub const ALL: [StrategyKind; 4] =
+        [StrategyKind::Data, StrategyKind::Model, StrategyKind::Owt, StrategyKind::Layerwise];
+
+    /// Canonical name; `name().parse::<StrategyKind>()` round-trips.
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Data => "data",
+            StrategyKind::Model => "model",
+            StrategyKind::Owt => "owt",
+            StrategyKind::Layerwise => "layerwise",
+        }
+    }
+}
+
+impl FromStr for StrategyKind {
+    type Err = OptError;
+
+    fn from_str(s: &str) -> Result<StrategyKind> {
+        match s {
+            "data" => Ok(StrategyKind::Data),
+            "model" => Ok(StrategyKind::Model),
+            "owt" => Ok(StrategyKind::Owt),
+            "layerwise" | "optimal" => Ok(StrategyKind::Layerwise),
+            other => Err(OptError::UnknownStrategy(other.to_string())),
+        }
+    }
+}
+
+impl fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Evaluation of one strategy on the session's (network, cluster) pair.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Equation 1 estimate (seconds/step) — the paper's validated cost
+    /// model (their Table 4 shows it within 10% of the real cluster), and
+    /// therefore the primary throughput predictor here.
+    pub estimate: f64,
+    /// Discrete-event steady-state simulation of the same step (the
+    /// independent check; it overlaps communication more aggressively
+    /// than the serial-sum estimate).
+    pub sim: SimReport,
+    /// Per-step communication volume.
+    pub comm: CommBreakdown,
+    /// Cost-model training throughput (images/s) = batch / estimate.
+    pub throughput: f64,
+    /// Simulated training throughput (images/s) = batch / sim step.
+    pub sim_throughput: f64,
+}
+
+/// Work counters for one [`Planner`] session: how much expensive state
+/// was built versus reused. A warm session answering a repeated query
+/// increments only `plan_hits`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Times the session built its [`CostTables`] (at most 1).
+    pub table_builds: u64,
+    /// Times the search backend actually ran (at most 1).
+    pub searches: u64,
+    /// Plan-cache lookups served without rebuilding.
+    pub plan_hits: u64,
+    /// Plan-cache lookups that had to materialize a plan.
+    pub plan_misses: u64,
+}
+
+/// Configures and validates a [`Planner`] session.
+///
+/// Obtained from [`Planner::builder`]; every setter is chainable and
+/// validation happens in [`PlannerBuilder::build`].
+pub struct PlannerBuilder {
+    network: Network,
+    per_gpu_batch: usize,
+    cluster: Option<ClusterSpec>,
+    devices: Option<usize>,
+    backend: Box<dyn SearchBackend>,
+    plan_cache_cap: usize,
+}
+
+impl PlannerBuilder {
+    /// Shorthand for the paper's P100 testbed at `n` devices. Mutually
+    /// exclusive with [`PlannerBuilder::cluster`].
+    pub fn devices(mut self, n: usize) -> PlannerBuilder {
+        self.devices = Some(n);
+        self
+    }
+
+    /// Plan against an explicit cluster description. Mutually exclusive
+    /// with [`PlannerBuilder::devices`].
+    pub fn cluster(mut self, spec: ClusterSpec) -> PlannerBuilder {
+        self.cluster = Some(spec);
+        self
+    }
+
+    /// Per-GPU batch size (default: the paper's 32). The network's global
+    /// batch is `per_gpu_batch x num_devices`.
+    pub fn per_gpu_batch(mut self, batch: usize) -> PlannerBuilder {
+        self.per_gpu_batch = batch;
+        self
+    }
+
+    /// Select the strategy-search algorithm (default: [`Elimination`]).
+    pub fn backend(mut self, backend: impl SearchBackend + 'static) -> PlannerBuilder {
+        self.backend = Box::new(backend);
+        self
+    }
+
+    /// Select a boxed backend (the CLI path through
+    /// [`backend::by_name`]).
+    pub fn backend_boxed(mut self, backend: Box<dyn SearchBackend>) -> PlannerBuilder {
+        self.backend = backend;
+        self
+    }
+
+    /// Capacity of the session's LRU plan cache (default 8).
+    pub fn plan_cache_capacity(mut self, cap: usize) -> PlannerBuilder {
+        self.plan_cache_cap = cap;
+        self
+    }
+
+    /// Validate the configuration and open the session: materializes the
+    /// device graph and the network graph at the session's global batch.
+    pub fn build(self) -> Result<Planner> {
+        if self.per_gpu_batch == 0 {
+            return Err(OptError::InvalidArgument(
+                "per-GPU batch size must be at least 1".into(),
+            ));
+        }
+        if self.plan_cache_cap == 0 {
+            return Err(OptError::InvalidArgument(
+                "plan cache capacity must be at least 1".into(),
+            ));
+        }
+        let spec = match (self.cluster, self.devices) {
+            (Some(_), Some(_)) => {
+                return Err(OptError::InvalidArgument(
+                    "specify either .devices(n) or .cluster(spec), not both".into(),
+                ))
+            }
+            (Some(spec), None) => spec,
+            (None, Some(n)) => ClusterSpec::p100(n)?,
+            (None, None) => ClusterSpec::p100(4)?,
+        };
+        let devices = spec.device_graph()?;
+        let graph = self.network.graph(self.per_gpu_batch * devices.num_devices());
+        Ok(Planner {
+            network: self.network,
+            per_gpu_batch: self.per_gpu_batch,
+            graph,
+            devices,
+            backend: self.backend,
+            tables: None,
+            layerwise: None,
+            baselines: HashMap::new(),
+            plans: PlanCache::new(self.plan_cache_cap),
+            table_builds: 0,
+            searches: 0,
+        })
+    }
+}
+
+/// A planning session: one network on one cluster, with cost tables,
+/// the layer-wise search result, and materialized plans cached across
+/// queries. See the [module docs](self) for the full design.
+pub struct Planner {
+    network: Network,
+    per_gpu_batch: usize,
+    graph: CompGraph,
+    devices: DeviceGraph,
+    backend: Box<dyn SearchBackend>,
+    tables: Option<CostTables>,
+    layerwise: Option<Optimized>,
+    baselines: HashMap<StrategyKind, Strategy>,
+    plans: PlanCache,
+    table_builds: u64,
+    searches: u64,
+}
+
+impl Planner {
+    /// Start configuring a session for `network` (see [`PlannerBuilder`]).
+    pub fn builder(network: Network) -> PlannerBuilder {
+        PlannerBuilder {
+            network,
+            per_gpu_batch: PER_GPU_BATCH,
+            cluster: None,
+            devices: None,
+            backend: Box::new(Elimination),
+            plan_cache_cap: 8,
+        }
+    }
+
+    /// The session's network.
+    pub fn network(&self) -> Network {
+        self.network
+    }
+
+    /// The session's computation graph (built at the global batch).
+    pub fn graph(&self) -> &CompGraph {
+        &self.graph
+    }
+
+    /// The session's device graph.
+    pub fn device_graph(&self) -> &DeviceGraph {
+        &self.devices
+    }
+
+    /// Devices in the session's cluster.
+    pub fn num_devices(&self) -> usize {
+        self.devices.num_devices()
+    }
+
+    /// Per-GPU batch size.
+    pub fn per_gpu_batch(&self) -> usize {
+        self.per_gpu_batch
+    }
+
+    /// Global batch size (`per_gpu_batch x num_devices`).
+    pub fn global_batch(&self) -> usize {
+        self.per_gpu_batch * self.devices.num_devices()
+    }
+
+    /// The name of the session's search backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The session's cost tables, built on first use and cached for the
+    /// session's lifetime (the expensive per-session step).
+    pub fn tables(&mut self) -> &CostTables {
+        if self.tables.is_none() {
+            let cm = CostModel::new(&self.graph, &self.devices);
+            let built = CostTables::build(&cm, self.devices.num_devices());
+            self.tables = Some(built);
+            self.table_builds += 1;
+        }
+        self.tables.as_ref().expect("tables just built")
+    }
+
+    /// Run the session's search backend over the cost tables, returning
+    /// the optimal strategy with cost and search statistics. Cached: the
+    /// search runs at most once per session.
+    pub fn optimize(&mut self) -> Result<Optimized> {
+        if let Some(opt) = &self.layerwise {
+            return Ok(opt.clone());
+        }
+        self.tables();
+        let tables = self.tables.as_ref().expect("tables just built");
+        let opt = self.backend.search(tables)?;
+        self.searches += 1;
+        self.layerwise = Some(opt.clone());
+        Ok(opt)
+    }
+
+    /// Search statistics of the layer-wise optimization, if it ran.
+    pub fn search_stats(&self) -> Option<&SearchStats> {
+        self.layerwise.as_ref().map(|o| &o.stats)
+    }
+
+    /// Resolve a strategy: baselines are derived from the graph shape,
+    /// `Layerwise` runs (or reuses) the backend search.
+    pub fn strategy(&mut self, kind: StrategyKind) -> Result<Strategy> {
+        if kind == StrategyKind::Layerwise {
+            return Ok(self.optimize()?.strategy);
+        }
+        if let Some(s) = self.baselines.get(&kind) {
+            return Ok(s.clone());
+        }
+        let ndev = self.devices.num_devices();
+        let s = match kind {
+            StrategyKind::Data => strategies::data_parallel(&self.graph, ndev),
+            StrategyKind::Model => strategies::model_parallel(&self.graph, ndev),
+            StrategyKind::Owt => strategies::owt(&self.graph, ndev),
+            StrategyKind::Layerwise => unreachable!("handled above"),
+        };
+        self.baselines.insert(kind, s.clone());
+        Ok(s)
+    }
+
+    /// The materialized execution plan for a strategy kind, served from
+    /// the session's LRU cache.
+    pub fn plan(&mut self, kind: StrategyKind) -> Result<Arc<ExecutionPlan>> {
+        let s = self.strategy(kind)?;
+        Ok(self.plan_for(&s))
+    }
+
+    /// The materialized execution plan for an arbitrary (possibly
+    /// hand-built) strategy, served from the session's LRU cache.
+    pub fn plan_for(&mut self, strategy: &Strategy) -> Arc<ExecutionPlan> {
+        let cm = CostModel::new(&self.graph, &self.devices);
+        self.plans.get_or_build(&cm, strategy)
+    }
+
+    /// Evaluate a strategy kind: Eq. 1 estimate, steady-state simulation,
+    /// and communication volume, all derived from the cached plan.
+    pub fn evaluate(&mut self, kind: StrategyKind) -> Result<Evaluation> {
+        let s = self.strategy(kind)?;
+        Ok(self.evaluate_strategy(&s))
+    }
+
+    /// [`Planner::evaluate`] for an arbitrary strategy.
+    pub fn evaluate_strategy(&mut self, strategy: &Strategy) -> Evaluation {
+        let plan = self.plan_for(strategy);
+        let cm = CostModel::new(&self.graph, &self.devices);
+        let estimate = cm.t_o(strategy);
+        let sim = steady_state_step_plan(&plan, &cm);
+        let comm = plan.comm();
+        let throughput = self.global_batch() as f64 / estimate;
+        let sim_throughput = sim.throughput(self.global_batch());
+        Evaluation { estimate, sim, comm, throughput, sim_throughput }
+    }
+
+    /// How much expensive state this session has built versus reused.
+    pub fn session_stats(&self) -> SessionStats {
+        SessionStats {
+            table_builds: self.table_builds,
+            searches: self.searches,
+            plan_hits: self.plans.hits,
+            plan_misses: self.plans.misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn network_round_trips() {
+        for net in Network::ALL {
+            assert_eq!(net.name().parse::<Network>().unwrap(), net);
+            assert_eq!(net.to_string(), net.name());
+        }
+        assert!(matches!("resnet1001".parse::<Network>(), Err(OptError::UnknownNetwork(_))));
+    }
+
+    #[test]
+    fn strategy_kind_round_trips() {
+        for kind in StrategyKind::ALL {
+            assert_eq!(kind.name().parse::<StrategyKind>().unwrap(), kind);
+            assert_eq!(kind.to_string(), kind.name());
+        }
+        assert!(matches!("zigzag".parse::<StrategyKind>(), Err(OptError::UnknownStrategy(_))));
+    }
+
+    #[test]
+    fn builder_validates() {
+        assert!(Planner::builder(Network::LeNet5).devices(2).per_gpu_batch(0).build().is_err());
+        assert!(Planner::builder(Network::LeNet5).devices(6).build().is_err());
+        assert!(Planner::builder(Network::LeNet5)
+            .devices(2)
+            .plan_cache_capacity(0)
+            .build()
+            .is_err());
+        assert!(Planner::builder(Network::LeNet5)
+            .devices(2)
+            .cluster(ClusterSpec::new(1, 2))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn session_reuses_tables_and_search() {
+        let mut p = Planner::builder(Network::LeNet5).devices(2).build().unwrap();
+        assert_eq!(p.session_stats(), SessionStats::default());
+        let a = p.evaluate(StrategyKind::Layerwise).unwrap();
+        let s1 = p.session_stats();
+        assert_eq!((s1.table_builds, s1.searches, s1.plan_misses), (1, 1, 1));
+        let b = p.evaluate(StrategyKind::Layerwise).unwrap();
+        let s2 = p.session_stats();
+        assert_eq!((s2.table_builds, s2.searches, s2.plan_misses), (1, 1, 1));
+        assert_eq!(s2.plan_hits, 1);
+        assert_eq!(a.estimate, b.estimate);
+        assert_eq!(a.sim.step_time, b.sim.step_time);
+    }
+
+    #[test]
+    fn layerwise_beats_baselines() {
+        let mut p = Planner::builder(Network::AlexNet).devices(4).build().unwrap();
+        let lw = p.evaluate(StrategyKind::Layerwise).unwrap().throughput;
+        for kind in [StrategyKind::Data, StrategyKind::Model, StrategyKind::Owt] {
+            let t = p.evaluate(kind).unwrap().throughput;
+            assert!(lw >= t * (1.0 - 1e-9), "layerwise {lw} < {kind} {t}");
+        }
+    }
+
+    #[test]
+    fn custom_cluster_changes_the_answer() {
+        let mut p100 = Planner::builder(Network::AlexNet).devices(4).build().unwrap();
+        let slow = ClusterSpec::new(1, 4).name("slow").intra_bw(1e9);
+        let mut degraded =
+            Planner::builder(Network::AlexNet).cluster(slow).build().unwrap();
+        let fast = p100.evaluate(StrategyKind::Data).unwrap();
+        let throttled = degraded.evaluate(StrategyKind::Data).unwrap();
+        assert!(
+            throttled.estimate > fast.estimate,
+            "slower links must slow the step: {} vs {}",
+            throttled.estimate,
+            fast.estimate
+        );
+    }
+}

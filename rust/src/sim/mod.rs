@@ -456,7 +456,7 @@ mod tests {
 
     fn run(net: &str, ndev: usize, strat: &str) -> (SimReport, f64) {
         let g = nets::by_name(net, 32 * ndev).unwrap();
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::by_name(strat, &g, ndev).unwrap();
         let rep = simulate(&g, &d, &s, &cm);
@@ -503,7 +503,7 @@ mod tests {
     #[test]
     fn data_parallel_syncs_whole_model() {
         let g = nets::alexnet(32 * 4);
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 4);
         let rep = simulate(&g, &d, &s, &cm);
@@ -529,7 +529,7 @@ mod tests {
     #[test]
     fn plan_and_strategy_entry_points_agree_exactly() {
         let g = nets::alexnet(32 * 4);
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::owt(&g, 4);
         let direct = simulate(&g, &d, &s, &cm);
@@ -545,7 +545,7 @@ mod tests {
     #[test]
     fn sync_bytes_match_cost_model_accounting() {
         let g = nets::vgg16(32 * 2);
-        let d = DeviceGraph::p100_cluster(2);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 2);
         let rep = simulate(&g, &d, &s, &cm);

@@ -1,8 +1,14 @@
 //! Tiny CLI argument parser (no `clap` in the offline registry).
 //!
 //! Grammar: `optcnn <subcommand> [--flag] [--key value]... [positional]...`
+//!
+//! Typed accessors are fallible: a *present but malformed* value is an
+//! [`OptError::InvalidArgument`] (the CLI turns it into a one-line
+//! message and exit code 2), while an absent option takes its default.
 
 use std::collections::BTreeMap;
+
+use crate::error::{OptError, Result};
 
 /// Parsed command line: a subcommand, `--key value` options, bare `--flag`
 /// switches, and positional arguments.
@@ -55,12 +61,38 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    /// `--name` as usize: `default` when absent, error when malformed.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                OptError::InvalidArgument(format!("--{name}: expected an integer, got `{s}`"))
+            }),
+        }
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    /// `--name` as f64: `default` when absent, error when malformed.
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                OptError::InvalidArgument(format!("--{name}: expected a number, got `{s}`"))
+            }),
+        }
+    }
+
+    /// A comma-separated `--name` list parsed element-wise; `default`
+    /// (also comma-separated) when absent, error on any malformed item.
+    pub fn list_or<T: std::str::FromStr>(&self, name: &str, default: &str) -> Result<Vec<T>> {
+        self.get_or(name, default)
+            .split(',')
+            .map(|item| {
+                let item = item.trim();
+                item.parse().map_err(|_| {
+                    OptError::InvalidArgument(format!("--{name}: cannot parse `{item}`"))
+                })
+            })
+            .collect()
     }
 }
 
@@ -77,7 +109,7 @@ mod tests {
         let a = parse("optimize --network vgg16 --devices 4 extra", &[]);
         assert_eq!(a.subcommand.as_deref(), Some("optimize"));
         assert_eq!(a.get("network"), Some("vgg16"));
-        assert_eq!(a.get_usize("devices", 1), 4);
+        assert_eq!(a.usize_or("devices", 1).unwrap(), 4);
         assert_eq!(a.positional, vec!["extra"]);
     }
 
@@ -85,7 +117,7 @@ mod tests {
     fn flags_and_equals_form() {
         let a = parse("train --verbose --steps=100", &["verbose"]);
         assert!(a.flag("verbose"));
-        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
     }
 
     #[test]
@@ -98,6 +130,25 @@ mod tests {
     fn defaults_apply() {
         let a = parse("x", &[]);
         assert_eq!(a.get_or("net", "alexnet"), "alexnet");
-        assert_eq!(a.get_f64("bw", 1.5), 1.5);
+        assert_eq!(a.f64_or("bw", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn malformed_values_error_instead_of_defaulting() {
+        let a = parse("optimize --devices four --lr fast", &[]);
+        let err = a.usize_or("devices", 4).unwrap_err();
+        assert!(err.to_string().contains("four"), "{err}");
+        assert_eq!(err.exit_code(), 2);
+        assert!(a.f64_or("lr", 0.01).is_err());
+    }
+
+    #[test]
+    fn lists_parse_or_error() {
+        let a = parse("sweep --devices 1,2,4", &[]);
+        assert_eq!(a.list_or::<usize>("devices", "8").unwrap(), vec![1, 2, 4]);
+        let b = parse("sweep --devices 1,x", &[]);
+        assert!(b.list_or::<usize>("devices", "8").is_err());
+        // defaults parse through the same path
+        assert_eq!(a.list_or::<usize>("steps", "5,10").unwrap(), vec![5, 10]);
     }
 }

@@ -147,16 +147,17 @@ fn training_reduces_loss() {
 
 #[test]
 fn optimizer_strategy_is_executable() {
-    // The full pipeline: cost-model search -> executable strategy.
+    // The full pipeline: Planner session search -> executable strategy.
     let Some(store) = store() else { return };
-    use optcnn::cost::{CostModel, CostTables};
-    use optcnn::device::DeviceGraph;
+    use optcnn::planner::{Network, Planner, StrategyKind};
+    let mut p = Planner::builder(Network::MiniCnn)
+        .devices(NDEV)
+        .per_gpu_batch(BATCH / NDEV)
+        .build()
+        .unwrap();
+    let strategy = p.strategy(StrategyKind::Layerwise).unwrap();
     let g = nets::minicnn(BATCH);
-    let d = DeviceGraph::p100_cluster(NDEV);
-    let cm = CostModel::new(&g, &d);
-    let tables = CostTables::build(&cm, NDEV);
-    let opt = optcnn::optimizer::optimize(&tables);
-    let mut trainer = Trainer::new(&store, g, opt.strategy, NDEV, LR, 5).unwrap();
+    let mut trainer = Trainer::new(&store, g, strategy, NDEV, LR, 5).unwrap();
     let ds = dataset();
     let (x, y) = ds.batch(0, BATCH);
     let loss = trainer.step(&x, &y).unwrap();

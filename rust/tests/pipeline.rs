@@ -1,6 +1,7 @@
 //! Integration tests over the full search/evaluation pipeline: the
 //! paper's qualitative claims, pinned as assertions so regressions in the
-//! cost model or optimizer surface immediately.
+//! cost model or optimizer surface immediately. All end-to-end queries go
+//! through the typed [`Planner`] session API.
 
 use optcnn::cost::{CostModel, CostTables, SyncModel};
 use optcnn::device::DeviceGraph;
@@ -8,13 +9,17 @@ use optcnn::graph::{nets, OpKind};
 use optcnn::metrics::comm_volume;
 use optcnn::optimizer::{self, strategies};
 use optcnn::parallel::PConfig;
-use optcnn::pipeline::Experiment;
+use optcnn::planner::{Network, Planner, StrategyKind};
+
+fn planner(net: Network, ndev: usize) -> Planner {
+    Planner::builder(net).devices(ndev).build().unwrap()
+}
 
 #[test]
 fn fig2_channel_beats_sample_for_fc6() {
     // Figure 2: channel parallelism slashes fc6 communication.
     let g = nets::vgg16(64);
-    let d = DeviceGraph::p100_cluster(2);
+    let d = DeviceGraph::p100_cluster(2).unwrap();
     let cm = CostModel::new(&g, &d);
     let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();
     let pool5 = g.layers.iter().find(|l| l.name == "pool5").unwrap();
@@ -30,7 +35,7 @@ fn fig3_degree_optima() {
     // Figure 3: early conv prefers all 16 devices; the classifier FC
     // prefers a small degree.
     let g = nets::inception_v3(32 * 16);
-    let d = DeviceGraph::p100_cluster(16);
+    let d = DeviceGraph::p100_cluster(16).unwrap();
     let cm = CostModel::new(&g, &d);
     let conv = g.layers.iter().find(|l| l.name == "stem_conv3").unwrap();
     let fc = g.layers.iter().find(|l| l.name == "fc").unwrap();
@@ -53,10 +58,9 @@ fn fig3_degree_optima() {
 #[test]
 fn table5_regime_transitions() {
     // Table 5: data parallelism early, mixed/model parallelism late.
-    let e = Experiment::new("vgg16", 4);
-    let g = e.graph();
-    let d = e.devices();
-    let (s, _) = e.strategy("layerwise", &g, &d);
+    let mut p = planner(Network::Vgg16, 4);
+    let s = p.strategy(StrategyKind::Layerwise).unwrap();
+    let g = p.graph();
     let conv1 = g.layers.iter().find(|l| l.name == "conv1").unwrap();
     let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();
     let fc8 = g.layers.iter().find(|l| l.name == "fc8").unwrap();
@@ -78,12 +82,12 @@ fn table5_regime_transitions() {
 fn fig7_ordering_at_scale() {
     // Figure 7's strategy ordering at 16 GPUs: layerwise >= owt >= data
     // >> model for the paper's three networks.
-    for net in ["alexnet", "vgg16", "inception_v3"] {
-        let e = Experiment::new(net, 16);
-        let lw = e.run("layerwise").throughput;
-        let owt = e.run("owt").throughput;
-        let data = e.run("data").throughput;
-        let model = e.run("model").throughput;
+    for net in [Network::AlexNet, Network::Vgg16, Network::InceptionV3] {
+        let mut p = planner(net, 16);
+        let lw = p.evaluate(StrategyKind::Layerwise).unwrap().throughput;
+        let owt = p.evaluate(StrategyKind::Owt).unwrap().throughput;
+        let data = p.evaluate(StrategyKind::Data).unwrap().throughput;
+        let model = p.evaluate(StrategyKind::Model).unwrap().throughput;
         assert!(lw >= owt * (1.0 - 1e-9), "{net}: lw {lw} < owt {owt}");
         assert!(owt > data, "{net}: owt {owt} <= data {data}");
         assert!(data > model, "{net}: data {data} <= model {model}");
@@ -94,16 +98,15 @@ fn fig7_ordering_at_scale() {
 fn fig8_owt_and_layerwise_cut_communication() {
     // Figure 8: OWT and layer-wise dramatically reduce communication
     // versus data/model parallelism on parameter-heavy networks.
-    for net in ["alexnet", "vgg16"] {
-        let e = Experiment::new(net, 16);
-        let g = e.graph();
-        let d = e.devices();
-        let cm = CostModel::new(&g, &d);
-        let vol = |name: &str| {
-            let (s, _) = e.strategy(name, &g, &d);
+    for net in [Network::AlexNet, Network::Vgg16] {
+        let mut p = planner(net, 16);
+        let mut vol = |kind: StrategyKind| {
+            let s = p.strategy(kind).unwrap();
+            let cm = CostModel::new(p.graph(), p.device_graph());
             comm_volume(&cm, &s).total()
         };
-        let (data, owt, lw) = (vol("data"), vol("owt"), vol("layerwise"));
+        let (data, owt, lw) =
+            (vol(StrategyKind::Data), vol(StrategyKind::Owt), vol(StrategyKind::Layerwise));
         assert!(data > 3.0 * owt, "{net}: data {data} vs owt {owt}");
         assert!(data > 3.0 * lw, "{net}: data {data} vs lw {lw}");
     }
@@ -113,26 +116,36 @@ fn fig8_owt_and_layerwise_cut_communication() {
 fn scalability_headline() {
     // Figure 7 headline: layer-wise reaches >= 10x at 16 GPUs on every
     // network, and data parallelism falls well short on AlexNet.
-    for net in ["alexnet", "vgg16", "inception_v3"] {
-        let base = Experiment::new(net, 1).run("data").throughput;
-        let lw = Experiment::new(net, 16).run("layerwise").throughput / base;
+    for net in [Network::AlexNet, Network::Vgg16, Network::InceptionV3] {
+        let base = planner(net, 1).evaluate(StrategyKind::Data).unwrap().throughput;
+        let lw =
+            planner(net, 16).evaluate(StrategyKind::Layerwise).unwrap().throughput / base;
         assert!(lw >= 10.0, "{net}: layerwise speedup {lw}");
     }
-    let base = Experiment::new("alexnet", 1).run("data").throughput;
-    let dp = Experiment::new("alexnet", 16).run("data").throughput / base;
+    let base = planner(Network::AlexNet, 1).evaluate(StrategyKind::Data).unwrap().throughput;
+    let dp = planner(Network::AlexNet, 16).evaluate(StrategyKind::Data).unwrap().throughput
+        / base;
     assert!(dp < 6.0, "alexnet data-parallel speedup should collapse, got {dp}");
 }
 
 #[test]
 fn k_equals_2_for_all_benchmark_networks() {
     // Paper: every evaluated CNN reduces to a 2-node final graph.
-    for net in ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18"] {
-        let g = nets::by_name(net, 64).unwrap();
-        let d = DeviceGraph::p100_cluster(2);
-        let cm = CostModel::new(&g, &d);
-        let t = CostTables::build(&cm, 2);
-        let opt = optimizer::optimize(&t);
+    for net in [
+        Network::LeNet5,
+        Network::AlexNet,
+        Network::Vgg16,
+        Network::InceptionV3,
+        Network::ResNet18,
+    ] {
+        let mut p = planner(net, 2);
+        let opt = p.optimize().unwrap();
         assert_eq!(opt.stats.final_nodes, 2, "{net} must reduce to K=2");
+        assert_eq!(
+            p.session_stats().searches,
+            1,
+            "{net}: a session runs the search exactly once"
+        );
     }
 }
 
@@ -142,7 +155,7 @@ fn central_ps_changes_the_optimum_but_not_correctness() {
     // more expensive, so the optimum shifts away from data parallelism —
     // but it must still beat every baseline under the same model.
     let g = nets::alexnet(32 * 4);
-    let d = DeviceGraph::p100_cluster(4);
+    let d = DeviceGraph::p100_cluster(4).unwrap();
     let cm = CostModel::new(&g, &d).with_sync(SyncModel::Central);
     let tables = CostTables::build(&cm, 4);
     let opt = optimizer::optimize(&tables);
@@ -156,7 +169,7 @@ fn central_ps_changes_the_optimum_but_not_correctness() {
 fn measured_tc_override_flows_through() {
     // The measured-profile hook: overriding t_C changes strategy costs.
     let g = nets::lenet5(32);
-    let d = DeviceGraph::p100_cluster(2);
+    let d = DeviceGraph::p100_cluster(2).unwrap();
     let mut cm = CostModel::new(&g, &d);
     let base_tables = CostTables::build(&cm, 2);
     let zeroed: Vec<Vec<f64>> =
@@ -172,7 +185,7 @@ fn measured_tc_override_flows_through() {
 fn per_layer_costs_are_finite_and_positive() {
     for net in ["alexnet", "vgg16", "inception_v3", "resnet18"] {
         let g = nets::by_name(net, 128).unwrap();
-        let d = DeviceGraph::p100_cluster(4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         for l in &g.layers {
             if matches!(l.op, OpKind::Input) {

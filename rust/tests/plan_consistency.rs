@@ -32,7 +32,7 @@ fn sim_and_exec_report_identical_bytes_from_one_plan() {
         for ndev in DEVICES {
             for strat in STRATEGIES {
                 let g = nets::by_name(net, 32 * ndev).unwrap();
-                let d = DeviceGraph::p100_cluster(ndev);
+                let d = DeviceGraph::p100_cluster(ndev).unwrap();
                 let cm = CostModel::new(&g, &d);
                 let s = strategies::by_name(strat, &g, ndev).unwrap();
                 let plan = ExecutionPlan::build(&cm, &s);
@@ -75,7 +75,7 @@ fn plan_json_roundtrip_is_exact() {
         for ndev in DEVICES {
             for strat in STRATEGIES {
                 let g = nets::by_name(net, 32 * ndev).unwrap();
-                let d = DeviceGraph::p100_cluster(ndev);
+                let d = DeviceGraph::p100_cluster(ndev).unwrap();
                 let cm = CostModel::new(&g, &d);
                 let s = strategies::by_name(strat, &g, ndev).unwrap();
                 let plan = ExecutionPlan::build(&cm, &s);
@@ -98,7 +98,7 @@ fn plan_driven_simulation_equals_strategy_driven() {
     for net in NETS {
         for ndev in DEVICES {
             let g = nets::by_name(net, 32 * ndev).unwrap();
-            let d = DeviceGraph::p100_cluster(ndev);
+            let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let cm = CostModel::new(&g, &d);
             let s = strategies::owt(&g, ndev);
             let plan = ExecutionPlan::build(&cm, &s);
@@ -144,7 +144,7 @@ fn plan_bytes_agree_with_sim_on_random_nets() {
     forall("plan/sim/cost byte parity", 25, |gen| {
         let net = random_net(gen);
         let ndev = *gen.choose(&[2usize, 4]);
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&net, &d);
         let strat = *gen.choose(&["data", "model", "owt"]);
         let s = strategies::by_name(strat, &net, ndev).unwrap();

@@ -1,0 +1,163 @@
+//! Integration tests for the typed `Planner` session API: name
+//! round-trips, builder validation, backend pluggability, and the
+//! session-amortization contract (a warm session answers repeated
+//! queries without rebuilding cost tables, and its plans are
+//! byte-identical to the one-shot path).
+
+use std::sync::Arc;
+
+use optcnn::device::DeviceGraph;
+use optcnn::error::OptError;
+use optcnn::planner::{ClusterSpec, ExhaustiveDfs, Network, Planner, StrategyKind};
+
+#[test]
+fn network_names_round_trip() {
+    for net in Network::ALL {
+        let parsed: Network = net.name().parse().unwrap();
+        assert_eq!(parsed, net);
+        assert_eq!(format!("{net}"), net.name());
+    }
+    // historical aliases resolve too
+    assert_eq!("vgg".parse::<Network>().unwrap(), Network::Vgg16);
+    assert_eq!("inception".parse::<Network>().unwrap(), Network::InceptionV3);
+    let err = "resnet1001".parse::<Network>().unwrap_err();
+    assert!(err.to_string().contains("resnet1001"), "{err}");
+    assert_eq!(err.exit_code(), 2);
+}
+
+#[test]
+fn strategy_names_round_trip() {
+    for kind in StrategyKind::ALL {
+        let parsed: StrategyKind = kind.name().parse().unwrap();
+        assert_eq!(parsed, kind);
+        assert_eq!(format!("{kind}"), kind.name());
+    }
+    assert!(matches!("zigzag".parse::<StrategyKind>(), Err(OptError::UnknownStrategy(_))));
+}
+
+#[test]
+fn builder_rejects_bad_configurations() {
+    // zero batch
+    assert!(matches!(
+        Planner::builder(Network::LeNet5).devices(2).per_gpu_batch(0).build(),
+        Err(OptError::InvalidArgument(_))
+    ));
+    // a device count the P100 preset cannot shape
+    assert!(matches!(
+        Planner::builder(Network::LeNet5).devices(7).build(),
+        Err(OptError::InvalidCluster(_))
+    ));
+    // ambiguous cluster selection
+    assert!(Planner::builder(Network::LeNet5)
+        .devices(2)
+        .cluster(ClusterSpec::new(1, 2))
+        .build()
+        .is_err());
+    // degenerate cluster specs surface at build, not as NaNs later
+    assert!(Planner::builder(Network::LeNet5)
+        .cluster(ClusterSpec::new(0, 4))
+        .build()
+        .is_err());
+    assert!(Planner::builder(Network::LeNet5)
+        .cluster(ClusterSpec::new(1, 2).inter_bw(0.0))
+        .build()
+        .is_err());
+}
+
+#[test]
+fn device_graph_validation() {
+    use optcnn::device::ComputeModel;
+    assert!(DeviceGraph::cluster("x", 0, 1, 1e9, 1e9, 1e9, ComputeModel::p100()).is_err());
+    assert!(DeviceGraph::cluster("x", 1, 1, -1.0, 1e9, 1e9, ComputeModel::p100()).is_err());
+    assert!(DeviceGraph::p100_cluster(0).is_err());
+    assert!(DeviceGraph::p100_cluster(6).is_err());
+    let d = DeviceGraph::cluster("x", 2, 2, 2e9, 1e9, 1e9, ComputeModel::v100()).unwrap();
+    assert_eq!(d.num_devices(), 4);
+    assert!(d.transfer_time(0, 3, 1e9).is_finite());
+}
+
+/// The acceptance contract: a warm `Planner` answers a repeated
+/// vgg16/4-device `layerwise` query without rebuilding `CostTables`, and
+/// the plan it serves is byte-identical to a fresh one-shot session's.
+#[test]
+fn warm_session_reuses_tables_and_serves_identical_plans() {
+    let mut session = Planner::builder(Network::Vgg16).devices(4).build().unwrap();
+    let cold = session.plan(StrategyKind::Layerwise).unwrap();
+    let after_cold = session.session_stats();
+    assert_eq!(after_cold.table_builds, 1);
+    assert_eq!(after_cold.searches, 1);
+    assert_eq!(after_cold.plan_misses, 1);
+
+    // warm repeat: no new tables, no new search, plan served from cache
+    let warm = session.plan(StrategyKind::Layerwise).unwrap();
+    let after_warm = session.session_stats();
+    assert_eq!(after_warm.table_builds, 1, "warm query must not rebuild CostTables");
+    assert_eq!(after_warm.searches, 1, "warm query must not re-run the search");
+    assert_eq!(after_warm.plan_hits, 1);
+    assert!(Arc::ptr_eq(&cold, &warm), "warm plan must be the cached object");
+
+    // byte-identical to the one-shot path
+    let one_shot = Planner::builder(Network::Vgg16)
+        .devices(4)
+        .build()
+        .unwrap()
+        .plan(StrategyKind::Layerwise)
+        .unwrap();
+    assert_eq!(
+        warm.to_json().to_string(),
+        one_shot.to_json().to_string(),
+        "session-served plan must be byte-identical to the one-shot plan"
+    );
+
+    // and the evaluations derived from it agree exactly
+    let a = session.evaluate(StrategyKind::Layerwise).unwrap();
+    let b = session.evaluate(StrategyKind::Layerwise).unwrap();
+    assert_eq!(a.estimate, b.estimate);
+    assert_eq!(a.sim.step_time, b.sim.step_time);
+    assert_eq!(a.comm.total(), b.comm.total());
+}
+
+#[test]
+fn dfs_backend_matches_elimination_on_small_nets() {
+    let mut elim = Planner::builder(Network::LeNet5).devices(2).build().unwrap();
+    let mut dfs = Planner::builder(Network::LeNet5)
+        .devices(2)
+        .backend(ExhaustiveDfs::default())
+        .build()
+        .unwrap();
+    assert_eq!(dfs.backend_name(), "dfs");
+    let a = elim.optimize().unwrap();
+    let b = dfs.optimize().unwrap();
+    assert!(
+        (a.cost - b.cost).abs() <= 1e-9 * a.cost,
+        "backends disagree: elimination {} vs dfs {}",
+        a.cost,
+        b.cost
+    );
+}
+
+#[test]
+fn arbitrary_clusters_are_first_class() {
+    // same device count, different fabric: the planner must produce a
+    // valid (and generally different-cost) answer on both
+    let nvlink = ClusterSpec::new(1, 4).name("nvlink-box");
+    let pcie = ClusterSpec::new(1, 4).name("pcie-box").intra_bw(4e9).host_bw(4e9);
+    let mut fast = Planner::builder(Network::AlexNet).cluster(nvlink).build().unwrap();
+    let mut slow = Planner::builder(Network::AlexNet).cluster(pcie).build().unwrap();
+    let f = fast.evaluate(StrategyKind::Layerwise).unwrap();
+    let s = slow.evaluate(StrategyKind::Layerwise).unwrap();
+    assert!(f.estimate > 0.0 && s.estimate > 0.0);
+    assert!(
+        s.estimate >= f.estimate * (1.0 - 1e-9),
+        "slower fabric cannot make the optimum faster: {} vs {}",
+        s.estimate,
+        f.estimate
+    );
+}
+
+#[test]
+fn per_gpu_batch_flows_into_the_graph() {
+    let p = Planner::builder(Network::LeNet5).devices(2).per_gpu_batch(16).build().unwrap();
+    assert_eq!(p.global_batch(), 32);
+    assert_eq!(p.graph().layers[0].out_shape[0], 32);
+}

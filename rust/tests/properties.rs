@@ -49,7 +49,7 @@ fn elimination_dp_equals_exhaustive_search() {
     forall("dp == dfs on random nets", 25, |g| {
         let net = random_net(g);
         let ndev = 2;
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&net, &d);
         let tables = CostTables::build(&cm, ndev);
         let dp = optimizer::optimize(&tables);
@@ -70,7 +70,7 @@ fn optimum_never_worse_than_baselines() {
     forall("optimum <= baselines", 20, |g| {
         let net = random_net(g);
         let ndev = 2;
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&net, &d);
         let tables = CostTables::build(&cm, ndev);
         let opt = optimizer::optimize(&tables);
@@ -253,7 +253,7 @@ fn strategy_cost_table_consistency() {
     forall("tables == direct", 20, |g| {
         let net = random_net(g);
         let ndev = 2;
-        let d = DeviceGraph::p100_cluster(ndev);
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&net, &d);
         let tables = CostTables::build(&cm, ndev);
         let idx: Vec<usize> =
