@@ -1,0 +1,87 @@
+//! Plan-serving throughput: requests/s through one shared `PlanService`,
+//! cold (first touch pays tables + search + plan build) versus warm
+//! (cache hits), single- versus multi-threaded.
+//!
+//! Run: `cargo bench --bench service_throughput`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use optcnn::planner::{Network, PlanRequest, PlanService, StrategyKind};
+use optcnn::util::benchkit::time_once;
+use optcnn::util::table::Table;
+
+/// The working set: {lenet5, alexnet} x {2, 4} devices x all 4
+/// strategies = 16 grid points, 4 distinct (network, cluster) states.
+fn grid() -> Vec<PlanRequest> {
+    let mut reqs = Vec::new();
+    for net in [Network::LeNet5, Network::AlexNet] {
+        for ndev in [2usize, 4] {
+            for kind in StrategyKind::ALL {
+                reqs.push(PlanRequest::new(net, ndev).expect("preset shape").strategy(kind));
+            }
+        }
+    }
+    reqs
+}
+
+/// Answer `total` requests round-robin over `reqs` from `threads`
+/// workers pulling an atomic cursor; returns wall-clock seconds.
+fn hammer(service: &PlanService, reqs: &[PlanRequest], total: usize, threads: usize) -> f64 {
+    let cursor = AtomicUsize::new(0);
+    let (_, dt) = time_once(|| {
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    service.evaluate(&reqs[i % reqs.len()]).expect("bench request failed");
+                });
+            }
+        });
+    });
+    dt
+}
+
+fn main() {
+    let reqs = grid();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut table = Table::new(
+        "plan-service throughput ({lenet5, alexnet} x {2, 4} devices x 4 strategies)",
+        &["scenario", "requests", "seconds", "req/s"],
+    );
+    let mut row = |name: String, n: usize, dt: f64| {
+        table.row(vec![name, n.to_string(), format!("{dt:.3}"), format!("{:.0}", n as f64 / dt)]);
+    };
+
+    // cold, single-threaded: every request is a first touch
+    let service = Arc::new(PlanService::new());
+    let cold1 = hammer(&service, &reqs, reqs.len(), 1);
+    row("cold, 1 thread".into(), reqs.len(), cold1);
+
+    // warm: the same grid over and over, everything served from caches
+    let rounds = 50;
+    let total = reqs.len() * rounds;
+    let warm1 = hammer(&service, &reqs, total, 1);
+    row("warm, 1 thread".into(), total, warm1);
+    let warm_n = hammer(&service, &reqs, total, threads);
+    row(format!("warm, {threads} threads"), total, warm_n);
+
+    // cold, multi-threaded: N workers racing on fresh state exercises
+    // the single-flight memo (duplicate misses block on one build)
+    let fresh = Arc::new(PlanService::new());
+    let cold_n = hammer(&fresh, &reqs, reqs.len(), threads);
+    row(format!("cold, {threads} threads"), reqs.len(), cold_n);
+
+    table.print();
+    let s = fresh.stats();
+    println!(
+        "cold x{threads} shared-state reuse: {} table builds, {} searches, \
+         {} build-waits, {} plans cached, {}/{} plan hits/misses",
+        s.table_builds, s.searches, s.build_waits, s.plans_cached, s.plan_hits, s.plan_misses
+    );
+    assert_eq!(s.table_builds, 4, "one build per distinct (network, cluster) state");
+    assert_eq!(s.plan_hits + s.plan_misses, reqs.len() as u64);
+}

@@ -13,12 +13,17 @@ use crate::plan::overlap::{flatten, overlap_elems, FlatRegion};
 use crate::tensor::Region;
 
 /// Structural identity of an edge's cost table: edges whose producer
-/// shape, consumer operator/shapes, and input slot coincide have
-/// identical `t_X` matrices. Borrowed fields — hashing allocates nothing
-/// (replaces the former `format!`-string signature on the table-build hot
-/// path).
+/// operator/shape, consumer operator/shapes, and input slot coincide have
+/// identical `t_X` matrices. The producer's *operator* matters, not just
+/// its output shape, because `enumerate_configs` restricts the config
+/// space per op (`allowed_dims`): an `Input` and a shape-preserving
+/// `Conv2d` with equal outputs have different config lists, so their
+/// edge tables have different dimensions and contents. Borrowed fields —
+/// hashing allocates nothing (replaces the former `format!`-string
+/// signature on the table-build hot path).
 #[derive(Hash, PartialEq, Eq)]
 struct EdgeSig<'a> {
+    src_op: &'a OpKind,
     src_out: &'a [usize],
     dst_op: &'a OpKind,
     dst_out: &'a [usize],
@@ -148,10 +153,11 @@ impl CostTables {
                 EdgeTable { src: s, dst: d, cost }
             }
         };
-        // Deduplicate: edges whose (producer shape, consumer op/shapes,
-        // input slot) coincide have identical cost tables — CNNs repeat
-        // layer pairs heavily (VGG stages, Inception modules), so this
-        // cuts the expensive evaluations several-fold (§Perf log #2).
+        // Deduplicate: edges whose (producer op/shape, consumer
+        // op/shapes, input slot) coincide have identical cost tables —
+        // CNNs repeat layer pairs heavily (VGG stages, Inception
+        // modules), so this cuts the expensive evaluations several-fold
+        // (§Perf log #2).
         let mut sig_to_unique: std::collections::HashMap<EdgeSig<'_>, usize> =
             std::collections::HashMap::new();
         let mut unique_edges: Vec<(LayerId, LayerId)> = Vec::new();
@@ -160,6 +166,7 @@ impl CostTables {
             .map(|&(s, d)| {
                 let (ls, ld) = (g.layer(s), g.layer(d));
                 let sig = EdgeSig {
+                    src_op: &ls.op,
                     src_out: &ls.out_shape,
                     dst_op: &ld.op,
                     dst_out: &ld.out_shape,
@@ -256,6 +263,53 @@ mod tests {
             assert!(t.num_configs(l) >= 1);
         }
         assert!(t.max_configs() > 4);
+    }
+
+    #[test]
+    fn same_shape_different_op_producers_do_not_alias() {
+        // Dedup regression: `input` (sample-partition only) and a
+        // shape-preserving conv (full 4-D config space) produce
+        // identically shaped outputs that feed identical consumers. A
+        // signature without the producer's op folds the two edges into
+        // one table with the wrong dimensions/contents.
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new("alias");
+        let x = b.input(8, 4, 16, 16);
+        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), (1, 1)); // out == input's shape
+        let d1 = b.conv2d("d1", x, 8, (3, 3), (1, 1), (1, 1));
+        let d2 = b.conv2d("d2", c1, 8, (3, 3), (1, 1), (1, 1)); // same op/shapes as d1
+        let g = b.finish();
+        // the trap is armed: both edges share output shapes but the
+        // producers' config spaces differ
+        assert_eq!(g.layer(x).out_shape, g.layer(c1).out_shape);
+        assert_ne!(
+            enumerate_configs(g.layer(x), 2).len(),
+            enumerate_configs(g.layer(c1), 2).len()
+        );
+
+        let d = DeviceGraph::p100_cluster(2).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let t = CostTables::build(&cm, 2);
+        for (e, &(s, dd)) in t.edges.iter().zip(g.edges.iter()) {
+            assert_eq!(
+                e.cost.len(),
+                t.num_configs(s) * t.num_configs(dd),
+                "edge {s}->{dd} table dimensions aliased across different producer ops"
+            );
+        }
+        // and the dedup'd tables still price transfers correctly: a
+        // strategy that channel-partitions c1 (a config the input layer
+        // cannot even express) must match direct evaluation
+        let mut idx: Vec<usize> = (0..g.num_layers())
+            .map(|l| t.index_of(l, &PConfig::serial()).unwrap())
+            .collect();
+        idx[c1] = t.index_of(c1, &PConfig::channel(2)).unwrap();
+        idx[d2] = t.index_of(d2, &PConfig::data(2)).unwrap();
+        idx[d1] = t.index_of(d1, &PConfig::new(1, 1, 2, 1)).unwrap();
+        let s = t.strategy_from_indices(&idx);
+        let direct = cm.t_o(&s);
+        let tabled = t.strategy_cost(&idx);
+        assert!((direct - tabled).abs() < 1e-12, "direct {direct} vs tabled {tabled}");
     }
 
     #[test]

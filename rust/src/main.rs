@@ -5,14 +5,18 @@
 //! * `optimize`  — run the strategy search and print the per-layer strategy
 //! * `simulate`  — evaluate a strategy on the simulated cluster
 //! * `plan`      — materialize a strategy's ExecutionPlan (print/export)
-//! * `sweep`     — the full Figure 7/8 grid (networks x devices x strategies)
+//! * `sweep`     — the full Figure 7/8 grid (networks x devices x strategies),
+//!   fanned across a thread pool through one shared `PlanService`
+//! * `serve`     — answer plan/evaluate requests over TCP (NDJSON)
 //! * `train`     — real partitioned training of MiniCNN through PJRT
 //! * `info`      — networks, artifact status, cluster presets
 //!
-//! Every subcommand goes through the typed [`Planner`] session API; bad
-//! user input (unknown names, malformed flags, impossible clusters)
-//! exits 2 with a one-line message, runtime failures exit 1.
+//! Every subcommand goes through the typed [`Planner`] session API (or
+//! its concurrent counterpart, the `PlanService`); bad user input
+//! (unknown names, malformed flags, impossible clusters) exits 2 with a
+//! one-line message, runtime failures exit 1.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use optcnn::config::ExperimentConfig;
@@ -35,7 +39,8 @@ USAGE:
                   [--cluster <file.toml>] [--trace out.json]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
                   [--cluster <file.toml>] [--out plan.json]
-  optcnn sweep    [--networks a,b] [--devices 1,2,4,8,16]
+  optcnn sweep    [--networks a,b] [--devices 1,2,4,8,16] [--threads N]
+  optcnn serve    [--addr 127.0.0.1:7878] [--shards 8] [--cache-cap 8]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
   optcnn profile  [--devices 4] [--reps 3]   (measured-t_C search, minicnn)
@@ -65,6 +70,7 @@ fn dispatch(args: &Args) -> Result<i32> {
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
         Some("sweep") => cmd_sweep(args),
+        Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
         Some("info") => cmd_info(args),
         Some("profile") => cmd_profile(args),
@@ -241,19 +247,82 @@ fn cmd_plan(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// The Figure 7/8 grid, fanned across a thread pool. Every worker pulls
+/// grid cells from an atomic cursor and answers them through one shared
+/// `PlanService`, so the four strategies of a (network, ndev) cell reuse
+/// a single cost-table build and warm plans are cache hits regardless of
+/// which worker primed them.
 fn cmd_sweep(args: &Args) -> Result<i32> {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::OnceLock;
+
+    use optcnn::planner::{PlanRequest, PlanService};
+
     let networks: Vec<Network> = args.list_or("networks", "alexnet,vgg16,inception_v3")?;
     let devices: Vec<usize> = args.list_or("devices", "1,2,4,8,16")?;
+    let default_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.usize_or("threads", default_threads)?.max(1);
+
+    let mut grid: Vec<(Network, usize, StrategyKind)> = Vec::new();
+    for &net in &networks {
+        for &ndev in &devices {
+            for kind in StrategyKind::ALL {
+                grid.push((net, ndev, kind));
+            }
+        }
+    }
+    let service = PlanService::new();
+    let cells: Vec<OnceLock<Result<f64>>> = grid.iter().map(|_| OnceLock::new()).collect();
+    let cursor = AtomicUsize::new(0);
+    // fail fast: once any cell errors (e.g. a device count the preset
+    // cannot shape), workers stop picking up new cells instead of
+    // grinding through the rest of the grid first
+    let failed = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(grid.len()) {
+            scope.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                let Some(&(net, ndev, kind)) = grid.get(i) else { break };
+                let r = PlanRequest::new(net, ndev)
+                    .map(|req| req.strategy(kind))
+                    .and_then(|req| service.evaluate(&req))
+                    .map(|eval| eval.throughput);
+                if r.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                let _ = cells[i].set(r);
+            });
+        }
+    });
+    if failed.load(Ordering::Relaxed) {
+        // surface the first error in grid order
+        for cell in &cells {
+            if let Some(Err(e)) = cell.get() {
+                return Err(e.clone());
+            }
+        }
+    }
+
+    let mut i = 0;
     for &net in &networks {
         let mut table = Table::new(
             &format!("{net}: simulated throughput (images/s)"),
             &["GPUs", "data", "model", "owt", "layerwise"],
         );
         for &ndev in &devices {
-            let mut p = Planner::builder(net).devices(ndev).build()?;
             let mut row = vec![ndev.to_string()];
-            for kind in StrategyKind::ALL {
-                row.push(format!("{:.0}", p.evaluate(kind)?.throughput));
+            for _ in StrategyKind::ALL {
+                let cell = cells[i].get().cloned().unwrap_or_else(|| {
+                    Err(OptError::InvalidArgument(
+                        "sweep worker exited before filling its cell".into(),
+                    ))
+                })?;
+                row.push(format!("{cell:.0}"));
+                i += 1;
             }
             table.row(row);
         }
@@ -263,6 +332,26 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
             table.print();
         }
     }
+    Ok(0)
+}
+
+/// Serve plan/evaluate requests over TCP: one JSON request per line, one
+/// JSON reply per line (see `optcnn::planner::serve` for the protocol).
+fn cmd_serve(args: &Args) -> Result<i32> {
+    use optcnn::planner::{serve, PlanService};
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let shards = args.usize_or("shards", 8)?;
+    let cap = args.usize_or("cache-cap", 8)?;
+    let service =
+        Arc::new(PlanService::builder().shards(shards).shard_capacity(cap).build()?);
+    let handle = serve::spawn(addr, service)?;
+    println!(
+        "optcnn serve: listening on {} ({shards} shards x {cap} plans)",
+        handle.local_addr()
+    );
+    println!("protocol: one JSON request per line, e.g.");
+    println!(r#"  {{"net":"alexnet","devices":4,"strategy":"layerwise","want":"evaluate"}}"#);
+    handle.join();
     Ok(0)
 }
 

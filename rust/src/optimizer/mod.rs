@@ -23,7 +23,12 @@ pub struct SearchStats {
     pub edge_eliminations: usize,
     /// Nodes remaining in the final graph (the paper's `K`).
     pub final_nodes: usize,
-    /// Strategies enumerated for the final graph.
+    /// Complete strategies for the final graph whose total cost was
+    /// evaluated. Branch-and-bound prunes *partial* assignments that
+    /// provably cannot improve, so this can be below the full `C^K`
+    /// product, but every assignment that reaches a leaf is counted —
+    /// improving or not. (For the DFS backend this is the search-tree
+    /// node count instead; see `backend::ExhaustiveDfs`.)
     pub enumerated: u64,
 }
 
@@ -257,14 +262,20 @@ fn enumerate_final(
     best_sel: &mut Vec<usize>,
     enumerated: &mut u64,
 ) {
+    if depth == nodes.len() {
+        // Count every complete assignment whose cost was computed, not
+        // just the improving ones — `SearchStats.enumerated` reports
+        // enumeration work (Table 3), which must not depend on how
+        // often the incumbent happened to improve.
+        *enumerated += 1;
+        if acc < *best {
+            *best = acc;
+            best_sel.copy_from_slice(sel);
+        }
+        return;
+    }
     if acc >= *best {
         return; // prune
-    }
-    if depth == nodes.len() {
-        *enumerated += 1;
-        *best = acc;
-        best_sel.copy_from_slice(sel);
-        return;
     }
     let node = nodes[depth];
     for c in 0..ncfg[node] {
@@ -359,6 +370,30 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn enumerated_counts_visited_assignments_not_improvements() {
+        // Hand-built 2-node tables with a zero edge matrix pin the
+        // semantics exactly. Enumeration order (configs ascending):
+        //   (c0=0, c1=0) cost 0+1 = 1  -> leaf, improving
+        //   (c0=0, c1=1) cost 0+5 = 5  -> leaf, NOT improving
+        //   (c0=1, ...)  partial 10    -> pruned before any leaf
+        // `enumerated` must count the two visited complete assignments;
+        // the old increment-on-improvement reported 1.
+        use crate::cost::EdgeTable;
+        use crate::parallel::PConfig;
+        let two = || vec![PConfig::serial(), PConfig::data(2)];
+        let tables = CostTables {
+            configs: vec![two(), two()],
+            node_cost: vec![vec![0.0, 10.0], vec![1.0, 5.0]],
+            edges: vec![EdgeTable { src: 0, dst: 1, cost: vec![0.0; 4] }],
+        };
+        let r = optimize(&tables);
+        assert_eq!(r.stats.final_nodes, 2);
+        assert_eq!(r.stats.enumerated, 2, "visited assignments, not improvements");
+        assert!((r.cost - 1.0).abs() < 1e-12);
+        assert_eq!(r.strategy.configs, vec![PConfig::serial(), PConfig::serial()]);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::ExecutionPlan;
@@ -68,21 +69,41 @@ impl PlanKey {
 }
 
 /// A bounded least-recently-used cache of shared plans.
+///
+/// The hit/miss counters are atomics behind read accessors
+/// ([`PlanCache::hits`] / [`PlanCache::misses`]) rather than public
+/// fields: callers cannot corrupt them, and shared owners — the
+/// `PlanService` shards, which hold caches behind mutexes — can report
+/// them through `&self` without taking a write path.
 pub struct PlanCache {
     cap: usize,
     tick: u64,
     map: HashMap<PlanKey, (u64, Arc<ExecutionPlan>)>,
-    /// Lookups served from the cache.
-    pub hits: u64,
-    /// Lookups that had to build.
-    pub misses: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl PlanCache {
     /// A cache holding at most `cap` plans (`cap >= 1`).
     pub fn new(cap: usize) -> PlanCache {
         assert!(cap >= 1, "cache capacity must be positive");
-        PlanCache { cap, tick: 0, map: HashMap::new(), hits: 0, misses: 0 }
+        PlanCache {
+            cap,
+            tick: 0,
+            map: HashMap::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to build a plan.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
     }
 
     /// Fetch the plan for (cm, strategy), building and inserting it on a
@@ -92,10 +113,10 @@ impl PlanCache {
         self.tick += 1;
         if let Some((last_used, plan)) = self.map.get_mut(&key) {
             *last_used = self.tick;
-            self.hits += 1;
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Arc::clone(plan);
         }
-        self.misses += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let plan = Arc::new(ExecutionPlan::build(cm, strategy));
         if self.map.len() >= self.cap {
             if let Some(lru) = self
@@ -144,7 +165,7 @@ mod tests {
         let a = cache.get_or_build(&cm, &s);
         let b = cache.get_or_build(&cm, &s);
         assert!(Arc::ptr_eq(&a, &b), "second lookup must hit");
-        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
     }
 
     #[test]
@@ -173,11 +194,11 @@ mod tests {
         cache.get_or_build(&cm, &data); // tick 3: refresh data
         cache.get_or_build(&cm, &owt); // evicts model (coldest)
         assert_eq!(cache.len(), 2);
-        let before = cache.misses;
+        let before = cache.misses();
         cache.get_or_build(&cm, &data); // still cached
-        assert_eq!(cache.misses, before);
+        assert_eq!(cache.misses(), before);
         cache.get_or_build(&cm, &model); // was evicted: rebuild
-        assert_eq!(cache.misses, before + 1);
+        assert_eq!(cache.misses(), before + 1);
     }
 
     #[test]

@@ -18,8 +18,10 @@ use crate::optimizer::{self, dfs, Optimized, SearchStats};
 /// Implementations must return the globally optimal strategy for the
 /// tables — or an error if they cannot (a truncated search with no
 /// complete leaf). Backends are stateless between calls; the planner owns
-/// all caching.
-pub trait SearchBackend {
+/// all caching. `Send + Sync` is part of the contract so one backend can
+/// serve concurrent searches (the `PlanService` shares a single boxed
+/// backend across its worker threads).
+pub trait SearchBackend: Send + Sync {
     /// Short name for logs and CLI selection (`--backend <name>`).
     fn name(&self) -> &'static str;
 

@@ -36,14 +36,22 @@
 //!   kept in an LRU [`PlanCache`] — repeated queries against the same
 //!   (network, cluster) pair skip all of that work ([`SessionStats`]
 //!   exposes the counters; the `planner_session` bench measures it).
+//! * **Concurrent serving.** A [`Planner`] is a single-caller session —
+//!   every method takes `&mut self`. For many concurrent callers,
+//!   [`service::PlanService`] fronts the same pipeline behind `&self`
+//!   with a sharded plan cache and single-flight state building, and
+//!   [`serve`] speaks it over TCP (`optcnn serve`). DESIGN.md §4.
 
 #![warn(missing_docs)]
 
 pub mod backend;
 pub mod cluster;
+pub mod serve;
+pub mod service;
 
 pub use backend::{Elimination, ExhaustiveDfs, SearchBackend};
 pub use cluster::ClusterSpec;
+pub use service::{PlanRequest, PlanService, ServiceStats};
 
 use std::collections::HashMap;
 use std::fmt;
@@ -212,6 +220,24 @@ pub struct Evaluation {
     pub throughput: f64,
     /// Simulated training throughput (images/s) = batch / sim step.
     pub sim_throughput: f64,
+}
+
+/// Derive an [`Evaluation`] from a materialized plan — the one kernel
+/// behind [`Planner::evaluate_strategy`] and [`PlanService::evaluate`],
+/// so the session and service paths produce identical numbers by
+/// construction (pinned by `tests/service.rs`).
+fn evaluate_plan(
+    cm: &CostModel<'_>,
+    plan: &ExecutionPlan,
+    strategy: &Strategy,
+    global_batch: usize,
+) -> Evaluation {
+    let estimate = cm.t_o(strategy);
+    let sim = steady_state_step_plan(plan, cm);
+    let comm = plan.comm();
+    let throughput = global_batch as f64 / estimate;
+    let sim_throughput = sim.throughput(global_batch);
+    Evaluation { estimate, sim, comm, throughput, sim_throughput }
 }
 
 /// Work counters for one [`Planner`] session: how much expensive state
@@ -466,12 +492,7 @@ impl Planner {
     pub fn evaluate_strategy(&mut self, strategy: &Strategy) -> Evaluation {
         let plan = self.plan_for(strategy);
         let cm = CostModel::new(&self.graph, &self.devices);
-        let estimate = cm.t_o(strategy);
-        let sim = steady_state_step_plan(&plan, &cm);
-        let comm = plan.comm();
-        let throughput = self.global_batch() as f64 / estimate;
-        let sim_throughput = sim.throughput(self.global_batch());
-        Evaluation { estimate, sim, comm, throughput, sim_throughput }
+        evaluate_plan(&cm, &plan, strategy, self.global_batch())
     }
 
     /// How much expensive state this session has built versus reused.
@@ -479,8 +500,8 @@ impl Planner {
         SessionStats {
             table_builds: self.table_builds,
             searches: self.searches,
-            plan_hits: self.plans.hits,
-            plan_misses: self.plans.misses,
+            plan_hits: self.plans.hits(),
+            plan_misses: self.plans.misses(),
         }
     }
 }

@@ -1,0 +1,447 @@
+//! `optcnn serve`: the TCP front end over a shared [`PlanService`].
+//!
+//! The wire protocol is newline-delimited JSON over plain TCP via
+//! `std::net` — the offline registry carries no HTTP/async stack, and
+//! line framing keeps a client one `nc` invocation away (DESIGN.md §4):
+//!
+//! ```text
+//! request:  {"net": "vgg16", "devices": 4, "batch": 32,
+//!            "strategy": "layerwise", "want": "plan"}
+//! response: {"ok": true, "plan": {...}}
+//!         | {"ok": true, "evaluation": {...}}
+//!         | {"ok": false, "error": "one-line message"}
+//! ```
+//!
+//! Instead of `"devices"` (the paper's P100 preset) a request may carry
+//! `"cluster": {"nodes": 2, "gpus_per_node": 8, ...}` with the same keys
+//! as the TOML `[cluster]` section. `"want"` defaults to `"plan"`;
+//! `"strategy"` defaults to `"layerwise"`; `"batch"` defaults to the
+//! paper's per-GPU 32.
+//!
+//! Every connection gets its own thread; all connections share one
+//! [`PlanService`], so a plan primed by any client is a cache hit for
+//! every other. Malformed requests answer `{"ok": false, ...}` on the
+//! same connection instead of dropping it.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::device::ComputeModel;
+use crate::error::{OptError, Result};
+use crate::util::json::Json;
+
+use super::service::{PlanRequest, PlanService};
+use super::{ClusterSpec, Network, StrategyKind, PER_GPU_BATCH};
+
+/// What a request asks the server to return.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Want {
+    /// The materialized execution plan (the exact JSON `optcnn plan
+    /// --out` writes).
+    Plan,
+    /// The evaluation: estimate, simulated step, throughput, comm.
+    Evaluate,
+}
+
+/// A request-shaped [`OptError`]: every malformed field is the client's
+/// mistake, reported as one line.
+fn bad(msg: &str) -> OptError {
+    OptError::InvalidArgument(msg.to_string())
+}
+
+/// Strict non-negative integer off the wire: fractional or negative
+/// numbers are rejected, never silently truncated/saturated the way
+/// `Json::as_usize`'s `f64 as usize` cast would.
+fn as_uint(v: &Json) -> Option<usize> {
+    let n = v.as_f64()?;
+    if n.fract() == 0.0 && (0.0..=(usize::MAX as f64)).contains(&n) {
+        Some(n as usize)
+    } else {
+        None
+    }
+}
+
+/// Hard caps on network-supplied sizes. The planning library itself has
+/// no limits (callers are trusted), but a TCP client must not be able to
+/// make the server allocate an `ndev x ndev` bandwidth matrix or a
+/// billion-sample graph out of one request line.
+const MAX_TOTAL_DEVICES: usize = 1024;
+/// Cap on the per-GPU batch a request may ask for.
+const MAX_PER_GPU_BATCH: usize = 4096;
+/// Cap on one request line; longer lines cannot be resynced and close
+/// the connection.
+const MAX_REQUEST_BYTES: u64 = 64 * 1024;
+
+/// Parse one request line into a typed request plus what to return.
+pub fn parse_request(line: &str) -> Result<(PlanRequest, Want)> {
+    let v = Json::parse(line).map_err(|e| bad(&format!("malformed request JSON: {e}")))?;
+    let net = v.get("net").and_then(Json::as_str);
+    let network: Network = net.ok_or_else(|| bad("request needs a `net` string"))?.parse()?;
+    let cluster = match (v.get("devices"), v.get("cluster")) {
+        (Some(_), Some(_)) => {
+            return Err(bad("`devices` and `cluster` are mutually exclusive"));
+        }
+        (Some(d), None) => {
+            let n = as_uint(d).ok_or_else(|| bad("`devices` must be a whole number"))?;
+            if n > MAX_TOTAL_DEVICES {
+                return Err(bad(&format!("`devices` capped at {MAX_TOTAL_DEVICES}, got {n}")));
+            }
+            ClusterSpec::p100(n)?
+        }
+        (None, Some(c)) => cluster_from_json(c)?,
+        (None, None) => ClusterSpec::p100(4)?,
+    };
+    let strategy: StrategyKind = match v.get("strategy") {
+        None => StrategyKind::Layerwise,
+        Some(s) => {
+            let name = s.as_str().ok_or_else(|| bad("`strategy` must be a string"))?;
+            name.parse()?
+        }
+    };
+    let per_gpu_batch = match v.get("batch") {
+        None => PER_GPU_BATCH,
+        Some(b) => as_uint(b).ok_or_else(|| bad("`batch` must be a whole number"))?,
+    };
+    if per_gpu_batch > MAX_PER_GPU_BATCH {
+        return Err(bad(&format!("`batch` capped at {MAX_PER_GPU_BATCH}, got {per_gpu_batch}")));
+    }
+    let want = match v.get("want").map(Json::as_str) {
+        None | Some(Some("plan")) => Want::Plan,
+        Some(Some("evaluate")) => Want::Evaluate,
+        Some(other) => {
+            return Err(bad(&format!("`want` must be \"plan\" or \"evaluate\", got {other:?}")));
+        }
+    };
+    let req = PlanRequest::with_cluster(network, cluster)
+        .strategy(strategy)
+        .per_gpu_batch(per_gpu_batch);
+    Ok((req, want))
+}
+
+/// Build a [`ClusterSpec`] from a request's `cluster` object. Keys
+/// mirror the TOML `[cluster]` section: `nodes`, `gpus_per_node`,
+/// `intra_bw_gbps`, `inter_bw_gbps`, `host_bw_gbps`, `compute`,
+/// `peak_tflops`, `mem_bw_gbps`, `name`. Unknown keys are errors, never
+/// silently ignored.
+fn cluster_from_json(v: &Json) -> Result<ClusterSpec> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| OptError::InvalidArgument("`cluster` must be an object".into()))?;
+    const KNOWN: [&str; 9] = [
+        "nodes",
+        "gpus_per_node",
+        "intra_bw_gbps",
+        "inter_bw_gbps",
+        "host_bw_gbps",
+        "compute",
+        "peak_tflops",
+        "mem_bw_gbps",
+        "name",
+    ];
+    for key in obj.keys() {
+        if !KNOWN.contains(&key.as_str()) {
+            return Err(OptError::InvalidArgument(format!(
+                "unknown cluster key `{key}` (known: {})",
+                KNOWN.join(", ")
+            )));
+        }
+    }
+    let uint = |key: &str, default: usize| -> Result<usize> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(n) => {
+                as_uint(n).ok_or_else(|| bad(&format!("cluster.{key} must be a whole number")))
+            }
+        }
+    };
+    let float = |key: &str| -> Result<Option<f64>> {
+        match v.get(key) {
+            None => Ok(None),
+            Some(n) => match n.as_f64() {
+                Some(x) => Ok(Some(x)),
+                None => Err(bad(&format!("cluster.{key} must be a number"))),
+            },
+        }
+    };
+    let nodes = uint("nodes", 1)?;
+    let gpus_per_node = uint("gpus_per_node", 4)?;
+    let total = nodes.checked_mul(gpus_per_node).unwrap_or(usize::MAX);
+    if total > MAX_TOTAL_DEVICES {
+        return Err(bad(&format!(
+            "cluster capped at {MAX_TOTAL_DEVICES} devices, got {nodes} x {gpus_per_node}"
+        )));
+    }
+    let mut spec = ClusterSpec::new(nodes, gpus_per_node);
+    if let Some(bw) = float("intra_bw_gbps")? {
+        spec = spec.intra_bw(bw * 1e9);
+    }
+    if let Some(bw) = float("inter_bw_gbps")? {
+        spec = spec.inter_bw(bw * 1e9);
+    }
+    if let Some(bw) = float("host_bw_gbps")? {
+        spec = spec.host_bw(bw * 1e9);
+    }
+    // compute model: named preset (default p100), then the same
+    // field-level overrides the TOML form supports
+    let mut compute = match v.get("compute") {
+        None => ComputeModel::p100(),
+        Some(c) => {
+            let name = c.as_str().ok_or_else(|| bad("cluster.compute must be a string"))?;
+            ComputeModel::named(name)?
+        }
+    };
+    if let Some(x) = float("peak_tflops")? {
+        compute.peak_flops = x * 1e12;
+    }
+    if let Some(x) = float("mem_bw_gbps")? {
+        compute.mem_bw = x * 1e9;
+    }
+    spec = spec.compute(compute);
+    if let Some(n) = v.get("name") {
+        spec = spec.name(n.as_str().ok_or_else(|| bad("cluster.name must be a string"))?);
+    }
+    Ok(spec)
+}
+
+/// JSON form of an [`Evaluation`](crate::planner::Evaluation).
+fn evaluation_json(eval: &crate::planner::Evaluation) -> Json {
+    Json::obj(vec![
+        ("estimate_s", Json::Num(eval.estimate)),
+        ("sim_step_s", Json::Num(eval.sim.step_time)),
+        ("throughput_img_s", Json::Num(eval.throughput)),
+        ("sim_throughput_img_s", Json::Num(eval.sim_throughput)),
+        ("xfer_bytes", Json::Num(eval.comm.xfer_bytes)),
+        ("sync_bytes", Json::Num(eval.comm.sync_bytes)),
+    ])
+}
+
+fn respond(service: &PlanService, line: &str) -> Result<Json> {
+    let (req, want) = parse_request(line)?;
+    match want {
+        Want::Plan => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("plan", service.plan(&req)?.to_json()),
+        ])),
+        Want::Evaluate => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("evaluation", evaluation_json(&service.evaluate(&req)?)),
+        ])),
+    }
+}
+
+/// The `{"ok": false, "error": ...}` reply for `msg`.
+fn error_reply(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// Handle one request line, always producing a single-line JSON reply —
+/// the pure core of the server, also usable without a socket.
+pub fn handle_line(service: &PlanService, line: &str) -> String {
+    match respond(service, line) {
+        Ok(body) => body.to_string(),
+        Err(e) => error_reply(&e.to_string()),
+    }
+}
+
+fn handle_conn(stream: TcpStream, service: &PlanService) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        // Bounded line read: a client streaming bytes with no newline
+        // must not grow an unbounded String inside the server.
+        let mut raw = Vec::new();
+        match (&mut reader).take(MAX_REQUEST_BYTES).read_until(b'\n', &mut raw) {
+            Ok(0) | Err(_) => return, // clean EOF or I/O error
+            Ok(n) if n as u64 >= MAX_REQUEST_BYTES && !raw.ends_with(b"\n") => {
+                // the line was truncated mid-stream: reply and drop the
+                // connection — there is no way to resync to the next line
+                let reply = error_reply(&format!(
+                    "request line exceeds {MAX_REQUEST_BYTES} bytes"
+                ));
+                let _ = writer
+                    .write_all(reply.as_bytes())
+                    .and_then(|()| writer.write_all(b"\n"))
+                    .and_then(|()| writer.flush());
+                return;
+            }
+            Ok(_) => {}
+        }
+        let text = String::from_utf8_lossy(&raw);
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let reply = handle_line(service, line);
+        let io = writer
+            .write_all(reply.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+            .and_then(|()| writer.flush());
+        if io.is_err() {
+            return;
+        }
+    }
+}
+
+/// A running server: the accept-loop thread plus one thread per open
+/// connection, all sharing one [`PlanService`].
+pub struct ServeHandle {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    /// The bound address (useful with `--addr 127.0.0.1:0`, which picks
+    /// an ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Block until the accept loop exits — i.e. forever, for the CLI.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting new connections and join the accept loop. Open
+    /// connections finish naturally when their client disconnects.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.local);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 for ephemeral) and answer
+/// requests against `service` until [`ServeHandle::shutdown`].
+pub fn spawn(addr: &str, service: Arc<PlanService>) -> Result<ServeHandle> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| OptError::Io(format!("bind {addr}: {e}")))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| OptError::Io(format!("local addr of {addr}: {e}")))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let accept = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop_flag.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Ok(stream) = conn {
+                let svc = Arc::clone(&service);
+                std::thread::spawn(move || handle_conn(stream, &svc));
+            }
+        }
+    });
+    Ok(ServeHandle { local, stop, accept: Some(accept) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_applies_defaults() {
+        let (req, want) = parse_request(r#"{"net": "lenet5"}"#).unwrap();
+        assert_eq!(req.network, Network::LeNet5);
+        assert_eq!(req.cluster.num_devices(), 4);
+        assert_eq!(req.per_gpu_batch, PER_GPU_BATCH);
+        assert_eq!(req.strategy, StrategyKind::Layerwise);
+        assert_eq!(want, Want::Plan);
+    }
+
+    #[test]
+    fn parse_request_reads_cluster_objects() {
+        let (req, want) = parse_request(
+            r#"{"net": "alexnet", "batch": 16, "strategy": "data", "want": "evaluate",
+                "cluster": {"nodes": 2, "gpus_per_node": 8, "compute": "v100",
+                            "intra_bw_gbps": 130.0, "inter_bw_gbps": 6.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(req.network, Network::AlexNet);
+        assert_eq!(req.cluster.num_devices(), 16);
+        assert_eq!(req.per_gpu_batch, 16);
+        assert_eq!(req.strategy, StrategyKind::Data);
+        assert_eq!(want, Want::Evaluate);
+        let d = req.cluster.device_graph().unwrap();
+        assert_eq!(d.bandwidth(0, 1), 130e9);
+        assert_eq!(d.bandwidth(0, 8), 6e9);
+    }
+
+    #[test]
+    fn cluster_objects_support_the_toml_compute_overrides() {
+        let (req, _) = parse_request(
+            r#"{"net": "lenet5",
+                "cluster": {"nodes": 1, "gpus_per_node": 2, "compute": "v100",
+                            "peak_tflops": 30.0, "mem_bw_gbps": 2000}}"#,
+        )
+        .unwrap();
+        let d = req.cluster.device_graph().unwrap();
+        assert_eq!(d.compute.peak_flops, 30e12);
+        assert_eq!(d.compute.mem_bw, 2000e9);
+    }
+
+    #[test]
+    fn bad_requests_get_one_line_error_replies() {
+        let service = PlanService::new();
+        for raw in [
+            "not json at all",
+            r#"{"devices": 2}"#,
+            r#"{"net": "not-a-net", "devices": 2}"#,
+            r#"{"net": "lenet5", "devices": 2, "cluster": {"nodes": 1}}"#,
+            r#"{"net": "lenet5", "devices": 2, "want": "poem"}"#,
+            r#"{"net": "lenet5", "cluster": {"sprockets": 3}}"#,
+            r#"{"net": "lenet5", "devices": "two"}"#,
+            r#"{"net": "lenet5", "devices": 4.9}"#,
+            r#"{"net": "lenet5", "devices": -4}"#,
+            r#"{"net": "lenet5", "devices": 2, "batch": 2.5}"#,
+            r#"{"net": "lenet5", "cluster": {"gpus_per_node": 2.5}}"#,
+        ] {
+            let reply = handle_line(&service, raw);
+            let v = Json::parse(&reply)
+                .unwrap_or_else(|e| panic!("unparsable reply for {raw}: {e}"));
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{raw}");
+            let msg = v.get("error").and_then(Json::as_str).unwrap();
+            assert!(!msg.is_empty() && !msg.contains('\n'), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_numeric_fields_are_rejected() {
+        // cluster dims and batch come off the wire: each must be capped
+        // before anything sized by them is allocated
+        assert!(parse_request(r#"{"net": "lenet5", "devices": 100000}"#).is_err());
+        assert!(parse_request(
+            r#"{"net": "lenet5", "cluster": {"nodes": 100000, "gpus_per_node": 100000}}"#
+        )
+        .is_err());
+        assert!(parse_request(r#"{"net": "lenet5", "devices": 2, "batch": 1000000}"#).is_err());
+        // at the caps everything still parses
+        assert!(parse_request(r#"{"net": "lenet5", "devices": 1024, "batch": 4096}"#).is_ok());
+    }
+
+    #[test]
+    fn evaluate_reply_carries_the_planner_numbers() {
+        let service = PlanService::new();
+        let reply = handle_line(
+            &service,
+            r#"{"net": "lenet5", "devices": 2, "strategy": "data", "want": "evaluate"}"#,
+        );
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        let eval = v.get("evaluation").unwrap();
+        let throughput = eval.get("throughput_img_s").unwrap().as_f64().unwrap();
+        assert!(throughput > 0.0);
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap().strategy(StrategyKind::Data);
+        let direct = service.evaluate(&req).unwrap();
+        assert_eq!(throughput, direct.throughput);
+    }
+}

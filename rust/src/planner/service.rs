@@ -1,0 +1,594 @@
+//! Concurrent plan serving: a thread-safe, shareable front end over the
+//! planning pipeline (DESIGN.md §4).
+//!
+//! A [`Planner`](crate::planner::Planner) is a single-caller session —
+//! every method takes `&mut self`. A [`PlanService`] is its concurrent
+//! counterpart: `Send + Sync`, shared as `Arc<PlanService>` across any
+//! number of threads, answering the same queries with the same bytes
+//! (pinned by `tests/service.rs`). Two mechanisms make that concurrency
+//! cheap rather than merely safe:
+//!
+//! * **Sharded plan cache.** Materialized
+//!   [`ExecutionPlan`](crate::plan::ExecutionPlan)s live in N
+//!   independently mutex-guarded [`PlanCache`] shards selected by
+//!   [`PlanKey`] hash, so unrelated queries never contend on one lock.
+//!   Hit/miss counters are atomics ([`PlanCache::hits`]), summed across
+//!   shards by [`PlanService::stats`].
+//! * **Single-flight state building.** The expensive per-(network,
+//!   batch, cluster) state — [`CostTables`] plus the search backend's
+//!   Algorithm 1 optimum — is memoized behind one [`OnceLock`] per key:
+//!   when many threads miss on the same key at once, exactly one runs
+//!   the build and the rest block until it finishes, instead of all
+//!   redundantly rebuilding tables. Keys compare full cluster structure
+//!   by value (never a lossy hash), the memo is LRU-bounded
+//!   ([`PlanServiceBuilder::state_capacity`]) so a long-running server
+//!   cannot grow without limit, and failed builds are *not* memoized —
+//!   a later request retries.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use optcnn::planner::{Network, PlanRequest, PlanService, StrategyKind};
+//!
+//! # fn main() -> optcnn::Result<()> {
+//! let service = Arc::new(PlanService::new());
+//! let req = PlanRequest::new(Network::LeNet5, 2)?.strategy(StrategyKind::Data);
+//! let eval = service.evaluate(&req)?;
+//! assert!(eval.throughput > 0.0);
+//! # Ok(())
+//! # }
+//! ```
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use crate::cost::{CostModel, CostTables};
+use crate::device::DeviceGraph;
+use crate::error::{OptError, Result};
+use crate::graph::CompGraph;
+use crate::optimizer::{strategies, Optimized};
+use crate::parallel::Strategy;
+use crate::plan::{ExecutionPlan, PlanCache, PlanKey};
+
+use super::backend::{Elimination, SearchBackend};
+use super::cluster::ClusterSpec;
+use super::{evaluate_plan, Evaluation, Network, StrategyKind, PER_GPU_BATCH};
+
+/// One plan query: which network, on what cluster, at what per-GPU
+/// batch, under which strategy — the unit of work a [`PlanService`]
+/// answers. Requests are plain data (`Clone`), cheap to build per call.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    /// The network to plan.
+    pub network: Network,
+    /// The cluster to plan against.
+    pub cluster: ClusterSpec,
+    /// Per-GPU batch size (the global batch is `per_gpu_batch x devices`).
+    pub per_gpu_batch: usize,
+    /// The strategy to resolve and evaluate.
+    pub strategy: StrategyKind,
+}
+
+impl PlanRequest {
+    /// A request against the paper's P100 preset at `devices` GPUs, with
+    /// the paper's per-GPU batch and the layer-wise optimal strategy.
+    pub fn new(network: Network, devices: usize) -> Result<PlanRequest> {
+        Ok(PlanRequest::with_cluster(network, ClusterSpec::p100(devices)?))
+    }
+
+    /// A request against an arbitrary cluster description.
+    pub fn with_cluster(network: Network, cluster: ClusterSpec) -> PlanRequest {
+        PlanRequest {
+            network,
+            cluster,
+            per_gpu_batch: PER_GPU_BATCH,
+            strategy: StrategyKind::Layerwise,
+        }
+    }
+
+    /// Select the strategy to resolve (default: layerwise optimal).
+    pub fn strategy(mut self, kind: StrategyKind) -> PlanRequest {
+        self.strategy = kind;
+        self
+    }
+
+    /// Set the per-GPU batch size (default: the paper's 32).
+    pub fn per_gpu_batch(mut self, batch: usize) -> PlanRequest {
+        self.per_gpu_batch = batch;
+        self
+    }
+}
+
+/// Identity of the expensive per-(network, batch, cluster) state.
+/// Compared by value, never by a lossy hash, so two distinct clusters
+/// cannot alias one memo entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct StateKey {
+    network: Network,
+    per_gpu_batch: usize,
+    cluster: ClusterId,
+}
+
+/// Structural identity of a device graph: everything cost tables and
+/// the search depend on — device/node layout, the full pairwise
+/// bandwidth matrix, host/NIC links, and the compute model, with floats
+/// captured by bit pattern. The cosmetic cluster name is excluded, so
+/// two identically-shaped clusters share one memo entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ClusterId {
+    node_of: Vec<usize>,
+    bw_bits: Vec<u64>,
+    host_bw: u64,
+    node_bw: u64,
+    compute: [u64; 5],
+}
+
+fn cluster_id(d: &DeviceGraph) -> ClusterId {
+    let n = d.num_devices();
+    let mut bw_bits = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            bw_bits.push(d.bandwidth(i, j).to_bits());
+        }
+    }
+    ClusterId {
+        node_of: d.devices.iter().map(|dev| dev.node).collect(),
+        bw_bits,
+        host_bw: d.host_bw.to_bits(),
+        node_bw: d.node_bw.to_bits(),
+        compute: [
+            d.compute.peak_flops.to_bits(),
+            d.compute.mem_bw.to_bits(),
+            d.compute.overhead.to_bits(),
+            d.compute.conv_eff.to_bits(),
+            d.compute.gemm_eff.to_bits(),
+        ],
+    }
+}
+
+/// The memoized expensive state for one [`StateKey`]: the exhaustive
+/// cost tables and the search backend's optimum over them.
+struct TableState {
+    tables: CostTables,
+    optimized: Optimized,
+}
+
+/// The single-flight cell: set exactly once, by exactly one builder;
+/// concurrent readers of an in-flight cell block until it is set.
+type StateCell = OnceLock<Result<Arc<TableState>>>;
+
+/// The bounded single-flight memo: an LRU map of state cells. Evicting
+/// an entry is always safe — requests already waiting on its cell hold
+/// their own `Arc` and complete normally; only the memoization is lost.
+struct StateMemo {
+    cap: usize,
+    tick: u64,
+    map: HashMap<StateKey, (u64, Arc<StateCell>)>,
+}
+
+impl StateMemo {
+    /// The cell for `key`, inserting (and evicting the LRU entry at
+    /// capacity) on first sight.
+    fn cell(&mut self, key: &StateKey) -> Arc<StateCell> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((last_used, cell)) = self.map.get_mut(key) {
+            *last_used = tick;
+            return Arc::clone(cell);
+        }
+        if self.map.len() >= self.cap {
+            let lru = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone());
+            if let Some(lru) = lru {
+                self.map.remove(&lru);
+            }
+        }
+        let cell = Arc::new(OnceLock::new());
+        self.map.insert(key.clone(), (tick, Arc::clone(&cell)));
+        cell
+    }
+
+    /// Drop `key`'s entry, but only if it still maps to `cell` (a retry
+    /// may have installed a fresh cell in the meantime).
+    fn forget(&mut self, key: &StateKey, cell: &Arc<StateCell>) {
+        if let Some((_, current)) = self.map.get(key) {
+            if Arc::ptr_eq(current, cell) {
+                self.map.remove(key);
+            }
+        }
+    }
+}
+
+/// Configures a [`PlanService`]; obtained from [`PlanService::builder`].
+pub struct PlanServiceBuilder {
+    shards: usize,
+    shard_capacity: usize,
+    state_capacity: usize,
+    backend: Box<dyn SearchBackend>,
+}
+
+impl PlanServiceBuilder {
+    /// Number of independent plan-cache shards (default 8). More shards
+    /// mean less lock contention between unrelated queries.
+    pub fn shards(mut self, n: usize) -> PlanServiceBuilder {
+        self.shards = n;
+        self
+    }
+
+    /// LRU capacity of each shard (default 8 plans).
+    pub fn shard_capacity(mut self, cap: usize) -> PlanServiceBuilder {
+        self.shard_capacity = cap;
+        self
+    }
+
+    /// LRU capacity of the single-flight state memo — how many
+    /// (network, batch, cluster) cost-table/search results stay resident
+    /// (default 32). The memo would otherwise grow without bound in a
+    /// long-running server answering many distinct keys.
+    pub fn state_capacity(mut self, cap: usize) -> PlanServiceBuilder {
+        self.state_capacity = cap;
+        self
+    }
+
+    /// The strategy-search backend used for layer-wise requests
+    /// (default: [`Elimination`]). One backend serves all threads.
+    pub fn backend(mut self, backend: impl SearchBackend + 'static) -> PlanServiceBuilder {
+        self.backend = Box::new(backend);
+        self
+    }
+
+    /// Validate the configuration and assemble the service.
+    pub fn build(self) -> Result<PlanService> {
+        if self.shards == 0 {
+            return Err(OptError::InvalidArgument(
+                "plan service needs at least one cache shard".into(),
+            ));
+        }
+        if self.shard_capacity == 0 {
+            return Err(OptError::InvalidArgument(
+                "shard capacity must be at least 1".into(),
+            ));
+        }
+        if self.state_capacity == 0 {
+            return Err(OptError::InvalidArgument(
+                "state memo capacity must be at least 1".into(),
+            ));
+        }
+        Ok(PlanService {
+            backend: self.backend,
+            shards: (0..self.shards)
+                .map(|_| Mutex::new(PlanCache::new(self.shard_capacity)))
+                .collect(),
+            states: Mutex::new(StateMemo {
+                cap: self.state_capacity,
+                tick: 0,
+                map: HashMap::new(),
+            }),
+            table_builds: AtomicU64::new(0),
+            searches: AtomicU64::new(0),
+            build_waits: AtomicU64::new(0),
+        })
+    }
+}
+
+/// Aggregate work counters across the whole service: shard hit/miss
+/// totals plus single-flight memo activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Plan-cache lookups served from a shard without building (summed
+    /// over shards).
+    pub plan_hits: u64,
+    /// Plan-cache lookups that materialized a plan (summed over shards).
+    pub plan_misses: u64,
+    /// Times the expensive (cost tables + search) state was actually
+    /// built — with single flight, once per distinct key no matter how
+    /// many threads raced for it.
+    pub table_builds: u64,
+    /// Times a search backend actually ran (== `table_builds` unless a
+    /// search failed).
+    pub searches: u64,
+    /// Requests that blocked on another thread's in-flight state build
+    /// instead of duplicating it — the single-flight savings. (Counted
+    /// best-effort: a request that lost the race so narrowly that the
+    /// build finished first is indistinguishable from a memo hit.)
+    pub build_waits: u64,
+    /// Plans currently resident across all shards.
+    pub plans_cached: usize,
+    /// (Tables + optimum) states currently resident in the memo.
+    pub states_cached: usize,
+}
+
+/// A thread-safe plan-serving façade over the planning pipeline.
+///
+/// Share it as `Arc<PlanService>`; every method takes `&self`. See the
+/// [module docs](self) for the sharding and single-flight design, and
+/// `optcnn serve` ([`serve`](crate::planner::serve)) for the TCP front
+/// end.
+pub struct PlanService {
+    backend: Box<dyn SearchBackend>,
+    shards: Vec<Mutex<PlanCache>>,
+    states: Mutex<StateMemo>,
+    table_builds: AtomicU64,
+    searches: AtomicU64,
+    build_waits: AtomicU64,
+}
+
+impl PlanService {
+    /// A service with the default configuration: 8 shards of 8 plans, a
+    /// 32-entry state memo, [`Elimination`] search.
+    pub fn new() -> PlanService {
+        PlanService::builder().build().expect("default service configuration is valid")
+    }
+
+    /// Start configuring a service.
+    pub fn builder() -> PlanServiceBuilder {
+        PlanServiceBuilder {
+            shards: 8,
+            shard_capacity: 8,
+            state_capacity: 32,
+            backend: Box::new(Elimination),
+        }
+    }
+
+    /// Validate the request and materialize its (graph, devices) pair —
+    /// the cheap per-request state.
+    fn session(&self, req: &PlanRequest) -> Result<(CompGraph, DeviceGraph)> {
+        if req.per_gpu_batch == 0 {
+            return Err(OptError::InvalidArgument(
+                "per-GPU batch size must be at least 1".into(),
+            ));
+        }
+        let devices = req.cluster.device_graph()?;
+        let global = req.per_gpu_batch.checked_mul(devices.num_devices()).ok_or_else(|| {
+            OptError::InvalidArgument(format!(
+                "global batch overflows: {} per GPU x {} devices",
+                req.per_gpu_batch,
+                devices.num_devices()
+            ))
+        })?;
+        let graph = req.network.graph(global);
+        Ok((graph, devices))
+    }
+
+    /// Resolve the request's strategy: baselines are derived from the
+    /// graph shape; `Layerwise` comes from the single-flight memo.
+    pub fn strategy(&self, req: &PlanRequest) -> Result<Strategy> {
+        let (graph, devices) = self.session(req)?;
+        self.resolve(req, &graph, &devices)
+    }
+
+    fn resolve(
+        &self,
+        req: &PlanRequest,
+        graph: &CompGraph,
+        devices: &DeviceGraph,
+    ) -> Result<Strategy> {
+        let ndev = devices.num_devices();
+        Ok(match req.strategy {
+            StrategyKind::Data => strategies::data_parallel(graph, ndev),
+            StrategyKind::Model => strategies::model_parallel(graph, ndev),
+            StrategyKind::Owt => strategies::owt(graph, ndev),
+            StrategyKind::Layerwise => {
+                self.state_for(req, graph, devices)?.optimized.strategy.clone()
+            }
+        })
+    }
+
+    /// The memoized (tables + optimum) state for the request's key,
+    /// built single-flight on first use.
+    fn state_for(
+        &self,
+        req: &PlanRequest,
+        graph: &CompGraph,
+        devices: &DeviceGraph,
+    ) -> Result<Arc<TableState>> {
+        let key = StateKey {
+            network: req.network,
+            per_gpu_batch: req.per_gpu_batch,
+            cluster: cluster_id(devices),
+        };
+        let cell = {
+            let mut states = self.states.lock().unwrap_or_else(PoisonError::into_inner);
+            states.cell(&key)
+        };
+        // Single flight: the map lock is already released, so the build
+        // below never blocks unrelated keys. Exactly one thread runs the
+        // closure; concurrent requesters of the same key block inside
+        // `get_or_init` until it finishes.
+        let mut ran = false;
+        let was_set = cell.get().is_some();
+        let build = || -> Result<Arc<TableState>> {
+            ran = true;
+            self.table_builds.fetch_add(1, Ordering::Relaxed);
+            let cm = CostModel::new(graph, devices);
+            let tables = CostTables::build(&cm, devices.num_devices());
+            let optimized = self.backend.search(&tables)?;
+            self.searches.fetch_add(1, Ordering::Relaxed);
+            Ok(Arc::new(TableState { tables, optimized }))
+        };
+        let result = cell.get_or_init(build).clone();
+        if !ran && !was_set {
+            self.build_waits.fetch_add(1, Ordering::Relaxed);
+        }
+        if result.is_err() {
+            // Failed builds are not memoized: drop the cell (only if it
+            // is still the one we used) so a later request can retry.
+            let mut states = self.states.lock().unwrap_or_else(PoisonError::into_inner);
+            states.forget(&key, &cell);
+        }
+        result
+    }
+
+    /// The shard owning `key` (stable hash of the structural plan key).
+    fn shard_of(&self, key: &PlanKey) -> &Mutex<PlanCache> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Fetch-or-build through the sharded cache. The shard mutex spans
+    /// the build, so concurrent misses on one key build once (the
+    /// plan-level single flight) while other shards proceed untouched.
+    fn cached_plan(&self, cm: &CostModel<'_>, strategy: &Strategy) -> Arc<ExecutionPlan> {
+        let key = PlanKey::of(cm, strategy);
+        let mut shard = self.shard_of(&key).lock().unwrap_or_else(PoisonError::into_inner);
+        shard.get_or_build(cm, strategy)
+    }
+
+    /// The materialized execution plan for a request, served from the
+    /// sharded cache.
+    pub fn plan(&self, req: &PlanRequest) -> Result<Arc<ExecutionPlan>> {
+        let (graph, devices) = self.session(req)?;
+        let strategy = self.resolve(req, &graph, &devices)?;
+        let cm = CostModel::new(&graph, &devices);
+        Ok(self.cached_plan(&cm, &strategy))
+    }
+
+    /// Evaluate a request: Eq. 1 estimate, steady-state simulation, and
+    /// communication volume — the same numbers a single-threaded
+    /// [`Planner`](crate::planner::Planner) produces for the same query.
+    pub fn evaluate(&self, req: &PlanRequest) -> Result<Evaluation> {
+        let (graph, devices) = self.session(req)?;
+        let strategy = self.resolve(req, &graph, &devices)?;
+        let cm = CostModel::new(&graph, &devices);
+        let plan = self.cached_plan(&cm, &strategy);
+        let global_batch = req.per_gpu_batch * devices.num_devices();
+        Ok(evaluate_plan(&cm, &plan, &strategy, global_batch))
+    }
+
+    /// The memoized layer-wise optimum (strategy, cost, search stats)
+    /// for the request's (network, batch, cluster), built on first use.
+    pub fn optimized(&self, req: &PlanRequest) -> Result<Optimized> {
+        let (graph, devices) = self.session(req)?;
+        Ok(self.state_for(req, &graph, &devices)?.optimized.clone())
+    }
+
+    /// Largest per-layer configuration count (`C` in the paper's
+    /// Table 2) of the memoized cost tables for this request; builds the
+    /// state on first use like any layer-wise query.
+    pub fn max_configs(&self, req: &PlanRequest) -> Result<usize> {
+        let (graph, devices) = self.session(req)?;
+        Ok(self.state_for(req, &graph, &devices)?.tables.max_configs())
+    }
+
+    /// Aggregate counters: atomic loads plus a brief lock per shard.
+    pub fn stats(&self) -> ServiceStats {
+        let mut plan_hits = 0;
+        let mut plan_misses = 0;
+        let mut plans_cached = 0;
+        for shard in &self.shards {
+            let s = shard.lock().unwrap_or_else(PoisonError::into_inner);
+            plan_hits += s.hits();
+            plan_misses += s.misses();
+            plans_cached += s.len();
+        }
+        let states_cached =
+            self.states.lock().unwrap_or_else(PoisonError::into_inner).map.len();
+        ServiceStats {
+            plan_hits,
+            plan_misses,
+            table_builds: self.table_builds.load(Ordering::Relaxed),
+            searches: self.searches.load(Ordering::Relaxed),
+            build_waits: self.build_waits.load(Ordering::Relaxed),
+            plans_cached,
+            states_cached,
+        }
+    }
+}
+
+impl Default for PlanService {
+    /// [`PlanService::new`].
+    fn default() -> PlanService {
+        PlanService::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::Planner;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn service_is_send_and_sync() {
+        assert_send_sync::<PlanService>();
+        assert_send_sync::<Arc<PlanService>>();
+    }
+
+    #[test]
+    fn builder_validates() {
+        assert!(PlanService::builder().shards(0).build().is_err());
+        assert!(PlanService::builder().shard_capacity(0).build().is_err());
+        assert!(PlanService::builder().state_capacity(0).build().is_err());
+        assert!(PlanService::builder().shards(3).shard_capacity(2).build().is_ok());
+    }
+
+    #[test]
+    fn state_memo_is_lru_bounded() {
+        let service = PlanService::builder().state_capacity(1).build().unwrap();
+        let small = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        let big = PlanRequest::new(Network::LeNet5, 2).unwrap().per_gpu_batch(16);
+        service.plan(&small).unwrap(); // build #1
+        service.plan(&big).unwrap(); // evicts `small`'s state: build #2
+        service.plan(&small).unwrap(); // re-entered the memo: build #3
+        let s = service.stats();
+        assert_eq!(s.table_builds, 3, "capacity 1 forces re-builds on alternation");
+        assert_eq!(s.states_cached, 1, "the memo never exceeds its capacity");
+    }
+
+    #[test]
+    fn serves_the_same_numbers_as_a_planner_session() {
+        let service = PlanService::new();
+        for kind in StrategyKind::ALL {
+            let req = PlanRequest::new(Network::LeNet5, 2).unwrap().strategy(kind);
+            let a = service.evaluate(&req).unwrap();
+            let mut p = Planner::builder(Network::LeNet5).devices(2).build().unwrap();
+            let b = p.evaluate(kind).unwrap();
+            assert_eq!(a.estimate, b.estimate, "{kind}");
+            assert_eq!(a.sim.step_time, b.sim.step_time, "{kind}");
+            assert_eq!(a.comm.total(), b.comm.total(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn repeated_queries_reuse_memo_and_cache() {
+        let service = PlanService::new();
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        let a = service.plan(&req).unwrap();
+        let b = service.plan(&req).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "warm plan must be the cached object");
+        let s = service.stats();
+        assert_eq!((s.table_builds, s.searches), (1, 1));
+        assert_eq!((s.plan_hits, s.plan_misses), (1, 1));
+        assert_eq!(s.plans_cached, 1);
+        // reading table metadata reuses the memo instead of rebuilding
+        assert!(service.max_configs(&req).unwrap() > 1);
+        assert_eq!(service.stats().table_builds, 1);
+    }
+
+    #[test]
+    fn invalid_requests_error_cleanly() {
+        let service = PlanService::new();
+        let zero_batch = PlanRequest::new(Network::LeNet5, 2).unwrap().per_gpu_batch(0);
+        assert!(service.plan(&zero_batch).is_err());
+        let bad_cluster =
+            PlanRequest::with_cluster(Network::LeNet5, ClusterSpec::new(0, 4));
+        assert!(service.evaluate(&bad_cluster).is_err());
+        assert!(PlanRequest::new(Network::LeNet5, 7).is_err(), "preset cannot shape 7");
+    }
+
+    #[test]
+    fn cluster_id_distinguishes_topologies() {
+        let two_by_four = ClusterSpec::p100(8).unwrap().device_graph().unwrap();
+        let one_by_eight = ClusterSpec::new(1, 8).device_graph().unwrap();
+        assert_ne!(cluster_id(&two_by_four), cluster_id(&one_by_eight));
+        let again = ClusterSpec::p100(8).unwrap().device_graph().unwrap();
+        assert_eq!(cluster_id(&two_by_four), cluster_id(&again));
+        // the cosmetic name is excluded: equal shapes share a memo entry
+        let renamed =
+            ClusterSpec::p100(8).unwrap().name("other").device_graph().unwrap();
+        assert_eq!(cluster_id(&two_by_four), cluster_id(&renamed));
+    }
+}

@@ -39,6 +39,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -321,10 +328,12 @@ mod tests {
 
     #[test]
     fn accessors() {
-        let v = Json::parse(r#"{"files": [{"path": "a.hlo", "n": 3}]}"#).unwrap();
+        let v = Json::parse(r#"{"files": [{"path": "a.hlo", "n": 3}], "ok": true}"#).unwrap();
         let files = v.get("files").unwrap().as_arr().unwrap();
         assert_eq!(files[0].get("path").unwrap().as_str(), Some("a.hlo"));
         assert_eq!(files[0].get("n").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("files").unwrap().as_bool(), None);
     }
 
     #[test]

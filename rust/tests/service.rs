@@ -1,0 +1,195 @@
+//! Concurrency suite for the `PlanService` + `optcnn serve` subsystem:
+//! N threads hammering one `Arc<PlanService>` must receive byte-identical
+//! answers to one-shot single-threaded `Planner` sessions, the
+//! single-flight memo must build shared state exactly once under races,
+//! shard counters must sum coherently, and the TCP server must answer a
+//! round-trip over a real socket.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+use optcnn::planner::serve;
+use optcnn::planner::{Network, PlanRequest, PlanService, Planner, StrategyKind};
+use optcnn::util::json::Json;
+
+/// The single-threaded reference: the plan JSON a fresh one-shot
+/// `Planner` serves for (net, ndev, kind).
+fn reference_plan_json(net: Network, ndev: usize, kind: StrategyKind) -> String {
+    let mut p = Planner::builder(net).devices(ndev).build().unwrap();
+    p.plan(kind).unwrap().to_json().to_string()
+}
+
+#[test]
+fn concurrent_queries_match_one_shot_planner_bytes() {
+    let combos: Vec<(Network, usize, StrategyKind)> = vec![
+        (Network::LeNet5, 2, StrategyKind::Data),
+        (Network::LeNet5, 2, StrategyKind::Layerwise),
+        (Network::AlexNet, 4, StrategyKind::Owt),
+        (Network::AlexNet, 4, StrategyKind::Layerwise),
+    ];
+    let reference: BTreeMap<usize, String> = combos
+        .iter()
+        .enumerate()
+        .map(|(i, &(n, d, k))| (i, reference_plan_json(n, d, k)))
+        .collect();
+
+    let service = Arc::new(PlanService::new());
+    let threads = 8;
+    let rounds = 3;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let service = Arc::clone(&service);
+            let combos = &combos;
+            handles.push(scope.spawn(move || {
+                let mut got = Vec::new();
+                for r in 0..rounds {
+                    for step in 0..combos.len() {
+                        // rotate the visit order per (thread, round) so
+                        // threads interleave on different combos
+                        let i = (step + t + r) % combos.len();
+                        let (n, d, k) = combos[i];
+                        let req = PlanRequest::new(n, d).unwrap().strategy(k);
+                        got.push((i, service.plan(&req).unwrap().to_json().to_string()));
+                    }
+                }
+                got
+            }));
+        }
+        for h in handles {
+            for (i, json) in h.join().unwrap() {
+                assert_eq!(
+                    json, reference[&i],
+                    "concurrently served plan diverged from the one-shot Planner (combo {i})"
+                );
+            }
+        }
+    });
+
+    // every lookup is accounted for, and the working set stayed resident
+    let stats = service.stats();
+    assert_eq!(
+        stats.plan_hits + stats.plan_misses,
+        (threads * rounds * combos.len()) as u64
+    );
+    assert_eq!(stats.table_builds, 2, "one cost-table build per distinct (network, cluster)");
+}
+
+#[test]
+fn single_flight_builds_tables_exactly_once() {
+    let service = Arc::new(PlanService::new());
+    let threads = 8;
+    let barrier = Arc::new(Barrier::new(threads));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let service = Arc::clone(&service);
+            let barrier = Arc::clone(&barrier);
+            scope.spawn(move || {
+                let req = PlanRequest::new(Network::LeNet5, 2)
+                    .unwrap()
+                    .strategy(StrategyKind::Layerwise);
+                barrier.wait(); // all threads miss at the same instant
+                service.evaluate(&req).unwrap();
+            });
+        }
+    });
+    let stats = service.stats();
+    assert_eq!(
+        stats.table_builds, 1,
+        "duplicate concurrent misses must block on one build, not rebuild"
+    );
+    assert_eq!(stats.searches, 1, "the search ran once for all {threads} threads");
+    assert_eq!(stats.plan_hits + stats.plan_misses, threads as u64);
+    assert_eq!(stats.plan_misses, 1, "one plan key: first lookup builds, the rest hit");
+}
+
+#[test]
+fn shard_counters_sum_coherently() {
+    let service = Arc::new(PlanService::new());
+    let combos = [
+        (Network::LeNet5, 2, StrategyKind::Data),
+        (Network::LeNet5, 2, StrategyKind::Model),
+        (Network::LeNet5, 2, StrategyKind::Owt),
+        (Network::AlexNet, 4, StrategyKind::Data),
+        (Network::AlexNet, 4, StrategyKind::Model),
+        (Network::AlexNet, 4, StrategyKind::Owt),
+    ];
+    let threads = 6;
+    let rounds = 4;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let service = Arc::clone(&service);
+            let combos = &combos;
+            scope.spawn(move || {
+                for _ in 0..rounds {
+                    for &(n, d, k) in combos.iter() {
+                        let req = PlanRequest::new(n, d).unwrap().strategy(k);
+                        service.plan(&req).unwrap();
+                    }
+                }
+            });
+        }
+    });
+    let total = (threads * rounds * combos.len()) as u64;
+    let stats = service.stats();
+    assert_eq!(stats.plan_hits + stats.plan_misses, total, "every lookup is a hit or a miss");
+    assert_eq!(
+        stats.plan_misses,
+        combos.len() as u64,
+        "each distinct plan built exactly once (shard mutex spans the build)"
+    );
+    assert_eq!(stats.plans_cached, combos.len());
+    assert_eq!(stats.table_builds, 0, "baseline-only traffic builds no cost tables");
+}
+
+#[test]
+fn serve_answers_over_a_real_socket() {
+    let service = Arc::new(PlanService::new());
+    let handle = serve::spawn("127.0.0.1:0", Arc::clone(&service)).unwrap();
+    let addr = handle.local_addr();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut ask = |line: &str| -> Json {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(reply.trim_end()).unwrap()
+    };
+
+    // plan round-trip: byte-identical to the one-shot Planner plan
+    let v = ask(r#"{"net": "lenet5", "devices": 2, "strategy": "data", "want": "plan"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        v.get("plan").unwrap().to_string(),
+        reference_plan_json(Network::LeNet5, 2, StrategyKind::Data),
+        "served plan must be byte-identical to the one-shot plan"
+    );
+
+    // evaluate round-trip on the same connection
+    let v = ask(r#"{"net": "lenet5", "devices": 2, "strategy": "owt", "want": "evaluate"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    let eval = v.get("evaluation").unwrap();
+    assert!(eval.get("throughput_img_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(eval.get("sim_step_s").unwrap().as_f64().unwrap() > 0.0);
+
+    // a malformed request answers an error instead of dropping the line
+    let v = ask(r#"{"net": "not-a-net", "devices": 2}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("not-a-net"));
+
+    // ... and the connection still works afterwards
+    let v = ask(r#"{"net": "lenet5", "devices": 2, "strategy": "data", "want": "plan"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+
+    // the shared service actually served the traffic
+    let stats = service.stats();
+    assert!(stats.plan_hits + stats.plan_misses >= 3);
+
+    handle.shutdown();
+}
