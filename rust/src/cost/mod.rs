@@ -83,10 +83,13 @@ impl<'a> CostModel<'a> {
         self
     }
 
-    /// Device id running tile `t` under the placement policy.
+    /// Device id running tile `t` under the placement policy. The
+    /// `(nodes, gpus_per_node)` geometry comes from the device graph's
+    /// validated [`DeviceGraph::placement_shape`] — the same helper every
+    /// placement consumer routes through, so `dev_of` can never disagree
+    /// with `ExecutionPlan.tile_dev` (which is derived from it).
     pub fn dev_of(&self, t: usize) -> usize {
-        let nodes = self.devices.num_nodes();
-        let gpn = self.devices.num_devices() / nodes.max(1);
+        let (nodes, gpn) = self.devices.placement_shape();
         self.placement.device_of(t, nodes, gpn)
     }
 

@@ -5,25 +5,37 @@
 //! (layer, configuration) and (edge, configuration-pair) and hands the
 //! optimizer flat arrays; the search itself then never touches tensors or
 //! regions — only table lookups.
+//!
+//! [`CostTables::build_budgeted`] additionally masks memory-infeasible
+//! configurations out of the enumeration before anything is priced, so a
+//! [`MemBudget`]-constrained search is exact over the reduced space
+//! (DESIGN.md §3).
 
 use super::{CostModel, LINK_LATENCY};
+use crate::error::{OptError, Result};
 use crate::graph::{LayerId, OpKind};
+use crate::memory::{self, MemBudget};
 use crate::parallel::{enumerate_configs, input_region, output_tiles, PConfig, Strategy};
 use crate::plan::overlap::{flatten, overlap_elems, FlatRegion};
 use crate::tensor::Region;
 
 /// Structural identity of an edge's cost table: edges whose producer
-/// operator/shape, consumer operator/shapes, and input slot coincide have
-/// identical `t_X` matrices. The producer's *operator* matters, not just
-/// its output shape, because `enumerate_configs` restricts the config
-/// space per op (`allowed_dims`): an `Input` and a shape-preserving
-/// `Conv2d` with equal outputs have different config lists, so their
-/// edge tables have different dimensions and contents. Borrowed fields —
+/// operator/shapes, consumer operator/shapes, and input slot coincide
+/// have identical `t_X` matrices. The producer's *operator* matters, not
+/// just its output shape, because `enumerate_configs` restricts the
+/// config space per op (`allowed_dims`): an `Input` and a
+/// shape-preserving `Conv2d` with equal outputs have different config
+/// lists, so their edge tables have different dimensions and contents.
+/// The producer's *input shapes* matter too: under a memory budget the
+/// feasibility mask depends on the producer's parameter bytes (derived
+/// from its input channels), so two same-op same-output producers with
+/// different inputs can keep different config lists. Borrowed fields —
 /// hashing allocates nothing (replaces the former `format!`-string
 /// signature on the table-build hot path).
 #[derive(Hash, PartialEq, Eq)]
 struct EdgeSig<'a> {
     src_op: &'a OpKind,
+    src_in: &'a [Vec<usize>],
     src_out: &'a [usize],
     dst_op: &'a OpKind,
     dst_out: &'a [usize],
@@ -60,21 +72,74 @@ pub struct CostTables {
 
 impl CostTables {
     /// Evaluate the cost model exhaustively over the configuration space
-    /// for `ndev` available devices.
+    /// for `ndev` available devices (no memory constraint).
     pub fn build(cm: &CostModel, ndev: usize) -> CostTables {
+        CostTables::build_budgeted(cm, ndev, None)
+            .expect("an unbudgeted table build cannot be infeasible")
+    }
+
+    /// [`CostTables::build`] with an optional per-device memory budget:
+    /// configurations whose [`memory::layer_peak_bytes`] exceed the
+    /// budget are **dropped from the enumeration** before any cost is
+    /// evaluated — not merely priced at infinity — so the table
+    /// dimensions shrink, both search backends stay exact over the
+    /// reduced space, and Algorithm 1's elimination-to-K=2 reduction is
+    /// untouched. A layer with *no* feasible configuration surfaces as
+    /// [`OptError::Infeasible`], naming the layer and its smallest
+    /// overshoot. `budget = None` (or an infinite budget) reproduces the
+    /// unconstrained tables exactly (pinned by `tests/memory.rs`).
+    pub fn build_budgeted(
+        cm: &CostModel,
+        ndev: usize,
+        budget: Option<MemBudget>,
+    ) -> Result<CostTables> {
         let g = cm.graph;
-        let configs: Vec<Vec<PConfig>> =
-            g.layers.iter().map(|l| enumerate_configs(l, ndev)).collect();
+        // Per layer: the kept configurations plus each one's index in the
+        // *unmasked* enumeration — `measured_tc` is recorded against that
+        // order, so masked tables must translate before the lookup.
+        let mut configs: Vec<Vec<PConfig>> = Vec::with_capacity(g.layers.len());
+        let mut orig_idx: Vec<Vec<usize>> = Vec::with_capacity(g.layers.len());
+        for l in &g.layers {
+            let all = enumerate_configs(l, ndev);
+            match budget {
+                None => {
+                    orig_idx.push((0..all.len()).collect());
+                    configs.push(all);
+                }
+                Some(b) => {
+                    let mut kept = Vec::with_capacity(all.len());
+                    let mut idx = Vec::with_capacity(all.len());
+                    for (i, c) in all.iter().enumerate() {
+                        if b.admits(memory::layer_peak_bytes(l, c)) {
+                            kept.push(*c);
+                            idx.push(i);
+                        }
+                    }
+                    if kept.is_empty() {
+                        let overshoot = all
+                            .iter()
+                            .map(|c| memory::layer_peak_bytes(l, c) - b.bytes_per_dev)
+                            .fold(f64::INFINITY, f64::min);
+                        return Err(OptError::Infeasible {
+                            layer: l.name.clone(),
+                            overshoot: overshoot.ceil().max(1.0) as u64,
+                        });
+                    }
+                    configs.push(kept);
+                    orig_idx.push(idx);
+                }
+            }
+        }
         let node_cost: Vec<Vec<f64>> = g
             .layers
             .iter()
             .map(|l| {
                 configs[l.id]
                     .iter()
-                    .enumerate()
-                    .map(|(idx, c)| {
+                    .zip(orig_idx[l.id].iter())
+                    .map(|(c, &oi)| {
                         let tc = match &cm.measured_tc {
-                            Some(m) => m[l.id][idx],
+                            Some(m) => m[l.id][oi],
                             None => cm.t_c(l, c),
                         };
                         tc + cm.t_s(l, c)
@@ -167,6 +232,7 @@ impl CostTables {
                 let (ls, ld) = (g.layer(s), g.layer(d));
                 let sig = EdgeSig {
                     src_op: &ls.op,
+                    src_in: &ls.in_shapes,
                     src_out: &ls.out_shape,
                     dst_op: &ld.op,
                     dst_out: &ld.out_shape,
@@ -193,7 +259,7 @@ impl CostTables {
             .zip(edge_unique.iter())
             .map(|(&(s, d), &u)| EdgeTable { src: s, dst: d, cost: unique_tables[u].cost.clone() })
             .collect();
-        CostTables { configs, node_cost, edges }
+        Ok(CostTables { configs, node_cost, edges })
     }
 
     pub fn num_configs(&self, layer: LayerId) -> usize {
@@ -310,6 +376,72 @@ mod tests {
         let direct = cm.t_o(&s);
         let tabled = t.strategy_cost(&idx);
         assert!((direct - tabled).abs() < 1e-12, "direct {direct} vs tabled {tabled}");
+    }
+
+    #[test]
+    fn budget_masks_configs_and_both_backends_honor_it() {
+        use crate::memory::{layer_peak_bytes, MemBudget};
+        use crate::optimizer::{self, dfs};
+        let g = nets::lenet5(64);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let free = CostTables::build(&cm, 2);
+        // a budget at 1.5x the largest per-layer minimum keeps every layer
+        // feasible while masking the fattest configurations of the big ones
+        let min_peaks: Vec<f64> = g
+            .layers
+            .iter()
+            .map(|l| {
+                free.configs[l.id]
+                    .iter()
+                    .map(|c| layer_peak_bytes(l, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let budget = 1.5 * min_peaks.iter().fold(0.0f64, |a, &b| a.max(b));
+        let t = CostTables::build_budgeted(&cm, 2, Some(MemBudget { bytes_per_dev: budget }))
+            .unwrap();
+        let mut masked = 0usize;
+        for l in &g.layers {
+            assert!(t.num_configs(l.id) >= 1);
+            assert!(t.num_configs(l.id) <= free.num_configs(l.id));
+            masked += free.num_configs(l.id) - t.num_configs(l.id);
+            for c in &t.configs[l.id] {
+                assert!(layer_peak_bytes(l, c) <= budget, "kept config over budget");
+            }
+        }
+        assert!(masked > 0, "budget {budget} masked nothing");
+        // table dims shrank with the configs — infinite node cost is NOT
+        // how infeasibility is encoded
+        for (e, &(s, dd)) in t.edges.iter().zip(g.edges.iter()) {
+            assert_eq!(e.cost.len(), t.num_configs(s) * t.num_configs(dd));
+        }
+        // both backends search the same reduced space and agree
+        let dp = optimizer::optimize(&t);
+        let brute = dfs::dfs_optimal(&t, None);
+        assert!(brute.complete);
+        assert!((dp.cost - brute.cost).abs() <= 1e-9 * brute.cost);
+        for (l, cfg) in dp.strategy.configs.iter().enumerate() {
+            assert!(t.configs[l].contains(cfg), "optimum uses a masked config");
+            assert!(layer_peak_bytes(&g.layers[l], cfg) <= budget);
+        }
+    }
+
+    #[test]
+    fn fully_infeasible_layer_is_a_typed_error() {
+        use crate::memory::MemBudget;
+        let g = nets::lenet5(64);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let err = CostTables::build_budgeted(&cm, 2, Some(MemBudget::new(1)))
+            .expect_err("a 1-byte budget cannot be satisfiable");
+        match err {
+            crate::error::OptError::Infeasible { layer, overshoot } => {
+                assert!(!layer.is_empty());
+                assert!(overshoot > 0);
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
     }
 
     #[test]

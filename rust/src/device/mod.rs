@@ -40,13 +40,17 @@ pub mod p100 {
     }
 }
 
-/// Per-device compute capability (the `t_C` substrate).
+/// Per-device compute capability (the `t_C` substrate) plus the HBM
+/// capacity the memory model budgets against.
 #[derive(Debug, Clone, Copy)]
 pub struct ComputeModel {
     /// Peak f32 FLOP/s.
     pub peak_flops: f64,
     /// HBM bandwidth, bytes/s (roofline for memory-bound layers).
     pub mem_bw: f64,
+    /// HBM capacity, bytes (the default per-device budget for
+    /// memory-aware planning; see `memory::MemBudget`).
+    pub hbm_bytes: f64,
     /// Fixed per-layer-invocation overhead, seconds (kernel launch etc).
     pub overhead: f64,
     /// Sustained fraction of peak for dense conv kernels.
@@ -56,24 +60,26 @@ pub struct ComputeModel {
 }
 
 impl ComputeModel {
-    /// NVIDIA Tesla P100 (SXM2): 10.6 TFLOP/s fp32, 732 GB/s HBM2.
+    /// NVIDIA Tesla P100 (SXM2): 10.6 TFLOP/s fp32, 732 GB/s HBM2, 16 GB.
     /// Efficiency factors are the commonly reported cuDNN/cuBLAS sustained
     /// fractions for ImageNet-scale layers.
     pub fn p100() -> ComputeModel {
         ComputeModel {
             peak_flops: 10.6e12,
             mem_bw: 732e9,
+            hbm_bytes: 16e9,
             overhead: 10e-6,
             conv_eff: 0.55,
             gemm_eff: 0.70,
         }
     }
 
-    /// NVIDIA Tesla V100 (SXM2): 15.7 TFLOP/s fp32, 900 GB/s HBM2.
+    /// NVIDIA Tesla V100 (SXM2, 32 GB): 15.7 TFLOP/s fp32, 900 GB/s HBM2.
     pub fn v100() -> ComputeModel {
         ComputeModel {
             peak_flops: 15.7e12,
             mem_bw: 900e9,
+            hbm_bytes: 32e9,
             overhead: 10e-6,
             conv_eff: 0.55,
             gemm_eff: 0.70,
@@ -85,6 +91,7 @@ impl ComputeModel {
         ComputeModel {
             peak_flops: 19.5e12,
             mem_bw: 1555e9,
+            hbm_bytes: 40e9,
             overhead: 8e-6,
             conv_eff: 0.55,
             gemm_eff: 0.70,
@@ -109,6 +116,7 @@ impl ComputeModel {
         for (what, v) in [
             ("peak_flops", self.peak_flops),
             ("mem_bw", self.mem_bw),
+            ("hbm_bytes", self.hbm_bytes),
             ("conv_eff", self.conv_eff),
             ("gemm_eff", self.gemm_eff),
         ] {
@@ -235,6 +243,31 @@ impl DeviceGraph {
         self.devices.last().map(|d| d.node + 1).unwrap_or(0)
     }
 
+    /// The `(nodes, gpus_per_node)` placement geometry that
+    /// `Placement::device_of` consumes — the single source of truth
+    /// shared by `CostModel::dev_of` and `ExecutionPlan` tile placement.
+    /// Every constructor builds node-uniform clusters; the check turns a
+    /// future non-uniform layout into a loud error instead of silently
+    /// misplacing tiles through truncating division. `dev_of` sits on
+    /// the table-build hot path, so only the O(1) count check runs in
+    /// release; the per-device layout scan is a debug assertion.
+    pub fn placement_shape(&self) -> (usize, usize) {
+        let nodes = self.num_nodes().max(1);
+        let n = self.num_devices();
+        let gpn = n / nodes;
+        assert!(
+            gpn * nodes == n,
+            "cluster `{}` is not node-uniform: {n} devices across {nodes} nodes",
+            self.name
+        );
+        debug_assert!(
+            self.devices.iter().all(|d| d.node == d.id / gpn.max(1)),
+            "cluster `{}` numbers its nodes non-contiguously",
+            self.name
+        );
+        (nodes, gpn)
+    }
+
     /// Point-to-point bandwidth (bytes/s); infinite for i == j.
     pub fn bandwidth(&self, i: usize, j: usize) -> f64 {
         self.bw[i * self.num_devices() + j]
@@ -314,5 +347,24 @@ mod tests {
         assert!(ComputeModel::named("a100").is_ok());
         assert!(ComputeModel::named("tpu9000").is_err());
         assert!(ComputeModel::v100().peak_flops > ComputeModel::p100().peak_flops);
+    }
+
+    #[test]
+    fn presets_carry_their_hbm_capacity() {
+        assert_eq!(ComputeModel::p100().hbm_bytes, 16e9);
+        assert_eq!(ComputeModel::v100().hbm_bytes, 32e9);
+        assert_eq!(ComputeModel::a100().hbm_bytes, 40e9);
+        let mut broken = ComputeModel::p100();
+        broken.hbm_bytes = 0.0;
+        assert!(broken.validate().is_err(), "zero-capacity devices are invalid");
+    }
+
+    #[test]
+    fn placement_shape_matches_construction() {
+        for (nodes, gpn) in [(1usize, 1usize), (1, 4), (2, 3), (4, 4)] {
+            let d = DeviceGraph::cluster("s", nodes, gpn, 1e9, 1e9, 1e9, ComputeModel::p100())
+                .unwrap();
+            assert_eq!(d.placement_shape(), (nodes, gpn));
+        }
     }
 }

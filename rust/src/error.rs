@@ -33,6 +33,16 @@ pub enum OptError {
     /// The search backend could not produce a complete strategy (e.g. the
     /// exhaustive DFS hit its budget before reaching any leaf).
     SearchFailed(String),
+    /// Memory-infeasible request: some layer has *no* configuration whose
+    /// per-device peak fits the memory budget, so no strategy can exist
+    /// (see `memory::layer_peak_bytes` and DESIGN.md §3).
+    Infeasible {
+        /// Name of the layer that cannot fit.
+        layer: String,
+        /// Bytes by which the layer's smallest-footprint configuration
+        /// still exceeds the per-device budget.
+        overshoot: u64,
+    },
 }
 
 impl OptError {
@@ -66,6 +76,11 @@ impl fmt::Display for OptError {
             OptError::Config(msg) => write!(f, "config error: {msg}"),
             OptError::Io(msg) => write!(f, "{msg}"),
             OptError::SearchFailed(msg) => write!(f, "search failed: {msg}"),
+            OptError::Infeasible { layer, overshoot } => write!(
+                f,
+                "infeasible: layer `{layer}` needs {overshoot} more bytes than the \
+                 per-device memory budget even at its most-partitioned configuration"
+            ),
         }
     }
 }
@@ -90,6 +105,7 @@ mod tests {
             OptError::Config("line 3: expected key = value".into()),
             OptError::Io("plan.json: permission denied".into()),
             OptError::SearchFailed("budget exhausted".into()),
+            OptError::Infeasible { layer: "fc6".into(), overshoot: 123_456 },
         ];
         for e in errs {
             let msg = e.to_string();
@@ -103,5 +119,7 @@ mod tests {
         assert_eq!(OptError::UnknownNetwork("x".into()).exit_code(), 2);
         assert_eq!(OptError::InvalidArgument("x".into()).exit_code(), 2);
         assert_eq!(OptError::Io("x".into()).exit_code(), 1);
+        // an unsatisfiable memory budget is a usage error: exit 2
+        assert_eq!(OptError::Infeasible { layer: "fc6".into(), overshoot: 1 }.exit_code(), 2);
     }
 }

@@ -9,7 +9,9 @@
 //! 1. build a computation graph ([`graph`]) and a device graph
 //!    ([`device`]);
 //! 2. enumerate per-layer parallelization configurations ([`parallel`]);
-//! 3. evaluate candidate strategies with the cost model ([`cost`]);
+//! 3. evaluate candidate strategies with the cost model ([`cost`]) and
+//!    mask memory-infeasible configurations with the per-device memory
+//!    model ([`memory`]);
 //! 4. find a globally optimal strategy with the elimination-based dynamic
 //!    program ([`optimizer`]), or use the data/model/OWT baselines;
 //! 5. materialize the chosen strategy into an [`plan::ExecutionPlan`] —
@@ -20,7 +22,7 @@
 //!
 //! The public entry point for all of this is the [`planner`] module — a
 //! typed, fallible [`planner::Planner`] session that owns steps 1-6 and
-//! amortizes the expensive ones across queries (DESIGN.md §3):
+//! amortizes the expensive ones across queries (DESIGN.md §4):
 //!
 //! ```
 //! use optcnn::planner::{Network, Planner, StrategyKind};
@@ -43,6 +45,7 @@ pub mod device;
 pub mod error;
 pub mod exec;
 pub mod graph;
+pub mod memory;
 pub mod metrics;
 pub mod optimizer;
 pub mod parallel;

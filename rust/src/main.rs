@@ -34,12 +34,13 @@ optcnn — layer-wise parallelism for CNN training (ICML'18 reproduction)
 
 USAGE:
   optcnn optimize --network <net> --devices <n> [--backend elimination|dfs]
-                  [--budget-ms <ms>] [--cluster <file.toml>]
+                  [--budget-ms <ms>] [--cluster <file.toml>] [--mem-limit <b>]
   optcnn simulate --network <net> --devices <n> --strategy <s>
-                  [--cluster <file.toml>] [--trace out.json]
+                  [--cluster <file.toml>] [--trace out.json] [--mem-limit <b>]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
-                  [--cluster <file.toml>] [--out plan.json]
+                  [--cluster <file.toml>] [--out plan.json] [--mem-limit <b>]
   optcnn sweep    [--networks a,b] [--devices 1,2,4,8,16] [--threads N]
+                  [--mem-limit <b>]
   optcnn serve    [--addr 127.0.0.1:7878] [--shards 8] [--cache-cap 8]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
@@ -50,7 +51,40 @@ USAGE:
 NETWORKS:   lenet5 alexnet vgg16 inception_v3 resnet18 resnet50 minicnn
 STRATEGIES: data model owt layerwise
 CLUSTERS:   P100 preset via --devices, arbitrary via --cluster (see config/)
+MEM LIMIT:  per-device budget for the layer-wise search: bytes, a KB/MB/GB
+            suffix (16GB), or `device` for the cluster's own HBM capacity
 ";
+
+/// Parse a `--mem-limit` value: a whole number of bytes or a number with
+/// a decimal KB/MB/GB/TB suffix (case-insensitive), e.g. `16GB` = 16e9.
+/// The `device` keyword is handled by the caller (it needs the cluster).
+fn parse_mem_bytes(s: &str) -> Result<u64> {
+    let err = || {
+        OptError::InvalidArgument(format!(
+            "--mem-limit must be bytes, a KB/MB/GB/TB value like 16GB, or `device`; got `{s}`"
+        ))
+    };
+    let lower = s.trim().to_ascii_lowercase();
+    let (num, scale) = match lower.strip_suffix("kb") {
+        Some(n) => (n, 1e3),
+        None => match lower.strip_suffix("mb") {
+            Some(n) => (n, 1e6),
+            None => match lower.strip_suffix("gb") {
+                Some(n) => (n, 1e9),
+                None => match lower.strip_suffix("tb") {
+                    Some(n) => (n, 1e12),
+                    None => (lower.as_str(), 1.0),
+                },
+            },
+        },
+    };
+    let x: f64 = num.trim().parse().map_err(|_| err())?;
+    let bytes = x * scale;
+    if !(bytes.is_finite() && bytes >= 1.0 && bytes <= (1u64 << 53) as f64) {
+        return Err(err());
+    }
+    Ok(bytes as u64)
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1), &["verbose", "csv"]);
@@ -99,6 +133,11 @@ fn planner_from_args(args: &Args) -> Result<Planner> {
         None => builder = builder.devices(args.usize_or("devices", 4)?),
     }
     builder = builder.per_gpu_batch(args.usize_or("batch", optcnn::planner::PER_GPU_BATCH)?);
+    match args.get("mem-limit") {
+        None => {}
+        Some("device") => builder = builder.mem_limit_device(),
+        Some(v) => builder = builder.mem_limit(parse_mem_bytes(v)?),
+    }
     let backend_name = args.get_or("backend", "elimination");
     let budget = match args.usize_or("budget-ms", 0)? {
         0 => None,
@@ -182,6 +221,15 @@ fn cmd_simulate(args: &Args) -> Result<i32> {
         fmt_bytes(eval.comm.xfer_bytes),
         fmt_bytes(eval.comm.sync_bytes)
     );
+    let peak = eval.peak_mem();
+    match p.mem_limit() {
+        Some(b) => println!(
+            "  peak memory:     {} / {} budget per device",
+            fmt_bytes(peak),
+            fmt_bytes(b as f64)
+        ),
+        None => println!("  peak memory:     {} per device (no budget)", fmt_bytes(peak)),
+    }
     Ok(0)
 }
 
@@ -230,6 +278,17 @@ fn cmd_plan(args: &Args) -> Result<i32> {
         fmt_bytes(plan.xfer_bytes()),
         fmt_bytes(plan.sync_bytes())
     );
+    match p.mem_limit() {
+        Some(b) => println!(
+            "memory: {} per-device high water, {} budget",
+            fmt_bytes(plan.peak_mem()),
+            fmt_bytes(b as f64)
+        ),
+        None => println!(
+            "memory: {} per-device high water (no budget)",
+            fmt_bytes(plan.peak_mem())
+        ),
+    }
     let stats = p.session_stats();
     println!(
         "plan build {} cold, {} from cache ({} hit / {} miss)",
@@ -263,6 +322,12 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
     let default_threads =
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let threads = args.usize_or("threads", default_threads)?.max(1);
+    // sweeps run on the P100 preset, so `device` means the P100's 16 GB
+    let mem_limit: Option<u64> = match args.get("mem-limit") {
+        None => None,
+        Some("device") => Some(optcnn::device::ComputeModel::p100().hbm_bytes as u64),
+        Some(v) => Some(parse_mem_bytes(v)?),
+    };
 
     let mut grid: Vec<(Network, usize, StrategyKind)> = Vec::new();
     for &net in &networks {
@@ -288,7 +353,10 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 let Some(&(net, ndev, kind)) = grid.get(i) else { break };
                 let r = PlanRequest::new(net, ndev)
-                    .map(|req| req.strategy(kind))
+                    .map(|req| match mem_limit {
+                        Some(b) => req.strategy(kind).mem_limit(b),
+                        None => req.strategy(kind),
+                    })
                     .and_then(|req| service.evaluate(&req))
                     .map(|eval| eval.throughput);
                 if r.is_err() {
@@ -309,8 +377,12 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
 
     let mut i = 0;
     for &net in &networks {
+        let budget = match mem_limit {
+            Some(b) => format!(", {} budget", fmt_bytes(b as f64)),
+            None => String::new(),
+        };
         let mut table = Table::new(
-            &format!("{net}: simulated throughput (images/s)"),
+            &format!("{net}: simulated throughput (images/s){budget}"),
             &["GPUs", "data", "model", "owt", "layerwise"],
         );
         for &ndev in &devices {
@@ -351,6 +423,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     );
     println!("protocol: one JSON request per line, e.g.");
     println!(r#"  {{"net":"alexnet","devices":4,"strategy":"layerwise","want":"evaluate"}}"#);
+    println!(r#"  optional "mem_limit": <bytes/device> bounds the layer-wise search"#);
     handle.join();
     Ok(0)
 }

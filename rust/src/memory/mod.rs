@@ -1,0 +1,200 @@
+//! Per-device memory model: the feasibility half of the planning problem.
+//!
+//! The paper's search minimizes time alone and silently assumes every
+//! configuration fits in device memory — but the configurations it
+//! prefers (low-degree FC splits, replicated conv stacks) are exactly
+//! the ones that blow past a real GPU's HBM at production batch sizes.
+//! Related work (PaSE; Dryden et al.) treats per-device memory as a
+//! first-class constraint on the strategy space; this module supplies
+//! the model (DESIGN.md §3):
+//!
+//! * [`tile_bytes`] — resident bytes one tile of a (layer, config) pins
+//!   on its device: the parameter shard + its gradient buffer, plus the
+//!   stashed activations (the input regions the tile consumes — which is
+//!   where channel-partitioned FC layers pay for their all-gather — and
+//!   the output tile), counted twice for the forward stash and the
+//!   backward activation gradients.
+//! * [`layer_peak_bytes`] — the worst tile of a configuration (what the
+//!   feasibility mask in [`CostTables::build_budgeted`] compares against
+//!   a [`MemBudget`]).
+//! * [`peak_per_device`] — the high-water aggregation over a whole
+//!   strategy: every layer's tiles mapped to devices through the same
+//!   placement the cost model and [`ExecutionPlan`] use (so the totals
+//!   agree with `ExecutionPlan.tile_dev` by construction), summed per
+//!   device. Training keeps every layer's weights and stashed
+//!   activations resident simultaneously (the backward pass revisits
+//!   all of them), so the per-device high water is the sum, not a max.
+//!
+//! **Sync staging.** The sharded-PS exchange is modeled *in place* over
+//! the gradient buffer: each replica's send slices are gradient shards
+//! it already holds, and the reduced slices overwrite them (what
+//! bucketed allreduce implementations achieve with O(bucket) scratch).
+//! Synchronization therefore stages through the gradient term rather
+//! than adding resident bytes of its own — which also keeps the model
+//! monotone: raising any partition degree never increases a layer's
+//! per-device peak (weights/gradients shrink with the channel degree
+//! and are constant in the others; activation tiles and their input
+//! regions shrink in every degree). `tests/memory.rs` pins that
+//! property.
+//!
+//! [`CostTables::build_budgeted`]: crate::cost::CostTables::build_budgeted
+//! [`ExecutionPlan`]: crate::plan::ExecutionPlan
+
+#![warn(missing_docs)]
+
+use crate::cost::CostModel;
+use crate::graph::Layer;
+use crate::parallel::{input_region, output_tiles, param_sharding, PConfig, Strategy};
+use crate::tensor::Region;
+
+/// Bytes per f32 element.
+const ELEM_BYTES: f64 = 4.0;
+
+/// Activations are resident twice: the forward stash (kept for the
+/// backward pass) and the backward activation-gradient buffers.
+const ACT_RESIDENCY: f64 = 2.0;
+
+/// A per-device memory budget (bytes of HBM available to one device).
+///
+/// Passed to [`CostTables::build_budgeted`] to mask configurations whose
+/// [`layer_peak_bytes`] exceed it before the search runs. An infinite
+/// budget masks nothing and reproduces the unconstrained tables exactly.
+///
+/// [`CostTables::build_budgeted`]: crate::cost::CostTables::build_budgeted
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemBudget {
+    /// Usable bytes per device.
+    pub bytes_per_dev: f64,
+}
+
+impl MemBudget {
+    /// A budget of `bytes` per device.
+    pub fn new(bytes: u64) -> MemBudget {
+        MemBudget { bytes_per_dev: bytes as f64 }
+    }
+
+    /// The no-op budget: admits every configuration.
+    pub fn unlimited() -> MemBudget {
+        MemBudget { bytes_per_dev: f64::INFINITY }
+    }
+
+    /// Does a peak of `bytes` fit this budget?
+    pub fn admits(&self, bytes: f64) -> bool {
+        bytes <= self.bytes_per_dev
+    }
+}
+
+/// Resident bytes one output tile of `layer` under `cfg` pins on its
+/// device: parameter shard + gradient buffer (which doubles as the sync
+/// staging, see the [module docs](self)) + stashed activations (input
+/// regions and the output tile, × [`ACT_RESIDENCY`]).
+pub fn tile_bytes(layer: &Layer, cfg: &PConfig, tile: &Region) -> f64 {
+    let params = if layer.has_params() {
+        // one shard copy + its gradient buffer per replica device
+        2.0 * param_sharding(layer, cfg).shard_bytes
+    } else {
+        0.0
+    };
+    let mut act_elems = tile.volume();
+    for in_idx in 0..layer.in_shapes.len() {
+        if let Some(r) = input_region(layer, in_idx, tile) {
+            act_elems += r.volume();
+        }
+    }
+    params + ACT_RESIDENCY * ELEM_BYTES * act_elems as f64
+}
+
+/// The per-device peak of one (layer, configuration): the most expensive
+/// tile (interior tiles carry the largest halo windows). This is the
+/// quantity the feasibility mask compares against a [`MemBudget`].
+pub fn layer_peak_bytes(layer: &Layer, cfg: &PConfig) -> f64 {
+    output_tiles(&layer.out_shape, cfg)
+        .iter()
+        .map(|t| tile_bytes(layer, cfg, t))
+        .fold(0.0, f64::max)
+}
+
+/// Per-device high-water bytes of a whole strategy: each layer's tiles
+/// are mapped to devices through `cm`'s placement (the same mapping
+/// [`ExecutionPlan::build`] records in `tile_dev`) and their
+/// [`tile_bytes`] summed per device.
+///
+/// [`ExecutionPlan::build`]: crate::plan::ExecutionPlan::build
+pub fn peak_per_device(cm: &CostModel<'_>, strategy: &Strategy) -> Vec<f64> {
+    let mut peak = vec![0.0f64; cm.devices.num_devices()];
+    for l in &cm.graph.layers {
+        let cfg = strategy.config(l.id);
+        for (t, tile) in output_tiles(&l.out_shape, cfg).iter().enumerate() {
+            peak[cm.dev_of(t)] += tile_bytes(l, cfg, tile);
+        }
+    }
+    peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+    use crate::optimizer::strategies;
+
+    #[test]
+    fn channel_split_shards_fc_params() {
+        let g = nets::vgg16(128);
+        let fc = g.layers.iter().find(|l| l.name == "fc6").unwrap();
+        let serial = layer_peak_bytes(fc, &PConfig::serial());
+        let channel = layer_peak_bytes(fc, &PConfig::channel(4));
+        // fc6 is parameter-dominated: sharding 4 ways must shed most of it
+        assert!(channel < serial / 2.0, "channel {channel} vs serial {serial}");
+        // but data parallelism replicates the full parameter block
+        let data = layer_peak_bytes(fc, &PConfig::data(4));
+        assert!(data > channel, "replication must cost more than sharding for fc6");
+    }
+
+    #[test]
+    fn params_never_below_shard_and_acts_positive() {
+        let g = nets::alexnet(64);
+        for l in &g.layers {
+            let p = layer_peak_bytes(l, &PConfig::serial());
+            assert!(p > 0.0, "{} has zero footprint", l.name);
+            if l.has_params() {
+                assert!(p >= 2.0 * l.param_bytes(), "{} omits weights+grads", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn per_device_aggregation_conserves_tile_totals() {
+        let g = nets::alexnet(32 * 4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::data_parallel(&g, 4);
+        let per_dev = peak_per_device(&cm, &s);
+        assert_eq!(per_dev.len(), 4);
+        let total: f64 = per_dev.iter().sum();
+        let expect: f64 = g
+            .layers
+            .iter()
+            .map(|l| {
+                let cfg = s.config(l.id);
+                output_tiles(&l.out_shape, cfg)
+                    .iter()
+                    .map(|t| tile_bytes(l, cfg, t))
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!((total - expect).abs() <= 1e-6 * expect);
+        // data parallelism is symmetric: every device carries the same load
+        for &p in &per_dev {
+            assert!((p - per_dev[0]).abs() <= 1e-6 * per_dev[0]);
+        }
+    }
+
+    #[test]
+    fn budget_admits_boundary() {
+        let b = MemBudget::new(100);
+        assert!(b.admits(100.0));
+        assert!(!b.admits(100.5));
+        assert!(MemBudget::unlimited().admits(f64::MAX));
+    }
+}

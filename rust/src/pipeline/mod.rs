@@ -3,7 +3,7 @@
 //! [`Experiment`] was the crate's original stringly-typed entry point;
 //! it survives as a thin delegating wrapper around the typed
 //! [`crate::planner::Planner`] session API so old call sites keep
-//! working. New code should use [`Planner`] directly — see DESIGN.md §3
+//! working. New code should use [`Planner`] directly — see DESIGN.md §4
 //! for the migration table.
 
 use crate::error::Result;

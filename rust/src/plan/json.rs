@@ -12,7 +12,8 @@ use crate::parallel::PConfig;
 use crate::tensor::Region;
 use crate::util::json::Json;
 
-const VERSION: f64 = 1.0;
+// v2 added `peak_mem_per_dev` (the memory model's per-device high water).
+const VERSION: f64 = 2.0;
 
 impl Route {
     fn tag(&self) -> &'static str {
@@ -54,6 +55,10 @@ impl ExecutionPlan {
             ("ndev", Json::Num(self.ndev as f64)),
             ("layers", Json::Arr(self.layers.iter().map(layer_json).collect())),
             ("edges", Json::Arr(self.edges.iter().map(edge_json).collect())),
+            (
+                "peak_mem_per_dev",
+                Json::Arr(self.peak_mem_per_dev.iter().map(|&b| Json::Num(b)).collect()),
+            ),
         ])
     }
 
@@ -71,6 +76,14 @@ impl ExecutionPlan {
             ndev: get_usize(obj, "ndev")?,
             layers: get_arr(obj, "layers")?.iter().map(layer_from).collect::<Result<_, _>>()?,
             edges: get_arr(obj, "edges")?.iter().map(edge_from).collect::<Result<_, _>>()?,
+            peak_mem_per_dev: get_arr(obj, "peak_mem_per_dev")?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|b| b.is_finite() && *b >= 0.0)
+                        .ok_or_else(|| "plan: peak_mem_per_dev must be nonnegative".to_string())
+                })
+                .collect::<Result<_, _>>()?,
         };
         validate(&plan)?;
         Ok(plan)
@@ -145,6 +158,13 @@ fn edge_json(e: &EdgePlan) -> Json {
 /// Structural invariants every deserialized plan must satisfy before the
 /// simulator/executor may index into it.
 fn validate(plan: &ExecutionPlan) -> Result<(), String> {
+    if plan.peak_mem_per_dev.len() != plan.ndev {
+        return Err(format!(
+            "plan: peak_mem_per_dev has {} entries for {} devices",
+            plan.peak_mem_per_dev.len(),
+            plan.ndev
+        ));
+    }
     for (i, l) in plan.layers.iter().enumerate() {
         if l.layer != i {
             return Err(format!("plan: layer {i} carries id {}", l.layer));
@@ -366,6 +386,17 @@ mod tests {
                 ExecutionPlan::from_json(&Json::parse(&bad.to_json().to_string()).unwrap());
             assert!(err.is_err(), "transfer index out of range must be rejected");
         }
+    }
+
+    #[test]
+    fn rejects_mismatched_peak_mem_vector() {
+        let g = nets::lenet5(32);
+        let d = DeviceGraph::p100_cluster(2).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let mut bad = ExecutionPlan::build(&cm, &strategies::data_parallel(&g, 2));
+        bad.peak_mem_per_dev.pop();
+        let err = ExecutionPlan::from_json(&Json::parse(&bad.to_json().to_string()).unwrap());
+        assert!(err.is_err(), "peak vector shorter than ndev must be rejected");
     }
 
     #[test]

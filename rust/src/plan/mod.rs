@@ -22,7 +22,7 @@
 //! [`PlanCache`] keyed on (net, strategy, device count), which makes them
 //! servable artifacts rather than transient in-memory derivations — the
 //! property PaSE-style systems rely on to answer many planning queries
-//! fast (DESIGN.md §6).
+//! fast (DESIGN.md §7).
 
 pub mod cache;
 mod json;
@@ -159,6 +159,12 @@ pub struct ExecutionPlan {
     pub layers: Vec<LayerPlan>,
     /// One entry per graph edge, in graph edge order.
     pub edges: Vec<EdgePlan>,
+    /// Per-device high-water memory (bytes) of the whole strategy —
+    /// [`memory::peak_per_device`](crate::memory::peak_per_device) over
+    /// the same tile→device placement recorded in `tile_dev`, so the
+    /// feasibility a caller reads off the plan agrees with where the
+    /// plan actually puts the bytes.
+    pub peak_mem_per_dev: Vec<f64>,
 }
 
 impl ExecutionPlan {
@@ -259,7 +265,24 @@ impl ExecutionPlan {
             })
             .collect();
 
-        ExecutionPlan { net: g.name.clone(), ndev: devices.num_devices(), layers, edges }
+        // Per-device high water summed over the tiles/placement *just
+        // materialized above*, so the recorded vector agrees with
+        // `tile_dev` by construction (`memory::peak_per_device` computes
+        // the same sum from scratch; equality is pinned by tests).
+        let mut peak_mem_per_dev = vec![0.0f64; devices.num_devices()];
+        for (lp, l) in layers.iter().zip(g.layers.iter()) {
+            for (tile, &dev) in lp.tiles.iter().zip(lp.tile_dev.iter()) {
+                peak_mem_per_dev[dev] += crate::memory::tile_bytes(l, &lp.cfg, tile);
+            }
+        }
+
+        ExecutionPlan {
+            net: g.name.clone(),
+            ndev: devices.num_devices(),
+            layers,
+            edges,
+            peak_mem_per_dev,
+        }
     }
 
     pub fn layer(&self, id: LayerId) -> &LayerPlan {
@@ -292,6 +315,12 @@ impl ExecutionPlan {
     /// Per-step communication volume, in the shared metrics shape.
     pub fn comm(&self) -> CommBreakdown {
         CommBreakdown { xfer_bytes: self.xfer_bytes(), sync_bytes: self.sync_bytes() }
+    }
+
+    /// The worst device's high-water memory (bytes) — what a per-device
+    /// budget is compared against.
+    pub fn peak_mem(&self) -> f64 {
+        self.peak_mem_per_dev.iter().fold(0.0, |a, &b| a.max(b))
     }
 }
 
@@ -421,5 +450,48 @@ mod tests {
         assert_eq!(p.xfer_bytes(), 0.0);
         assert_eq!(p.sync_bytes(), 0.0);
         assert_eq!(p.num_transfers(), 0);
+    }
+
+    #[test]
+    fn plan_records_the_memory_models_per_device_peak() {
+        let g = nets::alexnet(32 * 4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::owt(&g, 4);
+        let p = ExecutionPlan::build(&cm, &s);
+        assert_eq!(p.peak_mem_per_dev, crate::memory::peak_per_device(&cm, &s));
+        assert_eq!(p.peak_mem_per_dev.len(), 4);
+        assert!(p.peak_mem() > 0.0);
+        assert!(p.peak_mem_per_dev.iter().all(|&b| b <= p.peak_mem()));
+    }
+
+    #[test]
+    fn dev_of_matches_plan_tile_dev_on_nonsquare_clusters() {
+        // Regression for the truncating-division placement: on a 2x3
+        // cluster the shared `placement_shape` helper must give the cost
+        // model and the materialized plan the same tile->device mapping,
+        // under both placement policies.
+        use crate::device::ComputeModel;
+        use crate::parallel::Placement;
+        let d =
+            DeviceGraph::cluster("2x3", 2, 3, 15e9, 3e9, 12e9, ComputeModel::p100()).unwrap();
+        assert_eq!(d.placement_shape(), (2, 3));
+        let g = nets::alexnet(32 * 6);
+        for placement in [Placement::Contiguous, Placement::RoundRobinNodes] {
+            let cm = CostModel::new(&g, &d).with_placement(placement);
+            let s = strategies::data_parallel(&g, 6);
+            let p = ExecutionPlan::build(&cm, &s);
+            for lp in &p.layers {
+                for (t, &dev) in lp.tile_dev.iter().enumerate() {
+                    assert_eq!(
+                        cm.dev_of(t),
+                        dev,
+                        "{placement:?}: tile {t} of layer {} misplaced",
+                        lp.layer
+                    );
+                    assert!(dev < d.num_devices());
+                }
+            }
+        }
     }
 }

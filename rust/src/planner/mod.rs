@@ -1,6 +1,6 @@
 //! The public planning API: a typed, fallible session facade.
 //!
-//! This is the crate's front door (DESIGN.md §3). A [`Planner`] is a
+//! This is the crate's front door (DESIGN.md §4). A [`Planner`] is a
 //! long-lived session bound to one (network, cluster) pair:
 //!
 //! ```
@@ -31,6 +31,13 @@
 //!   `nodes x gpus_per_node` topology with custom bandwidths and compute
 //!   models; [`PlannerBuilder::devices`] is shorthand for the paper's
 //!   P100 preset.
+//! * **Memory-aware planning.** [`PlannerBuilder::mem_limit`] (or
+//!   [`PlannerBuilder::mem_limit_device`], which reads the cluster's own
+//!   HBM capacity) constrains the search to configurations whose
+//!   per-device peak bytes fit the budget ([`crate::memory`],
+//!   DESIGN.md §3); unsatisfiable budgets surface as
+//!   [`OptError::Infeasible`], and with no budget planning is
+//!   byte-identical to the unconstrained search.
 //! * **Amortized sessions.** Cost tables are built once per session, the
 //!   layer-wise search runs once, and materialized [`ExecutionPlan`]s are
 //!   kept in an LRU [`PlanCache`] — repeated queries against the same
@@ -40,7 +47,7 @@
 //!   every method takes `&mut self`. For many concurrent callers,
 //!   [`service::PlanService`] fronts the same pipeline behind `&self`
 //!   with a sharded plan cache and single-flight state building, and
-//!   [`serve`] speaks it over TCP (`optcnn serve`). DESIGN.md §4.
+//!   [`serve`] speaks it over TCP (`optcnn serve`). DESIGN.md §5.
 
 #![warn(missing_docs)]
 
@@ -62,6 +69,7 @@ use crate::cost::{CostModel, CostTables};
 use crate::device::DeviceGraph;
 use crate::error::{OptError, Result};
 use crate::graph::{nets, CompGraph};
+use crate::memory::MemBudget;
 use crate::metrics::CommBreakdown;
 use crate::optimizer::{strategies, Optimized, SearchStats};
 use crate::parallel::Strategy;
@@ -220,6 +228,17 @@ pub struct Evaluation {
     pub throughput: f64,
     /// Simulated training throughput (images/s) = batch / sim step.
     pub sim_throughput: f64,
+    /// Per-device high-water memory (bytes) recorded on the plan
+    /// (`ExecutionPlan::peak_mem_per_dev`).
+    pub peak_mem_per_dev: Vec<f64>,
+}
+
+impl Evaluation {
+    /// The worst device's high-water memory (bytes) — what a per-device
+    /// budget is compared against (mirrors [`ExecutionPlan::peak_mem`]).
+    pub fn peak_mem(&self) -> f64 {
+        self.peak_mem_per_dev.iter().fold(0.0, |a, &b| a.max(b))
+    }
 }
 
 /// Derive an [`Evaluation`] from a materialized plan — the one kernel
@@ -237,7 +256,8 @@ fn evaluate_plan(
     let comm = plan.comm();
     let throughput = global_batch as f64 / estimate;
     let sim_throughput = sim.throughput(global_batch);
-    Evaluation { estimate, sim, comm, throughput, sim_throughput }
+    let peak_mem_per_dev = plan.peak_mem_per_dev.clone();
+    Evaluation { estimate, sim, comm, throughput, sim_throughput, peak_mem_per_dev }
 }
 
 /// Work counters for one [`Planner`] session: how much expensive state
@@ -255,6 +275,15 @@ pub struct SessionStats {
     pub plan_misses: u64,
 }
 
+/// How the session's per-device memory budget is specified.
+enum MemLimit {
+    /// An explicit byte count.
+    Bytes(u64),
+    /// The cluster's own HBM capacity (`ComputeModel::hbm_bytes`):
+    /// 16 GB for the p100 preset, 32 GB v100, 40 GB a100.
+    DeviceCapacity,
+}
+
 /// Configures and validates a [`Planner`] session.
 ///
 /// Obtained from [`Planner::builder`]; every setter is chainable and
@@ -266,6 +295,7 @@ pub struct PlannerBuilder {
     devices: Option<usize>,
     backend: Box<dyn SearchBackend>,
     plan_cache_cap: usize,
+    mem_limit: Option<MemLimit>,
 }
 
 impl PlannerBuilder {
@@ -309,6 +339,26 @@ impl PlannerBuilder {
         self
     }
 
+    /// Constrain the layer-wise search to a per-device memory budget of
+    /// `bytes`: configurations whose per-device peak
+    /// ([`crate::memory::layer_peak_bytes`]) exceeds it are dropped from
+    /// the cost tables before the search runs, and a layer with no
+    /// feasible configuration surfaces as [`OptError::Infeasible`]. With
+    /// no budget (the default) planning is byte-identical to the
+    /// unconstrained search.
+    pub fn mem_limit(mut self, bytes: u64) -> PlannerBuilder {
+        self.mem_limit = Some(MemLimit::Bytes(bytes));
+        self
+    }
+
+    /// [`PlannerBuilder::mem_limit`] set from the cluster's own HBM
+    /// capacity (`ComputeModel::hbm_bytes`; the presets carry 16 GB for
+    /// p100, 32 GB v100, 40 GB a100).
+    pub fn mem_limit_device(mut self) -> PlannerBuilder {
+        self.mem_limit = Some(MemLimit::DeviceCapacity);
+        self
+    }
+
     /// Validate the configuration and open the session: materializes the
     /// device graph and the network graph at the session's global batch.
     pub fn build(self) -> Result<Planner> {
@@ -333,6 +383,18 @@ impl PlannerBuilder {
             (None, None) => ClusterSpec::p100(4)?,
         };
         let devices = spec.device_graph()?;
+        let mem_limit = match self.mem_limit {
+            None => None,
+            Some(MemLimit::Bytes(b)) => {
+                if b == 0 {
+                    return Err(OptError::InvalidArgument(
+                        "memory limit must be at least 1 byte".into(),
+                    ));
+                }
+                Some(b)
+            }
+            Some(MemLimit::DeviceCapacity) => Some(devices.compute.hbm_bytes as u64),
+        };
         let graph = self.network.graph(self.per_gpu_batch * devices.num_devices());
         Ok(Planner {
             network: self.network,
@@ -340,6 +402,7 @@ impl PlannerBuilder {
             graph,
             devices,
             backend: self.backend,
+            mem_limit,
             tables: None,
             layerwise: None,
             baselines: HashMap::new(),
@@ -359,6 +422,7 @@ pub struct Planner {
     graph: CompGraph,
     devices: DeviceGraph,
     backend: Box<dyn SearchBackend>,
+    mem_limit: Option<u64>,
     tables: Option<CostTables>,
     layerwise: Option<Optimized>,
     baselines: HashMap<StrategyKind, Strategy>,
@@ -377,6 +441,7 @@ impl Planner {
             devices: None,
             backend: Box::new(Elimination),
             plan_cache_cap: 8,
+            mem_limit: None,
         }
     }
 
@@ -415,16 +480,25 @@ impl Planner {
         self.backend.name()
     }
 
+    /// The session's per-device memory budget in bytes, if any.
+    pub fn mem_limit(&self) -> Option<u64> {
+        self.mem_limit
+    }
+
     /// The session's cost tables, built on first use and cached for the
-    /// session's lifetime (the expensive per-session step).
-    pub fn tables(&mut self) -> &CostTables {
+    /// session's lifetime (the expensive per-session step). Under a
+    /// [`PlannerBuilder::mem_limit`] the build masks memory-infeasible
+    /// configurations and can fail with [`OptError::Infeasible`]; with no
+    /// budget it cannot fail.
+    pub fn tables(&mut self) -> Result<&CostTables> {
         if self.tables.is_none() {
             let cm = CostModel::new(&self.graph, &self.devices);
-            let built = CostTables::build(&cm, self.devices.num_devices());
+            let budget = self.mem_limit.map(MemBudget::new);
+            let built = CostTables::build_budgeted(&cm, self.devices.num_devices(), budget)?;
             self.tables = Some(built);
             self.table_builds += 1;
         }
-        self.tables.as_ref().expect("tables just built")
+        Ok(self.tables.as_ref().expect("tables just built"))
     }
 
     /// Run the session's search backend over the cost tables, returning
@@ -434,7 +508,7 @@ impl Planner {
         if let Some(opt) = &self.layerwise {
             return Ok(opt.clone());
         }
-        self.tables();
+        self.tables()?;
         let tables = self.tables.as_ref().expect("tables just built");
         let opt = self.backend.search(tables)?;
         self.searches += 1;
@@ -542,6 +616,33 @@ mod tests {
             .cluster(ClusterSpec::new(1, 2))
             .build()
             .is_err());
+        assert!(Planner::builder(Network::LeNet5).devices(2).mem_limit(0).build().is_err());
+    }
+
+    #[test]
+    fn mem_limit_device_reads_the_cluster_hbm() {
+        use crate::device::ComputeModel;
+        let spec = ClusterSpec::new(1, 2).compute(ComputeModel::v100());
+        let p = Planner::builder(Network::LeNet5)
+            .cluster(spec)
+            .mem_limit_device()
+            .build()
+            .unwrap();
+        assert_eq!(p.mem_limit(), Some(32_000_000_000));
+        let free = Planner::builder(Network::LeNet5).devices(2).build().unwrap();
+        assert_eq!(free.mem_limit(), None);
+    }
+
+    #[test]
+    fn unsatisfiable_mem_limit_is_infeasible_not_a_panic() {
+        let mut p = Planner::builder(Network::LeNet5).devices(2).mem_limit(1).build().unwrap();
+        match p.evaluate(StrategyKind::Layerwise) {
+            Err(OptError::Infeasible { layer, overshoot }) => {
+                assert!(!layer.is_empty());
+                assert!(overshoot > 0);
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
     }
 
     #[test]

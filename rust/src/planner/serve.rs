@@ -2,7 +2,7 @@
 //!
 //! The wire protocol is newline-delimited JSON over plain TCP via
 //! `std::net` — the offline registry carries no HTTP/async stack, and
-//! line framing keeps a client one `nc` invocation away (DESIGN.md §4):
+//! line framing keeps a client one `nc` invocation away (DESIGN.md §5):
 //!
 //! ```text
 //! request:  {"net": "vgg16", "devices": 4, "batch": 32,
@@ -16,7 +16,12 @@
 //! `"cluster": {"nodes": 2, "gpus_per_node": 8, ...}` with the same keys
 //! as the TOML `[cluster]` section. `"want"` defaults to `"plan"`;
 //! `"strategy"` defaults to `"layerwise"`; `"batch"` defaults to the
-//! paper's per-GPU 32.
+//! paper's per-GPU 32. An optional `"mem_limit"` (bytes per device)
+//! constrains the layer-wise search to memory-feasible configurations;
+//! an unsatisfiable budget answers `{"ok": false, "error":
+//! "infeasible: ..."}`. Evaluation replies report the plan's
+//! per-device high-water memory as `"peak_mem_per_dev"` (plan replies
+//! carry the same vector inside the plan JSON itself).
 //!
 //! Every connection gets its own thread; all connections share one
 //! [`PlanService`], so a plan primed by any client is a cache hit for
@@ -115,9 +120,18 @@ pub fn parse_request(line: &str) -> Result<(PlanRequest, Want)> {
             return Err(bad(&format!("`want` must be \"plan\" or \"evaluate\", got {other:?}")));
         }
     };
-    let req = PlanRequest::with_cluster(network, cluster)
+    let mut req = PlanRequest::with_cluster(network, cluster)
         .strategy(strategy)
         .per_gpu_batch(per_gpu_batch);
+    if let Some(m) = v.get("mem_limit") {
+        // bytes fit u64 exactly only up to 2^53 off an f64 wire — more
+        // HBM than any cluster; reject the rest rather than round
+        let bytes = m
+            .as_f64()
+            .filter(|b| b.fract() == 0.0 && *b >= 1.0 && *b <= (1u64 << 53) as f64)
+            .ok_or_else(|| bad("`mem_limit` must be a whole number of bytes (>= 1)"))?;
+        req = req.mem_limit(bytes as u64);
+    }
     Ok((req, want))
 }
 
@@ -215,6 +229,10 @@ fn evaluation_json(eval: &crate::planner::Evaluation) -> Json {
         ("sim_throughput_img_s", Json::Num(eval.sim_throughput)),
         ("xfer_bytes", Json::Num(eval.comm.xfer_bytes)),
         ("sync_bytes", Json::Num(eval.comm.sync_bytes)),
+        (
+            "peak_mem_per_dev",
+            Json::Arr(eval.peak_mem_per_dev.iter().map(|&b| Json::Num(b)).collect()),
+        ),
     ])
 }
 
@@ -390,6 +408,34 @@ mod tests {
     }
 
     #[test]
+    fn mem_limit_rides_the_wire_and_reports_peaks() {
+        let service = PlanService::new();
+        // a roomy budget: the reply must succeed and carry the peak vector
+        let reply = handle_line(
+            &service,
+            r#"{"net": "lenet5", "devices": 2, "want": "evaluate",
+                "mem_limit": 16000000000}"#,
+        );
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        let peaks = match v.get("evaluation").unwrap().get("peak_mem_per_dev").unwrap() {
+            Json::Arr(a) => a.clone(),
+            other => panic!("peak_mem_per_dev must be an array, got {other:?}"),
+        };
+        assert_eq!(peaks.len(), 2);
+        assert!(peaks.iter().all(|p| p.as_f64().unwrap() > 0.0));
+        // an unsatisfiable budget is a one-line infeasibility, not a panic
+        let reply = handle_line(
+            &service,
+            r#"{"net": "lenet5", "devices": 2, "mem_limit": 1}"#,
+        );
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        let msg = v.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.starts_with("infeasible"), "unexpected error: {msg}");
+    }
+
+    #[test]
     fn bad_requests_get_one_line_error_replies() {
         let service = PlanService::new();
         for raw in [
@@ -404,6 +450,9 @@ mod tests {
             r#"{"net": "lenet5", "devices": -4}"#,
             r#"{"net": "lenet5", "devices": 2, "batch": 2.5}"#,
             r#"{"net": "lenet5", "cluster": {"gpus_per_node": 2.5}}"#,
+            r#"{"net": "lenet5", "devices": 2, "mem_limit": 0}"#,
+            r#"{"net": "lenet5", "devices": 2, "mem_limit": 1.5}"#,
+            r#"{"net": "lenet5", "devices": 2, "mem_limit": "lots"}"#,
         ] {
             let reply = handle_line(&service, raw);
             let v = Json::parse(&reply)

@@ -1,5 +1,5 @@
 //! Concurrent plan serving: a thread-safe, shareable front end over the
-//! planning pipeline (DESIGN.md §4).
+//! planning pipeline (DESIGN.md §5).
 //!
 //! A [`Planner`](crate::planner::Planner) is a single-caller session —
 //! every method takes `&mut self`. A [`PlanService`] is its concurrent
@@ -15,7 +15,7 @@
 //!   Hit/miss counters are atomics ([`PlanCache::hits`]), summed across
 //!   shards by [`PlanService::stats`].
 //! * **Single-flight state building.** The expensive per-(network,
-//!   batch, cluster) state — [`CostTables`] plus the search backend's
+//!   batch, cluster, memory-budget) state — [`CostTables`] plus the search backend's
 //!   Algorithm 1 optimum — is memoized behind one [`OnceLock`] per key:
 //!   when many threads miss on the same key at once, exactly one runs
 //!   the build and the rest block until it finishes, instead of all
@@ -48,6 +48,7 @@ use crate::cost::{CostModel, CostTables};
 use crate::device::DeviceGraph;
 use crate::error::{OptError, Result};
 use crate::graph::CompGraph;
+use crate::memory::MemBudget;
 use crate::optimizer::{strategies, Optimized};
 use crate::parallel::Strategy;
 use crate::plan::{ExecutionPlan, PlanCache, PlanKey};
@@ -69,6 +70,11 @@ pub struct PlanRequest {
     pub per_gpu_batch: usize,
     /// The strategy to resolve and evaluate.
     pub strategy: StrategyKind,
+    /// Optional per-device memory budget in bytes: the layer-wise search
+    /// drops configurations whose per-device peak exceeds it (see
+    /// [`crate::memory`]); an unsatisfiable budget answers
+    /// [`OptError::Infeasible`]. `None` plans unconstrained.
+    pub mem_limit: Option<u64>,
 }
 
 impl PlanRequest {
@@ -85,6 +91,7 @@ impl PlanRequest {
             cluster,
             per_gpu_batch: PER_GPU_BATCH,
             strategy: StrategyKind::Layerwise,
+            mem_limit: None,
         }
     }
 
@@ -99,16 +106,25 @@ impl PlanRequest {
         self.per_gpu_batch = batch;
         self
     }
+
+    /// Constrain the layer-wise search to a per-device memory budget of
+    /// `bytes` (default: unconstrained).
+    pub fn mem_limit(mut self, bytes: u64) -> PlanRequest {
+        self.mem_limit = Some(bytes);
+        self
+    }
 }
 
-/// Identity of the expensive per-(network, batch, cluster) state.
-/// Compared by value, never by a lossy hash, so two distinct clusters
-/// cannot alias one memo entry.
+/// Identity of the expensive per-(network, batch, cluster, budget)
+/// state. Compared by value, never by a lossy hash, so two distinct
+/// clusters cannot alias one memo entry; the memory budget is part of
+/// the key because it masks the config space the tables enumerate.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct StateKey {
     network: Network,
     per_gpu_batch: usize,
     cluster: ClusterId,
+    mem_limit: Option<u64>,
 }
 
 /// Structural identity of a device graph: everything cost tables and
@@ -339,6 +355,11 @@ impl PlanService {
                 "per-GPU batch size must be at least 1".into(),
             ));
         }
+        if req.mem_limit == Some(0) {
+            return Err(OptError::InvalidArgument(
+                "memory limit must be at least 1 byte".into(),
+            ));
+        }
         let devices = req.cluster.device_graph()?;
         let global = req.per_gpu_batch.checked_mul(devices.num_devices()).ok_or_else(|| {
             OptError::InvalidArgument(format!(
@@ -387,6 +408,7 @@ impl PlanService {
             network: req.network,
             per_gpu_batch: req.per_gpu_batch,
             cluster: cluster_id(devices),
+            mem_limit: req.mem_limit,
         };
         let cell = {
             let mut states = self.states.lock().unwrap_or_else(PoisonError::into_inner);
@@ -402,7 +424,8 @@ impl PlanService {
             ran = true;
             self.table_builds.fetch_add(1, Ordering::Relaxed);
             let cm = CostModel::new(graph, devices);
-            let tables = CostTables::build(&cm, devices.num_devices());
+            let budget = req.mem_limit.map(MemBudget::new);
+            let tables = CostTables::build_budgeted(&cm, devices.num_devices(), budget)?;
             let optimized = self.backend.search(&tables)?;
             self.searches.fetch_add(1, Ordering::Relaxed);
             Ok(Arc::new(TableState { tables, optimized }))
@@ -569,10 +592,43 @@ mod tests {
     }
 
     #[test]
+    fn mem_limits_key_the_state_memo_separately() {
+        let service = PlanService::new();
+        let free = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        service.plan(&free).unwrap(); // build #1
+        // an enormous budget masks nothing but is a distinct key: the
+        // constrained tables must never be served for the free request
+        let roomy = PlanRequest::new(Network::LeNet5, 2).unwrap().mem_limit(u64::MAX);
+        let a = service.plan(&roomy).unwrap(); // build #2
+        assert_eq!(service.stats().table_builds, 2);
+        let b = service.plan(&free).unwrap(); // still memoized
+        assert_eq!(service.stats().table_builds, 2);
+        // ...and an unconstrained budget changes no answer
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn infeasible_budgets_error_and_are_not_memoized() {
+        let service = PlanService::new();
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap().mem_limit(1);
+        for _ in 0..2 {
+            match service.evaluate(&req) {
+                Err(OptError::Infeasible { .. }) => {}
+                other => panic!("expected Infeasible, got {other:?}"),
+            }
+        }
+        // the failed build was forgotten both times, so it ran twice
+        assert_eq!(service.stats().table_builds, 2);
+        assert_eq!(service.stats().states_cached, 0);
+    }
+
+    #[test]
     fn invalid_requests_error_cleanly() {
         let service = PlanService::new();
         let zero_batch = PlanRequest::new(Network::LeNet5, 2).unwrap().per_gpu_batch(0);
         assert!(service.plan(&zero_batch).is_err());
+        let zero_mem = PlanRequest::new(Network::LeNet5, 2).unwrap().mem_limit(0);
+        assert!(service.plan(&zero_mem).is_err());
         let bad_cluster =
             PlanRequest::with_cluster(Network::LeNet5, ClusterSpec::new(0, 4));
         assert!(service.evaluate(&bad_cluster).is_err());

@@ -125,7 +125,16 @@ pub fn steady_state_step_plan(plan: &ExecutionPlan, cm: &CostModel) -> SimReport
     steady_state_inner(plan, cm.graph, cm.devices, cm)
 }
 
-/// Marginal per-step time from 1-step and 3-step chains of one plan.
+/// Marginal per-step report from 1-step and 3-step chains of one plan.
+///
+/// *Every* field is marginal — `(three − one) / 2` — not just
+/// `step_time`: a report mixing a marginal step time with one-step
+/// extensive fields (`busy`, byte counters, task counts) would make
+/// derived quantities like [`SimReport::utilization`] incoherent the
+/// moment per-step work stops being chain-position-invariant. (Today
+/// each chained step expands to an identical task multiset, so the
+/// marginal extensive fields equal the one-step ones; the accounting
+/// contract is pinned by `steady_state_reports_marginal_fields`.)
 fn steady_state_inner(
     plan: &ExecutionPlan,
     graph: &CompGraph,
@@ -134,9 +143,19 @@ fn steady_state_inner(
 ) -> SimReport {
     let one = simulate_steps_inner(plan, graph, devices, cm, 1, None);
     let three = simulate_steps_inner(plan, graph, devices, cm, 3, None);
-    let mut rep = one;
-    rep.step_time = (three.step_time - rep.step_time) / 2.0;
-    rep
+    SimReport {
+        step_time: (three.step_time - one.step_time) / 2.0,
+        xfer_bytes: (three.xfer_bytes - one.xfer_bytes) / 2.0,
+        sync_bytes: (three.sync_bytes - one.sync_bytes) / 2.0,
+        busy: one
+            .busy
+            .iter()
+            .zip(three.busy.iter())
+            .map(|(o, t)| (t - o) / 2.0)
+            .collect(),
+        num_tasks: (three.num_tasks - one.num_tasks) / 2,
+        num_transfers: (three.num_transfers - one.num_transfers) / 2,
+    }
 }
 
 /// Steady-state per-step time: simulate one and three chained steps and
@@ -303,9 +322,17 @@ fn simulate_steps_inner(
                     let (dur, res) = if !grp.spans_nodes {
                         (bytes / devices.host_bw, [Some(Resource::Host(node)), None])
                     } else {
+                        // The sharded-PS exchange is a round trip: each
+                        // replica sends its gradient slices out *and*
+                        // receives the reduced parameters back, so it
+                        // occupies both directions of its node's NIC —
+                        // exactly like activation transfers do. Holding
+                        // only `NicOut` would let the inbound half ride
+                        // for free alongside co-scheduled transfers
+                        // (pinned by `sync_contends_with_transfers_on_nic`).
                         (
                             bytes / devices.node_bw.min(devices.host_bw),
-                            [Some(Resource::NicOut(node)), None],
+                            [Some(Resource::NicOut(node)), Some(Resource::NicIn(node))],
                         )
                     };
                     let id = tasks.len();
@@ -453,6 +480,7 @@ mod tests {
     use super::*;
     use crate::graph::nets;
     use crate::optimizer::strategies;
+    use crate::parallel::PConfig;
 
     fn run(net: &str, ndev: usize, strat: &str) -> (SimReport, f64) {
         let g = nets::by_name(net, 32 * ndev).unwrap();
@@ -540,6 +568,105 @@ mod tests {
         assert_eq!(direct.step_time, via_plan.step_time);
         assert_eq!(direct.xfer_bytes, via_plan.xfer_bytes);
         assert_eq!(direct.sync_bytes, via_plan.sync_bytes);
+    }
+
+    #[test]
+    fn steady_state_reports_marginal_fields() {
+        // Regression for the mixed-accounting bug: `steady_state_*` used
+        // to return the 1-step chain's extensive fields next to a
+        // marginal `step_time`. All fields are marginal now; on a
+        // homogeneous chain the marginal extensive fields must equal one
+        // full step's, and the derived utilization must be coherent.
+        let g = nets::alexnet(32 * 4);
+        let d = DeviceGraph::p100_cluster(4).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::data_parallel(&g, 4);
+        let steady = steady_state_step(&g, &d, &s, &cm);
+        let one = simulate(&g, &d, &s, &cm);
+        // marginal sync bytes == one full step's sync bytes
+        assert!(
+            (steady.sync_bytes - one.sync_bytes).abs() <= 1e-6 * one.sync_bytes,
+            "marginal sync {} vs one-step {}",
+            steady.sync_bytes,
+            one.sync_bytes
+        );
+        assert!((steady.xfer_bytes - one.xfer_bytes).abs() <= 1e-6 * one.xfer_bytes.max(1.0));
+        assert_eq!(steady.num_tasks, one.num_tasks);
+        assert_eq!(steady.num_transfers, one.num_transfers);
+        assert_eq!(steady.busy.len(), one.busy.len());
+        for (m, o) in steady.busy.iter().zip(one.busy.iter()) {
+            assert!((m - o).abs() <= 1e-9 * o.max(1e-12), "marginal busy {m} vs {o}");
+        }
+        let u = steady.utilization();
+        assert!(u > 0.0 && u <= 1.0, "steady-state utilization {u}");
+    }
+
+    #[test]
+    fn sync_contends_with_transfers_on_nic() {
+        // Regression for the sync-NIC bug: cross-node parameter-sync
+        // tasks held only `NicOut`, so their inbound half rode for free
+        // next to co-scheduled activation transfers. Scenario built so
+        // node 0's NIC *ingress* is the contended resource:
+        //
+        //   cluster: 2 nodes x 2 GPUs, slow NIC (node_bw = 1e8 B/s);
+        //   conv {n=3} on devices 0,1 (node 0) and 2 (node 1), with a
+        //   parameter sync spanning both nodes (two replicas on node 0);
+        //   fc {c=2} on devices 0,1 all-gathers the conv output, pulling
+        //   two cross-node transfers from device 2 *into* node 0.
+        //
+        // Post-fix, the two inbound transfers and node 0's two sync
+        // round-trips all serialize on `NicIn(0)`, so the makespan is at
+        // least the sum of their durations. Pre-fix the syncs only held
+        // `NicOut(0)` and ran concurrently with the inbound transfers:
+        // the makespan stayed ~2 transfer-durations short of this bound
+        // (everything else in the DAG is orders of magnitude faster).
+        use crate::device::ComputeModel;
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new("sync-nic");
+        let x = b.input(1200, 4096, 1, 1);
+        let c = b.conv2d("conv", x, 64, (1, 1), (1, 1), (0, 0));
+        let f = b.fully_connected("fc", c, 2);
+        b.softmax("sm", f);
+        let g = b.finish();
+        // inter_bw 5e7 x 2 GPUs/node => node NIC = 1e8 B/s
+        let d =
+            DeviceGraph::cluster("nic", 2, 2, 15e9, 5e7, 12e9, ComputeModel::p100()).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let s = Strategy {
+            configs: vec![
+                PConfig::data(3),
+                PConfig::data(3),
+                PConfig::channel(2),
+                PConfig::serial(),
+            ],
+        };
+        let plan = ExecutionPlan::build(&cm, &s);
+        // the trap is armed: inter-node transfers into node 0 plus a
+        // node-spanning sync group with two replicas on node 0
+        let inter: Vec<&crate::plan::Transfer> = plan
+            .edges
+            .iter()
+            .flat_map(|e| e.transfers.iter())
+            .filter(|t| t.route == crate::plan::Route::InterNode)
+            .collect();
+        assert_eq!(inter.len(), 2, "expected exactly two cross-node transfers");
+        assert!(inter.iter().all(|t| d.devices[t.dst_dev].node == 0));
+        let sync = plan.layer(c).sync.as_ref().expect("conv must sync");
+        assert!(sync.groups[0].spans_nodes);
+        let node0_replicas =
+            sync.groups[0].devices.iter().filter(|&&dev| d.devices[dev].node == 0).count();
+        assert_eq!(node0_replicas, 2);
+
+        let rep = simulate_plan(&plan, &cm);
+        let xfer_in: f64 = inter.iter().map(|t| t.bytes() / d.node_bw).sum();
+        let sync_in = node0_replicas as f64 * sync.groups[0].bytes_per_replica
+            / d.node_bw.min(d.host_bw);
+        let serialized = xfer_in + sync_in;
+        assert!(
+            rep.step_time >= serialized * (1.0 - 1e-9),
+            "NicIn(0) holders must serialize: step {} < bound {serialized}",
+            rep.step_time
+        );
     }
 
     #[test]

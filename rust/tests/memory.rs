@@ -1,0 +1,172 @@
+//! Properties of the per-device memory model and the
+//! feasibility-constrained search (DESIGN.md §3):
+//!
+//! 1. a layer's per-device peak bytes are monotone non-increasing in
+//!    every partition degree (checked exhaustively over nested config
+//!    pairs of real networks);
+//! 2. an infinite budget reproduces the unconstrained tables and plans
+//!    byte-for-byte — masking is a no-op until a budget actually binds;
+//! 3. a 16 GB P100 budget on vgg16@4 is satisfiable and the returned
+//!    plan's recorded `peak_mem_per_dev` respects it;
+//! 4. a genuinely tight budget shrinks the config space and every chosen
+//!    configuration stays layer-feasible;
+//! 5. an impossible budget is a typed `OptError::Infeasible`, never a
+//!    panic or a silently wrong plan.
+
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::DeviceGraph;
+use optcnn::error::OptError;
+use optcnn::graph::nets;
+use optcnn::memory::{layer_peak_bytes, peak_per_device, MemBudget};
+use optcnn::optimizer;
+use optcnn::parallel::enumerate_configs;
+use optcnn::planner::{Network, Planner, StrategyKind};
+
+#[test]
+fn peak_bytes_monotone_in_each_partition_degree() {
+    // For every nested config pair (c1, c2) that differs in exactly one
+    // dimension with c2's degree a proper multiple of c1's (so c2's
+    // tiles subdivide c1's), the per-device peak must not grow: finer
+    // partitioning can only shed parameter replicas and shrink the
+    // resident activation window.
+    for g in [nets::lenet5(64), nets::alexnet(128)] {
+        for l in &g.layers {
+            let cfgs = enumerate_configs(l, 8);
+            let peaks: Vec<f64> = cfgs.iter().map(|c| layer_peak_bytes(l, c)).collect();
+            let mut pairs = 0usize;
+            for (i, c1) in cfgs.iter().enumerate() {
+                for (j, c2) in cfgs.iter().enumerate() {
+                    let diff: Vec<usize> =
+                        (0..4).filter(|&d| c1.deg[d] != c2.deg[d]).collect();
+                    let &[d] = &diff[..] else { continue };
+                    if c2.deg[d] > c1.deg[d] && c2.deg[d] % c1.deg[d] == 0 {
+                        pairs += 1;
+                        assert!(
+                            peaks[j] <= peaks[i] * (1.0 + 1e-12),
+                            "{}: raising {:?} to {:?} grew the peak {} -> {}",
+                            l.name,
+                            c1.deg,
+                            c2.deg,
+                            peaks[i],
+                            peaks[j]
+                        );
+                    }
+                }
+            }
+            assert!(
+                cfgs.len() < 2 || pairs > 0,
+                "{}: no nested pairs among {} configs",
+                l.name,
+                cfgs.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn infinite_budget_reproduces_unconstrained_tables_exactly() {
+    let g = nets::vgg16(64);
+    let d = DeviceGraph::p100_cluster(2).unwrap();
+    let cm = CostModel::new(&g, &d);
+    let free = CostTables::build(&cm, 2);
+    let inf = CostTables::build_budgeted(&cm, 2, Some(MemBudget::unlimited())).unwrap();
+    assert_eq!(free.configs, inf.configs);
+    assert_eq!(free.node_cost, inf.node_cost);
+    assert_eq!(free.edges.len(), inf.edges.len());
+    for (a, b) in free.edges.iter().zip(inf.edges.iter()) {
+        assert_eq!((a.src, a.dst), (b.src, b.dst));
+        assert_eq!(a.cost, b.cost);
+    }
+}
+
+#[test]
+fn infinite_budget_plans_are_byte_identical() {
+    // The acceptance pin: with no (or a non-binding) budget, planning
+    // output is byte-identical to the unconstrained path.
+    let mut free = Planner::builder(Network::AlexNet).devices(4).build().unwrap();
+    let mut capped = Planner::builder(Network::AlexNet)
+        .devices(4)
+        .mem_limit(u64::MAX)
+        .build()
+        .unwrap();
+    let a = free.plan(StrategyKind::Layerwise).unwrap();
+    let b = capped.plan(StrategyKind::Layerwise).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    let ea = free.evaluate(StrategyKind::Layerwise).unwrap();
+    let eb = capped.evaluate(StrategyKind::Layerwise).unwrap();
+    assert_eq!(ea.estimate, eb.estimate);
+    assert_eq!(ea.sim.step_time, eb.sim.step_time);
+    assert_eq!(ea.peak_mem_per_dev, eb.peak_mem_per_dev);
+}
+
+#[test]
+fn p100_budget_on_vgg16_at_4_is_respected() {
+    // The ISSUE's flagship scenario: vgg16 at 32/GPU on four 16 GB
+    // P100s. The optimum must exist and the plan's recorded per-device
+    // high water must fit the card.
+    let budget = 16_000_000_000u64;
+    let mut p = Planner::builder(Network::Vgg16)
+        .devices(4)
+        .mem_limit(budget)
+        .build()
+        .unwrap();
+    assert_eq!(p.mem_limit(), Some(budget));
+    let plan = p.plan(StrategyKind::Layerwise).unwrap();
+    assert_eq!(plan.peak_mem_per_dev.len(), 4);
+    assert!(
+        plan.peak_mem() <= budget as f64,
+        "recorded peak {} exceeds the 16 GB budget",
+        plan.peak_mem()
+    );
+    // the recorded vector is the memory model's aggregation, not zeros
+    assert!(plan.peak_mem_per_dev.iter().all(|&b| b > 0.0));
+}
+
+#[test]
+fn tight_budget_masks_configs_and_the_optimum_stays_feasible() {
+    // 2 GB per device on vgg16@4: serial early convs (~6.6 GB resident)
+    // are masked out, but every layer keeps at least one config, so the
+    // search still succeeds — over a strictly smaller space.
+    let budget = 2_000_000_000.0f64;
+    let g = nets::vgg16(32 * 4);
+    let d = DeviceGraph::p100_cluster(4).unwrap();
+    let cm = CostModel::new(&g, &d);
+    let free = CostTables::build(&cm, 4);
+    let tight =
+        CostTables::build_budgeted(&cm, 4, Some(MemBudget { bytes_per_dev: budget }))
+            .unwrap();
+    let free_total: usize = (0..g.num_layers()).map(|l| free.num_configs(l)).sum();
+    let tight_total: usize = (0..g.num_layers()).map(|l| tight.num_configs(l)).sum();
+    assert!(
+        tight_total < free_total,
+        "a 2 GB budget must mask something ({free_total} vs {tight_total})"
+    );
+    let opt = optimizer::optimize(&tight);
+    for (l, cfg) in opt.strategy.configs.iter().enumerate() {
+        assert!(
+            layer_peak_bytes(&g.layers[l], cfg) <= budget,
+            "layer {} chose an over-budget config",
+            g.layers[l].name
+        );
+    }
+    // the recorded plan aggregation agrees with the memory model
+    let plan = optcnn::plan::ExecutionPlan::build(&cm, &opt.strategy);
+    assert_eq!(plan.peak_mem_per_dev, peak_per_device(&cm, &opt.strategy));
+}
+
+#[test]
+fn impossible_budget_is_a_typed_infeasibility() {
+    let mut p = Planner::builder(Network::Vgg16)
+        .devices(4)
+        .mem_limit(1_000_000) // 1 MB: no config of the stem fits
+        .build()
+        .unwrap();
+    match p.evaluate(StrategyKind::Layerwise) {
+        Err(OptError::Infeasible { layer, overshoot }) => {
+            assert!(!layer.is_empty());
+            assert!(overshoot > 0);
+        }
+        Err(other) => panic!("expected Infeasible, got {other}"),
+        Ok(_) => panic!("a 1 MB budget cannot yield a plan"),
+    }
+}
