@@ -1,0 +1,80 @@
+//! Custom networks end to end: build an arbitrary graph with the
+//! fallible `GraphBuilder`, export it as a `GraphSpec` JSON document,
+//! load it back, and plan it — demonstrating that the planner is not
+//! limited to the builtin benchmark nets, and that a spec-loaded graph
+//! plans byte-identically to the in-memory one (content addressing).
+//!
+//! ```sh
+//! cargo run --release --example custom_net
+//! ```
+
+use optcnn::graph::{CompGraph, GraphBuilder, PoolKind};
+use optcnn::planner::{NetworkSpec, Planner, StrategyKind};
+use optcnn::util::json::Json;
+use optcnn::util::{fmt_bytes, fmt_secs};
+
+/// A little residual CNN that exists in no builder: two conv stages with
+/// a skip connection, global-ish pooling, and a classifier head.
+fn build_skipnet(batch: usize) -> optcnn::Result<CompGraph> {
+    let mut b = GraphBuilder::new("skipnet");
+    let x = b.input(batch, 3, 64, 64)?;
+    let c1 = b.conv2d("stem", x, 32, (3, 3), (1, 1), (1, 1))?;
+    let c2 = b.conv2d("body_a", c1, 32, (3, 3), (1, 1), (1, 1))?;
+    let c3 = b.conv2d("body_b", c2, 32, (3, 3), (1, 1), (1, 1))?;
+    let res = b.add("skip", c1, c3)?;
+    let p = b.pool2d("pool", res, PoolKind::Max, (4, 4), (4, 4), (0, 0))?;
+    let f1 = b.fully_connected("fc1", p, 256)?;
+    let f2 = b.fully_connected("fc2", f1, 10)?;
+    b.softmax("softmax", f2)?;
+    b.finish()
+}
+
+fn main() -> optcnn::Result<()> {
+    // 1. Build the custom graph (every step is fallible — no panics on
+    //    bad wiring) and show its structural content address.
+    let net = build_skipnet(64)?;
+    println!(
+        "{}: {} layers, {:.2}M params, digest {}",
+        net.name,
+        net.num_layers(),
+        net.total_params() as f64 / 1e6,
+        net.digest()
+    );
+
+    // 2. Round-trip through the wire form. This exact JSON also works
+    //    inline in `optcnn serve` requests ({"graph": ...}) and on disk
+    //    for `--network-file`.
+    let spec_text = net.to_spec().to_string();
+    println!("spec: {} bytes of JSON", spec_text.len());
+    let reloaded = CompGraph::from_spec(&Json::parse(&spec_text).expect("spec parses"))?;
+    assert_eq!(net.digest(), reloaded.digest(), "round-trip preserves identity");
+
+    // 3. Plan both copies on 2 devices. The graphs are structurally
+    //    identical, so the plans are byte-identical.
+    let mut a = Planner::builder(NetworkSpec::custom(net)?).devices(2).build()?;
+    let mut b = Planner::builder(NetworkSpec::custom(reloaded)?).devices(2).build()?;
+    let plan_a = a.plan(StrategyKind::Layerwise)?;
+    let plan_b = b.plan(StrategyKind::Layerwise)?;
+    assert_eq!(
+        plan_a.to_json().to_string(),
+        plan_b.to_json().to_string(),
+        "spec-loaded and builder-built graphs must plan identically"
+    );
+
+    // 4. The numbers.
+    let eval = a.evaluate(StrategyKind::Layerwise)?;
+    let data = a.evaluate(StrategyKind::Data)?;
+    println!(
+        "layerwise: step {} ({:.0} img/s), comm {}/step",
+        fmt_secs(eval.estimate),
+        eval.throughput,
+        fmt_bytes(eval.comm.total())
+    );
+    println!(
+        "data-parallel baseline: step {} ({:.0} img/s)",
+        fmt_secs(data.estimate),
+        data.throughput
+    );
+    println!("custom net planned end to end — no enum required.");
+    Ok(())
+}

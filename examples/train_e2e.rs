@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     // the cost-model-optimal layer-wise strategy for MiniCNN on 4 devices,
     // resolved through the typed Planner session API
-    let g = nets::minicnn(batch);
+    let g = nets::minicnn(batch)?;
     let mut planner = Planner::builder(Network::MiniCnn)
         .devices(NDEV)
         .per_gpu_batch(batch / NDEV)
@@ -56,14 +56,15 @@ fn main() -> anyhow::Result<()> {
 
     // oracle first: single-device ground truth
     let seed = 42;
-    let probe = Trainer::new(&store, nets::minicnn(batch), runs[0].1.clone(), NDEV, LR, seed)?;
+    let probe =
+        Trainer::new(&store, nets::minicnn(batch)?, runs[0].1.clone(), NDEV, LR, seed)?;
     let mut oracle = OracleTrainer::new(&store, "minicnn", batch, probe.master_params(), LR)?;
     drop(probe);
 
     let mut curves: Vec<(String, Vec<f32>, f64, u64)> = Vec::new();
     for (name, strat) in runs.drain(..) {
         let mut trainer =
-            Trainer::new(&store, nets::minicnn(batch), strat, NDEV, LR, seed)?;
+            Trainer::new(&store, nets::minicnn(batch)?, strat, NDEV, LR, seed)?;
         let t0 = std::time::Instant::now();
         let mut curve = Vec::with_capacity(steps);
         for step in 0..steps {

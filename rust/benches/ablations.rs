@@ -81,7 +81,7 @@ fn sync_ablation() {
 
 fn bandwidth_ablation() {
     let ndev = 16;
-    let g = nets::vgg16(32 * ndev);
+    let g = nets::vgg16(32 * ndev).unwrap();
     let mut table = Table::new(
         "ablation 3: inter-node bandwidth sweep (VGG-16, 16 GPUs)",
         &["inter-node BW", "layerwise step", "data step", "gain", "fc config"],

@@ -18,7 +18,7 @@ use optcnn::util::table::Table;
 
 fn main() {
     let ndev = 4;
-    let g = nets::vgg16(32 * ndev);
+    let g = nets::vgg16(32 * ndev).unwrap();
     let d = DeviceGraph::p100_cluster(ndev).unwrap();
     let cm = CostModel::new(&g, &d);
     let conv8 = g.layers.iter().find(|l| l.name == "conv8").expect("conv8");

@@ -14,7 +14,7 @@ use optcnn::util::table::Table;
 
 fn main() {
     let ndev = 2;
-    let g = nets::vgg16(32 * ndev);
+    let g = nets::vgg16(32 * ndev).unwrap();
     let d = DeviceGraph::p100_cluster(ndev).unwrap();
     let cm = CostModel::new(&g, &d);
     let fc6 = g.layers.iter().find(|l| l.name == "fc6").expect("fc6");

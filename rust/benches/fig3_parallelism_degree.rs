@@ -14,7 +14,7 @@ use optcnn::parallel::PConfig;
 use optcnn::util::table::Table;
 
 fn main() {
-    let g = nets::inception_v3(32 * 16);
+    let g = nets::inception_v3(32 * 16).unwrap();
     let d = DeviceGraph::p100_cluster(16).unwrap();
     let cm = CostModel::new(&g, &d);
     // 3rd layer = stem_conv3; last parameterized layer = fc

@@ -18,7 +18,7 @@ use optcnn::util::fmt_bytes;
 
 fn main() {
     let ndev = 4usize;
-    let g = nets::vgg16(32 * ndev);
+    let g = nets::vgg16(32 * ndev).unwrap();
     // The feasibility floor: the largest per-layer minimum peak. Any
     // budget below this is Infeasible by construction.
     let floor = g

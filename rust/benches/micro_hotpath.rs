@@ -59,7 +59,7 @@ fn main() {
     });
 
     println!("\n== micro: cost model kernels ==");
-    let g = nets::inception_v3(512);
+    let g = nets::inception_v3(512).unwrap();
     let d = DeviceGraph::p100_cluster(16).unwrap();
     let cm = CostModel::new(&g, &d);
     let concat = g.layers.iter().find(|l| l.name == "mixedB3_concat").unwrap();

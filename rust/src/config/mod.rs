@@ -27,7 +27,7 @@ use std::collections::BTreeMap;
 
 use crate::device::DeviceGraph;
 use crate::error::{OptError, Result};
-use crate::planner::{ClusterSpec, Network, Planner, StrategyKind};
+use crate::planner::{ClusterSpec, NetworkSpec, Planner, StrategyKind};
 
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
@@ -192,13 +192,18 @@ fn parse_value(s: &str) -> std::result::Result<Value, String> {
 /// Typed experiment configuration assembled from a TOML document (with
 /// the paper's defaults for anything unspecified). Unknown network,
 /// strategy, or compute-model names are rejected at load time.
+///
+/// The network is either `network = "<preset>"` or `network_file =
+/// "<spec.json>"` (a [`GraphSpec`](crate::graph::spec) document loaded
+/// and validated at config-load time); a custom graph carries its own
+/// batch, so `per_gpu_batch` only combines with a preset.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
-    /// The network to plan for.
-    pub network: Network,
+    /// The network to plan for (preset or spec-loaded custom graph).
+    pub network: NetworkSpec,
     /// The strategy to resolve.
     pub strategy: StrategyKind,
-    /// Per-GPU batch size.
+    /// Per-GPU batch size (presets only).
     pub per_gpu_batch: usize,
     /// The cluster the experiment runs on.
     pub cluster: ClusterSpec,
@@ -207,8 +212,35 @@ pub struct ExperimentConfig {
 impl ExperimentConfig {
     /// Assemble a config from a parsed TOML document.
     pub fn from_toml(doc: &Toml) -> Result<ExperimentConfig> {
+        let network = match (
+            doc.get("experiment", "network"),
+            doc.get("experiment", "network_file"),
+        ) {
+            (Some(_), Some(_)) => {
+                return Err(OptError::Config(
+                    "experiment.network and experiment.network_file are mutually exclusive"
+                        .into(),
+                ))
+            }
+            (_, None) => {
+                NetworkSpec::Preset(doc.try_str_or("experiment", "network", "vgg16")?.parse()?)
+            }
+            (None, Some(v)) => {
+                let path = v.as_str().ok_or_else(|| {
+                    OptError::Config("experiment.network_file must be a string path".into())
+                })?;
+                if doc.get("experiment", "per_gpu_batch").is_some() {
+                    return Err(OptError::Config(
+                        "experiment.per_gpu_batch does not combine with network_file \
+                         (the spec carries its own batch)"
+                            .into(),
+                    ));
+                }
+                NetworkSpec::from_spec_file(path)?
+            }
+        };
         Ok(ExperimentConfig {
-            network: doc.try_str_or("experiment", "network", "vgg16")?.parse()?,
+            network,
             strategy: doc.try_str_or("experiment", "strategy", "layerwise")?.parse()?,
             per_gpu_batch: doc.try_usize_or("experiment", "per_gpu_batch", 32)?,
             cluster: ClusterSpec::from_toml(doc)?,
@@ -227,9 +259,10 @@ impl ExperimentConfig {
         self.cluster.num_devices()
     }
 
-    /// Global batch size across the cluster.
+    /// Global batch size across the cluster (a custom graph's own batch,
+    /// or `per_gpu_batch x devices` for presets).
     pub fn global_batch(&self) -> usize {
-        self.per_gpu_batch * self.num_devices()
+        self.network.fixed_batch().unwrap_or(self.per_gpu_batch * self.num_devices())
     }
 
     /// Materialize the device graph this config describes.
@@ -239,16 +272,18 @@ impl ExperimentConfig {
 
     /// Open a planning session for this config.
     pub fn planner(&self) -> Result<Planner> {
-        Planner::builder(self.network)
-            .cluster(self.cluster.clone())
-            .per_gpu_batch(self.per_gpu_batch)
-            .build()
+        let mut builder = Planner::builder(self.network.clone()).cluster(self.cluster.clone());
+        if self.network.fixed_batch().is_none() {
+            builder = builder.per_gpu_batch(self.per_gpu_batch);
+        }
+        builder.build()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::planner::Network;
 
     const DOC: &str = r#"
 # experiment file
@@ -281,7 +316,7 @@ extras = [1, 2.5, "x"]
     fn experiment_config_roundtrip() {
         let t = Toml::parse(DOC).unwrap();
         let c = ExperimentConfig::from_toml(&t).unwrap();
-        assert_eq!(c.network, Network::AlexNet);
+        assert_eq!(c.network.preset(), Some(Network::AlexNet));
         assert_eq!(c.strategy, StrategyKind::Owt);
         assert_eq!(c.num_devices(), 8);
         assert_eq!(c.global_batch(), 512);
@@ -293,9 +328,41 @@ extras = [1, 2.5, "x"]
     #[test]
     fn defaults_fill_missing_fields() {
         let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
-        assert_eq!(c.network, Network::Vgg16);
+        assert_eq!(c.network.preset(), Some(Network::Vgg16));
         assert_eq!(c.per_gpu_batch, 32);
         assert_eq!(c.num_devices(), 4);
+    }
+
+    #[test]
+    fn network_file_loads_a_custom_graph() {
+        let dir = std::env::temp_dir().join("optcnn-config-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec_path = dir.join("tiny.graph.json");
+        let g = crate::graph::nets::minicnn(48).unwrap();
+        std::fs::write(&spec_path, g.to_spec().to_string()).unwrap();
+        let doc = format!(
+            "[experiment]\nnetwork_file = \"{}\"\n\n[cluster]\nnodes = 1\ngpus_per_node = 2\n",
+            spec_path.display()
+        );
+        let c = ExperimentConfig::from_toml(&Toml::parse(&doc).unwrap()).unwrap();
+        assert!(c.network.preset().is_none());
+        assert_eq!(c.network.name(), "minicnn");
+        assert_eq!(c.global_batch(), 48, "the spec's own batch governs");
+        let mut p = c.planner().unwrap();
+        assert_eq!(p.global_batch(), 48);
+        assert!(p.evaluate(StrategyKind::Data).unwrap().throughput > 0.0);
+        // the two network keys are mutually exclusive, and per_gpu_batch
+        // does not combine with a spec-carried batch
+        let both = format!(
+            "[experiment]\nnetwork = \"vgg16\"\nnetwork_file = \"{}\"\n",
+            spec_path.display()
+        );
+        assert!(ExperimentConfig::from_toml(&Toml::parse(&both).unwrap()).is_err());
+        let batched = format!(
+            "[experiment]\nnetwork_file = \"{}\"\nper_gpu_batch = 16\n",
+            spec_path.display()
+        );
+        assert!(ExperimentConfig::from_toml(&Toml::parse(&batched).unwrap()).is_err());
     }
 
     #[test]

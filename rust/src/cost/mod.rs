@@ -326,7 +326,7 @@ mod tests {
     use crate::graph::nets;
 
     fn setup() -> (CompGraph, DeviceGraph) {
-        (nets::vgg16(32 * 4), DeviceGraph::p100_cluster(4).unwrap())
+        (nets::vgg16(32 * 4).unwrap(), DeviceGraph::p100_cluster(4).unwrap())
     }
 
     #[test]
@@ -394,7 +394,7 @@ mod tests {
 
     #[test]
     fn eq1_sums_components() {
-        let g = nets::lenet5(32);
+        let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = Strategy::uniform(g.num_layers(), PConfig::data(2));
@@ -440,7 +440,7 @@ mod tests {
 
     #[test]
     fn inter_node_sync_costs_more() {
-        let g = nets::alexnet(32 * 16);
+        let g = nets::alexnet(32 * 16).unwrap();
         let d16 = DeviceGraph::p100_cluster(16).unwrap();
         let d4 = DeviceGraph::p100_cluster(4).unwrap();
         let cm16 = CostModel::new(&g, &d16);

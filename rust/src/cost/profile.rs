@@ -132,7 +132,7 @@ mod tests {
             eprintln!("skipping (run `make artifacts`)");
             return;
         };
-        let g = nets::minicnn(store.batch);
+        let g = nets::minicnn(store.batch).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let measured = profile_graph(&store, &g, &cm, 4, 2).unwrap();

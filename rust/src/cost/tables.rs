@@ -305,7 +305,7 @@ mod tests {
 
     #[test]
     fn tables_match_direct_evaluation() {
-        let g = nets::lenet5(32);
+        let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let t = CostTables::build(&cm, 2);
@@ -321,7 +321,7 @@ mod tests {
 
     #[test]
     fn every_layer_has_serial_config() {
-        let g = nets::alexnet(64);
+        let g = nets::alexnet(64).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 4);
         for l in 0..g.num_layers() {
@@ -340,11 +340,11 @@ mod tests {
         // one table with the wrong dimensions/contents.
         use crate::graph::GraphBuilder;
         let mut b = GraphBuilder::new("alias");
-        let x = b.input(8, 4, 16, 16);
-        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), (1, 1)); // out == input's shape
-        let d1 = b.conv2d("d1", x, 8, (3, 3), (1, 1), (1, 1));
-        let d2 = b.conv2d("d2", c1, 8, (3, 3), (1, 1), (1, 1)); // same op/shapes as d1
-        let g = b.finish();
+        let x = b.input(8, 4, 16, 16).unwrap();
+        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), (1, 1)).unwrap(); // out == input's shape
+        let d1 = b.conv2d("d1", x, 8, (3, 3), (1, 1), (1, 1)).unwrap();
+        let d2 = b.conv2d("d2", c1, 8, (3, 3), (1, 1), (1, 1)).unwrap(); // same op/shapes as d1
+        let g = b.finish().unwrap();
         // the trap is armed: both edges share output shapes but the
         // producers' config spaces differ
         assert_eq!(g.layer(x).out_shape, g.layer(c1).out_shape);
@@ -382,7 +382,7 @@ mod tests {
     fn budget_masks_configs_and_both_backends_honor_it() {
         use crate::memory::{layer_peak_bytes, MemBudget};
         use crate::optimizer::{self, dfs};
-        let g = nets::lenet5(64);
+        let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let free = CostTables::build(&cm, 2);
@@ -430,7 +430,7 @@ mod tests {
     #[test]
     fn fully_infeasible_layer_is_a_typed_error() {
         use crate::memory::MemBudget;
-        let g = nets::lenet5(64);
+        let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let err = CostTables::build_budgeted(&cm, 2, Some(MemBudget::new(1)))
@@ -446,7 +446,7 @@ mod tests {
 
     #[test]
     fn edge_tables_cover_all_graph_edges() {
-        let g = nets::inception_v3(32);
+        let g = nets::inception_v3(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 2);
         assert_eq!(t.edges.len(), g.num_edges());

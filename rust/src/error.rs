@@ -26,6 +26,12 @@ pub enum OptError {
     InvalidCluster(String),
     /// A malformed argument: CLI flag, builder parameter, or batch size.
     InvalidArgument(String),
+    /// A computation graph that violates structural invariants: bad
+    /// wiring (dangling/backward edges), shape disagreements, degenerate
+    /// operator parameters, or a malformed `GraphSpec` document. Graphs
+    /// arrive over TCP and from `--network-file`, so these are typed
+    /// usage errors (exit 2), never panics.
+    InvalidGraph(String),
     /// A malformed configuration file.
     Config(String),
     /// An I/O failure (missing file, unwritable path).
@@ -63,7 +69,8 @@ impl fmt::Display for OptError {
             OptError::UnknownNetwork(name) => write!(
                 f,
                 "unknown network `{name}` (known: lenet5, alexnet, vgg16, \
-                 inception_v3, resnet18, resnet50, minicnn)"
+                 inception_v3, resnet18, resnet50, minicnn; arbitrary graphs \
+                 load from a GraphSpec via --network-file or the `graph` wire field)"
             ),
             OptError::UnknownStrategy(name) => {
                 write!(f, "unknown strategy `{name}` (known: data, model, owt, layerwise)")
@@ -73,6 +80,7 @@ impl fmt::Display for OptError {
             }
             OptError::InvalidCluster(msg) => write!(f, "invalid cluster: {msg}"),
             OptError::InvalidArgument(msg) => write!(f, "{msg}"),
+            OptError::InvalidGraph(msg) => write!(f, "invalid graph: {msg}"),
             OptError::Config(msg) => write!(f, "config error: {msg}"),
             OptError::Io(msg) => write!(f, "{msg}"),
             OptError::SearchFailed(msg) => write!(f, "search failed: {msg}"),
@@ -102,6 +110,7 @@ mod tests {
             OptError::UnknownBackend("sa".into()),
             OptError::InvalidCluster("0 nodes".into()),
             OptError::InvalidArgument("--devices: expected an integer".into()),
+            OptError::InvalidGraph("dangling edge (9, 2)".into()),
             OptError::Config("line 3: expected key = value".into()),
             OptError::Io("plan.json: permission denied".into()),
             OptError::SearchFailed("budget exhausted".into()),
@@ -118,6 +127,8 @@ mod tests {
     fn usage_errors_exit_2_runtime_errors_exit_1() {
         assert_eq!(OptError::UnknownNetwork("x".into()).exit_code(), 2);
         assert_eq!(OptError::InvalidArgument("x".into()).exit_code(), 2);
+        // a malformed graph off the wire is the client's mistake: exit 2
+        assert_eq!(OptError::InvalidGraph("x".into()).exit_code(), 2);
         assert_eq!(OptError::Io("x".into()).exit_code(), 1);
         // an unsatisfiable memory budget is a usage error: exit 2
         assert_eq!(OptError::Infeasible { layer: "fc6".into(), overshoot: 1 }.exit_code(), 2);

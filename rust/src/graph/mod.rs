@@ -8,10 +8,27 @@
 //! Activation functions are folded into the producing layer (as cuDNN does
 //! and as the paper's layer counts imply: AlexNet = 11 layers,
 //! VGG-16 = 21, Inception-v3 = 102).
+//!
+//! Construction is **fallible end to end**: [`GraphBuilder`] methods and
+//! [`CompGraph::validate`] return [`OptError::InvalidGraph`] instead of
+//! panicking, because graphs arrive not only from the trusted builders in
+//! [`nets`] but also as untrusted [`spec`] JSON over TCP (`optcnn serve`)
+//! and from `--network-file` — a panicking builder would be a crash
+//! vector there (DESIGN.md §5).
 
 pub mod nets;
+pub mod spec;
+
+use crate::error::{OptError, Result};
+
+pub use spec::GraphDigest;
 
 pub type LayerId = usize;
+
+/// Shorthand for the module's error variant.
+fn invalid(msg: String) -> OptError {
+    OptError::InvalidGraph(msg)
+}
 
 /// Pooling flavor. Cost-wise identical; kept for fidelity of the builders.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -58,6 +75,20 @@ impl OpKind {
             OpKind::Softmax => "softmax",
             OpKind::Concat => "concat",
             OpKind::Add => "add",
+        }
+    }
+
+    /// Legal in-degree range `(min, max)`; `max` is `None` for variadic
+    /// operators (concat).
+    fn arity(&self) -> (usize, Option<usize>) {
+        match self {
+            OpKind::Input => (0, Some(0)),
+            OpKind::Conv2d { .. }
+            | OpKind::Pool2d { .. }
+            | OpKind::FullyConnected { .. }
+            | OpKind::Softmax => (1, Some(1)),
+            OpKind::Add => (2, Some(2)),
+            OpKind::Concat => (2, None),
         }
     }
 }
@@ -145,15 +176,167 @@ impl Layer {
     }
 }
 
+/// Spatial output extent of a convolution/pooling window, or the reason
+/// it is degenerate (zero kernel/stride, kernel beyond the padded
+/// extent). The former `assert!` here is now a plain-message error the
+/// caller wraps with layer context, so a degenerate conv in a wire spec
+/// is a one-line rejection, not a panic (and a zero stride is not a
+/// divide-by-zero).
+fn conv_out(hw: usize, k: usize, s: usize, p: usize) -> std::result::Result<usize, String> {
+    if k == 0 || s == 0 {
+        return Err(format!("kernel ({k}) and stride ({s}) must be at least 1"));
+    }
+    let padded = p
+        .checked_mul(2)
+        .and_then(|pp| hw.checked_add(pp))
+        .ok_or_else(|| format!("padded extent overflows ({hw} + 2 x {p})"))?;
+    if padded < k {
+        return Err(format!("kernel {k} larger than padded extent {padded}"));
+    }
+    Ok((padded - k) / s + 1)
+}
+
+/// The output shape `op` produces from `in_shapes` — the one shape
+/// inference shared by [`GraphBuilder`] and [`CompGraph::validate`], so
+/// a spec-declared shape can never disagree with what the builder would
+/// have inferred. `name` labels errors. [`OpKind::Input`] has no inputs
+/// to infer from and is handled by the callers.
+fn infer_out_shape(name: &str, op: &OpKind, in_shapes: &[Vec<usize>]) -> Result<Vec<usize>> {
+    let (min, max) = op.arity();
+    if in_shapes.len() < min || max.is_some_and(|m| in_shapes.len() > m) {
+        let want = match max {
+            Some(m) if m == min => format!("{min}"),
+            Some(m) => format!("{min}..={m}"),
+            None => format!(">= {min}"),
+        };
+        return Err(invalid(format!(
+            "layer `{name}` ({}) takes {want} input(s), got {}",
+            op.mnemonic(),
+            in_shapes.len()
+        )));
+    }
+    let need_4d = |s: &[usize]| -> Result<()> {
+        if s.len() != 4 {
+            return Err(invalid(format!(
+                "layer `{name}` ({}) needs a 4-D input, got {s:?}",
+                op.mnemonic()
+            )));
+        }
+        Ok(())
+    };
+    match op {
+        // callers skip layer 0 and reject later inputs before inferring,
+        // but stay typed rather than panic if a new caller forgets
+        OpKind::Input => Err(invalid(format!(
+            "layer `{name}`: input shapes are declared, not inferred"
+        ))),
+        OpKind::Conv2d { cout, kernel, stride, padding } => {
+            let s = &in_shapes[0];
+            need_4d(s)?;
+            if *cout == 0 {
+                return Err(invalid(format!("layer `{name}`: conv cout must be at least 1")));
+            }
+            Ok(vec![
+                s[0],
+                *cout,
+                conv_out(s[2], kernel.0, stride.0, padding.0)
+                    .map_err(|e| invalid(format!("layer `{name}`: {e}")))?,
+                conv_out(s[3], kernel.1, stride.1, padding.1)
+                    .map_err(|e| invalid(format!("layer `{name}`: {e}")))?,
+            ])
+        }
+        OpKind::Pool2d { kernel, stride, padding, .. } => {
+            let s = &in_shapes[0];
+            need_4d(s)?;
+            Ok(vec![
+                s[0],
+                s[1],
+                conv_out(s[2], kernel.0, stride.0, padding.0)
+                    .map_err(|e| invalid(format!("layer `{name}`: {e}")))?,
+                conv_out(s[3], kernel.1, stride.1, padding.1)
+                    .map_err(|e| invalid(format!("layer `{name}`: {e}")))?,
+            ])
+        }
+        OpKind::FullyConnected { cout } => {
+            let s = &in_shapes[0];
+            if s.len() < 2 {
+                return Err(invalid(format!(
+                    "layer `{name}` (fc) needs a rank >= 2 input, got {s:?}"
+                )));
+            }
+            if *cout == 0 {
+                return Err(invalid(format!("layer `{name}`: fc cout must be at least 1")));
+            }
+            Ok(vec![s[0], *cout])
+        }
+        OpKind::Softmax => {
+            let s = &in_shapes[0];
+            if s.len() != 2 {
+                return Err(invalid(format!(
+                    "layer `{name}` (softmax) expects a 2-D input, got {s:?}"
+                )));
+            }
+            Ok(s.clone())
+        }
+        OpKind::Concat => {
+            let first = &in_shapes[0];
+            need_4d(first)?;
+            let mut c = 0usize;
+            for s in in_shapes {
+                need_4d(s)?;
+                if (s[0], s[2], s[3]) != (first[0], first[2], first[3]) {
+                    return Err(invalid(format!(
+                        "layer `{name}`: concat NHW mismatch ({s:?} vs {first:?})"
+                    )));
+                }
+                c += s[1];
+            }
+            Ok(vec![first[0], c, first[2], first[3]])
+        }
+        OpKind::Add => {
+            if in_shapes[0] != in_shapes[1] {
+                return Err(invalid(format!(
+                    "layer `{name}`: add shape mismatch ({:?} vs {:?})",
+                    in_shapes[0], in_shapes[1]
+                )));
+            }
+            Ok(in_shapes[0].clone())
+        }
+    }
+}
+
 /// A computation graph: layers plus directed tensor edges.
 #[derive(Debug, Clone)]
 pub struct CompGraph {
     pub name: String,
     pub layers: Vec<Layer>,
     pub edges: Vec<(LayerId, LayerId)>,
+    /// Lazily computed structural digest (see [`CompGraph::digest`]).
+    digest: std::sync::OnceLock<GraphDigest>,
 }
 
 impl CompGraph {
+    /// Assemble a graph from parts and validate it — the only way to
+    /// construct a `CompGraph` outside this module, so every live graph
+    /// has passed [`CompGraph::validate`].
+    pub fn new(
+        name: String,
+        layers: Vec<Layer>,
+        edges: Vec<(LayerId, LayerId)>,
+    ) -> Result<CompGraph> {
+        let g = CompGraph { name, layers, edges, digest: std::sync::OnceLock::new() };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Re-validate and rebuild, resetting the cached digest. Used when
+    /// taking ownership of a graph that may have been mutated after its
+    /// digest was computed (`layers`/`edges` are `pub`), so a stale
+    /// digest can never alias another graph's cache entries.
+    pub fn revalidated(self) -> Result<CompGraph> {
+        CompGraph::new(self.name, self.layers, self.edges)
+    }
+
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
@@ -186,54 +369,156 @@ impl CompGraph {
         self.layers.iter().map(|l| l.train_flops()).sum()
     }
 
-    /// Validate structural invariants (shapes on edges agree, DAG order,
-    /// single input, no dangling edges). Panics with a diagnostic on
-    /// violation; used by builder tests.
-    pub fn check(&self) {
-        assert!(!self.layers.is_empty());
-        assert!(matches!(self.layers[0].op, OpKind::Input), "layer 0 must be Input");
+    /// The graph's global batch size (the sample extent of its input).
+    pub fn batch(&self) -> usize {
+        self.layers[0].out_shape[0]
+    }
+
+    /// Validate every structural invariant the planner, cost model,
+    /// simulator, and executor rely on: a single `Input` at id 0, dense
+    /// topologically-ordered ids, in-range forward edges (which also
+    /// rules out cycles), in-degrees matching declared input shapes,
+    /// edge shapes agreeing with their producers, and every layer's
+    /// output shape matching what its operator infers from its inputs.
+    ///
+    /// Formerly a panicking `check()`; now the typed choke point between
+    /// untrusted graph sources (wire specs, `--network-file`) and the
+    /// rest of the crate.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(invalid("graph has no layers".into()));
+        }
+        if !matches!(self.layers[0].op, OpKind::Input) {
+            return Err(invalid("layer 0 must be the graph input".into()));
+        }
         for (i, l) in self.layers.iter().enumerate() {
-            assert_eq!(l.id, i, "layer ids must be dense");
+            if l.id != i {
+                return Err(invalid(format!(
+                    "layer ids must be dense: layer at position {i} carries id {}",
+                    l.id
+                )));
+            }
+            if i > 0 && matches!(l.op, OpKind::Input) {
+                return Err(invalid(format!(
+                    "layer `{}` ({i}) is a second input; graphs have exactly one",
+                    l.name
+                )));
+            }
         }
         for &(s, d) in &self.edges {
-            assert!(s < self.layers.len() && d < self.layers.len(), "dangling edge ({s},{d})");
-            assert!(s < d, "edges must go forward in topological id order: ({s},{d})");
+            if s >= self.layers.len() || d >= self.layers.len() {
+                return Err(invalid(format!("dangling edge ({s}, {d})")));
+            }
+            if s >= d {
+                return Err(invalid(format!(
+                    "edges must go forward in topological id order: ({s}, {d})"
+                )));
+            }
+        }
+        {
+            let input = &self.layers[0];
+            if !matches!(input.out_shape.len(), 2 | 4) {
+                return Err(invalid(format!(
+                    "input shape must be [N, C] or [N, C, H, W], got {:?}",
+                    input.out_shape
+                )));
+            }
+            if input.out_shape.iter().any(|&d| d == 0) {
+                return Err(invalid(format!(
+                    "input shape has a zero extent: {:?}",
+                    input.out_shape
+                )));
+            }
         }
         for l in &self.layers {
             let preds = self.predecessors(l.id);
-            assert_eq!(
-                preds.len(),
-                l.in_shapes.len(),
-                "layer {} ({}) in-degree mismatch",
-                l.name,
-                l.id
-            );
+            if preds.len() != l.in_shapes.len() {
+                return Err(invalid(format!(
+                    "layer `{}` ({}) has {} in-edge(s) but {} declared input shape(s)",
+                    l.name,
+                    l.id,
+                    preds.len(),
+                    l.in_shapes.len()
+                )));
+            }
             for (k, p) in preds.iter().enumerate() {
-                assert_eq!(
-                    self.layers[*p].out_shape, l.in_shapes[k],
-                    "shape mismatch on edge {}->{}",
-                    self.layers[*p].name, l.name
-                );
+                if preds[..k].contains(p) {
+                    // `CostModel::edge_in_idx` resolves producers by id,
+                    // so duplicate edges would silently alias one input
+                    // slot — reject rather than mis-plan
+                    return Err(invalid(format!(
+                        "layer `{}` ({}) lists input {p} more than once",
+                        l.name, l.id
+                    )));
+                }
+                if self.layers[*p].out_shape != l.in_shapes[k] {
+                    return Err(invalid(format!(
+                        "shape mismatch on edge {} -> {}: {:?} vs {:?}",
+                        self.layers[*p].name, l.name, self.layers[*p].out_shape, l.in_shapes[k]
+                    )));
+                }
+            }
+            if !matches!(l.op, OpKind::Input) {
+                let want = infer_out_shape(&l.name, &l.op, &l.in_shapes)?;
+                if want != l.out_shape {
+                    return Err(invalid(format!(
+                        "layer `{}` ({}) declares shape {:?} but its operator produces {:?}",
+                        l.name,
+                        l.op.mnemonic(),
+                        l.out_shape,
+                        want
+                    )));
+                }
+            }
+            // `Layer::param_count` multiplies unchecked; prove here that
+            // the product fits so spec-reachable sizes can never wrap
+            let params_fit = match &l.op {
+                OpKind::Conv2d { cout, kernel, .. } => l.in_shapes[0][1]
+                    .checked_mul(*cout)
+                    .and_then(|x| x.checked_mul(kernel.0))
+                    .and_then(|x| x.checked_mul(kernel.1))
+                    .and_then(|x| x.checked_add(*cout))
+                    .is_some(),
+                OpKind::FullyConnected { cout } => l.in_shapes[0][1..]
+                    .iter()
+                    .try_fold(*cout, |x, &d| x.checked_mul(d))
+                    .and_then(|x| x.checked_add(*cout))
+                    .is_some(),
+                _ => true,
+            };
+            if !params_fit {
+                return Err(invalid(format!(
+                    "layer `{}` ({}): parameter count overflows",
+                    l.name, l.id
+                )));
             }
         }
+        Ok(())
     }
 }
 
 /// Incremental graph builder with shape inference.
+///
+/// Every method is fallible: malformed wiring (unknown layer ids, shape
+/// mismatches, degenerate windows) returns [`OptError::InvalidGraph`]
+/// instead of panicking, so builders can run over untrusted descriptions.
 pub struct GraphBuilder {
     name: String,
     layers: Vec<Layer>,
     edges: Vec<(LayerId, LayerId)>,
 }
 
-fn conv_out(hw: usize, k: usize, s: usize, p: usize) -> usize {
-    assert!(hw + 2 * p >= k, "kernel {k} larger than padded extent {}", hw + 2 * p);
-    (hw + 2 * p - k) / s + 1
-}
-
 impl GraphBuilder {
     pub fn new(name: &str) -> GraphBuilder {
         GraphBuilder { name: name.to_string(), layers: Vec::new(), edges: Vec::new() }
+    }
+
+    /// The declared output shape of `id`, or an error naming the bad id.
+    fn shape_of(&self, id: LayerId) -> Result<&Vec<usize>> {
+        self.layers
+            .get(id)
+            .map(|l| &l.out_shape)
+            .ok_or_else(|| invalid(format!("unknown layer id {id} ({} built)", self.layers.len())))
     }
 
     fn push(
@@ -244,7 +529,8 @@ impl GraphBuilder {
         out_shape: Vec<usize>,
     ) -> LayerId {
         let id = self.layers.len();
-        let in_shapes = inputs.iter().map(|&i| self.layers[i].out_shape.clone()).collect();
+        let in_shapes =
+            inputs.iter().map(|&i| self.layers[i].out_shape.clone()).collect();
         for &i in inputs {
             self.edges.push((i, id));
         }
@@ -252,10 +538,32 @@ impl GraphBuilder {
         id
     }
 
+    /// Infer the output shape of `op` over `inputs` and append the layer.
+    fn infer_push(&mut self, name: &str, op: OpKind, inputs: &[LayerId]) -> Result<LayerId> {
+        if self.layers.is_empty() {
+            return Err(invalid(format!(
+                "layer `{name}` added before the graph input"
+            )));
+        }
+        let mut in_shapes = Vec::with_capacity(inputs.len());
+        for &i in inputs {
+            in_shapes.push(self.shape_of(i)?.clone());
+        }
+        let out = infer_out_shape(name, &op, &in_shapes)?;
+        Ok(self.push(name.into(), op, inputs, out))
+    }
+
     /// The graph input: `[n, c, h, w]` images.
-    pub fn input(&mut self, n: usize, c: usize, h: usize, w: usize) -> LayerId {
-        assert!(self.layers.is_empty(), "input must be the first layer");
-        self.push("input".into(), OpKind::Input, &[], vec![n, c, h, w])
+    pub fn input(&mut self, n: usize, c: usize, h: usize, w: usize) -> Result<LayerId> {
+        if !self.layers.is_empty() {
+            return Err(invalid("input must be the first layer".into()));
+        }
+        if n == 0 || c == 0 || h == 0 || w == 0 {
+            return Err(invalid(format!(
+                "input shape [{n}, {c}, {h}, {w}] has a zero extent"
+            )));
+        }
+        Ok(self.push("input".into(), OpKind::Input, &[], vec![n, c, h, w]))
     }
 
     pub fn conv2d(
@@ -266,16 +574,8 @@ impl GraphBuilder {
         kernel: (usize, usize),
         stride: (usize, usize),
         padding: (usize, usize),
-    ) -> LayerId {
-        let s = self.layers[input].out_shape.clone();
-        assert_eq!(s.len(), 4, "conv2d needs a 4-D input, got {:?}", s);
-        let out = vec![
-            s[0],
-            cout,
-            conv_out(s[2], kernel.0, stride.0, padding.0),
-            conv_out(s[3], kernel.1, stride.1, padding.1),
-        ];
-        self.push(name.into(), OpKind::Conv2d { cout, kernel, stride, padding }, &[input], out)
+    ) -> Result<LayerId> {
+        self.infer_push(name, OpKind::Conv2d { cout, kernel, stride, padding }, &[input])
     }
 
     pub fn pool2d(
@@ -286,56 +586,30 @@ impl GraphBuilder {
         kernel: (usize, usize),
         stride: (usize, usize),
         padding: (usize, usize),
-    ) -> LayerId {
-        let s = self.layers[input].out_shape.clone();
-        assert_eq!(s.len(), 4, "pool2d needs a 4-D input, got {:?}", s);
-        let out = vec![
-            s[0],
-            s[1],
-            conv_out(s[2], kernel.0, stride.0, padding.0),
-            conv_out(s[3], kernel.1, stride.1, padding.1),
-        ];
-        self.push(name.into(), OpKind::Pool2d { kind, kernel, stride, padding }, &[input], out)
+    ) -> Result<LayerId> {
+        self.infer_push(name, OpKind::Pool2d { kind, kernel, stride, padding }, &[input])
     }
 
-    pub fn fully_connected(&mut self, name: &str, input: LayerId, cout: usize) -> LayerId {
-        let s = self.layers[input].out_shape.clone();
-        let out = vec![s[0], cout];
-        self.push(name.into(), OpKind::FullyConnected { cout }, &[input], out)
+    pub fn fully_connected(&mut self, name: &str, input: LayerId, cout: usize) -> Result<LayerId> {
+        self.infer_push(name, OpKind::FullyConnected { cout }, &[input])
     }
 
-    pub fn softmax(&mut self, name: &str, input: LayerId) -> LayerId {
-        let s = self.layers[input].out_shape.clone();
-        assert_eq!(s.len(), 2, "softmax expects a 2-D input, got {:?}", s);
-        self.push(name.into(), OpKind::Softmax, &[input], s)
+    pub fn softmax(&mut self, name: &str, input: LayerId) -> Result<LayerId> {
+        self.infer_push(name, OpKind::Softmax, &[input])
     }
 
     /// Channel concatenation of 4-D activations with equal N/H/W.
-    pub fn concat(&mut self, name: &str, inputs: &[LayerId]) -> LayerId {
-        assert!(inputs.len() >= 2);
-        let first = self.layers[inputs[0]].out_shape.clone();
-        let mut c = 0;
-        for &i in inputs {
-            let s = &self.layers[i].out_shape;
-            assert_eq!(s.len(), 4);
-            assert_eq!((s[0], s[2], s[3]), (first[0], first[2], first[3]), "concat NHW mismatch");
-            c += s[1];
-        }
-        let out = vec![first[0], c, first[2], first[3]];
-        self.push(name.into(), OpKind::Concat, inputs, out)
+    pub fn concat(&mut self, name: &str, inputs: &[LayerId]) -> Result<LayerId> {
+        self.infer_push(name, OpKind::Concat, inputs)
     }
 
     /// Element-wise residual addition; shapes must match exactly.
-    pub fn add(&mut self, name: &str, a: LayerId, b: LayerId) -> LayerId {
-        let sa = self.layers[a].out_shape.clone();
-        assert_eq!(sa, self.layers[b].out_shape, "add shape mismatch");
-        self.push(name.into(), OpKind::Add, &[a, b], sa)
+    pub fn add(&mut self, name: &str, a: LayerId, b: LayerId) -> Result<LayerId> {
+        self.infer_push(name, OpKind::Add, &[a, b])
     }
 
-    pub fn finish(self) -> CompGraph {
-        let g = CompGraph { name: self.name, layers: self.layers, edges: self.edges };
-        g.check();
-        g
+    pub fn finish(self) -> Result<CompGraph> {
+        CompGraph::new(self.name, self.layers, self.edges)
     }
 }
 
@@ -345,12 +619,12 @@ mod tests {
 
     fn tiny(n: usize) -> CompGraph {
         let mut b = GraphBuilder::new("tiny");
-        let x = b.input(n, 3, 8, 8);
-        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), (1, 1));
-        let p1 = b.pool2d("p1", c1, PoolKind::Max, (2, 2), (2, 2), (0, 0));
-        let f1 = b.fully_connected("f1", p1, 10);
-        b.softmax("sm", f1);
-        b.finish()
+        let x = b.input(n, 3, 8, 8).unwrap();
+        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), (1, 1)).unwrap();
+        let p1 = b.pool2d("p1", c1, PoolKind::Max, (2, 2), (2, 2), (0, 0)).unwrap();
+        let f1 = b.fully_connected("f1", p1, 10).unwrap();
+        b.softmax("sm", f1).unwrap();
+        b.finish().unwrap()
     }
 
     #[test]
@@ -360,6 +634,7 @@ mod tests {
         assert_eq!(g.layer(2).out_shape, vec![2, 4, 4, 4]); // 2x2/2 pool
         assert_eq!(g.layer(3).out_shape, vec![2, 10]);
         assert_eq!(g.layer(4).out_shape, vec![2, 10]);
+        assert_eq!(g.batch(), 2);
     }
 
     #[test]
@@ -388,16 +663,16 @@ mod tests {
     #[test]
     fn concat_and_add_shapes() {
         let mut b = GraphBuilder::new("branchy");
-        let x = b.input(1, 8, 4, 4);
-        let a = b.conv2d("a", x, 8, (1, 1), (1, 1), (0, 0));
-        let c = b.conv2d("c", x, 16, (1, 1), (1, 1), (0, 0));
-        let cat = b.concat("cat", &[a, c]);
-        let d = b.conv2d("d", cat, 8, (1, 1), (1, 1), (0, 0));
-        let res = b.add("res", a, d);
+        let x = b.input(1, 8, 4, 4).unwrap();
+        let a = b.conv2d("a", x, 8, (1, 1), (1, 1), (0, 0)).unwrap();
+        let c = b.conv2d("c", x, 16, (1, 1), (1, 1), (0, 0)).unwrap();
+        let cat = b.concat("cat", &[a, c]).unwrap();
+        let d = b.conv2d("d", cat, 8, (1, 1), (1, 1), (0, 0)).unwrap();
+        let res = b.add("res", a, d).unwrap();
         let g = {
-            let f = b.fully_connected("f", res, 10);
-            b.softmax("sm", f);
-            b.finish()
+            let f = b.fully_connected("f", res, 10).unwrap();
+            b.softmax("sm", f).unwrap();
+            b.finish().unwrap()
         };
         assert_eq!(g.layer(cat).out_shape, vec![1, 24, 4, 4]);
         assert_eq!(g.layer(res).out_shape, vec![1, 8, 4, 4]);
@@ -406,16 +681,65 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn mismatched_add_panics() {
+    fn mismatched_add_is_an_error_not_a_panic() {
         let mut b = GraphBuilder::new("bad");
-        let x = b.input(1, 3, 4, 4);
-        let a = b.conv2d("a", x, 4, (1, 1), (1, 1), (0, 0));
-        b.add("bad", x, a);
+        let x = b.input(1, 3, 4, 4).unwrap();
+        let a = b.conv2d("a", x, 4, (1, 1), (1, 1), (0, 0)).unwrap();
+        let err = b.add("bad", x, a).unwrap_err();
+        assert!(matches!(err, OptError::InvalidGraph(_)), "{err:?}");
+        assert!(err.to_string().contains("add shape mismatch"), "{err}");
     }
 
     #[test]
-    fn graph_check_passes_on_builders() {
-        tiny(32).check();
+    fn degenerate_windows_are_errors() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input(1, 3, 4, 4).unwrap();
+        // kernel larger than the padded extent
+        let err = b.conv2d("huge", x, 4, (9, 9), (1, 1), (0, 0)).unwrap_err();
+        assert!(err.to_string().contains("padded extent"), "{err}");
+        // zero stride would otherwise divide by zero
+        let err = b.conv2d("still", x, 4, (1, 1), (0, 1), (0, 0)).unwrap_err();
+        assert!(matches!(err, OptError::InvalidGraph(_)), "{err:?}");
+        // zero-channel conv
+        assert!(b.conv2d("empty", x, 0, (1, 1), (1, 1), (0, 0)).is_err());
+        // the builder is still usable after rejected layers
+        let c = b.conv2d("ok", x, 4, (3, 3), (1, 1), (1, 1)).unwrap();
+        assert_eq!(b.layers[c].out_shape, vec![1, 4, 4, 4]);
+    }
+
+    #[test]
+    fn bad_wiring_is_an_error() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input(1, 3, 4, 4).unwrap();
+        assert!(b.conv2d("dangling", 99, 4, (1, 1), (1, 1), (0, 0)).is_err());
+        assert!(b.input(1, 3, 4, 4).is_err(), "second input must be rejected");
+        assert!(b.softmax("sm4d", x).is_err(), "softmax on 4-D input");
+        assert!(b.concat("one", &[x]).is_err(), "concat needs >= 2 inputs");
+    }
+
+    #[test]
+    fn graph_validate_passes_on_builders() {
+        tiny(32).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_corrupted_graphs() {
+        let good = tiny(2);
+        // backward edge (a cycle, expressed against topological order)
+        let mut bad = good.clone();
+        bad.edges.push((3, 1));
+        assert!(matches!(bad.validate(), Err(OptError::InvalidGraph(_))));
+        // dangling edge
+        let mut bad = good.clone();
+        bad.edges.push((1, 99));
+        assert!(bad.validate().unwrap_err().to_string().contains("dangling"));
+        // declared shape disagreeing with the operator
+        let mut bad = good.clone();
+        bad.layers[1].out_shape = vec![2, 5, 8, 8];
+        assert!(matches!(bad.validate(), Err(OptError::InvalidGraph(_))));
+        // non-dense ids
+        let mut bad = good;
+        bad.layers[2].id = 7;
+        assert!(bad.validate().unwrap_err().to_string().contains("dense"));
     }
 }

@@ -3,162 +3,171 @@
 //! Shapes follow the original publications; activation layers are folded
 //! into the producing conv/fc (see module docs). All builders take the
 //! **global** batch size (the paper uses per-GPU batch 32, so global batch
-//! = 32 x #devices).
+//! = 32 x #devices) and return `Result` through the fallible
+//! [`GraphBuilder`] API — a builtin with a positive batch cannot actually
+//! fail, but the builders compose with untrusted graph sources behind one
+//! error type instead of panicking.
 
 use super::{CompGraph, GraphBuilder, LayerId, PoolKind};
+use crate::error::{OptError, Result};
 
 /// LeNet-5 (LeCun et al.): 32x32x1 input, two conv/pool stages, three FCs.
-pub fn lenet5(batch: usize) -> CompGraph {
+pub fn lenet5(batch: usize) -> Result<CompGraph> {
     let mut b = GraphBuilder::new("lenet5");
-    let x = b.input(batch, 1, 32, 32);
-    let c1 = b.conv2d("conv1", x, 6, (5, 5), (1, 1), (0, 0));
-    let p1 = b.pool2d("pool1", c1, PoolKind::Avg, (2, 2), (2, 2), (0, 0));
-    let c2 = b.conv2d("conv2", p1, 16, (5, 5), (1, 1), (0, 0));
-    let p2 = b.pool2d("pool2", c2, PoolKind::Avg, (2, 2), (2, 2), (0, 0));
-    let f1 = b.fully_connected("fc3", p2, 120);
-    let f2 = b.fully_connected("fc4", f1, 84);
-    let f3 = b.fully_connected("fc5", f2, 10);
-    b.softmax("softmax", f3);
+    let x = b.input(batch, 1, 32, 32)?;
+    let c1 = b.conv2d("conv1", x, 6, (5, 5), (1, 1), (0, 0))?;
+    let p1 = b.pool2d("pool1", c1, PoolKind::Avg, (2, 2), (2, 2), (0, 0))?;
+    let c2 = b.conv2d("conv2", p1, 16, (5, 5), (1, 1), (0, 0))?;
+    let p2 = b.pool2d("pool2", c2, PoolKind::Avg, (2, 2), (2, 2), (0, 0))?;
+    let f1 = b.fully_connected("fc3", p2, 120)?;
+    let f2 = b.fully_connected("fc4", f1, 84)?;
+    let f3 = b.fully_connected("fc5", f2, 10)?;
+    b.softmax("softmax", f3)?;
     b.finish()
 }
 
 /// AlexNet (Krizhevsky et al. 2012), single-tower variant.
-pub fn alexnet(batch: usize) -> CompGraph {
+pub fn alexnet(batch: usize) -> Result<CompGraph> {
     let mut b = GraphBuilder::new("alexnet");
-    let x = b.input(batch, 3, 224, 224);
-    let c1 = b.conv2d("conv1", x, 96, (11, 11), (4, 4), (2, 2));
-    let p1 = b.pool2d("pool1", c1, PoolKind::Max, (3, 3), (2, 2), (0, 0));
-    let c2 = b.conv2d("conv2", p1, 256, (5, 5), (1, 1), (2, 2));
-    let p2 = b.pool2d("pool2", c2, PoolKind::Max, (3, 3), (2, 2), (0, 0));
-    let c3 = b.conv2d("conv3", p2, 384, (3, 3), (1, 1), (1, 1));
-    let c4 = b.conv2d("conv4", c3, 384, (3, 3), (1, 1), (1, 1));
-    let c5 = b.conv2d("conv5", c4, 256, (3, 3), (1, 1), (1, 1));
-    let p5 = b.pool2d("pool5", c5, PoolKind::Max, (3, 3), (2, 2), (0, 0));
-    let f6 = b.fully_connected("fc6", p5, 4096);
-    let f7 = b.fully_connected("fc7", f6, 4096);
-    let f8 = b.fully_connected("fc8", f7, 1000);
-    b.softmax("softmax", f8);
+    let x = b.input(batch, 3, 224, 224)?;
+    let c1 = b.conv2d("conv1", x, 96, (11, 11), (4, 4), (2, 2))?;
+    let p1 = b.pool2d("pool1", c1, PoolKind::Max, (3, 3), (2, 2), (0, 0))?;
+    let c2 = b.conv2d("conv2", p1, 256, (5, 5), (1, 1), (2, 2))?;
+    let p2 = b.pool2d("pool2", c2, PoolKind::Max, (3, 3), (2, 2), (0, 0))?;
+    let c3 = b.conv2d("conv3", p2, 384, (3, 3), (1, 1), (1, 1))?;
+    let c4 = b.conv2d("conv4", c3, 384, (3, 3), (1, 1), (1, 1))?;
+    let c5 = b.conv2d("conv5", c4, 256, (3, 3), (1, 1), (1, 1))?;
+    let p5 = b.pool2d("pool5", c5, PoolKind::Max, (3, 3), (2, 2), (0, 0))?;
+    let f6 = b.fully_connected("fc6", p5, 4096)?;
+    let f7 = b.fully_connected("fc7", f6, 4096)?;
+    let f8 = b.fully_connected("fc8", f7, 1000)?;
+    b.softmax("softmax", f8)?;
     b.finish()
 }
 
 /// VGG-16 configuration D (Simonyan & Zisserman 2014).
-pub fn vgg16(batch: usize) -> CompGraph {
+pub fn vgg16(batch: usize) -> Result<CompGraph> {
     let mut b = GraphBuilder::new("vgg16");
-    let x = b.input(batch, 3, 224, 224);
+    let x = b.input(batch, 3, 224, 224)?;
     let mut cur = x;
     let mut idx = 0usize;
     let stages: [(usize, usize); 5] = [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
     for (si, &(reps, ch)) in stages.iter().enumerate() {
         for _ in 0..reps {
             idx += 1;
-            cur = b.conv2d(&format!("conv{}", idx), cur, ch, (3, 3), (1, 1), (1, 1));
+            cur = b.conv2d(&format!("conv{}", idx), cur, ch, (3, 3), (1, 1), (1, 1))?;
         }
-        cur = b.pool2d(&format!("pool{}", si + 1), cur, PoolKind::Max, (2, 2), (2, 2), (0, 0));
+        cur = b.pool2d(&format!("pool{}", si + 1), cur, PoolKind::Max, (2, 2), (2, 2), (0, 0))?;
     }
-    let f1 = b.fully_connected("fc6", cur, 4096);
-    let f2 = b.fully_connected("fc7", f1, 4096);
-    let f3 = b.fully_connected("fc8", f2, 1000);
-    b.softmax("softmax", f3);
+    let f1 = b.fully_connected("fc6", cur, 4096)?;
+    let f2 = b.fully_connected("fc7", f1, 4096)?;
+    let f3 = b.fully_connected("fc8", f2, 1000)?;
+    b.softmax("softmax", f3)?;
     b.finish()
 }
 
 /// Inception-v3 (Szegedy et al. 2016), BN folded into convs.
-pub fn inception_v3(batch: usize) -> CompGraph {
+pub fn inception_v3(batch: usize) -> Result<CompGraph> {
     let mut b = GraphBuilder::new("inception_v3");
-    let x = b.input(batch, 3, 299, 299);
+    let x = b.input(batch, 3, 299, 299)?;
     // Stem
-    let c = b.conv2d("stem_conv1", x, 32, (3, 3), (2, 2), (0, 0));
-    let c = b.conv2d("stem_conv2", c, 32, (3, 3), (1, 1), (0, 0));
-    let c = b.conv2d("stem_conv3", c, 64, (3, 3), (1, 1), (1, 1));
-    let c = b.pool2d("stem_pool1", c, PoolKind::Max, (3, 3), (2, 2), (0, 0));
-    let c = b.conv2d("stem_conv4", c, 80, (1, 1), (1, 1), (0, 0));
-    let c = b.conv2d("stem_conv5", c, 192, (3, 3), (1, 1), (0, 0));
-    let mut cur = b.pool2d("stem_pool2", c, PoolKind::Max, (3, 3), (2, 2), (0, 0));
+    let c = b.conv2d("stem_conv1", x, 32, (3, 3), (2, 2), (0, 0))?;
+    let c = b.conv2d("stem_conv2", c, 32, (3, 3), (1, 1), (0, 0))?;
+    let c = b.conv2d("stem_conv3", c, 64, (3, 3), (1, 1), (1, 1))?;
+    let c = b.pool2d("stem_pool1", c, PoolKind::Max, (3, 3), (2, 2), (0, 0))?;
+    let c = b.conv2d("stem_conv4", c, 80, (1, 1), (1, 1), (0, 0))?;
+    let c = b.conv2d("stem_conv5", c, 192, (3, 3), (1, 1), (0, 0))?;
+    let mut cur = b.pool2d("stem_pool2", c, PoolKind::Max, (3, 3), (2, 2), (0, 0))?;
 
     // Inception-A x3 (35x35)
     for (m, pool_ch) in [(0usize, 32usize), (1, 64), (2, 64)] {
         let n = |s: &str| format!("mixedA{}_{}", m, s);
-        let b1 = b.conv2d(&n("1x1"), cur, 64, (1, 1), (1, 1), (0, 0));
-        let b5 = b.conv2d(&n("5x5_r"), cur, 48, (1, 1), (1, 1), (0, 0));
-        let b5 = b.conv2d(&n("5x5"), b5, 64, (5, 5), (1, 1), (2, 2));
-        let b3 = b.conv2d(&n("3x3_r"), cur, 64, (1, 1), (1, 1), (0, 0));
-        let b3 = b.conv2d(&n("3x3a"), b3, 96, (3, 3), (1, 1), (1, 1));
-        let b3 = b.conv2d(&n("3x3b"), b3, 96, (3, 3), (1, 1), (1, 1));
-        let bp = b.pool2d(&n("pool"), cur, PoolKind::Avg, (3, 3), (1, 1), (1, 1));
-        let bp = b.conv2d(&n("pool_proj"), bp, pool_ch, (1, 1), (1, 1), (0, 0));
-        cur = b.concat(&n("concat"), &[b1, b5, b3, bp]);
+        let b1 = b.conv2d(&n("1x1"), cur, 64, (1, 1), (1, 1), (0, 0))?;
+        let b5 = b.conv2d(&n("5x5_r"), cur, 48, (1, 1), (1, 1), (0, 0))?;
+        let b5 = b.conv2d(&n("5x5"), b5, 64, (5, 5), (1, 1), (2, 2))?;
+        let b3 = b.conv2d(&n("3x3_r"), cur, 64, (1, 1), (1, 1), (0, 0))?;
+        let b3 = b.conv2d(&n("3x3a"), b3, 96, (3, 3), (1, 1), (1, 1))?;
+        let b3 = b.conv2d(&n("3x3b"), b3, 96, (3, 3), (1, 1), (1, 1))?;
+        let bp = b.pool2d(&n("pool"), cur, PoolKind::Avg, (3, 3), (1, 1), (1, 1))?;
+        let bp = b.conv2d(&n("pool_proj"), bp, pool_ch, (1, 1), (1, 1), (0, 0))?;
+        cur = b.concat(&n("concat"), &[b1, b5, b3, bp])?;
     }
 
     // Reduction-A (to 17x17)
     {
-        let b3 = b.conv2d("redA_3x3", cur, 384, (3, 3), (2, 2), (0, 0));
-        let bd = b.conv2d("redA_dbl_r", cur, 64, (1, 1), (1, 1), (0, 0));
-        let bd = b.conv2d("redA_dbl_a", bd, 96, (3, 3), (1, 1), (1, 1));
-        let bd = b.conv2d("redA_dbl_b", bd, 96, (3, 3), (2, 2), (0, 0));
-        let bp = b.pool2d("redA_pool", cur, PoolKind::Max, (3, 3), (2, 2), (0, 0));
-        cur = b.concat("redA_concat", &[b3, bd, bp]);
+        let b3 = b.conv2d("redA_3x3", cur, 384, (3, 3), (2, 2), (0, 0))?;
+        let bd = b.conv2d("redA_dbl_r", cur, 64, (1, 1), (1, 1), (0, 0))?;
+        let bd = b.conv2d("redA_dbl_a", bd, 96, (3, 3), (1, 1), (1, 1))?;
+        let bd = b.conv2d("redA_dbl_b", bd, 96, (3, 3), (2, 2), (0, 0))?;
+        let bp = b.pool2d("redA_pool", cur, PoolKind::Max, (3, 3), (2, 2), (0, 0))?;
+        cur = b.concat("redA_concat", &[b3, bd, bp])?;
     }
 
     // Inception-B x4 (17x17), factorized 7x7 convolutions
     for (m, c7) in [(0usize, 128usize), (1, 160), (2, 160), (3, 192)] {
         let n = |s: &str| format!("mixedB{}_{}", m, s);
-        let b1 = b.conv2d(&n("1x1"), cur, 192, (1, 1), (1, 1), (0, 0));
-        let b7 = b.conv2d(&n("7x7_r"), cur, c7, (1, 1), (1, 1), (0, 0));
-        let b7 = b.conv2d(&n("7x7_a"), b7, c7, (1, 7), (1, 1), (0, 3));
-        let b7 = b.conv2d(&n("7x7_b"), b7, 192, (7, 1), (1, 1), (3, 0));
-        let bd = b.conv2d(&n("dbl_r"), cur, c7, (1, 1), (1, 1), (0, 0));
-        let bd = b.conv2d(&n("dbl_a"), bd, c7, (7, 1), (1, 1), (3, 0));
-        let bd = b.conv2d(&n("dbl_b"), bd, c7, (1, 7), (1, 1), (0, 3));
-        let bd = b.conv2d(&n("dbl_c"), bd, c7, (7, 1), (1, 1), (3, 0));
-        let bd = b.conv2d(&n("dbl_d"), bd, 192, (1, 7), (1, 1), (0, 3));
-        let bp = b.pool2d(&n("pool"), cur, PoolKind::Avg, (3, 3), (1, 1), (1, 1));
-        let bp = b.conv2d(&n("pool_proj"), bp, 192, (1, 1), (1, 1), (0, 0));
-        cur = b.concat(&n("concat"), &[b1, b7, bd, bp]);
+        let b1 = b.conv2d(&n("1x1"), cur, 192, (1, 1), (1, 1), (0, 0))?;
+        let b7 = b.conv2d(&n("7x7_r"), cur, c7, (1, 1), (1, 1), (0, 0))?;
+        let b7 = b.conv2d(&n("7x7_a"), b7, c7, (1, 7), (1, 1), (0, 3))?;
+        let b7 = b.conv2d(&n("7x7_b"), b7, 192, (7, 1), (1, 1), (3, 0))?;
+        let bd = b.conv2d(&n("dbl_r"), cur, c7, (1, 1), (1, 1), (0, 0))?;
+        let bd = b.conv2d(&n("dbl_a"), bd, c7, (7, 1), (1, 1), (3, 0))?;
+        let bd = b.conv2d(&n("dbl_b"), bd, c7, (1, 7), (1, 1), (0, 3))?;
+        let bd = b.conv2d(&n("dbl_c"), bd, c7, (7, 1), (1, 1), (3, 0))?;
+        let bd = b.conv2d(&n("dbl_d"), bd, 192, (1, 7), (1, 1), (0, 3))?;
+        let bp = b.pool2d(&n("pool"), cur, PoolKind::Avg, (3, 3), (1, 1), (1, 1))?;
+        let bp = b.conv2d(&n("pool_proj"), bp, 192, (1, 1), (1, 1), (0, 0))?;
+        cur = b.concat(&n("concat"), &[b1, b7, bd, bp])?;
     }
 
     // Reduction-B (to 8x8)
     {
-        let b3 = b.conv2d("redB_3x3_r", cur, 192, (1, 1), (1, 1), (0, 0));
-        let b3 = b.conv2d("redB_3x3", b3, 320, (3, 3), (2, 2), (0, 0));
-        let b7 = b.conv2d("redB_7x7_r", cur, 192, (1, 1), (1, 1), (0, 0));
-        let b7 = b.conv2d("redB_7x7_a", b7, 192, (1, 7), (1, 1), (0, 3));
-        let b7 = b.conv2d("redB_7x7_b", b7, 192, (7, 1), (1, 1), (3, 0));
-        let b7 = b.conv2d("redB_7x7_c", b7, 192, (3, 3), (2, 2), (0, 0));
-        let bp = b.pool2d("redB_pool", cur, PoolKind::Max, (3, 3), (2, 2), (0, 0));
-        cur = b.concat("redB_concat", &[b3, b7, bp]);
+        let b3 = b.conv2d("redB_3x3_r", cur, 192, (1, 1), (1, 1), (0, 0))?;
+        let b3 = b.conv2d("redB_3x3", b3, 320, (3, 3), (2, 2), (0, 0))?;
+        let b7 = b.conv2d("redB_7x7_r", cur, 192, (1, 1), (1, 1), (0, 0))?;
+        let b7 = b.conv2d("redB_7x7_a", b7, 192, (1, 7), (1, 1), (0, 3))?;
+        let b7 = b.conv2d("redB_7x7_b", b7, 192, (7, 1), (1, 1), (3, 0))?;
+        let b7 = b.conv2d("redB_7x7_c", b7, 192, (3, 3), (2, 2), (0, 0))?;
+        let bp = b.pool2d("redB_pool", cur, PoolKind::Max, (3, 3), (2, 2), (0, 0))?;
+        cur = b.concat("redB_concat", &[b3, b7, bp])?;
     }
 
     // Inception-C x2 (8x8)
     for m in 0..2usize {
         let n = |s: &str| format!("mixedC{}_{}", m, s);
-        let b1 = b.conv2d(&n("1x1"), cur, 320, (1, 1), (1, 1), (0, 0));
-        let b3 = b.conv2d(&n("3x3_r"), cur, 384, (1, 1), (1, 1), (0, 0));
-        let b3a = b.conv2d(&n("3x3_wa"), b3, 384, (1, 3), (1, 1), (0, 1));
-        let b3b = b.conv2d(&n("3x3_wb"), b3, 384, (3, 1), (1, 1), (1, 0));
-        let bd = b.conv2d(&n("dbl_r"), cur, 448, (1, 1), (1, 1), (0, 0));
-        let bd = b.conv2d(&n("dbl_3"), bd, 384, (3, 3), (1, 1), (1, 1));
-        let bda = b.conv2d(&n("dbl_wa"), bd, 384, (1, 3), (1, 1), (0, 1));
-        let bdb = b.conv2d(&n("dbl_wb"), bd, 384, (3, 1), (1, 1), (1, 0));
-        let bp = b.pool2d(&n("pool"), cur, PoolKind::Avg, (3, 3), (1, 1), (1, 1));
-        let bp = b.conv2d(&n("pool_proj"), bp, 192, (1, 1), (1, 1), (0, 0));
-        cur = b.concat(&n("concat"), &[b1, b3a, b3b, bda, bdb, bp]);
+        let b1 = b.conv2d(&n("1x1"), cur, 320, (1, 1), (1, 1), (0, 0))?;
+        let b3 = b.conv2d(&n("3x3_r"), cur, 384, (1, 1), (1, 1), (0, 0))?;
+        let b3a = b.conv2d(&n("3x3_wa"), b3, 384, (1, 3), (1, 1), (0, 1))?;
+        let b3b = b.conv2d(&n("3x3_wb"), b3, 384, (3, 1), (1, 1), (1, 0))?;
+        let bd = b.conv2d(&n("dbl_r"), cur, 448, (1, 1), (1, 1), (0, 0))?;
+        let bd = b.conv2d(&n("dbl_3"), bd, 384, (3, 3), (1, 1), (1, 1))?;
+        let bda = b.conv2d(&n("dbl_wa"), bd, 384, (1, 3), (1, 1), (0, 1))?;
+        let bdb = b.conv2d(&n("dbl_wb"), bd, 384, (3, 1), (1, 1), (1, 0))?;
+        let bp = b.pool2d(&n("pool"), cur, PoolKind::Avg, (3, 3), (1, 1), (1, 1))?;
+        let bp = b.conv2d(&n("pool_proj"), bp, 192, (1, 1), (1, 1), (0, 0))?;
+        cur = b.concat(&n("concat"), &[b1, b3a, b3b, bda, bdb, bp])?;
     }
 
-    let gp = b.pool2d("global_pool", cur, PoolKind::Avg, (8, 8), (1, 1), (0, 0));
-    let fc = b.fully_connected("fc", gp, 1000);
-    b.softmax("softmax", fc);
+    let gp = b.pool2d("global_pool", cur, PoolKind::Avg, (8, 8), (1, 1), (0, 0))?;
+    let fc = b.fully_connected("fc", gp, 1000)?;
+    b.softmax("softmax", fc)?;
     b.finish()
 }
 
 /// ResNet-18 (He et al. 2016) — extension network; the paper notes its
 /// graph also reduces to K=2 under node/edge elimination.
-pub fn resnet18(batch: usize) -> CompGraph {
+pub fn resnet18(batch: usize) -> Result<CompGraph> {
     let mut b = GraphBuilder::new("resnet18");
-    let x = b.input(batch, 3, 224, 224);
-    let c1 = b.conv2d("conv1", x, 64, (7, 7), (2, 2), (3, 3));
-    let mut cur = b.pool2d("pool1", c1, PoolKind::Max, (3, 3), (2, 2), (1, 1));
+    let x = b.input(batch, 3, 224, 224)?;
+    let c1 = b.conv2d("conv1", x, 64, (7, 7), (2, 2), (3, 3))?;
+    let mut cur = b.pool2d("pool1", c1, PoolKind::Max, (3, 3), (2, 2), (1, 1))?;
 
-    let block = |b: &mut GraphBuilder, cur: LayerId, name: &str, ch: usize, stride: usize| {
+    let block = |b: &mut GraphBuilder,
+                 cur: LayerId,
+                 name: &str,
+                 ch: usize,
+                 stride: usize|
+     -> Result<LayerId> {
         let c1 = b.conv2d(
             &format!("{name}_conv1"),
             cur,
@@ -166,10 +175,10 @@ pub fn resnet18(batch: usize) -> CompGraph {
             (3, 3),
             (stride, stride),
             (1, 1),
-        );
-        let c2 = b.conv2d(&format!("{name}_conv2"), c1, ch, (3, 3), (1, 1), (1, 1));
+        )?;
+        let c2 = b.conv2d(&format!("{name}_conv2"), c1, ch, (3, 3), (1, 1), (1, 1))?;
         let short = if stride != 1 {
-            b.conv2d(&format!("{name}_down"), cur, ch, (1, 1), (stride, stride), (0, 0))
+            b.conv2d(&format!("{name}_down"), cur, ch, (1, 1), (stride, stride), (0, 0))?
         } else {
             cur
         };
@@ -180,37 +189,42 @@ pub fn resnet18(batch: usize) -> CompGraph {
         .iter()
         .enumerate()
     {
-        cur = block(&mut b, cur, &format!("s{}b1", si + 1), ch, first_stride);
-        cur = block(&mut b, cur, &format!("s{}b2", si + 1), ch, 1);
+        cur = block(&mut b, cur, &format!("s{}b1", si + 1), ch, first_stride)?;
+        cur = block(&mut b, cur, &format!("s{}b2", si + 1), ch, 1)?;
     }
 
-    let gp = b.pool2d("global_pool", cur, PoolKind::Avg, (7, 7), (1, 1), (0, 0));
-    let fc = b.fully_connected("fc", gp, 1000);
-    b.softmax("softmax", fc);
+    let gp = b.pool2d("global_pool", cur, PoolKind::Avg, (7, 7), (1, 1), (0, 0))?;
+    let fc = b.fully_connected("fc", gp, 1000)?;
+    b.softmax("softmax", fc)?;
     b.finish()
 }
 
 /// ResNet-50 (He et al. 2016), bottleneck blocks — stresses the
 /// eliminator with deeper residual structure than ResNet-18.
-pub fn resnet50(batch: usize) -> CompGraph {
+pub fn resnet50(batch: usize) -> Result<CompGraph> {
     let mut b = GraphBuilder::new("resnet50");
-    let x = b.input(batch, 3, 224, 224);
-    let c1 = b.conv2d("conv1", x, 64, (7, 7), (2, 2), (3, 3));
-    let mut cur = b.pool2d("pool1", c1, PoolKind::Max, (3, 3), (2, 2), (1, 1));
+    let x = b.input(batch, 3, 224, 224)?;
+    let c1 = b.conv2d("conv1", x, 64, (7, 7), (2, 2), (3, 3))?;
+    let mut cur = b.pool2d("pool1", c1, PoolKind::Max, (3, 3), (2, 2), (1, 1))?;
 
-    let bottleneck =
-        |b: &mut GraphBuilder, cur: LayerId, name: &str, mid: usize, stride: usize, project: bool| {
-            let out_ch = mid * 4;
-            let c1 = b.conv2d(&format!("{name}_c1"), cur, mid, (1, 1), (stride, stride), (0, 0));
-            let c2 = b.conv2d(&format!("{name}_c2"), c1, mid, (3, 3), (1, 1), (1, 1));
-            let c3 = b.conv2d(&format!("{name}_c3"), c2, out_ch, (1, 1), (1, 1), (0, 0));
-            let short = if project {
-                b.conv2d(&format!("{name}_proj"), cur, out_ch, (1, 1), (stride, stride), (0, 0))
-            } else {
-                cur
-            };
-            b.add(&format!("{name}_add"), short, c3)
+    let bottleneck = |b: &mut GraphBuilder,
+                      cur: LayerId,
+                      name: &str,
+                      mid: usize,
+                      stride: usize,
+                      project: bool|
+     -> Result<LayerId> {
+        let out_ch = mid * 4;
+        let c1 = b.conv2d(&format!("{name}_c1"), cur, mid, (1, 1), (stride, stride), (0, 0))?;
+        let c2 = b.conv2d(&format!("{name}_c2"), c1, mid, (3, 3), (1, 1), (1, 1))?;
+        let c3 = b.conv2d(&format!("{name}_c3"), c2, out_ch, (1, 1), (1, 1), (0, 0))?;
+        let short = if project {
+            b.conv2d(&format!("{name}_proj"), cur, out_ch, (1, 1), (stride, stride), (0, 0))?
+        } else {
+            cur
         };
+        b.add(&format!("{name}_add"), short, c3)
+    };
 
     for (si, &(mid, reps, first_stride)) in
         [(64usize, 3usize, 1usize), (128, 4, 2), (256, 6, 2), (512, 3, 2)].iter().enumerate()
@@ -218,43 +232,45 @@ pub fn resnet50(batch: usize) -> CompGraph {
         for r in 0..reps {
             let stride = if r == 0 { first_stride } else { 1 };
             let project = r == 0;
-            cur = bottleneck(&mut b, cur, &format!("s{}b{}", si + 1, r + 1), mid, stride, project);
+            cur =
+                bottleneck(&mut b, cur, &format!("s{}b{}", si + 1, r + 1), mid, stride, project)?;
         }
     }
 
-    let gp = b.pool2d("global_pool", cur, PoolKind::Avg, (7, 7), (1, 1), (0, 0));
-    let fc = b.fully_connected("fc", gp, 1000);
-    b.softmax("softmax", fc);
+    let gp = b.pool2d("global_pool", cur, PoolKind::Avg, (7, 7), (1, 1), (0, 0))?;
+    let fc = b.fully_connected("fc", gp, 1000)?;
+    b.softmax("softmax", fc)?;
     b.finish()
 }
 
 /// MiniCNN: the end-to-end training demo network (32x32x3 input). Small
 /// enough that every shard shape reachable on <=4 devices can be AOT
 /// compiled and executed through the interpret-mode Pallas kernels.
-pub fn minicnn(batch: usize) -> CompGraph {
+pub fn minicnn(batch: usize) -> Result<CompGraph> {
     let mut b = GraphBuilder::new("minicnn");
-    let x = b.input(batch, 3, 32, 32);
-    let c1 = b.conv2d("conv1", x, 8, (3, 3), (1, 1), (1, 1));
-    let p1 = b.pool2d("pool1", c1, PoolKind::Max, (2, 2), (2, 2), (0, 0));
-    let c2 = b.conv2d("conv2", p1, 16, (3, 3), (1, 1), (1, 1));
-    let p2 = b.pool2d("pool2", c2, PoolKind::Max, (2, 2), (2, 2), (0, 0));
-    let f1 = b.fully_connected("fc1", p2, 64);
-    let f2 = b.fully_connected("fc2", f1, 10);
-    b.softmax("softmax", f2);
+    let x = b.input(batch, 3, 32, 32)?;
+    let c1 = b.conv2d("conv1", x, 8, (3, 3), (1, 1), (1, 1))?;
+    let p1 = b.pool2d("pool1", c1, PoolKind::Max, (2, 2), (2, 2), (0, 0))?;
+    let c2 = b.conv2d("conv2", p1, 16, (3, 3), (1, 1), (1, 1))?;
+    let p2 = b.pool2d("pool2", c2, PoolKind::Max, (2, 2), (2, 2), (0, 0))?;
+    let f1 = b.fully_connected("fc1", p2, 64)?;
+    let f2 = b.fully_connected("fc2", f1, 10)?;
+    b.softmax("softmax", f2)?;
     b.finish()
 }
 
-/// Look a builder up by name (CLI/config entry point).
-pub fn by_name(name: &str, batch: usize) -> Option<CompGraph> {
+/// Look a builder up by name (CLI/config entry point). Unknown names are
+/// [`OptError::UnknownNetwork`].
+pub fn by_name(name: &str, batch: usize) -> Result<CompGraph> {
     match name {
-        "lenet5" | "lenet" => Some(lenet5(batch)),
-        "alexnet" => Some(alexnet(batch)),
-        "vgg16" | "vgg" => Some(vgg16(batch)),
-        "inception_v3" | "inception" | "inceptionv3" => Some(inception_v3(batch)),
-        "resnet18" | "resnet" => Some(resnet18(batch)),
-        "resnet50" => Some(resnet50(batch)),
-        "minicnn" => Some(minicnn(batch)),
-        _ => None,
+        "lenet5" | "lenet" => lenet5(batch),
+        "alexnet" => alexnet(batch),
+        "vgg16" | "vgg" => vgg16(batch),
+        "inception_v3" | "inception" | "inceptionv3" => inception_v3(batch),
+        "resnet18" | "resnet" => resnet18(batch),
+        "resnet50" => resnet50(batch),
+        "minicnn" => minicnn(batch),
+        _ => Err(OptError::UnknownNetwork(name.to_string())),
     }
 }
 
@@ -268,7 +284,7 @@ mod tests {
 
     #[test]
     fn alexnet_shapes_match_publication() {
-        let g = alexnet(128);
+        let g = alexnet(128).unwrap();
         let conv1 = g.layers.iter().find(|l| l.name == "conv1").unwrap();
         assert_eq!(conv1.out_shape, vec![128, 96, 55, 55]);
         let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();
@@ -281,7 +297,7 @@ mod tests {
 
     #[test]
     fn vgg16_has_13_convs_and_138m_params() {
-        let g = vgg16(32);
+        let g = vgg16(32).unwrap();
         let convs = g
             .layers
             .iter()
@@ -297,7 +313,7 @@ mod tests {
 
     #[test]
     fn inception_reaches_expected_stage_shapes() {
-        let g = inception_v3(32);
+        let g = inception_v3(32).unwrap();
         let reda = g.layers.iter().find(|l| l.name == "redA_concat").unwrap();
         assert_eq!(&reda.out_shape[1..], &[768, 17, 17]);
         let redb = g.layers.iter().find(|l| l.name == "redB_concat").unwrap();
@@ -312,7 +328,7 @@ mod tests {
 
     #[test]
     fn resnet18_shapes() {
-        let g = resnet18(32);
+        let g = resnet18(32).unwrap();
         let fc = g.layers.iter().find(|l| l.name == "fc").unwrap();
         assert_eq!(fc.in_shapes[0], vec![32, 512, 1, 1]);
         let p = g.total_params();
@@ -320,19 +336,20 @@ mod tests {
     }
 
     #[test]
-    fn all_builders_pass_check() {
+    fn all_builders_pass_validate() {
         for name in
             ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18", "resnet50", "minicnn"]
         {
             let g = by_name(name, 64).unwrap();
-            g.check();
+            g.validate().unwrap();
             assert!(g.total_train_flops() > 0.0);
+            assert_eq!(g.batch(), 64);
         }
     }
 
     #[test]
     fn resnet50_shapes_and_params() {
-        let g = resnet50(32);
+        let g = resnet50(32).unwrap();
         let fc = g.layers.iter().find(|l| l.name == "fc").unwrap();
         assert_eq!(fc.in_shapes[0], vec![32, 2048, 1, 1]);
         let p = g.total_params();
@@ -344,7 +361,12 @@ mod tests {
     }
 
     #[test]
-    fn unknown_name_is_none() {
-        assert!(by_name("nope", 1).is_none());
+    fn unknown_name_is_a_typed_error() {
+        assert!(matches!(by_name("nope", 1), Err(OptError::UnknownNetwork(_))));
+    }
+
+    #[test]
+    fn zero_batch_is_an_error_not_a_degenerate_graph() {
+        assert!(matches!(lenet5(0), Err(OptError::InvalidGraph(_))));
     }
 }

@@ -1,0 +1,491 @@
+//! `GraphSpec`: the wire form of a computation graph (DESIGN.md §5).
+//!
+//! A spec is an exact JSON (de)serialization of a [`CompGraph`] — the
+//! same role `plan/json.rs` plays for execution plans. It is how
+//! arbitrary user networks enter the planner: inline over TCP (`optcnn
+//! serve`'s `graph` field), from disk (`--network-file`), or exported
+//! from a builtin (`optcnn graph --out`). The round-trip is exact: a
+//! spec-loaded graph plans byte-identically to the builder-built one
+//! (pinned by `tests/graph_spec.rs`).
+//!
+//! ```json
+//! {"version": 1, "name": "minicnn", "layers": [
+//!   {"name": "input", "op": "input", "inputs": [], "shape": [64, 3, 32, 32]},
+//!   {"name": "conv1", "op": "conv", "inputs": [0], "shape": [64, 8, 32, 32],
+//!    "cout": 8, "kernel": [3, 3], "stride": [1, 1], "padding": [1, 1]},
+//!   {"name": "fc1", "op": "fc", "inputs": [1], "shape": [64, 10], "cout": 10},
+//!   {"name": "softmax", "op": "softmax", "inputs": [2], "shape": [64, 10]}]}
+//! ```
+//!
+//! Layer ids are array positions; `inputs` lists producer ids in edge
+//! order; `shape` is the declared output shape, checked on load against
+//! what the operator actually produces. Every malformed spec — unknown
+//! ops, dangling or backward (cyclic) `inputs`, shape mismatches,
+//! degenerate windows — is a typed
+//! [`OptError::InvalidGraph`](crate::error::OptError::InvalidGraph),
+//! never a panic: this parser faces untrusted bytes.
+//!
+//! Loading re-runs the shared shape inference and [`CompGraph::validate`],
+//! so a spec that parses is exactly as trustworthy as a builder-built
+//! graph.
+//!
+//! # Content addressing
+//!
+//! [`CompGraph::digest`] is the graph's structural identity: the
+//! canonical spec form with every cosmetic name stripped, compared by
+//! value (never by a lossy hash, following the cluster-memo precedent in
+//! `planner::service`). Two textually different specs of the same
+//! network — reordered keys, renamed layers — share one digest, so they
+//! share plan-cache and single-flight memo entries; two structurally
+//! different graphs can never alias.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+use super::{invalid, CompGraph, Layer, OpKind, PoolKind};
+
+/// Spec format version (the `version` field).
+pub const SPEC_VERSION: f64 = 1.0;
+
+/// Magnitude caps on spec-declared numbers. Structural validation alone
+/// does not bound *sizes*, and downstream code enumerates divisors of
+/// every extent and multiplies parameter dimensions — an untrusted spec
+/// declaring a `10^12`-sample batch would pin a serving thread for
+/// hours, and huge `cout`/`padding` values overflow `usize` arithmetic.
+/// The caps are far past any real CNN (65536 = 2048 GPUs at the paper's
+/// 32/GPU batch) and each violation is a typed error naming the cap.
+pub const MAX_SPEC_EXTENT: usize = 65_536;
+/// Cap on one layer's declared element count (`shape` product);
+/// 2^32 f32 elements is a 16 GiB activation.
+pub const MAX_SPEC_VOLUME: usize = 1 << 32;
+/// Cap on each kernel/stride/padding component.
+pub const MAX_SPEC_WINDOW: usize = 65_536;
+
+/// Structural identity of a computation graph: the canonical,
+/// name-free spec serialization, compared by value. Cheap to clone
+/// (`Arc<str>`), hashable, and stable across processes — the content
+/// address the plan caches and the service's single-flight memo key on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GraphDigest {
+    canon: Arc<str>,
+}
+
+impl GraphDigest {
+    /// The canonical name-free serialization this digest compares by.
+    pub fn canonical(&self) -> &str {
+        &self.canon
+    }
+
+    /// A short hex fingerprint for logs and table output. Display only —
+    /// identity comparisons use the full canonical form.
+    pub fn hex(&self) -> String {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.canon.hash(&mut h);
+        format!("{:016x}", h.finish())
+    }
+}
+
+impl std::fmt::Display for GraphDigest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+fn uint_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn pair_arr(p: (usize, usize)) -> Json {
+    Json::Arr(vec![Json::Num(p.0 as f64), Json::Num(p.1 as f64)])
+}
+
+/// The spec object for one layer. `with_name` distinguishes the wire
+/// form (named) from the canonical digest form (names stripped).
+fn layer_json(g: &CompGraph, l: &Layer, with_name: bool) -> Json {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if with_name {
+        fields.push(("name", Json::Str(l.name.clone())));
+    }
+    fields.push(("op", Json::Str(l.op.mnemonic().to_string())));
+    fields.push(("inputs", uint_arr(&g.predecessors(l.id))));
+    fields.push(("shape", uint_arr(&l.out_shape)));
+    match &l.op {
+        OpKind::Input | OpKind::Softmax | OpKind::Concat | OpKind::Add => {}
+        OpKind::Conv2d { cout, kernel, stride, padding } => {
+            fields.push(("cout", Json::Num(*cout as f64)));
+            fields.push(("kernel", pair_arr(*kernel)));
+            fields.push(("stride", pair_arr(*stride)));
+            fields.push(("padding", pair_arr(*padding)));
+        }
+        OpKind::Pool2d { kind, kernel, stride, padding } => {
+            fields.push((
+                "kind",
+                Json::Str(match kind {
+                    PoolKind::Max => "max".to_string(),
+                    PoolKind::Avg => "avg".to_string(),
+                }),
+            ));
+            fields.push(("kernel", pair_arr(*kernel)));
+            fields.push(("stride", pair_arr(*stride)));
+            fields.push(("padding", pair_arr(*padding)));
+        }
+        OpKind::FullyConnected { cout } => {
+            fields.push(("cout", Json::Num(*cout as f64)));
+        }
+    }
+    Json::obj(fields)
+}
+
+// ---- parsing helpers (strict: no silent truncation off the wire) ----
+
+fn uints(v: &Json, what: &str) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| invalid(format!("{what} must be an array of whole numbers")))?
+        .iter()
+        .map(|x| {
+            x.as_exact_usize()
+                .ok_or_else(|| invalid(format!("{what} must hold whole numbers >= 0")))
+        })
+        .collect()
+}
+
+fn pair(v: &Json, what: &str) -> Result<(usize, usize)> {
+    let xs = uints(v, what)?;
+    if xs.len() != 2 {
+        return Err(invalid(format!("{what} must be a [h, w] pair, got {} entries", xs.len())));
+    }
+    Ok((xs[0], xs[1]))
+}
+
+/// Fields a spec layer may carry, by operator. Unknown keys are errors —
+/// a misspelled field must not be silently ignored.
+fn allowed_keys(op: &str) -> &'static [&'static str] {
+    const COMMON: [&str; 4] = ["name", "op", "inputs", "shape"];
+    match op {
+        "conv" => &["name", "op", "inputs", "shape", "cout", "kernel", "stride", "padding"],
+        "pool" => &["name", "op", "inputs", "shape", "kind", "kernel", "stride", "padding"],
+        "fc" => &["name", "op", "inputs", "shape", "cout"],
+        _ => &COMMON,
+    }
+}
+
+/// One parsed spec layer, before cross-layer wiring.
+struct SpecLayer {
+    name: String,
+    op: OpKind,
+    inputs: Vec<usize>,
+    shape: Vec<usize>,
+}
+
+fn layer_from(id: usize, v: &Json) -> Result<SpecLayer> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| invalid(format!("layer {id}: expected an object")))?;
+    let op_tag = obj
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| invalid(format!("layer {id}: needs an `op` string")))?;
+    for key in obj.keys() {
+        if !allowed_keys(op_tag).contains(&key.as_str()) {
+            return Err(invalid(format!(
+                "layer {id}: unknown field `{key}` for op `{op_tag}`"
+            )));
+        }
+    }
+    let name = match obj.get("name") {
+        None => format!("l{id}"),
+        Some(n) => n
+            .as_str()
+            .ok_or_else(|| invalid(format!("layer {id}: `name` must be a string")))?
+            .to_string(),
+    };
+    let ctx = |field: &str| format!("layer {id} (`{name}`): `{field}`");
+    let cout = |obj: &std::collections::BTreeMap<String, Json>| -> Result<usize> {
+        obj.get("cout")
+            .and_then(Json::as_exact_usize)
+            .ok_or_else(|| invalid(format!("{} must be a whole number", ctx("cout"))))
+    };
+    let window = |field: &str| -> Result<(usize, usize)> {
+        pair(
+            obj.get(field)
+                .ok_or_else(|| invalid(format!("{} is required", ctx(field))))?,
+            &ctx(field),
+        )
+    };
+    let op = match op_tag {
+        "input" => OpKind::Input,
+        "conv" => OpKind::Conv2d {
+            cout: cout(obj)?,
+            kernel: window("kernel")?,
+            stride: window("stride")?,
+            padding: window("padding")?,
+        },
+        "pool" => OpKind::Pool2d {
+            kind: match obj.get("kind").and_then(Json::as_str) {
+                Some("max") => PoolKind::Max,
+                Some("avg") => PoolKind::Avg,
+                other => {
+                    return Err(invalid(format!(
+                        "{} must be \"max\" or \"avg\", got {other:?}",
+                        ctx("kind")
+                    )))
+                }
+            },
+            kernel: window("kernel")?,
+            stride: window("stride")?,
+            padding: window("padding")?,
+        },
+        "fc" => OpKind::FullyConnected { cout: cout(obj)? },
+        "softmax" => OpKind::Softmax,
+        "concat" => OpKind::Concat,
+        "add" => OpKind::Add,
+        other => {
+            return Err(invalid(format!(
+                "layer {id}: unknown op `{other}` (known: input, conv, pool, fc, \
+                 softmax, concat, add)"
+            )))
+        }
+    };
+    let inputs = uints(
+        obj.get("inputs")
+            .ok_or_else(|| invalid(format!("{} is required", ctx("inputs"))))?,
+        &ctx("inputs"),
+    )?;
+    let shape = uints(
+        obj.get("shape")
+            .ok_or_else(|| invalid(format!("{} is required", ctx("shape"))))?,
+        &ctx("shape"),
+    )?;
+    // magnitude caps: bound what the planner will enumerate/multiply
+    if let Some(&d) = shape.iter().find(|&&d| d > MAX_SPEC_EXTENT) {
+        return Err(invalid(format!(
+            "{} extent {d} exceeds the {MAX_SPEC_EXTENT} cap",
+            ctx("shape")
+        )));
+    }
+    let volume = shape.iter().try_fold(1usize, |v, &d| v.checked_mul(d));
+    if !matches!(volume, Some(v) if v <= MAX_SPEC_VOLUME) {
+        return Err(invalid(format!(
+            "{} has more than {MAX_SPEC_VOLUME} elements",
+            ctx("shape")
+        )));
+    }
+    if let OpKind::Conv2d { kernel, stride, padding, .. }
+    | OpKind::Pool2d { kernel, stride, padding, .. } = &op
+    {
+        for (field, &(a, b)) in [("kernel", kernel), ("stride", stride), ("padding", padding)] {
+            if a > MAX_SPEC_WINDOW || b > MAX_SPEC_WINDOW {
+                return Err(invalid(format!(
+                    "{} component exceeds the {MAX_SPEC_WINDOW} cap",
+                    ctx(field)
+                )));
+            }
+        }
+    }
+    Ok(SpecLayer { name, op, inputs, shape })
+}
+
+impl CompGraph {
+    /// Serialize this graph as a `GraphSpec` document — the exact wire
+    /// form `optcnn serve` accepts inline and `--network-file` loads.
+    pub fn to_spec(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(SPEC_VERSION)),
+            ("name", Json::Str(self.name.clone())),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| layer_json(self, l, true)).collect()),
+            ),
+        ])
+    }
+
+    /// Parse and fully validate a `GraphSpec` document. Input shapes are
+    /// re-derived from the `inputs` wiring and every declared `shape` is
+    /// checked against the shared shape inference, so a loaded graph
+    /// satisfies exactly the invariants a builder-built one does.
+    pub fn from_spec(v: &Json) -> Result<CompGraph> {
+        let obj = v.as_obj().ok_or_else(|| invalid("spec must be a JSON object".into()))?;
+        for key in obj.keys() {
+            if !["version", "name", "layers"].contains(&key.as_str()) {
+                return Err(invalid(format!("unknown spec field `{key}`")));
+            }
+        }
+        match obj.get("version").and_then(Json::as_f64) {
+            Some(v) if v == SPEC_VERSION => {}
+            other => {
+                return Err(invalid(format!(
+                    "spec version must be {SPEC_VERSION}, got {other:?}"
+                )))
+            }
+        }
+        let name = obj
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| invalid("spec needs a `name` string".into()))?;
+        if name.is_empty() {
+            return Err(invalid("spec `name` must be non-empty".into()));
+        }
+        let raw = obj
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| invalid("spec needs a `layers` array".into()))?;
+        let parsed: Vec<SpecLayer> =
+            raw.iter().enumerate().map(|(i, l)| layer_from(i, l)).collect::<Result<_>>()?;
+        let mut layers = Vec::with_capacity(parsed.len());
+        let mut edges = Vec::new();
+        for (id, sl) in parsed.iter().enumerate() {
+            let mut in_shapes = Vec::with_capacity(sl.inputs.len());
+            for &src in &sl.inputs {
+                let producer = parsed.get(src).ok_or_else(|| {
+                    invalid(format!(
+                        "layer {id} (`{}`): dangling input {src} (graph has {} layers)",
+                        sl.name,
+                        parsed.len()
+                    ))
+                })?;
+                in_shapes.push(producer.shape.clone());
+                edges.push((src, id));
+            }
+            layers.push(Layer {
+                id,
+                name: sl.name.clone(),
+                op: sl.op.clone(),
+                out_shape: sl.shape.clone(),
+                in_shapes,
+            });
+        }
+        CompGraph::new(name.to_string(), layers, edges)
+    }
+
+    /// The graph's structural content address (see [`GraphDigest`]):
+    /// the canonical spec form with the graph and layer names stripped.
+    /// Computed once and cached for the graph's lifetime — mutate
+    /// `layers`/`edges` before the first call, not after (planner-owned
+    /// graphs are never mutated post-construction).
+    pub fn digest(&self) -> &GraphDigest {
+        self.digest.get_or_init(|| {
+            let canon = Json::Arr(
+                self.layers.iter().map(|l| layer_json(self, l, false)).collect(),
+            );
+            GraphDigest { canon: canon.to_string().into() }
+        })
+    }
+
+    /// Graphviz DOT rendering (`optcnn graph --dot`): one node per layer
+    /// labeled with its name, operator, and output shape.
+    pub fn to_dot(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "digraph {:?} {{", self.name);
+        let _ = writeln!(out, "  rankdir=TB; node [shape=box, fontname=\"monospace\"];");
+        for l in &self.layers {
+            let _ = writeln!(
+                out,
+                "  l{} [label=\"{}\\n{} {:?}\"];",
+                l.id,
+                l.name,
+                l.op.mnemonic(),
+                l.out_shape
+            );
+        }
+        for &(s, d) in &self.edges {
+            let _ = writeln!(out, "  l{s} -> l{d};");
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{nets, GraphBuilder};
+    use super::*;
+    use crate::error::OptError;
+
+    #[test]
+    fn builtin_round_trips_exactly() {
+        for name in ["lenet5", "alexnet", "inception_v3", "resnet18"] {
+            let g = nets::by_name(name, 64).unwrap();
+            let text = g.to_spec().to_string();
+            let back = CompGraph::from_spec(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.name, g.name);
+            assert_eq!(back.edges, g.edges);
+            assert_eq!(back.num_layers(), g.num_layers());
+            for (a, b) in g.layers.iter().zip(back.layers.iter()) {
+                assert_eq!(a.op, b.op, "{name}: op of layer {}", a.id);
+                assert_eq!(a.out_shape, b.out_shape, "{name}: shape of layer {}", a.id);
+                assert_eq!(a.in_shapes, b.in_shapes, "{name}: inputs of layer {}", a.id);
+                assert_eq!(a.name, b.name);
+            }
+            // the spec of the round-tripped graph is byte-identical
+            assert_eq!(back.to_spec().to_string(), text, "{name}");
+        }
+    }
+
+    #[test]
+    fn digest_ignores_cosmetic_names_only() {
+        let build = |gname: &str, lname: &str, cout: usize| {
+            let mut b = GraphBuilder::new(gname);
+            let x = b.input(4, 3, 8, 8).unwrap();
+            let c = b.conv2d(lname, x, cout, (3, 3), (1, 1), (1, 1)).unwrap();
+            let f = b.fully_connected("fc", c, 10).unwrap();
+            b.softmax("sm", f).unwrap();
+            b.finish().unwrap()
+        };
+        let a = build("net-a", "conv", 8);
+        let renamed = build("net-b", "conv_alias", 8);
+        let wider = build("net-a", "conv", 16);
+        assert_eq!(a.digest(), renamed.digest(), "names are cosmetic");
+        assert_ne!(a.digest(), wider.digest(), "structure is identity");
+        assert_eq!(a.digest().hex().len(), 16);
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors() {
+        let parse = |text: &str| CompGraph::from_spec(&Json::parse(text).unwrap());
+        for (what, text) in [
+            ("not an object", "[1, 2]"),
+            ("bad version", r#"{"version": 9, "name": "x", "layers": []}"#),
+            ("no layers", r#"{"version": 1, "name": "x", "layers": []}"#),
+            (
+                "unknown op",
+                r#"{"version": 1, "name": "x", "layers": [
+                    {"op": "teleport", "inputs": [], "shape": [1, 1, 1, 1]}]}"#,
+            ),
+            (
+                "dangling input",
+                r#"{"version": 1, "name": "x", "layers": [
+                    {"op": "input", "inputs": [], "shape": [1, 3, 4, 4]},
+                    {"op": "softmax", "inputs": [9], "shape": [1, 3]}]}"#,
+            ),
+            (
+                "unknown field",
+                r#"{"version": 1, "name": "x", "layers": [
+                    {"op": "input", "inputs": [], "shape": [1, 3, 4, 4], "sprocket": 1}]}"#,
+            ),
+            (
+                "shape mismatch",
+                r#"{"version": 1, "name": "x", "layers": [
+                    {"op": "input", "inputs": [], "shape": [1, 3, 4, 4]},
+                    {"op": "fc", "cout": 10, "inputs": [0], "shape": [1, 11]},
+                    {"op": "softmax", "inputs": [1], "shape": [1, 11]}]}"#,
+            ),
+        ] {
+            let err = parse(text).unwrap_err();
+            assert!(matches!(err, OptError::InvalidGraph(_)), "{what}: {err:?}");
+            assert!(!err.to_string().is_empty(), "{what}");
+        }
+    }
+
+    #[test]
+    fn dot_lists_every_layer_and_edge() {
+        let g = nets::lenet5(8).unwrap();
+        let dot = g.to_dot();
+        assert!(dot.starts_with("digraph"));
+        assert_eq!(dot.matches(" -> ").count(), g.num_edges());
+        assert!(dot.contains("conv1"));
+    }
+}

@@ -5,11 +5,16 @@
 //! * `optimize`  — run the strategy search and print the per-layer strategy
 //! * `simulate`  — evaluate a strategy on the simulated cluster
 //! * `plan`      — materialize a strategy's ExecutionPlan (print/export)
+//! * `graph`     — export, validate, and render GraphSpec documents
 //! * `sweep`     — the full Figure 7/8 grid (networks x devices x strategies),
 //!   fanned across a thread pool through one shared `PlanService`
 //! * `serve`     — answer plan/evaluate requests over TCP (NDJSON)
 //! * `train`     — real partitioned training of MiniCNN through PJRT
 //! * `info`      — networks, artifact status, cluster presets
+//!
+//! Every planning subcommand takes the network either as `--network
+//! <name>` (a builtin preset) or `--network-file <spec.json>` (an
+//! arbitrary GraphSpec document; see `optcnn graph`).
 //!
 //! Every subcommand goes through the typed [`Planner`] session API (or
 //! its concurrent counterpart, the `PlanService`); bad user input
@@ -23,7 +28,7 @@ use optcnn::config::ExperimentConfig;
 use optcnn::data::SyntheticDataset;
 use optcnn::error::{OptError, Result};
 use optcnn::exec::Trainer;
-use optcnn::planner::{backend, ClusterSpec, Network, Planner, StrategyKind};
+use optcnn::planner::{backend, ClusterSpec, Network, NetworkSpec, Planner, StrategyKind};
 use optcnn::runtime::ArtifactStore;
 use optcnn::util::cli::Args;
 use optcnn::util::table::Table;
@@ -39,8 +44,10 @@ USAGE:
                   [--cluster <file.toml>] [--trace out.json] [--mem-limit <b>]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
                   [--cluster <file.toml>] [--out plan.json] [--mem-limit <b>]
-  optcnn sweep    [--networks a,b] [--devices 1,2,4,8,16] [--threads N]
-                  [--mem-limit <b>]
+  optcnn graph    (--network <net> [--batch <global>] | --network-file <spec.json>)
+                  [--validate] [--out spec.json] [--dot graph.dot]
+  optcnn sweep    [--networks a,b] [--network-file <spec.json>]
+                  [--devices 1,2,4,8,16] [--threads N] [--mem-limit <b>]
   optcnn serve    [--addr 127.0.0.1:7878] [--shards 8] [--cache-cap 8]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
@@ -48,7 +55,9 @@ USAGE:
   optcnn info
   optcnn run      --config <file.toml>
 
-NETWORKS:   lenet5 alexnet vgg16 inception_v3 resnet18 resnet50 minicnn
+NETWORKS:   lenet5 alexnet vgg16 inception_v3 resnet18 resnet50 minicnn —
+            or any GraphSpec JSON via --network-file (exclusive with
+            --network/--batch; the spec carries its own global batch)
 STRATEGIES: data model owt layerwise
 CLUSTERS:   P100 preset via --devices, arbitrary via --cluster (see config/)
 MEM LIMIT:  per-device budget for the layer-wise search: bytes, a KB/MB/GB
@@ -87,7 +96,7 @@ fn parse_mem_bytes(s: &str) -> Result<u64> {
 }
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["verbose", "csv"]);
+    let args = Args::parse(std::env::args().skip(1), &["verbose", "csv", "validate"]);
     let code = match dispatch(&args) {
         Ok(code) => code,
         Err(e) => {
@@ -103,6 +112,7 @@ fn dispatch(args: &Args) -> Result<i32> {
         Some("optimize") => cmd_optimize(args),
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
+        Some("graph") => cmd_graph(args),
         Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
         Some("train") => cmd_train(args),
@@ -116,10 +126,35 @@ fn dispatch(args: &Args) -> Result<i32> {
     }
 }
 
-/// Shared `--network/--devices/--cluster/--batch/--backend` handling: the
-/// one place CLI flags become a typed [`Planner`] session.
+/// Resolve `--network`/`--network-file` into a [`NetworkSpec`]: `None`
+/// when neither flag is present (callers pick their own default), an
+/// error when both are, and `--batch` rejected alongside a spec file
+/// (the spec carries its own global batch).
+fn network_from_args(args: &Args) -> Result<Option<NetworkSpec>> {
+    match (args.get("network"), args.get("network-file")) {
+        (Some(_), Some(_)) => Err(OptError::InvalidArgument(
+            "--network and --network-file are mutually exclusive".into(),
+        )),
+        (Some(name), None) => Ok(Some(NetworkSpec::Preset(name.parse()?))),
+        (None, Some(path)) => {
+            if args.get("batch").is_some() {
+                return Err(OptError::InvalidArgument(
+                    "--batch applies to --network presets; a spec file carries its \
+                     own global batch"
+                        .into(),
+                ));
+            }
+            Ok(Some(NetworkSpec::from_spec_file(path)?))
+        }
+        (None, None) => Ok(None),
+    }
+}
+
+/// Shared `--network[-file]/--devices/--cluster/--batch/--backend`
+/// handling: the one place CLI flags become a typed [`Planner`] session.
 fn planner_from_args(args: &Args) -> Result<Planner> {
-    let network: Network = args.get_or("network", "vgg16").parse()?;
+    let network =
+        network_from_args(args)?.unwrap_or(NetworkSpec::Preset(Network::Vgg16));
     let mut builder = Planner::builder(network);
     match args.get("cluster") {
         Some(path) => {
@@ -132,7 +167,11 @@ fn planner_from_args(args: &Args) -> Result<Planner> {
         }
         None => builder = builder.devices(args.usize_or("devices", 4)?),
     }
-    builder = builder.per_gpu_batch(args.usize_or("batch", optcnn::planner::PER_GPU_BATCH)?);
+    if args.get("batch").is_some() {
+        // only thread an explicit batch through: a custom graph carries
+        // its own, and the builder rejects the combination
+        builder = builder.per_gpu_batch(args.usize_or("batch", 0)?);
+    }
     match args.get("mem-limit") {
         None => {}
         Some("device") => builder = builder.mem_limit_device(),
@@ -306,6 +345,54 @@ fn cmd_plan(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Export, validate, and render `GraphSpec` documents: the round-trip
+/// tooling for custom networks. `--network <preset> --batch <global>`
+/// builds a builtin at an explicit global batch; `--network-file` loads
+/// (and thereby fully validates) an arbitrary spec. `--out` writes the
+/// spec JSON, `--dot` a Graphviz rendering, `--validate` just reports.
+fn cmd_graph(args: &Args) -> Result<i32> {
+    let network = match network_from_args(args)? {
+        Some(spec @ NetworkSpec::Preset(_)) => {
+            // a spec records a concrete global batch; default to the
+            // paper's 32 x 4 devices
+            spec.build_graph(args.usize_or("batch", 128)?)?
+        }
+        Some(NetworkSpec::Custom(g)) => g,
+        None => {
+            return Err(OptError::InvalidArgument(
+                "graph requires --network <preset> or --network-file <spec.json>".into(),
+            ));
+        }
+    };
+    println!(
+        "{}: {} layers, {} edges, {} params, {:.1} GFLOP/step, batch {}, digest {}",
+        network.name,
+        network.num_layers(),
+        network.num_edges(),
+        network.total_params(),
+        network.total_train_flops() / 1e9,
+        network.batch(),
+        network.digest()
+    );
+    if args.flag("validate") {
+        // loading already ran the full validation; say so explicitly
+        println!("valid: structural and shape invariants hold");
+    }
+    if let Some(path) = args.get("out") {
+        let text = network.to_spec().to_string();
+        std::fs::write(path, &text)
+            .map_err(|e| OptError::Io(format!("writing {path}: {e}")))?;
+        println!("wrote spec ({} bytes of JSON) to {path}", text.len());
+    }
+    if let Some(path) = args.get("dot") {
+        let dot = network.to_dot();
+        std::fs::write(path, &dot)
+            .map_err(|e| OptError::Io(format!("writing {path}: {e}")))?;
+        println!("wrote DOT graph to {path} (render with `dot -Tsvg`)");
+    }
+    Ok(0)
+}
+
 /// The Figure 7/8 grid, fanned across a thread pool. Every worker pulls
 /// grid cells from an atomic cursor and answers them through one shared
 /// `PlanService`, so the four strategies of a (network, ndev) cell reuse
@@ -317,7 +404,23 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
 
     use optcnn::planner::{PlanRequest, PlanService};
 
-    let networks: Vec<Network> = args.list_or("networks", "alexnet,vgg16,inception_v3")?;
+    // the preset default only applies when no network was named at all:
+    // `sweep --network-file x.json` sweeps just that graph, not three
+    // unrequested presets on top
+    let mut networks: Vec<NetworkSpec> =
+        match (args.get("networks"), args.get("network-file")) {
+            (None, Some(_)) => Vec::new(),
+            _ => args
+                .list_or::<Network>("networks", "alexnet,vgg16,inception_v3")?
+                .into_iter()
+                .map(NetworkSpec::Preset)
+                .collect(),
+        };
+    if let Some(path) = args.get("network-file") {
+        // a custom network sweeps like any preset; its fixed global
+        // batch is simply replanned across each device count
+        networks.push(NetworkSpec::from_spec_file(path)?);
+    }
     let devices: Vec<usize> = args.list_or("devices", "1,2,4,8,16")?;
     let default_threads =
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -329,11 +432,11 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
         Some(v) => Some(parse_mem_bytes(v)?),
     };
 
-    let mut grid: Vec<(Network, usize, StrategyKind)> = Vec::new();
-    for &net in &networks {
+    let mut grid: Vec<(NetworkSpec, usize, StrategyKind)> = Vec::new();
+    for net in &networks {
         for &ndev in &devices {
             for kind in StrategyKind::ALL {
-                grid.push((net, ndev, kind));
+                grid.push((net.clone(), ndev, kind));
             }
         }
     }
@@ -351,8 +454,9 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
                     break;
                 }
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
-                let Some(&(net, ndev, kind)) = grid.get(i) else { break };
-                let r = PlanRequest::new(net, ndev)
+                let Some((net, ndev, kind)) = grid.get(i) else { break };
+                let (ndev, kind) = (*ndev, *kind);
+                let r = PlanRequest::new(net.clone(), ndev)
                     .map(|req| match mem_limit {
                         Some(b) => req.strategy(kind).mem_limit(b),
                         None => req.strategy(kind),
@@ -376,7 +480,7 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
     }
 
     let mut i = 0;
-    for &net in &networks {
+    for net in &networks {
         let budget = match mem_limit {
             Some(b) => format!(", {} budget", fmt_bytes(b as f64)),
             None => String::new(),
@@ -453,7 +557,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
         .build()?;
     let strategy = p.strategy(strat)?;
     println!("training minicnn: batch={batch} devices={ndev} strategy={strat} lr={lr}");
-    let g = Network::MiniCnn.graph(batch);
+    let g = Network::MiniCnn.graph(batch)?;
     let mut trainer = match Trainer::new(&store, g, strategy, ndev, lr, 42) {
         Ok(t) => t,
         Err(e) => {
@@ -498,7 +602,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
 fn cmd_info(args: &Args) -> Result<i32> {
     println!("networks:");
     for n in Network::ALL {
-        let g = n.graph(32);
+        let g = n.graph(32)?;
         println!(
             "  {:<14} {:>4} layers  {:>12} params  {:>8.1} GFLOP/step(b=32)",
             n.name(),
@@ -536,7 +640,7 @@ fn cmd_profile(args: &Args) -> Result<i32> {
             return Ok(1);
         }
     };
-    let g = Network::MiniCnn.graph(store.batch);
+    let g = Network::MiniCnn.graph(store.batch)?;
     let d = ClusterSpec::p100(ndev)?.device_graph()?;
     let cm = CostModel::new(&g, &d);
     println!("profiling minicnn artifacts ({reps} reps per config)...");

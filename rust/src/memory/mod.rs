@@ -140,7 +140,7 @@ mod tests {
 
     #[test]
     fn channel_split_shards_fc_params() {
-        let g = nets::vgg16(128);
+        let g = nets::vgg16(128).unwrap();
         let fc = g.layers.iter().find(|l| l.name == "fc6").unwrap();
         let serial = layer_peak_bytes(fc, &PConfig::serial());
         let channel = layer_peak_bytes(fc, &PConfig::channel(4));
@@ -153,7 +153,7 @@ mod tests {
 
     #[test]
     fn params_never_below_shard_and_acts_positive() {
-        let g = nets::alexnet(64);
+        let g = nets::alexnet(64).unwrap();
         for l in &g.layers {
             let p = layer_peak_bytes(l, &PConfig::serial());
             assert!(p > 0.0, "{} has zero footprint", l.name);
@@ -165,7 +165,7 @@ mod tests {
 
     #[test]
     fn per_device_aggregation_conserves_tile_totals() {
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 4);

@@ -59,7 +59,7 @@ mod tests {
     fn data_parallel_volume_dominated_by_sync() {
         // AlexNet's 61M params under data parallelism: sync volume dwarfs
         // tensor movement (there is none for pure data parallelism).
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let v = comm_volume(&cm, &strategies::data_parallel(&g, 4));
@@ -71,7 +71,7 @@ mod tests {
     fn owt_reduces_alexnet_communication_dramatically() {
         // The paper's Figure 8: OWT cuts AlexNet comm by >10x vs data
         // parallelism (fc layers hold ~95% of AlexNet's parameters).
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let dp = comm_volume(&cm, &strategies::data_parallel(&g, 4));

@@ -107,7 +107,7 @@ mod tests {
 
     #[test]
     fn dfs_completes_on_lenet() {
-        let g = nets::lenet5(64);
+        let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 2);
         let r = dfs_optimal(&t, None);
@@ -118,7 +118,7 @@ mod tests {
 
     #[test]
     fn deadline_truncates_large_search() {
-        let g = nets::vgg16(128);
+        let g = nets::vgg16(128).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 4);
         let r = dfs_optimal(&t, Some(Duration::from_millis(50)));
@@ -128,7 +128,7 @@ mod tests {
 
     #[test]
     fn dfs_cost_consistent_with_tables() {
-        let g = nets::lenet5(32);
+        let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let t = CostTables::build(&CostModel::new(&g, &d), 2);
         let r = dfs_optimal(&t, None);

@@ -351,7 +351,7 @@ mod tests {
     #[test]
     fn optimum_beats_or_ties_baselines() {
         for ndev in [2usize, 4] {
-            let g = nets::alexnet(32 * ndev);
+            let g = nets::alexnet(32 * ndev).unwrap();
             let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let cm = CostModel::new(&g, &d);
             let t = CostTables::build(&cm, ndev);

@@ -85,14 +85,14 @@ mod tests {
 
     #[test]
     fn data_parallel_uses_all_devices_on_every_layer() {
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let s = data_parallel(&g, 4);
         assert!(s.configs.iter().all(|c| c.deg[0] == 4 && c.total() == 4));
     }
 
     #[test]
     fn owt_switches_for_fc_layers() {
-        let g = nets::vgg16(32 * 4);
+        let g = nets::vgg16(32 * 4).unwrap();
         let s = owt(&g, 4);
         for l in &g.layers {
             let c = s.config(l.id);
@@ -107,7 +107,7 @@ mod tests {
 
     #[test]
     fn model_parallel_shards_every_param_layer() {
-        let g = nets::alexnet(32 * 8);
+        let g = nets::alexnet(32 * 8).unwrap();
         let s = model_parallel(&g, 8);
         for l in &g.layers {
             if l.has_params() {
@@ -121,7 +121,7 @@ mod tests {
         // batch 96 on 16 devices: 16 divides 96? no (96/16=6, yes it does).
         // Try odd extents: lenet conv1 has 6 channels; channel degree on 4
         // devices must clip to 3.
-        let g = nets::lenet5(32);
+        let g = nets::lenet5(32).unwrap();
         let s = model_parallel(&g, 4);
         let conv1 = g.layers.iter().find(|l| l.name == "conv1").unwrap();
         assert_eq!(s.config(conv1.id).deg[1], 3);
@@ -130,7 +130,7 @@ mod tests {
     #[test]
     fn baselines_are_legal_configs() {
         for ndev in [2usize, 4] {
-            let g = nets::inception_v3(32 * ndev);
+            let g = nets::inception_v3(32 * ndev).unwrap();
             let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let t = CostTables::build(&CostModel::new(&g, &d), ndev);
             for name in BASELINE_NAMES {

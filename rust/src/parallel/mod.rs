@@ -314,9 +314,9 @@ mod tests {
 
     fn conv_layer() -> Layer {
         let mut b = GraphBuilder::new("t");
-        let x = b.input(8, 4, 16, 16);
-        b.conv2d("c", x, 8, (3, 3), (1, 1), (1, 1));
-        b.finish().layers[1].clone()
+        let x = b.input(8, 4, 16, 16).unwrap();
+        b.conv2d("c", x, 8, (3, 3), (1, 1), (1, 1)).unwrap();
+        b.finish().unwrap().layers[1].clone()
     }
 
     #[test]
@@ -337,7 +337,7 @@ mod tests {
 
     #[test]
     fn fc_configs_are_2d_only() {
-        let g = nets::lenet5(8);
+        let g = nets::lenet5(8).unwrap();
         let fc = g.layers.iter().find(|l| l.name == "fc3").unwrap();
         let cfgs = enumerate_configs(fc, 4);
         assert!(cfgs.iter().all(|c| c.deg[DIM_H] == 1 && c.deg[DIM_W] == 1));
@@ -377,9 +377,9 @@ mod tests {
     #[test]
     fn pool_keeps_channel_range() {
         let mut b = GraphBuilder::new("t");
-        let x = b.input(2, 8, 8, 8);
-        b.pool2d("p", x, PoolKind::Max, (2, 2), (2, 2), (0, 0));
-        let g = b.finish();
+        let x = b.input(2, 8, 8, 8).unwrap();
+        b.pool2d("p", x, PoolKind::Max, (2, 2), (2, 2), (0, 0)).unwrap();
+        let g = b.finish().unwrap();
         let p = &g.layers[1];
         let tiles = output_tiles(&p.out_shape, &PConfig::new(1, 2, 1, 1));
         let r = input_region(p, 0, &tiles[1]).unwrap();
@@ -391,11 +391,11 @@ mod tests {
     #[test]
     fn concat_input_mapping() {
         let mut b = GraphBuilder::new("t");
-        let x = b.input(1, 4, 4, 4);
-        let a = b.conv2d("a", x, 6, (1, 1), (1, 1), (0, 0));
-        let c = b.conv2d("c", x, 10, (1, 1), (1, 1), (0, 0));
-        b.concat("cat", &[a, c]);
-        let g = b.finish();
+        let x = b.input(1, 4, 4, 4).unwrap();
+        let a = b.conv2d("a", x, 6, (1, 1), (1, 1), (0, 0)).unwrap();
+        let c = b.conv2d("c", x, 10, (1, 1), (1, 1), (0, 0)).unwrap();
+        b.concat("cat", &[a, c]).unwrap();
+        let g = b.finish().unwrap();
         let cat = g.layers.last().unwrap();
         // channel tile 8..16 of the concat output overlaps input0 (ch 0..6)
         // nowhere and input1 (ch 6..16) at local channels 2..10.
@@ -407,7 +407,7 @@ mod tests {
 
     #[test]
     fn fc_needs_full_input_features() {
-        let g = nets::lenet5(8);
+        let g = nets::lenet5(8).unwrap();
         let fc = g.layers.iter().find(|l| l.name == "fc3").unwrap();
         let tiles = output_tiles(&fc.out_shape, &PConfig::channel(4));
         let r = input_region(fc, 0, &tiles[2]).unwrap();

@@ -4,47 +4,32 @@
 //! small working set of (network, strategy, cluster) triples; plan
 //! construction is the per-request tiling/overlap cost that the cache
 //! amortizes away (see the `plan_reuse` bench). Keys are structural —
-//! network identity (name + input shape), per-layer degrees, device
-//! count, placement policy — so equal queries hit regardless of how the
-//! strategy object was produced.
+//! the graph's content digest ([`crate::graph::GraphDigest`]), per-layer
+//! degrees, device count, placement policy — so equal queries hit
+//! regardless of how the strategy object (or the graph itself) was
+//! produced: builder, preset, or wire spec.
 
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::ExecutionPlan;
 use crate::cost::CostModel;
-use crate::graph::CompGraph;
+use crate::graph::GraphDigest;
 use crate::parallel::{Placement, Strategy};
 
-/// Structural fingerprint of a computation graph: name, per-layer
-/// operators and output shapes, and the edge list (input shapes are
-/// derivable from these). Two graphs with equal fingerprints produce
-/// identical plans under equal strategies/topologies.
-fn graph_fingerprint(g: &CompGraph) -> u64 {
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    g.name.hash(&mut h);
-    for l in &g.layers {
-        l.op.hash(&mut h);
-        l.out_shape.hash(&mut h);
-    }
-    g.edges.hash(&mut h);
-    h.finish()
-}
-
 /// Structural identity of a plan: everything `ExecutionPlan::build`
-/// depends on — the graph (fingerprinted), the strategy's degrees, and
-/// the cluster's node topology/placement (which decide tile devices,
-/// transfer routes, and sync-group node spans).
+/// depends on — the graph (its content digest), the strategy's degrees,
+/// and the cluster's node topology/placement (which decide tile devices,
+/// transfer routes, and sync-group node spans). The digest compares the
+/// graph's full canonical structure by value, never a lossy hash, and
+/// excludes cosmetic names — equal queries hit regardless of how the
+/// graph object was produced (builder, preset, or wire spec).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
-    /// Network name.
-    pub net: String,
-    /// Input-layer shape (distinguishes batch sizes under one net name).
-    pub input_shape: Vec<usize>,
-    /// Fingerprint of the full graph structure (ops, shapes, edges).
-    pub graph_fp: u64,
+    /// Content address of the graph structure (ops, shapes, wiring —
+    /// batch size included via the input shape).
+    pub digest: GraphDigest,
     /// Per-layer parallelism degrees `[n, c, h, w]`.
     pub degrees: Vec<[usize; 4]>,
     pub ndev: usize,
@@ -57,9 +42,7 @@ impl PlanKey {
     /// The key `ExecutionPlan::build(cm, strategy)` would be stored under.
     pub fn of(cm: &CostModel<'_>, strategy: &Strategy) -> PlanKey {
         PlanKey {
-            net: cm.graph.name.clone(),
-            input_shape: cm.graph.layers[0].out_shape.clone(),
-            graph_fp: graph_fingerprint(cm.graph),
+            digest: cm.graph.digest().clone(),
             degrees: strategy.configs.iter().map(|c| c.deg).collect(),
             ndev: cm.devices.num_devices(),
             node_of: cm.devices.devices.iter().map(|d| d.node).collect(),
@@ -157,7 +140,7 @@ mod tests {
 
     #[test]
     fn hit_returns_the_same_plan() {
-        let g = nets::lenet5(64);
+        let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 2);
@@ -170,7 +153,7 @@ mod tests {
 
     #[test]
     fn distinct_strategies_get_distinct_entries() {
-        let g = nets::lenet5(64);
+        let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let mut cache = PlanCache::new(4);
@@ -182,7 +165,7 @@ mod tests {
 
     #[test]
     fn lru_evicts_the_coldest_entry() {
-        let g = nets::lenet5(64);
+        let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let data = strategies::data_parallel(&g, 2);
@@ -204,8 +187,8 @@ mod tests {
     #[test]
     fn batch_size_is_part_of_the_key() {
         let d = DeviceGraph::p100_cluster(2).unwrap();
-        let g1 = nets::lenet5(32);
-        let g2 = nets::lenet5(64);
+        let g1 = nets::lenet5(32).unwrap();
+        let g2 = nets::lenet5(64).unwrap();
         let k1 = PlanKey::of(&CostModel::new(&g1, &d), &strategies::data_parallel(&g1, 2));
         let k2 = PlanKey::of(&CostModel::new(&g2, &d), &strategies::data_parallel(&g2, 2));
         assert_ne!(k1, k2);
@@ -216,7 +199,7 @@ mod tests {
         // Same device count, different node layouts: transfer routes and
         // sync-group spans differ, so the plans must not be shared.
         use crate::device::ComputeModel;
-        let g = nets::alexnet(32 * 8);
+        let g = nets::alexnet(32 * 8).unwrap();
         let s = strategies::model_parallel(&g, 8);
         let two_by_four = DeviceGraph::p100_cluster(8).unwrap();
         let one_by_eight =
@@ -232,18 +215,41 @@ mod tests {
         // widths must still be distinguished.
         use crate::graph::GraphBuilder;
         let d = DeviceGraph::p100_cluster(2).unwrap();
-        let build = |cout: usize| {
-            let mut b = GraphBuilder::new("same-name");
-            let x = b.input(8, 3, 16, 16);
-            let c = b.conv2d("c", x, cout, (3, 3), (1, 1), (1, 1));
-            let f = b.fully_connected("fc", c, 10);
-            b.softmax("sm", f);
-            b.finish()
+        let build = |name: &str, cout: usize| {
+            let mut b = GraphBuilder::new(name);
+            let x = b.input(8, 3, 16, 16).unwrap();
+            let c = b.conv2d("c", x, cout, (3, 3), (1, 1), (1, 1)).unwrap();
+            let f = b.fully_connected("fc", c, 10).unwrap();
+            b.softmax("sm", f).unwrap();
+            b.finish().unwrap()
         };
-        let g1 = build(8);
-        let g2 = build(16);
+        let g1 = build("same-name", 8);
+        let g2 = build("same-name", 16);
         let k1 = PlanKey::of(&CostModel::new(&g1, &d), &strategies::data_parallel(&g1, 2));
         let k2 = PlanKey::of(&CostModel::new(&g2, &d), &strategies::data_parallel(&g2, 2));
         assert_ne!(k1, k2);
+    }
+
+    #[test]
+    fn cosmetic_names_are_not_part_of_the_key() {
+        // Content addressing: a renamed but structurally identical graph
+        // shares the cached plan (the digest strips names).
+        use crate::graph::GraphBuilder;
+        let d = DeviceGraph::p100_cluster(2).unwrap();
+        let build = |name: &str| {
+            let mut b = GraphBuilder::new(name);
+            let x = b.input(8, 3, 16, 16).unwrap();
+            let c = b.conv2d(&format!("{name}-conv"), x, 8, (3, 3), (1, 1), (1, 1)).unwrap();
+            let f = b.fully_connected("fc", c, 10).unwrap();
+            b.softmax("sm", f).unwrap();
+            b.finish().unwrap()
+        };
+        let g1 = build("alpha");
+        let g2 = build("beta");
+        let mut cache = PlanCache::new(4);
+        let a = cache.get_or_build(&CostModel::new(&g1, &d), &strategies::data_parallel(&g1, 2));
+        let b = cache.get_or_build(&CostModel::new(&g2, &d), &strategies::data_parallel(&g2, 2));
+        assert!(Arc::ptr_eq(&a, &b), "structurally identical graphs must share one entry");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
     }
 }

@@ -369,7 +369,7 @@ mod tests {
 
     #[test]
     fn rejects_out_of_range_indices() {
-        let g = nets::lenet5(32);
+        let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let plan = ExecutionPlan::build(&cm, &strategies::data_parallel(&g, 2));
@@ -390,7 +390,7 @@ mod tests {
 
     #[test]
     fn rejects_mismatched_peak_mem_vector() {
-        let g = nets::lenet5(32);
+        let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let mut bad = ExecutionPlan::build(&cm, &strategies::data_parallel(&g, 2));

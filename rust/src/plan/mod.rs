@@ -22,7 +22,7 @@
 //! [`PlanCache`] keyed on (net, strategy, device count), which makes them
 //! servable artifacts rather than transient in-memory derivations — the
 //! property PaSE-style systems rely on to answer many planning queries
-//! fast (DESIGN.md §7).
+//! fast (DESIGN.md §8).
 
 pub mod cache;
 mod json;
@@ -151,7 +151,10 @@ pub struct LayerPlan {
 /// The fully materialized consequences of one strategy on one cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
-    /// Network name (graph identity half of the cache key).
+    /// Network display name. Cosmetic: plan identity is the graph's
+    /// structural [`GraphDigest`](crate::graph::GraphDigest) (names
+    /// excluded), so a cached plan shared between structurally identical
+    /// graphs carries whichever name first primed the cache.
     pub net: String,
     /// Device count the plan was laid out for.
     pub ndev: usize,
@@ -342,7 +345,7 @@ mod tests {
     #[test]
     fn layer_plans_cover_all_tiles() {
         let p = plan_for("lenet5", 4, "data");
-        let g = nets::lenet5(32 * 4);
+        let g = nets::lenet5(32 * 4).unwrap();
         for (lp, l) in p.layers.iter().zip(g.layers.iter()) {
             assert_eq!(lp.layer, l.id);
             assert_eq!(lp.tiles.len(), lp.cfg.total());
@@ -429,7 +432,7 @@ mod tests {
     #[test]
     fn sync_groups_partition_tiles() {
         let p = plan_for("lenet5", 4, "data");
-        let g = nets::lenet5(32 * 4);
+        let g = nets::lenet5(32 * 4).unwrap();
         for (lp, l) in p.layers.iter().zip(g.layers.iter()) {
             let Some(sync) = &lp.sync else { continue };
             assert!(l.has_params());
@@ -454,7 +457,7 @@ mod tests {
 
     #[test]
     fn plan_records_the_memory_models_per_device_peak() {
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::owt(&g, 4);
@@ -476,7 +479,7 @@ mod tests {
         let d =
             DeviceGraph::cluster("2x3", 2, 3, 15e9, 3e9, 12e9, ComputeModel::p100()).unwrap();
         assert_eq!(d.placement_shape(), (2, 3));
-        let g = nets::alexnet(32 * 6);
+        let g = nets::alexnet(32 * 6).unwrap();
         for placement in [Placement::Contiguous, Placement::RoundRobinNodes] {
             let cm = CostModel::new(&g, &d).with_placement(placement);
             let s = strategies::data_parallel(&g, 6);

@@ -112,7 +112,7 @@ mod tests {
     use crate::graph::nets;
 
     fn lenet_tables() -> CostTables {
-        let g = nets::lenet5(64);
+        let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         // tables only borrow the graph/devices during build
         CostTables::build(&CostModel::new(&g, &d), 2)

@@ -24,6 +24,13 @@
 //!   lookups; both round-trip through [`std::str::FromStr`] /
 //!   [`std::fmt::Display`] for CLI and config use, and unknown names
 //!   surface as [`OptError`] values, never panics.
+//! * **Arbitrary networks.** Sessions and requests take a
+//!   [`NetworkSpec`]: a builtin [`Network`] preset *or* any validated
+//!   [`CompGraph`] — typically loaded from a
+//!   [`GraphSpec`](crate::graph::spec) JSON document (`--network-file`,
+//!   the `graph` wire field). Cache identity is the graph's structural
+//!   content digest ([`CompGraph::digest`]), so equal structures share
+//!   state no matter how they were named or spelled (DESIGN.md §5).
 //! * **Pluggable search.** The optimization algorithm is a
 //!   [`SearchBackend`] chosen at build time: [`Elimination`]
 //!   (Algorithm 1) by default, [`ExhaustiveDfs`] for ground truth.
@@ -47,7 +54,7 @@
 //!   every method takes `&mut self`. For many concurrent callers,
 //!   [`service::PlanService`] fronts the same pipeline behind `&self`
 //!   with a sharded plan cache and single-flight state building, and
-//!   [`serve`] speaks it over TCP (`optcnn serve`). DESIGN.md §5.
+//!   [`serve`] speaks it over TCP (`optcnn serve`). DESIGN.md §6.
 
 #![warn(missing_docs)]
 
@@ -124,7 +131,7 @@ impl Network {
     }
 
     /// Build the computation graph at a **global** batch size.
-    pub fn graph(self, global_batch: usize) -> CompGraph {
+    pub fn graph(self, global_batch: usize) -> Result<CompGraph> {
         match self {
             Network::LeNet5 => nets::lenet5(global_batch),
             Network::AlexNet => nets::alexnet(global_batch),
@@ -134,6 +141,102 @@ impl Network {
             Network::ResNet50 => nets::resnet50(global_batch),
             Network::MiniCnn => nets::minicnn(global_batch),
         }
+    }
+}
+
+/// The network a planning session or request is about: a builtin
+/// [`Network`] preset (built at the session's global batch), or an
+/// arbitrary user graph (a validated [`CompGraph`], typically loaded
+/// from a [`GraphSpec`](crate::graph::spec) via `--network-file` or the
+/// `graph` wire field).
+///
+/// This is the seam that opens the closed `Network` enum: everything
+/// downstream — cost tables, search, plans, caches — works off the
+/// materialized graph, and cache identity is the graph's structural
+/// [`digest`](CompGraph::digest), so a preset and a spec describing the
+/// same network share cached state.
+///
+/// A custom graph carries its own global batch size in its input shape;
+/// per-GPU batch settings apply to presets only.
+#[derive(Debug, Clone)]
+pub enum NetworkSpec {
+    /// A builtin benchmark network, built at `per_gpu_batch x devices`.
+    Preset(Network),
+    /// An arbitrary computation graph, used as-is. Constructing this
+    /// variant directly asserts the graph is valid and unmutated since
+    /// its digest was computed — prefer [`NetworkSpec::custom`], which
+    /// enforces both (wire and file specs always go through it).
+    Custom(Arc<CompGraph>),
+}
+
+impl NetworkSpec {
+    /// Wrap a user graph as a custom network, validating it first.
+    /// Rebuilds the graph ([`CompGraph::revalidated`]) so a digest
+    /// cached before any caller-side mutation cannot alias another
+    /// graph's cache entries.
+    pub fn custom(graph: CompGraph) -> Result<NetworkSpec> {
+        Ok(NetworkSpec::Custom(Arc::new(graph.revalidated()?)))
+    }
+
+    /// Load a custom network from a `GraphSpec` JSON file — the one
+    /// loader behind `--network-file` and the `network_file` config key.
+    /// Errors carry the path: unreadable files are [`OptError::Io`],
+    /// malformed documents [`OptError::InvalidGraph`].
+    pub fn from_spec_file(path: &str) -> Result<NetworkSpec> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| OptError::Io(format!("{path}: {e}")))?;
+        let json = crate::util::json::Json::parse(&text)
+            .map_err(|e| OptError::InvalidGraph(format!("{path}: {e}")))?;
+        NetworkSpec::custom(CompGraph::from_spec(&json).map_err(|e| match e {
+            OptError::InvalidGraph(msg) => OptError::InvalidGraph(format!("{path}: {msg}")),
+            other => other,
+        })?)
+    }
+
+    /// The network's display name.
+    pub fn name(&self) -> &str {
+        match self {
+            NetworkSpec::Preset(net) => net.name(),
+            NetworkSpec::Custom(g) => &g.name,
+        }
+    }
+
+    /// The underlying preset, if this is one.
+    pub fn preset(&self) -> Option<Network> {
+        match self {
+            NetworkSpec::Preset(net) => Some(*net),
+            NetworkSpec::Custom(_) => None,
+        }
+    }
+
+    /// The fixed global batch a custom graph carries (`None` for
+    /// presets, which are built at any requested batch).
+    pub fn fixed_batch(&self) -> Option<usize> {
+        match self {
+            NetworkSpec::Preset(_) => None,
+            NetworkSpec::Custom(g) => Some(g.batch()),
+        }
+    }
+
+    /// Materialize the graph: presets build at `global_batch`, custom
+    /// graphs are shared as-is (their own batch governs).
+    pub fn build_graph(&self, global_batch: usize) -> Result<Arc<CompGraph>> {
+        match self {
+            NetworkSpec::Preset(net) => Ok(Arc::new(net.graph(global_batch)?)),
+            NetworkSpec::Custom(g) => Ok(Arc::clone(g)),
+        }
+    }
+}
+
+impl From<Network> for NetworkSpec {
+    fn from(net: Network) -> NetworkSpec {
+        NetworkSpec::Preset(net)
+    }
+}
+
+impl fmt::Display for NetworkSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -289,8 +392,8 @@ enum MemLimit {
 /// Obtained from [`Planner::builder`]; every setter is chainable and
 /// validation happens in [`PlannerBuilder::build`].
 pub struct PlannerBuilder {
-    network: Network,
-    per_gpu_batch: usize,
+    network: NetworkSpec,
+    per_gpu_batch: Option<usize>,
     cluster: Option<ClusterSpec>,
     devices: Option<usize>,
     backend: Box<dyn SearchBackend>,
@@ -314,9 +417,11 @@ impl PlannerBuilder {
     }
 
     /// Per-GPU batch size (default: the paper's 32). The network's global
-    /// batch is `per_gpu_batch x num_devices`.
+    /// batch is `per_gpu_batch x num_devices`. Applies to preset
+    /// networks only — a custom graph carries its own batch, and setting
+    /// this alongside one is an error.
     pub fn per_gpu_batch(mut self, batch: usize) -> PlannerBuilder {
-        self.per_gpu_batch = batch;
+        self.per_gpu_batch = Some(batch);
         self
     }
 
@@ -362,7 +467,7 @@ impl PlannerBuilder {
     /// Validate the configuration and open the session: materializes the
     /// device graph and the network graph at the session's global batch.
     pub fn build(self) -> Result<Planner> {
-        if self.per_gpu_batch == 0 {
+        if self.per_gpu_batch == Some(0) {
             return Err(OptError::InvalidArgument(
                 "per-GPU batch size must be at least 1".into(),
             ));
@@ -395,10 +500,31 @@ impl PlannerBuilder {
             }
             Some(MemLimit::DeviceCapacity) => Some(devices.compute.hbm_bytes as u64),
         };
-        let graph = self.network.graph(self.per_gpu_batch * devices.num_devices());
+        let global_batch = match self.network.fixed_batch() {
+            None => {
+                let per_gpu = self.per_gpu_batch.unwrap_or(PER_GPU_BATCH);
+                per_gpu.checked_mul(devices.num_devices()).ok_or_else(|| {
+                    OptError::InvalidArgument(format!(
+                        "global batch overflows: {per_gpu} per GPU x {} devices",
+                        devices.num_devices()
+                    ))
+                })?
+            }
+            Some(batch) => {
+                if self.per_gpu_batch.is_some() {
+                    return Err(OptError::InvalidArgument(
+                        "a custom graph carries its own batch size; per_gpu_batch \
+                         applies to preset networks only"
+                            .into(),
+                    ));
+                }
+                batch
+            }
+        };
+        let graph = self.network.build_graph(global_batch)?;
         Ok(Planner {
             network: self.network,
-            per_gpu_batch: self.per_gpu_batch,
+            global_batch,
             graph,
             devices,
             backend: self.backend,
@@ -417,9 +543,9 @@ impl PlannerBuilder {
 /// the layer-wise search result, and materialized plans cached across
 /// queries. See the [module docs](self) for the full design.
 pub struct Planner {
-    network: Network,
-    per_gpu_batch: usize,
-    graph: CompGraph,
+    network: NetworkSpec,
+    global_batch: usize,
+    graph: Arc<CompGraph>,
     devices: DeviceGraph,
     backend: Box<dyn SearchBackend>,
     mem_limit: Option<u64>,
@@ -432,11 +558,12 @@ pub struct Planner {
 }
 
 impl Planner {
-    /// Start configuring a session for `network` (see [`PlannerBuilder`]).
-    pub fn builder(network: Network) -> PlannerBuilder {
+    /// Start configuring a session for `network` — a [`Network`] preset
+    /// or any [`NetworkSpec`] (see [`PlannerBuilder`]).
+    pub fn builder(network: impl Into<NetworkSpec>) -> PlannerBuilder {
         PlannerBuilder {
-            network,
-            per_gpu_batch: PER_GPU_BATCH,
+            network: network.into(),
+            per_gpu_batch: None,
             cluster: None,
             devices: None,
             backend: Box::new(Elimination),
@@ -446,8 +573,8 @@ impl Planner {
     }
 
     /// The session's network.
-    pub fn network(&self) -> Network {
-        self.network
+    pub fn network(&self) -> &NetworkSpec {
+        &self.network
     }
 
     /// The session's computation graph (built at the global batch).
@@ -465,14 +592,16 @@ impl Planner {
         self.devices.num_devices()
     }
 
-    /// Per-GPU batch size.
+    /// Per-GPU batch size (`global_batch / num_devices`, rounded down
+    /// for custom graphs whose batch is not a device multiple).
     pub fn per_gpu_batch(&self) -> usize {
-        self.per_gpu_batch
+        self.global_batch / self.devices.num_devices()
     }
 
-    /// Global batch size (`per_gpu_batch x num_devices`).
+    /// Global batch size: `per_gpu_batch x num_devices` for presets, the
+    /// graph's own input batch for custom networks.
     pub fn global_batch(&self) -> usize {
-        self.per_gpu_batch * self.devices.num_devices()
+        self.global_batch
     }
 
     /// The name of the session's search backend.
@@ -617,6 +746,23 @@ mod tests {
             .build()
             .is_err());
         assert!(Planner::builder(Network::LeNet5).devices(2).mem_limit(0).build().is_err());
+    }
+
+    #[test]
+    fn custom_graphs_carry_their_own_batch() {
+        let g = nets::minicnn(48).unwrap();
+        let spec = NetworkSpec::custom(g).unwrap();
+        assert_eq!(spec.fixed_batch(), Some(48));
+        assert!(spec.preset().is_none());
+        let mut p = Planner::builder(spec.clone()).devices(2).build().unwrap();
+        assert_eq!(p.global_batch(), 48);
+        assert_eq!(p.network().name(), "minicnn");
+        assert!(p.evaluate(StrategyKind::Data).unwrap().throughput > 0.0);
+        // explicit per-GPU batch does not combine with a fixed-batch graph
+        assert!(matches!(
+            Planner::builder(spec).devices(2).per_gpu_batch(16).build(),
+            Err(OptError::InvalidArgument(_))
+        ));
     }
 
     #[test]

@@ -2,26 +2,33 @@
 //!
 //! The wire protocol is newline-delimited JSON over plain TCP via
 //! `std::net` — the offline registry carries no HTTP/async stack, and
-//! line framing keeps a client one `nc` invocation away (DESIGN.md §5):
+//! line framing keeps a client one `nc` invocation away (DESIGN.md §6):
 //!
 //! ```text
 //! request:  {"net": "vgg16", "devices": 4, "batch": 32,
 //!            "strategy": "layerwise", "want": "plan"}
+//!         | {"graph": {"version": 1, "name": "mine", "layers": [...]},
+//!            "devices": 4, "want": "evaluate"}
 //! response: {"ok": true, "plan": {...}}
 //!         | {"ok": true, "evaluation": {...}}
 //!         | {"ok": false, "error": "one-line message"}
 //! ```
 //!
-//! Instead of `"devices"` (the paper's P100 preset) a request may carry
-//! `"cluster": {"nodes": 2, "gpus_per_node": 8, ...}` with the same keys
-//! as the TOML `[cluster]` section. `"want"` defaults to `"plan"`;
-//! `"strategy"` defaults to `"layerwise"`; `"batch"` defaults to the
-//! paper's per-GPU 32. An optional `"mem_limit"` (bytes per device)
-//! constrains the layer-wise search to memory-feasible configurations;
-//! an unsatisfiable budget answers `{"ok": false, "error":
-//! "infeasible: ..."}`. Evaluation replies report the plan's
-//! per-device high-water memory as `"peak_mem_per_dev"` (plan replies
-//! carry the same vector inside the plan JSON itself).
+//! The network is either `"net"` (a builtin preset name) or an inline
+//! `"graph"` object — a [`GraphSpec`](crate::graph::spec) document
+//! describing an arbitrary network (exactly one of the two). A custom
+//! graph carries its own batch size in its input shape, so `"batch"`
+//! only combines with `"net"`. Instead of `"devices"` (the paper's P100
+//! preset) a request may carry `"cluster": {"nodes": 2, "gpus_per_node":
+//! 8, ...}` with the same keys as the TOML `[cluster]` section. `"want"`
+//! defaults to `"plan"`; `"strategy"` defaults to `"layerwise"`;
+//! `"batch"` defaults to the paper's per-GPU 32. An optional
+//! `"mem_limit"` (bytes per device) constrains the layer-wise search to
+//! memory-feasible configurations; an unsatisfiable budget answers
+//! `{"ok": false, "error": "infeasible: ..."}`. Evaluation replies
+//! report the plan's per-device high-water memory as
+//! `"peak_mem_per_dev"` (plan replies carry the same vector inside the
+//! plan JSON itself).
 //!
 //! Every connection gets its own thread; all connections share one
 //! [`PlanService`], so a plan primed by any client is a cache hit for
@@ -36,10 +43,11 @@ use std::thread::JoinHandle;
 
 use crate::device::ComputeModel;
 use crate::error::{OptError, Result};
+use crate::graph::CompGraph;
 use crate::util::json::Json;
 
 use super::service::{PlanRequest, PlanService};
-use super::{ClusterSpec, Network, StrategyKind, PER_GPU_BATCH};
+use super::{ClusterSpec, Network, NetworkSpec, StrategyKind, PER_GPU_BATCH};
 
 /// What a request asks the server to return.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,34 +65,75 @@ fn bad(msg: &str) -> OptError {
     OptError::InvalidArgument(msg.to_string())
 }
 
-/// Strict non-negative integer off the wire: fractional or negative
-/// numbers are rejected, never silently truncated/saturated the way
-/// `Json::as_usize`'s `f64 as usize` cast would.
+/// Strict non-negative integer off the wire ([`Json::as_exact_usize`]).
 fn as_uint(v: &Json) -> Option<usize> {
-    let n = v.as_f64()?;
-    if n.fract() == 0.0 && (0.0..=(usize::MAX as f64)).contains(&n) {
-        Some(n as usize)
-    } else {
-        None
-    }
+    v.as_exact_usize()
 }
 
-/// Hard caps on network-supplied sizes. The planning library itself has
-/// no limits (callers are trusted), but a TCP client must not be able to
-/// make the server allocate an `ndev x ndev` bandwidth matrix or a
-/// billion-sample graph out of one request line.
+/// Hard caps on network-supplied sizes, split per field so each limit's
+/// error names the cap that was exceeded. The planning library itself
+/// has no limits (callers are trusted), but a TCP client must not be
+/// able to make the server allocate an `ndev x ndev` bandwidth matrix, a
+/// billion-sample graph, or an unbounded layer list out of one request
+/// line.
 const MAX_TOTAL_DEVICES: usize = 1024;
 /// Cap on the per-GPU batch a request may ask for.
 const MAX_PER_GPU_BATCH: usize = 4096;
-/// Cap on one request line; longer lines cannot be resynced and close
+/// Cap on an inline `graph` object, measured on its serialized spec
+/// form. 1 MiB holds specs far past Inception-v3's 102 layers — a
+/// spec near the layer cap below already overruns the old blanket
+/// 64 KiB *line* cap, which is why the limits are split per field.
+const MAX_GRAPH_BYTES: usize = 1024 * 1024;
+/// Cap on an inline graph's layer count.
+const MAX_GRAPH_LAYERS: usize = 512;
+/// Cap on one request line (the graph cap plus generous headroom for
+/// the rest of the request); longer lines cannot be resynced and close
 /// the connection.
-const MAX_REQUEST_BYTES: u64 = 64 * 1024;
+const MAX_LINE_BYTES: u64 = 2 * 1024 * 1024;
+
+/// Parse the inline `graph` object, enforcing its per-field caps before
+/// the spec is validated.
+fn graph_from_json(v: &Json) -> Result<NetworkSpec> {
+    if let Some(layers) = v.get("layers").and_then(Json::as_arr) {
+        if layers.len() > MAX_GRAPH_LAYERS {
+            return Err(bad(&format!(
+                "`graph` capped at {MAX_GRAPH_LAYERS} layers, got {}",
+                layers.len()
+            )));
+        }
+    }
+    let bytes = v.to_string().len();
+    if bytes > MAX_GRAPH_BYTES {
+        return Err(bad(&format!(
+            "`graph` capped at {MAX_GRAPH_BYTES} spec bytes, got {bytes}"
+        )));
+    }
+    NetworkSpec::custom(CompGraph::from_spec(v)?)
+}
 
 /// Parse one request line into a typed request plus what to return.
 pub fn parse_request(line: &str) -> Result<(PlanRequest, Want)> {
     let v = Json::parse(line).map_err(|e| bad(&format!("malformed request JSON: {e}")))?;
-    let net = v.get("net").and_then(Json::as_str);
-    let network: Network = net.ok_or_else(|| bad("request needs a `net` string"))?.parse()?;
+    let network: NetworkSpec = match (v.get("net"), v.get("graph")) {
+        (Some(_), Some(_)) => {
+            return Err(bad("`net` and `graph` are mutually exclusive"));
+        }
+        (Some(n), None) => {
+            let name = n.as_str().ok_or_else(|| bad("`net` must be a string"))?;
+            NetworkSpec::Preset(name.parse::<Network>()?)
+        }
+        (None, Some(g)) => {
+            if v.get("batch").is_some() {
+                return Err(bad(
+                    "`batch` applies to `net` presets; a `graph` carries its own batch size",
+                ));
+            }
+            graph_from_json(g)?
+        }
+        (None, None) => {
+            return Err(bad("request needs a `net` string or an inline `graph` object"));
+        }
+    };
     let cluster = match (v.get("devices"), v.get("cluster")) {
         (Some(_), Some(_)) => {
             return Err(bad("`devices` and `cluster` are mutually exclusive"));
@@ -272,13 +321,13 @@ fn handle_conn(stream: TcpStream, service: &PlanService) {
         // Bounded line read: a client streaming bytes with no newline
         // must not grow an unbounded String inside the server.
         let mut raw = Vec::new();
-        match (&mut reader).take(MAX_REQUEST_BYTES).read_until(b'\n', &mut raw) {
+        match (&mut reader).take(MAX_LINE_BYTES).read_until(b'\n', &mut raw) {
             Ok(0) | Err(_) => return, // clean EOF or I/O error
-            Ok(n) if n as u64 >= MAX_REQUEST_BYTES && !raw.ends_with(b"\n") => {
+            Ok(n) if n as u64 >= MAX_LINE_BYTES && !raw.ends_with(b"\n") => {
                 // the line was truncated mid-stream: reply and drop the
                 // connection — there is no way to resync to the next line
                 let reply = error_reply(&format!(
-                    "request line exceeds {MAX_REQUEST_BYTES} bytes"
+                    "request line exceeds {MAX_LINE_BYTES} bytes"
                 ));
                 let _ = writer
                     .write_all(reply.as_bytes())
@@ -369,7 +418,7 @@ mod tests {
     #[test]
     fn parse_request_applies_defaults() {
         let (req, want) = parse_request(r#"{"net": "lenet5"}"#).unwrap();
-        assert_eq!(req.network, Network::LeNet5);
+        assert_eq!(req.network.preset(), Some(Network::LeNet5));
         assert_eq!(req.cluster.num_devices(), 4);
         assert_eq!(req.per_gpu_batch, PER_GPU_BATCH);
         assert_eq!(req.strategy, StrategyKind::Layerwise);
@@ -384,7 +433,7 @@ mod tests {
                             "intra_bw_gbps": 130.0, "inter_bw_gbps": 6.0}}"#,
         )
         .unwrap();
-        assert_eq!(req.network, Network::AlexNet);
+        assert_eq!(req.network.preset(), Some(Network::AlexNet));
         assert_eq!(req.cluster.num_devices(), 16);
         assert_eq!(req.per_gpu_batch, 16);
         assert_eq!(req.strategy, StrategyKind::Data);
@@ -433,6 +482,102 @@ mod tests {
         assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
         let msg = v.get("error").and_then(Json::as_str).unwrap();
         assert!(msg.starts_with("infeasible"), "unexpected error: {msg}");
+    }
+
+    /// A tiny valid spec document for the inline-graph tests.
+    fn tiny_spec(batch: usize) -> String {
+        crate::graph::nets::minicnn(batch).unwrap().to_spec().to_string()
+    }
+
+    #[test]
+    fn inline_graphs_plan_and_evaluate() {
+        let service = PlanService::new();
+        // evaluate an inline custom graph end to end
+        let reply = handle_line(
+            &service,
+            &format!(r#"{{"graph": {}, "devices": 2, "want": "evaluate"}}"#, tiny_spec(64)),
+        );
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        let eval = v.get("evaluation").unwrap();
+        assert!(eval.get("throughput_img_s").unwrap().as_f64().unwrap() > 0.0);
+        // the plan reply for the same graph matches the builtin's: an
+        // inline spec of minicnn IS minicnn, content-addressed
+        let reply = handle_line(
+            &service,
+            &format!(r#"{{"graph": {}, "devices": 2, "want": "plan"}}"#, tiny_spec(64)),
+        );
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        let direct = service
+            .plan(&PlanRequest::new(Network::MiniCnn, 2).unwrap().per_gpu_batch(32))
+            .unwrap();
+        assert_eq!(v.get("plan").unwrap().to_string(), direct.to_json().to_string());
+        // ... and the builtin request above hit the spec-primed caches
+        assert_eq!(service.stats().table_builds, 1, "digest dedup across spec/builtin");
+    }
+
+    #[test]
+    fn inline_graph_caps_are_split_and_named() {
+        // a realistic deep net rides inline untruncated
+        let wide = crate::graph::nets::inception_v3(32).unwrap().to_spec().to_string();
+        let (req, _) =
+            parse_request(&format!(r#"{{"graph": {wide}, "devices": 2}}"#)).unwrap();
+        assert_eq!(req.network.name(), "inception_v3");
+
+        // a request beyond the old blanket 64 KiB *line* cap but within
+        // the new per-field caps must now parse (the point of splitting)
+        let padded = tiny_spec(8)
+            .replace(r#""name":"conv1""#, &format!(r#""name":"{}""#, "x".repeat(70_000)));
+        let line = format!(r#"{{"graph": {padded}, "devices": 2}}"#);
+        assert!(line.len() > 64 * 1024, "padded request is {}B", line.len());
+        assert!(parse_request(&line).is_ok(), "64 KiB is no longer a request ceiling");
+
+        // too many layers: the error names the layer cap
+        let mut layers = vec![
+            r#"{"op": "input", "inputs": [], "shape": [1, 3, 64, 64]}"#.to_string()
+        ];
+        for i in 1..=MAX_GRAPH_LAYERS {
+            layers.push(format!(
+                r#"{{"op": "conv", "cout": 3, "kernel": [1, 1], "stride": [1, 1],
+                     "padding": [0, 0], "inputs": [{}], "shape": [1, 3, 64, 64]}}"#,
+                i - 1
+            ));
+        }
+        let deep = format!(
+            r#"{{"graph": {{"version": 1, "name": "deep", "layers": [{}]}}}}"#,
+            layers.join(",")
+        );
+        let err = parse_request(&deep).unwrap_err();
+        assert!(err.to_string().contains(&MAX_GRAPH_LAYERS.to_string()), "{err}");
+
+        // oversized spec bytes: the error names the byte cap
+        let huge_name = "n".repeat(MAX_GRAPH_BYTES);
+        let fat = format!(
+            r#"{{"graph": {{"version": 1, "name": "{huge_name}", "layers": [
+                {{"op": "input", "inputs": [], "shape": [1, 3, 4, 4]}}]}}, "devices": 2}}"#
+        );
+        let err = parse_request(&fat).unwrap_err();
+        assert!(err.to_string().contains("spec bytes"), "{err}");
+
+        // mutually exclusive / misplaced fields
+        for raw in [
+            format!(r#"{{"net": "lenet5", "graph": {}}}"#, tiny_spec(8)),
+            format!(r#"{{"graph": {}, "batch": 64}}"#, tiny_spec(8)),
+        ] {
+            let err = parse_request(&raw).unwrap_err();
+            assert!(!err.to_string().is_empty());
+        }
+
+        // a malformed inline spec is a one-line typed rejection
+        let err = parse_request(
+            r#"{"graph": {"version": 1, "name": "x", "layers": [
+                {"op": "input", "inputs": [], "shape": [1, 3, 4, 4]},
+                {"op": "softmax", "inputs": [99], "shape": [1, 3]}]}, "devices": 2}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, OptError::InvalidGraph(_)), "{err:?}");
+        assert!(err.to_string().contains("dangling"), "{err}");
     }
 
     #[test]

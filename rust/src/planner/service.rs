@@ -1,5 +1,5 @@
 //! Concurrent plan serving: a thread-safe, shareable front end over the
-//! planning pipeline (DESIGN.md §5).
+//! planning pipeline (DESIGN.md §6).
 //!
 //! A [`Planner`](crate::planner::Planner) is a single-caller session —
 //! every method takes `&mut self`. A [`PlanService`] is its concurrent
@@ -14,16 +14,18 @@
 //!   [`PlanKey`] hash, so unrelated queries never contend on one lock.
 //!   Hit/miss counters are atomics ([`PlanCache::hits`]), summed across
 //!   shards by [`PlanService::stats`].
-//! * **Single-flight state building.** The expensive per-(network,
-//!   batch, cluster, memory-budget) state — [`CostTables`] plus the search backend's
+//! * **Single-flight state building.** The expensive per-(graph,
+//!   cluster, memory-budget) state — [`CostTables`] plus the search backend's
 //!   Algorithm 1 optimum — is memoized behind one [`OnceLock`] per key:
 //!   when many threads miss on the same key at once, exactly one runs
 //!   the build and the rest block until it finishes, instead of all
-//!   redundantly rebuilding tables. Keys compare full cluster structure
-//!   by value (never a lossy hash), the memo is LRU-bounded
-//!   ([`PlanServiceBuilder::state_capacity`]) so a long-running server
-//!   cannot grow without limit, and failed builds are *not* memoized —
-//!   a later request retries.
+//!   redundantly rebuilding tables. Keys are content-addressed: the
+//!   graph by its structural [`digest`](CompGraph::digest) (so identical
+//!   custom specs dedupe with each other and with presets) and the full
+//!   cluster structure by value (never a lossy hash). The memo is
+//!   LRU-bounded ([`PlanServiceBuilder::state_capacity`]) so a
+//!   long-running server cannot grow without limit, and failed builds
+//!   are *not* memoized — a later request retries.
 //!
 //! ```
 //! use std::sync::Arc;
@@ -47,7 +49,7 @@ use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 use crate::cost::{CostModel, CostTables};
 use crate::device::DeviceGraph;
 use crate::error::{OptError, Result};
-use crate::graph::CompGraph;
+use crate::graph::{CompGraph, GraphDigest};
 use crate::memory::MemBudget;
 use crate::optimizer::{strategies, Optimized};
 use crate::parallel::Strategy;
@@ -55,18 +57,21 @@ use crate::plan::{ExecutionPlan, PlanCache, PlanKey};
 
 use super::backend::{Elimination, SearchBackend};
 use super::cluster::ClusterSpec;
-use super::{evaluate_plan, Evaluation, Network, StrategyKind, PER_GPU_BATCH};
+use super::{evaluate_plan, Evaluation, NetworkSpec, StrategyKind, PER_GPU_BATCH};
 
-/// One plan query: which network, on what cluster, at what per-GPU
-/// batch, under which strategy — the unit of work a [`PlanService`]
-/// answers. Requests are plain data (`Clone`), cheap to build per call.
+/// One plan query: which network (preset or custom graph), on what
+/// cluster, at what per-GPU batch, under which strategy — the unit of
+/// work a [`PlanService`] answers. Requests are plain data (`Clone` —
+/// custom graphs are shared behind an `Arc`), cheap to build per call.
 #[derive(Debug, Clone)]
 pub struct PlanRequest {
-    /// The network to plan.
-    pub network: Network,
+    /// The network to plan: a builtin preset or an arbitrary graph.
+    pub network: NetworkSpec,
     /// The cluster to plan against.
     pub cluster: ClusterSpec,
-    /// Per-GPU batch size (the global batch is `per_gpu_batch x devices`).
+    /// Per-GPU batch size (the global batch is `per_gpu_batch x
+    /// devices`). Presets only: a custom graph carries its own batch and
+    /// ignores this field.
     pub per_gpu_batch: usize,
     /// The strategy to resolve and evaluate.
     pub strategy: StrategyKind,
@@ -80,14 +85,14 @@ pub struct PlanRequest {
 impl PlanRequest {
     /// A request against the paper's P100 preset at `devices` GPUs, with
     /// the paper's per-GPU batch and the layer-wise optimal strategy.
-    pub fn new(network: Network, devices: usize) -> Result<PlanRequest> {
+    pub fn new(network: impl Into<NetworkSpec>, devices: usize) -> Result<PlanRequest> {
         Ok(PlanRequest::with_cluster(network, ClusterSpec::p100(devices)?))
     }
 
     /// A request against an arbitrary cluster description.
-    pub fn with_cluster(network: Network, cluster: ClusterSpec) -> PlanRequest {
+    pub fn with_cluster(network: impl Into<NetworkSpec>, cluster: ClusterSpec) -> PlanRequest {
         PlanRequest {
-            network,
+            network: network.into(),
             cluster,
             per_gpu_batch: PER_GPU_BATCH,
             strategy: StrategyKind::Layerwise,
@@ -115,14 +120,18 @@ impl PlanRequest {
     }
 }
 
-/// Identity of the expensive per-(network, batch, cluster, budget)
-/// state. Compared by value, never by a lossy hash, so two distinct
-/// clusters cannot alias one memo entry; the memory budget is part of
-/// the key because it masks the config space the tables enumerate.
+/// Identity of the expensive per-(graph, cluster, budget) state.
+/// Compared by value, never by a lossy hash, so two distinct graphs or
+/// clusters cannot alias one memo entry. The graph is named by its
+/// structural content [`digest`](CompGraph::digest) — not the old
+/// `Network` enum discriminant — so a custom spec structurally identical
+/// to a preset (or to another spec, however it was spelled) shares one
+/// entry, and the batch size rides along inside the digest via the input
+/// shape. The memory budget is part of the key because it masks the
+/// config space the tables enumerate.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct StateKey {
-    network: Network,
-    per_gpu_batch: usize,
+    graph: GraphDigest,
     cluster: ClusterId,
     mem_limit: Option<u64>,
 }
@@ -347,9 +356,10 @@ impl PlanService {
         }
     }
 
-    /// Validate the request and materialize its (graph, devices) pair —
-    /// the cheap per-request state.
-    fn session(&self, req: &PlanRequest) -> Result<(CompGraph, DeviceGraph)> {
+    /// Validate the request and materialize its (graph, devices, global
+    /// batch) triple — the cheap per-request state (custom graphs are an
+    /// `Arc` clone).
+    fn session(&self, req: &PlanRequest) -> Result<(Arc<CompGraph>, DeviceGraph, usize)> {
         if req.per_gpu_batch == 0 {
             return Err(OptError::InvalidArgument(
                 "per-GPU batch size must be at least 1".into(),
@@ -361,21 +371,24 @@ impl PlanService {
             ));
         }
         let devices = req.cluster.device_graph()?;
-        let global = req.per_gpu_batch.checked_mul(devices.num_devices()).ok_or_else(|| {
-            OptError::InvalidArgument(format!(
-                "global batch overflows: {} per GPU x {} devices",
-                req.per_gpu_batch,
-                devices.num_devices()
-            ))
-        })?;
-        let graph = req.network.graph(global);
-        Ok((graph, devices))
+        let global = match req.network.fixed_batch() {
+            Some(batch) => batch,
+            None => req.per_gpu_batch.checked_mul(devices.num_devices()).ok_or_else(|| {
+                OptError::InvalidArgument(format!(
+                    "global batch overflows: {} per GPU x {} devices",
+                    req.per_gpu_batch,
+                    devices.num_devices()
+                ))
+            })?,
+        };
+        let graph = req.network.build_graph(global)?;
+        Ok((graph, devices, global))
     }
 
     /// Resolve the request's strategy: baselines are derived from the
     /// graph shape; `Layerwise` comes from the single-flight memo.
     pub fn strategy(&self, req: &PlanRequest) -> Result<Strategy> {
-        let (graph, devices) = self.session(req)?;
+        let (graph, devices, _) = self.session(req)?;
         self.resolve(req, &graph, &devices)
     }
 
@@ -405,8 +418,7 @@ impl PlanService {
         devices: &DeviceGraph,
     ) -> Result<Arc<TableState>> {
         let key = StateKey {
-            network: req.network,
-            per_gpu_batch: req.per_gpu_batch,
+            graph: graph.digest().clone(),
             cluster: cluster_id(devices),
             mem_limit: req.mem_limit,
         };
@@ -462,7 +474,7 @@ impl PlanService {
     /// The materialized execution plan for a request, served from the
     /// sharded cache.
     pub fn plan(&self, req: &PlanRequest) -> Result<Arc<ExecutionPlan>> {
-        let (graph, devices) = self.session(req)?;
+        let (graph, devices, _) = self.session(req)?;
         let strategy = self.resolve(req, &graph, &devices)?;
         let cm = CostModel::new(&graph, &devices);
         Ok(self.cached_plan(&cm, &strategy))
@@ -472,18 +484,17 @@ impl PlanService {
     /// communication volume — the same numbers a single-threaded
     /// [`Planner`](crate::planner::Planner) produces for the same query.
     pub fn evaluate(&self, req: &PlanRequest) -> Result<Evaluation> {
-        let (graph, devices) = self.session(req)?;
+        let (graph, devices, global_batch) = self.session(req)?;
         let strategy = self.resolve(req, &graph, &devices)?;
         let cm = CostModel::new(&graph, &devices);
         let plan = self.cached_plan(&cm, &strategy);
-        let global_batch = req.per_gpu_batch * devices.num_devices();
         Ok(evaluate_plan(&cm, &plan, &strategy, global_batch))
     }
 
     /// The memoized layer-wise optimum (strategy, cost, search stats)
     /// for the request's (network, batch, cluster), built on first use.
     pub fn optimized(&self, req: &PlanRequest) -> Result<Optimized> {
-        let (graph, devices) = self.session(req)?;
+        let (graph, devices, _) = self.session(req)?;
         Ok(self.state_for(req, &graph, &devices)?.optimized.clone())
     }
 
@@ -491,7 +502,7 @@ impl PlanService {
     /// Table 2) of the memoized cost tables for this request; builds the
     /// state on first use like any layer-wise query.
     pub fn max_configs(&self, req: &PlanRequest) -> Result<usize> {
-        let (graph, devices) = self.session(req)?;
+        let (graph, devices, _) = self.session(req)?;
         Ok(self.state_for(req, &graph, &devices)?.tables.max_configs())
     }
 
@@ -530,7 +541,7 @@ impl Default for PlanService {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::planner::Planner;
+    use crate::planner::{Network, Planner};
 
     fn assert_send_sync<T: Send + Sync>() {}
 

@@ -530,7 +530,7 @@ mod tests {
 
     #[test]
     fn data_parallel_syncs_whole_model() {
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 4);
@@ -556,7 +556,7 @@ mod tests {
 
     #[test]
     fn plan_and_strategy_entry_points_agree_exactly() {
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::owt(&g, 4);
@@ -577,7 +577,7 @@ mod tests {
         // marginal `step_time`. All fields are marginal now; on a
         // homogeneous chain the marginal extensive fields must equal one
         // full step's, and the derived utilization must be coherent.
-        let g = nets::alexnet(32 * 4);
+        let g = nets::alexnet(32 * 4).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 4);
@@ -623,11 +623,11 @@ mod tests {
         use crate::device::ComputeModel;
         use crate::graph::GraphBuilder;
         let mut b = GraphBuilder::new("sync-nic");
-        let x = b.input(1200, 4096, 1, 1);
-        let c = b.conv2d("conv", x, 64, (1, 1), (1, 1), (0, 0));
-        let f = b.fully_connected("fc", c, 2);
-        b.softmax("sm", f);
-        let g = b.finish();
+        let x = b.input(1200, 4096, 1, 1).unwrap();
+        let c = b.conv2d("conv", x, 64, (1, 1), (1, 1), (0, 0)).unwrap();
+        let f = b.fully_connected("fc", c, 2).unwrap();
+        b.softmax("sm", f).unwrap();
+        let g = b.finish().unwrap();
         // inter_bw 5e7 x 2 GPUs/node => node NIC = 1e8 B/s
         let d =
             DeviceGraph::cluster("nic", 2, 2, 15e9, 5e7, 12e9, ComputeModel::p100()).unwrap();
@@ -671,7 +671,7 @@ mod tests {
 
     #[test]
     fn sync_bytes_match_cost_model_accounting() {
-        let g = nets::vgg16(32 * 2);
+        let g = nets::vgg16(32 * 2).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 2);

@@ -64,7 +64,7 @@ mod tests {
 
     #[test]
     fn trace_covers_all_compute() {
-        let g = nets::alexnet(64);
+        let g = nets::alexnet(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::data_parallel(&g, 2);
@@ -80,7 +80,7 @@ mod tests {
 
     #[test]
     fn chrome_json_parses_back() {
-        let g = nets::lenet5(32);
+        let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::owt(&g, 2);
@@ -92,7 +92,7 @@ mod tests {
 
     #[test]
     fn events_on_same_track_do_not_overlap() {
-        let g = nets::alexnet(64);
+        let g = nets::alexnet(64).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
         let cm = CostModel::new(&g, &d);
         let s = strategies::owt(&g, 4);

@@ -57,6 +57,21 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Strict non-negative integer: fractional or negative numbers are
+    /// `None`, never silently truncated/saturated the way
+    /// [`Json::as_usize`]'s `f64 as usize` cast would. The accessor for
+    /// sizes arriving off a wire or an untrusted document.
+    pub fn as_exact_usize(&self) -> Option<usize> {
+        let n = self.as_f64()?;
+        // exclusive upper bound: `usize::MAX as f64` rounds UP to 2^64,
+        // which an inclusive check would accept and then saturate
+        if n.fract() == 0.0 && n >= 0.0 && n < usize::MAX as f64 {
+            Some(n as usize)
+        } else {
+            None
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -116,10 +131,14 @@ impl Json {
         }
     }
 
-    /// Parse a JSON document. Returns an error message on malformed input.
+    /// Parse a JSON document. Returns an error message on malformed
+    /// input, including nesting deeper than [`MAX_DEPTH`] — the parser
+    /// recurses per nesting level, and documents arrive over TCP, so
+    /// unbounded depth would be a remote stack-overflow (an abort, not
+    /// even an unwindable panic).
     pub fn parse(text: &str) -> Result<Json, String> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, i: 0 };
+        let mut p = Parser { b: bytes, i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -148,9 +167,16 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Deepest container nesting [`Json::parse`] accepts. Far beyond any
+/// legitimate manifest, plan, or graph spec (which nest a handful of
+/// levels), and small enough that the recursive parser stays well inside
+/// any thread's stack.
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -176,8 +202,8 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json, String> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.nested(Parser::object),
+            Some(b'[') => self.nested(Parser::array),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -185,6 +211,21 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(format!("unexpected byte at {}", self.i)),
         }
+    }
+
+    /// Run a container parser one nesting level down, rejecting depth
+    /// beyond [`MAX_DEPTH`].
+    fn nested(
+        &mut self,
+        parse: fn(&mut Parser<'a>) -> Result<Json, String>,
+    ) -> Result<Json, String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        let v = parse(self)?;
+        self.depth -= 1;
+        Ok(v)
     }
 
     fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
@@ -337,6 +378,19 @@ mod tests {
     }
 
     #[test]
+    fn exact_usize_never_truncates_or_saturates() {
+        assert_eq!(Json::Num(3.0).as_exact_usize(), Some(3));
+        assert_eq!(Json::Num(0.0).as_exact_usize(), Some(0));
+        assert_eq!(Json::Num(2.5).as_exact_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_exact_usize(), None);
+        // 2^64 is exactly `usize::MAX as f64` (rounded up): a lenient
+        // inclusive bound would saturate it to usize::MAX
+        assert_eq!(Json::Num(18446744073709551616.0).as_exact_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_exact_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_exact_usize(), None);
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
@@ -359,5 +413,18 @@ mod tests {
     #[test]
     fn negative_and_exponent_numbers() {
         assert_eq!(Json::parse("-2.5e3").unwrap().as_f64(), Some(-2500.0));
+    }
+
+    #[test]
+    fn pathological_nesting_is_an_error_not_a_stack_overflow() {
+        // within the cap: fine
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // one past the cap: a parse error, long before the stack is at risk
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&deep).unwrap_err().contains("nesting"));
+        // a wire-sized bomb parses to the same error instead of aborting
+        let bomb = "[".repeat(500_000);
+        assert!(Json::parse(&bomb).unwrap_err().contains("nesting"));
     }
 }

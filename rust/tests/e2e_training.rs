@@ -39,7 +39,7 @@ fn dataset() -> SyntheticDataset {
 /// A mixed layer-wise strategy exercising sample, channel, AND spatial
 /// partitioning in one run (the paper's "hidden dimensions").
 fn mixed_strategy() -> Strategy {
-    let g = nets::minicnn(BATCH);
+    let g = nets::minicnn(BATCH).unwrap();
     let mut cfgs = vec![PConfig::serial(); g.num_layers()];
     for l in &g.layers {
         cfgs[l.id] = match l.name.as_str() {
@@ -60,7 +60,7 @@ fn mixed_strategy() -> Strategy {
 #[test]
 fn data_parallel_matches_oracle() {
     let Some(store) = store() else { return };
-    let g = nets::minicnn(BATCH);
+    let g = nets::minicnn(BATCH).unwrap();
     let strat = strategies::data_parallel(&g, NDEV);
     let mut trainer = Trainer::new(&store, g, strat, NDEV, LR, 7).unwrap();
     let mut oracle =
@@ -85,7 +85,7 @@ fn data_parallel_matches_oracle() {
 #[test]
 fn mixed_layerwise_strategy_matches_oracle() {
     let Some(store) = store() else { return };
-    let g = nets::minicnn(BATCH);
+    let g = nets::minicnn(BATCH).unwrap();
     let mut trainer = Trainer::new(&store, g, mixed_strategy(), NDEV, LR, 9).unwrap();
     let mut oracle =
         OracleTrainer::new(&store, "minicnn", BATCH, trainer.master_params(), LR).unwrap();
@@ -107,7 +107,7 @@ fn all_baseline_strategies_compute_identical_losses() {
     let ds = dataset();
     let mut curves: Vec<Vec<f32>> = Vec::new();
     for name in ["data", "model", "owt"] {
-        let g = nets::minicnn(BATCH);
+        let g = nets::minicnn(BATCH).unwrap();
         let strat = strategies::by_name(name, &g, NDEV).unwrap();
         let mut trainer = Trainer::new(&store, g, strat, NDEV, LR, 11).unwrap();
         let mut curve = Vec::new();
@@ -127,7 +127,7 @@ fn all_baseline_strategies_compute_identical_losses() {
 #[test]
 fn training_reduces_loss() {
     let Some(store) = store() else { return };
-    let g = nets::minicnn(BATCH);
+    let g = nets::minicnn(BATCH).unwrap();
     let strat = strategies::owt(&g, NDEV);
     let mut trainer = Trainer::new(&store, g, strat, NDEV, LR, 3).unwrap();
     let ds = dataset();
@@ -156,7 +156,7 @@ fn optimizer_strategy_is_executable() {
         .build()
         .unwrap();
     let strategy = p.strategy(StrategyKind::Layerwise).unwrap();
-    let g = nets::minicnn(BATCH);
+    let g = nets::minicnn(BATCH).unwrap();
     let mut trainer = Trainer::new(&store, g, strategy, NDEV, LR, 5).unwrap();
     let ds = dataset();
     let (x, y) = ds.batch(0, BATCH);
@@ -168,7 +168,7 @@ fn optimizer_strategy_is_executable() {
 fn missing_artifact_is_reported_clearly() {
     let Some(store) = store() else { return };
     // batch 48 tiles (nt=12) were never generated
-    let g = nets::minicnn(48);
+    let g = nets::minicnn(48).unwrap();
     let strat = strategies::data_parallel(&g, NDEV);
     let err = match Trainer::new(&store, g, strat, NDEV, LR, 1) {
         Err(e) => e,

@@ -1,0 +1,236 @@
+//! Graph-ingestion acceptance suite: every builtin network survives the
+//! builder -> GraphSpec JSON -> CompGraph round trip **byte-identically**
+//! (same optimal step time, same plan JSON) at 2 and 4 devices; malformed
+//! specs are typed `InvalidGraph` rejections; and structurally identical
+//! specs content-address to one PlanService cache entry no matter how
+//! they were spelled.
+
+use std::sync::Arc;
+
+use optcnn::error::OptError;
+use optcnn::graph::CompGraph;
+use optcnn::planner::{Network, NetworkSpec, PlanRequest, PlanService, Planner, StrategyKind};
+use optcnn::util::json::Json;
+
+/// Round-trip a builder-built graph through its spec text.
+fn reload(g: &CompGraph) -> CompGraph {
+    let text = g.to_spec().to_string();
+    CompGraph::from_spec(&Json::parse(&text).expect("spec text parses")).expect("spec validates")
+}
+
+#[test]
+fn every_builtin_plans_byte_identically_from_its_spec() {
+    for net in Network::ALL {
+        for ndev in [2usize, 4] {
+            let mut direct = Planner::builder(net).devices(ndev).build().unwrap();
+            let spec = NetworkSpec::custom(reload(direct.graph())).unwrap();
+            let mut loaded = Planner::builder(spec).devices(ndev).build().unwrap();
+            assert_eq!(direct.global_batch(), loaded.global_batch(), "{net}@{ndev}");
+
+            // identical optimal step time from the layer-wise search
+            let a = direct.optimize().unwrap();
+            let b = loaded.optimize().unwrap();
+            assert_eq!(a.cost, b.cost, "{net}@{ndev}: optimal cost must match exactly");
+            assert_eq!(a.strategy, b.strategy, "{net}@{ndev}: optimal strategy must match");
+
+            // identical materialized plan bytes
+            let pa = direct.plan(StrategyKind::Layerwise).unwrap();
+            let pb = loaded.plan(StrategyKind::Layerwise).unwrap();
+            assert_eq!(
+                pa.to_json().to_string(),
+                pb.to_json().to_string(),
+                "{net}@{ndev}: plan JSON must be byte-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn malformed_spec_corpus_returns_invalid_graph() {
+    let corpus: &[(&str, &str)] = &[
+        (
+            "dangling edge",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "fc", "cout": 10, "inputs": [7], "shape": [4, 10]}]}"#,
+        ),
+        (
+            "cycle (backward input)",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "conv", "cout": 3, "kernel": [1, 1], "stride": [1, 1],
+                 "padding": [0, 0], "inputs": [2], "shape": [4, 3, 8, 8]},
+                {"op": "conv", "cout": 3, "kernel": [1, 1], "stride": [1, 1],
+                 "padding": [0, 0], "inputs": [1], "shape": [4, 3, 8, 8]}]}"#,
+        ),
+        (
+            "self-loop",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "add", "inputs": [1, 1], "shape": [4, 3, 8, 8]}]}"#,
+        ),
+        (
+            "shape mismatch",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "conv", "cout": 16, "kernel": [3, 3], "stride": [1, 1],
+                 "padding": [1, 1], "inputs": [0], "shape": [4, 99, 8, 8]}]}"#,
+        ),
+        (
+            "oversized kernel",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "conv", "cout": 4, "kernel": [64, 64], "stride": [1, 1],
+                 "padding": [0, 0], "inputs": [0], "shape": [4, 4, 1, 1]}]}"#,
+        ),
+        (
+            "zero stride",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "pool", "kind": "max", "kernel": [2, 2], "stride": [0, 2],
+                 "padding": [0, 0], "inputs": [0], "shape": [4, 3, 4, 4]}]}"#,
+        ),
+        (
+            "zero-extent input",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [0, 3, 8, 8]}]}"#,
+        ),
+        (
+            "second input layer",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]}]}"#,
+        ),
+        (
+            "wrong arity add",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "add", "inputs": [0], "shape": [4, 3, 8, 8]}]}"#,
+        ),
+        (
+            "unknown op",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "warp", "inputs": [0], "shape": [4, 3, 8, 8]}]}"#,
+        ),
+        (
+            "billion-sample batch (extent cap)",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [1000000000000, 3, 4, 4]}]}"#,
+        ),
+        (
+            "oversized layer volume",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [65536, 65536, 65536, 4]}]}"#,
+        ),
+        (
+            "overflowing padding (window cap)",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "conv", "cout": 4, "kernel": [3, 3], "stride": [1, 1],
+                 "padding": [999999999, 1], "inputs": [0], "shape": [4, 4, 8, 8]}]}"#,
+        ),
+        (
+            "duplicate inputs",
+            r#"{"version": 1, "name": "bad", "layers": [
+                {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+                {"op": "conv", "cout": 4, "kernel": [1, 1], "stride": [1, 1],
+                 "padding": [0, 0], "inputs": [0], "shape": [4, 4, 8, 8]},
+                {"op": "concat", "inputs": [1, 1], "shape": [4, 8, 8, 8]}]}"#,
+        ),
+    ];
+    for (what, text) in corpus {
+        let err = CompGraph::from_spec(&Json::parse(text).unwrap()).unwrap_err();
+        assert!(
+            matches!(err, OptError::InvalidGraph(_)),
+            "{what}: expected InvalidGraph, got {err:?}"
+        );
+        let msg = err.to_string();
+        assert!(!msg.is_empty() && !msg.contains('\n'), "{what}: {msg:?}");
+        assert_eq!(err.exit_code(), 2, "{what}: malformed specs are usage errors");
+    }
+}
+
+#[test]
+fn textually_different_specs_share_one_service_cache_entry() {
+    // The same network spelled three ways: builder export, reordered/
+    // reformatted JSON (BTreeMap canonicalizes on parse anyway, so vary
+    // what actually can vary: layer names and the graph name's spelling
+    // stays — names are cosmetic and excluded from the digest).
+    let base = optcnn::graph::nets::minicnn(64).unwrap();
+    let text_a = base.to_spec().to_string();
+    let text_b = {
+        // rename every layer and inject whitespace: textually different,
+        // structurally identical
+        let renamed = text_a.replace(r#""name":"conv1""#, r#""name":"first_conv""#);
+        renamed.replace(":", " : ").replace(",", " , ")
+    };
+    assert_ne!(text_a, text_b);
+    let ga = CompGraph::from_spec(&Json::parse(&text_a).unwrap()).unwrap();
+    let gb = CompGraph::from_spec(&Json::parse(&text_b).unwrap()).unwrap();
+    assert_eq!(ga.digest(), gb.digest(), "cosmetic differences must not change identity");
+
+    let service = PlanService::new();
+    let req_a = PlanRequest::new(NetworkSpec::custom(ga).unwrap(), 2).unwrap();
+    let req_b = PlanRequest::new(NetworkSpec::custom(gb).unwrap(), 2).unwrap();
+    let plan_a = service.plan(&req_a).unwrap();
+    let plan_b = service.plan(&req_b).unwrap();
+    assert!(
+        Arc::ptr_eq(&plan_a, &plan_b),
+        "structurally identical specs must hit the same cache entry"
+    );
+    let stats = service.stats();
+    assert_eq!(stats.table_builds, 1, "one single-flight build for one digest");
+    assert_eq!((stats.plan_hits, stats.plan_misses), (1, 1));
+
+    // ... and a structurally different batch is a different address
+    let other = optcnn::graph::nets::minicnn(128).unwrap();
+    let req_c = PlanRequest::new(NetworkSpec::custom(other).unwrap(), 2).unwrap();
+    let plan_c = service.plan(&req_c).unwrap();
+    assert!(!Arc::ptr_eq(&plan_a, &plan_c), "distinct graphs must never alias");
+    assert_eq!(service.stats().table_builds, 2);
+}
+
+#[test]
+fn custom_and_preset_share_state_when_structurally_equal() {
+    // A spec exported from a builtin IS that builtin to the service: the
+    // preset path and the custom path converge on one digest.
+    let service = PlanService::new();
+    let preset = PlanRequest::new(Network::LeNet5, 2).unwrap();
+    let plan_preset = service.plan(&preset).unwrap();
+    let spec = NetworkSpec::custom(reload(&optcnn::graph::nets::lenet5(64).unwrap())).unwrap();
+    let custom = PlanRequest::new(spec, 2).unwrap();
+    let plan_custom = service.plan(&custom).unwrap();
+    assert!(Arc::ptr_eq(&plan_preset, &plan_custom));
+    assert_eq!(service.stats().table_builds, 1);
+}
+
+#[test]
+fn checked_in_minicnn_spec_is_the_builtin() {
+    // the spec shipped under config/ must load, validate, and be
+    // structurally identical to `nets::minicnn(64)` — `optcnn graph
+    // --validate` runs over it in CI
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../config/minicnn.graph.json");
+    let text = std::fs::read_to_string(path).unwrap();
+    let g = CompGraph::from_spec(&Json::parse(&text).unwrap()).unwrap();
+    let builtin = optcnn::graph::nets::minicnn(64).unwrap();
+    assert_eq!(g.digest(), builtin.digest());
+    assert_eq!(g.name, "minicnn");
+}
+
+#[test]
+fn evaluations_agree_between_spec_and_builder_paths() {
+    // beyond plan bytes: the derived numbers (estimate, simulated step,
+    // comm) agree exactly for a mid-size branchy net
+    let mut direct = Planner::builder(Network::ResNet18).devices(2).build().unwrap();
+    let spec = NetworkSpec::custom(reload(direct.graph())).unwrap();
+    let mut loaded = Planner::builder(spec).devices(2).build().unwrap();
+    for kind in [StrategyKind::Data, StrategyKind::Owt] {
+        let a = direct.evaluate(kind).unwrap();
+        let b = loaded.evaluate(kind).unwrap();
+        assert_eq!(a.estimate, b.estimate, "{kind}");
+        assert_eq!(a.sim.step_time, b.sim.step_time, "{kind}");
+        assert_eq!(a.comm.total(), b.comm.total(), "{kind}");
+        assert_eq!(a.peak_mem_per_dev, b.peak_mem_per_dev, "{kind}");
+    }
+}

@@ -29,7 +29,7 @@ fn peak_bytes_monotone_in_each_partition_degree() {
     // tiles subdivide c1's), the per-device peak must not grow: finer
     // partitioning can only shed parameter replicas and shrink the
     // resident activation window.
-    for g in [nets::lenet5(64), nets::alexnet(128)] {
+    for g in [nets::lenet5(64).unwrap(), nets::alexnet(128).unwrap()] {
         for l in &g.layers {
             let cfgs = enumerate_configs(l, 8);
             let peaks: Vec<f64> = cfgs.iter().map(|c| layer_peak_bytes(l, c)).collect();
@@ -65,7 +65,7 @@ fn peak_bytes_monotone_in_each_partition_degree() {
 
 #[test]
 fn infinite_budget_reproduces_unconstrained_tables_exactly() {
-    let g = nets::vgg16(64);
+    let g = nets::vgg16(64).unwrap();
     let d = DeviceGraph::p100_cluster(2).unwrap();
     let cm = CostModel::new(&g, &d);
     let free = CostTables::build(&cm, 2);
@@ -128,7 +128,7 @@ fn tight_budget_masks_configs_and_the_optimum_stays_feasible() {
     // are masked out, but every layer keeps at least one config, so the
     // search still succeeds — over a strictly smaller space.
     let budget = 2_000_000_000.0f64;
-    let g = nets::vgg16(32 * 4);
+    let g = nets::vgg16(32 * 4).unwrap();
     let d = DeviceGraph::p100_cluster(4).unwrap();
     let cm = CostModel::new(&g, &d);
     let free = CostTables::build(&cm, 4);

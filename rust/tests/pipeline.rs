@@ -18,7 +18,7 @@ fn planner(net: Network, ndev: usize) -> Planner {
 #[test]
 fn fig2_channel_beats_sample_for_fc6() {
     // Figure 2: channel parallelism slashes fc6 communication.
-    let g = nets::vgg16(64);
+    let g = nets::vgg16(64).unwrap();
     let d = DeviceGraph::p100_cluster(2).unwrap();
     let cm = CostModel::new(&g, &d);
     let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();
@@ -34,7 +34,7 @@ fn fig2_channel_beats_sample_for_fc6() {
 fn fig3_degree_optima() {
     // Figure 3: early conv prefers all 16 devices; the classifier FC
     // prefers a small degree.
-    let g = nets::inception_v3(32 * 16);
+    let g = nets::inception_v3(32 * 16).unwrap();
     let d = DeviceGraph::p100_cluster(16).unwrap();
     let cm = CostModel::new(&g, &d);
     let conv = g.layers.iter().find(|l| l.name == "stem_conv3").unwrap();
@@ -154,7 +154,7 @@ fn central_ps_changes_the_optimum_but_not_correctness() {
     // The sync-protocol ablation: under a central PS, replication gets
     // more expensive, so the optimum shifts away from data parallelism —
     // but it must still beat every baseline under the same model.
-    let g = nets::alexnet(32 * 4);
+    let g = nets::alexnet(32 * 4).unwrap();
     let d = DeviceGraph::p100_cluster(4).unwrap();
     let cm = CostModel::new(&g, &d).with_sync(SyncModel::Central);
     let tables = CostTables::build(&cm, 4);
@@ -168,7 +168,7 @@ fn central_ps_changes_the_optimum_but_not_correctness() {
 #[test]
 fn measured_tc_override_flows_through() {
     // The measured-profile hook: overriding t_C changes strategy costs.
-    let g = nets::lenet5(32);
+    let g = nets::lenet5(32).unwrap();
     let d = DeviceGraph::p100_cluster(2).unwrap();
     let mut cm = CostModel::new(&g, &d);
     let base_tables = CostTables::build(&cm, 2);

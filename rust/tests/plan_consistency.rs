@@ -117,23 +117,27 @@ fn plan_driven_simulation_equals_strategy_driven() {
 fn random_net(g: &mut Gen) -> optcnn::graph::CompGraph {
     let mut b = GraphBuilder::new("random");
     let batch = *g.choose(&[4usize, 8]);
-    let mut cur = b.input(batch, *g.choose(&[1usize, 3]), 16, 16);
+    let mut cur = b.input(batch, *g.choose(&[1usize, 3]), 16, 16).unwrap();
     let depth = g.usize_in(1, 4);
     for i in 0..depth {
         if g.bool() && i == 0 {
-            let c1 =
-                b.conv2d(&format!("bl{i}"), cur, *g.choose(&[4usize, 8]), (3, 3), (1, 1), (1, 1));
-            let c2 =
-                b.conv2d(&format!("br{i}"), cur, *g.choose(&[4usize, 8]), (1, 1), (1, 1), (0, 0));
-            cur = b.concat(&format!("cat{i}"), &[c1, c2]);
+            let c1 = b
+                .conv2d(&format!("bl{i}"), cur, *g.choose(&[4usize, 8]), (3, 3), (1, 1), (1, 1))
+                .unwrap();
+            let c2 = b
+                .conv2d(&format!("br{i}"), cur, *g.choose(&[4usize, 8]), (1, 1), (1, 1), (0, 0))
+                .unwrap();
+            cur = b.concat(&format!("cat{i}"), &[c1, c2]).unwrap();
         } else {
-            cur = b.conv2d(&format!("c{i}"), cur, *g.choose(&[4usize, 8]), (3, 3), (1, 1), (1, 1));
+            cur = b
+                .conv2d(&format!("c{i}"), cur, *g.choose(&[4usize, 8]), (3, 3), (1, 1), (1, 1))
+                .unwrap();
         }
-        cur = b.pool2d(&format!("p{i}"), cur, PoolKind::Max, (2, 2), (2, 2), (0, 0));
+        cur = b.pool2d(&format!("p{i}"), cur, PoolKind::Max, (2, 2), (2, 2), (0, 0)).unwrap();
     }
-    let f = b.fully_connected("fc", cur, 10);
-    b.softmax("sm", f);
-    b.finish()
+    let f = b.fully_connected("fc", cur, 10).unwrap();
+    b.softmax("sm", f).unwrap();
+    b.finish().unwrap()
 }
 
 /// Property: for random nets and random baseline strategies, the plan's

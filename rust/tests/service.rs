@@ -178,6 +178,25 @@ fn serve_answers_over_a_real_socket() {
     assert!(eval.get("throughput_img_s").unwrap().as_f64().unwrap() > 0.0);
     assert!(eval.get("sim_step_s").unwrap().as_f64().unwrap() > 0.0);
 
+    // an inline custom graph (the GraphSpec wire form) plans over the
+    // same socket, and content-addresses to the builtin it mirrors
+    let spec = optcnn::graph::nets::lenet5(64).unwrap().to_spec().to_string();
+    let v = ask(&format!(r#"{{"graph": {spec}, "devices": 2, "want": "evaluate"}}"#));
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "inline graph must plan");
+    let eval = v.get("evaluation").unwrap();
+    assert!(eval.get("throughput_img_s").unwrap().as_f64().unwrap() > 0.0);
+
+    // a malformed inline graph answers a typed one-line error
+    let v = ask(
+        r#"{"graph": {"version": 1, "name": "bad", "layers": [
+            {"op": "input", "inputs": [], "shape": [4, 3, 8, 8]},
+            {"op": "fc", "cout": 10, "inputs": [9], "shape": [4, 10]}]}, "devices": 2}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("invalid graph"));
+
     // a malformed request answers an error instead of dropping the line
     let v = ask(r#"{"net": "not-a-net", "devices": 2}"#);
     assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
