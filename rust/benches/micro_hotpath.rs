@@ -2,14 +2,17 @@
 //! cost-table construction, the elimination DP, the simulator, and the
 //! tensor repartitioning primitives used by the executor.
 
-use optcnn::cost::{CostModel, CostTables};
+use optcnn::cost::{BuildOptions, CostModel, CostTables, TableMemo};
 use optcnn::device::DeviceGraph;
 use optcnn::graph::nets;
 use optcnn::optimizer;
 use optcnn::parallel::{output_tiles, PConfig};
 use optcnn::sim::simulate;
 use optcnn::tensor::{Region, Tensor};
-use optcnn::util::benchkit::{bench, time_once};
+use optcnn::util::benchkit::{bench, bench_json, time_once};
+
+const BUILTINS: [&str; 7] =
+    ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18", "resnet50", "minicnn"];
 
 fn main() {
     println!("== micro: cost tables ==");
@@ -19,6 +22,44 @@ fn main() {
         let cm = CostModel::new(&g, &d);
         let (_, dt) = time_once(|| CostTables::build(&cm, ndev));
         println!("cost_tables_build({net}, {ndev} dev)          {dt:>10.3}s");
+    }
+
+    // Cold-plan acceptance bench: serial vs parallel vs warm-memo table
+    // construction for every builtin. `OPTCNN_BENCH_JSON=<path>` writes
+    // the measurements as a committed artifact (BENCH_cold_plan.json).
+    println!("\n== micro: cold plan build (serial / parallel / warm-memo) ==");
+    let mut cold_plan: Vec<(String, f64)> = Vec::new();
+    for net in BUILTINS {
+        let ndev = 4usize;
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let ser = BuildOptions { threads: 1, memo: None };
+        let (r, t_ser) = time_once(|| CostTables::build_opts(&cm, ndev, None, &ser));
+        r.unwrap();
+        let memo = TableMemo::new();
+        let par = BuildOptions { threads: 0, memo: Some(&memo) };
+        let (r, t_par) = time_once(|| CostTables::build_opts(&cm, ndev, None, &par));
+        r.unwrap();
+        let (r, t_warm) = time_once(|| CostTables::build_opts(&cm, ndev, None, &par));
+        r.unwrap();
+        println!(
+            "cold_plan({net:<12} {ndev} dev)  serial {:>9.1}ms  parallel {:>9.1}ms  \
+             warm {:>9.1}ms  ({:.1}x / {:.0}x)",
+            t_ser * 1e3,
+            t_par * 1e3,
+            t_warm * 1e3,
+            t_ser / t_par.max(1e-12),
+            t_ser / t_warm.max(1e-12),
+        );
+        cold_plan.push((format!("{net}/serial"), t_ser));
+        cold_plan.push((format!("{net}/parallel"), t_par));
+        cold_plan.push((format!("{net}/warm_memo"), t_warm));
+    }
+    if let Ok(path) = std::env::var("OPTCNN_BENCH_JSON") {
+        let doc = bench_json("cold_plan", &cold_plan);
+        std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
+        println!("wrote machine-readable results to {path}");
     }
 
     println!("\n== micro: elimination DP ==");

@@ -8,7 +8,7 @@
 //! serving scenario the session API exists for.
 
 use optcnn::planner::{Network, Planner, StrategyKind};
-use optcnn::util::benchkit::{bench, time_once};
+use optcnn::util::benchkit::{bench, bench_json, time_once};
 
 fn main() {
     let net = Network::Vgg16;
@@ -50,4 +50,16 @@ fn main() {
         cold / warm.median.max(1e-12),
         cold / strat.median.max(1e-12)
     );
+    if let Ok(path) = std::env::var("OPTCNN_BENCH_JSON") {
+        let doc = bench_json(
+            "planner_session",
+            &[
+                ("cold_build_and_query".to_string(), cold),
+                ("warm_session_query".to_string(), warm.median),
+                ("warm_strategy_lookup".to_string(), strat.median),
+            ],
+        );
+        std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
+        println!("wrote machine-readable results to {path}");
+    }
 }

@@ -1,0 +1,397 @@
+//! Content-addressed memoization of per-layer and per-edge cost tables
+//! (DESIGN.md §7).
+//!
+//! Per-layer node tables and per-edge transfer tables are pure functions
+//! of local structure: a layer's operator/parameters/shapes plus the
+//! cluster, budget, and cost-model policies fully determine its config
+//! enumeration, feasibility mask, and `t_C + t_S` row; an edge's table is
+//! likewise determined by its two endpoint layers and input slot. This
+//! module keys those results by value — [`LayerTableKey`] /
+//! [`EdgeTableKey`] built from the position- and name-free layer
+//! canonical form (`graph::spec`), the structural
+//! [`ClusterFingerprint`](crate::device::ClusterFingerprint), the budget
+//! bytes' bit pattern, and the sync/placement policies — so two graphs
+//! that differ in one branch rebuild only the changed layers. It is the
+//! per-layer analogue of the whole-graph digest dedup the plan service
+//! performs, and it composes with it: the service consults its
+//! single-flight state memo first, and only whole-graph misses reach this
+//! per-layer memo.
+//!
+//! Entries are built **single-flight**: concurrent requests for one key
+//! block on one build (the `OnceLock`-cell idiom shared with
+//! `planner::service::StateMemo`), so a service hammered with overlapping
+//! graphs builds each distinct layer exactly once — `misses` counts
+//! builds that actually ran. Both maps are LRU-bounded, and failed
+//! builds (an infeasible layer under a budget) are evicted immediately
+//! rather than cached, so a later identical request retries.
+//!
+//! Memoization is bypassed entirely for measured-`t_C` cost models: the
+//! measured timings are per-session arrays, not content-addressable
+//! structure.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use crate::device::ClusterFingerprint;
+use crate::error::Result;
+use crate::memory::MemBudget;
+use crate::parallel::{PConfig, Placement};
+use crate::tensor::Region;
+
+use super::{CostModel, SyncModel};
+
+/// Identity of one layer's node-cost table: the layer's position-free
+/// canonical form plus everything else its enumeration, feasibility
+/// mask, and `t_C + t_S` row read. Opaque — constructed internally by
+/// the table builder, compared and hashed by the memo.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LayerTableKey {
+    layer: Arc<str>,
+    cluster: Arc<ClusterFingerprint>,
+    ndev: usize,
+    /// `MemBudget::bytes_per_dev` bit pattern; `None` = unbudgeted.
+    budget_bits: Option<u64>,
+    sync: SyncModel,
+    placement: Placement,
+}
+
+/// Identity of one edge's transfer-cost table: both endpoints' canonical
+/// forms, the consumer input slot, and the build context that shapes the
+/// two config lists and the tile placement. `t_X` never reads the sync
+/// model, so it is deliberately absent.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EdgeTableKey {
+    src: Arc<str>,
+    dst: Arc<str>,
+    in_idx: usize,
+    cluster: Arc<ClusterFingerprint>,
+    ndev: usize,
+    budget_bits: Option<u64>,
+    placement: Placement,
+}
+
+/// The build-wide components of memo keys, captured once per table build
+/// and combined with per-layer canonical forms as keys are needed.
+#[derive(Debug, Clone)]
+pub struct KeyContext {
+    cluster: Arc<ClusterFingerprint>,
+    ndev: usize,
+    budget_bits: Option<u64>,
+    sync: SyncModel,
+    placement: Placement,
+}
+
+impl KeyContext {
+    /// Capture everything but the layer identity from one build's inputs.
+    pub fn new(cm: &CostModel<'_>, ndev: usize, budget: Option<MemBudget>) -> KeyContext {
+        KeyContext {
+            cluster: Arc::new(cm.devices.fingerprint()),
+            ndev,
+            budget_bits: budget.map(|b| b.bytes_per_dev.to_bits()),
+            sync: cm.sync,
+            placement: cm.placement,
+        }
+    }
+
+    /// The node-table key for a layer with canonical form `canon`.
+    pub(crate) fn layer_key(&self, canon: &Arc<str>) -> LayerTableKey {
+        LayerTableKey {
+            layer: Arc::clone(canon),
+            cluster: Arc::clone(&self.cluster),
+            ndev: self.ndev,
+            budget_bits: self.budget_bits,
+            sync: self.sync,
+            placement: self.placement,
+        }
+    }
+
+    /// The edge-table key for an edge between layers with canonical forms
+    /// `src` and `dst`, feeding the consumer's input slot `in_idx`.
+    pub(crate) fn edge_key(&self, src: &Arc<str>, dst: &Arc<str>, in_idx: usize) -> EdgeTableKey {
+        EdgeTableKey {
+            src: Arc::clone(src),
+            dst: Arc::clone(dst),
+            in_idx,
+            cluster: Arc::clone(&self.cluster),
+            ndev: self.ndev,
+            budget_bits: self.budget_bits,
+            placement: self.placement,
+        }
+    }
+}
+
+/// One layer's memoized tables: the (budget-masked) config list, each
+/// kept config's index in the unmasked enumeration (the `measured_tc`
+/// translation), the `t_C + t_S` cost row, and the output tiling per
+/// config (reused by every edge build touching the layer).
+#[derive(Debug)]
+pub struct LayerTables {
+    /// Kept configurations, in canonical enumeration order.
+    pub configs: Vec<PConfig>,
+    /// Each kept config's index in the unmasked enumeration.
+    pub orig_idx: Vec<usize>,
+    /// `t_C + t_S` per kept config.
+    pub cost: Vec<f64>,
+    /// Output tiles per kept config (row-major tile order).
+    pub tiles: Vec<Vec<Region>>,
+}
+
+type NodeCell = OnceLock<Result<Arc<LayerTables>>>;
+type EdgeCell = OnceLock<Arc<Vec<f64>>>;
+
+/// A small LRU of single-flight build cells — the `StateMemo` idiom,
+/// generic over key and cell type so node and edge maps share it.
+struct Lru<K, C> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (u64, Arc<C>)>,
+}
+
+impl<K: Eq + Hash + Clone, C: Default> Lru<K, C> {
+    fn new(cap: usize) -> Lru<K, C> {
+        Lru { cap, tick: 0, map: HashMap::new() }
+    }
+
+    /// The cell for `key`, created empty on first sight; bumps the key's
+    /// recency and evicts the stalest entry when over capacity.
+    fn cell(&mut self, key: &K) -> Arc<C> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((t, cell)) = self.map.get_mut(key) {
+            *t = tick;
+            return Arc::clone(cell);
+        }
+        if self.map.len() >= self.cap {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        let cell = Arc::new(C::default());
+        self.map.insert(key.clone(), (tick, Arc::clone(&cell)));
+        cell
+    }
+
+    /// Drop `key`'s entry iff it still holds `cell` — a failed build must
+    /// not evict a successor that already replaced it.
+    fn forget(&mut self, key: &K, cell: &Arc<C>) {
+        if let Some((_, current)) = self.map.get(key) {
+            if Arc::ptr_eq(current, cell) {
+                self.map.remove(key);
+            }
+        }
+    }
+}
+
+/// Point-in-time counters of a [`TableMemo`] (monotone except the cached
+/// sizes, which track the LRU maps).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Lookups answered from a completed (or in-flight) build.
+    pub hits: u64,
+    /// Lookups that ran a build — exactly the number of builds performed.
+    pub misses: u64,
+    /// Layer (node-table) entries currently resident.
+    pub layers_cached: usize,
+    /// Edge-table entries currently resident.
+    pub edges_cached: usize,
+}
+
+/// The shared, thread-safe per-layer/per-edge cost-table memo. One
+/// instance typically lives behind a `PlanService` (every build routed
+/// through the service reuses it) or a `Planner` session.
+pub struct TableMemo {
+    nodes: Mutex<Lru<LayerTableKey, NodeCell>>,
+    edges: Mutex<Lru<EdgeTableKey, EdgeCell>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TableMemo {
+    /// Default capacities: 512 layer entries, 1024 edge entries — several
+    /// ImageNet-scale networks' worth of distinct layers, with the edge
+    /// cap bounding the dominant `C^2`-sized cost matrices.
+    pub fn new() -> TableMemo {
+        TableMemo::with_capacity(512, 1024)
+    }
+
+    /// A memo with explicit per-map entry bounds (both must be >= 1).
+    pub fn with_capacity(layer_entries: usize, edge_entries: usize) -> TableMemo {
+        TableMemo {
+            nodes: Mutex::new(Lru::new(layer_entries.max(1))),
+            edges: Mutex::new(Lru::new(edge_entries.max(1))),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Current counters (see [`MemoStats`]).
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            layers_cached: self.nodes.lock().unwrap_or_else(PoisonError::into_inner).map.len(),
+            edges_cached: self.edges.lock().unwrap_or_else(PoisonError::into_inner).map.len(),
+        }
+    }
+
+    fn note(&self, ran: bool) {
+        if ran {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The node tables for `key`, building single-flight via `build` on a
+    /// miss. A failed build is returned but *not* retained, so an
+    /// identical later request retries instead of replaying the failure.
+    pub(crate) fn node_tables(
+        &self,
+        key: &LayerTableKey,
+        build: impl FnOnce() -> Result<LayerTables>,
+    ) -> Result<Arc<LayerTables>> {
+        let cell = self.nodes.lock().unwrap_or_else(PoisonError::into_inner).cell(key);
+        let mut ran = false;
+        let out = cell.get_or_init(|| {
+            ran = true;
+            build().map(Arc::new)
+        });
+        self.note(ran);
+        match out {
+            Ok(tables) => Ok(Arc::clone(tables)),
+            Err(e) => {
+                let e = e.clone();
+                self.nodes.lock().unwrap_or_else(PoisonError::into_inner).forget(key, &cell);
+                Err(e)
+            }
+        }
+    }
+
+    /// The transfer-cost matrix for `key`, building single-flight via
+    /// `build` on a miss (edge builds are infallible).
+    pub(crate) fn edge_cost(
+        &self,
+        key: &EdgeTableKey,
+        build: impl FnOnce() -> Vec<f64>,
+    ) -> Arc<Vec<f64>> {
+        let cell = self.edges.lock().unwrap_or_else(PoisonError::into_inner).cell(key);
+        let mut ran = false;
+        let cost = cell.get_or_init(|| {
+            ran = true;
+            Arc::new(build())
+        });
+        self.note(ran);
+        Arc::clone(cost)
+    }
+}
+
+impl Default for TableMemo {
+    fn default() -> TableMemo {
+        TableMemo::new()
+    }
+}
+
+impl std::fmt::Debug for TableMemo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TableMemo").field("stats", &self.stats()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::error::OptError;
+    use crate::graph::nets;
+
+    fn ctx(ndev: usize, budget: Option<MemBudget>) -> (KeyContext, KeyContext) {
+        let g = nets::lenet5(32).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
+        let cm = CostModel::new(&g, &d);
+        (KeyContext::new(&cm, ndev, budget), KeyContext::new(&cm, ndev, budget))
+    }
+
+    #[test]
+    fn keys_compare_by_value_across_contexts() {
+        let (a, b) = ctx(2, Some(MemBudget::new(1 << 30)));
+        let canon: Arc<str> = Arc::from("layer");
+        assert_eq!(a.layer_key(&canon), b.layer_key(&canon));
+        let other: Arc<str> = Arc::from("other");
+        assert_ne!(a.layer_key(&canon), a.layer_key(&other));
+        assert_eq!(a.edge_key(&canon, &other, 0), b.edge_key(&canon, &other, 0));
+        assert_ne!(a.edge_key(&canon, &other, 0), a.edge_key(&canon, &other, 1));
+        // the budget is part of the identity
+        let (c, _) = ctx(2, None);
+        assert_ne!(a.layer_key(&canon), c.layer_key(&canon));
+    }
+
+    #[test]
+    fn memo_builds_once_then_hits() {
+        let memo = TableMemo::new();
+        let (a, _) = ctx(2, None);
+        let canon: Arc<str> = Arc::from("layer");
+        let key = a.layer_key(&canon);
+        let mut builds = 0;
+        for _ in 0..3 {
+            let t = memo
+                .node_tables(&key, || {
+                    builds += 1;
+                    Ok(LayerTables {
+                        configs: vec![PConfig::serial()],
+                        orig_idx: vec![0],
+                        cost: vec![1.0],
+                        tiles: vec![vec![]],
+                    })
+                })
+                .unwrap();
+            assert_eq!(t.cost, vec![1.0]);
+        }
+        assert_eq!(builds, 1, "single-flight: one build for three lookups");
+        let s = memo.stats();
+        assert_eq!((s.hits, s.misses, s.layers_cached), (2, 1, 1));
+    }
+
+    #[test]
+    fn failed_builds_are_not_retained() {
+        let memo = TableMemo::new();
+        let (a, _) = ctx(2, Some(MemBudget::new(1)));
+        let canon: Arc<str> = Arc::from("layer");
+        let key = a.layer_key(&canon);
+        let fail = || Err(OptError::Infeasible { layer: "layer".into(), overshoot: 7 });
+        assert!(memo.node_tables(&key, fail).is_err());
+        assert_eq!(memo.stats().layers_cached, 0, "failure evicted for retry");
+        // the retry runs the builder again
+        let mut reran = false;
+        let _ = memo.node_tables(&key, || {
+            reran = true;
+            fail()
+        });
+        assert!(reran);
+        assert_eq!(memo.stats().misses, 2);
+    }
+
+    #[test]
+    fn lru_bounds_both_maps() {
+        let memo = TableMemo::with_capacity(2, 2);
+        let (a, _) = ctx(2, None);
+        for i in 0..5 {
+            let canon: Arc<str> = Arc::from(format!("layer{i}").as_str());
+            let key = a.layer_key(&canon);
+            let _ = memo.node_tables(&key, || {
+                Ok(LayerTables { configs: vec![], orig_idx: vec![], cost: vec![], tiles: vec![] })
+            });
+            let ekey = a.edge_key(&canon, &canon, 0);
+            let _ = memo.edge_cost(&ekey, Vec::new);
+        }
+        let s = memo.stats();
+        assert!(s.layers_cached <= 2 && s.edges_cached <= 2, "{s:?}");
+        assert_eq!(s.misses, 10, "every distinct key built exactly once");
+    }
+}

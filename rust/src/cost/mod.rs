@@ -15,10 +15,12 @@
 //! hardware (P100) — see DESIGN.md §2 — and supports a measured mode that
 //! overrides `t_C` with timings from PJRT executions.
 
+pub mod memo;
 pub mod profile;
 pub mod tables;
 
-pub use tables::{CostTables, EdgeTable};
+pub use memo::{MemoStats, TableMemo};
+pub use tables::{BuildOptions, CostTables, EdgeTable};
 
 use crate::device::DeviceGraph;
 use crate::graph::{CompGraph, Layer, LayerId, OpKind};
@@ -32,7 +34,7 @@ use crate::parallel::{
 pub(crate) const LINK_LATENCY: f64 = 2e-6;
 
 /// How parameter replicas synchronize (the `t_S` protocol).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum SyncModel {
     /// The parameter server for each layer is sharded across the replica
     /// devices themselves (bandwidth-optimal, allreduce-equivalent; what

@@ -10,14 +10,26 @@
 //! configurations out of the enumeration before anything is priced, so a
 //! [`MemBudget`]-constrained search is exact over the reduced space
 //! (DESIGN.md §3).
+//!
+//! Construction is an embarrassingly parallel two-stage pipeline
+//! (DESIGN.md §7): per-layer tables and per-unique-edge tables are
+//! independent work items fanned out over a scoped thread pool, with
+//! results merged back in canonical (layer-id / edge-list) order so the
+//! output is byte-identical to a serial build regardless of thread count
+//! or scheduling. [`CostTables::build_opts`] exposes the thread knob and
+//! an optional content-addressed [`TableMemo`] that reuses per-layer and
+//! per-edge results *across* builds.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use super::memo::{KeyContext, LayerTables, TableMemo};
 use super::{CostModel, LINK_LATENCY};
 use crate::error::{OptError, Result};
-use crate::graph::{LayerId, OpKind};
+use crate::graph::{spec::layer_canon, Layer, LayerId, OpKind};
 use crate::memory::{self, MemBudget};
 use crate::parallel::{enumerate_configs, input_region, output_tiles, PConfig, Strategy};
 use crate::plan::overlap::{flatten, overlap_elems, FlatRegion};
-use crate::tensor::Region;
 
 /// Structural identity of an edge's cost table: edges whose producer
 /// operator/shapes, consumer operator/shapes, and input slot coincide
@@ -58,6 +70,27 @@ impl EdgeTable {
     }
 }
 
+/// Knobs for [`CostTables::build_opts`]. The default (`threads: 0`,
+/// `memo: None`) reproduces [`CostTables::build_budgeted`]: all cores,
+/// no cross-build reuse.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BuildOptions<'a> {
+    /// Worker threads for the per-layer and per-edge build stages.
+    /// `0` (the default) uses one thread per available core; `1` builds
+    /// inline on the calling thread with no pool at all. Any value
+    /// produces bit-identical tables — the merge order is canonical,
+    /// never arrival order.
+    pub threads: usize,
+    /// Content-addressed per-layer/per-edge result cache shared across
+    /// builds (see [`TableMemo`]); `None` disables reuse. Ignored — the
+    /// build is never memoized — when the cost model carries measured
+    /// `t_C` timings, which are positional, not content-addressable.
+    pub memo: Option<&'a TableMemo>,
+}
+
+/// Single-flight cell for one layer's build result in the fan-out stage.
+type LayerCell = OnceLock<Result<Arc<LayerTables>>>;
+
 /// All tables for one (graph, device graph, device budget) triple.
 #[derive(Debug, Clone)]
 pub struct CostTables {
@@ -93,18 +126,67 @@ impl CostTables {
         ndev: usize,
         budget: Option<MemBudget>,
     ) -> Result<CostTables> {
+        CostTables::build_opts(cm, ndev, budget, &BuildOptions::default())
+    }
+
+    /// The single construction core behind [`CostTables::build`] and
+    /// [`CostTables::build_budgeted`] (the budgeted path is the same
+    /// pipeline with the feasibility mask applied inside the per-layer
+    /// stage), with explicit [`BuildOptions`].
+    ///
+    /// The pipeline has two fan-out stages. **Per layer**: enumerate the
+    /// configs, apply the budget mask, price `t_C + t_S`, and tile the
+    /// output — each layer is independent, so layers are claimed off an
+    /// atomic cursor by a scoped thread pool. **Per edge**: structurally
+    /// identical edges are deduplicated first ([`EdgeSig`]), then each
+    /// unique edge's `t_X` matrix is built the same way. Both stages
+    /// write into pre-indexed slots and are merged in canonical order
+    /// (ascending layer id, graph edge order), so the resulting tables —
+    /// and, when a budget makes some layer infeasible, *which* layer the
+    /// error names (the lowest-id one, as in a serial scan) — are
+    /// byte-identical for every thread count.
+    ///
+    /// With a [`TableMemo`], each layer/unique-edge build is first looked
+    /// up by its content-addressed key; hits skip the evaluation
+    /// entirely. Memoized results are keyed by everything the build
+    /// reads (layer canonical form, cluster fingerprint, budget bits,
+    /// sync/placement policies), so a hit returns the exact bytes a
+    /// fresh build would produce.
+    pub fn build_opts(
+        cm: &CostModel,
+        ndev: usize,
+        budget: Option<MemBudget>,
+        opts: &BuildOptions<'_>,
+    ) -> Result<CostTables> {
         let g = cm.graph;
+        // Measured t_C timings are recorded against layer *positions* in
+        // one session's graph — not content-addressable. Never memoize.
+        let memo = if cm.measured_tc.is_some() { None } else { opts.memo };
+        let nthreads = match opts.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            n => n,
+        };
+        let ctx = memo.map(|_| KeyContext::new(cm, ndev, budget));
+        let canons: Vec<Arc<str>> = match memo {
+            Some(_) => g.layers.iter().map(|l| Arc::from(layer_canon(l).as_str())).collect(),
+            None => Vec::new(),
+        };
+
+        // ---- stage 1: per-layer tables ----
         // Per layer: the kept configurations plus each one's index in the
         // *unmasked* enumeration — `measured_tc` is recorded against that
-        // order, so masked tables must translate before the lookup.
-        let mut configs: Vec<Vec<PConfig>> = Vec::with_capacity(g.layers.len());
-        let mut orig_idx: Vec<Vec<usize>> = Vec::with_capacity(g.layers.len());
-        for l in &g.layers {
+        // order, so masked tables must translate before the lookup. Tiles
+        // per (layer, config) are computed here once: `t_X` evaluation is
+        // the table-build hot path (O(E * C^2 * T^2) overlap tests);
+        // hoisting tile and input-region construction out of the
+        // config-pair loop removes all allocation from the inner loops
+        // (§Perf log #1).
+        let build_layer = |l: &Layer| -> Result<LayerTables> {
             let all = enumerate_configs(l, ndev);
-            match budget {
+            let (configs, orig_idx) = match budget {
                 None => {
-                    orig_idx.push((0..all.len()).collect());
-                    configs.push(all);
+                    let idx = (0..all.len()).collect();
+                    (all, idx)
                 }
                 Some(b) => {
                     let mut kept = Vec::with_capacity(all.len());
@@ -125,104 +207,145 @@ impl CostTables {
                             overshoot: overshoot.ceil().max(1.0) as u64,
                         });
                     }
-                    configs.push(kept);
-                    orig_idx.push(idx);
+                    (kept, idx)
                 }
-            }
-        }
-        let node_cost: Vec<Vec<f64>> = g
-            .layers
-            .iter()
-            .map(|l| {
-                configs[l.id]
-                    .iter()
-                    .zip(orig_idx[l.id].iter())
-                    .map(|(c, &oi)| {
-                        let tc = match &cm.measured_tc {
-                            Some(m) => m[l.id][oi],
-                            None => cm.t_c(l, c),
-                        };
-                        tc + cm.t_s(l, c)
-                    })
-                    .collect()
-            })
-            .collect();
-        // Tiles per (layer, config), computed once. `t_X` evaluation is the
-        // table-build hot path (O(E * C^2 * T^2) overlap tests); hoisting
-        // tile and input-region construction out of the config-pair loop
-        // removes all allocation from the inner loops (§Perf log #1).
-        let tiles: Vec<Vec<Vec<Region>>> = g
-            .layers
-            .iter()
-            .map(|l| configs[l.id].iter().map(|c| output_tiles(&l.out_shape, c)).collect())
-            .collect();
-        let max_tiles = tiles
-            .iter()
-            .flat_map(|per_cfg| per_cfg.iter().map(|t| t.len()))
-            .max()
-            .unwrap_or(1);
-        let dev_of: Vec<usize> = (0..max_tiles).map(|t| cm.dev_of(t)).collect();
-
-        // Edge tables are independent — build them on all cores
-        // (std::thread::scope; no rayon in the offline registry).
-        let nthreads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        let edge_list: Vec<(LayerId, LayerId)> = g.edges.clone();
-        let build_edge = |&(s, d): &(LayerId, LayerId)| -> EdgeTable {
-            {
-                let in_idx = cm.edge_in_idx(s, d);
-                let ld = g.layer(d);
-                let (cs, cd) = (&configs[s], &configs[d]);
-                let mut cost = vec![0.0f64; cs.len() * cd.len()];
-                // flatten regions to fixed-size arrays: the (m, k) overlap
-                // loop is the hottest code in the library (§Perf log #3);
-                // the kernel is shared with plan construction
-                // (`plan::overlap`), so cost tables and materialized plans
-                // charge bytes for exactly the same overlaps.
-                let src_flat: Vec<Vec<FlatRegion>> = (0..cs.len())
-                    .map(|ci| tiles[s][ci].iter().map(flatten).collect())
-                    .collect();
-                for (cj_idx, _) in cd.iter().enumerate() {
-                    let dst_tiles = &tiles[d][cj_idx];
-                    // input regions per destination tile, shared across ci
-                    let needs: Vec<Option<FlatRegion>> = dst_tiles
-                        .iter()
-                        .map(|t| input_region(ld, in_idx, t).map(|r| flatten(&r)))
-                        .collect();
-                    for (ci_idx, _) in cs.iter().enumerate() {
-                        let src_tiles = &src_flat[ci_idx];
-                        let mut worst = 0.0f64;
-                        for (m, need) in needs.iter().enumerate() {
-                            let Some(need) = need else { continue };
-                            let dst_dev = dev_of[m];
-                            let mut inbound = 0.0;
-                            for (k, stile) in src_tiles.iter().enumerate() {
-                                if dev_of[k] == dst_dev {
-                                    continue;
-                                }
-                                let overlap = overlap_elems(need, stile);
-                                if overlap > 0 {
-                                    inbound += cm.devices.transfer_time(
-                                        dev_of[k],
-                                        dst_dev,
-                                        overlap as f64 * 4.0,
-                                    ) + LINK_LATENCY;
-                                }
-                            }
-                            if inbound > worst {
-                                worst = inbound;
-                            }
+            };
+            let cost = configs
+                .iter()
+                .zip(orig_idx.iter())
+                .map(|(c, &oi)| {
+                    let tc = match &cm.measured_tc {
+                        Some(m) => m[l.id][oi],
+                        None => cm.t_c(l, c),
+                    };
+                    tc + cm.t_s(l, c)
+                })
+                .collect();
+            let tiles = configs.iter().map(|c| output_tiles(&l.out_shape, c)).collect();
+            Ok(LayerTables { configs, orig_idx, cost, tiles })
+        };
+        let layer_tables = |l: &Layer| -> Result<Arc<LayerTables>> {
+            match (memo, &ctx) {
+                (Some(m), Some(ctx)) => m
+                    .node_tables(&ctx.layer_key(&canons[l.id]), || build_layer(l))
+                    .map_err(|e| match e {
+                        // a memoized failure may have been built for a
+                        // structurally identical layer under another
+                        // cosmetic name — report *this* graph's name
+                        OptError::Infeasible { overshoot, .. } => {
+                            OptError::Infeasible { layer: l.name.clone(), overshoot }
                         }
-                        cost[ci_idx * cd.len() + cj_idx] = worst;
-                    }
-                }
-                EdgeTable { src: s, dst: d, cost }
+                        other => other,
+                    }),
+                _ => build_layer(l).map(Arc::new),
             }
         };
+
+        let nlayers = g.layers.len();
+        let cells: Vec<LayerCell> = (0..nlayers).map(|_| OnceLock::new()).collect();
+        let layer_workers = nthreads.min(nlayers).max(1);
+        if layer_workers <= 1 {
+            for l in &g.layers {
+                let _ = cells[l.id].set(layer_tables(l));
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..layer_workers {
+                    scope.spawn(|| loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= nlayers {
+                            break;
+                        }
+                        let _ = cells[i].set(layer_tables(&g.layers[i]));
+                    });
+                }
+            });
+        }
+        // Merge in ascending layer id: the lowest-id infeasible layer
+        // surfaces first regardless of thread interleaving, exactly as a
+        // serial scan would report it.
+        let mut per_layer: Vec<Arc<LayerTables>> = Vec::with_capacity(nlayers);
+        for cell in cells {
+            per_layer.push(cell.into_inner().expect("layer stage left a cell unset")?);
+        }
+        let configs: Vec<Vec<PConfig>> = per_layer.iter().map(|t| t.configs.clone()).collect();
+        let node_cost: Vec<Vec<f64>> = per_layer.iter().map(|t| t.cost.clone()).collect();
+
+        // Config totals never exceed `ndev`, so tile indices are always
+        // `< ndev` — one flat device-assignment array serves every edge
+        // (and keeps edge builds independent of any graph-global maximum,
+        // which cross-build memoization requires).
+        let dev_of: Vec<usize> = (0..ndev).map(|t| cm.dev_of(t)).collect();
+
+        // ---- stage 2: per-edge transfer tables ----
+        let build_edge_cost = |s: LayerId, d: LayerId, in_idx: usize| -> Vec<f64> {
+            let ld = g.layer(d);
+            let (ts, td) = (&per_layer[s], &per_layer[d]);
+            let (cs_len, cd_len) = (ts.configs.len(), td.configs.len());
+            let mut cost = vec![0.0f64; cs_len * cd_len];
+            // flatten regions to fixed-size arrays: the (m, k) overlap
+            // loop is the hottest code in the library (§Perf log #3);
+            // the kernel is shared with plan construction
+            // (`plan::overlap`), so cost tables and materialized plans
+            // charge bytes for exactly the same overlaps.
+            let src_flat: Vec<Vec<FlatRegion>> =
+                ts.tiles.iter().map(|tiles| tiles.iter().map(flatten).collect()).collect();
+            // input regions per destination tile, shared across ci; one
+            // scratch buffer reused across cj (§Perf log #4)
+            let mut needs: Vec<Option<FlatRegion>> = Vec::with_capacity(ndev);
+            for (cj_idx, dst_tiles) in td.tiles.iter().enumerate() {
+                needs.clear();
+                needs.extend(
+                    dst_tiles.iter().map(|t| input_region(ld, in_idx, t).map(|r| flatten(&r))),
+                );
+                for (ci_idx, src_tiles) in src_flat.iter().enumerate() {
+                    let mut worst = 0.0f64;
+                    for (m, need) in needs.iter().enumerate() {
+                        let Some(need) = need else { continue };
+                        let dst_dev = dev_of[m];
+                        let mut inbound = 0.0;
+                        for (k, stile) in src_tiles.iter().enumerate() {
+                            if dev_of[k] == dst_dev {
+                                continue;
+                            }
+                            let overlap = overlap_elems(need, stile);
+                            if overlap > 0 {
+                                inbound += cm.devices.transfer_time(
+                                    dev_of[k],
+                                    dst_dev,
+                                    overlap as f64 * 4.0,
+                                ) + LINK_LATENCY;
+                            }
+                        }
+                        if inbound > worst {
+                            worst = inbound;
+                        }
+                    }
+                    cost[ci_idx * cd_len + cj_idx] = worst;
+                }
+            }
+            cost
+        };
+        let edge_cost = |&(s, d): &(LayerId, LayerId)| -> Arc<Vec<f64>> {
+            let in_idx = cm.edge_in_idx(s, d);
+            match (memo, &ctx) {
+                (Some(m), Some(ctx)) => m.edge_cost(
+                    &ctx.edge_key(&canons[s], &canons[d], in_idx),
+                    || build_edge_cost(s, d, in_idx),
+                ),
+                _ => Arc::new(build_edge_cost(s, d, in_idx)),
+            }
+        };
+
         // Deduplicate: edges whose (producer op/shape, consumer
         // op/shapes, input slot) coincide have identical cost tables —
         // CNNs repeat layer pairs heavily (VGG stages, Inception
         // modules), so this cuts the expensive evaluations several-fold
-        // (§Perf log #2).
+        // (§Perf log #2). The within-graph signature carries the same
+        // structural information as the memo's canonical forms, so the
+        // cross-build memo is consulted once per *unique* edge.
+        let edge_list: Vec<(LayerId, LayerId)> = g.edges.clone();
         let mut sig_to_unique: std::collections::HashMap<EdgeSig<'_>, usize> =
             std::collections::HashMap::new();
         let mut unique_edges: Vec<(LayerId, LayerId)> = Vec::new();
@@ -246,18 +369,35 @@ impl CostTables {
             })
             .collect();
 
-        let chunk = unique_edges.len().div_ceil(nthreads).max(1);
-        let unique_tables: Vec<EdgeTable> = std::thread::scope(|scope| {
-            let handles: Vec<_> = unique_edges
-                .chunks(chunk)
-                .map(|es| scope.spawn(move || es.iter().map(build_edge).collect::<Vec<_>>()))
-                .collect();
-            handles.into_iter().flat_map(|h| h.join().expect("edge builder panicked")).collect()
-        });
+        let nuniq = unique_edges.len();
+        let ecells: Vec<OnceLock<Arc<Vec<f64>>>> = (0..nuniq).map(|_| OnceLock::new()).collect();
+        let edge_workers = nthreads.min(nuniq).max(1);
+        if edge_workers <= 1 {
+            for (i, e) in unique_edges.iter().enumerate() {
+                let _ = ecells[i].set(edge_cost(e));
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..edge_workers {
+                    scope.spawn(|| loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= nuniq {
+                            break;
+                        }
+                        let _ = ecells[i].set(edge_cost(&unique_edges[i]));
+                    });
+                }
+            });
+        }
+        let unique_costs: Vec<Arc<Vec<f64>>> = ecells
+            .into_iter()
+            .map(|c| c.into_inner().expect("edge stage left a cell unset"))
+            .collect();
         let edges: Vec<EdgeTable> = edge_list
             .iter()
             .zip(edge_unique.iter())
-            .map(|(&(s, d), &u)| EdgeTable { src: s, dst: d, cost: unique_tables[u].cost.clone() })
+            .map(|(&(s, d), &u)| EdgeTable { src: s, dst: d, cost: unique_costs[u].to_vec() })
             .collect();
         Ok(CostTables { configs, node_cost, edges })
     }
@@ -329,6 +469,47 @@ mod tests {
             assert!(t.num_configs(l) >= 1);
         }
         assert!(t.max_configs() > 4);
+    }
+
+    #[test]
+    fn thread_count_and_memo_do_not_change_a_single_bit() {
+        // The determinism contract behind `BuildOptions`: serial,
+        // parallel, cold-memoized, and warm-memoized builds all produce
+        // bit-identical tables. (The cross-network exhaustive version
+        // lives in tests/table_identity.rs.)
+        let g = nets::lenet5(32).unwrap();
+        let d = DeviceGraph::p100_cluster(4).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let serial =
+            CostTables::build_opts(&cm, 4, None, &BuildOptions { threads: 1, memo: None })
+                .unwrap();
+        let memo = TableMemo::new();
+        let variants = [
+            BuildOptions { threads: 3, memo: None },
+            BuildOptions { threads: 3, memo: Some(&memo) }, // cold memo
+            BuildOptions { threads: 1, memo: Some(&memo) }, // warm memo
+        ];
+        for opts in &variants {
+            let t = CostTables::build_opts(&cm, 4, None, opts).unwrap();
+            assert_eq!(t.configs, serial.configs);
+            for (a, b) in t.node_cost.iter().zip(serial.node_cost.iter()) {
+                let (a, b): (Vec<u64>, Vec<u64>) = (
+                    a.iter().map(|x| x.to_bits()).collect(),
+                    b.iter().map(|x| x.to_bits()).collect(),
+                );
+                assert_eq!(a, b);
+            }
+            for (e, f) in t.edges.iter().zip(serial.edges.iter()) {
+                assert_eq!((e.src, e.dst), (f.src, f.dst));
+                let (a, b): (Vec<u64>, Vec<u64>) = (
+                    e.cost.iter().map(|x| x.to_bits()).collect(),
+                    f.cost.iter().map(|x| x.to_bits()).collect(),
+                );
+                assert_eq!(a, b);
+            }
+        }
+        let s = memo.stats();
+        assert!(s.hits > 0, "warm rebuild never hit the memo: {s:?}");
     }
 
     #[test]
@@ -441,6 +622,26 @@ mod tests {
                 assert!(overshoot > 0);
             }
             other => panic!("expected Infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasibility_reports_the_lowest_layer_id_at_any_thread_count() {
+        // Parallel builds race layers, but the merge scans in id order —
+        // the reported layer must match the serial scan's.
+        use crate::memory::MemBudget;
+        let g = nets::vgg16(64).unwrap();
+        let d = DeviceGraph::p100_cluster(2).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let budget = Some(MemBudget::new(1));
+        let serial =
+            CostTables::build_opts(&cm, 2, budget, &BuildOptions { threads: 1, memo: None })
+                .expect_err("a 1-byte budget cannot be satisfiable");
+        for threads in [2, 4, 7] {
+            let par =
+                CostTables::build_opts(&cm, 2, budget, &BuildOptions { threads, memo: None })
+                    .expect_err("a 1-byte budget cannot be satisfiable");
+            assert_eq!(par, serial, "threads={threads} changed the reported error");
         }
     }
 

@@ -285,6 +285,43 @@ impl DeviceGraph {
     pub fn same_node(&self, i: usize, j: usize) -> bool {
         self.devices[i].node == self.devices[j].node
     }
+
+    /// The cluster's structural identity: everything the cost model reads
+    /// — per-device node assignment, the full bandwidth matrix, host/NIC
+    /// bandwidths, and the compute model — captured by value (f64 bit
+    /// patterns, not a lossy hash) so two [`DeviceGraph`]s compare equal
+    /// exactly when every cost they produce is identical. The cosmetic
+    /// `name` and the HBM capacity are deliberately excluded: neither
+    /// enters a cost function (memory budgets key caches separately).
+    /// Keys the planner service's single-flight state memo and the
+    /// per-layer cost-table memo (`cost::memo`).
+    pub fn fingerprint(&self) -> ClusterFingerprint {
+        ClusterFingerprint {
+            node_of: self.devices.iter().map(|d| d.node).collect(),
+            bw_bits: self.bw.iter().map(|b| b.to_bits()).collect(),
+            host_bw: self.host_bw.to_bits(),
+            node_bw: self.node_bw.to_bits(),
+            compute: [
+                self.compute.peak_flops.to_bits(),
+                self.compute.mem_bw.to_bits(),
+                self.compute.overhead.to_bits(),
+                self.compute.conv_eff.to_bits(),
+                self.compute.gemm_eff.to_bits(),
+            ],
+        }
+    }
+}
+
+/// Value identity of a [`DeviceGraph`] (see [`DeviceGraph::fingerprint`]):
+/// hashable and comparable, so it can key memo maps without holding the
+/// graph itself. Opaque by design — consumers only compare and hash it.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ClusterFingerprint {
+    node_of: Vec<usize>,
+    bw_bits: Vec<u64>,
+    host_bw: u64,
+    node_bw: u64,
+    compute: [u64; 5],
 }
 
 #[cfg(test)]
@@ -357,6 +394,22 @@ mod tests {
         let mut broken = ComputeModel::p100();
         broken.hbm_bytes = 0.0;
         assert!(broken.validate().is_err(), "zero-capacity devices are invalid");
+    }
+
+    #[test]
+    fn fingerprint_is_structural_not_nominal() {
+        let cm = ComputeModel::p100();
+        let a = DeviceGraph::cluster("alpha", 2, 2, 15e9, 3e9, 12e9, cm).unwrap();
+        let b = DeviceGraph::cluster("beta", 2, 2, 15e9, 3e9, 12e9, cm).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "names are cosmetic");
+        let c = DeviceGraph::cluster("alpha", 2, 2, 15e9, 4e9, 12e9, cm).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint(), "bandwidths are structural");
+        let d = DeviceGraph::cluster("alpha", 1, 4, 15e9, 3e9, 12e9, cm).unwrap();
+        assert_ne!(a.fingerprint(), d.fingerprint(), "node grouping is structural");
+        let mut hbm = cm;
+        hbm.hbm_bytes = 99e9;
+        let e = DeviceGraph::cluster("alpha", 2, 2, 15e9, 3e9, 12e9, hbm).unwrap();
+        assert_eq!(a.fingerprint(), e.fingerprint(), "HBM capacity is not a cost input");
     }
 
     #[test]

@@ -139,6 +139,50 @@ fn layer_json(g: &CompGraph, l: &Layer, with_name: bool) -> Json {
     Json::obj(fields)
 }
 
+/// Position-free canonical form of a single layer: the operator, its
+/// parameters, and the declared shapes (output and per-slot inputs) —
+/// no layer name, no graph-positional input ids. Two layers share this
+/// form exactly when every per-layer quantity the cost and memory
+/// models derive from them (config enumeration, `t_C`/`t_S`, tiling
+/// geometry, peak bytes) is identical, regardless of where each layer
+/// sits in its graph. This is the per-layer analogue of the whole-graph
+/// [`GraphDigest`], and the layer component of the cost-table memo key
+/// (`cost::memo::TableMemo`, DESIGN.md §7).
+pub(crate) fn layer_canon(l: &Layer) -> String {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    fields.push(("op", Json::Str(l.op.mnemonic().to_string())));
+    fields.push(("shape", uint_arr(&l.out_shape)));
+    fields.push((
+        "in_shapes",
+        Json::Arr(l.in_shapes.iter().map(|s| uint_arr(s)).collect()),
+    ));
+    match &l.op {
+        OpKind::Input | OpKind::Softmax | OpKind::Concat | OpKind::Add => {}
+        OpKind::Conv2d { cout, kernel, stride, padding } => {
+            fields.push(("cout", Json::Num(*cout as f64)));
+            fields.push(("kernel", pair_arr(*kernel)));
+            fields.push(("stride", pair_arr(*stride)));
+            fields.push(("padding", pair_arr(*padding)));
+        }
+        OpKind::Pool2d { kind, kernel, stride, padding } => {
+            fields.push((
+                "kind",
+                Json::Str(match kind {
+                    PoolKind::Max => "max".to_string(),
+                    PoolKind::Avg => "avg".to_string(),
+                }),
+            ));
+            fields.push(("kernel", pair_arr(*kernel)));
+            fields.push(("stride", pair_arr(*stride)));
+            fields.push(("padding", pair_arr(*padding)));
+        }
+        OpKind::FullyConnected { cout } => {
+            fields.push(("cout", Json::Num(*cout as f64)));
+        }
+    }
+    Json::obj(fields).to_string()
+}
+
 // ---- parsing helpers (strict: no silent truncation off the wire) ----
 
 fn uints(v: &Json, what: &str) -> Result<Vec<usize>> {
@@ -441,6 +485,31 @@ mod tests {
         assert_eq!(a.digest(), renamed.digest(), "names are cosmetic");
         assert_ne!(a.digest(), wider.digest(), "structure is identity");
         assert_eq!(a.digest().hex().len(), 16);
+    }
+
+    #[test]
+    fn layer_canon_is_position_and_name_free() {
+        // the same conv in two different graph positions (and under two
+        // different names) canonicalizes identically ...
+        let mut b = GraphBuilder::new("a");
+        let x = b.input(4, 3, 8, 8).unwrap();
+        let c1 = b.conv2d("first", x, 3, (3, 3), (1, 1), (1, 1)).unwrap();
+        let c2 = b.conv2d("second", c1, 3, (3, 3), (1, 1), (1, 1)).unwrap();
+        let f = b.fully_connected("fc", c2, 10).unwrap();
+        b.softmax("sm", f).unwrap();
+        let g = b.finish().unwrap();
+        let conv_a = layer_canon(&g.layers[1]);
+        let conv_b = layer_canon(&g.layers[2]);
+        assert_eq!(conv_a, conv_b, "same op+shapes at different positions must alias");
+        assert!(!conv_a.contains("first"), "names must be stripped: {conv_a}");
+        // ... while a parameter change separates them
+        let mut b = GraphBuilder::new("b");
+        let x = b.input(4, 3, 8, 8).unwrap();
+        let c = b.conv2d("first", x, 3, (3, 3), (2, 2), (1, 1)).unwrap();
+        let f = b.fully_connected("fc", c, 10).unwrap();
+        b.softmax("sm", f).unwrap();
+        let h = b.finish().unwrap();
+        assert_ne!(conv_a, layer_canon(&h.layers[1]), "stride is structural");
     }
 
     #[test]

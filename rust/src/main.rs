@@ -40,6 +40,7 @@ optcnn — layer-wise parallelism for CNN training (ICML'18 reproduction)
 USAGE:
   optcnn optimize --network <net> --devices <n> [--backend elimination|dfs]
                   [--budget-ms <ms>] [--cluster <file.toml>] [--mem-limit <b>]
+                  [--build-threads <n>]
   optcnn simulate --network <net> --devices <n> --strategy <s>
                   [--cluster <file.toml>] [--trace out.json] [--mem-limit <b>]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
@@ -49,6 +50,7 @@ USAGE:
   optcnn sweep    [--networks a,b] [--network-file <spec.json>]
                   [--devices 1,2,4,8,16] [--threads N] [--mem-limit <b>]
   optcnn serve    [--addr 127.0.0.1:7878] [--shards 8] [--cache-cap 8]
+                  [--build-threads <n>]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
   optcnn profile  [--devices 4] [--reps 3]   (measured-t_C search, minicnn)
@@ -62,6 +64,8 @@ STRATEGIES: data model owt layerwise
 CLUSTERS:   P100 preset via --devices, arbitrary via --cluster (see config/)
 MEM LIMIT:  per-device budget for the layer-wise search: bytes, a KB/MB/GB
             suffix (16GB), or `device` for the cluster's own HBM capacity
+THREADS:    --build-threads <n> fans the cost-table build across n worker
+            threads (0 = all cores, 1 = serial); output is bit-identical
 ";
 
 /// Parse a `--mem-limit` value: a whole number of bytes or a number with
@@ -177,6 +181,7 @@ fn planner_from_args(args: &Args) -> Result<Planner> {
         Some("device") => builder = builder.mem_limit_device(),
         Some(v) => builder = builder.mem_limit(parse_mem_bytes(v)?),
     }
+    builder = builder.build_threads(args.usize_or("build-threads", 0)?);
     let backend_name = args.get_or("backend", "elimination");
     let budget = match args.usize_or("budget-ms", 0)? {
         0 => None,
@@ -518,8 +523,14 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let shards = args.usize_or("shards", 8)?;
     let cap = args.usize_or("cache-cap", 8)?;
-    let service =
-        Arc::new(PlanService::builder().shards(shards).shard_capacity(cap).build()?);
+    let build_threads = args.usize_or("build-threads", 0)?;
+    let service = Arc::new(
+        PlanService::builder()
+            .shards(shards)
+            .shard_capacity(cap)
+            .build_threads(build_threads)
+            .build()?,
+    );
     let handle = serve::spawn(addr, service)?;
     println!(
         "optcnn serve: listening on {} ({shards} shards x {cap} plans)",

@@ -83,8 +83,13 @@ pub fn allowed_dims(op: &OpKind) -> [bool; 4] {
     }
 }
 
-fn divisors(n: usize) -> Vec<usize> {
-    (1..=n).filter(|d| n % d == 0).collect()
+/// Divisors of `n` that are `<= cap`, ascending. The scan stops at `cap`
+/// rather than `n`: degrees beyond the device count are never legal, and
+/// extents (batch x channels x spatial) run to tens of thousands while
+/// `cap` is the device count, so the bounded scan does orders of
+/// magnitude less work on the table-build hot path for the same result.
+fn divisors_upto(n: usize, cap: usize) -> Vec<usize> {
+    (1..=n.min(cap)).filter(|d| n % d == 0).collect()
 }
 
 /// Enumerate every legal configuration for `layer` on at most `ndev`
@@ -97,7 +102,12 @@ pub fn enumerate_configs(layer: &Layer, ndev: usize) -> Vec<PConfig> {
     let mut per_dim: [Vec<usize>; 4] = [vec![1], vec![1], vec![1], vec![1]];
     for d in 0..4 {
         if d < rank && allowed[d] {
-            per_dim[d] = divisors(shape[d]).into_iter().filter(|&k| k <= ndev).collect();
+            // equal extents have equal divisor lists (common: square
+            // spatial dims) — reuse instead of re-enumerating
+            match (0..d).find(|&e| allowed[e] && shape[e] == shape[d]) {
+                Some(e) => per_dim[d] = per_dim[e].clone(),
+                None => per_dim[d] = divisors_upto(shape[d], ndev),
+            }
         }
     }
     let mut out = Vec::new();

@@ -22,7 +22,7 @@
 //! [`PlanCache`] keyed on (net, strategy, device count), which makes them
 //! servable artifacts rather than transient in-memory derivations — the
 //! property PaSE-style systems rely on to answer many planning queries
-//! fast (DESIGN.md §8).
+//! fast (DESIGN.md §9).
 
 pub mod cache;
 mod json;

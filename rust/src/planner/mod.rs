@@ -72,7 +72,7 @@ use std::fmt;
 use std::str::FromStr;
 use std::sync::Arc;
 
-use crate::cost::{CostModel, CostTables};
+use crate::cost::{BuildOptions, CostModel, CostTables, TableMemo};
 use crate::device::DeviceGraph;
 use crate::error::{OptError, Result};
 use crate::graph::{nets, CompGraph};
@@ -376,6 +376,11 @@ pub struct SessionStats {
     pub plan_hits: u64,
     /// Plan-cache lookups that had to materialize a plan.
     pub plan_misses: u64,
+    /// Per-layer/per-edge cost-table memo lookups answered from cache
+    /// ([`TableMemo`]; DESIGN.md §7).
+    pub memo_hits: u64,
+    /// Per-layer/per-edge cost-table memo lookups that ran a build.
+    pub memo_misses: u64,
 }
 
 /// How the session's per-device memory budget is specified.
@@ -399,6 +404,7 @@ pub struct PlannerBuilder {
     backend: Box<dyn SearchBackend>,
     plan_cache_cap: usize,
     mem_limit: Option<MemLimit>,
+    build_threads: usize,
 }
 
 impl PlannerBuilder {
@@ -441,6 +447,15 @@ impl PlannerBuilder {
     /// Capacity of the session's LRU plan cache (default 8).
     pub fn plan_cache_capacity(mut self, cap: usize) -> PlannerBuilder {
         self.plan_cache_cap = cap;
+        self
+    }
+
+    /// Worker threads for cost-table construction (DESIGN.md §7).
+    /// `0` (the default) uses one thread per available core; `1` builds
+    /// serially on the calling thread. Any value produces bit-identical
+    /// tables — the knob trades wall time only.
+    pub fn build_threads(mut self, threads: usize) -> PlannerBuilder {
+        self.build_threads = threads;
         self
     }
 
@@ -529,6 +544,8 @@ impl PlannerBuilder {
             devices,
             backend: self.backend,
             mem_limit,
+            build_threads: self.build_threads,
+            memo: Arc::new(TableMemo::new()),
             tables: None,
             layerwise: None,
             baselines: HashMap::new(),
@@ -549,6 +566,8 @@ pub struct Planner {
     devices: DeviceGraph,
     backend: Box<dyn SearchBackend>,
     mem_limit: Option<u64>,
+    build_threads: usize,
+    memo: Arc<TableMemo>,
     tables: Option<CostTables>,
     layerwise: Option<Optimized>,
     baselines: HashMap<StrategyKind, Strategy>,
@@ -569,6 +588,7 @@ impl Planner {
             backend: Box::new(Elimination),
             plan_cache_cap: 8,
             mem_limit: None,
+            build_threads: 0,
         }
     }
 
@@ -623,7 +643,9 @@ impl Planner {
         if self.tables.is_none() {
             let cm = CostModel::new(&self.graph, &self.devices);
             let budget = self.mem_limit.map(MemBudget::new);
-            let built = CostTables::build_budgeted(&cm, self.devices.num_devices(), budget)?;
+            let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
+            let built =
+                CostTables::build_opts(&cm, self.devices.num_devices(), budget, &opts)?;
             self.tables = Some(built);
             self.table_builds += 1;
         }
@@ -700,11 +722,14 @@ impl Planner {
 
     /// How much expensive state this session has built versus reused.
     pub fn session_stats(&self) -> SessionStats {
+        let memo = self.memo.stats();
         SessionStats {
             table_builds: self.table_builds,
             searches: self.searches,
             plan_hits: self.plans.hits(),
             plan_misses: self.plans.misses(),
+            memo_hits: memo.hits,
+            memo_misses: memo.misses,
         }
     }
 }

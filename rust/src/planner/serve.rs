@@ -11,6 +11,7 @@
 //!            "devices": 4, "want": "evaluate"}
 //! response: {"ok": true, "plan": {...}}
 //!         | {"ok": true, "evaluation": {...}}
+//!         | {"ok": true, "stats": {...}}
 //!         | {"ok": false, "error": "one-line message"}
 //! ```
 //!
@@ -28,7 +29,10 @@
 //! `{"ok": false, "error": "infeasible: ..."}`. Evaluation replies
 //! report the plan's per-device high-water memory as
 //! `"peak_mem_per_dev"` (plan replies carry the same vector inside the
-//! plan JSON itself).
+//! plan JSON itself). A bare `{"want": "stats"}` probe answers the
+//! service's aggregate counters ([`ServiceStats`]) — cache hit/miss
+//! totals, single-flight builds, and the per-layer cost-table memo's
+//! `memo_hits`/`memo_misses` — without planning anything.
 //!
 //! Every connection gets its own thread; all connections share one
 //! [`PlanService`], so a plan primed by any client is a cache hit for
@@ -46,7 +50,7 @@ use crate::error::{OptError, Result};
 use crate::graph::CompGraph;
 use crate::util::json::Json;
 
-use super::service::{PlanRequest, PlanService};
+use super::service::{PlanRequest, PlanService, ServiceStats};
 use super::{ClusterSpec, Network, NetworkSpec, StrategyKind, PER_GPU_BATCH};
 
 /// What a request asks the server to return.
@@ -57,6 +61,9 @@ pub enum Want {
     Plan,
     /// The evaluation: estimate, simulated step, throughput, comm.
     Evaluate,
+    /// The service's aggregate counters ([`ServiceStats`]); carries no
+    /// plan request at all.
+    Stats,
 }
 
 /// A request-shaped [`OptError`]: every malformed field is the client's
@@ -111,9 +118,31 @@ fn graph_from_json(v: &Json) -> Result<NetworkSpec> {
     NetworkSpec::custom(CompGraph::from_spec(v)?)
 }
 
-/// Parse one request line into a typed request plus what to return.
-pub fn parse_request(line: &str) -> Result<(PlanRequest, Want)> {
+/// Parse one request line into what to return plus the typed plan
+/// request — `None` exactly when the `want` needs no planning at all
+/// (`Want::Stats`).
+pub fn parse_request(line: &str) -> Result<(Option<PlanRequest>, Want)> {
     let v = Json::parse(line).map_err(|e| bad(&format!("malformed request JSON: {e}")))?;
+    let want = match v.get("want").map(Json::as_str) {
+        None | Some(Some("plan")) => Want::Plan,
+        Some(Some("evaluate")) => Want::Evaluate,
+        Some(Some("stats")) => Want::Stats,
+        Some(other) => {
+            return Err(bad(&format!(
+                "`want` must be \"plan\", \"evaluate\", or \"stats\", got {other:?}"
+            )));
+        }
+    };
+    if want == Want::Stats {
+        // a stats probe carries no planning fields — reject them so a
+        // mangled plan request cannot silently answer as a counter dump
+        for key in ["net", "graph", "devices", "cluster", "strategy", "batch", "mem_limit"] {
+            if v.get(key).is_some() {
+                return Err(bad(&format!("`{key}` does not combine with want=\"stats\"")));
+            }
+        }
+        return Ok((None, Want::Stats));
+    }
     let network: NetworkSpec = match (v.get("net"), v.get("graph")) {
         (Some(_), Some(_)) => {
             return Err(bad("`net` and `graph` are mutually exclusive"));
@@ -162,13 +191,6 @@ pub fn parse_request(line: &str) -> Result<(PlanRequest, Want)> {
     if per_gpu_batch > MAX_PER_GPU_BATCH {
         return Err(bad(&format!("`batch` capped at {MAX_PER_GPU_BATCH}, got {per_gpu_batch}")));
     }
-    let want = match v.get("want").map(Json::as_str) {
-        None | Some(Some("plan")) => Want::Plan,
-        Some(Some("evaluate")) => Want::Evaluate,
-        Some(other) => {
-            return Err(bad(&format!("`want` must be \"plan\" or \"evaluate\", got {other:?}")));
-        }
-    };
     let mut req = PlanRequest::with_cluster(network, cluster)
         .strategy(strategy)
         .per_gpu_batch(per_gpu_batch);
@@ -181,7 +203,7 @@ pub fn parse_request(line: &str) -> Result<(PlanRequest, Want)> {
             .ok_or_else(|| bad("`mem_limit` must be a whole number of bytes (>= 1)"))?;
         req = req.mem_limit(bytes as u64);
     }
-    Ok((req, want))
+    Ok((Some(req), want))
 }
 
 /// Build a [`ClusterSpec`] from a request's `cluster` object. Keys
@@ -285,17 +307,44 @@ fn evaluation_json(eval: &crate::planner::Evaluation) -> Json {
     ])
 }
 
+/// JSON form of [`ServiceStats`] — the `{"want": "stats"}` payload.
+/// Counters are exact: every value is well under `f64`'s 2^53 integer
+/// range for any realistic server lifetime.
+fn stats_json(s: &ServiceStats) -> Json {
+    Json::obj(vec![
+        ("plan_hits", Json::Num(s.plan_hits as f64)),
+        ("plan_misses", Json::Num(s.plan_misses as f64)),
+        ("table_builds", Json::Num(s.table_builds as f64)),
+        ("searches", Json::Num(s.searches as f64)),
+        ("build_waits", Json::Num(s.build_waits as f64)),
+        ("plans_cached", Json::Num(s.plans_cached as f64)),
+        ("states_cached", Json::Num(s.states_cached as f64)),
+        ("memo_hits", Json::Num(s.memo_hits as f64)),
+        ("memo_misses", Json::Num(s.memo_misses as f64)),
+    ])
+}
+
 fn respond(service: &PlanService, line: &str) -> Result<Json> {
     let (req, want) = parse_request(line)?;
     match want {
-        Want::Plan => Ok(Json::obj(vec![
+        Want::Stats => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
-            ("plan", service.plan(&req)?.to_json()),
+            ("stats", stats_json(&service.stats())),
         ])),
-        Want::Evaluate => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("evaluation", evaluation_json(&service.evaluate(&req)?)),
-        ])),
+        Want::Plan => {
+            let req = req.expect("plan requests always carry a request");
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("plan", service.plan(&req)?.to_json()),
+            ]))
+        }
+        Want::Evaluate => {
+            let req = req.expect("evaluate requests always carry a request");
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("evaluation", evaluation_json(&service.evaluate(&req)?)),
+            ]))
+        }
     }
 }
 
@@ -418,6 +467,7 @@ mod tests {
     #[test]
     fn parse_request_applies_defaults() {
         let (req, want) = parse_request(r#"{"net": "lenet5"}"#).unwrap();
+        let req = req.unwrap();
         assert_eq!(req.network.preset(), Some(Network::LeNet5));
         assert_eq!(req.cluster.num_devices(), 4);
         assert_eq!(req.per_gpu_batch, PER_GPU_BATCH);
@@ -433,6 +483,7 @@ mod tests {
                             "intra_bw_gbps": 130.0, "inter_bw_gbps": 6.0}}"#,
         )
         .unwrap();
+        let req = req.unwrap();
         assert_eq!(req.network.preset(), Some(Network::AlexNet));
         assert_eq!(req.cluster.num_devices(), 16);
         assert_eq!(req.per_gpu_batch, 16);
@@ -451,7 +502,7 @@ mod tests {
                             "peak_tflops": 30.0, "mem_bw_gbps": 2000}}"#,
         )
         .unwrap();
-        let d = req.cluster.device_graph().unwrap();
+        let d = req.unwrap().cluster.device_graph().unwrap();
         assert_eq!(d.compute.peak_flops, 30e12);
         assert_eq!(d.compute.mem_bw, 2000e9);
     }
@@ -523,7 +574,7 @@ mod tests {
         let wide = crate::graph::nets::inception_v3(32).unwrap().to_spec().to_string();
         let (req, _) =
             parse_request(&format!(r#"{{"graph": {wide}, "devices": 2}}"#)).unwrap();
-        assert_eq!(req.network.name(), "inception_v3");
+        assert_eq!(req.unwrap().network.name(), "inception_v3");
 
         // a request beyond the old blanket 64 KiB *line* cap but within
         // the new per-field caps must now parse (the point of splitting)
@@ -620,6 +671,35 @@ mod tests {
         assert!(parse_request(r#"{"net": "lenet5", "devices": 2, "batch": 1000000}"#).is_err());
         // at the caps everything still parses
         assert!(parse_request(r#"{"net": "lenet5", "devices": 1024, "batch": 4096}"#).is_ok());
+    }
+
+    #[test]
+    fn stats_want_reports_service_counters() {
+        let service = PlanService::new();
+        // a cold probe parses to no request and all-zero counters
+        let (req, want) = parse_request(r#"{"want": "stats"}"#).unwrap();
+        assert!(req.is_none());
+        assert_eq!(want, Want::Stats);
+        let v = Json::parse(&handle_line(&service, r#"{"want": "stats"}"#)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        let stats = v.get("stats").unwrap();
+        assert_eq!(stats.get("table_builds").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(stats.get("memo_misses").and_then(Json::as_f64), Some(0.0));
+        // planning fields do not combine with a stats probe
+        let reply = handle_line(&service, r#"{"net": "lenet5", "want": "stats"}"#);
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{reply}");
+        // after one real plan the counters move, memo included
+        handle_line(&service, r#"{"net": "lenet5", "devices": 2}"#);
+        let v = Json::parse(&handle_line(&service, r#"{"want": "stats"}"#)).unwrap();
+        let stats = v.get("stats").unwrap();
+        assert_eq!(stats.get("table_builds").and_then(Json::as_f64), Some(1.0));
+        assert!(stats.get("memo_misses").and_then(Json::as_f64).unwrap() > 0.0);
+        let direct = service.stats();
+        assert_eq!(
+            stats.get("memo_misses").and_then(Json::as_f64),
+            Some(direct.memo_misses as f64)
+        );
     }
 
     #[test]

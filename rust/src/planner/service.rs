@@ -46,8 +46,8 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
-use crate::cost::{CostModel, CostTables};
-use crate::device::DeviceGraph;
+use crate::cost::{BuildOptions, CostModel, CostTables, TableMemo};
+use crate::device::{ClusterFingerprint, DeviceGraph};
 use crate::error::{OptError, Result};
 use crate::graph::{CompGraph, GraphDigest};
 use crate::memory::MemBudget;
@@ -132,45 +132,8 @@ impl PlanRequest {
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct StateKey {
     graph: GraphDigest,
-    cluster: ClusterId,
+    cluster: ClusterFingerprint,
     mem_limit: Option<u64>,
-}
-
-/// Structural identity of a device graph: everything cost tables and
-/// the search depend on — device/node layout, the full pairwise
-/// bandwidth matrix, host/NIC links, and the compute model, with floats
-/// captured by bit pattern. The cosmetic cluster name is excluded, so
-/// two identically-shaped clusters share one memo entry.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct ClusterId {
-    node_of: Vec<usize>,
-    bw_bits: Vec<u64>,
-    host_bw: u64,
-    node_bw: u64,
-    compute: [u64; 5],
-}
-
-fn cluster_id(d: &DeviceGraph) -> ClusterId {
-    let n = d.num_devices();
-    let mut bw_bits = Vec::with_capacity(n * n);
-    for i in 0..n {
-        for j in 0..n {
-            bw_bits.push(d.bandwidth(i, j).to_bits());
-        }
-    }
-    ClusterId {
-        node_of: d.devices.iter().map(|dev| dev.node).collect(),
-        bw_bits,
-        host_bw: d.host_bw.to_bits(),
-        node_bw: d.node_bw.to_bits(),
-        compute: [
-            d.compute.peak_flops.to_bits(),
-            d.compute.mem_bw.to_bits(),
-            d.compute.overhead.to_bits(),
-            d.compute.conv_eff.to_bits(),
-            d.compute.gemm_eff.to_bits(),
-        ],
-    }
 }
 
 /// The memoized expensive state for one [`StateKey`]: the exhaustive
@@ -231,6 +194,7 @@ pub struct PlanServiceBuilder {
     shard_capacity: usize,
     state_capacity: usize,
     backend: Box<dyn SearchBackend>,
+    build_threads: usize,
 }
 
 impl PlanServiceBuilder {
@@ -263,6 +227,15 @@ impl PlanServiceBuilder {
         self
     }
 
+    /// Worker threads per cost-table build (DESIGN.md §7). `0` (the
+    /// default) uses one thread per available core; `1` builds serially
+    /// on the requesting thread. Any value produces bit-identical
+    /// tables — the knob trades wall time only.
+    pub fn build_threads(mut self, threads: usize) -> PlanServiceBuilder {
+        self.build_threads = threads;
+        self
+    }
+
     /// Validate the configuration and assemble the service.
     pub fn build(self) -> Result<PlanService> {
         if self.shards == 0 {
@@ -290,6 +263,8 @@ impl PlanServiceBuilder {
                 tick: 0,
                 map: HashMap::new(),
             }),
+            memo: Arc::new(TableMemo::new()),
+            build_threads: self.build_threads,
             table_builds: AtomicU64::new(0),
             searches: AtomicU64::new(0),
             build_waits: AtomicU64::new(0),
@@ -322,6 +297,13 @@ pub struct ServiceStats {
     pub plans_cached: usize,
     /// (Tables + optimum) states currently resident in the memo.
     pub states_cached: usize,
+    /// Per-layer/per-edge cost-table memo lookups answered from cache
+    /// ([`TableMemo`]; DESIGN.md §7) — reuse *across* whole-graph state
+    /// builds, e.g. two graphs sharing all but one layer.
+    pub memo_hits: u64,
+    /// Per-layer/per-edge cost-table memo lookups that ran a build —
+    /// with single flight, exactly one per distinct layer/edge key.
+    pub memo_misses: u64,
 }
 
 /// A thread-safe plan-serving façade over the planning pipeline.
@@ -334,6 +316,10 @@ pub struct PlanService {
     backend: Box<dyn SearchBackend>,
     shards: Vec<Mutex<PlanCache>>,
     states: Mutex<StateMemo>,
+    /// The per-layer/per-edge cost-table memo shared by every state
+    /// build this service runs (DESIGN.md §7).
+    memo: Arc<TableMemo>,
+    build_threads: usize,
     table_builds: AtomicU64,
     searches: AtomicU64,
     build_waits: AtomicU64,
@@ -353,6 +339,7 @@ impl PlanService {
             shard_capacity: 8,
             state_capacity: 32,
             backend: Box::new(Elimination),
+            build_threads: 0,
         }
     }
 
@@ -419,7 +406,7 @@ impl PlanService {
     ) -> Result<Arc<TableState>> {
         let key = StateKey {
             graph: graph.digest().clone(),
-            cluster: cluster_id(devices),
+            cluster: devices.fingerprint(),
             mem_limit: req.mem_limit,
         };
         let cell = {
@@ -437,7 +424,9 @@ impl PlanService {
             self.table_builds.fetch_add(1, Ordering::Relaxed);
             let cm = CostModel::new(graph, devices);
             let budget = req.mem_limit.map(MemBudget::new);
-            let tables = CostTables::build_budgeted(&cm, devices.num_devices(), budget)?;
+            let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
+            let tables =
+                CostTables::build_opts(&cm, devices.num_devices(), budget, &opts)?;
             let optimized = self.backend.search(&tables)?;
             self.searches.fetch_add(1, Ordering::Relaxed);
             Ok(Arc::new(TableState { tables, optimized }))
@@ -519,6 +508,7 @@ impl PlanService {
         }
         let states_cached =
             self.states.lock().unwrap_or_else(PoisonError::into_inner).map.len();
+        let memo = self.memo.stats();
         ServiceStats {
             plan_hits,
             plan_misses,
@@ -527,7 +517,14 @@ impl PlanService {
             build_waits: self.build_waits.load(Ordering::Relaxed),
             plans_cached,
             states_cached,
+            memo_hits: memo.hits,
+            memo_misses: memo.misses,
         }
+    }
+
+    /// Counters of the shared per-layer/per-edge table memo alone.
+    pub fn memo_stats(&self) -> crate::cost::MemoStats {
+        self.memo.stats()
     }
 }
 
@@ -647,15 +644,17 @@ mod tests {
     }
 
     #[test]
-    fn cluster_id_distinguishes_topologies() {
+    fn cluster_fingerprint_distinguishes_topologies() {
+        // The state key shares `DeviceGraph::fingerprint` with the
+        // cost-table memo, so one identity governs both cache layers.
         let two_by_four = ClusterSpec::p100(8).unwrap().device_graph().unwrap();
         let one_by_eight = ClusterSpec::new(1, 8).device_graph().unwrap();
-        assert_ne!(cluster_id(&two_by_four), cluster_id(&one_by_eight));
+        assert_ne!(two_by_four.fingerprint(), one_by_eight.fingerprint());
         let again = ClusterSpec::p100(8).unwrap().device_graph().unwrap();
-        assert_eq!(cluster_id(&two_by_four), cluster_id(&again));
+        assert_eq!(two_by_four.fingerprint(), again.fingerprint());
         // the cosmetic name is excluded: equal shapes share a memo entry
         let renamed =
             ClusterSpec::p100(8).unwrap().name("other").device_graph().unwrap();
-        assert_eq!(cluster_id(&two_by_four), cluster_id(&renamed));
+        assert_eq!(two_by_four.fingerprint(), renamed.fingerprint());
     }
 }

@@ -85,6 +85,32 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, t0.elapsed().as_secs_f64())
 }
 
+/// Render named wall-clock measurements as a machine-readable JSON
+/// document, for bench output that gets committed as an artifact (e.g.
+/// `BENCH_cold_plan.json`). Records the bench name, the host's thread
+/// count (parallel speedups are only meaningful relative to it), and one
+/// `{name, seconds}` entry per measurement in the order given; object
+/// keys serialize sorted, so the document is byte-stable across runs up
+/// to the timings themselves.
+pub fn bench_json(bench: &str, results: &[(String, f64)]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let entries = results
+        .iter()
+        .map(|(name, secs)| {
+            Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("seconds", Json::Num(*secs)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str(bench.to_string())),
+        ("host_threads", Json::Num(host as f64)),
+        ("results", Json::Arr(entries)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +133,18 @@ mod tests {
         let (v, dt) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let doc = bench_json("cold_plan", &[("vgg16/serial".to_string(), 1.25)]);
+        let text = doc.to_string();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.get("bench").and_then(|j| j.as_str()), Some("cold_plan"));
+        assert!(back.get("host_threads").and_then(|j| j.as_usize()).unwrap() >= 1);
+        let results = back.get("results").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").and_then(|j| j.as_str()), Some("vgg16/serial"));
+        assert_eq!(results[0].get("seconds").and_then(|j| j.as_f64()), Some(1.25));
     }
 }

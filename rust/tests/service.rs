@@ -10,8 +10,9 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
 
+use optcnn::graph::GraphBuilder;
 use optcnn::planner::serve;
-use optcnn::planner::{Network, PlanRequest, PlanService, Planner, StrategyKind};
+use optcnn::planner::{Network, NetworkSpec, PlanRequest, PlanService, Planner, StrategyKind};
 use optcnn::util::json::Json;
 
 /// The single-threaded reference: the plan JSON a fresh one-shot
@@ -142,6 +143,70 @@ fn shard_counters_sum_coherently() {
     );
     assert_eq!(stats.plans_cached, combos.len());
     assert_eq!(stats.table_builds, 0, "baseline-only traffic builds no cost tables");
+}
+
+/// A five-layer chain whose middle conv varies in kernel/padding while
+/// preserving shapes, so variants overlap on every other layer's memo key.
+fn chain_variant(kernel: usize, pad: usize) -> NetworkSpec {
+    let mut b = GraphBuilder::new(&format!("chain_k{kernel}"));
+    let x = b.input(8, 3, 16, 16).unwrap();
+    let c1 = b.conv2d("c1", x, 8, (3, 3), (1, 1), (1, 1)).unwrap();
+    let c2 = b.conv2d("c2", c1, 8, (kernel, kernel), (1, 1), (pad, pad)).unwrap();
+    let f = b.fully_connected("fc", c2, 10).unwrap();
+    b.softmax("sm", f).unwrap();
+    NetworkSpec::custom(b.finish().unwrap()).unwrap()
+}
+
+#[test]
+fn memo_builds_each_distinct_layer_key_exactly_once_under_races() {
+    // three graphs overlapping pairwise on 4 of 5 layers and 2 of 4
+    // edges: 7 distinct layer keys + 8 distinct edge keys overall
+    let graphs: Vec<NetworkSpec> =
+        [(3usize, 1usize), (5, 2), (7, 3)].map(|(k, p)| chain_variant(k, p)).into();
+
+    // a sequential service pins the ground truth: misses == distinct
+    // keys, hits == shared-key reuse across the three builds
+    let reference = PlanService::new();
+    for g in &graphs {
+        let req = PlanRequest::new(g.clone(), 2).unwrap().strategy(StrategyKind::Layerwise);
+        reference.evaluate(&req).unwrap();
+    }
+    let expected = reference.stats();
+    assert_eq!((expected.memo_misses, expected.memo_hits), (15, 12));
+
+    // N threads hammer a second service with the same graphs in rotated
+    // order, so overlapping layer keys race; a miss counts only a build
+    // that actually ran, so equality with the sequential reference says
+    // every distinct key was built exactly once despite the races
+    let service = Arc::new(PlanService::new());
+    let threads = 8;
+    let barrier = Arc::new(Barrier::new(threads));
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let service = Arc::clone(&service);
+            let barrier = Arc::clone(&barrier);
+            let graphs = &graphs;
+            scope.spawn(move || {
+                barrier.wait();
+                for step in 0..graphs.len() {
+                    let g = graphs[(step + t) % graphs.len()].clone();
+                    let req =
+                        PlanRequest::new(g, 2).unwrap().strategy(StrategyKind::Layerwise);
+                    service.evaluate(&req).unwrap();
+                }
+            });
+        }
+    });
+    let stats = service.stats();
+    assert_eq!(stats.table_builds, 3, "one whole-table build per distinct digest");
+    assert_eq!(
+        stats.memo_misses, expected.memo_misses,
+        "racing builds must not rebuild a layer/edge key the memo already holds"
+    );
+    assert_eq!(
+        stats.memo_hits, expected.memo_hits,
+        "every shared key must be served from the memo, as in the sequential run"
+    );
 }
 
 #[test]

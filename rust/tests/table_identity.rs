@@ -1,0 +1,182 @@
+//! Byte-identity suite for the parallel, memoized cost-table pipeline
+//! (DESIGN.md §7): for every builtin network, at 2/4/8 devices, with and
+//! without a per-device memory budget, the parallel + memoized build must
+//! produce tables whose dimensions and contents are *bitwise* identical
+//! to the serial build's, and the optimum searched over them must match.
+//! `OPTCNN_BUILD_THREADS` overrides the parallel build's thread count so
+//! CI can re-run the whole suite at a pinned width (default 0 = auto).
+
+use optcnn::cost::{BuildOptions, CostModel, CostTables, TableMemo};
+use optcnn::device::DeviceGraph;
+use optcnn::graph::{nets, CompGraph, GraphBuilder};
+use optcnn::memory::MemBudget;
+use optcnn::optimizer;
+use optcnn::planner::{Network, NetworkSpec, PlanRequest, PlanService, Planner, StrategyKind};
+
+/// Thread count for the parallel side of each comparison: the
+/// `OPTCNN_BUILD_THREADS` env var when set, else 0 (one worker per core).
+fn par_threads() -> usize {
+    std::env::var("OPTCNN_BUILD_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// Bitwise table equality: same config lists, same node-cost bits, same
+/// edge endpoints, dimensions, and cost bits. `f64::to_bits` comparison
+/// deliberately distinguishes -0.0/0.0 and NaN payloads — "identical"
+/// means identical, not approximately equal.
+fn assert_identical(a: &CostTables, b: &CostTables, tag: &str) {
+    assert_eq!(a.configs, b.configs, "{tag}: per-layer config lists diverged");
+    assert_eq!(a.node_cost.len(), b.node_cost.len(), "{tag}: layer count");
+    for (l, (na, nb)) in a.node_cost.iter().zip(&b.node_cost).enumerate() {
+        assert_eq!(na.len(), nb.len(), "{tag}: node table dims, layer {l}");
+        for (i, (x, y)) in na.iter().zip(nb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: node_cost[{l}][{i}]");
+        }
+    }
+    assert_eq!(a.edges.len(), b.edges.len(), "{tag}: edge count");
+    for (e, (ea, eb)) in a.edges.iter().zip(&b.edges).enumerate() {
+        assert_eq!((ea.src, ea.dst), (eb.src, eb.dst), "{tag}: edge {e} endpoints");
+        assert_eq!(ea.cost.len(), eb.cost.len(), "{tag}: edge {e} dims");
+        for (i, (x, y)) in ea.cost.iter().zip(&eb.cost).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: edge {e} cost[{i}]");
+        }
+    }
+}
+
+/// The full grid for one builtin: serial vs parallel-cold vs
+/// parallel-warm (memoized) at every (ndev, budget) combination, plus
+/// optimum identity over the resulting tables.
+fn builtin_identity(net: &str) {
+    let threads = par_threads();
+    for ndev in [2usize, 4, 8] {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
+        let cm = CostModel::new(&g, &d);
+        for budget in [None, Some(MemBudget::new(16_000_000_000))] {
+            let tag = format!(
+                "{net}@{ndev}dev budget={}",
+                budget.map_or("none".to_string(), |b| format!("{}", b.bytes_per_dev))
+            );
+            let serial = BuildOptions { threads: 1, memo: None };
+            let reference = CostTables::build_opts(&cm, ndev, budget, &serial)
+                .unwrap_or_else(|e| panic!("{tag}: serial build failed: {e}"));
+            let memo = TableMemo::new();
+            let opts = BuildOptions { threads, memo: Some(&memo) };
+            let cold = CostTables::build_opts(&cm, ndev, budget, &opts).unwrap();
+            assert_identical(&reference, &cold, &format!("{tag} [cold]"));
+            let before = memo.stats();
+            assert!(before.misses > 0, "{tag}: the cold build must populate the memo");
+            let warm = CostTables::build_opts(&cm, ndev, budget, &opts).unwrap();
+            assert_identical(&reference, &warm, &format!("{tag} [warm]"));
+            let after = memo.stats();
+            assert_eq!(after.misses, before.misses, "{tag}: warm rebuild must not rebuild");
+            assert!(after.hits > before.hits, "{tag}: warm rebuild must hit the memo");
+            let (a, b) = (optimizer::optimize(&reference), optimizer::optimize(&cold));
+            assert_eq!(a.strategy, b.strategy, "{tag}: optimal strategy diverged");
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{tag}: optimal cost diverged");
+        }
+    }
+}
+
+#[test]
+fn identity_lenet5() {
+    builtin_identity("lenet5");
+}
+
+#[test]
+fn identity_alexnet() {
+    builtin_identity("alexnet");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "heavy grid; the release CI steps run it")]
+fn identity_vgg16() {
+    builtin_identity("vgg16");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "heavy grid; the release CI steps run it")]
+fn identity_inception_v3() {
+    builtin_identity("inception_v3");
+}
+
+#[test]
+fn identity_resnet18() {
+    builtin_identity("resnet18");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "heavy grid; the release CI steps run it")]
+fn identity_resnet50() {
+    builtin_identity("resnet50");
+}
+
+#[test]
+fn identity_minicnn() {
+    builtin_identity("minicnn");
+}
+
+/// End-to-end determinism: the exported plan JSON off a `Planner` session
+/// must not depend on `--build-threads`.
+#[test]
+fn plan_json_is_identical_across_thread_counts() {
+    for net in [Network::LeNet5, Network::AlexNet, Network::MiniCnn] {
+        let serial = {
+            let mut p =
+                Planner::builder(net).devices(4).build_threads(1).build().unwrap();
+            p.plan(StrategyKind::Layerwise).unwrap().to_json().to_string()
+        };
+        let parallel = {
+            let mut p =
+                Planner::builder(net).devices(4).build_threads(4).build().unwrap();
+            p.plan(StrategyKind::Layerwise).unwrap().to_json().to_string()
+        };
+        assert_eq!(serial, parallel, "{net}: plan JSON depends on --build-threads");
+    }
+}
+
+/// A five-layer chain whose middle conv varies in kernel/padding while
+/// preserving its output shape, so every *other* layer's canonical form —
+/// and therefore its memo key — is unchanged between the two variants.
+fn chain_graph(name: &str, kernel: usize, pad: usize) -> CompGraph {
+    let mut b = GraphBuilder::new(name);
+    let x = b.input(8, 3, 16, 16).unwrap();
+    let c1 = b.conv2d("c1", x, 8, (3, 3), (1, 1), (1, 1)).unwrap();
+    let c2 = b.conv2d("c2", c1, 8, (kernel, kernel), (1, 1), (pad, pad)).unwrap();
+    let f = b.fully_connected("fc", c2, 10).unwrap();
+    b.softmax("sm", f).unwrap();
+    b.finish().unwrap()
+}
+
+/// Content-addressed sharing across graphs: planning a second graph that
+/// differs from the first in exactly one layer rebuilds only that layer's
+/// node table and its two incident edge tables — everything else is a
+/// per-layer memo hit, even though the graphs' digests (and so their
+/// whole-table cache entries) differ.
+#[test]
+fn shared_layers_hit_the_memo_across_graphs() {
+    let service = PlanService::new();
+    let a = NetworkSpec::custom(chain_graph("chain_a", 3, 1)).unwrap();
+    let b = NetworkSpec::custom(chain_graph("chain_b", 5, 2)).unwrap();
+
+    let req = PlanRequest::new(a, 2).unwrap().strategy(StrategyKind::Layerwise);
+    service.evaluate(&req).unwrap();
+    let cold = service.stats();
+    assert_eq!(cold.table_builds, 1);
+    // 5 distinct layers + 4 distinct edges, no intra-graph aliasing
+    assert_eq!((cold.memo_misses, cold.memo_hits), (9, 0));
+
+    let req = PlanRequest::new(b, 2).unwrap().strategy(StrategyKind::Layerwise);
+    service.evaluate(&req).unwrap();
+    let warm = service.stats();
+    assert_eq!(warm.table_builds, 2, "distinct digests must each build a table");
+    assert_eq!(
+        warm.memo_misses - cold.memo_misses,
+        3,
+        "only the changed conv and its two incident edges rebuild"
+    );
+    assert_eq!(
+        warm.memo_hits - cold.memo_hits,
+        6,
+        "the 4 unchanged layers and 2 untouched edges must hit the memo"
+    );
+}
