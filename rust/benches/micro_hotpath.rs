@@ -26,7 +26,8 @@ fn main() {
 
     // Cold-plan acceptance bench: serial vs parallel vs warm-memo table
     // construction for every builtin. `OPTCNN_BENCH_JSON=<path>` writes
-    // the measurements as a committed artifact (BENCH_cold_plan.json).
+    // the measurements as a machine-readable document; CI uploads it as
+    // the `bench-cold-plan` artifact on every run.
     println!("\n== micro: cold plan build (serial / parallel / warm-memo) ==");
     let mut cold_plan: Vec<(String, f64)> = Vec::new();
     for net in BUILTINS {
@@ -57,7 +58,7 @@ fn main() {
         cold_plan.push((format!("{net}/warm_memo"), t_warm));
     }
     if let Ok(path) = std::env::var("OPTCNN_BENCH_JSON") {
-        let doc = bench_json("cold_plan", &cold_plan);
+        let doc = bench_json("cold_plan", &cold_plan).expect("cold_plan measured nothing");
         std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
         println!("wrote machine-readable results to {path}");
     }

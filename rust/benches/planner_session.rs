@@ -58,7 +58,8 @@ fn main() {
                 ("warm_session_query".to_string(), warm.median),
                 ("warm_strategy_lookup".to_string(), strat.median),
             ],
-        );
+        )
+        .expect("planner_session measured nothing");
         std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
         println!("wrote machine-readable results to {path}");
     }

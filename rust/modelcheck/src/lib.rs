@@ -1,0 +1,155 @@
+//! Loom model checks for the memo/cache concurrency layer.
+//!
+//! This crate includes the *production* source of `optcnn::util::sync`
+//! via `#[path]` and rebuilds it against `loom::sync`, so every
+//! interleaving loom explores is explored over the exact code the memo
+//! (`cost::memo::TableMemo`) and the plan service's state memo run in
+//! normal builds. Run with:
+//!
+//! ```text
+//! cd rust/modelcheck
+//! RUSTFLAGS="--cfg loom" cargo test --release
+//! ```
+//!
+//! Without `--cfg loom` the models compile away and `cargo test` passes
+//! vacuously (plus the facade's own std-based unit tests); the CI
+//! `modelcheck` job always sets the flag.
+//!
+//! Invariants proven (DESIGN.md §10):
+//!
+//! * a single-flight cell runs its initializer exactly once, and every
+//!   waiter observes the winner's value;
+//! * concurrent memo users funnel into one build per key;
+//! * `forget` after a failed build re-opens the key without ever
+//!   evicting a successor cell (the `Arc::ptr_eq` guard);
+//! * the sharded check-then-act insert pattern used by plan ingestion
+//!   never loses an insert.
+
+#[path = "../../src/util/sync.rs"]
+pub mod sync;
+
+#[cfg(all(test, loom))]
+mod models {
+    use super::sync::{lock, Arc, Mutex, OnceCell, SingleFlightLru};
+    use loom::sync::atomic::{AtomicUsize, Ordering};
+    use loom::thread;
+
+    #[test]
+    fn once_cell_runs_exactly_one_initializer_across_threads() {
+        loom::model(|| {
+            let cell: Arc<OnceCell<usize>> = Arc::new(OnceCell::new());
+            let runs = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|i| {
+                    let cell = Arc::clone(&cell);
+                    let runs = Arc::clone(&runs);
+                    thread::spawn(move || {
+                        cell.get_or_init(|| {
+                            runs.fetch_add(1, Ordering::SeqCst);
+                            i
+                        })
+                    })
+                })
+                .collect();
+            let results: Vec<(usize, bool)> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(runs.load(Ordering::SeqCst), 1, "initializer ran more than once");
+            assert_eq!(
+                results.iter().filter(|(_, ran)| *ran).count(),
+                1,
+                "exactly one caller must report having run the initializer"
+            );
+            let winner = results.iter().find(|(_, ran)| *ran).map(|(v, _)| *v).unwrap();
+            assert!(
+                results.iter().all(|(v, _)| *v == winner),
+                "all callers must observe the winning value"
+            );
+            assert!(cell.is_set());
+        });
+    }
+
+    #[test]
+    fn memo_single_flight_builds_each_key_exactly_once() {
+        loom::model(|| {
+            // The exact shape of `TableMemo` / the service's state memo:
+            // a mutex-guarded LRU handing out cells, initialized outside
+            // the container lock.
+            let lru = Arc::new(Mutex::new(SingleFlightLru::<u32, u32>::new(2)));
+            let builds = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let lru = Arc::clone(&lru);
+                    let builds = Arc::clone(&builds);
+                    thread::spawn(move || {
+                        let cell = lock(&lru).cell(&7);
+                        let (v, _) = cell.get_or_init(|| {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            42
+                        });
+                        v
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), 42);
+            }
+            assert_eq!(builds.load(Ordering::SeqCst), 1, "duplicate build for one key");
+        });
+    }
+
+    #[test]
+    fn stale_forget_never_evicts_a_successor_cell() {
+        loom::model(|| {
+            let lru = Arc::new(Mutex::new(SingleFlightLru::<u32, u32>::new(2)));
+            // A build failed: its cell was handed out, then forgotten.
+            let stale = lock(&lru).cell(&1);
+            lock(&lru).forget(&1, &stale);
+            // Race a retry (fresh cell, successful build) against a
+            // second, stale forget still holding the old handle.
+            let retry = {
+                let lru = Arc::clone(&lru);
+                thread::spawn(move || lock(&lru).cell(&1).get_or_init(|| 42).0)
+            };
+            let raced = {
+                let lru = Arc::clone(&lru);
+                let stale = Arc::clone(&stale);
+                thread::spawn(move || lock(&lru).forget(&1, &stale))
+            };
+            assert_eq!(retry.join().unwrap(), 42);
+            raced.join().unwrap();
+            // In every interleaving the stale forget is a no-op (the
+            // Arc::ptr_eq guard), so the successor's value survives.
+            let (v, ran) = lock(&lru).cell(&1).get_or_init(|| 7);
+            assert_eq!((v, ran), (42, false), "stale forget evicted the successor");
+        });
+    }
+
+    #[test]
+    fn sharded_cache_never_loses_an_insert() {
+        loom::model(|| {
+            // Plan ingestion's check-then-act: lookup under one lock
+            // acquisition, verify unlocked, insert under a second. Two
+            // concurrent ingests of the same (equal) plan may both miss
+            // and both insert; the entry must survive with the shared
+            // value either way.
+            let shard = Arc::new(Mutex::new(std::collections::HashMap::<u32, u32>::new()));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let shard = Arc::clone(&shard);
+                    thread::spawn(move || {
+                        let hit = lock(&shard).get(&7).copied();
+                        if hit.is_none() {
+                            lock(&shard).insert(7, 42);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let map = lock(&shard);
+            assert_eq!(map.len(), 1);
+            assert_eq!(map.get(&7), Some(&42), "insert lost");
+        });
+    }
+}

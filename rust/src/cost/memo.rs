@@ -18,27 +18,27 @@
 //! per-layer memo.
 //!
 //! Entries are built **single-flight**: concurrent requests for one key
-//! block on one build (the `OnceLock`-cell idiom shared with
-//! `planner::service::StateMemo`), so a service hammered with overlapping
-//! graphs builds each distinct layer exactly once — `misses` counts
-//! builds that actually ran. Both maps are LRU-bounded, and failed
-//! builds (an infeasible layer under a budget) are evicted immediately
-//! rather than cached, so a later identical request retries.
+//! block on one build (the [`SingleFlightLru`](crate::util::sync::SingleFlightLru) cell idiom
+//! shared with `planner::service::StateMemo`, model-checked under loom
+//! by the `rust/modelcheck` crate), so a service hammered with
+//! overlapping graphs builds each distinct layer exactly once — `misses`
+//! counts builds that actually ran. Both maps are LRU-bounded, and
+//! failed builds (an infeasible layer under a budget) are evicted
+//! immediately rather than cached, so a later identical request retries.
 //!
 //! Memoization is bypassed entirely for measured-`t_C` cost models: the
 //! measured timings are per-session arrays, not content-addressable
 //! structure.
 
-use std::collections::HashMap;
-use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::sync::{Arc, Mutex};
 
 use crate::device::ClusterFingerprint;
 use crate::error::Result;
 use crate::memory::MemBudget;
 use crate::parallel::{PConfig, Placement};
 use crate::tensor::Region;
+use crate::util::sync::{lock, SingleFlightLru};
 
 use super::{CostModel, SyncModel};
 
@@ -138,56 +138,10 @@ pub struct LayerTables {
     pub tiles: Vec<Vec<Region>>,
 }
 
-type NodeCell = OnceLock<Result<Arc<LayerTables>>>;
-type EdgeCell = OnceLock<Arc<Vec<f64>>>;
-
-/// A small LRU of single-flight build cells — the `StateMemo` idiom,
-/// generic over key and cell type so node and edge maps share it.
-struct Lru<K, C> {
-    cap: usize,
-    tick: u64,
-    map: HashMap<K, (u64, Arc<C>)>,
-}
-
-impl<K: Eq + Hash + Clone, C: Default> Lru<K, C> {
-    fn new(cap: usize) -> Lru<K, C> {
-        Lru { cap, tick: 0, map: HashMap::new() }
-    }
-
-    /// The cell for `key`, created empty on first sight; bumps the key's
-    /// recency and evicts the stalest entry when over capacity.
-    fn cell(&mut self, key: &K) -> Arc<C> {
-        self.tick += 1;
-        let tick = self.tick;
-        if let Some((t, cell)) = self.map.get_mut(key) {
-            *t = tick;
-            return Arc::clone(cell);
-        }
-        if self.map.len() >= self.cap {
-            if let Some(oldest) = self
-                .map
-                .iter()
-                .min_by_key(|(_, (t, _))| *t)
-                .map(|(k, _)| k.clone())
-            {
-                self.map.remove(&oldest);
-            }
-        }
-        let cell = Arc::new(C::default());
-        self.map.insert(key.clone(), (tick, Arc::clone(&cell)));
-        cell
-    }
-
-    /// Drop `key`'s entry iff it still holds `cell` — a failed build must
-    /// not evict a successor that already replaced it.
-    fn forget(&mut self, key: &K, cell: &Arc<C>) {
-        if let Some((_, current)) = self.map.get(key) {
-            if Arc::ptr_eq(current, cell) {
-                self.map.remove(key);
-            }
-        }
-    }
-}
+// Single-flight LRU maps from `util::sync` (the loom-model-checked
+// facade): the cell payloads are the finished build artifacts.
+type NodeMap = SingleFlightLru<LayerTableKey, Result<Arc<LayerTables>>>;
+type EdgeMap = SingleFlightLru<EdgeTableKey, Arc<Vec<f64>>>;
 
 /// Point-in-time counters of a [`TableMemo`] (monotone except the cached
 /// sizes, which track the LRU maps).
@@ -207,8 +161,8 @@ pub struct MemoStats {
 /// instance typically lives behind a `PlanService` (every build routed
 /// through the service reuses it) or a `Planner` session.
 pub struct TableMemo {
-    nodes: Mutex<Lru<LayerTableKey, NodeCell>>,
-    edges: Mutex<Lru<EdgeTableKey, EdgeCell>>,
+    nodes: Mutex<NodeMap>,
+    edges: Mutex<EdgeMap>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -224,8 +178,8 @@ impl TableMemo {
     /// A memo with explicit per-map entry bounds (both must be >= 1).
     pub fn with_capacity(layer_entries: usize, edge_entries: usize) -> TableMemo {
         TableMemo {
-            nodes: Mutex::new(Lru::new(layer_entries.max(1))),
-            edges: Mutex::new(Lru::new(edge_entries.max(1))),
+            nodes: Mutex::new(SingleFlightLru::new(layer_entries.max(1))),
+            edges: Mutex::new(SingleFlightLru::new(edge_entries.max(1))),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
@@ -236,8 +190,8 @@ impl TableMemo {
         MemoStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            layers_cached: self.nodes.lock().unwrap_or_else(PoisonError::into_inner).map.len(),
-            edges_cached: self.edges.lock().unwrap_or_else(PoisonError::into_inner).map.len(),
+            layers_cached: lock(&self.nodes).len(),
+            edges_cached: lock(&self.edges).len(),
         }
     }
 
@@ -257,18 +211,13 @@ impl TableMemo {
         key: &LayerTableKey,
         build: impl FnOnce() -> Result<LayerTables>,
     ) -> Result<Arc<LayerTables>> {
-        let cell = self.nodes.lock().unwrap_or_else(PoisonError::into_inner).cell(key);
-        let mut ran = false;
-        let out = cell.get_or_init(|| {
-            ran = true;
-            build().map(Arc::new)
-        });
+        let cell = lock(&self.nodes).cell(key);
+        let (out, ran) = cell.get_or_init(|| build().map(Arc::new));
         self.note(ran);
         match out {
-            Ok(tables) => Ok(Arc::clone(tables)),
+            Ok(tables) => Ok(tables),
             Err(e) => {
-                let e = e.clone();
-                self.nodes.lock().unwrap_or_else(PoisonError::into_inner).forget(key, &cell);
+                lock(&self.nodes).forget(key, &cell);
                 Err(e)
             }
         }
@@ -281,14 +230,10 @@ impl TableMemo {
         key: &EdgeTableKey,
         build: impl FnOnce() -> Vec<f64>,
     ) -> Arc<Vec<f64>> {
-        let cell = self.edges.lock().unwrap_or_else(PoisonError::into_inner).cell(key);
-        let mut ran = false;
-        let cost = cell.get_or_init(|| {
-            ran = true;
-            Arc::new(build())
-        });
+        let cell = lock(&self.edges).cell(key);
+        let (cost, ran) = cell.get_or_init(|| Arc::new(build()));
         self.note(ran);
-        Arc::clone(cost)
+        cost
     }
 }
 

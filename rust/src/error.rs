@@ -9,6 +9,59 @@
 
 use std::fmt;
 
+/// The named invariants the static plan verifier proves over an
+/// [`crate::plan::ExecutionPlan`] (see `verify::verify_plan` and
+/// DESIGN.md §10). Each failed check reports its name through
+/// [`OptError::InvalidPlan`] so callers (and the mutation-corpus tests)
+/// can pin *which* invariant a corrupted plan violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlanCheck {
+    /// Each layer's tiles exactly partition its output tensor:
+    /// disjoint, gap-free, in-bounds, placed on in-range devices.
+    TileCoverage,
+    /// Every consumer tile's input region is covered by its transfer
+    /// schedule plus device-local data, and no transfer references a
+    /// device outside the cluster's placement shape.
+    TransferCompleteness,
+    /// Parameter shard groups partition each layer's parameters with
+    /// no overlapping or orphaned shards.
+    SyncGroups,
+    /// Recorded `peak_mem_per_dev` matches re-derivation through
+    /// `memory::peak_per_device`, bit-for-bit.
+    MemoryConsistency,
+    /// The plan's recorded step cost equals the cost model's
+    /// re-derivation, bit-for-bit.
+    CostCoherence,
+}
+
+impl PlanCheck {
+    /// Every check, in the order the verifier runs them.
+    pub const ALL: [PlanCheck; 5] = [
+        PlanCheck::TileCoverage,
+        PlanCheck::TransferCompleteness,
+        PlanCheck::SyncGroups,
+        PlanCheck::MemoryConsistency,
+        PlanCheck::CostCoherence,
+    ];
+
+    /// Stable kebab-case name used in diagnostics and CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanCheck::TileCoverage => "tile-coverage",
+            PlanCheck::TransferCompleteness => "transfer-completeness",
+            PlanCheck::SyncGroups => "sync-groups",
+            PlanCheck::MemoryConsistency => "memory-consistency",
+            PlanCheck::CostCoherence => "cost-coherence",
+        }
+    }
+}
+
+impl fmt::Display for PlanCheck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Any error the planning library reports to its caller.
 ///
 /// Variants carry a human-readable payload; [`fmt::Display`] renders the
@@ -39,6 +92,17 @@ pub enum OptError {
     /// The search backend could not produce a complete strategy (e.g. the
     /// exhaustive DFS hit its budget before reaching any leaf).
     SearchFailed(String),
+    /// An execution plan that failed static verification: one of the
+    /// [`PlanCheck`] invariants does not hold. Plans arrive over TCP,
+    /// from `--out` artifacts, and (eventually) from an on-disk store,
+    /// so a corrupted plan is a typed usage error (exit 2), never a
+    /// panic and never silently executed.
+    InvalidPlan {
+        /// The named invariant that failed.
+        check: PlanCheck,
+        /// Human-readable detail locating the violation.
+        detail: String,
+    },
     /// Memory-infeasible request: some layer has *no* configuration whose
     /// per-device peak fits the memory budget, so no strategy can exist
     /// (see `memory::layer_peak_bytes` and DESIGN.md §3).
@@ -84,6 +148,9 @@ impl fmt::Display for OptError {
             OptError::Config(msg) => write!(f, "config error: {msg}"),
             OptError::Io(msg) => write!(f, "{msg}"),
             OptError::SearchFailed(msg) => write!(f, "search failed: {msg}"),
+            OptError::InvalidPlan { check, detail } => {
+                write!(f, "invalid plan [{check}]: {detail}")
+            }
             OptError::Infeasible { layer, overshoot } => write!(
                 f,
                 "infeasible: layer `{layer}` needs {overshoot} more bytes than the \
@@ -114,6 +181,10 @@ mod tests {
             OptError::Config("line 3: expected key = value".into()),
             OptError::Io("plan.json: permission denied".into()),
             OptError::SearchFailed("budget exhausted".into()),
+            OptError::InvalidPlan {
+                check: PlanCheck::TileCoverage,
+                detail: "layer 3: tile 1 overlaps tile 2".into(),
+            },
             OptError::Infeasible { layer: "fc6".into(), overshoot: 123_456 },
         ];
         for e in errs {
@@ -130,7 +201,29 @@ mod tests {
         // a malformed graph off the wire is the client's mistake: exit 2
         assert_eq!(OptError::InvalidGraph("x".into()).exit_code(), 2);
         assert_eq!(OptError::Io("x".into()).exit_code(), 1);
+        // a corrupted plan artifact is the supplier's mistake: exit 2
+        let bad_plan = OptError::InvalidPlan {
+            check: PlanCheck::CostCoherence,
+            detail: "x".into(),
+        };
+        assert_eq!(bad_plan.exit_code(), 2);
+        assert!(bad_plan.to_string().contains("cost-coherence"));
         // an unsatisfiable memory budget is a usage error: exit 2
         assert_eq!(OptError::Infeasible { layer: "fc6".into(), overshoot: 1 }.exit_code(), 2);
+    }
+
+    #[test]
+    fn plan_check_names_are_stable_and_distinct() {
+        let names: Vec<&str> = PlanCheck::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "tile-coverage",
+                "transfer-completeness",
+                "sync-groups",
+                "memory-consistency",
+                "cost-coherence"
+            ]
+        );
     }
 }

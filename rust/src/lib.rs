@@ -57,5 +57,6 @@ pub mod runtime;
 pub mod sim;
 pub mod tensor;
 pub mod util;
+pub mod verify;
 
-pub use error::{OptError, Result};
+pub use error::{OptError, PlanCheck, Result};

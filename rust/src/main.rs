@@ -5,6 +5,8 @@
 //! * `optimize`  — run the strategy search and print the per-layer strategy
 //! * `simulate`  — evaluate a strategy on the simulated cluster
 //! * `plan`      — materialize a strategy's ExecutionPlan (print/export)
+//! * `verify`    — statically check an exported plan artifact against the
+//!   (graph, cluster) it claims to schedule (DESIGN.md §10)
 //! * `graph`     — export, validate, and render GraphSpec documents
 //! * `sweep`     — the full Figure 7/8 grid (networks x devices x strategies),
 //!   fanned across a thread pool through one shared `PlanService`
@@ -45,12 +47,14 @@ USAGE:
                   [--cluster <file.toml>] [--trace out.json] [--mem-limit <b>]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
                   [--cluster <file.toml>] [--out plan.json] [--mem-limit <b>]
+  optcnn verify   <plan.json> [--network <net> | --network-file <spec.json>]
+                  [--devices <n> | --cluster <file.toml>]
   optcnn graph    (--network <net> [--batch <global>] | --network-file <spec.json>)
                   [--validate] [--out spec.json] [--dot graph.dot]
   optcnn sweep    [--networks a,b] [--network-file <spec.json>]
                   [--devices 1,2,4,8,16] [--threads N] [--mem-limit <b>]
   optcnn serve    [--addr 127.0.0.1:7878] [--shards 8] [--cache-cap 8]
-                  [--build-threads <n>]
+                  [--build-threads <n>] [--no-verify]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
   optcnn profile  [--devices 4] [--reps 3]   (measured-t_C search, minicnn)
@@ -100,7 +104,7 @@ fn parse_mem_bytes(s: &str) -> Result<u64> {
 }
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["verbose", "csv", "validate"]);
+    let args = Args::parse(std::env::args().skip(1), &["verbose", "csv", "validate", "no-verify"]);
     let code = match dispatch(&args) {
         Ok(code) => code,
         Err(e) => {
@@ -116,6 +120,7 @@ fn dispatch(args: &Args) -> Result<i32> {
         Some("optimize") => cmd_optimize(args),
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
+        Some("verify") => cmd_verify(args),
         Some("graph") => cmd_graph(args),
         Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
@@ -350,6 +355,82 @@ fn cmd_plan(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Statically verify an exported plan artifact: re-derive its tiles,
+/// transfers, sync groups, memory peaks, and cost from the (network,
+/// cluster) context and demand exact agreement (DESIGN.md §10). The
+/// network defaults to the plan's recorded net name and the cluster to
+/// the P100 preset at the plan's recorded device count;
+/// `--network`/`--network-file` and `--devices`/`--cluster` override. A
+/// violated invariant exits 2 with `invalid plan [check-name]: ...`.
+fn cmd_verify(args: &Args) -> Result<i32> {
+    use optcnn::cost::CostModel;
+    use optcnn::plan::ExecutionPlan;
+    use optcnn::util::json::Json;
+    use optcnn::verify::verify_plan;
+
+    let Some(path) = args.positional.first() else {
+        return Err(OptError::InvalidArgument(
+            "verify requires a plan file: `optcnn verify plan.json`".into(),
+        ));
+    };
+    if args.get("batch").is_some() {
+        return Err(OptError::InvalidArgument(
+            "verify reads the batch off the plan's own input tiling; --batch does not apply"
+                .into(),
+        ));
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| OptError::Io(format!("reading {path}: {e}")))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| OptError::InvalidArgument(format!("{path}: malformed JSON: {e}")))?;
+    let plan = ExecutionPlan::from_json(&doc)
+        .map_err(|e| OptError::InvalidArgument(format!("{path}: {e}")))?;
+
+    let network = match network_from_args(args)? {
+        Some(spec) => spec,
+        None => NetworkSpec::Preset(plan.net.parse().map_err(|_| {
+            OptError::InvalidArgument(format!(
+                "plan records net `{}`, which is not a builtin preset; pass --network \
+                 or --network-file to name the graph to verify against",
+                plan.net
+            ))
+        })?),
+    };
+    let cluster = match args.get("cluster") {
+        Some(file) => {
+            if args.get("devices").is_some() {
+                return Err(OptError::InvalidArgument(
+                    "--devices and --cluster are mutually exclusive".into(),
+                ));
+            }
+            ClusterSpec::load(file)?
+        }
+        None => ClusterSpec::p100(args.usize_or("devices", plan.ndev)?)?,
+    };
+    let devices = cluster.device_graph()?;
+    // presets are rebuilt at the plan's own global batch (read off its
+    // input tiling); a custom spec carries its batch in the document
+    let global = match network.fixed_batch() {
+        Some(batch) => batch,
+        None => plan.global_batch().ok_or_else(|| {
+            OptError::InvalidArgument(format!(
+                "{path}: plan has no layer tiles to read a batch size from"
+            ))
+        })?,
+    };
+    let graph = network.build_graph(global)?;
+    let cm = CostModel::new(&graph, &devices);
+    let report = verify_plan(&cm, &plan)?;
+    print!("{report}");
+    println!(
+        "{path}: plan verifies clean against {} x{} (batch {})",
+        graph.name,
+        devices.num_devices(),
+        global
+    );
+    Ok(0)
+}
+
 /// Export, validate, and render `GraphSpec` documents: the round-trip
 /// tooling for custom networks. `--network <preset> --batch <global>`
 /// builds a builtin at an explicit global batch; `--network-file` loads
@@ -524,11 +605,13 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let shards = args.usize_or("shards", 8)?;
     let cap = args.usize_or("cache-cap", 8)?;
     let build_threads = args.usize_or("build-threads", 0)?;
+    let verify_loaded = !args.flag("no-verify");
     let service = Arc::new(
         PlanService::builder()
             .shards(shards)
             .shard_capacity(cap)
             .build_threads(build_threads)
+            .verify_loaded(verify_loaded)
             .build()?,
     );
     let handle = serve::spawn(addr, service)?;
@@ -539,6 +622,11 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     println!("protocol: one JSON request per line, e.g.");
     println!(r#"  {{"net":"alexnet","devices":4,"strategy":"layerwise","want":"evaluate"}}"#);
     println!(r#"  optional "mem_limit": <bytes/device> bounds the layer-wise search"#);
+    if verify_loaded {
+        println!(r#"  {{"want":"verify","plan":{{...}}}} checks a plan before caching it"#);
+    } else {
+        println!("  --no-verify: posted plans are admitted unchecked");
+    }
     handle.join();
     Ok(0)
 }

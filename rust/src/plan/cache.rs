@@ -93,14 +93,31 @@ impl PlanCache {
     /// miss. Evicts the least-recently-used entry at capacity.
     pub fn get_or_build(&mut self, cm: &CostModel<'_>, strategy: &Strategy) -> Arc<ExecutionPlan> {
         let key = PlanKey::of(cm, strategy);
+        if let Some(plan) = self.lookup(&key) {
+            return plan;
+        }
+        let plan = Arc::new(ExecutionPlan::build(cm, strategy));
+        self.insert(key, Arc::clone(&plan));
+        plan
+    }
+
+    /// Fetch a cached plan by key, refreshing its recency. A hit here is
+    /// also the verify-on-load fast path: anything in the cache was either
+    /// built by us or verified before insertion, so it needs no re-check.
+    pub fn lookup(&mut self, key: &PlanKey) -> Option<Arc<ExecutionPlan>> {
         self.tick += 1;
-        if let Some((last_used, plan)) = self.map.get_mut(&key) {
+        if let Some((last_used, plan)) = self.map.get_mut(key) {
             *last_used = self.tick;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(plan);
+            return Some(Arc::clone(plan));
         }
+        None
+    }
+
+    /// Insert a plan built (or verified) outside the cache, counting it
+    /// as a miss and evicting the least-recently-used entry at capacity.
+    pub fn insert(&mut self, key: PlanKey, plan: Arc<ExecutionPlan>) {
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let plan = Arc::new(ExecutionPlan::build(cm, strategy));
         if self.map.len() >= self.cap {
             if let Some(lru) = self
                 .map
@@ -112,7 +129,6 @@ impl PlanCache {
             }
         }
         self.map.insert(key, (self.tick, Arc::clone(&plan)));
-        plan
     }
 
     pub fn len(&self) -> usize {

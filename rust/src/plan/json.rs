@@ -13,7 +13,9 @@ use crate::tensor::Region;
 use crate::util::json::Json;
 
 // v2 added `peak_mem_per_dev` (the memory model's per-device high water).
-const VERSION: f64 = 2.0;
+// v3 added `cost_s` (the cost model's step-time estimate, recorded at
+// build so the verifier's cost-coherence check has a claim to re-derive).
+const VERSION: f64 = 3.0;
 
 impl Route {
     fn tag(&self) -> &'static str {
@@ -59,6 +61,7 @@ impl ExecutionPlan {
                 "peak_mem_per_dev",
                 Json::Arr(self.peak_mem_per_dev.iter().map(|&b| Json::Num(b)).collect()),
             ),
+            ("cost_s", Json::Num(self.cost_s)),
         ])
     }
 
@@ -84,7 +87,11 @@ impl ExecutionPlan {
                         .ok_or_else(|| "plan: peak_mem_per_dev must be nonnegative".to_string())
                 })
                 .collect::<Result<_, _>>()?,
+            cost_s: get_f64(obj, "cost_s")?,
         };
+        if !plan.cost_s.is_finite() || plan.cost_s < 0.0 {
+            return Err("plan: cost_s must be a nonnegative finite number".to_string());
+        }
         validate(&plan)?;
         Ok(plan)
     }

@@ -168,6 +168,12 @@ pub struct ExecutionPlan {
     /// feasibility a caller reads off the plan agrees with where the
     /// plan actually puts the bytes.
     pub peak_mem_per_dev: Vec<f64>,
+    /// Per-step execution-time estimate (seconds) recorded at build —
+    /// `CostModel::t_o` over the plan's strategy. Serialized (plan JSON
+    /// v3) so the verifier's cost-coherence check can prove a loaded
+    /// artifact still prices what it claims to (bit-for-bit; f64 round-
+    /// trips exactly through the JSON layer).
+    pub cost_s: f64,
 }
 
 impl ExecutionPlan {
@@ -285,7 +291,23 @@ impl ExecutionPlan {
             layers,
             edges,
             peak_mem_per_dev,
+            cost_s: cm.t_o(strategy),
         }
+    }
+
+    /// Reconstruct the per-layer strategy the plan materializes (the
+    /// configs are recorded verbatim in each [`LayerPlan`]).
+    pub fn strategy(&self) -> Strategy {
+        Strategy { configs: self.layers.iter().map(|lp| lp.cfg).collect() }
+    }
+
+    /// The global batch size the plan was laid out for: the batch extent
+    /// of the first (input) layer's tiling. `None` when the plan has no
+    /// layers or rank-0 tiles — possible only for hand-mangled
+    /// documents, which the verifier rejects anyway.
+    pub fn global_batch(&self) -> Option<usize> {
+        let first = self.layers.first()?;
+        first.tiles.iter().filter(|t| t.rank() > 0).map(|t| t.end(0)).max()
     }
 
     pub fn layer(&self, id: LayerId) -> &LayerPlan {
@@ -466,6 +488,19 @@ mod tests {
         assert_eq!(p.peak_mem_per_dev.len(), 4);
         assert!(p.peak_mem() > 0.0);
         assert!(p.peak_mem_per_dev.iter().all(|&b| b <= p.peak_mem()));
+    }
+
+    #[test]
+    fn plan_records_the_cost_models_step_time_and_its_strategy() {
+        let g = nets::alexnet(32 * 4).unwrap();
+        let d = DeviceGraph::p100_cluster(4).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let s = strategies::owt(&g, 4);
+        let p = ExecutionPlan::build(&cm, &s);
+        // bit-for-bit: same inputs, same summation order
+        assert_eq!(p.cost_s, cm.t_o(&s));
+        assert!(p.cost_s > 0.0);
+        assert_eq!(p.strategy(), s);
     }
 
     #[test]

@@ -65,7 +65,7 @@ pub mod service;
 
 pub use backend::{Elimination, ExhaustiveDfs, SearchBackend};
 pub use cluster::ClusterSpec;
-pub use service::{PlanRequest, PlanService, ServiceStats};
+pub use service::{PlanRequest, PlanService, ServiceStats, VerifyOutcome};
 
 use std::collections::HashMap;
 use std::fmt;

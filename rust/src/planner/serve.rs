@@ -9,9 +9,11 @@
 //!            "strategy": "layerwise", "want": "plan"}
 //!         | {"graph": {"version": 1, "name": "mine", "layers": [...]},
 //!            "devices": 4, "want": "evaluate"}
+//!         | {"plan": {...}, "want": "verify"}
 //! response: {"ok": true, "plan": {...}}
 //!         | {"ok": true, "evaluation": {...}}
 //!         | {"ok": true, "stats": {...}}
+//!         | {"ok": true, "verified": true, "cached": false, "checks": [...]}
 //!         | {"ok": false, "error": "one-line message"}
 //! ```
 //!
@@ -34,10 +36,31 @@
 //! totals, single-flight builds, and the per-layer cost-table memo's
 //! `memo_hits`/`memo_misses` — without planning anything.
 //!
+//! `{"want": "verify"}` is the server's plan-ingestion trust boundary
+//! (DESIGN.md §10): the required `"plan"` object is an execution-plan
+//! document (the exact JSON `optcnn plan --out` writes), statically
+//! verified against the request's network and cluster via
+//! [`PlanService::ingest`] before being admitted into the plan cache —
+//! a violated invariant answers `{"ok": false, "error": "invalid plan
+//! [check-name]: ..."}`. The network defaults to the plan's recorded
+//! `net` (which must then name a builtin preset) and the cluster to the
+//! P100 preset at the plan's recorded device count; an inline `"graph"`
+//! or an explicit `"net"` / `"devices"` / `"cluster"` overrides either
+//! side. The batch size is read off the plan's own input tiling, so
+//! `"batch"` (like `"strategy"` and `"mem_limit"`) does not combine
+//! with a verify probe. Re-verifying a plan equal to one already
+//! resident answers `"cached": true` without re-running the checks, and
+//! a server started with `--no-verify` admits plans unchecked
+//! (`"verified": false`).
+//!
 //! Every connection gets its own thread; all connections share one
 //! [`PlanService`], so a plan primed by any client is a cache hit for
 //! every other. Malformed requests answer `{"ok": false, ...}` on the
 //! same connection instead of dropping it.
+
+// Wire-facing request path: a malformed or hostile request must come
+// back as a typed `OptError`, never a panic in a serving thread.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -48,22 +71,29 @@ use std::thread::JoinHandle;
 use crate::device::ComputeModel;
 use crate::error::{OptError, Result};
 use crate::graph::CompGraph;
+use crate::plan::ExecutionPlan;
 use crate::util::json::Json;
 
-use super::service::{PlanRequest, PlanService, ServiceStats};
+use super::service::{PlanRequest, PlanService, ServiceStats, VerifyOutcome};
 use super::{ClusterSpec, Network, NetworkSpec, StrategyKind, PER_GPU_BATCH};
 
-/// What a request asks the server to return.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Want {
-    /// The materialized execution plan (the exact JSON `optcnn plan
-    /// --out` writes).
-    Plan,
-    /// The evaluation: estimate, simulated step, throughput, comm.
-    Evaluate,
-    /// The service's aggregate counters ([`ServiceStats`]); carries no
-    /// plan request at all.
+/// One parsed request line: what the server should do, with the typed
+/// payload each action needs — so `respond` can never reach for a field
+/// the parser did not prove present.
+#[derive(Debug)]
+pub enum Request {
+    /// Return the materialized execution plan (the exact JSON `optcnn
+    /// plan --out` writes).
+    Plan(PlanRequest),
+    /// Return the evaluation: estimate, simulated step, throughput, comm.
+    Evaluate(PlanRequest),
+    /// Return the service's aggregate counters ([`ServiceStats`]);
+    /// carries no plan request at all.
     Stats,
+    /// Statically verify the carried plan document against the request's
+    /// (network, cluster) and admit it into the plan cache
+    /// ([`PlanService::ingest`]).
+    Verify(PlanRequest, Box<ExecutionPlan>),
 }
 
 /// A request-shaped [`OptError`]: every malformed field is the client's
@@ -118,31 +148,42 @@ fn graph_from_json(v: &Json) -> Result<NetworkSpec> {
     NetworkSpec::custom(CompGraph::from_spec(v)?)
 }
 
-/// Parse one request line into what to return plus the typed plan
-/// request — `None` exactly when the `want` needs no planning at all
-/// (`Want::Stats`).
-pub fn parse_request(line: &str) -> Result<(Option<PlanRequest>, Want)> {
+/// Parse one request line into the typed [`Request`] the server acts on.
+pub fn parse_request(line: &str) -> Result<Request> {
     let v = Json::parse(line).map_err(|e| bad(&format!("malformed request JSON: {e}")))?;
-    let want = match v.get("want").map(Json::as_str) {
-        None | Some(Some("plan")) => Want::Plan,
-        Some(Some("evaluate")) => Want::Evaluate,
-        Some(Some("stats")) => Want::Stats,
-        Some(other) => {
-            return Err(bad(&format!(
-                "`want` must be \"plan\", \"evaluate\", or \"stats\", got {other:?}"
-            )));
+    let want = v.get("want").map(Json::as_str);
+    match want {
+        Some(Some("stats")) => {
+            // a stats probe carries no planning fields — reject them so a
+            // mangled plan request cannot silently answer as a counter dump
+            let keys =
+                ["net", "graph", "devices", "cluster", "strategy", "batch", "mem_limit", "plan"];
+            for key in keys {
+                if v.get(key).is_some() {
+                    return Err(bad(&format!("`{key}` does not combine with want=\"stats\"")));
+                }
+            }
+            Ok(Request::Stats)
         }
-    };
-    if want == Want::Stats {
-        // a stats probe carries no planning fields — reject them so a
-        // mangled plan request cannot silently answer as a counter dump
-        for key in ["net", "graph", "devices", "cluster", "strategy", "batch", "mem_limit"] {
-            if v.get(key).is_some() {
-                return Err(bad(&format!("`{key}` does not combine with want=\"stats\"")));
+        Some(Some("verify")) => Ok(parse_verify(&v)?),
+        None | Some(Some("plan")) | Some(Some("evaluate")) => {
+            if v.get("plan").is_some() {
+                return Err(bad("`plan` only combines with want=\"verify\""));
+            }
+            let req = parse_plan_request(&v)?;
+            match want {
+                Some(Some("evaluate")) => Ok(Request::Evaluate(req)),
+                _ => Ok(Request::Plan(req)),
             }
         }
-        return Ok((None, Want::Stats));
+        Some(other) => Err(bad(&format!(
+            "`want` must be \"plan\", \"evaluate\", \"stats\", or \"verify\", got {other:?}"
+        ))),
     }
+}
+
+/// Parse the planning fields of a `plan`/`evaluate` request.
+fn parse_plan_request(v: &Json) -> Result<PlanRequest> {
     let network: NetworkSpec = match (v.get("net"), v.get("graph")) {
         (Some(_), Some(_)) => {
             return Err(bad("`net` and `graph` are mutually exclusive"));
@@ -163,20 +204,7 @@ pub fn parse_request(line: &str) -> Result<(Option<PlanRequest>, Want)> {
             return Err(bad("request needs a `net` string or an inline `graph` object"));
         }
     };
-    let cluster = match (v.get("devices"), v.get("cluster")) {
-        (Some(_), Some(_)) => {
-            return Err(bad("`devices` and `cluster` are mutually exclusive"));
-        }
-        (Some(d), None) => {
-            let n = as_uint(d).ok_or_else(|| bad("`devices` must be a whole number"))?;
-            if n > MAX_TOTAL_DEVICES {
-                return Err(bad(&format!("`devices` capped at {MAX_TOTAL_DEVICES}, got {n}")));
-            }
-            ClusterSpec::p100(n)?
-        }
-        (None, Some(c)) => cluster_from_json(c)?,
-        (None, None) => ClusterSpec::p100(4)?,
-    };
+    let cluster = parse_cluster(v, 4)?;
     let strategy: StrategyKind = match v.get("strategy") {
         None => StrategyKind::Layerwise,
         Some(s) => {
@@ -203,7 +231,83 @@ pub fn parse_request(line: &str) -> Result<(Option<PlanRequest>, Want)> {
             .ok_or_else(|| bad("`mem_limit` must be a whole number of bytes (>= 1)"))?;
         req = req.mem_limit(bytes as u64);
     }
-    Ok((Some(req), want))
+    Ok(req)
+}
+
+/// The request's cluster: `devices` (P100 preset), an inline `cluster`
+/// object, or the P100 preset at `default_devices`.
+fn parse_cluster(v: &Json, default_devices: usize) -> Result<ClusterSpec> {
+    match (v.get("devices"), v.get("cluster")) {
+        (Some(_), Some(_)) => Err(bad("`devices` and `cluster` are mutually exclusive")),
+        (Some(d), None) => {
+            let n = as_uint(d).ok_or_else(|| bad("`devices` must be a whole number"))?;
+            if n > MAX_TOTAL_DEVICES {
+                return Err(bad(&format!("`devices` capped at {MAX_TOTAL_DEVICES}, got {n}")));
+            }
+            ClusterSpec::p100(n)
+        }
+        (None, Some(c)) => cluster_from_json(c),
+        (None, None) => ClusterSpec::p100(default_devices),
+    }
+}
+
+/// Parse a `{"want": "verify"}` probe: the plan document plus the
+/// network/cluster context to verify it against, defaulted from the
+/// plan's own recorded `net` and `ndev` (see the module docs).
+fn parse_verify(v: &Json) -> Result<Request> {
+    for key in ["strategy", "batch", "mem_limit"] {
+        if v.get(key).is_some() {
+            return Err(bad(&format!(
+                "`{key}` does not combine with want=\"verify\" — the plan \
+                 document carries its own strategy and batch"
+            )));
+        }
+    }
+    let doc = v.get("plan").ok_or_else(|| bad("want=\"verify\" needs a `plan` object"))?;
+    let plan = ExecutionPlan::from_json(doc).map_err(|e| bad(&e))?;
+    let network: NetworkSpec = match (v.get("net"), v.get("graph")) {
+        (Some(_), Some(_)) => {
+            return Err(bad("`net` and `graph` are mutually exclusive"));
+        }
+        (Some(n), None) => {
+            let name = n.as_str().ok_or_else(|| bad("`net` must be a string"))?;
+            NetworkSpec::Preset(name.parse::<Network>()?)
+        }
+        (None, Some(g)) => graph_from_json(g)?,
+        (None, None) => {
+            let preset = plan.net.parse::<Network>().map_err(|_| {
+                bad(&format!(
+                    "plan records net `{}`, which is not a builtin preset; \
+                     supply a `net` name or an inline `graph` to verify against",
+                    plan.net
+                ))
+            })?;
+            NetworkSpec::Preset(preset)
+        }
+    };
+    let cluster = parse_cluster(v, plan.ndev)?;
+    // A preset graph is rebuilt at the plan's own global batch (read off
+    // its input tiling); a custom graph carries its batch in the spec.
+    let per_gpu_batch = match network.fixed_batch() {
+        Some(_) => PER_GPU_BATCH, // unused for custom graphs
+        None => {
+            let global = plan
+                .global_batch()
+                .ok_or_else(|| bad("`plan` has no layer tiles to read a batch size from"))?;
+            let ndev = cluster.num_devices();
+            if ndev == 0 || global % ndev != 0 {
+                return Err(bad(&format!(
+                    "plan batch {global} does not divide across {ndev} devices"
+                )));
+            }
+            global / ndev
+        }
+    };
+    if per_gpu_batch > MAX_PER_GPU_BATCH {
+        return Err(bad(&format!("`batch` capped at {MAX_PER_GPU_BATCH}, got {per_gpu_batch}")));
+    }
+    let req = PlanRequest::with_cluster(network, cluster).per_gpu_batch(per_gpu_batch);
+    Ok(Request::Verify(req, Box::new(plan)))
 }
 
 /// Build a [`ClusterSpec`] from a request's `cluster` object. Keys
@@ -325,25 +429,40 @@ fn stats_json(s: &ServiceStats) -> Json {
 }
 
 fn respond(service: &PlanService, line: &str) -> Result<Json> {
-    let (req, want) = parse_request(line)?;
-    match want {
-        Want::Stats => Ok(Json::obj(vec![
+    match parse_request(line)? {
+        Request::Stats => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("stats", stats_json(&service.stats())),
         ])),
-        Want::Plan => {
-            let req = req.expect("plan requests always carry a request");
-            Ok(Json::obj(vec![
+        Request::Plan(req) => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("plan", service.plan(&req)?.to_json()),
+        ])),
+        Request::Evaluate(req) => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("evaluation", evaluation_json(&service.evaluate(&req)?)),
+        ])),
+        Request::Verify(req, plan) => {
+            let outcome = service.ingest(&req, &plan)?;
+            let (verified, cached, report) = match outcome {
+                VerifyOutcome::Verified(report) => (true, false, Some(report)),
+                VerifyOutcome::CachedVerified => (true, true, None),
+                VerifyOutcome::AcceptedUnchecked => (false, false, None),
+            };
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
-                ("plan", service.plan(&req)?.to_json()),
-            ]))
-        }
-        Want::Evaluate => {
-            let req = req.expect("evaluate requests always carry a request");
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("evaluation", evaluation_json(&service.evaluate(&req)?)),
-            ]))
+                ("verified", Json::Bool(verified)),
+                ("cached", Json::Bool(cached)),
+            ];
+            if let Some(report) = report {
+                let names = report
+                    .checks
+                    .iter()
+                    .map(|c| Json::Str(c.check.name().to_string()))
+                    .collect();
+                fields.push(("checks", Json::Arr(names)));
+            }
+            Ok(Json::obj(fields))
         }
     }
 }
@@ -461,34 +580,46 @@ pub fn spawn(addr: &str, service: Arc<PlanService>) -> Result<ServeHandle> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
+    /// The planning payload of a line that must parse as plan/evaluate.
+    fn planning(line: &str) -> PlanRequest {
+        match parse_request(line).unwrap() {
+            Request::Plan(req) | Request::Evaluate(req) => req,
+            other => panic!("expected a planning request, got {other:?}"),
+        }
+    }
+
     #[test]
     fn parse_request_applies_defaults() {
-        let (req, want) = parse_request(r#"{"net": "lenet5"}"#).unwrap();
-        let req = req.unwrap();
+        let req = match parse_request(r#"{"net": "lenet5"}"#).unwrap() {
+            Request::Plan(req) => req,
+            other => panic!("the default want is plan, got {other:?}"),
+        };
         assert_eq!(req.network.preset(), Some(Network::LeNet5));
         assert_eq!(req.cluster.num_devices(), 4);
         assert_eq!(req.per_gpu_batch, PER_GPU_BATCH);
         assert_eq!(req.strategy, StrategyKind::Layerwise);
-        assert_eq!(want, Want::Plan);
     }
 
     #[test]
     fn parse_request_reads_cluster_objects() {
-        let (req, want) = parse_request(
+        let parsed = parse_request(
             r#"{"net": "alexnet", "batch": 16, "strategy": "data", "want": "evaluate",
                 "cluster": {"nodes": 2, "gpus_per_node": 8, "compute": "v100",
                             "intra_bw_gbps": 130.0, "inter_bw_gbps": 6.0}}"#,
         )
         .unwrap();
-        let req = req.unwrap();
+        let req = match parsed {
+            Request::Evaluate(req) => req,
+            other => panic!("want=evaluate must parse as Evaluate, got {other:?}"),
+        };
         assert_eq!(req.network.preset(), Some(Network::AlexNet));
         assert_eq!(req.cluster.num_devices(), 16);
         assert_eq!(req.per_gpu_batch, 16);
         assert_eq!(req.strategy, StrategyKind::Data);
-        assert_eq!(want, Want::Evaluate);
         let d = req.cluster.device_graph().unwrap();
         assert_eq!(d.bandwidth(0, 1), 130e9);
         assert_eq!(d.bandwidth(0, 8), 6e9);
@@ -496,13 +627,12 @@ mod tests {
 
     #[test]
     fn cluster_objects_support_the_toml_compute_overrides() {
-        let (req, _) = parse_request(
+        let req = planning(
             r#"{"net": "lenet5",
                 "cluster": {"nodes": 1, "gpus_per_node": 2, "compute": "v100",
                             "peak_tflops": 30.0, "mem_bw_gbps": 2000}}"#,
-        )
-        .unwrap();
-        let d = req.unwrap().cluster.device_graph().unwrap();
+        );
+        let d = req.cluster.device_graph().unwrap();
         assert_eq!(d.compute.peak_flops, 30e12);
         assert_eq!(d.compute.mem_bw, 2000e9);
     }
@@ -572,9 +702,8 @@ mod tests {
     fn inline_graph_caps_are_split_and_named() {
         // a realistic deep net rides inline untruncated
         let wide = crate::graph::nets::inception_v3(32).unwrap().to_spec().to_string();
-        let (req, _) =
-            parse_request(&format!(r#"{{"graph": {wide}, "devices": 2}}"#)).unwrap();
-        assert_eq!(req.unwrap().network.name(), "inception_v3");
+        let req = planning(&format!(r#"{{"graph": {wide}, "devices": 2}}"#));
+        assert_eq!(req.network.name(), "inception_v3");
 
         // a request beyond the old blanket 64 KiB *line* cap but within
         // the new per-field caps must now parse (the point of splitting)
@@ -677,9 +806,7 @@ mod tests {
     fn stats_want_reports_service_counters() {
         let service = PlanService::new();
         // a cold probe parses to no request and all-zero counters
-        let (req, want) = parse_request(r#"{"want": "stats"}"#).unwrap();
-        assert!(req.is_none());
-        assert_eq!(want, Want::Stats);
+        assert!(matches!(parse_request(r#"{"want": "stats"}"#).unwrap(), Request::Stats));
         let v = Json::parse(&handle_line(&service, r#"{"want": "stats"}"#)).unwrap();
         assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
         let stats = v.get("stats").unwrap();
@@ -700,6 +827,76 @@ mod tests {
             stats.get("memo_misses").and_then(Json::as_f64),
             Some(direct.memo_misses as f64)
         );
+    }
+
+    #[test]
+    fn verify_want_round_trips_plans_over_the_wire() {
+        // produce a plan over the wire...
+        let producer = PlanService::new();
+        let reply = handle_line(&producer, r#"{"net": "lenet5", "devices": 2}"#);
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        let plan = v.get("plan").unwrap().to_string();
+        // ...and feed it to a server that has never seen it: the cold
+        // ingestion path runs all five checks (context — net, devices,
+        // batch — is read off the plan document itself)
+        let fresh = PlanService::new();
+        let line = format!(r#"{{"want": "verify", "plan": {plan}}}"#);
+        let v = Json::parse(&handle_line(&fresh, &line)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("verified").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("cached").and_then(Json::as_bool), Some(false));
+        let checks = match v.get("checks").unwrap() {
+            Json::Arr(a) => a.len(),
+            other => panic!("checks must be an array, got {other:?}"),
+        };
+        assert_eq!(checks, 5, "all five invariants reported");
+        // re-verifying the identical artifact is a warm cache hit
+        let v = Json::parse(&handle_line(&fresh, &line)).unwrap();
+        assert_eq!(v.get("verified").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("cached").and_then(Json::as_bool), Some(true));
+        // the producer itself primed its cache when planning, so even the
+        // first verify there is the warm path
+        let v = Json::parse(&handle_line(&producer, &line)).unwrap();
+        assert_eq!(v.get("cached").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn verify_want_rejects_corrupt_plans_with_the_check_name() {
+        let service = PlanService::new();
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        let mut plan = service.plan(&req).unwrap().as_ref().clone();
+        plan.cost_s += 1.0;
+        let line = format!(r#"{{"want": "verify", "plan": {}}}"#, plan.to_json());
+        let v = Json::parse(&handle_line(&PlanService::new(), &line)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        let msg = v.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains("cost-coherence"), "error must name the check: {msg}");
+    }
+
+    #[test]
+    fn verify_want_field_rules() {
+        let service = PlanService::new();
+        let plan = service
+            .plan(&PlanRequest::new(Network::LeNet5, 2).unwrap())
+            .unwrap()
+            .to_json()
+            .to_string();
+        // `plan` belongs to verify alone; verify rejects planning knobs
+        // the plan document already encodes
+        for raw in [
+            format!(r#"{{"net": "lenet5", "devices": 2, "plan": {plan}}}"#),
+            format!(r#"{{"want": "verify", "plan": {plan}, "batch": 32}}"#),
+            format!(r#"{{"want": "verify", "plan": {plan}, "strategy": "data"}}"#),
+            format!(r#"{{"want": "verify", "plan": {plan}, "mem_limit": 1000}}"#),
+            r#"{"want": "verify"}"#.to_string(),
+            r#"{"want": "verify", "plan": {"version": 99}}"#.to_string(),
+        ] {
+            let v = Json::parse(&handle_line(&service, &raw)).unwrap();
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{raw}");
+            let msg = v.get("error").and_then(Json::as_str).unwrap();
+            assert!(!msg.is_empty() && !msg.contains('\n'), "{msg:?}");
+        }
     }
 
     #[test]

@@ -16,9 +16,11 @@
 //!   shards by [`PlanService::stats`].
 //! * **Single-flight state building.** The expensive per-(graph,
 //!   cluster, memory-budget) state — [`CostTables`] plus the search backend's
-//!   Algorithm 1 optimum — is memoized behind one [`OnceLock`] per key:
-//!   when many threads miss on the same key at once, exactly one runs
-//!   the build and the rest block until it finishes, instead of all
+//!   Algorithm 1 optimum — is memoized behind one single-flight cell per
+//!   key (the [`SingleFlightLru`] facade from `util::sync`, model-checked
+//!   under loom by the `rust/modelcheck` crate): when many threads miss
+//!   on the same key at once, exactly one runs the build and the rest
+//!   block until it finishes, instead of all
 //!   redundantly rebuilding tables. Keys are content-addressed: the
 //!   graph by its structural [`digest`](CompGraph::digest) (so identical
 //!   custom specs dedupe with each other and with presets) and the full
@@ -40,11 +42,14 @@
 //! # }
 //! ```
 
+// Wire-facing request path: a malformed or hostile request must come
+// back as a typed `OptError`, never a panic in a serving thread.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::sync::{Arc, Mutex};
 
 use crate::cost::{BuildOptions, CostModel, CostTables, TableMemo};
 use crate::device::{ClusterFingerprint, DeviceGraph};
@@ -54,6 +59,8 @@ use crate::memory::MemBudget;
 use crate::optimizer::{strategies, Optimized};
 use crate::parallel::Strategy;
 use crate::plan::{ExecutionPlan, PlanCache, PlanKey};
+use crate::util::sync::{lock, SingleFlightLru};
+use crate::verify::{verify_plan, VerifyReport};
 
 use super::backend::{Elimination, SearchBackend};
 use super::cluster::ClusterSpec;
@@ -143,50 +150,11 @@ struct TableState {
     optimized: Optimized,
 }
 
-/// The single-flight cell: set exactly once, by exactly one builder;
-/// concurrent readers of an in-flight cell block until it is set.
-type StateCell = OnceLock<Result<Arc<TableState>>>;
-
-/// The bounded single-flight memo: an LRU map of state cells. Evicting
-/// an entry is always safe — requests already waiting on its cell hold
-/// their own `Arc` and complete normally; only the memoization is lost.
-struct StateMemo {
-    cap: usize,
-    tick: u64,
-    map: HashMap<StateKey, (u64, Arc<StateCell>)>,
-}
-
-impl StateMemo {
-    /// The cell for `key`, inserting (and evicting the LRU entry at
-    /// capacity) on first sight.
-    fn cell(&mut self, key: &StateKey) -> Arc<StateCell> {
-        self.tick += 1;
-        let tick = self.tick;
-        if let Some((last_used, cell)) = self.map.get_mut(key) {
-            *last_used = tick;
-            return Arc::clone(cell);
-        }
-        if self.map.len() >= self.cap {
-            let lru = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone());
-            if let Some(lru) = lru {
-                self.map.remove(&lru);
-            }
-        }
-        let cell = Arc::new(OnceLock::new());
-        self.map.insert(key.clone(), (tick, Arc::clone(&cell)));
-        cell
-    }
-
-    /// Drop `key`'s entry, but only if it still maps to `cell` (a retry
-    /// may have installed a fresh cell in the meantime).
-    fn forget(&mut self, key: &StateKey, cell: &Arc<StateCell>) {
-        if let Some((_, current)) = self.map.get(key) {
-            if Arc::ptr_eq(current, cell) {
-                self.map.remove(key);
-            }
-        }
-    }
-}
+/// The bounded single-flight memo: an LRU of build cells from the
+/// model-checked [`SingleFlightLru`] facade. Evicting an entry is always
+/// safe — requests already waiting on its cell hold their own `Arc` and
+/// complete normally; only the memoization is lost.
+type StateMemo = SingleFlightLru<StateKey, Result<Arc<TableState>>>;
 
 /// Configures a [`PlanService`]; obtained from [`PlanService::builder`].
 pub struct PlanServiceBuilder {
@@ -195,6 +163,7 @@ pub struct PlanServiceBuilder {
     state_capacity: usize,
     backend: Box<dyn SearchBackend>,
     build_threads: usize,
+    verify_loaded: bool,
 }
 
 impl PlanServiceBuilder {
@@ -236,6 +205,15 @@ impl PlanServiceBuilder {
         self
     }
 
+    /// Whether externally supplied plans are statically verified before
+    /// being admitted into the plan cache (default `true`; see
+    /// [`PlanService::ingest`]). Disabling this trusts the artifact —
+    /// only sensible when every client is the planner itself.
+    pub fn verify_loaded(mut self, verify: bool) -> PlanServiceBuilder {
+        self.verify_loaded = verify;
+        self
+    }
+
     /// Validate the configuration and assemble the service.
     pub fn build(self) -> Result<PlanService> {
         if self.shards == 0 {
@@ -253,22 +231,26 @@ impl PlanServiceBuilder {
                 "state memo capacity must be at least 1".into(),
             ));
         }
-        Ok(PlanService {
+        Ok(self.assemble())
+    }
+
+    /// Assemble without validating. Callers guarantee the counts are
+    /// nonzero (`build` validates; `PlanService::new` uses the default
+    /// configuration, which is nonzero by construction).
+    fn assemble(self) -> PlanService {
+        PlanService {
             backend: self.backend,
             shards: (0..self.shards)
                 .map(|_| Mutex::new(PlanCache::new(self.shard_capacity)))
                 .collect(),
-            states: Mutex::new(StateMemo {
-                cap: self.state_capacity,
-                tick: 0,
-                map: HashMap::new(),
-            }),
+            states: Mutex::new(StateMemo::new(self.state_capacity)),
             memo: Arc::new(TableMemo::new()),
             build_threads: self.build_threads,
+            verify_loaded: self.verify_loaded,
             table_builds: AtomicU64::new(0),
             searches: AtomicU64::new(0),
             build_waits: AtomicU64::new(0),
-        })
+        }
     }
 }
 
@@ -320,16 +302,33 @@ pub struct PlanService {
     /// build this service runs (DESIGN.md §7).
     memo: Arc<TableMemo>,
     build_threads: usize,
+    verify_loaded: bool,
     table_builds: AtomicU64,
     searches: AtomicU64,
     build_waits: AtomicU64,
+}
+
+/// How [`PlanService::ingest`] admitted an externally supplied plan.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VerifyOutcome {
+    /// All five static checks ran now and passed (DESIGN.md §10).
+    Verified(VerifyReport),
+    /// The plan equals one already resident in the cache — built by this
+    /// service or verified on an earlier load — so no re-check was
+    /// needed. This is the warm ingestion path: one shard lookup.
+    CachedVerified,
+    /// Admitted without checks because verify-on-load is disabled
+    /// ([`PlanServiceBuilder::verify_loaded`]).
+    AcceptedUnchecked,
 }
 
 impl PlanService {
     /// A service with the default configuration: 8 shards of 8 plans, a
     /// 32-entry state memo, [`Elimination`] search.
     pub fn new() -> PlanService {
-        PlanService::builder().build().expect("default service configuration is valid")
+        // The defaults are nonzero by construction, so this skips
+        // `build`'s validation and cannot fail.
+        PlanService::builder().assemble()
     }
 
     /// Start configuring a service.
@@ -340,6 +339,7 @@ impl PlanService {
             state_capacity: 32,
             backend: Box::new(Elimination),
             build_threads: 0,
+            verify_loaded: true,
         }
     }
 
@@ -409,37 +409,29 @@ impl PlanService {
             cluster: devices.fingerprint(),
             mem_limit: req.mem_limit,
         };
-        let cell = {
-            let mut states = self.states.lock().unwrap_or_else(PoisonError::into_inner);
-            states.cell(&key)
-        };
+        let cell = lock(&self.states).cell(&key);
         // Single flight: the map lock is already released, so the build
         // below never blocks unrelated keys. Exactly one thread runs the
         // closure; concurrent requesters of the same key block inside
         // `get_or_init` until it finishes.
-        let mut ran = false;
-        let was_set = cell.get().is_some();
-        let build = || -> Result<Arc<TableState>> {
-            ran = true;
+        let was_set = cell.is_set();
+        let (result, ran) = cell.get_or_init(|| -> Result<Arc<TableState>> {
             self.table_builds.fetch_add(1, Ordering::Relaxed);
             let cm = CostModel::new(graph, devices);
             let budget = req.mem_limit.map(MemBudget::new);
             let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
-            let tables =
-                CostTables::build_opts(&cm, devices.num_devices(), budget, &opts)?;
+            let tables = CostTables::build_opts(&cm, devices.num_devices(), budget, &opts)?;
             let optimized = self.backend.search(&tables)?;
             self.searches.fetch_add(1, Ordering::Relaxed);
             Ok(Arc::new(TableState { tables, optimized }))
-        };
-        let result = cell.get_or_init(build).clone();
+        });
         if !ran && !was_set {
             self.build_waits.fetch_add(1, Ordering::Relaxed);
         }
         if result.is_err() {
             // Failed builds are not memoized: drop the cell (only if it
             // is still the one we used) so a later request can retry.
-            let mut states = self.states.lock().unwrap_or_else(PoisonError::into_inner);
-            states.forget(&key, &cell);
+            lock(&self.states).forget(&key, &cell);
         }
         result
     }
@@ -456,8 +448,40 @@ impl PlanService {
     /// plan-level single flight) while other shards proceed untouched.
     fn cached_plan(&self, cm: &CostModel<'_>, strategy: &Strategy) -> Arc<ExecutionPlan> {
         let key = PlanKey::of(cm, strategy);
-        let mut shard = self.shard_of(&key).lock().unwrap_or_else(PoisonError::into_inner);
+        let mut shard = lock(self.shard_of(&key));
         shard.get_or_build(cm, strategy)
+    }
+
+    /// Admit an externally supplied plan at the service's trust boundary
+    /// (the `{"want":"verify"}` probe of `optcnn serve`): statically
+    /// verify it against the request's (graph, cluster) — DESIGN.md §10 —
+    /// and on success cache it as verified, so re-loading the identical
+    /// artifact is a warm hit that skips every check. A plan that fails a
+    /// check answers [`OptError::InvalidPlan`] and is *not* cached. With
+    /// verify-on-load disabled ([`PlanServiceBuilder::verify_loaded`])
+    /// the plan is admitted unchecked and the outcome says so.
+    pub fn ingest(&self, req: &PlanRequest, plan: &ExecutionPlan) -> Result<VerifyOutcome> {
+        let (graph, devices, _) = self.session(req)?;
+        let cm = CostModel::new(&graph, &devices);
+        let key = PlanKey::of(&cm, &plan.strategy());
+        {
+            let mut shard = lock(self.shard_of(&key));
+            if let Some(cached) = shard.lookup(&key) {
+                if *cached == *plan {
+                    return Ok(VerifyOutcome::CachedVerified);
+                }
+                // Same key, different bytes: the plan disagrees with what
+                // this service would build, so fall through and let the
+                // checks name the violated invariant.
+            }
+        }
+        if !self.verify_loaded {
+            lock(self.shard_of(&key)).insert(key, Arc::new(plan.clone()));
+            return Ok(VerifyOutcome::AcceptedUnchecked);
+        }
+        let report = verify_plan(&cm, plan)?;
+        lock(self.shard_of(&key)).insert(key, Arc::new(plan.clone()));
+        Ok(VerifyOutcome::Verified(report))
     }
 
     /// The materialized execution plan for a request, served from the
@@ -501,13 +525,12 @@ impl PlanService {
         let mut plan_misses = 0;
         let mut plans_cached = 0;
         for shard in &self.shards {
-            let s = shard.lock().unwrap_or_else(PoisonError::into_inner);
+            let s = lock(shard);
             plan_hits += s.hits();
             plan_misses += s.misses();
             plans_cached += s.len();
         }
-        let states_cached =
-            self.states.lock().unwrap_or_else(PoisonError::into_inner).map.len();
+        let states_cached = lock(&self.states).len();
         let memo = self.memo.stats();
         ServiceStats {
             plan_hits,
@@ -536,6 +559,7 @@ impl Default for PlanService {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::planner::{Network, Planner};
@@ -641,6 +665,57 @@ mod tests {
             PlanRequest::with_cluster(Network::LeNet5, ClusterSpec::new(0, 4));
         assert!(service.evaluate(&bad_cluster).is_err());
         assert!(PlanRequest::new(Network::LeNet5, 7).is_err(), "preset cannot shape 7");
+    }
+
+    #[test]
+    fn ingest_verifies_then_serves_from_cache() {
+        let service = PlanService::new();
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        // An "external" artifact: a plan this service has never seen.
+        let plan = Planner::builder(Network::LeNet5)
+            .devices(2)
+            .build()
+            .unwrap()
+            .plan(StrategyKind::Layerwise)
+            .unwrap();
+        match service.ingest(&req, &plan).unwrap() {
+            VerifyOutcome::Verified(report) => assert_eq!(report.checks.len(), 5),
+            other => panic!("cold ingest must run the checks, got {other:?}"),
+        }
+        // The verified plan is cached as verified: re-loading the same
+        // artifact is a lookup, not a re-verification.
+        assert_eq!(service.ingest(&req, &plan).unwrap(), VerifyOutcome::CachedVerified);
+        // ...and the planning path now hits the same cache entry.
+        let served = service.plan(&req).unwrap();
+        assert_eq!(*served, *plan);
+    }
+
+    #[test]
+    fn ingest_rejects_corrupt_plans_and_keeps_them_out_of_the_cache() {
+        let service = PlanService::new();
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        let mut plan = Planner::builder(Network::LeNet5)
+            .devices(2)
+            .build()
+            .unwrap()
+            .plan(StrategyKind::Layerwise)
+            .unwrap()
+            .as_ref()
+            .clone();
+        plan.cost_s *= 2.0;
+        match service.ingest(&req, &plan) {
+            Err(OptError::InvalidPlan { check, .. }) => {
+                assert_eq!(check, crate::error::PlanCheck::CostCoherence);
+            }
+            other => panic!("expected InvalidPlan, got {other:?}"),
+        }
+        assert_eq!(service.stats().plans_cached, 0, "rejected plans are not cached");
+        // Same corrupt artifact, verify-on-load opted out: admitted.
+        let trusting = PlanService::builder().verify_loaded(false).build().unwrap();
+        assert_eq!(
+            trusting.ingest(&req, &plan).unwrap(),
+            VerifyOutcome::AcceptedUnchecked
+        );
     }
 
     #[test]

@@ -86,14 +86,27 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
 }
 
 /// Render named wall-clock measurements as a machine-readable JSON
-/// document, for bench output that gets committed as an artifact (e.g.
-/// `BENCH_cold_plan.json`). Records the bench name, the host's thread
+/// document, for bench output published as a CI artifact (see the
+/// `bench-artifacts` job). Records the bench name, the host's thread
 /// count (parallel speedups are only meaningful relative to it), and one
 /// `{name, seconds}` entry per measurement in the order given; object
 /// keys serialize sorted, so the document is byte-stable across runs up
 /// to the timings themselves.
-pub fn bench_json(bench: &str, results: &[(String, f64)]) -> crate::util::json::Json {
+///
+/// An empty `results` slice is an error, not an empty document: the one
+/// way a bench emits nothing is a wiring bug (a filter that matched no
+/// rows, a loop that never ran), and a dead artifact that still uploads
+/// hides it.
+pub fn bench_json(
+    bench: &str,
+    results: &[(String, f64)],
+) -> crate::Result<crate::util::json::Json> {
     use crate::util::json::Json;
+    if results.is_empty() {
+        return Err(crate::OptError::InvalidArgument(format!(
+            "bench `{bench}` produced no results; refusing to emit an empty artifact"
+        )));
+    }
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let entries = results
         .iter()
@@ -104,11 +117,11 @@ pub fn bench_json(bench: &str, results: &[(String, f64)]) -> crate::util::json::
             ])
         })
         .collect();
-    Json::obj(vec![
+    Ok(Json::obj(vec![
         ("bench", Json::Str(bench.to_string())),
         ("host_threads", Json::Num(host as f64)),
         ("results", Json::Arr(entries)),
-    ])
+    ]))
 }
 
 #[cfg(test)]
@@ -136,8 +149,14 @@ mod tests {
     }
 
     #[test]
+    fn bench_json_rejects_empty_results() {
+        let err = bench_json("cold_plan", &[]).unwrap_err();
+        assert!(err.to_string().contains("no results"), "{err}");
+    }
+
+    #[test]
     fn bench_json_round_trips() {
-        let doc = bench_json("cold_plan", &[("vgg16/serial".to_string(), 1.25)]);
+        let doc = bench_json("cold_plan", &[("vgg16/serial".to_string(), 1.25)]).unwrap();
         let text = doc.to_string();
         let back = crate::util::json::Json::parse(&text).unwrap();
         assert_eq!(back.get("bench").and_then(|j| j.as_str()), Some("cold_plan"));

@@ -5,6 +5,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod table;
 
 /// Human-readable formatting for byte counts.

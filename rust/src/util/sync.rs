@@ -1,0 +1,272 @@
+//! Concurrency primitives behind the memo/cache layer — single-flight
+//! build cells and their LRU container — factored into one facade so the
+//! exact production source also compiles against `loom::sync` for
+//! exhaustive model checking (DESIGN.md §6).
+//!
+//! Normal builds resolve the aliases below to `std::sync`; the
+//! `rust/modelcheck` crate includes this file verbatim via `#[path]` and
+//! builds it with `RUSTFLAGS="--cfg loom"`, swapping in loom's
+//! instrumented primitives. Whatever interleavings loom proves correct
+//! are therefore proven about *this* code, not a test double. To keep
+//! that inclusion sound the module is deliberately self-contained: std
+//! (plus the cfg-gated loom shim) only, no crate-internal imports.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Lock `m`, continuing through poisoning: every consumer holds these
+/// locks only around small map operations, so a panicking holder leaves
+/// the map consistent and the data (counters, cached cells) remains
+/// meaningful to other threads.
+#[cfg(not(loom))]
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Lock `m` (loom build: model-checked closures never panic, so
+/// poisoning cannot occur).
+#[cfg(loom)]
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap()
+}
+
+/// A write-once cell that runs at most one initializer: concurrent
+/// `get_or_init` callers block until the winning closure finishes, then
+/// all observe its value. The `bool` in the return reports whether *this*
+/// call ran the initializer — the signal the memo layers turn into
+/// hit/miss counters.
+#[cfg(not(loom))]
+#[derive(Debug)]
+pub struct OnceCell<T>(std::sync::OnceLock<T>);
+
+#[cfg(not(loom))]
+impl<T> OnceCell<T> {
+    /// An empty cell.
+    pub fn new() -> OnceCell<T> {
+        OnceCell(std::sync::OnceLock::new())
+    }
+
+    /// Whether the cell already holds a value (a racing initializer may
+    /// complete between this answer and a later call).
+    pub fn is_set(&self) -> bool {
+        self.0.get().is_some()
+    }
+}
+
+#[cfg(not(loom))]
+impl<T: Clone> OnceCell<T> {
+    /// The cell's value, initializing it with `f` if empty; the flag is
+    /// `true` iff this call ran `f`.
+    pub fn get_or_init(&self, f: impl FnOnce() -> T) -> (T, bool) {
+        let mut ran = false;
+        let v = self.0.get_or_init(|| {
+            ran = true;
+            f()
+        });
+        (v.clone(), ran)
+    }
+}
+
+#[cfg(not(loom))]
+impl<T> Default for OnceCell<T> {
+    fn default() -> OnceCell<T> {
+        OnceCell::new()
+    }
+}
+
+/// Loom model of [`OnceCell`]: a mutex-guarded three-state machine
+/// (empty / initializer running / done) with a condvar for waiters —
+/// semantically the blocking `OnceLock` contract, expressed in
+/// primitives loom can exhaustively interleave.
+#[cfg(loom)]
+pub struct OnceCell<T> {
+    state: Mutex<OnceState<T>>,
+    cv: Condvar,
+}
+
+#[cfg(loom)]
+enum OnceState<T> {
+    Empty,
+    Running,
+    Done(T),
+}
+
+#[cfg(loom)]
+impl<T> OnceCell<T> {
+    /// An empty cell.
+    pub fn new() -> OnceCell<T> {
+        OnceCell { state: Mutex::new(OnceState::Empty), cv: Condvar::new() }
+    }
+
+    /// Whether the cell already holds a value.
+    pub fn is_set(&self) -> bool {
+        matches!(&*lock(&self.state), OnceState::Done(_))
+    }
+}
+
+#[cfg(loom)]
+impl<T: Clone> OnceCell<T> {
+    /// The cell's value, initializing it with `f` if empty; the flag is
+    /// `true` iff this call ran `f`.
+    pub fn get_or_init(&self, f: impl FnOnce() -> T) -> (T, bool) {
+        let mut g = lock(&self.state);
+        loop {
+            match &*g {
+                OnceState::Done(v) => return (v.clone(), false),
+                OnceState::Running => g = self.cv.wait(g).unwrap(),
+                OnceState::Empty => {
+                    *g = OnceState::Running;
+                    drop(g);
+                    let v = f();
+                    let mut g = lock(&self.state);
+                    *g = OnceState::Done(v.clone());
+                    drop(g);
+                    self.cv.notify_all();
+                    return (v, true);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(loom)]
+impl<T> Default for OnceCell<T> {
+    fn default() -> OnceCell<T> {
+        OnceCell::new()
+    }
+}
+
+/// A bounded LRU of shared single-flight cells — the concurrency shape
+/// under both the cost-table memo (`cost::memo::TableMemo`) and the plan
+/// service's state memo. The container itself lives behind a `Mutex`
+/// held only for map operations; the cells it hands out are initialized
+/// *outside* that lock, so one slow build never serializes unrelated
+/// keys.
+pub struct SingleFlightLru<K, T> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (u64, Arc<OnceCell<T>>)>,
+}
+
+impl<K: Eq + Hash + Clone, T> SingleFlightLru<K, T> {
+    /// An LRU holding at most `cap` cells (`cap >= 1`).
+    pub fn new(cap: usize) -> SingleFlightLru<K, T> {
+        assert!(cap >= 1, "single-flight LRU capacity must be positive");
+        SingleFlightLru { cap, tick: 0, map: HashMap::new() }
+    }
+
+    /// The cell for `key`, created empty on first sight; bumps the key's
+    /// recency and evicts the stalest entry when over capacity. Eviction
+    /// drops the map's reference only — callers already initializing the
+    /// evicted cell keep it alive and complete unaffected.
+    pub fn cell(&mut self, key: &K) -> Arc<OnceCell<T>> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((t, cell)) = self.map.get_mut(key) {
+            *t = tick;
+            return Arc::clone(cell);
+        }
+        if self.map.len() >= self.cap {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        let cell = Arc::new(OnceCell::default());
+        self.map.insert(key.clone(), (tick, Arc::clone(&cell)));
+        cell
+    }
+
+    /// Drop `key`'s entry iff it still holds `cell` — a failed build must
+    /// not evict a successor that already replaced it.
+    pub fn forget(&mut self, key: &K, cell: &Arc<OnceCell<T>>) {
+        if let Some((_, current)) = self.map.get(key) {
+            if Arc::ptr_eq(current, cell) {
+                self.map.remove(key);
+            }
+        }
+    }
+
+    /// Number of resident cells.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether no cells are resident.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn once_cell_runs_one_initializer() {
+        let cell: OnceCell<u32> = OnceCell::new();
+        assert!(!cell.is_set());
+        let (v, ran) = cell.get_or_init(|| 7);
+        assert_eq!((v, ran), (7, true));
+        assert!(cell.is_set());
+        let (v, ran) = cell.get_or_init(|| 9);
+        assert_eq!((v, ran), (7, false), "second initializer must not run");
+    }
+
+    #[test]
+    fn lru_hands_out_one_cell_per_key_and_bounds_itself() {
+        let mut lru: SingleFlightLru<u32, u32> = SingleFlightLru::new(2);
+        let a = lru.cell(&1);
+        let b = lru.cell(&1);
+        assert!(Arc::ptr_eq(&a, &b), "same key, same cell");
+        lru.cell(&2);
+        lru.cell(&1); // refresh 1
+        lru.cell(&3); // evicts 2 (coldest)
+        assert_eq!(lru.len(), 2);
+        let a2 = lru.cell(&1);
+        assert!(Arc::ptr_eq(&a, &a2), "key 1 survived the eviction");
+        let c = lru.cell(&2);
+        assert!(!Arc::ptr_eq(&a, &c), "key 2 was evicted and recreated");
+    }
+
+    #[test]
+    fn forget_only_removes_the_same_cell() {
+        let mut lru: SingleFlightLru<u32, u32> = SingleFlightLru::new(4);
+        let a = lru.cell(&1);
+        lru.forget(&1, &a);
+        assert_eq!(lru.len(), 0, "failed build evicted");
+        let b = lru.cell(&1);
+        lru.forget(&1, &a);
+        assert_eq!(lru.len(), 1, "stale forget must not evict the successor");
+        let b2 = lru.cell(&1);
+        assert!(Arc::ptr_eq(&b, &b2));
+    }
+
+    #[test]
+    fn initializers_run_outside_the_container_lock() {
+        // The contract the service relies on: a cell obtained from the
+        // LRU can be initialized after the borrow on the LRU ends, and
+        // concurrent threads funnel into exactly one build.
+        let lru = Mutex::new(SingleFlightLru::<u32, u32>::new(4));
+        let builds = std::sync::atomic::AtomicU32::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let cell = lock(&lru).cell(&7);
+                    let (v, _) = cell.get_or_init(|| {
+                        builds.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        42
+                    });
+                    assert_eq!(v, 42);
+                });
+            }
+        });
+        assert_eq!(builds.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,600 @@
+//! Static verification of execution plans.
+//!
+//! Plans are exchange artifacts: they ride the wire (`optcnn serve`),
+//! land on disk (`optcnn plan --out`), and get hand-edited or version-
+//! skewed along the way. Nothing downstream — simulator, executor, cost
+//! accounting — defends against a plan whose *numbers* are wrong but
+//! whose *structure* parses: the JSON layer only proves indexes are in
+//! range. [`verify_plan`] closes that gap with a static analysis pass
+//! over ([`ExecutionPlan`], [`CompGraph`](crate::graph::CompGraph),
+//! [`DeviceGraph`](crate::device::DeviceGraph)) that, without executing
+//! anything, proves the typed invariant list in
+//! [`PlanCheck`](crate::error::PlanCheck) — or reports exactly which
+//! invariant broke, via [`OptError::InvalidPlan`]:
+//!
+//! 1. **tile coverage** — each layer's tiles exactly partition its
+//!    output tensor (disjoint, gap-free, in-bounds), and every tile sits
+//!    on the device the shared placement function assigns it;
+//! 2. **transfer completeness** — every consumer tile's `input_region`
+//!    is covered by the edge's transfer schedule plus device-local data,
+//!    and no transfer references a device outside `placement_shape()`;
+//! 3. **sync-group soundness** — parameter shard groups partition each
+//!    layer's parameters with no overlapping or orphaned shards;
+//! 4. **memory consistency** — the recorded `peak_mem_per_dev` matches
+//!    re-derivation through [`memory::peak_per_device`]
+//!    (bit-for-bit — both sides sum the same `tile_bytes` terms in the
+//!    same order);
+//! 5. **cost coherence** — the recorded `cost_s` equals the cost
+//!    model's `t_o` re-derivation, bit-for-bit (f64 round-trips exactly
+//!    through the JSON layer).
+//!
+//! The proof strategy is re-derivation: `ExecutionPlan::build` is a
+//! deterministic function of (graph, devices, per-layer configs), and
+//! the configs are recorded in the plan itself — so each check recomputes
+//! its slice of the plan from first principles and demands exact
+//! agreement. A plan that passes all five checks is byte-identical to
+//! what `build` would produce, which is the strongest statement the IR
+//! admits. The checks run in order and stop at the first violation; by
+//! the time checks 4–5 re-derive through `output_tiles`, check 1 has
+//! already proven every config's degrees divide the layer extents, so
+//! no helper can panic on corrupted input.
+//!
+//! Wired at every trust boundary: the `optcnn verify` subcommand, the
+//! opt-out verify-on-load in `PlanService` plan ingestion, and the
+//! `{"want":"verify"}` wire probe (DESIGN.md §10).
+
+#![warn(missing_docs)]
+
+use crate::cost::{shard_of_tile, CostModel};
+use crate::error::{OptError, PlanCheck, Result};
+use crate::memory;
+use crate::parallel::{input_region, output_tiles, param_sharding};
+use crate::plan::{overlap, ExecutionPlan, Route, SyncGroup, Transfer};
+
+/// The outcome of one passed check — the invariant plus a short summary
+/// of what was proven (counts, totals), for CLI/report output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckReport {
+    /// The invariant that held.
+    pub check: PlanCheck,
+    /// Human-readable statement of what was proven.
+    pub summary: String,
+}
+
+/// Evidence that a plan passed every static check, in check order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// One entry per [`PlanCheck`], in the order they ran.
+    pub checks: Vec<CheckReport>,
+}
+
+impl std::fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for c in &self.checks {
+            writeln!(f, "ok {:<22} {}", c.check.name(), c.summary)?;
+        }
+        Ok(())
+    }
+}
+
+fn fail(check: PlanCheck, detail: String) -> OptError {
+    OptError::InvalidPlan { check, detail }
+}
+
+/// Statically prove `plan` is exactly what `ExecutionPlan::build` would
+/// materialize for its recorded per-layer configs on `cm`'s (graph,
+/// devices) pair — or return [`OptError::InvalidPlan`] naming the first
+/// violated [`PlanCheck`]. Executes nothing and allocates only the
+/// re-derived expectations.
+pub fn verify_plan(cm: &CostModel<'_>, plan: &ExecutionPlan) -> Result<VerifyReport> {
+    let mut checks = Vec::with_capacity(PlanCheck::ALL.len());
+    checks.push(CheckReport {
+        check: PlanCheck::TileCoverage,
+        summary: check_tile_coverage(cm, plan)?,
+    });
+    checks.push(CheckReport {
+        check: PlanCheck::TransferCompleteness,
+        summary: check_transfer_completeness(cm, plan)?,
+    });
+    checks.push(CheckReport {
+        check: PlanCheck::SyncGroups,
+        summary: check_sync_groups(cm, plan)?,
+    });
+    checks.push(CheckReport {
+        check: PlanCheck::MemoryConsistency,
+        summary: check_memory_consistency(cm, plan)?,
+    });
+    checks.push(CheckReport {
+        check: PlanCheck::CostCoherence,
+        summary: check_cost_coherence(cm, plan)?,
+    });
+    Ok(VerifyReport { checks })
+}
+
+/// Check 1: every layer's tiles exactly partition its output tensor and
+/// sit on the devices the shared placement function assigns. Also proves
+/// the structural frame (layer count, device count, config divisibility)
+/// that later checks re-derive through.
+fn check_tile_coverage(cm: &CostModel<'_>, plan: &ExecutionPlan) -> Result<String> {
+    const CHECK: PlanCheck = PlanCheck::TileCoverage;
+    let g = cm.graph;
+    if plan.layers.len() != g.num_layers() {
+        return Err(fail(
+            CHECK,
+            format!("plan has {} layers, graph has {}", plan.layers.len(), g.num_layers()),
+        ));
+    }
+    if plan.ndev != cm.devices.num_devices() {
+        return Err(fail(
+            CHECK,
+            format!(
+                "plan laid out for {} devices, cluster has {}",
+                plan.ndev,
+                cm.devices.num_devices()
+            ),
+        ));
+    }
+    let mut ntiles = 0usize;
+    for (i, (lp, gl)) in plan.layers.iter().zip(g.layers.iter()).enumerate() {
+        if lp.layer != i {
+            return Err(fail(CHECK, format!("layer {i} carries id {}", lp.layer)));
+        }
+        // Degrees must divide the output extents (and stay 1 in missing
+        // dims) before output_tiles may re-derive the canonical tiling.
+        let rank = gl.out_shape.len();
+        for d in 0..4 {
+            if d >= rank {
+                if lp.cfg.deg[d] != 1 {
+                    return Err(fail(
+                        CHECK,
+                        format!(
+                            "layer {i} (`{}`): degree {} in missing dimension {d}",
+                            gl.name, lp.cfg.deg[d]
+                        ),
+                    ));
+                }
+            } else if lp.cfg.deg[d] == 0 || gl.out_shape[d] % lp.cfg.deg[d] != 0 {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "layer {i} (`{}`): degree {} does not equally partition extent {} \
+                         in dimension {d}",
+                        gl.name, lp.cfg.deg[d], gl.out_shape[d]
+                    ),
+                ));
+            }
+        }
+        if lp.tiles.len() != lp.tile_dev.len() {
+            return Err(fail(
+                CHECK,
+                format!("layer {i}: {} tiles but {} placements", lp.tiles.len(), lp.tile_dev.len()),
+            ));
+        }
+        let expect = output_tiles(&gl.out_shape, &lp.cfg);
+        if lp.tiles.len() != expect.len() {
+            return Err(fail(
+                CHECK,
+                format!(
+                    "layer {i}: {} tiles recorded, config {} implies {}",
+                    lp.tiles.len(),
+                    lp.cfg.label(),
+                    expect.len()
+                ),
+            ));
+        }
+        // Coverage diagnostics first (they name the *kind* of damage),
+        // then exact agreement with the canonical row-major partition —
+        // which is what actually proves disjoint + gap-free + in-bounds.
+        let total: usize = gl.out_shape.iter().product();
+        let vol: usize = lp.tiles.iter().map(|t| t.volume()).sum();
+        for (a, ta) in lp.tiles.iter().enumerate() {
+            for (b, tb) in lp.tiles.iter().enumerate().skip(a + 1) {
+                if ta.rank() == tb.rank() && ta.intersect(tb).is_some() {
+                    return Err(fail(CHECK, format!("layer {i}: tile {a} overlaps tile {b}")));
+                }
+            }
+            if ta.rank() != rank || (0..rank).any(|d| ta.end(d) > gl.out_shape[d]) {
+                return Err(fail(
+                    CHECK,
+                    format!("layer {i}: tile {a} exceeds the output shape {:?}", gl.out_shape),
+                ));
+            }
+        }
+        if vol != total {
+            return Err(fail(
+                CHECK,
+                format!("layer {i}: tiles cover {vol} of {total} output elements"),
+            ));
+        }
+        for (t, (got, want)) in lp.tiles.iter().zip(expect.iter()).enumerate() {
+            if got != want {
+                return Err(fail(
+                    CHECK,
+                    format!("layer {i}: tile {t} is {got:?}, canonical partition expects {want:?}"),
+                ));
+            }
+        }
+        for (t, &dev) in lp.tile_dev.iter().enumerate() {
+            if dev >= plan.ndev {
+                return Err(fail(
+                    CHECK,
+                    format!("layer {i}: tile {t} placed on device {dev} >= ndev {}", plan.ndev),
+                ));
+            }
+            if dev != cm.dev_of(t) {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "layer {i}: tile {t} placed on device {dev}, placement assigns {}",
+                        cm.dev_of(t)
+                    ),
+                ));
+            }
+        }
+        ntiles += lp.tiles.len();
+    }
+    Ok(format!("{} layers, {ntiles} tiles partition their outputs", plan.layers.len()))
+}
+
+/// Check 2: the plan's edge list mirrors the graph's, and each edge's
+/// transfer schedule is exactly the canonical (dst-major, src-minor)
+/// expansion of the consumer tiles' input-region overlaps — so every
+/// needed element arrives (from a transfer or device-local data) and no
+/// transfer references a device outside the placement shape.
+fn check_transfer_completeness(cm: &CostModel<'_>, plan: &ExecutionPlan) -> Result<String> {
+    const CHECK: PlanCheck = PlanCheck::TransferCompleteness;
+    let g = cm.graph;
+    if plan.edges.len() != g.num_edges() {
+        return Err(fail(
+            CHECK,
+            format!("plan has {} edges, graph has {}", plan.edges.len(), g.num_edges()),
+        ));
+    }
+    let mut ntransfers = 0usize;
+    for (j, (ep, &(s, d))) in plan.edges.iter().zip(g.edges.iter()).enumerate() {
+        if (ep.src, ep.dst) != (s, d) {
+            return Err(fail(
+                CHECK,
+                format!(
+                    "edge {j} is ({}, {}), graph edge order expects ({s}, {d})",
+                    ep.src, ep.dst
+                ),
+            ));
+        }
+        let Some(in_idx) = g.predecessors(d).iter().position(|&p| p == s) else {
+            return Err(fail(CHECK, format!("edge ({s}, {d}) not present in the graph")));
+        };
+        if ep.in_idx != in_idx {
+            return Err(fail(
+                CHECK,
+                format!("edge ({s}, {d}): in_idx {} recorded, graph says {in_idx}", ep.in_idx),
+            ));
+        }
+        // Out-of-range devices get their own diagnostic before the
+        // schedule comparison (the named sub-invariant of this check).
+        for (k, t) in ep.transfers.iter().enumerate() {
+            if t.src_dev >= plan.ndev || t.dst_dev >= plan.ndev {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "edge ({s}, {d}): transfer {k} references device {} outside the \
+                         {}-device placement shape",
+                        t.src_dev.max(t.dst_dev),
+                        plan.ndev
+                    ),
+                ));
+            }
+        }
+        // Re-derive needs + transfers exactly as ExecutionPlan::build.
+        let ld = g.layer(d);
+        let (sp, dp) = (&plan.layers[s], &plan.layers[d]);
+        let src_flat: Vec<overlap::FlatRegion> = sp.tiles.iter().map(overlap::flatten).collect();
+        let mut expect = Vec::new();
+        for (m, dtile) in dp.tiles.iter().enumerate() {
+            let need = input_region(ld, in_idx, dtile);
+            let got_need = ep.needs.get(m).cloned().flatten();
+            if got_need != need {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "edge ({s}, {d}): tile {m} records input region {got_need:?}, \
+                         operator semantics require {need:?}"
+                    ),
+                ));
+            }
+            if let Some(need) = &need {
+                let need_flat = overlap::flatten(need);
+                let dst_dev = dp.tile_dev[m];
+                for (k, stile) in src_flat.iter().enumerate() {
+                    let elems = overlap::overlap_elems(&need_flat, stile);
+                    if elems == 0 {
+                        continue;
+                    }
+                    let src_dev = sp.tile_dev[k];
+                    let route = if src_dev == dst_dev {
+                        Route::Local
+                    } else if cm.devices.same_node(src_dev, dst_dev) {
+                        Route::IntraNode
+                    } else {
+                        Route::InterNode
+                    };
+                    expect.push(Transfer {
+                        src_tile: k,
+                        dst_tile: m,
+                        src_dev,
+                        dst_dev,
+                        elems,
+                        route,
+                    });
+                }
+            }
+        }
+        if ep.needs.len() != dp.tiles.len() {
+            return Err(fail(
+                CHECK,
+                format!(
+                    "edge ({s}, {d}): {} need entries for {} consumer tiles",
+                    ep.needs.len(),
+                    dp.tiles.len()
+                ),
+            ));
+        }
+        if ep.transfers != expect {
+            // Name the damage: a missing transfer starves a consumer
+            // tile, a spurious/mismatched one moves bytes nobody needs.
+            for (k, want) in expect.iter().enumerate() {
+                match ep.transfers.get(k) {
+                    None => {
+                        return Err(fail(
+                            CHECK,
+                            format!(
+                                "edge ({s}, {d}): missing transfer src_tile {} -> dst_tile {} \
+                                 ({} elems); consumer tile {}'s input region is not covered",
+                                want.src_tile, want.dst_tile, want.elems, want.dst_tile
+                            ),
+                        ));
+                    }
+                    Some(got) if got != want => {
+                        return Err(fail(
+                            CHECK,
+                            format!(
+                                "edge ({s}, {d}): transfer {k} is {got:?}, schedule \
+                                 requires {want:?}"
+                            ),
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+            let extra = &ep.transfers[expect.len()];
+            return Err(fail(
+                CHECK,
+                format!(
+                    "edge ({s}, {d}): spurious transfer src_tile {} -> dst_tile {} not implied \
+                     by any input region",
+                    extra.src_tile, extra.dst_tile
+                ),
+            ));
+        }
+        ntransfers += ep.transfers.len();
+    }
+    Ok(format!(
+        "{} edges, {ntransfers} scheduled transfers cover every input region",
+        plan.edges.len()
+    ))
+}
+
+/// Check 3: each parameterized layer's sync groups are exactly the
+/// sharded-PS replica groups its config implies — the groups partition
+/// the tile set (no tile synced twice, none orphaned), carry the right
+/// devices and exchange bytes, and layers without replicated parameters
+/// carry no sync plan at all.
+fn check_sync_groups(cm: &CostModel<'_>, plan: &ExecutionPlan) -> Result<String> {
+    const CHECK: PlanCheck = PlanCheck::SyncGroups;
+    let g = cm.graph;
+    let mut ngroups = 0usize;
+    for (i, (lp, gl)) in plan.layers.iter().zip(g.layers.iter()).enumerate() {
+        let expect = if gl.has_params() {
+            let sh = param_sharding(gl, &lp.cfg);
+            if sh.replicas > 1 {
+                let groups: Vec<SyncGroup> = (0..sh.shards)
+                    .map(|shard| {
+                        let shard_tiles: Vec<usize> = (0..lp.cfg.total())
+                            .filter(|&t| shard_of_tile(&lp.cfg, t) == shard)
+                            .collect();
+                        let devs: Vec<usize> =
+                            shard_tiles.iter().map(|&t| lp.tile_dev[t]).collect();
+                        let r = devs.len() as f64;
+                        let node = cm.devices.devices[devs[0]].node;
+                        let spans_nodes =
+                            devs.iter().any(|&dv| cm.devices.devices[dv].node != node);
+                        SyncGroup {
+                            shard,
+                            tiles: shard_tiles,
+                            devices: devs,
+                            bytes_per_replica: 2.0 * sh.shard_bytes * (r - 1.0) / r,
+                            spans_nodes,
+                        }
+                    })
+                    .collect();
+                Some((sh.shard_bytes, groups))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        match (&lp.sync, &expect) {
+            (None, None) => {}
+            (Some(_), None) => {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "layer {i} (`{}`) has no replicated parameters but carries a sync plan",
+                        gl.name
+                    ),
+                ));
+            }
+            (None, Some(_)) => {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "layer {i} (`{}`) replicates parameters but carries no sync plan",
+                        gl.name
+                    ),
+                ));
+            }
+            (Some(got), Some((shard_bytes, groups))) => {
+                if got.shard_bytes != *shard_bytes {
+                    return Err(fail(
+                        CHECK,
+                        format!(
+                            "layer {i}: shard_bytes {} recorded, sharding implies {shard_bytes}",
+                            got.shard_bytes
+                        ),
+                    ));
+                }
+                if got.groups.len() != groups.len() {
+                    return Err(fail(
+                        CHECK,
+                        format!(
+                            "layer {i}: {} sync groups for {} parameter shards",
+                            got.groups.len(),
+                            groups.len()
+                        ),
+                    ));
+                }
+                // Partition diagnostics before exact comparison: the
+                // union of group tiles must be 0..total with no repeats.
+                let mut seen: Vec<usize> =
+                    got.groups.iter().flat_map(|grp| grp.tiles.iter().copied()).collect();
+                seen.sort_unstable();
+                let all: Vec<usize> = (0..lp.cfg.total()).collect();
+                if seen != all {
+                    let detail = match seen.windows(2).find(|w| w[0] == w[1]) {
+                        Some(w) => format!("tile {} appears in two shard groups", w[0]),
+                        None => "sync groups orphan or invent tiles".to_string(),
+                    };
+                    return Err(fail(CHECK, format!("layer {i}: {detail}")));
+                }
+                for (gi, (gg, gw)) in got.groups.iter().zip(groups.iter()).enumerate() {
+                    if gg != gw {
+                        return Err(fail(
+                            CHECK,
+                            format!(
+                                "layer {i}: sync group {gi} is {gg:?}, sharding \
+                                 implies {gw:?}"
+                            ),
+                        ));
+                    }
+                }
+                ngroups += groups.len();
+            }
+        }
+    }
+    Ok(format!("{ngroups} shard groups partition their layers' parameters"))
+}
+
+/// Check 4: the recorded per-device high-water memory matches an
+/// independent re-derivation through [`memory::peak_per_device`] —
+/// bit-for-bit, both sides summing the same `tile_bytes` terms in the
+/// same order.
+fn check_memory_consistency(cm: &CostModel<'_>, plan: &ExecutionPlan) -> Result<String> {
+    const CHECK: PlanCheck = PlanCheck::MemoryConsistency;
+    let expect = memory::peak_per_device(cm, &plan.strategy());
+    if plan.peak_mem_per_dev.len() != expect.len() {
+        return Err(fail(
+            CHECK,
+            format!(
+                "peak_mem_per_dev has {} entries for {} devices",
+                plan.peak_mem_per_dev.len(),
+                expect.len()
+            ),
+        ));
+    }
+    for (dv, (&got, &want)) in plan.peak_mem_per_dev.iter().zip(expect.iter()).enumerate() {
+        if got != want {
+            return Err(fail(
+                CHECK,
+                format!("device {dv}: recorded peak {got} bytes, memory model derives {want}"),
+            ));
+        }
+    }
+    Ok(format!(
+        "per-device peaks match the memory model (max {})",
+        crate::util::fmt_bytes(plan.peak_mem())
+    ))
+}
+
+/// Check 5: the recorded step-time estimate equals the cost model's
+/// `t_o` over the plan's strategy, bit-for-bit.
+fn check_cost_coherence(cm: &CostModel<'_>, plan: &ExecutionPlan) -> Result<String> {
+    const CHECK: PlanCheck = PlanCheck::CostCoherence;
+    let want = cm.t_o(&plan.strategy());
+    if plan.cost_s != want {
+        return Err(fail(
+            CHECK,
+            format!("recorded cost {} s, cost model derives {} s", plan.cost_s, want),
+        ));
+    }
+    Ok(format!("recorded step time {} matches t_o", crate::util::fmt_secs(plan.cost_s)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+    use crate::optimizer::strategies;
+
+    fn setup(
+        net: &str,
+        ndev: usize,
+        strat: &str,
+    ) -> (crate::graph::CompGraph, DeviceGraph, ExecutionPlan) {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
+        let s = strategies::by_name(strat, &g, ndev).unwrap();
+        let plan = ExecutionPlan::build(&CostModel::new(&g, &d), &s);
+        (g, d, plan)
+    }
+
+    #[test]
+    fn freshly_built_plans_verify_clean() {
+        for (net, ndev, strat) in
+            [("lenet5", 2, "data"), ("alexnet", 4, "owt"), ("inception_v3", 2, "model")]
+        {
+            let (g, d, plan) = setup(net, ndev, strat);
+            let cm = CostModel::new(&g, &d);
+            let report = verify_plan(&cm, &plan)
+                .unwrap_or_else(|e| panic!("{net}@{ndev}/{strat}: {e}"));
+            assert_eq!(report.checks.len(), PlanCheck::ALL.len());
+            for (c, want) in report.checks.iter().zip(PlanCheck::ALL) {
+                assert_eq!(c.check, want);
+            }
+            let text = report.to_string();
+            assert!(text.contains("tile-coverage") && text.contains("cost-coherence"));
+        }
+    }
+
+    #[test]
+    fn verify_round_trips_through_json() {
+        use crate::util::json::Json;
+        let (g, d, plan) = setup("alexnet", 4, "model");
+        let cm = CostModel::new(&g, &d);
+        let back =
+            ExecutionPlan::from_json(&Json::parse(&plan.to_json().to_string()).unwrap()).unwrap();
+        verify_plan(&cm, &back).expect("round-tripped plan must verify bit-for-bit");
+    }
+
+    #[test]
+    fn wrong_graph_is_rejected_not_panicked() {
+        // A structurally different graph can never match the plan; the
+        // verifier must return a typed error, not index out of bounds.
+        let (_, d, plan) = setup("lenet5", 2, "data");
+        let other = nets::alexnet(64).unwrap();
+        let cm = CostModel::new(&other, &d);
+        let err = verify_plan(&cm, &plan).unwrap_err();
+        assert!(matches!(err, OptError::InvalidPlan { .. }), "{err}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Mutation corpus for the static plan verifier (DESIGN.md §10).
+//!
+//! Each test starts from a plan `ExecutionPlan::build` actually produced,
+//! corrupts exactly one invariant, and asserts the verifier rejects it
+//! with the *named* check — not a panic, not a neighbouring check. The
+//! clean grid at the bottom proves the converse: every builtin network,
+//! at several cluster sizes, verifies clean straight out of the builder.
+
+use optcnn::cost::CostModel;
+use optcnn::device::DeviceGraph;
+use optcnn::graph::{nets, CompGraph};
+use optcnn::optimizer::strategies;
+use optcnn::plan::ExecutionPlan;
+use optcnn::verify::verify_plan;
+use optcnn::{OptError, PlanCheck};
+
+/// Build a `(graph, devices, plan)` triple for a builtin network under a
+/// baseline strategy, with a per-GPU batch of 32.
+fn setup(net: &str, ndev: usize, strat: &str) -> (CompGraph, DeviceGraph, ExecutionPlan) {
+    let g = nets::by_name(net, 32 * ndev).unwrap();
+    let d = DeviceGraph::p100_cluster(ndev).unwrap();
+    let s = strategies::by_name(strat, &g, ndev).unwrap();
+    let plan = ExecutionPlan::build(&CostModel::new(&g, &d), &s);
+    (g, d, plan)
+}
+
+/// Run the verifier and unwrap the expected structured rejection.
+fn reject(g: &CompGraph, d: &DeviceGraph, plan: &ExecutionPlan) -> OptError {
+    let cm = CostModel::new(g, d);
+    match verify_plan(&cm, plan) {
+        Err(e) => e,
+        Ok(report) => panic!("mutant verified clean:\n{report}"),
+    }
+}
+
+/// Assert the error names `want` (and nothing else) and mentions
+/// `needle` in its diagnostic.
+fn assert_check(err: &OptError, want: PlanCheck, needle: &str) {
+    match err {
+        OptError::InvalidPlan { check, detail } => {
+            assert_eq!(*check, want, "wrong check named: {err}");
+            assert!(detail.contains(needle), "diagnostic {detail:?} lacks {needle:?}");
+        }
+        other => panic!("expected InvalidPlan, got {other}"),
+    }
+}
+
+#[test]
+fn overlapping_tiles_fail_tile_coverage() {
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    // Data parallelism splits every layer on dim 0: widening tile 0's
+    // sample range makes it overlap tile 1.
+    let lp = &mut plan.layers[0];
+    let end = lp.tiles[0].end(0);
+    lp.tiles[0].set(0, 0, end + 1);
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::TileCoverage, "overlaps");
+}
+
+#[test]
+fn out_of_range_tile_device_fails_tile_coverage() {
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    let ndev = plan.ndev;
+    plan.layers[1].tile_dev[0] = ndev;
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::TileCoverage, "placed on device");
+}
+
+#[test]
+fn misplaced_tile_fails_tile_coverage() {
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    // In-range but disagreeing with the shared placement function.
+    plan.layers[1].tile_dev.swap(0, 1);
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::TileCoverage, "placement assigns");
+}
+
+#[test]
+fn dropped_transfer_fails_transfer_completeness() {
+    let (g, d, mut plan) = setup("alexnet", 4, "owt");
+    let ep = plan
+        .edges
+        .iter_mut()
+        .find(|e| !e.transfers.is_empty())
+        .expect("owt plan moves data on some edge");
+    ep.transfers.pop();
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::TransferCompleteness, "is not covered");
+}
+
+#[test]
+fn out_of_range_transfer_device_fails_transfer_completeness() {
+    let (g, d, mut plan) = setup("alexnet", 4, "owt");
+    let ndev = plan.ndev;
+    let ep = plan
+        .edges
+        .iter_mut()
+        .find(|e| !e.transfers.is_empty())
+        .expect("owt plan moves data on some edge");
+    ep.transfers[0].dst_dev = ndev;
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::TransferCompleteness, "placement shape");
+}
+
+#[test]
+fn stale_shard_bytes_fails_sync_groups() {
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    let sync = plan
+        .layers
+        .iter_mut()
+        .find_map(|lp| lp.sync.as_mut())
+        .expect("data parallelism replicates parameters somewhere");
+    sync.shard_bytes += 1.0;
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::SyncGroups, "sharding implies");
+}
+
+#[test]
+fn dropped_sync_group_fails_sync_groups() {
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    let lp = plan
+        .layers
+        .iter_mut()
+        .find(|lp| lp.sync.is_some())
+        .expect("data parallelism replicates parameters somewhere");
+    lp.sync = None;
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::SyncGroups, "carries no sync plan");
+}
+
+#[test]
+fn inflated_peak_memory_fails_memory_consistency() {
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    plan.peak_mem_per_dev[0] += 1.0;
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::MemoryConsistency, "memory model derives");
+}
+
+#[test]
+fn stale_cost_fails_cost_coherence() {
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    plan.cost_s *= 2.0;
+    let err = reject(&g, &d, &plan);
+    assert_check(&err, PlanCheck::CostCoherence, "cost model derives");
+}
+
+#[test]
+fn mutations_survive_a_json_round_trip() {
+    // A corrupt plan must be rejected whether it was mutated in memory
+    // or arrived as a (well-formed) JSON document.
+    use optcnn::util::json::Json;
+    let (g, d, mut plan) = setup("lenet5", 2, "data");
+    plan.cost_s += 0.5;
+    let doc = Json::parse(&plan.to_json().to_string()).unwrap();
+    let back = ExecutionPlan::from_json(&doc).unwrap();
+    let err = reject(&g, &d, &back);
+    assert_check(&err, PlanCheck::CostCoherence, "cost model derives");
+}
+
+#[test]
+fn all_builtin_networks_verify_clean_at_every_cluster_size() {
+    for net in ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18", "resnet50", "minicnn"] {
+        for ndev in [2usize, 4, 8] {
+            for strat in ["data", "owt"] {
+                let (g, d, plan) = setup(net, ndev, strat);
+                let cm = CostModel::new(&g, &d);
+                let report = verify_plan(&cm, &plan)
+                    .unwrap_or_else(|e| panic!("{net}@{ndev}/{strat}: {e}"));
+                assert_eq!(report.checks.len(), PlanCheck::ALL.len(), "{net}@{ndev}/{strat}");
+            }
+        }
+    }
+}
