@@ -1,0 +1,831 @@
+//! Pre-planning static analysis (DESIGN.md §11).
+//!
+//! Everything the planner can know about a (graph, cluster, budget)
+//! request *before* any cost table is built, computed from graph
+//! structure alone in four prongs:
+//!
+//! * **Reducibility** — Algorithm 1's node/edge eliminations replayed
+//!   symbolically (no cost matrices; see [`optimizer`]): a graph either
+//!   collapses to the paper's 2-node kernel ([`Reducibility::FullyReducible`])
+//!   or leaves a [`Residual`](Reducibility::Residual) kernel whose
+//!   strategies the elimination backend must brute-force. The surviving
+//!   subgraph is returned as a [`ResidualKernel`] — the structural seed
+//!   for a future exact-DP backend over irreducible graphs (ROADMAP #1).
+//! * **Search-cost certificate** — the exact per-layer configuration
+//!   counts ([`parallel::count_configs`], the counting twin of
+//!   `enumerate_configs`) composed into the exact final-enumeration
+//!   size as a checked `u128` plus an always-finite `log2`, so callers
+//!   know what a search will cost before paying for it. `optcnn serve`
+//!   rejects custom graphs whose residual enumeration exceeds
+//!   [`MAX_RESIDUAL_SPACE_LOG2`](crate::planner::MAX_RESIDUAL_SPACE_LOG2)
+//!   instead of pinning a worker thread, and `--backend auto` picks
+//!   between elimination and budgeted DFS from the same number.
+//! * **Memory-feasibility precheck** — [`memory::min_layer_peak_bytes`]
+//!   (the peak is monotone in every partition degree, so the minimum
+//!   sits at maximal degrees) compared against the budget per layer:
+//!   an unsatisfiable layer fast-fails [`OptError::Infeasible`] with
+//!   *exactly* the verdict `CostTables::build_budgeted` would reach
+//!   after building half the tables, and feasible layers report what
+//!   fraction of their configuration space survives the budget.
+//! * **Graph lints** — structured [`Diagnostic`]s for structural smells
+//!   a valid graph can still carry: sinks whose output is never
+//!   consumed, partitionable dimensions of extent 1, stride windows
+//!   that skip input, padding that mats whole windows.
+//!
+//! The pass never constructs a [`CostTables`](crate::cost::CostTables):
+//! `tests/analyze.rs` pins the planner/service table-build counters at
+//! zero across analysis.
+//!
+//! [`optimizer`]: crate::optimizer
+
+#![warn(missing_docs)]
+
+use std::fmt;
+
+use crate::device::DeviceGraph;
+use crate::error::OptError;
+use crate::graph::{CompGraph, LayerId, OpKind};
+use crate::memory::{self, MemBudget};
+use crate::parallel::{allowed_dims, count_configs, enumerate_configs};
+use crate::util::json::Json;
+
+/// How far Algorithm 1's eliminations shrink a graph, decided from
+/// structure alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reducibility {
+    /// Node/edge eliminations collapse the graph to at most two nodes —
+    /// the paper's normal case (`K = 2` for every benchmark network),
+    /// where the final enumeration is a cheap `C²` scan.
+    FullyReducible,
+    /// An irreducible kernel survives: the elimination backend must
+    /// brute-force the product space of these nodes.
+    Residual {
+        /// Nodes remaining at the elimination fixpoint (the paper's `K`).
+        nodes: usize,
+        /// Distinct merged edges among them.
+        edges: usize,
+    },
+}
+
+impl fmt::Display for Reducibility {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Reducibility::FullyReducible => write!(f, "fully-reducible"),
+            Reducibility::Residual { nodes, edges } => {
+                write!(f, "residual ({nodes} nodes, {edges} edges)")
+            }
+        }
+    }
+}
+
+/// The subgraph surviving the elimination fixpoint, named by original
+/// layer ids. For a fully reducible graph this is the trivial 2-node
+/// kernel; for an irreducible one it is the exact structure a future
+/// DP-over-kernels backend would operate on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResidualKernel {
+    /// Surviving layer ids, ascending.
+    pub nodes: Vec<LayerId>,
+    /// Surviving merged edges `(src, dst)`, deduplicated (the fixpoint
+    /// guarantees no parallel edges remain), sorted.
+    pub edges: Vec<(LayerId, LayerId)>,
+    /// Node eliminations the replay applied to reach the fixpoint.
+    pub node_eliminations: usize,
+    /// Edge eliminations the replay applied to reach the fixpoint.
+    pub edge_eliminations: usize,
+}
+
+/// The exact cost of searching this graph, known before any table is
+/// built: per-layer configuration counts and their compositions over
+/// the residual kernel (what the elimination backend's final
+/// enumeration visits) and over every layer (what the exhaustive DFS
+/// baseline's leaf space holds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchCertificate {
+    /// `|enumerate_configs(layer, ndev)|` per layer, indexed by layer id.
+    pub layer_configs: Vec<u64>,
+    /// Exact product of `layer_configs` over the residual kernel's
+    /// nodes; `None` when it overflows `u128`.
+    pub residual_space: Option<u128>,
+    /// `log2` of the residual product (finite even when the exact
+    /// product overflows).
+    pub residual_space_log2: f64,
+    /// Exact product of `layer_configs` over *all* layers — the
+    /// exhaustive baseline's leaf count; `None` on overflow.
+    pub full_space: Option<u128>,
+    /// `log2` of the full product.
+    pub full_space_log2: f64,
+}
+
+/// How serious a [`Diagnostic`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Informational: a structural fact worth knowing, not a problem.
+    Info,
+    /// Suspicious: almost certainly a spec mistake, but planning works.
+    Warning,
+    /// Broken: the graph cannot mean what its author intended.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Info => write!(f, "info"),
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One structured lint finding. `code` is a stable kebab-case name
+/// (like [`PlanCheck`](crate::error::PlanCheck)'s) so tools and tests
+/// can match findings without parsing prose.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// How serious the finding is.
+    pub severity: Severity,
+    /// Stable kebab-case lint name (`unreachable-layer`, `dead-output`,
+    /// `degenerate-dim`, `stride-gap`, `pad-window`, `over-parallel`).
+    pub code: &'static str,
+    /// The layer the finding is about; `None` for graph-level findings.
+    pub layer: Option<LayerId>,
+    /// One-line human-readable description.
+    pub message: String,
+}
+
+/// Memory feasibility of one layer under the requested budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerFeasibility {
+    /// Legal configurations at the requested device count.
+    pub configs: u64,
+    /// Configurations whose per-device peak fits the budget.
+    pub feasible: u64,
+    /// Bytes of the smallest-footprint configuration
+    /// ([`memory::min_layer_peak_bytes`]).
+    pub min_bytes: f64,
+}
+
+/// The memory prong of the report, present when a budget was supplied.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryPrecheck {
+    /// Per-layer feasibility, indexed by layer id.
+    pub per_layer: Vec<LayerFeasibility>,
+    /// Lowest-id layer with no feasible configuration, with the bytes
+    /// by which its smallest configuration still overshoots — the exact
+    /// payload `CostTables::build_budgeted` puts in
+    /// [`OptError::Infeasible`].
+    pub infeasible: Option<(String, u64)>,
+}
+
+impl MemoryPrecheck {
+    /// The typed error a planning request with this budget would fail
+    /// with, if any — byte-for-byte what `build_budgeted` reports.
+    pub fn to_error(&self) -> Option<OptError> {
+        self.infeasible
+            .as_ref()
+            .map(|(layer, overshoot)| OptError::Infeasible {
+                layer: layer.clone(),
+                overshoot: *overshoot,
+            })
+    }
+}
+
+/// Everything [`analyze`] learns about a request without building a
+/// cost table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisReport {
+    /// The device count the certificate and precheck were computed for.
+    pub ndev: usize,
+    /// Reducibility class of the elimination fixpoint.
+    pub reducibility: Reducibility,
+    /// The surviving subgraph (trivial for fully reducible graphs).
+    pub kernel: ResidualKernel,
+    /// The exact search-cost certificate.
+    pub certificate: SearchCertificate,
+    /// Memory feasibility, when a budget was supplied.
+    pub memory: Option<MemoryPrecheck>,
+    /// Lint findings, in layer order.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AnalysisReport {
+    /// Number of error-severity diagnostics.
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity diagnostics.
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// Machine-readable form, shared by `optcnn analyze --json` and the
+    /// `{"want":"analyze"}` serve probe. Exact `u128` space sizes do not
+    /// fit a JSON number (f64), so they are emitted as decimal *strings*
+    /// (null on overflow) alongside always-numeric `log2` fields.
+    pub fn to_json(&self) -> Json {
+        let space = |s: Option<u128>| match s {
+            Some(v) => Json::Str(v.to_string()),
+            None => Json::Null,
+        };
+        let kernel = Json::obj(vec![
+            ("nodes", Json::Arr(self.kernel.nodes.iter().map(|&n| Json::Num(n as f64)).collect())),
+            (
+                "edges",
+                Json::Arr(
+                    self.kernel
+                        .edges
+                        .iter()
+                        .map(|&(s, d)| Json::Arr(vec![Json::Num(s as f64), Json::Num(d as f64)]))
+                        .collect(),
+                ),
+            ),
+            ("node_eliminations", Json::Num(self.kernel.node_eliminations as f64)),
+            ("edge_eliminations", Json::Num(self.kernel.edge_eliminations as f64)),
+        ]);
+        let certificate = Json::obj(vec![
+            (
+                "layer_configs",
+                Json::Arr(
+                    self.certificate.layer_configs.iter().map(|&c| Json::Num(c as f64)).collect(),
+                ),
+            ),
+            ("residual_space", space(self.certificate.residual_space)),
+            ("residual_space_log2", Json::Num(self.certificate.residual_space_log2)),
+            ("full_space", space(self.certificate.full_space)),
+            ("full_space_log2", Json::Num(self.certificate.full_space_log2)),
+        ]);
+        let memory = match &self.memory {
+            None => Json::Null,
+            Some(m) => Json::obj(vec![
+                (
+                    "per_layer",
+                    Json::Arr(
+                        m.per_layer
+                            .iter()
+                            .map(|f| {
+                                Json::obj(vec![
+                                    ("configs", Json::Num(f.configs as f64)),
+                                    ("feasible", Json::Num(f.feasible as f64)),
+                                    ("min_bytes", Json::Num(f.min_bytes)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "infeasible",
+                    match &m.infeasible {
+                        None => Json::Null,
+                        Some((layer, overshoot)) => Json::obj(vec![
+                            ("layer", Json::Str(layer.clone())),
+                            ("overshoot", Json::Num(*overshoot as f64)),
+                        ]),
+                    },
+                ),
+            ]),
+        };
+        let diagnostics = Json::Arr(
+            self.diagnostics
+                .iter()
+                .map(|d| {
+                    Json::obj(vec![
+                        ("severity", Json::Str(d.severity.to_string())),
+                        ("code", Json::Str(d.code.to_string())),
+                        (
+                            "layer",
+                            match d.layer {
+                                Some(l) => Json::Num(l as f64),
+                                None => Json::Null,
+                            },
+                        ),
+                        ("message", Json::Str(d.message.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        // a stable class token (the Display form carries counts, which
+        // the kernel object already reports)
+        let class = match self.reducibility {
+            Reducibility::FullyReducible => "fully-reducible",
+            Reducibility::Residual { .. } => "residual",
+        };
+        Json::obj(vec![
+            ("ndev", Json::Num(self.ndev as f64)),
+            ("reducibility", Json::Str(class.to_string())),
+            ("kernel", kernel),
+            ("certificate", certificate),
+            ("memory", memory),
+            ("diagnostics", diagnostics),
+        ])
+    }
+}
+
+/// Run the full static pass: reducibility, certificate, memory
+/// precheck (when `budget` is supplied), and lints. Purely structural —
+/// no [`CostTables`](crate::cost::CostTables) is ever constructed.
+pub fn analyze(
+    graph: &CompGraph,
+    devices: &DeviceGraph,
+    ndev: usize,
+    budget: Option<MemBudget>,
+) -> AnalysisReport {
+    let kernel = replay_eliminations(graph);
+    let reducibility = if kernel.nodes.len() <= 2 {
+        Reducibility::FullyReducible
+    } else {
+        Reducibility::Residual { nodes: kernel.nodes.len(), edges: kernel.edges.len() }
+    };
+    let certificate = certify(graph, &kernel, ndev);
+    let memory = budget.map(|b| precheck_memory(graph, ndev, b));
+    let diagnostics = lint(graph, devices, ndev);
+    AnalysisReport { ndev, reducibility, kernel, certificate, memory, diagnostics }
+}
+
+/// The service-side fast gate: the certificate cap plus the memory
+/// fast-fail, skipping the lints and per-config feasibility fractions
+/// the full [`analyze`] report carries. Called by `PlanService` inside
+/// its single-flight build closure, before any cost table exists.
+///
+/// * A residual enumeration above `cap_log2` answers
+///   [`OptError::SearchSpaceExceeded`] (sizes rounded up to whole
+///   bits).
+/// * A budget no configuration of some layer can satisfy answers
+///   [`OptError::Infeasible`] for the lowest-id such layer, with the
+///   byte-identical overshoot `CostTables::build_budgeted` would report
+///   after building half the tables
+///   ([`memory::min_layer_peak_bytes`]'s guarantee).
+pub fn precheck(
+    graph: &CompGraph,
+    ndev: usize,
+    budget: Option<MemBudget>,
+    cap_log2: f64,
+) -> Result<(), OptError> {
+    let kernel = replay_eliminations(graph);
+    let mut log2 = 0.0f64;
+    for &id in &kernel.nodes {
+        log2 += (count_configs(&graph.layers[id], ndev) as f64).log2();
+    }
+    if log2 > cap_log2 {
+        return Err(OptError::SearchSpaceExceeded {
+            space_log2: log2.ceil() as u32,
+            cap_log2: cap_log2.ceil() as u32,
+        });
+    }
+    if let Some(b) = budget {
+        for l in &graph.layers {
+            let min = memory::min_layer_peak_bytes(l, ndev);
+            if !b.admits(min) {
+                // the same arithmetic build_budgeted uses: overshoot is
+                // the min over configs of (peak - budget), ceiled, >= 1
+                return Err(OptError::Infeasible {
+                    layer: l.name.clone(),
+                    overshoot: (min - b.bytes_per_dev).ceil().max(1.0) as u64,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Replay Algorithm 1's elimination fixpoint on graph structure alone:
+/// the exact scan order of [`optimizer::optimize`](crate::optimizer::optimize)
+/// — node eliminations to exhaustion, then edge eliminations, repeated
+/// until neither applies — with `(src, dst)` pairs standing in for the
+/// cost matrices. Because the rules only read degrees and endpoints,
+/// the surviving node set here *is* the `final_nodes` the real search
+/// will enumerate, which is what makes the certificate exact.
+fn replay_eliminations(graph: &CompGraph) -> ResidualKernel {
+    let n = graph.num_layers();
+    let mut alive = vec![true; n];
+    // lazy deletion mirrors the optimizer: taken edges become None, and
+    // the adjacency lists may point at them (skipped via `live`)
+    let mut edges: Vec<Option<(usize, usize)>> =
+        graph.edges.iter().map(|&(s, d)| Some((s, d))).collect();
+    let mut in_ids: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut out_ids: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (idx, &(s, d)) in graph.edges.iter().enumerate() {
+        out_ids[s].push(idx);
+        in_ids[d].push(idx);
+    }
+    let mut in_deg: Vec<usize> = in_ids.iter().map(|v| v.len()).collect();
+    let mut out_deg: Vec<usize> = out_ids.iter().map(|v| v.len()).collect();
+    let live = |edges: &[Option<(usize, usize)>], idx: usize| edges[idx].is_some();
+
+    let mut node_eliminations = 0;
+    let mut edge_eliminations = 0;
+    loop {
+        let mut changed = false;
+
+        // node eliminations: in-degree 1, out-degree 1
+        loop {
+            let mut applied = false;
+            for j in 0..n {
+                if !alive[j] || in_deg[j] != 1 || out_deg[j] != 1 {
+                    continue;
+                }
+                let e1 = in_ids[j].iter().copied().find(|&idx| live(&edges, idx));
+                let e2 = out_ids[j].iter().copied().find(|&idx| live(&edges, idx));
+                let (Some(e1), Some(e2)) = (e1, e2) else { continue };
+                let (i, _) = edges[e1].take().unwrap_or((0, 0));
+                let (_, k) = edges[e2].take().unwrap_or((0, 0));
+                alive[j] = false;
+                in_deg[j] = 0;
+                out_deg[j] = 0;
+                let new_idx = edges.len();
+                edges.push(Some((i, k)));
+                out_ids[i].push(new_idx);
+                in_ids[k].push(new_idx);
+                node_eliminations += 1;
+                applied = true;
+                changed = true;
+                break;
+            }
+            if !applied {
+                break;
+            }
+        }
+
+        // edge eliminations: parallel edges with identical endpoints
+        loop {
+            let mut applied = false;
+            'outer: for src in 0..n {
+                if !alive[src] {
+                    continue;
+                }
+                let live_out: Vec<usize> =
+                    out_ids[src].iter().copied().filter(|&idx| live(&edges, idx)).collect();
+                for (p, &a) in live_out.iter().enumerate() {
+                    for &b in &live_out[p + 1..] {
+                        if edges[a].map(|e| e.1) == edges[b].map(|e| e.1) {
+                            let dst = edges[a].take().map(|e| e.1).unwrap_or(0);
+                            edges[b] = None;
+                            let new_idx = edges.len();
+                            edges.push(Some((src, dst)));
+                            out_ids[src].push(new_idx);
+                            in_ids[dst].push(new_idx);
+                            in_deg[dst] -= 1;
+                            out_deg[src] -= 1;
+                            edge_eliminations += 1;
+                            applied = true;
+                            changed = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            if !applied {
+                break;
+            }
+        }
+
+        if !changed {
+            break;
+        }
+    }
+
+    let nodes: Vec<LayerId> = (0..n).filter(|&i| alive[i]).collect();
+    let mut kernel_edges: Vec<(LayerId, LayerId)> = edges.iter().flatten().copied().collect();
+    kernel_edges.sort_unstable();
+    kernel_edges.dedup();
+    ResidualKernel { nodes, edges: kernel_edges, node_eliminations, edge_eliminations }
+}
+
+/// Compose per-layer configuration counts into the exact enumeration
+/// sizes of the residual kernel and of the whole graph.
+fn certify(graph: &CompGraph, kernel: &ResidualKernel, ndev: usize) -> SearchCertificate {
+    let layer_configs: Vec<u64> =
+        graph.layers.iter().map(|l| count_configs(l, ndev)).collect();
+    let compose = |ids: &mut dyn Iterator<Item = usize>| -> (Option<u128>, f64) {
+        let mut space: Option<u128> = Some(1);
+        let mut log2 = 0.0f64;
+        for id in ids {
+            let c = layer_configs[id];
+            log2 += (c as f64).log2();
+            space = space.and_then(|s| s.checked_mul(c as u128));
+        }
+        (space, log2)
+    };
+    let (residual_space, residual_space_log2) =
+        compose(&mut kernel.nodes.iter().copied());
+    let (full_space, full_space_log2) = compose(&mut (0..graph.num_layers()));
+    SearchCertificate {
+        layer_configs,
+        residual_space,
+        residual_space_log2,
+        full_space,
+        full_space_log2,
+    }
+}
+
+/// The memory prong: per-layer feasible fractions plus the exact
+/// fast-fail verdict (see [`MemoryPrecheck`]).
+fn precheck_memory(graph: &CompGraph, ndev: usize, budget: MemBudget) -> MemoryPrecheck {
+    let mut per_layer = Vec::with_capacity(graph.num_layers());
+    let mut infeasible: Option<(String, u64)> = None;
+    for l in &graph.layers {
+        let configs = enumerate_configs(l, ndev);
+        let feasible = configs
+            .iter()
+            .filter(|c| budget.admits(memory::layer_peak_bytes(l, c)))
+            .count() as u64;
+        let min_bytes = memory::min_layer_peak_bytes(l, ndev);
+        if feasible == 0 && infeasible.is_none() {
+            // the same arithmetic build_budgeted uses, so the verdicts
+            // agree bit for bit: min over (peak - budget), ceiled, >= 1
+            let overshoot = (min_bytes - budget.bytes_per_dev).ceil().max(1.0) as u64;
+            infeasible = Some((l.name.clone(), overshoot));
+        }
+        per_layer.push(LayerFeasibility { configs: configs.len() as u64, feasible, min_bytes });
+    }
+    MemoryPrecheck { per_layer, infeasible }
+}
+
+/// The lint prong: structural smells a *valid* graph can still carry.
+fn lint(graph: &CompGraph, devices: &DeviceGraph, ndev: usize) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if ndev > devices.num_devices() {
+        out.push(Diagnostic {
+            severity: Severity::Warning,
+            code: "over-parallel",
+            layer: None,
+            message: format!(
+                "analysis requested {ndev} devices but the cluster has {}",
+                devices.num_devices()
+            ),
+        });
+    }
+
+    // reachability from the input (layer 0). Validated graphs cannot
+    // actually strand a layer (every non-input layer has a predecessor
+    // and edges only point forward), but the lint is cheap insurance
+    // against a future relaxation of those invariants.
+    let n = graph.num_layers();
+    let mut reachable = vec![false; n];
+    if n > 0 {
+        reachable[0] = true;
+        for &(s, d) in &graph.edges {
+            if reachable[s] {
+                reachable[d] = true;
+            }
+        }
+    }
+    let mut consumed = vec![false; n];
+    for &(s, _) in &graph.edges {
+        consumed[s] = true;
+    }
+
+    let dim_names = ["n", "c", "h", "w"];
+    for l in &graph.layers {
+        if !reachable[l.id] {
+            out.push(Diagnostic {
+                severity: Severity::Error,
+                code: "unreachable-layer",
+                layer: Some(l.id),
+                message: format!("layer `{}` is not reachable from the input", l.name),
+            });
+        }
+        // a sink that is not the final layer computes output nobody reads
+        if !consumed[l.id] && l.id + 1 != n {
+            out.push(Diagnostic {
+                severity: Severity::Warning,
+                code: "dead-output",
+                layer: Some(l.id),
+                message: format!(
+                    "output of layer `{}` is never consumed (sink before the final layer)",
+                    l.name
+                ),
+            });
+        }
+        // partitionable dimensions of extent 1 silently shrink the
+        // config space — worth knowing, not a mistake
+        let allowed = allowed_dims(&l.op);
+        for d in 0..l.out_shape.len().min(4) {
+            if allowed[d] && l.out_shape[d] == 1 {
+                out.push(Diagnostic {
+                    severity: Severity::Info,
+                    code: "degenerate-dim",
+                    layer: Some(l.id),
+                    message: format!(
+                        "dimension {} of `{}` has extent 1 and cannot be partitioned",
+                        dim_names[d], l.name
+                    ),
+                });
+            }
+        }
+        // window-shape smells on sliding operators
+        if let OpKind::Conv2d { kernel, stride, padding, .. }
+        | OpKind::Pool2d { kernel, stride, padding, .. } = &l.op
+        {
+            for (axis, (k, s, p)) in [
+                ("rows", (kernel.0, stride.0, padding.0)),
+                ("cols", (kernel.1, stride.1, padding.1)),
+            ] {
+                if s > k {
+                    out.push(Diagnostic {
+                        severity: Severity::Warning,
+                        code: "stride-gap",
+                        layer: Some(l.id),
+                        message: format!(
+                            "`{}` {axis}: stride {s} exceeds kernel {k}, so input is skipped",
+                            l.name
+                        ),
+                    });
+                }
+                if p >= k {
+                    out.push(Diagnostic {
+                        severity: Severity::Warning,
+                        code: "pad-window",
+                        layer: Some(l.id),
+                        message: format!(
+                            "`{}` {axis}: padding {p} >= kernel {k}, so some windows read \
+                             only padding",
+                            l.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{nets, GraphBuilder};
+    use crate::planner::ClusterSpec;
+
+    fn p100(n: usize) -> DeviceGraph {
+        #[allow(clippy::unwrap_used)]
+        ClusterSpec::p100(n).unwrap().device_graph().unwrap()
+    }
+
+    #[test]
+    fn chains_and_benchmarks_are_fully_reducible() {
+        for name in ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18"] {
+            let g = nets::by_name(name, 64).unwrap();
+            let d = p100(2);
+            let r = analyze(&g, &d, 2, None);
+            assert_eq!(r.reducibility, Reducibility::FullyReducible, "{name}");
+            assert!(r.kernel.nodes.len() <= 2, "{name}");
+            assert_eq!(r.errors(), 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn replay_matches_the_real_optimizer_fixpoint() {
+        use crate::cost::{CostModel, CostTables};
+        for name in ["lenet5", "inception_v3", "resnet18"] {
+            let g = nets::by_name(name, 64).unwrap();
+            let d = p100(2);
+            let kernel = replay_eliminations(&g);
+            let t = CostTables::build(&CostModel::new(&g, &d), 2);
+            let opt = crate::optimizer::optimize(&t);
+            assert_eq!(kernel.nodes.len(), opt.stats.final_nodes, "{name}");
+            assert_eq!(kernel.node_eliminations, opt.stats.node_eliminations, "{name}");
+            assert_eq!(kernel.edge_eliminations, opt.stats.edge_eliminations, "{name}");
+        }
+    }
+
+    /// A diamond whose branches each split again — node elimination
+    /// never applies to the inner fan nodes (in 1 / out 2 or in 2 /
+    /// out 1 at best after merges), leaving a >2-node kernel.
+    fn irreducible() -> CompGraph {
+        let mut b = GraphBuilder::new("irreducible");
+        let x = b.input(4, 4, 8, 8).unwrap();
+        let a = b.conv2d("a", x, 4, (1, 1), (1, 1), (0, 0)).unwrap();
+        let c = b.conv2d("c", x, 4, (1, 1), (1, 1), (0, 0)).unwrap();
+        // cross links: a and c each feed BOTH joins, so neither join's
+        // in-edges can collapse pairwise and no node has degree (1,1)
+        let j1 = b.add("j1", a, c).unwrap();
+        let j2 = b.concat("j2", &[a, c]).unwrap();
+        let m1 = b.conv2d("m1", j1, 4, (1, 1), (1, 1), (0, 0)).unwrap();
+        let m2 = b.conv2d("m2", j2, 4, (1, 1), (1, 1), (0, 0)).unwrap();
+        let t1 = b.add("t1", m1, m2).unwrap();
+        let t2 = b.concat("t2", &[m1, m2]).unwrap();
+        let z = b.concat("z", &[t1, t2]).unwrap();
+        let f = b.fully_connected("fc", z, 10).unwrap();
+        b.softmax("sm", f).unwrap();
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn cross_linked_branches_classify_residual() {
+        let g = irreducible();
+        let d = p100(2);
+        let r = analyze(&g, &d, 2, None);
+        match r.reducibility {
+            Reducibility::Residual { nodes, edges } => {
+                assert!(nodes > 2, "kernel has {nodes} nodes");
+                assert!(edges > 0);
+                assert_eq!(nodes, r.kernel.nodes.len());
+                assert_eq!(edges, r.kernel.edges.len());
+            }
+            other => panic!("expected Residual, got {other:?}"),
+        }
+        // the kernel's edges connect kernel nodes only
+        for &(s, d) in &r.kernel.edges {
+            assert!(r.kernel.nodes.contains(&s) && r.kernel.nodes.contains(&d));
+        }
+    }
+
+    #[test]
+    fn certificate_composes_counting_twin_exactly() {
+        let g = nets::minicnn(32).unwrap();
+        let d = p100(4);
+        let r = analyze(&g, &d, 4, None);
+        for (l, &count) in g.layers.iter().zip(&r.certificate.layer_configs) {
+            assert_eq!(count, enumerate_configs(l, 4).len() as u64, "{}", l.name);
+        }
+        let full: u128 =
+            r.certificate.layer_configs.iter().map(|&c| c as u128).product();
+        assert_eq!(r.certificate.full_space, Some(full));
+        let residual: u128 = r
+            .kernel
+            .nodes
+            .iter()
+            .map(|&i| r.certificate.layer_configs[i] as u128)
+            .product();
+        assert_eq!(r.certificate.residual_space, Some(residual));
+        assert!(r.certificate.residual_space_log2 <= r.certificate.full_space_log2);
+        assert!((r.certificate.residual_space_log2 - (residual as f64).log2()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_precheck_reports_fractions_and_feasibility() {
+        let g = nets::lenet5(32).unwrap();
+        let d = p100(2);
+        // a roomy budget admits everything
+        let roomy = analyze(&g, &d, 2, Some(MemBudget::new(u64::MAX)));
+        let m = roomy.memory.as_ref().unwrap();
+        assert!(m.infeasible.is_none());
+        assert!(m.per_layer.iter().all(|f| f.feasible == f.configs && f.configs > 0));
+        // one byte admits nothing: the verdict names the lowest-id layer
+        let broke = analyze(&g, &d, 2, Some(MemBudget::new(1)));
+        let m = broke.memory.as_ref().unwrap();
+        let (layer, overshoot) = m.infeasible.as_ref().unwrap();
+        assert_eq!(layer, &g.layers[0].name, "lowest-id infeasible layer wins");
+        assert!(*overshoot >= 1);
+        assert!(matches!(m.to_error(), Some(OptError::Infeasible { .. })));
+    }
+
+    #[test]
+    fn lints_fire_on_designed_smells_and_not_on_builtins() {
+        for name in ["lenet5", "alexnet", "vgg16", "inception_v3", "resnet18", "minicnn"] {
+            let g = nets::by_name(name, 64).unwrap();
+            let d = p100(2);
+            let r = analyze(&g, &d, 2, None);
+            assert_eq!(r.errors(), 0, "{name}: {:?}", r.diagnostics);
+            assert_eq!(r.warnings(), 0, "{name}: {:?}", r.diagnostics);
+        }
+
+        // dead output: a branch nobody consumes, before the final layer
+        let mut b = GraphBuilder::new("dead");
+        let x = b.input(4, 3, 8, 8).unwrap();
+        let _orphan = b.conv2d("orphan", x, 4, (3, 3), (1, 1), (1, 1)).unwrap();
+        let keep = b.conv2d("keep", x, 4, (3, 3), (1, 1), (1, 1)).unwrap();
+        let f = b.fully_connected("fc", keep, 10).unwrap();
+        b.softmax("sm", f).unwrap();
+        let g = b.finish().unwrap();
+        let r = analyze(&g, &p100(2), 2, None);
+        assert!(
+            r.diagnostics.iter().any(|d| d.code == "dead-output" && d.layer == Some(1)),
+            "{:?}",
+            r.diagnostics
+        );
+
+        // stride-gap and pad-window on a hand-built conv
+        let mut b = GraphBuilder::new("smelly");
+        let x = b.input(2, 3, 16, 16).unwrap();
+        let c = b.conv2d("skippy", x, 4, (2, 2), (3, 3), (0, 0)).unwrap();
+        let c2 = b.conv2d("matted", c, 4, (3, 3), (1, 1), (3, 3)).unwrap();
+        let f = b.fully_connected("fc", c2, 10).unwrap();
+        b.softmax("sm", f).unwrap();
+        let g = b.finish().unwrap();
+        let r = analyze(&g, &p100(2), 2, None);
+        assert!(r.diagnostics.iter().any(|d| d.code == "stride-gap"), "{:?}", r.diagnostics);
+        assert!(r.diagnostics.iter().any(|d| d.code == "pad-window"), "{:?}", r.diagnostics);
+
+        // degenerate-dim is informational
+        let mut b = GraphBuilder::new("thin");
+        let x = b.input(1, 3, 8, 8).unwrap();
+        let c = b.conv2d("c", x, 4, (3, 3), (1, 1), (1, 1)).unwrap();
+        let f = b.fully_connected("fc", c, 10).unwrap();
+        b.softmax("sm", f).unwrap();
+        let g = b.finish().unwrap();
+        let r = analyze(&g, &p100(2), 2, None);
+        let deg: Vec<_> =
+            r.diagnostics.iter().filter(|d| d.code == "degenerate-dim").collect();
+        assert!(!deg.is_empty(), "batch 1 must flag the n dimension");
+        assert!(deg.iter().all(|d| d.severity == Severity::Info));
+    }
+
+    #[test]
+    fn over_parallel_requests_warn() {
+        let g = nets::lenet5(32).unwrap();
+        let r = analyze(&g, &p100(2), 8, None);
+        assert!(r.diagnostics.iter().any(|d| d.code == "over-parallel"));
+    }
+}

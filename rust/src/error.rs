@@ -103,6 +103,19 @@ pub enum OptError {
         /// Human-readable detail locating the violation.
         detail: String,
     },
+    /// A planning request whose residual search space is too large to
+    /// enumerate: the pre-planning certificate (`analyze::analyze`, see
+    /// DESIGN.md §11) predicts a final enumeration beyond the service's
+    /// cap, so the request is rejected *before* any cost table is built
+    /// instead of pinning a worker thread. Sizes are carried as `log2`
+    /// (rounded up to whole bits, which is all the message needs and
+    /// keeps this type `Eq`).
+    SearchSpaceExceeded {
+        /// Certified residual enumeration size, as ceil(log2(bits)).
+        space_log2: u32,
+        /// The service's cap, as log2 bits.
+        cap_log2: u32,
+    },
     /// Memory-infeasible request: some layer has *no* configuration whose
     /// per-device peak fits the memory budget, so no strategy can exist
     /// (see `memory::layer_peak_bytes` and DESIGN.md §3).
@@ -140,7 +153,7 @@ impl fmt::Display for OptError {
                 write!(f, "unknown strategy `{name}` (known: data, model, owt, layerwise)")
             }
             OptError::UnknownBackend(name) => {
-                write!(f, "unknown search backend `{name}` (known: elimination, dfs)")
+                write!(f, "unknown search backend `{name}` (known: elimination, dfs, auto)")
             }
             OptError::InvalidCluster(msg) => write!(f, "invalid cluster: {msg}"),
             OptError::InvalidArgument(msg) => write!(f, "{msg}"),
@@ -151,6 +164,12 @@ impl fmt::Display for OptError {
             OptError::InvalidPlan { check, detail } => {
                 write!(f, "invalid plan [{check}]: {detail}")
             }
+            OptError::SearchSpaceExceeded { space_log2, cap_log2 } => write!(
+                f,
+                "search space too large: the residual enumeration is ~2^{space_log2} \
+                 strategies, above this service's 2^{cap_log2} cap; simplify the graph \
+                 or plan it offline with a budgeted backend"
+            ),
             OptError::Infeasible { layer, overshoot } => write!(
                 f,
                 "infeasible: layer `{layer}` needs {overshoot} more bytes than the \
@@ -185,6 +204,7 @@ mod tests {
                 check: PlanCheck::TileCoverage,
                 detail: "layer 3: tile 1 overlaps tile 2".into(),
             },
+            OptError::SearchSpaceExceeded { space_log2: 57, cap_log2: 32 },
             OptError::Infeasible { layer: "fc6".into(), overshoot: 123_456 },
         ];
         for e in errs {
@@ -210,6 +230,10 @@ mod tests {
         assert!(bad_plan.to_string().contains("cost-coherence"));
         // an unsatisfiable memory budget is a usage error: exit 2
         assert_eq!(OptError::Infeasible { layer: "fc6".into(), overshoot: 1 }.exit_code(), 2);
+        // an over-cap graph is the client's to simplify: exit 2
+        let cap = OptError::SearchSpaceExceeded { space_log2: 57, cap_log2: 32 };
+        assert_eq!(cap.exit_code(), 2);
+        assert!(cap.to_string().contains("2^57") && cap.to_string().contains("2^32"));
     }
 
     #[test]

@@ -419,18 +419,23 @@ impl CompGraph {
     }
 
     /// Graphviz DOT rendering (`optcnn graph --dot`): one node per layer
-    /// labeled with its name, operator, and output shape.
+    /// labeled with its name, operator, and output shape. Layer names
+    /// come from user specs, so label text is escaped — a `"` or `\` in
+    /// a name must not break out of the quoted DOT string.
     pub fn to_dot(&self) -> String {
         use std::fmt::Write as _;
+        // order matters: escaping `"` first would double-escape the
+        // backslashes that escape introduces
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
         let mut out = String::new();
-        let _ = writeln!(out, "digraph {:?} {{", self.name);
+        let _ = writeln!(out, "digraph \"{}\" {{", esc(&self.name));
         let _ = writeln!(out, "  rankdir=TB; node [shape=box, fontname=\"monospace\"];");
         for l in &self.layers {
             let _ = writeln!(
                 out,
                 "  l{} [label=\"{}\\n{} {:?}\"];",
                 l.id,
-                l.name,
+                esc(&l.name),
                 l.op.mnemonic(),
                 l.out_shape
             );
@@ -556,5 +561,38 @@ mod tests {
         assert!(dot.starts_with("digraph"));
         assert_eq!(dot.matches(" -> ").count(), g.num_edges());
         assert!(dot.contains("conv1"));
+    }
+
+    #[test]
+    fn dot_escapes_hostile_layer_names() {
+        // a name built to break out of the quoted label and inject an
+        // attribute: `"]; malicious [label="` — spec names are
+        // user-supplied, so to_dot must neutralize it
+        let mut b = GraphBuilder::new(r#"quoted " graph \"#);
+        let x = b.input(8, 1, 8, 8).unwrap();
+        let c = b
+            .conv2d(r#"evil"]; mal [label="x"\"#, x, 4, (3, 3), (1, 1), (1, 1))
+            .unwrap();
+        let f = b.fully_connected("fc", c, 10).unwrap();
+        b.softmax("sm", f).unwrap();
+        let g = b.finish().unwrap();
+        let dot = g.to_dot();
+        // every quote and backslash of the hostile name rides escaped
+        assert!(dot.contains(r#"evil\"]; mal [label=\"x\"\\"#), "{dot}");
+        assert!(dot.contains(r#"digraph "quoted \" graph \\""#), "{dot}");
+        // structurally: balanced unescaped quotes on every line, and no
+        // line gained a second attribute list from the injection
+        for line in dot.lines() {
+            let unescaped = line.replace("\\\\", "").replace("\\\"", "");
+            assert_eq!(
+                unescaped.matches('"').count() % 2,
+                0,
+                "unbalanced quotes in {line:?}"
+            );
+            assert!(
+                unescaped.matches('[').count() <= 1,
+                "injected attribute list in {line:?}"
+            );
+        }
     }
 }

@@ -38,6 +38,7 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+pub mod analyze;
 pub mod config;
 pub mod cost;
 pub mod data;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!
 //! * `optimize`  — run the strategy search and print the per-layer strategy
+//! * `analyze`   — pre-planning static analysis: reducibility, search-cost
+//!   certificate, memory precheck, graph lints (DESIGN.md §11)
 //! * `simulate`  — evaluate a strategy on the simulated cluster
 //! * `plan`      — materialize a strategy's ExecutionPlan (print/export)
 //! * `verify`    — statically check an exported plan artifact against the
@@ -40,9 +42,12 @@ const USAGE: &str = "\
 optcnn — layer-wise parallelism for CNN training (ICML'18 reproduction)
 
 USAGE:
-  optcnn optimize --network <net> --devices <n> [--backend elimination|dfs]
+  optcnn optimize --network <net> --devices <n> [--backend elimination|dfs|auto]
                   [--budget-ms <ms>] [--cluster <file.toml>] [--mem-limit <b>]
                   [--build-threads <n>]
+  optcnn analyze  (<spec.json> | --network <net> | --network-file <spec.json>)
+                  [--devices <n> | --cluster <file.toml>] [--mem-limit <b>]
+                  [--json] [--deny-warnings]
   optcnn simulate --network <net> --devices <n> --strategy <s>
                   [--cluster <file.toml>] [--trace out.json] [--mem-limit <b>]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
@@ -104,7 +109,10 @@ fn parse_mem_bytes(s: &str) -> Result<u64> {
 }
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["verbose", "csv", "validate", "no-verify"]);
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["verbose", "csv", "validate", "no-verify", "json", "deny-warnings"],
+    );
     let code = match dispatch(&args) {
         Ok(code) => code,
         Err(e) => {
@@ -118,6 +126,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<i32> {
     match args.subcommand.as_deref() {
         Some("optimize") => cmd_optimize(args),
+        Some("analyze") => cmd_analyze(args),
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
         Some("verify") => cmd_verify(args),
@@ -192,10 +201,20 @@ fn planner_from_args(args: &Args) -> Result<Planner> {
         0 => None,
         ms => Some(Duration::from_millis(ms as u64)),
     };
-    if budget.is_some() && backend_name != "dfs" {
+    if budget.is_some() && backend_name != "dfs" && backend_name != "auto" {
         return Err(OptError::InvalidArgument(
-            "--budget-ms only applies to --backend dfs".into(),
+            "--budget-ms only applies to --backend dfs or auto".into(),
         ));
+    }
+    if backend_name == "auto" {
+        // certificate-driven choice (DESIGN.md §11): the session must
+        // exist first so the graph can be analyzed, then the backend the
+        // certificate picked is bound in place of the default
+        let mut planner = builder.build()?;
+        let report = planner.analyze();
+        planner
+            .set_backend_boxed(backend::auto(report.certificate.residual_space_log2, budget));
+        return Ok(planner);
     }
     builder = builder.backend_boxed(backend::by_name(backend_name, budget)?);
     builder.build()
@@ -241,6 +260,151 @@ fn cmd_optimize(args: &Args) -> Result<i32> {
         eval.throughput,
         fmt_bytes(eval.comm.total())
     );
+    Ok(0)
+}
+
+/// Pre-planning static analysis (DESIGN.md §11): reducibility class, the
+/// exact search-cost certificate, the memory precheck under
+/// `--mem-limit`, and graph lints — computed from structure alone,
+/// building no cost tables. `--json` prints the machine-readable report;
+/// `--deny-warnings` turns warning lints into exit 2 (CI runs it over
+/// every checked-in spec). Error lints always exit 2.
+fn cmd_analyze(args: &Args) -> Result<i32> {
+    // `optcnn analyze <spec.json>` is shorthand for --network-file
+    let network = match (args.positional.first(), network_from_args(args)?) {
+        (Some(_), Some(_)) => {
+            return Err(OptError::InvalidArgument(
+                "pass the spec positionally or via --network/--network-file, not both"
+                    .into(),
+            ));
+        }
+        (Some(path), None) => NetworkSpec::from_spec_file(path)?,
+        (None, Some(spec)) => spec,
+        (None, None) => {
+            return Err(OptError::InvalidArgument(
+                "analyze needs a graph: `optcnn analyze <spec.json>`, --network \
+                 <preset>, or --network-file <spec.json>"
+                    .into(),
+            ));
+        }
+    };
+    let mut builder = Planner::builder(network);
+    match args.get("cluster") {
+        Some(path) => {
+            if args.get("devices").is_some() {
+                return Err(OptError::InvalidArgument(
+                    "--devices and --cluster are mutually exclusive".into(),
+                ));
+            }
+            builder = builder.cluster(ClusterSpec::load(path)?);
+        }
+        None => builder = builder.devices(args.usize_or("devices", 4)?),
+    }
+    if args.get("batch").is_some() {
+        builder = builder.per_gpu_batch(args.usize_or("batch", 0)?);
+    }
+    match args.get("mem-limit") {
+        None => {}
+        Some("device") => builder = builder.mem_limit_device(),
+        Some(v) => builder = builder.mem_limit(parse_mem_bytes(v)?),
+    }
+    let p = builder.build()?;
+    let report = p.analyze();
+    debug_assert_eq!(p.session_stats().table_builds, 0, "analysis must build no tables");
+
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        let with_memory = report.memory.is_some();
+        let cols: &[&str] = if with_memory {
+            &["layer", "op", "configs", "feasible", "min peak"]
+        } else {
+            &["layer", "op", "configs"]
+        };
+        let mut table = Table::new(
+            &format!(
+                "pre-planning analysis: {} x{} (batch {})",
+                p.network(),
+                p.num_devices(),
+                p.global_batch()
+            ),
+            cols,
+        );
+        for l in &p.graph().layers {
+            let mut row = vec![
+                l.name.clone(),
+                l.op.mnemonic().to_string(),
+                report.certificate.layer_configs[l.id].to_string(),
+            ];
+            if let Some(m) = &report.memory {
+                let f = &m.per_layer[l.id];
+                row.push(format!("{}/{}", f.feasible, f.configs));
+                row.push(fmt_bytes(f.min_bytes));
+            }
+            table.row(row);
+        }
+        table.print();
+        println!(
+            "reducibility: {} ({} node elims, {} edge elims, K={})",
+            report.reducibility,
+            report.kernel.node_eliminations,
+            report.kernel.edge_eliminations,
+            report.kernel.nodes.len()
+        );
+        let exact = |space: Option<u128>| match space {
+            Some(s) => format!("{s}"),
+            None => "over 2^128".to_string(),
+        };
+        println!(
+            "certificate: residual enumeration {} strategies (2^{:.1}), full space \
+             2^{:.1} over {} layers",
+            exact(report.certificate.residual_space),
+            report.certificate.residual_space_log2,
+            report.certificate.full_space_log2,
+            report.certificate.layer_configs.len()
+        );
+        if let Some(m) = &report.memory {
+            match &m.infeasible {
+                Some((layer, overshoot)) => println!(
+                    "memory: INFEASIBLE — layer `{layer}` overshoots the budget by {}",
+                    fmt_bytes(*overshoot as f64)
+                ),
+                None => println!(
+                    "memory: feasible — every layer keeps at least one configuration \
+                     under the budget"
+                ),
+            }
+        }
+        if report.diagnostics.is_empty() {
+            println!("diagnostics: none");
+        } else {
+            for d in &report.diagnostics {
+                let at = match d.layer {
+                    Some(id) => format!(" layer `{}`", p.graph().layers[id].name),
+                    None => String::new(),
+                };
+                println!("{}[{}]{}: {}", d.severity, d.code, at, d.message);
+            }
+        }
+        // `--backend auto` would make the same call from this certificate
+        let pick = if report.certificate.residual_space_log2
+            <= backend::AUTO_ELIMINATION_MAX_LOG2
+        {
+            "elimination"
+        } else {
+            "budgeted dfs"
+        };
+        println!("backend auto would pick: {pick}");
+    }
+
+    if report.errors() > 0 {
+        eprintln!("analysis: {} error(s), {} warning(s)", report.errors(), report.warnings());
+        return Ok(2);
+    }
+    if args.flag("deny-warnings") && report.warnings() > 0 {
+        eprintln!("analysis: {} warning(s) denied by --deny-warnings", report.warnings());
+        return Ok(2);
+    }
     Ok(0)
 }
 
@@ -622,6 +786,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     println!("protocol: one JSON request per line, e.g.");
     println!(r#"  {{"net":"alexnet","devices":4,"strategy":"layerwise","want":"evaluate"}}"#);
     println!(r#"  optional "mem_limit": <bytes/device> bounds the layer-wise search"#);
+    println!(r#"  {{"want":"analyze",...}} reports the pre-planning static analysis"#);
     if verify_loaded {
         println!(r#"  {{"want":"verify","plan":{{...}}}} checks a plan before caching it"#);
     } else {

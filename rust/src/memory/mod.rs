@@ -44,7 +44,10 @@
 
 use crate::cost::CostModel;
 use crate::graph::Layer;
-use crate::parallel::{input_region, output_tiles, param_sharding, PConfig, Strategy};
+use crate::parallel::{
+    enumerate_configs, input_region, output_tiles, param_sharding, per_dim_divisors, PConfig,
+    Strategy,
+};
 use crate::tensor::Region;
 
 /// Bytes per f32 element.
@@ -112,6 +115,35 @@ pub fn layer_peak_bytes(layer: &Layer, cfg: &PConfig) -> f64 {
         .iter()
         .map(|t| tile_bytes(layer, cfg, t))
         .fold(0.0, f64::max)
+}
+
+/// The smallest [`layer_peak_bytes`] any legal configuration of `layer`
+/// achieves at `ndev` devices — the exact feasibility frontier a
+/// [`MemBudget`] is compared against, computed *without* scanning the
+/// whole configuration space. The peak is monotone non-increasing in
+/// every partition degree (see the [module docs](self)), so the global
+/// minimum is attained at a configuration where no single degree can be
+/// raised to its next divisor within the device budget; only those
+/// locally-maximal configurations are evaluated. The value is
+/// bit-identical to `min over enumerate_configs` (the minimizing
+/// configuration itself is in the scanned subset), which is what lets
+/// the pre-planning precheck ([`crate::analyze`]) reproduce
+/// `CostTables::build_budgeted`'s `Infeasible` verdict exactly.
+pub fn min_layer_peak_bytes(layer: &Layer, ndev: usize) -> f64 {
+    let per_dim = per_dim_divisors(layer, ndev);
+    // a config is locally maximal when no dimension's degree can be
+    // bumped to its next divisor without overrunning `ndev`
+    let maximal = |c: &PConfig| {
+        (0..4).all(|d| match per_dim[d].iter().find(|&&v| v > c.deg[d]) {
+            Some(&next) => c.total() / c.deg[d] * next > ndev,
+            None => true,
+        })
+    };
+    enumerate_configs(layer, ndev)
+        .iter()
+        .filter(|c| maximal(c))
+        .map(|c| layer_peak_bytes(layer, c))
+        .fold(f64::INFINITY, f64::min)
 }
 
 /// Per-device high-water bytes of a whole strategy: each layer's tiles
@@ -187,6 +219,24 @@ mod tests {
         // data parallelism is symmetric: every device carries the same load
         for &p in &per_dev {
             assert!((p - per_dev[0]).abs() <= 1e-6 * per_dev[0]);
+        }
+    }
+
+    #[test]
+    fn min_peak_over_maximal_configs_equals_global_min() {
+        // the locally-maximal shortcut must be bit-identical to the
+        // exhaustive minimum — that is what lets the analyze precheck
+        // reproduce build_budgeted's Infeasible verdict exactly
+        let g = nets::alexnet(64).unwrap();
+        for l in &g.layers {
+            for ndev in [1usize, 2, 4, 8] {
+                let brute = enumerate_configs(l, ndev)
+                    .iter()
+                    .map(|c| layer_peak_bytes(l, c))
+                    .fold(f64::INFINITY, f64::min);
+                let fast = min_layer_peak_bytes(l, ndev);
+                assert_eq!(fast.to_bits(), brute.to_bits(), "{} at {ndev}", l.name);
+            }
         }
     }
 

@@ -30,6 +30,14 @@ pub struct SearchStats {
     /// improving or not. (For the DFS backend this is the search-tree
     /// node count instead; see `backend::ExhaustiveDfs`.)
     pub enumerated: u64,
+    /// The exact size of the space the search ranged over — the
+    /// [`analyze`](crate::analyze) certificate's number: the product of
+    /// per-node config counts over the *final* (post-elimination) graph
+    /// here, or over every layer for the DFS backend. `None` when the
+    /// product overflows `u128`. Always `enumerated <= space_size` for
+    /// this backend (branch-and-bound only prunes), with equality when
+    /// no partial assignment is pruned.
+    pub space_size: Option<u128>,
 }
 
 /// An optimal strategy under the cost model, with provenance.
@@ -202,6 +210,9 @@ pub fn optimize(tables: &CostTables) -> Optimized {
     // --- Enumerate the final graph (line 14) ---
     let final_nodes: Vec<usize> = (0..n).filter(|&i| alive[i]).collect();
     stats.final_nodes = final_nodes.len();
+    stats.space_size = final_nodes
+        .iter()
+        .try_fold(1u128, |acc, &node| acc.checked_mul(ncfg[node] as u128));
     let final_edges: Vec<&WEdge> = edges.iter().flatten().collect();
 
     let mut chosen = vec![0usize; n];
@@ -392,8 +403,29 @@ mod tests {
         let r = optimize(&tables);
         assert_eq!(r.stats.final_nodes, 2);
         assert_eq!(r.stats.enumerated, 2, "visited assignments, not improvements");
+        // the certificate reports the whole 2x2 space even though one
+        // branch was pruned
+        assert_eq!(r.stats.space_size, Some(4));
         assert!((r.cost - 1.0).abs() < 1e-12);
         assert_eq!(r.strategy.configs, vec![PConfig::serial(), PConfig::serial()]);
+    }
+
+    #[test]
+    fn space_size_certifies_the_final_enumeration_exactly_when_nothing_prunes() {
+        // Zero node-0 costs keep every partial assignment strictly below
+        // the incumbent, so branch-and-bound never fires and the visited
+        // leaf count must equal the certified product.
+        use crate::cost::EdgeTable;
+        use crate::parallel::PConfig;
+        let three = || vec![PConfig::serial(), PConfig::data(2), PConfig::data(4)];
+        let tables = CostTables {
+            configs: vec![three(), three()],
+            node_cost: vec![vec![0.0; 3], vec![1.0, 5.0, 9.0]],
+            edges: vec![EdgeTable { src: 0, dst: 1, cost: vec![0.0; 9] }],
+        };
+        let r = optimize(&tables);
+        assert_eq!(r.stats.space_size, Some(9));
+        assert_eq!(r.stats.enumerated, 9, "no prune: every leaf is visited");
     }
 
     #[test]

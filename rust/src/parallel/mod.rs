@@ -92,10 +92,12 @@ fn divisors_upto(n: usize, cap: usize) -> Vec<usize> {
     (1..=n.min(cap)).filter(|d| n % d == 0).collect()
 }
 
-/// Enumerate every legal configuration for `layer` on at most `ndev`
-/// devices: each degree divides the output extent (equal partitioning),
-/// disallowed dimensions stay at 1, and the total degree is <= `ndev`.
-pub fn enumerate_configs(layer: &Layer, ndev: usize) -> Vec<PConfig> {
+/// Per-dimension candidate degree lists for `layer` at `ndev` devices:
+/// divisors of each partitionable extent, `[1]` for disallowed or
+/// missing dimensions. The building block [`enumerate_configs`] and
+/// [`count_configs`] share, so the materialized list and its counted
+/// cardinality can never drift apart.
+pub(crate) fn per_dim_divisors(layer: &Layer, ndev: usize) -> [Vec<usize>; 4] {
     let shape = &layer.out_shape;
     let allowed = allowed_dims(&layer.op);
     let rank = shape.len();
@@ -110,6 +112,14 @@ pub fn enumerate_configs(layer: &Layer, ndev: usize) -> Vec<PConfig> {
             }
         }
     }
+    per_dim
+}
+
+/// Enumerate every legal configuration for `layer` on at most `ndev`
+/// devices: each degree divides the output extent (equal partitioning),
+/// disallowed dimensions stay at 1, and the total degree is <= `ndev`.
+pub fn enumerate_configs(layer: &Layer, ndev: usize) -> Vec<PConfig> {
+    let per_dim = per_dim_divisors(layer, ndev);
     let mut out = Vec::new();
     for &n in &per_dim[0] {
         for &c in &per_dim[1] {
@@ -129,6 +139,33 @@ pub fn enumerate_configs(layer: &Layer, ndev: usize) -> Vec<PConfig> {
         }
     }
     out
+}
+
+/// The cardinality of [`enumerate_configs`] without materializing a
+/// single `PConfig`: the same per-dimension divisor lists and the same
+/// pruned product walk, counting instead of allocating. This is what
+/// the pre-planning search-cost certificate ([`crate::analyze`])
+/// composes into the exact final-enumeration size before any cost
+/// table exists; `tests/analyze.rs` pins it equal to
+/// `enumerate_configs(layer, ndev).len()` across operators and device
+/// counts.
+pub fn count_configs(layer: &Layer, ndev: usize) -> u64 {
+    let per_dim = per_dim_divisors(layer, ndev);
+    let mut count = 0u64;
+    for &n in &per_dim[0] {
+        for &c in &per_dim[1] {
+            if n * c > ndev {
+                continue;
+            }
+            for &h in &per_dim[2] {
+                if n * c * h > ndev {
+                    continue;
+                }
+                count += per_dim[3].iter().filter(|&&w| n * c * h * w <= ndev).count() as u64;
+            }
+        }
+    }
+    count
 }
 
 /// The output tiles of a layer under `cfg`, one per participating device,
@@ -343,6 +380,23 @@ mod tests {
         // no duplicates
         let mut seen = std::collections::HashSet::new();
         assert!(cfgs.iter().all(|c| seen.insert(*c)));
+    }
+
+    #[test]
+    fn count_configs_matches_enumeration_cardinality() {
+        // the counting twin must track the materializing enumerator
+        // exactly: every operator kind, several device counts
+        let g = nets::lenet5(64).unwrap();
+        for l in &g.layers {
+            for ndev in [1usize, 2, 3, 4, 7, 8, 16] {
+                assert_eq!(
+                    count_configs(l, ndev),
+                    enumerate_configs(l, ndev).len() as u64,
+                    "{} at {ndev} devices",
+                    l.name
+                );
+            }
+        }
     }
 
     #[test]

@@ -70,12 +70,20 @@ impl SearchBackend for ExhaustiveDfs {
     }
 
     fn search(&self, tables: &CostTables) -> Result<Optimized> {
+        // the certificate's number for this backend: the full per-layer
+        // config product (DFS never eliminates anything)
+        let space_size = (0..tables.configs.len())
+            .try_fold(1u128, |acc, l| acc.checked_mul(tables.num_configs(l) as u128));
         let r = dfs::dfs_optimal(tables, self.budget);
         if !r.complete {
+            let predicted = match space_size {
+                Some(s) => format!("{s}"),
+                None => "over 2^128".to_string(),
+            };
             return Err(OptError::SearchFailed(format!(
-                "exhaustive DFS hit its budget ({:?}) after {} search-tree nodes without \
-                 exploring the full space; raise the budget or use the elimination backend",
-                self.budget, r.visited
+                "exhaustive DFS hit its budget ({:?}) after {} search-tree nodes of a \
+                 predicted {}-leaf space; raise the budget or use the elimination backend",
+                self.budget, r.visited, predicted
             )));
         }
         let strategy = r.strategy.ok_or_else(|| {
@@ -89,17 +97,48 @@ impl SearchBackend for ExhaustiveDfs {
                 edge_eliminations: 0,
                 final_nodes: tables.configs.len(),
                 enumerated: r.visited,
+                space_size,
             },
         })
     }
 }
 
+/// Residual-enumeration size (log2 of leaves) up to which `auto` trusts
+/// the elimination backend's brute-force tail. ~1M leaves is
+/// milliseconds of `enumerate_final`; beyond it `auto` switches to a
+/// wall-clock-budgeted DFS so planning time stays bounded (the DFS
+/// errors cleanly at its budget instead of pinning the process).
+pub const AUTO_ELIMINATION_MAX_LOG2: f64 = 20.0;
+
+/// The DFS budget `auto` applies when the caller did not pass one.
+pub const AUTO_DFS_BUDGET: Duration = Duration::from_secs(10);
+
+/// Resolve `--backend auto` from a pre-planning certificate: the
+/// elimination backend when the certified residual enumeration is small
+/// enough to brute-force ([`AUTO_ELIMINATION_MAX_LOG2`]), otherwise a
+/// budgeted [`ExhaustiveDfs`] so the request fails in bounded time
+/// rather than hanging (see `analyze::SearchCertificate`).
+pub fn auto(residual_space_log2: f64, dfs_budget: Option<Duration>) -> Box<dyn SearchBackend> {
+    if residual_space_log2 <= AUTO_ELIMINATION_MAX_LOG2 {
+        Box::new(Elimination)
+    } else {
+        Box::new(ExhaustiveDfs { budget: Some(dfs_budget.unwrap_or(AUTO_DFS_BUDGET)) })
+    }
+}
+
 /// Resolve a backend by CLI name: `elimination` (the default) or `dfs`
-/// (optionally budgeted).
+/// (optionally budgeted). `auto` is certificate-driven and cannot be
+/// resolved from a name alone — the CLI routes it through
+/// [`auto`] after analyzing the graph; asking for it here reports that.
 pub fn by_name(name: &str, dfs_budget: Option<Duration>) -> Result<Box<dyn SearchBackend>> {
     match name {
         "elimination" => Ok(Box::new(Elimination)),
         "dfs" => Ok(Box::new(ExhaustiveDfs { budget: dfs_budget })),
+        "auto" => Err(OptError::InvalidArgument(
+            "--backend auto is resolved from the graph's analysis certificate; it is \
+             available on the optcnn command line but not as a fixed service backend"
+                .to_string(),
+        )),
         other => Err(OptError::UnknownBackend(other.to_string())),
     }
 }
@@ -147,5 +186,26 @@ mod tests {
         assert_eq!(by_name("elimination", None).unwrap().name(), "elimination");
         assert_eq!(by_name("dfs", None).unwrap().name(), "dfs");
         assert!(matches!(by_name("anneal", None), Err(OptError::UnknownBackend(_))));
+        // `auto` needs a graph to resolve: typed usage error, not unknown
+        assert!(matches!(by_name("auto", None), Err(OptError::InvalidArgument(_))));
+    }
+
+    #[test]
+    fn auto_picks_elimination_below_the_threshold_and_dfs_above() {
+        assert_eq!(auto(AUTO_ELIMINATION_MAX_LOG2, None).name(), "elimination");
+        assert_eq!(auto(AUTO_ELIMINATION_MAX_LOG2 + 1.0, None).name(), "dfs");
+    }
+
+    #[test]
+    fn dfs_stats_carry_the_full_space_size() {
+        let t = lenet_tables();
+        let r = ExhaustiveDfs::default().search(&t).unwrap();
+        let full: u128 =
+            (0..t.configs.len()).map(|l| t.num_configs(l) as u128).product();
+        assert_eq!(r.stats.space_size, Some(full));
+        // DFS visits every complete assignment's prefix at least once,
+        // so the leaf space bounds nothing here — but it must be the
+        // same number the analyze certificate reports (pinned end to
+        // end in tests/analyze.rs)
     }
 }

@@ -65,7 +65,9 @@ pub mod service;
 
 pub use backend::{Elimination, ExhaustiveDfs, SearchBackend};
 pub use cluster::ClusterSpec;
-pub use service::{PlanRequest, PlanService, ServiceStats, VerifyOutcome};
+pub use service::{
+    PlanRequest, PlanService, ServiceStats, VerifyOutcome, MAX_RESIDUAL_SPACE_LOG2,
+};
 
 use std::collections::HashMap;
 use std::fmt;
@@ -629,6 +631,16 @@ impl Planner {
         self.backend.name()
     }
 
+    /// Replace the session's search backend — how `--backend auto`
+    /// binds the choice its certificate made ([`backend::auto`]) after
+    /// the session (and therefore the graph) exists. Clears the cached
+    /// layer-wise optimum, which belonged to the old backend; the cost
+    /// tables are backend-independent and stay.
+    pub fn set_backend_boxed(&mut self, backend: Box<dyn SearchBackend>) {
+        self.backend = backend;
+        self.layerwise = None;
+    }
+
     /// The session's per-device memory budget in bytes, if any.
     pub fn mem_limit(&self) -> Option<u64> {
         self.mem_limit
@@ -670,6 +682,20 @@ impl Planner {
     /// Search statistics of the layer-wise optimization, if it ran.
     pub fn search_stats(&self) -> Option<&SearchStats> {
         self.layerwise.as_ref().map(|o| &o.stats)
+    }
+
+    /// The pre-planning static analysis of this session's (graph,
+    /// cluster, budget): reducibility class, exact search-cost
+    /// certificate, memory precheck, and lints (DESIGN.md §11). Takes
+    /// `&self` — the pass is purely structural, builds no cost tables,
+    /// and leaves [`SessionStats::table_builds`] untouched.
+    pub fn analyze(&self) -> crate::analyze::AnalysisReport {
+        crate::analyze::analyze(
+            &self.graph,
+            &self.devices,
+            self.devices.num_devices(),
+            self.mem_limit.map(MemBudget::new),
+        )
     }
 
     /// Resolve a strategy: baselines are derived from the graph shape,

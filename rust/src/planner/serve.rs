@@ -12,6 +12,7 @@
 //!         | {"plan": {...}, "want": "verify"}
 //! response: {"ok": true, "plan": {...}}
 //!         | {"ok": true, "evaluation": {...}}
+//!         | {"ok": true, "analysis": {...}}
 //!         | {"ok": true, "stats": {...}}
 //!         | {"ok": true, "verified": true, "cached": false, "checks": [...]}
 //!         | {"ok": false, "error": "one-line message"}
@@ -35,6 +36,17 @@
 //! service's aggregate counters ([`ServiceStats`]) — cache hit/miss
 //! totals, single-flight builds, and the per-layer cost-table memo's
 //! `memo_hits`/`memo_misses` — without planning anything.
+//!
+//! `{"want": "analyze"}` answers the pre-planning static analysis of
+//! the request's (network, cluster, budget) — reducibility class, exact
+//! search-cost certificate, memory precheck, and graph lints
+//! ([`crate::analyze`], DESIGN.md §11) — without building any cost
+//! tables. `"strategy"` does not combine with it (analysis is about the
+//! search space, not one strategy). The probe itself is never capped:
+//! it is how a client discovers whether a graph *would* be rejected by
+//! the service's residual-enumeration cap
+//! ([`MAX_RESIDUAL_SPACE_LOG2`](super::MAX_RESIDUAL_SPACE_LOG2)), which
+//! plan/evaluate requests enforce before any table is built.
 //!
 //! `{"want": "verify"}` is the server's plan-ingestion trust boundary
 //! (DESIGN.md §10): the required `"plan"` object is an execution-plan
@@ -87,6 +99,9 @@ pub enum Request {
     Plan(PlanRequest),
     /// Return the evaluation: estimate, simulated step, throughput, comm.
     Evaluate(PlanRequest),
+    /// Return the pre-planning static analysis ([`crate::analyze`])
+    /// of the request's (network, cluster, budget) — no tables built.
+    Analyze(PlanRequest),
     /// Return the service's aggregate counters ([`ServiceStats`]);
     /// carries no plan request at all.
     Stats,
@@ -166,6 +181,18 @@ pub fn parse_request(line: &str) -> Result<Request> {
             Ok(Request::Stats)
         }
         Some(Some("verify")) => Ok(parse_verify(&v)?),
+        Some(Some("analyze")) => {
+            if v.get("plan").is_some() {
+                return Err(bad("`plan` only combines with want=\"verify\""));
+            }
+            if v.get("strategy").is_some() {
+                return Err(bad(
+                    "`strategy` does not combine with want=\"analyze\" — analysis \
+                     is about the search space, not one strategy",
+                ));
+            }
+            Ok(Request::Analyze(parse_plan_request(&v)?))
+        }
         None | Some(Some("plan")) | Some(Some("evaluate")) => {
             if v.get("plan").is_some() {
                 return Err(bad("`plan` only combines with want=\"verify\""));
@@ -177,7 +204,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
         }
         Some(other) => Err(bad(&format!(
-            "`want` must be \"plan\", \"evaluate\", \"stats\", or \"verify\", got {other:?}"
+            "`want` must be \"plan\", \"evaluate\", \"analyze\", \"stats\", or \
+             \"verify\", got {other:?}"
         ))),
     }
 }
@@ -441,6 +469,10 @@ fn respond(service: &PlanService, line: &str) -> Result<Json> {
         Request::Evaluate(req) => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("evaluation", evaluation_json(&service.evaluate(&req)?)),
+        ])),
+        Request::Analyze(req) => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("analysis", service.analyze(&req)?.to_json()),
         ])),
         Request::Verify(req, plan) => {
             let outcome = service.ingest(&req, &plan)?;
@@ -827,6 +859,64 @@ mod tests {
             stats.get("memo_misses").and_then(Json::as_f64),
             Some(direct.memo_misses as f64)
         );
+    }
+
+    #[test]
+    fn analyze_want_answers_the_report_without_building_tables() {
+        let service = PlanService::new();
+        let reply = handle_line(
+            &service,
+            r#"{"net": "lenet5", "devices": 2, "want": "analyze",
+                "mem_limit": 16000000000}"#,
+        );
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        let analysis = v.get("analysis").unwrap();
+        assert_eq!(
+            analysis.get("reducibility").and_then(Json::as_str),
+            Some("fully-reducible")
+        );
+        let cert = analysis.get("certificate").unwrap();
+        // the exact residual size rides as a decimal string (u128 does
+        // not fit a JSON number) next to the always-numeric log2
+        let exact: u128 =
+            cert.get("residual_space").and_then(Json::as_str).unwrap().parse().unwrap();
+        assert!(exact >= 1);
+        assert!(cert.get("residual_space_log2").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(matches!(
+            analysis.get("memory").unwrap().get("infeasible"),
+            Some(Json::Null)
+        ));
+        // the whole probe is structural: nothing expensive was built
+        let s = service.stats();
+        assert_eq!((s.table_builds, s.searches, s.states_cached), (0, 0, 0));
+        // inline graphs analyze too
+        let reply = handle_line(
+            &service,
+            &format!(r#"{{"graph": {}, "devices": 2, "want": "analyze"}}"#, tiny_spec(64)),
+        );
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        assert_eq!(service.stats().table_builds, 0);
+    }
+
+    #[test]
+    fn analyze_want_field_rules() {
+        let service = PlanService::new();
+        for raw in [
+            r#"{"net": "lenet5", "devices": 2, "want": "analyze", "strategy": "data"}"#
+                .to_string(),
+            format!(
+                r#"{{"want": "analyze", "plan": {}}}"#,
+                service.plan(&PlanRequest::new(Network::LeNet5, 2).unwrap()).unwrap().to_json()
+            ),
+            r#"{"want": "analyze"}"#.to_string(),
+        ] {
+            let v = Json::parse(&handle_line(&service, &raw)).unwrap();
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{raw}");
+            let msg = v.get("error").and_then(Json::as_str).unwrap();
+            assert!(!msg.is_empty() && !msg.contains('\n'), "{msg:?}");
+        }
     }
 
     #[test]

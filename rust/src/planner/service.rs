@@ -62,9 +62,22 @@ use crate::plan::{ExecutionPlan, PlanCache, PlanKey};
 use crate::util::sync::{lock, SingleFlightLru};
 use crate::verify::{verify_plan, VerifyReport};
 
+use crate::analyze::{self, AnalysisReport};
+
 use super::backend::{Elimination, SearchBackend};
 use super::cluster::ClusterSpec;
 use super::{evaluate_plan, Evaluation, NetworkSpec, StrategyKind, PER_GPU_BATCH};
+
+/// The largest residual enumeration (log2 of complete assignments) a
+/// [`PlanService`] will attempt. The pre-planning certificate
+/// (`analyze`, DESIGN.md §11) predicts the final-enumeration size
+/// exactly; a request above this cap is rejected with
+/// [`OptError::SearchSpaceExceeded`] *before* any cost table is built,
+/// so a hostile or merely unlucky custom graph POSTed to `optcnn serve`
+/// cannot pin a worker thread. 2^32 leaves is minutes of
+/// `enumerate_final` — generous for legitimate graphs (every builtin's
+/// residual space is far smaller) while bounding the worst case.
+pub const MAX_RESIDUAL_SPACE_LOG2: f64 = 32.0;
 
 /// One plan query: which network (preset or custom graph), on what
 /// cluster, at what per-GPU batch, under which strategy — the unit of
@@ -416,9 +429,14 @@ impl PlanService {
         // `get_or_init` until it finishes.
         let was_set = cell.is_set();
         let (result, ran) = cell.get_or_init(|| -> Result<Arc<TableState>> {
+            let budget = req.mem_limit.map(MemBudget::new);
+            // Pre-planning static gate (DESIGN.md §11): certify the
+            // residual enumeration is within the service's cap and
+            // fast-fail unsatisfiable budgets — both *before* the
+            // table-build counter ticks or any table is constructed.
+            analyze::precheck(graph, devices.num_devices(), budget, MAX_RESIDUAL_SPACE_LOG2)?;
             self.table_builds.fetch_add(1, Ordering::Relaxed);
             let cm = CostModel::new(graph, devices);
-            let budget = req.mem_limit.map(MemBudget::new);
             let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
             let tables = CostTables::build_opts(&cm, devices.num_devices(), budget, &opts)?;
             let optimized = self.backend.search(&tables)?;
@@ -502,6 +520,19 @@ impl PlanService {
         let cm = CostModel::new(&graph, &devices);
         let plan = self.cached_plan(&cm, &strategy);
         Ok(evaluate_plan(&cm, &plan, &strategy, global_batch))
+    }
+
+    /// The pre-planning static analysis of a request (DESIGN.md §11):
+    /// reducibility class, exact search-cost certificate, memory
+    /// precheck (when the request carries a budget), and graph lints —
+    /// computed from structure alone, building no cost tables and never
+    /// touching the state memo. The enumeration cap is deliberately
+    /// *not* applied here: analysis is how a caller finds out whether a
+    /// graph would trip it.
+    pub fn analyze(&self, req: &PlanRequest) -> Result<AnalysisReport> {
+        let (graph, devices, _) = self.session(req)?;
+        let budget = req.mem_limit.map(MemBudget::new);
+        Ok(analyze::analyze(&graph, &devices, devices.num_devices(), budget))
     }
 
     /// The memoized layer-wise optimum (strategy, cost, search stats)
@@ -649,9 +680,22 @@ mod tests {
                 other => panic!("expected Infeasible, got {other:?}"),
             }
         }
-        // the failed build was forgotten both times, so it ran twice
-        assert_eq!(service.stats().table_builds, 2);
+        // the static precheck fast-fails before the build counter ticks
+        // (PR 4 built the tables twice to reach the same verdict)
+        assert_eq!(service.stats().table_builds, 0);
         assert_eq!(service.stats().states_cached, 0);
+    }
+
+    #[test]
+    fn analyze_builds_no_tables() {
+        let service = PlanService::new();
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap().mem_limit(u64::MAX);
+        let report = service.analyze(&req).unwrap();
+        assert_eq!(report.ndev, 2);
+        assert!(report.certificate.residual_space.is_some());
+        assert!(report.memory.unwrap().infeasible.is_none());
+        let s = service.stats();
+        assert_eq!((s.table_builds, s.searches, s.states_cached), (0, 0, 0));
     }
 
     #[test]

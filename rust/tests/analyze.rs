@@ -1,0 +1,364 @@
+//! End-to-end pins for the pre-planning static analysis (DESIGN.md §11):
+//!
+//! 1. random series-parallel graphs all classify `FullyReducible`, and
+//!    the search-cost certificate predicts the exhaustive DFS's
+//!    search-tree node count *exactly* (on prune-free tables built so
+//!    branch-and-bound can never cut a subtree);
+//! 2. all seven builtin networks are fully reducible at 2/4/8 devices,
+//!    with the certificate equal to the per-layer `enumerate_configs`
+//!    counting twin and its products composed without drift;
+//! 3. the memory precheck returns byte-for-byte the `Infeasible`
+//!    verdict `CostTables::build_budgeted` would have failed with,
+//!    across a budget sweep, without building a single table;
+//! 4. a hand-built irreducible multi-branch graph classifies
+//!    `Residual`, and its certified residual enumeration matches the
+//!    elimination backend's brute-forced final space exactly;
+//! 5. `optcnn serve` rejects a plan request whose certified residual
+//!    enumeration exceeds `MAX_RESIDUAL_SPACE_LOG2` with the typed
+//!    search-space error — while the `{"want":"analyze"}` probe still
+//!    answers for the same graph — with zero tables built either way;
+//! 6. `Planner::analyze` is observable as table-free through
+//!    `SessionStats`.
+
+use optcnn::analyze::{self, Reducibility};
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::DeviceGraph;
+use optcnn::error::OptError;
+use optcnn::graph::{CompGraph, GraphBuilder};
+use optcnn::memory::MemBudget;
+use optcnn::parallel::enumerate_configs;
+use optcnn::planner::backend::{Elimination, ExhaustiveDfs, SearchBackend};
+use optcnn::planner::serve::handle_line;
+use optcnn::planner::{Network, PlanService, Planner, MAX_RESIDUAL_SPACE_LOG2};
+use optcnn::prop::{forall, Gen};
+use optcnn::util::json::Json;
+
+fn p100(n: usize) -> DeviceGraph {
+    DeviceGraph::p100_cluster(n).unwrap()
+}
+
+/// A random series-parallel CNN: a chain of segments, each either a
+/// single conv or a two-branch diamond re-joined by add/concat. Every
+/// such graph must collapse under node+edge elimination (the diamond's
+/// branches are (1,1)-degree nodes; the parallel edges they leave merge).
+/// Odd extents (channels 3, spatial 5) keep per-layer config counts at
+/// 2-3 for ndev=2, so the exhaustive DFS below stays small.
+fn random_series_parallel(g: &mut Gen) -> CompGraph {
+    let mut b = GraphBuilder::new("sp");
+    let mut cur = b.input(2, 3, 5, 5).unwrap();
+    let segs = g.usize_in(1, 5);
+    for i in 0..segs {
+        if g.bool() {
+            let l = b.conv2d(&format!("dl{i}"), cur, 3, (3, 3), (1, 1), (1, 1)).unwrap();
+            let r = b.conv2d(&format!("dr{i}"), cur, 3, (1, 1), (1, 1), (0, 0)).unwrap();
+            cur = if g.bool() {
+                b.add(&format!("j{i}"), l, r).unwrap()
+            } else {
+                b.concat(&format!("j{i}"), &[l, r]).unwrap()
+            };
+        } else {
+            cur = b.conv2d(&format!("c{i}"), cur, 3, (3, 3), (1, 1), (1, 1)).unwrap();
+        }
+    }
+    let f = b.fully_connected("fc", cur, 10).unwrap();
+    b.softmax("sm", f).unwrap();
+    b.finish().unwrap()
+}
+
+/// Cost tables on which branch-and-bound can never prune, so the DFS
+/// walks its entire search tree and `visited` becomes exactly
+/// predictable from the certificate. Trick: give layer `l`'s config `c`
+/// the node cost `weight_l * (C_l - 1 - c)` with `weight_l` the product
+/// of all *later* layers' config counts (and no edge tables). A full
+/// assignment's total cost is then the rank of its complement in
+/// lexicographic enumeration order — strictly decreasing as the DFS
+/// enumerates — and any partial prefix's cost is strictly below the
+/// best-so-far leaf, so `acc >= best` never fires anywhere.
+fn no_prune_tables(g: &CompGraph, ndev: usize) -> CostTables {
+    let configs: Vec<_> = g.layers.iter().map(|l| enumerate_configs(l, ndev)).collect();
+    let n = configs.len();
+    let mut weight = vec![1u128; n];
+    for l in (0..n.saturating_sub(1)).rev() {
+        weight[l] = weight[l + 1] * configs[l + 1].len() as u128;
+    }
+    let node_cost = (0..n)
+        .map(|l| {
+            let c_l = configs[l].len();
+            (0..c_l).map(|c| (weight[l] * (c_l - 1 - c) as u128) as f64).collect()
+        })
+        .collect();
+    CostTables { configs, node_cost, edges: vec![] }
+}
+
+/// `stages` copies of the cross-linked double-diamond from the analyze
+/// unit tests, stacked: each stage's two branches feed BOTH of its two
+/// joins, so no node ever has degree (1,1) and no parallel edges arise —
+/// the elimination fixpoint keeps the whole ladder. All convs are 1x1
+/// so shapes stay put; concat widths (2ch, 3ch) reset to `ch` at the
+/// next stage's convs.
+fn irreducible_ladder(stages: usize, batch: usize, ch: usize, hw: usize) -> CompGraph {
+    let mut b = GraphBuilder::new("ladder");
+    let mut cur = b.input(batch, ch, hw, hw).unwrap();
+    for s in 0..stages {
+        let a = b.conv2d(&format!("a{s}"), cur, ch, (1, 1), (1, 1), (0, 0)).unwrap();
+        let c = b.conv2d(&format!("c{s}"), cur, ch, (1, 1), (1, 1), (0, 0)).unwrap();
+        let j1 = b.add(&format!("j1_{s}"), a, c).unwrap();
+        let j2 = b.concat(&format!("j2_{s}"), &[a, c]).unwrap();
+        let m1 = b.conv2d(&format!("m1_{s}"), j1, ch, (1, 1), (1, 1), (0, 0)).unwrap();
+        let m2 = b.conv2d(&format!("m2_{s}"), j2, ch, (1, 1), (1, 1), (0, 0)).unwrap();
+        let t1 = b.add(&format!("t1_{s}"), m1, m2).unwrap();
+        let t2 = b.concat(&format!("t2_{s}"), &[m1, m2]).unwrap();
+        cur = b.concat(&format!("z{s}"), &[t1, t2]).unwrap();
+    }
+    let f = b.fully_connected("fc", cur, 10).unwrap();
+    b.softmax("sm", f).unwrap();
+    b.finish().unwrap()
+}
+
+/// Product of certified per-layer counts over `ids`, `None` on overflow
+/// — the same composition the certificate claims to have performed.
+fn product_over(layer_configs: &[u64], mut ids: impl Iterator<Item = usize>) -> Option<u128> {
+    ids.try_fold(1u128, |acc, id| acc.checked_mul(layer_configs[id] as u128))
+}
+
+#[test]
+fn series_parallel_graphs_reduce_and_certificate_predicts_dfs_exactly() {
+    forall("analyze on random series-parallel nets", 8, |g| {
+        let net = random_series_parallel(g);
+        let ndev = 2;
+        let d = p100(ndev);
+        let r = analyze::analyze(&net, &d, ndev, None);
+
+        assert_eq!(
+            r.reducibility,
+            Reducibility::FullyReducible,
+            "series-parallel graph `{}` did not fully reduce: kernel {:?}",
+            net.name,
+            r.kernel
+        );
+        assert!(r.kernel.nodes.len() <= 2);
+
+        // counting twin: the certificate is exactly what enumeration
+        // would materialize, layer for layer
+        for (l, layer) in net.layers.iter().enumerate() {
+            assert_eq!(
+                r.certificate.layer_configs[l],
+                enumerate_configs(layer, ndev).len() as u64,
+                "layer {l} ({})",
+                layer.name
+            );
+        }
+
+        // certificate == DFS `enumerated`: on prune-free tables the DFS
+        // visits its whole search tree, whose node count is the sum of
+        // prefix products of the certified per-layer counts (the +1 is
+        // the root; the final prefix product is the leaf count).
+        let tables = no_prune_tables(&net, ndev);
+        let opt = ExhaustiveDfs { budget: None }.search(&tables).unwrap();
+        let mut expected_tree = 1u128;
+        let mut prefix = 1u128;
+        for &c in &r.certificate.layer_configs {
+            prefix *= c as u128;
+            expected_tree += prefix;
+        }
+        assert_eq!(
+            opt.stats.enumerated as u128, expected_tree,
+            "DFS search-tree nodes diverged from the certificate's prediction"
+        );
+        assert_eq!(opt.stats.space_size, r.certificate.full_space);
+        // the complement-rank construction makes the lexicographically
+        // last assignment cost exactly 0 — the optimum
+        assert_eq!(opt.cost, 0.0, "no-prune tables have a zero-cost optimum by construction");
+
+        // and on *real* tables, the elimination backend's final space is
+        // the certified residual enumeration
+        let cm = CostModel::new(&net, &d);
+        let real = CostTables::build(&cm, ndev);
+        let elim = Elimination.search(&real).unwrap();
+        assert_eq!(elim.stats.final_nodes, r.kernel.nodes.len());
+        assert_eq!(elim.stats.space_size, r.certificate.residual_space);
+    });
+}
+
+#[test]
+fn builtins_pin_reducibility_and_certificate_at_2_4_8_devices() {
+    for net in Network::ALL {
+        for ndev in [2usize, 4, 8] {
+            let g = net.graph(32 * ndev).unwrap();
+            let d = p100(ndev);
+            let r = analyze::analyze(&g, &d, ndev, None);
+
+            // the paper's K=2 claim holds for every benchmark network
+            assert_eq!(
+                r.reducibility,
+                Reducibility::FullyReducible,
+                "{net} x{ndev}: kernel {:?}",
+                r.kernel
+            );
+            assert!(r.kernel.nodes.len() <= 2, "{net} x{ndev}");
+            assert_eq!(r.errors(), 0, "{net} x{ndev}: {:?}", r.diagnostics);
+
+            // counting twin per layer, then product composition
+            for (l, layer) in g.layers.iter().enumerate() {
+                assert_eq!(
+                    r.certificate.layer_configs[l],
+                    enumerate_configs(layer, ndev).len() as u64,
+                    "{net} x{ndev} layer {l} ({})",
+                    layer.name
+                );
+            }
+            let full = product_over(&r.certificate.layer_configs, 0..g.layers.len());
+            assert_eq!(r.certificate.full_space, full, "{net} x{ndev}");
+            let resid =
+                product_over(&r.certificate.layer_configs, r.kernel.nodes.iter().copied());
+            assert_eq!(r.certificate.residual_space, resid, "{net} x{ndev}");
+
+            // log2 fields agree with the exact products when those fit
+            if let Some(s) = r.certificate.residual_space {
+                assert!(
+                    (r.certificate.residual_space_log2 - (s as f64).log2()).abs() < 1e-6,
+                    "{net} x{ndev}"
+                );
+            }
+            if let Some(s) = r.certificate.full_space {
+                assert!(
+                    (r.certificate.full_space_log2 - (s as f64).log2()).abs() < 1e-6,
+                    "{net} x{ndev}"
+                );
+            }
+            assert!(r.certificate.residual_space_log2 <= r.certificate.full_space_log2 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn memory_precheck_agrees_with_build_budgeted_verdict() {
+    let g = Network::AlexNet.graph(64).unwrap();
+    let d = p100(2);
+    let cm = CostModel::new(&g, &d);
+    for bytes in [1u64, 1_000_000, 100_000_000, 4_000_000_000, u64::MAX] {
+        let budget = MemBudget::new(bytes);
+        let r = analyze::analyze(&g, &d, 2, Some(budget));
+        let mem = r.memory.expect("a budget was supplied");
+        for lf in &mem.per_layer {
+            assert!(lf.feasible <= lf.configs, "budget {bytes}");
+        }
+
+        let verdict = CostTables::build_budgeted(&cm, 2, Some(budget))
+            .map(|_| ())
+            .map_err(|e| e.to_string());
+        match (&mem.infeasible, verdict) {
+            (None, Ok(())) => {}
+            (Some((layer, overshoot)), Err(msg)) => {
+                // byte-for-byte the same typed error
+                let expected =
+                    OptError::Infeasible { layer: layer.clone(), overshoot: *overshoot }
+                        .to_string();
+                assert_eq!(msg, expected, "budget {bytes}");
+            }
+            (precheck, verdict) => panic!(
+                "budget {bytes}: precheck said {precheck:?} but build_budgeted said {verdict:?}"
+            ),
+        }
+
+        // the standalone precheck entry point gives the same yes/no
+        let pre = analyze::precheck(&g, 2, Some(budget), f64::INFINITY);
+        assert_eq!(pre.is_ok(), mem.infeasible.is_none(), "budget {bytes}");
+    }
+}
+
+#[test]
+fn irreducible_graph_certificate_matches_brute_force_exactly() {
+    let g = irreducible_ladder(1, 2, 3, 5);
+    let ndev = 2;
+    let d = p100(ndev);
+    let r = analyze::analyze(&g, &d, ndev, None);
+
+    match r.reducibility {
+        Reducibility::Residual { nodes, edges } => {
+            assert!(nodes > 2, "kernel has {nodes} nodes");
+            assert!(edges > 0);
+            assert_eq!(nodes, r.kernel.nodes.len());
+            assert_eq!(edges, r.kernel.edges.len());
+        }
+        Reducibility::FullyReducible => panic!("cross-linked ladder cannot fully reduce"),
+    }
+
+    // brute-force the residual enumeration size independently: the
+    // product of materialized config-list lengths over surviving nodes
+    let brute: u128 = r
+        .kernel
+        .nodes
+        .iter()
+        .map(|&id| enumerate_configs(&g.layers[id], ndev).len() as u128)
+        .product();
+    assert_eq!(r.certificate.residual_space, Some(brute));
+    assert_eq!(
+        r.certificate.full_space,
+        product_over(&r.certificate.layer_configs, 0..g.layers.len())
+    );
+
+    // the elimination backend, run for real, brute-forces exactly the
+    // certified space — and every evaluated leaf is counted within it
+    let cm = CostModel::new(&g, &d);
+    let tables = CostTables::build(&cm, ndev);
+    let opt = Elimination.search(&tables).unwrap();
+    assert_eq!(opt.stats.final_nodes, r.kernel.nodes.len());
+    assert_eq!(opt.stats.space_size, Some(brute));
+    assert!(opt.stats.enumerated >= 1);
+    assert!(opt.stats.enumerated as u128 <= brute);
+}
+
+#[test]
+fn serve_rejects_over_cap_plan_requests_but_analyze_probe_still_answers() {
+    // two stages of the ladder at 4 devices certify ~2^70+ residual
+    // strategies — far past the service cap, far under u128
+    let g = irreducible_ladder(2, 4, 4, 8);
+    let ndev = 4;
+    let d = p100(ndev);
+    let r = analyze::analyze(&g, &d, ndev, None);
+    assert!(
+        r.certificate.residual_space_log2 > MAX_RESIDUAL_SPACE_LOG2,
+        "precondition: ladder must certify over the cap, got 2^{:.1}",
+        r.certificate.residual_space_log2
+    );
+
+    let service = PlanService::new();
+    let spec = g.to_spec().to_string();
+
+    // a plan request for the same graph dies at ingest, before any table
+    let reply = handle_line(&service, &format!(r#"{{"graph": {spec}, "devices": {ndev}}}"#));
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "reply: {reply}");
+    let err = v.get("error").and_then(Json::as_str).unwrap();
+    assert!(err.contains("search space too large"), "unexpected error: {err}");
+    assert!(err.contains("2^"), "error should name the certified size: {err}");
+    assert_eq!(service.stats().table_builds, 0, "rejection must not build tables");
+    assert_eq!(service.stats().searches, 0);
+
+    // the analyze probe is deliberately uncapped — it is how a client
+    // discovers the rejection ahead of time
+    let probe = format!(r#"{{"want": "analyze", "graph": {spec}, "devices": {ndev}}}"#);
+    let reply = handle_line(&service, &probe);
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "reply: {reply}");
+    let analysis = v.get("analysis").unwrap();
+    assert_eq!(analysis.get("reducibility").and_then(Json::as_str), Some("residual"));
+    let cert = analysis.get("certificate").unwrap();
+    let log2 = cert.get("residual_space_log2").and_then(Json::as_f64).unwrap();
+    assert!((log2 - r.certificate.residual_space_log2).abs() < 1e-9);
+    assert_eq!(service.stats().table_builds, 0, "analysis must not build tables");
+}
+
+#[test]
+fn planner_analyze_is_table_free() {
+    let p = Planner::builder(Network::Vgg16).devices(4).mem_limit(u64::MAX).build().unwrap();
+    let r = p.analyze();
+    assert_eq!(r.ndev, 4);
+    assert_eq!(r.reducibility, Reducibility::FullyReducible);
+    let mem = r.memory.expect("a session mem limit becomes the analysis budget");
+    assert!(mem.infeasible.is_none(), "an unlimited budget cannot be infeasible");
+    let stats = p.session_stats();
+    assert_eq!(stats.table_builds, 0, "analysis must build no cost tables");
+    assert_eq!(stats.searches, 0);
+}
