@@ -33,7 +33,7 @@ fn placement_ablation() {
         let mut times = Vec::new();
         for p in [Placement::Contiguous, Placement::RoundRobinNodes] {
             let cm = CostModel::new(&g, &d).with_placement(p);
-            let t = CostTables::build(&cm, ndev);
+            let t = CostTables::build(&cm, ndev).unwrap();
             let opt = optimizer::optimize(&t);
             times.push(opt.cost);
             row.push(fmt_secs(opt.cost));
@@ -63,7 +63,7 @@ fn sync_ablation() {
             for sync in [SyncModel::Sharded, SyncModel::Central] {
                 let cm = CostModel::new(&g, &d).with_sync(sync);
                 let cost = if strat == "layerwise" {
-                    optimizer::optimize(&CostTables::build(&cm, ndev)).cost
+                    optimizer::optimize(&CostTables::build(&cm, ndev).unwrap()).cost
                 } else {
                     cm.t_o(&strategies::data_parallel(&g, ndev))
                 };
@@ -98,7 +98,7 @@ fn bandwidth_ablation() {
         )
         .unwrap();
         let cm = CostModel::new(&g, &d);
-        let t = CostTables::build(&cm, ndev);
+        let t = CostTables::build(&cm, ndev).unwrap();
         let opt = optimizer::optimize(&t);
         let dp = cm.t_o(&strategies::data_parallel(&g, ndev));
         let fc6 = g.layers.iter().find(|l| l.name == "fc6").unwrap();

@@ -20,7 +20,8 @@ fn main() {
         let g = nets::by_name(net, 32 * ndev).unwrap();
         let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
-        let (_, dt) = time_once(|| CostTables::build(&cm, ndev));
+        let (r, dt) = time_once(|| CostTables::build(&cm, ndev));
+        r.unwrap();
         println!("cost_tables_build({net}, {ndev} dev)          {dt:>10.3}s");
     }
 
@@ -68,8 +69,46 @@ fn main() {
         let g = nets::by_name(net, 32 * ndev).unwrap();
         let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
-        let tables = CostTables::build(&cm, ndev);
+        let tables = CostTables::build(&cm, ndev).unwrap();
         bench(&format!("optimize({net}, {ndev} dev)"), || optimizer::optimize(&tables));
+    }
+
+    // Dominance-pruned search: the elimination DP over the full tables vs
+    // the tables with certified-dominated configurations removed
+    // (`--prune-dominated`; DESIGN.md §12). The optimum is byte-identical
+    // — asserted here — so the delta is pure search time. With
+    // `OPTCNN_BENCH_JSON` set, the measurements are also written as
+    // `BENCH_prune.json` next to the cold-plan document, and CI uploads
+    // both through the same `BENCH_*.json` artifact glob.
+    println!("\n== micro: dominance-pruned search ==");
+    let mut pruned_search: Vec<(String, f64)> = Vec::new();
+    for (net, ndev) in [("alexnet", 4usize), ("vgg16", 4), ("inception_v3", 4)] {
+        let g = nets::by_name(net, 32 * ndev).unwrap();
+        let d = DeviceGraph::p100_cluster(ndev).unwrap();
+        let cm = CostModel::new(&g, &d);
+        let tables = CostTables::build(&cm, ndev).unwrap();
+        let (pruned, removed) = optcnn::audit::prune_tables(&cm, &tables);
+        let full = bench(&format!("optimize_full({net}, {ndev} dev)"), || {
+            optimizer::optimize(&tables)
+        });
+        let slim = bench(&format!("optimize_pruned({net}, {ndev} dev)"), || {
+            optimizer::optimize(&pruned)
+        });
+        assert_eq!(
+            optimizer::optimize(&tables).cost.to_bits(),
+            optimizer::optimize(&pruned).cost.to_bits(),
+            "pruning must not change the optimum"
+        );
+        println!("  {net}: {removed} dominated configuration(s) removed");
+        pruned_search.push((format!("{net}/full"), full.median));
+        pruned_search.push((format!("{net}/pruned"), slim.median));
+    }
+    if let Ok(path) = std::env::var("OPTCNN_BENCH_JSON") {
+        let doc =
+            bench_json("pruned_search", &pruned_search).expect("pruned_search measured nothing");
+        let prune_path = std::path::Path::new(&path).with_file_name("BENCH_prune.json");
+        std::fs::write(&prune_path, doc.to_string()).expect("writing bench JSON");
+        println!("wrote machine-readable results to {}", prune_path.display());
     }
 
     println!("\n== micro: simulator ==");

@@ -27,7 +27,7 @@ fn main() {
         let g = nets::by_name(net, 32 * ndev).unwrap();
         let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
-        let tables = CostTables::build(&cm, ndev);
+        let tables = CostTables::build(&cm, ndev).unwrap();
 
         let (opt, t_dp) = time_once(|| optimizer::optimize(&tables));
         let (brute, t_dfs) = time_once(|| dfs::dfs_optimal(&tables, Some(DFS_BUDGET)));

@@ -681,7 +681,7 @@ mod tests {
             let g = nets::by_name(name, 64).unwrap();
             let d = p100(2);
             let kernel = replay_eliminations(&g);
-            let t = CostTables::build(&CostModel::new(&g, &d), 2);
+            let t = CostTables::build(&CostModel::new(&g, &d), 2).unwrap();
             let opt = crate::optimizer::optimize(&t);
             assert_eq!(kernel.nodes.len(), opt.stats.final_nodes, "{name}");
             assert_eq!(kernel.node_eliminations, opt.stats.node_eliminations, "{name}");

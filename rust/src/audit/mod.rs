@@ -1,0 +1,938 @@
+//! Static soundness auditing of cost tables + certified dominance
+//! pruning + differential backend cross-checks (DESIGN.md §12).
+//!
+//! After PR 7 (`verify`: plan-level invariants) and PR 8 (`analyze`:
+//! pre-table certificates) the cost tables themselves — and the search
+//! backends that consume them — were the one unaudited stage of the
+//! pipeline. This module closes that gap with three prongs, none of
+//! which execute anything:
+//!
+//! 1. **Table invariants** ([`audit_tables`]) — the typed
+//!    [`TableCheck`](crate::error::TableCheck) list: every `t_C`/`t_X`/
+//!    `t_S` entry finite and non-negative; per-layer config lists
+//!    canonical (sorted, deduplicated, degrees dividing extents,
+//!    products ≤ ndev); edge tables dimensioned exactly
+//!    producer-configs × consumer-configs in graph edge order; cost
+//!    entries above closed-form *physical lower bounds* (an edge entry
+//!    can never beat its remote bytes over the fastest link, a node
+//!    entry never beats its round-trip shard-sync bytes), derived from
+//!    the same `input_region`/`param_sharding` geometry the cost model
+//!    prices — so a cost-model regression that silently *underprices*
+//!    communication fails loudly here; and budget-mask coherence (a
+//!    budgeted table is bitwise the surviving-index subset of the
+//!    unbudgeted build, re-derived through `build_opts`). Any failure is
+//!    a typed [`OptError::InvalidTables`] naming its check.
+//!
+//! 2. **Dominance certificates** — for each layer, the exact set of
+//!    configurations that can never appear in an optimal strategy,
+//!    judged across *all* contexts: config `b` is dominated by `a` when
+//!    `a`'s memory peak does not exceed `b`'s and
+//!    `Δnode + Σ_incident-edges max_ctx Δedge < 0` (or `≤ 0` with
+//!    `a < b`, matching both backends' first-minimum tie-breaking). For
+//!    any fixed assignment of the neighbors, swapping `b` for `a`
+//!    changes the total by at most that difference bound, so removing
+//!    every dominated config preserves the optimal cost *and* the exact
+//!    strategy both backends return — [`prune_tables`] applies it as an
+//!    opt-in (`--prune-dominated`) table transformation upstream of
+//!    either backend. This is the static analogue of PaSE's
+//!    configuration-dominance observation.
+//!
+//! 3. **Differential backend certification** ([`cross_check`]) — run
+//!    Algorithm 1 over the full tables and the exhaustive DFS over the
+//!    elimination-reduced residual kernel
+//!    ([`optimizer::reduce`](crate::optimizer::reduce)), which is small
+//!    where the full space is astronomically large, and demand they
+//!    agree on cost and on every kernel-node assignment. Disagreement is
+//!    a typed [`OptError::BackendMismatch`] naming the first divergent
+//!    layer.
+//!
+//! Wired at every surface: the `optcnn audit` subcommand, the
+//! `{"want":"audit"}` wire probe, `Planner::audit()`, and
+//! `--prune-dominated` on optimize/plan/sweep/serve.
+//!
+//! The auditor always runs over **unpruned** tables: a dominance-pruned
+//! table legitimately fails the budget-mask subset re-derivation (its
+//! config lists are intentionally not the budget-masked enumeration).
+
+#![warn(missing_docs)]
+// The auditor runs inside long-lived services over wire-supplied
+// graphs: every failure must be a typed `OptError`, never a panic.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::time::Duration;
+
+use crate::cost::{BuildOptions, CostModel, CostTables};
+use crate::error::{OptError, Result, TableCheck};
+use crate::memory::layer_peak_bytes;
+use crate::optimizer::{self, dfs};
+use crate::parallel::{enumerate_configs, input_region, output_tiles, param_sharding};
+use crate::plan::overlap::{flatten, overlap_elems, FlatRegion};
+
+/// Relative slack for the lower-bound comparisons: the priced cost sums
+/// per-chunk rounded divisions where the bound divides summed bytes
+/// once, so honest tables can undershoot the real-arithmetic bound by a
+/// few ulps. Mutations that matter (a mispriced formula) miss by orders
+/// of magnitude, not 1e-9.
+const LOWER_BOUND_SLACK: f64 = 1e-9;
+
+/// One passed table check: the invariant plus a short summary of what
+/// was proven (counts, totals), mirroring `verify::CheckReport`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TableCheckReport {
+    /// The invariant that held.
+    pub check: TableCheck,
+    /// Human-readable statement of what was proven.
+    pub summary: String,
+}
+
+/// Per-layer dominance certificate: which config indices can never
+/// appear in an optimal strategy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerDominance {
+    /// Layer id.
+    pub layer: usize,
+    /// Layer name (for reports).
+    pub name: String,
+    /// Config count before pruning.
+    pub configs: usize,
+    /// Dominated config indices, ascending.
+    pub dominated: Vec<usize>,
+}
+
+/// Outcome of one differential backend run (see [`cross_check`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrossCheckReport {
+    /// Residual kernel size (nodes the exhaustive side enumerated over).
+    pub kernel_nodes: usize,
+    /// Agreed optimal step cost, seconds.
+    pub cost: f64,
+    /// Search-tree nodes the exhaustive side visited.
+    pub visited: u64,
+    /// Whether the exhaustive side ran to completion. `false` means the
+    /// DFS budget fired first: nothing was *certified* (reported as a
+    /// warning, escalated by `--deny-warnings`).
+    pub complete: bool,
+}
+
+/// Everything one audit proved: the passed invariant checks in order,
+/// the per-layer dominance certificates, and (when the caller ran it)
+/// the backend cross-check.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    /// One entry per [`TableCheck`], in the order they ran.
+    pub checks: Vec<TableCheckReport>,
+    /// Per-layer dominance certificates (every layer, even clean ones).
+    pub dominance: Vec<LayerDominance>,
+    /// Total dominated configs across all layers.
+    pub dominated_total: usize,
+    /// Total configs across all layers.
+    pub configs_total: usize,
+    /// Non-fatal findings (e.g. an incomplete cross-check).
+    pub warnings: Vec<String>,
+    /// Differential backend certification, when run (see
+    /// [`cross_check`]; `audit_tables` itself leaves this `None`).
+    pub cross: Option<CrossCheckReport>,
+}
+
+impl AuditReport {
+    /// Dominated-config fraction, for reports.
+    pub fn dominated_fraction(&self) -> f64 {
+        if self.configs_total == 0 {
+            0.0
+        } else {
+            self.dominated_total as f64 / self.configs_total as f64
+        }
+    }
+
+    /// Machine-readable form (the `--json` / wire-probe payload).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let checks = Json::Arr(
+            self.checks
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("check", Json::Str(c.check.name().to_string())),
+                        ("ok", Json::Bool(true)),
+                        ("summary", Json::Str(c.summary.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        let dominance = Json::Arr(
+            self.dominance
+                .iter()
+                .map(|d| {
+                    Json::obj(vec![
+                        ("layer", Json::Num(d.layer as f64)),
+                        ("name", Json::Str(d.name.clone())),
+                        ("configs", Json::Num(d.configs as f64)),
+                        (
+                            "dominated",
+                            Json::Arr(d.dominated.iter().map(|&i| Json::Num(i as f64)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let cross = match &self.cross {
+            None => Json::Null,
+            Some(c) => Json::obj(vec![
+                ("kernel_nodes", Json::Num(c.kernel_nodes as f64)),
+                ("cost_s", Json::Num(c.cost)),
+                ("visited", Json::Num(c.visited as f64)),
+                ("complete", Json::Bool(c.complete)),
+            ]),
+        };
+        Json::obj(vec![
+            ("checks", checks),
+            ("dominance", dominance),
+            ("dominated_total", Json::Num(self.dominated_total as f64)),
+            ("configs_total", Json::Num(self.configs_total as f64)),
+            (
+                "warnings",
+                Json::Arr(self.warnings.iter().map(|w| Json::Str(w.clone())).collect()),
+            ),
+            ("cross_check", cross),
+        ])
+    }
+}
+
+impl std::fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for c in &self.checks {
+            writeln!(f, "ok {:<18} {}", c.check.name(), c.summary)?;
+        }
+        let layers_hit = self.dominance.iter().filter(|d| !d.dominated.is_empty()).count();
+        writeln!(
+            f,
+            "dominance          {} of {} configs dominated across {} layers ({:.1}%)",
+            self.dominated_total,
+            self.configs_total,
+            layers_hit,
+            100.0 * self.dominated_fraction()
+        )?;
+        if let Some(c) = &self.cross {
+            if c.complete {
+                writeln!(
+                    f,
+                    "cross-check        backends agree over the {}-node kernel \
+                     (cost {}, {} nodes visited)",
+                    c.kernel_nodes,
+                    crate::util::fmt_secs(c.cost),
+                    c.visited
+                )?;
+            }
+        }
+        for w in &self.warnings {
+            writeln!(f, "warning: {w}")?;
+        }
+        Ok(())
+    }
+}
+
+fn fail(check: TableCheck, detail: String) -> OptError {
+    OptError::InvalidTables { check, detail }
+}
+
+/// Statically audit `t` against the model that (supposedly) built it:
+/// prove every [`TableCheck`](crate::error::TableCheck) invariant in
+/// order, then compute the per-layer dominance certificates — or return
+/// [`OptError::InvalidTables`] naming the first violated check.
+/// Executes nothing; the most expensive step re-derives transfer byte
+/// counts through the same overlap kernel the builder priced with.
+///
+/// Run this over **unpruned** tables; see the module docs.
+pub fn audit_tables(cm: &CostModel<'_>, t: &CostTables) -> Result<AuditReport> {
+    let mut checks = Vec::with_capacity(TableCheck::ALL.len());
+    checks.push(TableCheckReport {
+        check: TableCheck::FiniteCosts,
+        summary: check_finite_costs(t)?,
+    });
+    checks.push(TableCheckReport {
+        check: TableCheck::ConfigCanonical,
+        summary: check_config_canonical(cm, t)?,
+    });
+    checks.push(TableCheckReport { check: TableCheck::EdgeDims, summary: check_edge_dims(cm, t)? });
+    checks.push(TableCheckReport {
+        check: TableCheck::LowerBounds,
+        summary: check_lower_bounds(cm, t)?,
+    });
+    checks.push(TableCheckReport {
+        check: TableCheck::BudgetMask,
+        summary: check_budget_mask(cm, t)?,
+    });
+
+    let dominance = dominance_certificates(cm, t);
+    let dominated_total = dominance.iter().map(|d| d.dominated.len()).sum();
+    let configs_total = t.configs.iter().map(|c| c.len()).sum();
+    Ok(AuditReport {
+        checks,
+        dominance,
+        dominated_total,
+        configs_total,
+        warnings: Vec::new(),
+        cross: None,
+    })
+}
+
+/// Check 1: every table entry is finite and non-negative — times can be
+/// zero (an `Input` layer, a co-located transfer) but never negative,
+/// NaN, or infinite.
+fn check_finite_costs(t: &CostTables) -> Result<String> {
+    const CHECK: TableCheck = TableCheck::FiniteCosts;
+    let mut entries = 0usize;
+    for (l, row) in t.node_cost.iter().enumerate() {
+        for (c, &v) in row.iter().enumerate() {
+            if !v.is_finite() || v < 0.0 {
+                return Err(fail(
+                    CHECK,
+                    format!("layer {l} config {c}: node cost {v} is not finite and non-negative"),
+                ));
+            }
+        }
+        entries += row.len();
+    }
+    for (j, e) in t.edges.iter().enumerate() {
+        for (k, &v) in e.cost.iter().enumerate() {
+            if !v.is_finite() || v < 0.0 {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "edge {j} ({} -> {}) entry {k}: transfer cost {v} is not finite \
+                         and non-negative",
+                        e.src, e.dst
+                    ),
+                ));
+            }
+        }
+        entries += e.cost.len();
+    }
+    Ok(format!("{entries} cost entries finite and non-negative"))
+}
+
+/// Check 2: per-layer config lists are canonical — each config legal
+/// for its layer (degrees divide extents, product ≤ ndev) and the list
+/// a strictly-increasing subsequence of the canonical enumeration
+/// (sorted, deduplicated); for unbudgeted tables, the *whole*
+/// enumeration.
+fn check_config_canonical(cm: &CostModel<'_>, t: &CostTables) -> Result<String> {
+    const CHECK: TableCheck = TableCheck::ConfigCanonical;
+    let g = cm.graph;
+    if t.configs.len() != g.num_layers() {
+        return Err(fail(
+            CHECK,
+            format!("table covers {} layers, graph has {}", t.configs.len(), g.num_layers()),
+        ));
+    }
+    if t.ndev == 0 || t.ndev != cm.devices.num_devices() {
+        return Err(fail(
+            CHECK,
+            format!("table built for {} devices, cluster has {}", t.ndev, cm.devices.num_devices()),
+        ));
+    }
+    let mut total = 0usize;
+    for (l, gl) in g.layers.iter().enumerate() {
+        let list = &t.configs[l];
+        if list.is_empty() {
+            return Err(fail(CHECK, format!("layer {l} (`{}`): empty config list", gl.name)));
+        }
+        for (i, cfg) in list.iter().enumerate() {
+            if cfg.total() > t.ndev {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "layer {l} (`{}`) config {i}: degree product {} exceeds {} devices",
+                        gl.name,
+                        cfg.total(),
+                        t.ndev
+                    ),
+                ));
+            }
+            for d in 0..4 {
+                let extent = gl.out_shape.get(d).copied().unwrap_or(1);
+                if cfg.deg[d] == 0 || extent % cfg.deg[d] != 0 {
+                    return Err(fail(
+                        CHECK,
+                        format!(
+                            "layer {l} (`{}`) config {i}: degree {} does not divide \
+                             extent {extent} in dimension {d}",
+                            gl.name, cfg.deg[d]
+                        ),
+                    ));
+                }
+            }
+        }
+        // Sorted/deduped == a strictly-increasing walk of the canonical
+        // enumeration (which also proves each config is *allowed* for
+        // this operator, not merely divisibility-legal).
+        let canon = enumerate_configs(gl, t.ndev);
+        let mut cursor = 0usize;
+        for (i, cfg) in list.iter().enumerate() {
+            match canon[cursor..].iter().position(|c| c == cfg) {
+                Some(off) => cursor += off + 1,
+                None => {
+                    let detail = if canon.contains(cfg) {
+                        format!(
+                            "layer {l} (`{}`) config {i} ({}) is out of canonical order \
+                             or duplicated",
+                            gl.name,
+                            cfg.label()
+                        )
+                    } else {
+                        format!(
+                            "layer {l} (`{}`) config {i} ({}) is not in the canonical \
+                             enumeration for this operator",
+                            gl.name,
+                            cfg.label()
+                        )
+                    };
+                    return Err(fail(CHECK, detail));
+                }
+            }
+        }
+        if t.budget.is_none() && list.len() != canon.len() {
+            return Err(fail(
+                CHECK,
+                format!(
+                    "layer {l} (`{}`): unbudgeted table keeps {} of {} canonical configs",
+                    gl.name,
+                    list.len(),
+                    canon.len()
+                ),
+            ));
+        }
+        total += list.len();
+    }
+    Ok(format!("{total} configs canonical across {} layers", g.num_layers()))
+}
+
+/// Check 3: the structural frame — node-cost rows sized to their config
+/// lists, one edge table per graph edge in graph edge order, each
+/// dimensioned exactly producer-configs × consumer-configs.
+fn check_edge_dims(cm: &CostModel<'_>, t: &CostTables) -> Result<String> {
+    const CHECK: TableCheck = TableCheck::EdgeDims;
+    let g = cm.graph;
+    if t.node_cost.len() != t.configs.len() {
+        return Err(fail(
+            CHECK,
+            format!("{} node-cost rows for {} config lists", t.node_cost.len(), t.configs.len()),
+        ));
+    }
+    for (l, row) in t.node_cost.iter().enumerate() {
+        if row.len() != t.configs[l].len() {
+            return Err(fail(
+                CHECK,
+                format!(
+                    "layer {l}: node-cost row has {} entries for {} configs",
+                    row.len(),
+                    t.configs[l].len()
+                ),
+            ));
+        }
+    }
+    if t.edges.len() != g.num_edges() {
+        return Err(fail(
+            CHECK,
+            format!("table has {} edge tables, graph has {} edges", t.edges.len(), g.num_edges()),
+        ));
+    }
+    let n = t.configs.len();
+    for (j, (e, &(s, d))) in t.edges.iter().zip(g.edges.iter()).enumerate() {
+        if (e.src, e.dst) != (s, d) {
+            return Err(fail(
+                CHECK,
+                format!("edge {j} is ({}, {}), graph edge order expects ({s}, {d})", e.src, e.dst),
+            ));
+        }
+        if e.src >= n || e.dst >= n || e.src >= e.dst {
+            return Err(fail(
+                CHECK,
+                format!("edge {j} ({}, {}) is not topological over {n} layers", e.src, e.dst),
+            ));
+        }
+        let want = t.configs[e.src].len() * t.configs[e.dst].len();
+        if e.cost.len() != want {
+            return Err(fail(
+                CHECK,
+                format!(
+                    "edge {j} ({} -> {}): {} entries, producer-configs x consumer-configs \
+                     requires {} x {} = {want}",
+                    e.src,
+                    e.dst,
+                    e.cost.len(),
+                    t.configs[e.src].len(),
+                    t.configs[e.dst].len()
+                ),
+            ));
+        }
+    }
+    Ok(format!("{} edge tables dimensioned producer x consumer", t.edges.len()))
+}
+
+/// Fastest point-to-point link bandwidth in the cluster (off-diagonal
+/// max); `None` for a single-device cluster, where no transfer can be
+/// remote.
+fn fastest_link(cm: &CostModel<'_>) -> Option<f64> {
+    let n = cm.devices.num_devices();
+    let mut best: Option<f64> = None;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let bw = cm.devices.bandwidth(i, j);
+                best = Some(best.map_or(bw, |b: f64| b.max(bw)));
+            }
+        }
+    }
+    best
+}
+
+/// Check 4: closed-form physical lower bounds. An edge entry can never
+/// undercut its worst destination's inbound remote bytes over the
+/// *fastest* link in the cluster; a node entry can never undercut the
+/// round-trip gradient/parameter exchange its replication implies
+/// (`2 · shard_bytes · (R-1)/R` over the fastest path). Both bounds
+/// re-derive their geometry (`output_tiles`, `input_region`,
+/// `param_sharding`, tile placement) independently of the priced
+/// values, so a cost model that silently underprices communication
+/// fails here with the offending entry named.
+fn check_lower_bounds(cm: &CostModel<'_>, t: &CostTables) -> Result<String> {
+    const CHECK: TableCheck = TableCheck::LowerBounds;
+    let g = cm.graph;
+    let Some(bw_max) = fastest_link(cm) else {
+        return Ok("single-device cluster: every transfer is local".to_string());
+    };
+    // t_S's effective bandwidth is a min-fold seeded with the host
+    // bandwidth, so it can never exceed min(host_bw, fastest link).
+    let sync_bw_cap = cm.devices.host_bw.min(bw_max);
+
+    let mut nodes_checked = 0usize;
+    for (l, gl) in g.layers.iter().enumerate() {
+        for (c, cfg) in t.configs[l].iter().enumerate() {
+            if !gl.has_params() {
+                continue;
+            }
+            let sh = param_sharding(gl, cfg);
+            if sh.replicas <= 1 {
+                continue;
+            }
+            let r = sh.replicas as f64;
+            let bound = 2.0 * sh.shard_bytes * (r - 1.0) / r / sync_bw_cap;
+            let got = t.node_cost[l][c];
+            if got < bound * (1.0 - LOWER_BOUND_SLACK) {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "layer {l} (`{}`) config {c} ({}): node cost {got} beats the \
+                         sync round-trip lower bound {bound} ({} replicas of a \
+                         {}-byte shard over the fastest path)",
+                        gl.name,
+                        cfg.label(),
+                        sh.replicas,
+                        sh.shard_bytes
+                    ),
+                ));
+            }
+            nodes_checked += 1;
+        }
+    }
+
+    let dev_of: Vec<usize> = (0..t.ndev).map(|i| cm.dev_of(i)).collect();
+    let mut entries_checked = 0usize;
+    for e in &t.edges {
+        let (ls, ld) = (g.layer(e.src), g.layer(e.dst));
+        let in_idx = cm.edge_in_idx(e.src, e.dst);
+        let cd_len = t.configs[e.dst].len();
+        // Same flattened-region overlap kernel the builder priced with,
+        // counting bytes instead of seconds.
+        let src_flat: Vec<Vec<FlatRegion>> = t.configs[e.src]
+            .iter()
+            .map(|c| output_tiles(&ls.out_shape, c).iter().map(flatten).collect())
+            .collect();
+        for (cj, cfg_d) in t.configs[e.dst].iter().enumerate() {
+            let needs: Vec<Option<FlatRegion>> = output_tiles(&ld.out_shape, cfg_d)
+                .iter()
+                .map(|dt| input_region(ld, in_idx, dt).map(|r| flatten(&r)))
+                .collect();
+            for (ci, src_tiles) in src_flat.iter().enumerate() {
+                let mut worst_bytes = 0.0f64;
+                for (m, need) in needs.iter().enumerate() {
+                    let Some(need) = need else { continue };
+                    let dst_dev = dev_of[m];
+                    let mut inbound = 0.0;
+                    for (k, stile) in src_tiles.iter().enumerate() {
+                        if dev_of[k] == dst_dev {
+                            continue;
+                        }
+                        inbound += overlap_elems(need, stile) as f64 * 4.0;
+                    }
+                    worst_bytes = worst_bytes.max(inbound);
+                }
+                let bound = worst_bytes / bw_max;
+                let got = e.at(ci, cj, cd_len);
+                if got < bound * (1.0 - LOWER_BOUND_SLACK) {
+                    return Err(fail(
+                        CHECK,
+                        format!(
+                            "edge ({} -> {}) entry ({ci}, {cj}): transfer cost {got} beats \
+                             the physical lower bound {bound} ({worst_bytes} remote bytes \
+                             over the fastest link)",
+                            e.src, e.dst
+                        ),
+                    ));
+                }
+                entries_checked += 1;
+            }
+        }
+    }
+    Ok(format!(
+        "{entries_checked} transfer entries and {nodes_checked} sync entries above their \
+         physical lower bounds"
+    ))
+}
+
+/// Check 5: budget-mask coherence. A budgeted table must be *bitwise*
+/// the surviving-index subset of the unbudgeted build: its config list
+/// exactly the admitted subset of the canonical enumeration, its cost
+/// rows and edge entries the corresponding entries of a fresh
+/// unbudgeted `build_opts` build. Unbudgeted tables have no mask —
+/// the check passes vacuously.
+fn check_budget_mask(cm: &CostModel<'_>, t: &CostTables) -> Result<String> {
+    const CHECK: TableCheck = TableCheck::BudgetMask;
+    let g = cm.graph;
+    let Some(budget) = t.budget else {
+        return Ok("unbudgeted table: nothing masked".to_string());
+    };
+    let full = CostTables::build_opts(cm, t.ndev, None, &BuildOptions::default())?;
+    // Surviving indices per layer, re-derived from the budget.
+    let mut kept: Vec<Vec<usize>> = Vec::with_capacity(g.num_layers());
+    for (l, gl) in g.layers.iter().enumerate() {
+        let keep: Vec<usize> = full.configs[l]
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| budget.admits(layer_peak_bytes(gl, c)))
+            .map(|(i, _)| i)
+            .collect();
+        let want: Vec<_> = keep.iter().map(|&i| full.configs[l][i]).collect();
+        if t.configs[l] != want {
+            return Err(fail(
+                CHECK,
+                format!(
+                    "layer {l} (`{}`): stale budget mask — table keeps {} configs, the \
+                     budget admits {}",
+                    gl.name,
+                    t.configs[l].len(),
+                    want.len()
+                ),
+            ));
+        }
+        for (i, &oi) in keep.iter().enumerate() {
+            if t.node_cost[l][i].to_bits() != full.node_cost[l][oi].to_bits() {
+                return Err(fail(
+                    CHECK,
+                    format!(
+                        "layer {l} (`{}`) config {i}: node cost {} is not bitwise the \
+                         unbudgeted build's {}",
+                        gl.name, t.node_cost[l][i], full.node_cost[l][oi]
+                    ),
+                ));
+            }
+        }
+        kept.push(keep);
+    }
+    for (j, (e, fe)) in t.edges.iter().zip(full.edges.iter()).enumerate() {
+        let (ks, kd) = (&kept[e.src], &kept[e.dst]);
+        let full_cd = full.configs[e.dst].len();
+        for (ci, &oi) in ks.iter().enumerate() {
+            for (cj, &oj) in kd.iter().enumerate() {
+                let got = e.at(ci, cj, kd.len());
+                let want = fe.at(oi, oj, full_cd);
+                if got.to_bits() != want.to_bits() {
+                    return Err(fail(
+                        CHECK,
+                        format!(
+                            "edge {j} ({} -> {}) entry ({ci}, {cj}): transfer cost {got} \
+                             is not bitwise the unbudgeted build's {want}",
+                            e.src, e.dst
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(format!(
+        "budgeted table is bitwise the surviving-index subset of the unbudgeted build \
+         ({} per device)",
+        crate::util::fmt_bytes(budget.bytes_per_dev)
+    ))
+}
+
+/// `a` dominates `b` for layer `l` iff `a` is never worse in any
+/// context: its memory peak does not exceed `b`'s, and the worst-case
+/// total-cost difference `Δnode + Σ_incident-edges max_ctx Δedge` is
+/// negative — or zero with `a < b`, in which case both backends'
+/// first-minimum tie-breaking already prefers `a`.
+fn dominates(
+    a: usize,
+    b: usize,
+    peaks: &[f64],
+    node_row: &[f64],
+    out_edges: &[(&crate::cost::EdgeTable, usize)],
+    in_edges: &[(&crate::cost::EdgeTable, usize)],
+) -> bool {
+    if peaks[a] > peaks[b] {
+        return false;
+    }
+    let mut d = node_row[a] - node_row[b];
+    for &(e, cd_len) in out_edges {
+        let mut worst = f64::NEG_INFINITY;
+        for cj in 0..cd_len {
+            worst = worst.max(e.at(a, cj, cd_len) - e.at(b, cj, cd_len));
+        }
+        d += worst;
+    }
+    for &(e, cd_len) in in_edges {
+        let cs_len = e.cost.len() / cd_len;
+        let mut worst = f64::NEG_INFINITY;
+        for ci in 0..cs_len {
+            worst = worst.max(e.at(ci, a, cd_len) - e.at(ci, b, cd_len));
+        }
+        d += worst;
+    }
+    d < 0.0 || (d <= 0.0 && a < b)
+}
+
+/// The per-layer dominance certificates over audited tables: for each
+/// layer, the exact set of config indices some other config dominates
+/// across all contexts. Sound to remove all of them at once — the
+/// lexicographic tie rule makes the relation acyclic, so every
+/// dominated config has a *kept* dominator.
+pub fn dominance_certificates(cm: &CostModel<'_>, t: &CostTables) -> Vec<LayerDominance> {
+    let g = cm.graph;
+    let mut out = Vec::with_capacity(g.num_layers());
+    for (l, gl) in g.layers.iter().enumerate() {
+        let m = t.configs[l].len();
+        let peaks: Vec<f64> = t.configs[l].iter().map(|c| layer_peak_bytes(gl, c)).collect();
+        let out_edges: Vec<(&crate::cost::EdgeTable, usize)> = t
+            .edges
+            .iter()
+            .filter(|e| e.src == l)
+            .map(|e| (e, t.configs[e.dst].len()))
+            .collect();
+        let in_edges: Vec<(&crate::cost::EdgeTable, usize)> = t
+            .edges
+            .iter()
+            .filter(|e| e.dst == l)
+            .map(|e| (e, m))
+            .collect();
+        let mut dominated = Vec::new();
+        for b in 0..m {
+            if (0..m).any(|a| {
+                a != b && dominates(a, b, &peaks, &t.node_cost[l], &out_edges, &in_edges)
+            }) {
+                dominated.push(b);
+            }
+        }
+        out.push(LayerDominance { layer: l, name: gl.name.clone(), configs: m, dominated });
+    }
+    out
+}
+
+/// Remove every dominated config from `t` (see
+/// [`dominance_certificates`]), returning the pruned tables and the
+/// number of configs removed. Exactness: both backends return the
+/// byte-identical optimal strategy over the pruned tables — the
+/// dominated configs can never appear in a first-minimum optimum.
+///
+/// The pruned tables are a *search input*, not an audit subject: their
+/// config lists are intentionally not the budget-masked enumeration,
+/// so they would fail [`audit_tables`]' canonical/mask re-derivation.
+pub fn prune_tables(cm: &CostModel<'_>, t: &CostTables) -> (CostTables, usize) {
+    let certs = dominance_certificates(cm, t);
+    let mut removed = 0usize;
+    let mut keep: Vec<Vec<usize>> = Vec::with_capacity(t.configs.len());
+    for cert in &certs {
+        let m = t.configs[cert.layer].len();
+        let mut is_dom = vec![false; m];
+        for &b in &cert.dominated {
+            is_dom[b] = true;
+        }
+        let kept: Vec<usize> = (0..m).filter(|&i| !is_dom[i]).collect();
+        // The relation is irreflexive-by-construction and acyclic, so at
+        // least one config survives; guard anyway so a future criterion
+        // change can never produce an unsearchable table.
+        if kept.is_empty() {
+            keep.push((0..m).collect());
+        } else {
+            removed += m - kept.len();
+            keep.push(kept);
+        }
+    }
+    let configs = keep
+        .iter()
+        .enumerate()
+        .map(|(l, ks)| ks.iter().map(|&i| t.configs[l][i]).collect())
+        .collect();
+    let node_cost = keep
+        .iter()
+        .enumerate()
+        .map(|(l, ks)| ks.iter().map(|&i| t.node_cost[l][i]).collect())
+        .collect();
+    let edges = t
+        .edges
+        .iter()
+        .map(|e| {
+            let (ks, kd) = (&keep[e.src], &keep[e.dst]);
+            let cd_len = t.configs[e.dst].len();
+            let mut cost = Vec::with_capacity(ks.len() * kd.len());
+            for &ci in ks {
+                for &cj in kd {
+                    cost.push(e.at(ci, cj, cd_len));
+                }
+            }
+            crate::cost::EdgeTable { src: e.src, dst: e.dst, cost }
+        })
+        .collect();
+    (CostTables { configs, node_cost, edges, ndev: t.ndev, budget: t.budget }, removed)
+}
+
+/// Differential backend certification: run Algorithm 1 over the full
+/// tables and the exhaustive DFS over the elimination-reduced residual
+/// kernel ([`optimizer::reduce`]), and demand bit-level agreement on
+/// the kernel assignments plus cost agreement to relative 1e-9. Both
+/// searches break ties by first minimum over the same canonical config
+/// order, so on honest tables the assignments match exactly.
+///
+/// Returns [`OptError::BackendMismatch`] (naming the first divergent
+/// layer) on disagreement. A DFS that hits `dfs_budget` before
+/// completing certifies nothing: the report comes back with
+/// `complete: false` for the caller to surface as a warning.
+pub fn cross_check(
+    cm: &CostModel<'_>,
+    t: &CostTables,
+    dfs_budget: Option<Duration>,
+) -> Result<CrossCheckReport> {
+    let full = optimizer::optimize(t);
+    let red = optimizer::reduce(t);
+    let r = dfs::dfs_optimal(&red.tables, dfs_budget);
+    if !r.complete {
+        return Ok(CrossCheckReport {
+            kernel_nodes: red.nodes.len(),
+            cost: full.cost,
+            visited: r.visited,
+            complete: false,
+        });
+    }
+    let Some(kernel) = r.strategy else {
+        return Err(OptError::Internal(
+            "complete kernel DFS returned no strategy".to_string(),
+        ));
+    };
+    let scale = full.cost.abs().max(r.cost.abs()).max(1e-30);
+    let costs_agree = (full.cost - r.cost).abs() <= 1e-9 * scale;
+    for (p, &node) in red.nodes.iter().enumerate() {
+        if kernel.configs[p] != full.strategy.configs[node] {
+            return Err(OptError::BackendMismatch {
+                layer: cm.graph.layer(node).name.clone(),
+                detail: format!(
+                    "elimination assigns {}, exhaustive DFS over the residual kernel \
+                     assigns {} (costs {} vs {})",
+                    full.strategy.configs[node].label(),
+                    kernel.configs[p].label(),
+                    full.cost,
+                    r.cost
+                ),
+            });
+        }
+    }
+    if !costs_agree {
+        let layer = red.nodes.first().map(|&n| cm.graph.layer(n).name.clone());
+        return Err(OptError::BackendMismatch {
+            layer: layer.unwrap_or_else(|| "(empty kernel)".to_string()),
+            detail: format!(
+                "identical assignments but diverging costs: elimination {} vs \
+                 exhaustive {}",
+                full.cost, r.cost
+            ),
+        });
+    }
+    Ok(CrossCheckReport {
+        kernel_nodes: red.nodes.len(),
+        cost: full.cost,
+        visited: r.visited,
+        complete: true,
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceGraph;
+    use crate::graph::nets;
+    use crate::memory::MemBudget;
+
+    fn setup(net: &str, ndev: usize) -> (crate::graph::CompGraph, DeviceGraph) {
+        (nets::by_name(net, 32 * ndev).unwrap(), DeviceGraph::p100_cluster(ndev).unwrap())
+    }
+
+    #[test]
+    fn honest_tables_audit_clean() {
+        let (g, d) = setup("lenet5", 2);
+        let cm = CostModel::new(&g, &d);
+        let t = CostTables::build(&cm, 2).unwrap();
+        let report = audit_tables(&cm, &t).unwrap();
+        assert_eq!(report.checks.len(), TableCheck::ALL.len());
+        for (c, want) in report.checks.iter().zip(TableCheck::ALL) {
+            assert_eq!(c.check, want);
+        }
+        let text = report.to_string();
+        assert!(text.contains("finite-costs") && text.contains("budget-mask"));
+    }
+
+    #[test]
+    fn budgeted_tables_audit_clean() {
+        let (g, d) = setup("alexnet", 4);
+        let cm = CostModel::new(&g, &d);
+        let budget = Some(MemBudget::new(16 << 30));
+        let t = CostTables::build_budgeted(&cm, 4, budget).unwrap();
+        audit_tables(&cm, &t).unwrap();
+    }
+
+    #[test]
+    fn pruned_search_is_byte_identical_on_alexnet() {
+        let (g, d) = setup("alexnet", 2);
+        let cm = CostModel::new(&g, &d);
+        let t = CostTables::build(&cm, 2).unwrap();
+        let (pt, removed) = prune_tables(&cm, &t);
+        assert!(removed > 0, "alexnet@2 must have dominated configs");
+        let a = optimizer::optimize(&t);
+        let b = optimizer::optimize(&pt);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{} vs {}", a.cost, b.cost);
+        assert_eq!(a.strategy.configs, b.strategy.configs);
+    }
+
+    #[test]
+    fn cross_check_certifies_builtins() {
+        for net in ["lenet5", "alexnet"] {
+            let (g, d) = setup(net, 2);
+            let cm = CostModel::new(&g, &d);
+            let t = CostTables::build(&cm, 2).unwrap();
+            let c = cross_check(&cm, &t, None).unwrap();
+            assert!(c.complete, "{net}");
+            assert!(c.kernel_nodes <= 2, "{net}");
+        }
+    }
+
+    #[test]
+    fn mutated_entry_fails_its_named_check() {
+        let (g, d) = setup("lenet5", 2);
+        let cm = CostModel::new(&g, &d);
+        let mut t = CostTables::build(&cm, 2).unwrap();
+        t.node_cost[1][0] = f64::NAN;
+        match audit_tables(&cm, &t) {
+            Err(OptError::InvalidTables { check: TableCheck::FiniteCosts, .. }) => {}
+            other => panic!("expected finite-costs failure, got {other:?}"),
+        }
+    }
+}

@@ -30,6 +30,10 @@
 //! measured timings are per-session arrays, not content-addressable
 //! structure.
 
+// Same panic boundary as `tables.rs`: the memo sits inside long-lived
+// services, so failures propagate as typed errors, never panics.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -250,6 +254,7 @@ impl std::fmt::Debug for TableMemo {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::device::DeviceGraph;

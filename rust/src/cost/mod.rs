@@ -20,7 +20,7 @@ pub mod profile;
 pub mod tables;
 
 pub use memo::{MemoStats, TableMemo};
-pub use tables::{BuildOptions, CostTables, EdgeTable};
+pub use tables::{resolved_build_workers, BuildOptions, CostTables, EdgeTable};
 
 use crate::device::DeviceGraph;
 use crate::graph::{CompGraph, Layer, LayerId, OpKind};

@@ -144,7 +144,7 @@ mod tests {
         // measured mode must flow into tables and still admit a search
         let mut cm2 = CostModel::new(&g, &d);
         cm2.measured_tc = Some(measured);
-        let tables = crate::cost::CostTables::build(&cm2, 4);
+        let tables = crate::cost::CostTables::build(&cm2, 4).unwrap();
         let opt = crate::optimizer::optimize(&tables);
         assert!(opt.cost.is_finite() && opt.cost > 0.0);
     }

@@ -20,6 +20,11 @@
 //! an optional content-addressed [`TableMemo`] that reuses per-layer and
 //! per-edge results *across* builds.
 
+// Tables are built inside long-lived services from user-controlled
+// graphs; every failure must surface as a typed `OptError`, never a
+// panic (same contract as `verify/` — see DESIGN.md §10, §12).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
@@ -101,14 +106,33 @@ pub struct CostTables {
     pub node_cost: Vec<Vec<f64>>,
     /// One table per graph edge, in graph edge order.
     pub edges: Vec<EdgeTable>,
+    /// Device count the enumeration was built for. Recorded so the
+    /// auditor (`audit::audit_tables`) can re-derive the canonical
+    /// config lists and budget mask without out-of-band context.
+    pub ndev: usize,
+    /// The per-device memory budget the build masked against, if any.
+    pub budget: Option<MemBudget>,
+}
+
+/// Worker-thread count a [`BuildOptions::threads`] setting resolves to:
+/// `0` asks the OS for the available parallelism and falls back to `1`
+/// (serial, always correct) when that query fails — never a guessed
+/// constant. Recorded in `SessionStats`/`ServiceStats` so the `stats`
+/// probe exposes what a build actually used.
+pub fn resolved_build_workers(threads: usize) -> usize {
+    match threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
 }
 
 impl CostTables {
     /// Evaluate the cost model exhaustively over the configuration space
-    /// for `ndev` available devices (no memory constraint).
-    pub fn build(cm: &CostModel, ndev: usize) -> CostTables {
+    /// for `ndev` available devices (no memory constraint). Fallible
+    /// only through internal staging errors ([`OptError::Internal`]):
+    /// an unbudgeted build has no infeasibility path.
+    pub fn build(cm: &CostModel, ndev: usize) -> Result<CostTables> {
         CostTables::build_budgeted(cm, ndev, None)
-            .expect("an unbudgeted table build cannot be infeasible")
     }
 
     /// [`CostTables::build`] with an optional per-device memory budget:
@@ -162,10 +186,7 @@ impl CostTables {
         // Measured t_C timings are recorded against layer *positions* in
         // one session's graph — not content-addressable. Never memoize.
         let memo = if cm.measured_tc.is_some() { None } else { opts.memo };
-        let nthreads = match opts.threads {
-            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-            n => n,
-        };
+        let nthreads = resolved_build_workers(opts.threads);
         let ctx = memo.map(|_| KeyContext::new(cm, ndev, budget));
         let canons: Vec<Arc<str>> = match memo {
             Some(_) => g.layers.iter().map(|l| Arc::from(layer_canon(l).as_str())).collect(),
@@ -267,7 +288,10 @@ impl CostTables {
         // serial scan would report it.
         let mut per_layer: Vec<Arc<LayerTables>> = Vec::with_capacity(nlayers);
         for cell in cells {
-            per_layer.push(cell.into_inner().expect("layer stage left a cell unset")?);
+            let filled = cell
+                .into_inner()
+                .ok_or_else(|| OptError::Internal("layer stage left a cell unset".into()))?;
+            per_layer.push(filled?);
         }
         let configs: Vec<Vec<PConfig>> = per_layer.iter().map(|t| t.configs.clone()).collect();
         let node_cost: Vec<Vec<f64>> = per_layer.iter().map(|t| t.cost.clone()).collect();
@@ -392,14 +416,17 @@ impl CostTables {
         }
         let unique_costs: Vec<Arc<Vec<f64>>> = ecells
             .into_iter()
-            .map(|c| c.into_inner().expect("edge stage left a cell unset"))
-            .collect();
+            .map(|c| {
+                c.into_inner()
+                    .ok_or_else(|| OptError::Internal("edge stage left a cell unset".into()))
+            })
+            .collect::<Result<_>>()?;
         let edges: Vec<EdgeTable> = edge_list
             .iter()
             .zip(edge_unique.iter())
             .map(|(&(s, d), &u)| EdgeTable { src: s, dst: d, cost: unique_costs[u].to_vec() })
             .collect();
-        Ok(CostTables { configs, node_cost, edges })
+        Ok(CostTables { configs, node_cost, edges, ndev, budget })
     }
 
     pub fn num_configs(&self, layer: LayerId) -> usize {
@@ -438,6 +465,7 @@ impl CostTables {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::device::DeviceGraph;
@@ -448,7 +476,7 @@ mod tests {
         let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
-        let t = CostTables::build(&cm, 2);
+        let t = CostTables::build(&cm, 2).unwrap();
         // pick the serial config everywhere
         let idx: Vec<usize> = (0..g.num_layers())
             .map(|l| t.index_of(l, &PConfig::serial()).unwrap())
@@ -463,7 +491,7 @@ mod tests {
     fn every_layer_has_serial_config() {
         let g = nets::alexnet(64).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
-        let t = CostTables::build(&CostModel::new(&g, &d), 4);
+        let t = CostTables::build(&CostModel::new(&g, &d), 4).unwrap();
         for l in 0..g.num_layers() {
             assert!(t.index_of(l, &PConfig::serial()).is_some());
             assert!(t.num_configs(l) >= 1);
@@ -536,7 +564,7 @@ mod tests {
 
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
-        let t = CostTables::build(&cm, 2);
+        let t = CostTables::build(&cm, 2).unwrap();
         for (e, &(s, dd)) in t.edges.iter().zip(g.edges.iter()) {
             assert_eq!(
                 e.cost.len(),
@@ -566,7 +594,7 @@ mod tests {
         let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         let cm = CostModel::new(&g, &d);
-        let free = CostTables::build(&cm, 2);
+        let free = CostTables::build(&cm, 2).unwrap();
         // a budget at 1.5x the largest per-layer minimum keeps every layer
         // feasible while masking the fattest configurations of the big ones
         let min_peaks: Vec<f64> = g
@@ -649,7 +677,7 @@ mod tests {
     fn edge_tables_cover_all_graph_edges() {
         let g = nets::inception_v3(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
-        let t = CostTables::build(&CostModel::new(&g, &d), 2);
+        let t = CostTables::build(&CostModel::new(&g, &d), 2).unwrap();
         assert_eq!(t.edges.len(), g.num_edges());
         for (e, &(s, dd)) in t.edges.iter().zip(g.edges.iter()) {
             assert_eq!((e.src, e.dst), (s, dd));

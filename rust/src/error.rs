@@ -62,6 +62,59 @@ impl fmt::Display for PlanCheck {
     }
 }
 
+/// The named invariants the cost-table auditor proves over a built
+/// [`crate::cost::CostTables`] (see `audit::audit_tables` and
+/// DESIGN.md §12). Each failed check reports its name through
+/// [`OptError::InvalidTables`] so callers (and the mutation-corpus
+/// tests) can pin *which* invariant a corrupted table violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TableCheck {
+    /// Every `t_c`/`t_x`/`t_s` entry is finite and non-negative.
+    FiniteCosts,
+    /// Per-layer config lists are canonical: sorted, deduplicated,
+    /// every degree divides its extent and the degree product is ≤ the
+    /// device count.
+    ConfigCanonical,
+    /// Edge tables have exactly producer-configs × consumer-configs
+    /// entries and reference in-range nodes in graph edge order.
+    EdgeDims,
+    /// Closed-form physical lower bounds hold: `t_x` is at least the
+    /// transferred bytes over the fastest link, `t_s` at least the
+    /// round-trip shard bytes over the fastest path.
+    LowerBounds,
+    /// A budgeted table is bitwise the surviving-index subset of the
+    /// unbudgeted build under the same budget mask.
+    BudgetMask,
+}
+
+impl TableCheck {
+    /// Every check, in the order the auditor runs them.
+    pub const ALL: [TableCheck; 5] = [
+        TableCheck::FiniteCosts,
+        TableCheck::ConfigCanonical,
+        TableCheck::EdgeDims,
+        TableCheck::LowerBounds,
+        TableCheck::BudgetMask,
+    ];
+
+    /// Stable kebab-case name used in diagnostics and CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            TableCheck::FiniteCosts => "finite-costs",
+            TableCheck::ConfigCanonical => "config-canonical",
+            TableCheck::EdgeDims => "edge-dims",
+            TableCheck::LowerBounds => "lower-bounds",
+            TableCheck::BudgetMask => "budget-mask",
+        }
+    }
+}
+
+impl fmt::Display for TableCheck {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Any error the planning library reports to its caller.
 ///
 /// Variants carry a human-readable payload; [`fmt::Display`] renders the
@@ -126,6 +179,31 @@ pub enum OptError {
         /// still exceeds the per-device budget.
         overshoot: u64,
     },
+    /// A cost table that failed static auditing: one of the
+    /// [`TableCheck`] invariants does not hold (see `audit::audit_tables`
+    /// and DESIGN.md §12). A corrupted or mispriced table is a typed
+    /// usage error (exit 2) so it is never silently searched.
+    InvalidTables {
+        /// The named invariant that failed.
+        check: TableCheck,
+        /// Human-readable detail locating the violation.
+        detail: String,
+    },
+    /// The two search backends disagreed over the same residual kernel
+    /// (see `audit::cross_check` and DESIGN.md §12). Either backend —
+    /// or the tables they share — is wrong, so planning must not
+    /// proceed on either answer.
+    BackendMismatch {
+        /// Name of the first layer whose optimal assignment diverges
+        /// (or a summary location when the costs alone differ).
+        layer: String,
+        /// Human-readable detail of the divergence.
+        detail: String,
+    },
+    /// An internal invariant that should be unreachable was observed
+    /// (e.g. a staged build left a cell unset). Reported as a typed
+    /// error instead of a panic so long-lived services survive it.
+    Internal(String),
 }
 
 impl OptError {
@@ -175,6 +253,13 @@ impl fmt::Display for OptError {
                 "infeasible: layer `{layer}` needs {overshoot} more bytes than the \
                  per-device memory budget even at its most-partitioned configuration"
             ),
+            OptError::InvalidTables { check, detail } => {
+                write!(f, "invalid tables [{check}]: {detail}")
+            }
+            OptError::BackendMismatch { layer, detail } => {
+                write!(f, "backend mismatch at layer `{layer}`: {detail}")
+            }
+            OptError::Internal(msg) => write!(f, "internal error: {msg}"),
         }
     }
 }
@@ -206,6 +291,15 @@ mod tests {
             },
             OptError::SearchSpaceExceeded { space_log2: 57, cap_log2: 32 },
             OptError::Infeasible { layer: "fc6".into(), overshoot: 123_456 },
+            OptError::InvalidTables {
+                check: TableCheck::FiniteCosts,
+                detail: "layer 2 config 3: t_c is NaN".into(),
+            },
+            OptError::BackendMismatch {
+                layer: "softmax".into(),
+                detail: "elimination picked (1,1,1,1), dfs picked (4,1,1,1)".into(),
+            },
+            OptError::Internal("layer stage left a cell unset".into()),
         ];
         for e in errs {
             let msg = e.to_string();
@@ -234,6 +328,17 @@ mod tests {
         let cap = OptError::SearchSpaceExceeded { space_log2: 57, cap_log2: 32 };
         assert_eq!(cap.exit_code(), 2);
         assert!(cap.to_string().contains("2^57") && cap.to_string().contains("2^32"));
+        // a corrupted cost table is the supplier's mistake: exit 2
+        let bad_tables = OptError::InvalidTables {
+            check: TableCheck::LowerBounds,
+            detail: "x".into(),
+        };
+        assert_eq!(bad_tables.exit_code(), 2);
+        assert!(bad_tables.to_string().contains("invalid tables [lower-bounds]"));
+        // a backend divergence means neither answer is trustworthy: exit 2
+        let mismatch = OptError::BackendMismatch { layer: "fc6".into(), detail: "x".into() };
+        assert_eq!(mismatch.exit_code(), 2);
+        assert_eq!(OptError::Internal("x".into()).exit_code(), 2);
     }
 
     #[test]
@@ -247,6 +352,21 @@ mod tests {
                 "sync-groups",
                 "memory-consistency",
                 "cost-coherence"
+            ]
+        );
+    }
+
+    #[test]
+    fn table_check_names_are_stable_and_distinct() {
+        let names: Vec<&str> = TableCheck::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "finite-costs",
+                "config-canonical",
+                "edge-dims",
+                "lower-bounds",
+                "budget-mask"
             ]
         );
     }

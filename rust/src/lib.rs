@@ -39,6 +39,7 @@
 //! paper-vs-measured record.
 
 pub mod analyze;
+pub mod audit;
 pub mod config;
 pub mod cost;
 pub mod data;
@@ -60,4 +61,4 @@ pub mod tensor;
 pub mod util;
 pub mod verify;
 
-pub use error::{OptError, PlanCheck, Result};
+pub use error::{OptError, PlanCheck, Result, TableCheck};

@@ -5,6 +5,8 @@
 //! * `optimize`  — run the strategy search and print the per-layer strategy
 //! * `analyze`   — pre-planning static analysis: reducibility, search-cost
 //!   certificate, memory precheck, graph lints (DESIGN.md §11)
+//! * `audit`     — static soundness audit of the cost tables plus a
+//!   differential cross-check of both search backends (DESIGN.md §12)
 //! * `simulate`  — evaluate a strategy on the simulated cluster
 //! * `plan`      — materialize a strategy's ExecutionPlan (print/export)
 //! * `verify`    — statically check an exported plan artifact against the
@@ -44,22 +46,27 @@ optcnn — layer-wise parallelism for CNN training (ICML'18 reproduction)
 USAGE:
   optcnn optimize --network <net> --devices <n> [--backend elimination|dfs|auto]
                   [--budget-ms <ms>] [--cluster <file.toml>] [--mem-limit <b>]
-                  [--build-threads <n>]
+                  [--build-threads <n>] [--prune-dominated]
   optcnn analyze  (<spec.json> | --network <net> | --network-file <spec.json>)
                   [--devices <n> | --cluster <file.toml>] [--mem-limit <b>]
                   [--json] [--deny-warnings]
+  optcnn audit    (<spec.json> | --network <net> | --network-file <spec.json>)
+                  [--devices <n> | --cluster <file.toml>] [--mem-limit <b>]
+                  [--build-threads <n>] [--json] [--deny-warnings]
   optcnn simulate --network <net> --devices <n> --strategy <s>
                   [--cluster <file.toml>] [--trace out.json] [--mem-limit <b>]
   optcnn plan     --network <net> --devices <n> [--strategy <s>]
                   [--cluster <file.toml>] [--out plan.json] [--mem-limit <b>]
+                  [--prune-dominated]
   optcnn verify   <plan.json> [--network <net> | --network-file <spec.json>]
                   [--devices <n> | --cluster <file.toml>]
   optcnn graph    (--network <net> [--batch <global>] | --network-file <spec.json>)
                   [--validate] [--out spec.json] [--dot graph.dot]
   optcnn sweep    [--networks a,b] [--network-file <spec.json>]
                   [--devices 1,2,4,8,16] [--threads N] [--mem-limit <b>]
+                  [--prune-dominated]
   optcnn serve    [--addr 127.0.0.1:7878] [--shards 8] [--cache-cap 8]
-                  [--build-threads <n>] [--no-verify]
+                  [--build-threads <n>] [--no-verify] [--prune-dominated]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
   optcnn profile  [--devices 4] [--reps 3]   (measured-t_C search, minicnn)
@@ -75,6 +82,9 @@ MEM LIMIT:  per-device budget for the layer-wise search: bytes, a KB/MB/GB
             suffix (16GB), or `device` for the cluster's own HBM capacity
 THREADS:    --build-threads <n> fans the cost-table build across n worker
             threads (0 = all cores, 1 = serial); output is bit-identical
+PRUNING:    --prune-dominated drops provably dominated layer configurations
+            from the tables before the search; the optimum (cost and plan)
+            is byte-identical, certified by `optcnn audit`
 ";
 
 /// Parse a `--mem-limit` value: a whole number of bytes or a number with
@@ -111,7 +121,7 @@ fn parse_mem_bytes(s: &str) -> Result<u64> {
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["verbose", "csv", "validate", "no-verify", "json", "deny-warnings"],
+        &["verbose", "csv", "validate", "no-verify", "json", "deny-warnings", "prune-dominated"],
     );
     let code = match dispatch(&args) {
         Ok(code) => code,
@@ -127,6 +137,7 @@ fn dispatch(args: &Args) -> Result<i32> {
     match args.subcommand.as_deref() {
         Some("optimize") => cmd_optimize(args),
         Some("analyze") => cmd_analyze(args),
+        Some("audit") => cmd_audit(args),
         Some("simulate") => cmd_simulate(args),
         Some("plan") => cmd_plan(args),
         Some("verify") => cmd_verify(args),
@@ -196,6 +207,7 @@ fn planner_from_args(args: &Args) -> Result<Planner> {
         Some(v) => builder = builder.mem_limit(parse_mem_bytes(v)?),
     }
     builder = builder.build_threads(args.usize_or("build-threads", 0)?);
+    builder = builder.prune_dominated(args.flag("prune-dominated"));
     let backend_name = args.get_or("backend", "elimination");
     let budget = match args.usize_or("budget-ms", 0)? {
         0 => None,
@@ -403,6 +415,81 @@ fn cmd_analyze(args: &Args) -> Result<i32> {
     }
     if args.flag("deny-warnings") && report.warnings() > 0 {
         eprintln!("analysis: {} warning(s) denied by --deny-warnings", report.warnings());
+        return Ok(2);
+    }
+    Ok(0)
+}
+
+/// Static soundness audit of the cost tables (DESIGN.md §12): build the
+/// tables the search would use and prove the named invariants over every
+/// entry — finiteness, canonical configuration lists, edge dimensions,
+/// closed-form physical lower bounds, and budget-mask coherence — then
+/// compute the per-layer dominance certificates and run the differential
+/// backend cross-check (elimination vs exhaustive DFS over the residual
+/// kernel). A violated invariant exits 2 with `invalid tables
+/// [check-name]: ...`; a backend disagreement exits 2 naming the first
+/// divergent layer. `--json` prints the machine-readable report;
+/// `--deny-warnings` turns warnings (e.g. a cross-check that hit its DFS
+/// budget before certifying) into exit 2.
+fn cmd_audit(args: &Args) -> Result<i32> {
+    // `optcnn audit <spec.json>` is shorthand for --network-file
+    let network = match (args.positional.first(), network_from_args(args)?) {
+        (Some(_), Some(_)) => {
+            return Err(OptError::InvalidArgument(
+                "pass the spec positionally or via --network/--network-file, not both"
+                    .into(),
+            ));
+        }
+        (Some(path), None) => NetworkSpec::from_spec_file(path)?,
+        (None, Some(spec)) => spec,
+        (None, None) => {
+            return Err(OptError::InvalidArgument(
+                "audit needs a graph: `optcnn audit <spec.json>`, --network \
+                 <preset>, or --network-file <spec.json>"
+                    .into(),
+            ));
+        }
+    };
+    let mut builder = Planner::builder(network);
+    match args.get("cluster") {
+        Some(path) => {
+            if args.get("devices").is_some() {
+                return Err(OptError::InvalidArgument(
+                    "--devices and --cluster are mutually exclusive".into(),
+                ));
+            }
+            builder = builder.cluster(ClusterSpec::load(path)?);
+        }
+        None => builder = builder.devices(args.usize_or("devices", 4)?),
+    }
+    if args.get("batch").is_some() {
+        builder = builder.per_gpu_batch(args.usize_or("batch", 0)?);
+    }
+    match args.get("mem-limit") {
+        None => {}
+        Some("device") => builder = builder.mem_limit_device(),
+        Some(v) => builder = builder.mem_limit(parse_mem_bytes(v)?),
+    }
+    builder = builder.build_threads(args.usize_or("build-threads", 0)?);
+    let mut p = builder.build()?;
+    let report = p.audit()?;
+
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        println!(
+            "cost-table audit: {} x{} (batch {})",
+            p.network(),
+            p.num_devices(),
+            p.global_batch()
+        );
+        print!("{report}");
+    }
+    if args.flag("deny-warnings") && !report.warnings.is_empty() {
+        eprintln!(
+            "audit: {} warning(s) denied by --deny-warnings",
+            report.warnings.len()
+        );
         return Ok(2);
     }
     Ok(0)
@@ -690,7 +777,9 @@ fn cmd_sweep(args: &Args) -> Result<i32> {
             }
         }
     }
-    let service = PlanService::new();
+    let service = PlanService::builder()
+        .prune_dominated(args.flag("prune-dominated"))
+        .build()?;
     let cells: Vec<OnceLock<Result<f64>>> = grid.iter().map(|_| OnceLock::new()).collect();
     let cursor = AtomicUsize::new(0);
     // fail fast: once any cell errors (e.g. a device count the preset
@@ -776,6 +865,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
             .shard_capacity(cap)
             .build_threads(build_threads)
             .verify_loaded(verify_loaded)
+            .prune_dominated(args.flag("prune-dominated"))
             .build()?,
     );
     let handle = serve::spawn(addr, service)?;
@@ -787,6 +877,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     println!(r#"  {{"net":"alexnet","devices":4,"strategy":"layerwise","want":"evaluate"}}"#);
     println!(r#"  optional "mem_limit": <bytes/device> bounds the layer-wise search"#);
     println!(r#"  {{"want":"analyze",...}} reports the pre-planning static analysis"#);
+    println!(r#"  {{"want":"audit",...}} audits the cost tables + cross-checks backends"#);
     if verify_loaded {
         println!(r#"  {{"want":"verify","plan":{{...}}}} checks a plan before caching it"#);
     } else {
@@ -915,10 +1006,10 @@ fn cmd_profile(args: &Args) -> Result<i32> {
             return Ok(1);
         }
     };
-    let analytic = optcnn::optimizer::optimize(&CostTables::build(&cm, ndev));
+    let analytic = optcnn::optimizer::optimize(&CostTables::build(&cm, ndev)?);
     let mut cm_measured = CostModel::new(&g, &d);
     cm_measured.measured_tc = Some(measured);
-    let profiled = optcnn::optimizer::optimize(&CostTables::build(&cm_measured, ndev));
+    let profiled = optcnn::optimizer::optimize(&CostTables::build(&cm_measured, ndev)?);
     let mut table = Table::new(
         &format!("minicnn on {ndev} devices: analytic vs measured-t_C optimum"),
         &["layer", "analytic", "measured"],

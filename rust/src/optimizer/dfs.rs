@@ -109,7 +109,7 @@ mod tests {
     fn dfs_completes_on_lenet() {
         let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
-        let t = CostTables::build(&CostModel::new(&g, &d), 2);
+        let t = CostTables::build(&CostModel::new(&g, &d), 2).unwrap();
         let r = dfs_optimal(&t, None);
         assert!(r.complete);
         let s = r.strategy.unwrap();
@@ -120,7 +120,7 @@ mod tests {
     fn deadline_truncates_large_search() {
         let g = nets::vgg16(128).unwrap();
         let d = DeviceGraph::p100_cluster(4).unwrap();
-        let t = CostTables::build(&CostModel::new(&g, &d), 4);
+        let t = CostTables::build(&CostModel::new(&g, &d), 4).unwrap();
         let r = dfs_optimal(&t, Some(Duration::from_millis(50)));
         assert!(!r.complete, "VGG-16 at 4 devices must not finish in 50ms");
         assert!(r.visited > 0);
@@ -130,7 +130,7 @@ mod tests {
     fn dfs_cost_consistent_with_tables() {
         let g = nets::lenet5(32).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
-        let t = CostTables::build(&CostModel::new(&g, &d), 2);
+        let t = CostTables::build(&CostModel::new(&g, &d), 2).unwrap();
         let r = dfs_optimal(&t, None);
         let idx: Vec<usize> = r
             .strategy

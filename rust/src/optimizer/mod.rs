@@ -13,7 +13,7 @@
 pub mod dfs;
 pub mod strategies;
 
-use crate::cost::CostTables;
+use crate::cost::{CostTables, EdgeTable};
 use crate::parallel::Strategy;
 
 /// Search statistics for the Table 2/3 analysis.
@@ -70,8 +70,67 @@ enum Undo {
     Edge,
 }
 
-/// Run Algorithm 1 on prebuilt cost tables.
-pub fn optimize(tables: &CostTables) -> Optimized {
+/// Result of running the elimination fixpoint (Algorithm 1, lines 4-13)
+/// without the final enumeration: the surviving nodes, the live merged
+/// edges, and the undo log that reconstructs eliminated nodes.
+struct Eliminated {
+    alive: Vec<bool>,
+    edges: Vec<Option<WEdge>>,
+    undo: Vec<Undo>,
+    node_eliminations: usize,
+    edge_eliminations: usize,
+}
+
+/// The residual kernel after node/edge elimination, renumbered as a
+/// standalone table set. This is the (PR 8) "residual kernel" the
+/// differential backend cross-check (`audit::cross_check`) searches
+/// exhaustively: it is small (typically 2 nodes for the builtins) where
+/// the full graph is not, yet by Theorems 1 & 2 its optimum extends to
+/// the full graph's.
+pub struct ReducedProblem {
+    /// Original layer ids of the kernel nodes, ascending; position `p`
+    /// in this list is node `p` of the reduced tables.
+    pub nodes: Vec<usize>,
+    /// Cost tables over just the kernel, node ids renumbered to
+    /// `0..nodes.len()`, merged edge matrices carried verbatim.
+    pub tables: CostTables,
+}
+
+/// Run the elimination fixpoint and package the residual kernel as
+/// standalone tables (see [`ReducedProblem`]). The kernel's optimal cost
+/// equals the full problem's minus the eliminated nodes' folded
+/// contributions — already baked into the merged edge matrices — so both
+/// backends can be run over it cheaply and compared.
+pub fn reduce(tables: &CostTables) -> ReducedProblem {
+    let n = tables.configs.len();
+    let elim = eliminate(tables);
+    let nodes: Vec<usize> = (0..n).filter(|&i| elim.alive[i]).collect();
+    let mut pos = vec![usize::MAX; n];
+    for (p, &node) in nodes.iter().enumerate() {
+        pos[node] = p;
+    }
+    let configs = nodes.iter().map(|&i| tables.configs[i].clone()).collect();
+    let node_cost = nodes.iter().map(|&i| tables.node_cost[i].clone()).collect();
+    let edges = elim
+        .edges
+        .iter()
+        .flatten()
+        .map(|e| EdgeTable { src: pos[e.src], dst: pos[e.dst], cost: e.cost.clone() })
+        .collect();
+    ReducedProblem {
+        nodes,
+        tables: CostTables {
+            configs,
+            node_cost,
+            edges,
+            ndev: tables.ndev,
+            budget: tables.budget,
+        },
+    }
+}
+
+/// The elimination fixpoint shared by [`optimize`] and [`reduce`].
+fn eliminate(tables: &CostTables) -> Eliminated {
     let n = tables.configs.len();
     let ncfg: Vec<usize> = (0..n).map(|l| tables.num_configs(l)).collect();
     let node_cost: Vec<&[f64]> = tables.node_cost.iter().map(|v| v.as_slice()).collect();
@@ -83,7 +142,8 @@ pub fn optimize(tables: &CostTables) -> Optimized {
         .map(|e| Some(WEdge { src: e.src, dst: e.dst, cost: e.cost.clone() }))
         .collect();
     let mut undo: Vec<Undo> = Vec::new();
-    let mut stats = SearchStats::default();
+    let mut node_eliminations = 0usize;
+    let mut edge_eliminations = 0usize;
 
     // Adjacency indices over alive edges (edge ids per endpoint): keeps
     // both elimination scans O(degree) instead of O(E) (§Perf log #4).
@@ -153,7 +213,7 @@ pub fn optimize(tables: &CostTables) -> Optimized {
                 out_ids[i].push(new_idx);
                 in_ids[k].push(new_idx);
                 undo.push(Undo::Node { j, i, k, argmin });
-                stats.node_eliminations += 1;
+                node_eliminations += 1;
                 applied = true;
                 changed = true;
                 break;
@@ -189,7 +249,7 @@ pub fn optimize(tables: &CostTables) -> Optimized {
                             in_deg[dst] -= 1;
                             out_deg[src] -= 1;
                             undo.push(Undo::Edge);
-                            stats.edge_eliminations += 1;
+                            edge_eliminations += 1;
                             applied = true;
                             changed = true;
                             break 'outer;
@@ -206,6 +266,20 @@ pub fn optimize(tables: &CostTables) -> Optimized {
             break;
         }
     }
+
+    Eliminated { alive, edges, undo, node_eliminations, edge_eliminations }
+}
+
+/// Run Algorithm 1 on prebuilt cost tables.
+pub fn optimize(tables: &CostTables) -> Optimized {
+    let n = tables.configs.len();
+    let ncfg: Vec<usize> = (0..n).map(|l| tables.num_configs(l)).collect();
+    let node_cost: Vec<&[f64]> = tables.node_cost.iter().map(|v| v.as_slice()).collect();
+
+    let Eliminated { alive, edges, undo, node_eliminations, edge_eliminations } =
+        eliminate(tables);
+    let mut stats =
+        SearchStats { node_eliminations, edge_eliminations, ..SearchStats::default() };
 
     // --- Enumerate the final graph (line 14) ---
     let final_nodes: Vec<usize> = (0..n).filter(|&i| alive[i]).collect();
@@ -318,7 +392,7 @@ mod tests {
         let g = nets::by_name(net, 32 * ndev).unwrap();
         let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&g, &d);
-        CostTables::build(&cm, ndev)
+        CostTables::build(&cm, ndev).unwrap()
     }
 
     #[test]
@@ -365,7 +439,7 @@ mod tests {
             let g = nets::alexnet(32 * ndev).unwrap();
             let d = DeviceGraph::p100_cluster(ndev).unwrap();
             let cm = CostModel::new(&g, &d);
-            let t = CostTables::build(&cm, ndev);
+            let t = CostTables::build(&cm, ndev).unwrap();
             let opt = optimize(&t);
             for s in [
                 strategies::data_parallel(&g, ndev),
@@ -399,6 +473,8 @@ mod tests {
             configs: vec![two(), two()],
             node_cost: vec![vec![0.0, 10.0], vec![1.0, 5.0]],
             edges: vec![EdgeTable { src: 0, dst: 1, cost: vec![0.0; 4] }],
+            ndev: 2,
+            budget: None,
         };
         let r = optimize(&tables);
         assert_eq!(r.stats.final_nodes, 2);
@@ -422,10 +498,43 @@ mod tests {
             configs: vec![three(), three()],
             node_cost: vec![vec![0.0; 3], vec![1.0, 5.0, 9.0]],
             edges: vec![EdgeTable { src: 0, dst: 1, cost: vec![0.0; 9] }],
+            ndev: 4,
+            budget: None,
         };
         let r = optimize(&tables);
         assert_eq!(r.stats.space_size, Some(9));
         assert_eq!(r.stats.enumerated, 9, "no prune: every leaf is visited");
+    }
+
+    #[test]
+    fn reduced_kernel_optimum_matches_full_search() {
+        // `reduce` must preserve the optimum: the folded edge matrices
+        // carry the eliminated nodes' contributions, so an exhaustive
+        // search over the kernel alone lands on the full problem's
+        // optimal cost *and* (both searches are lexicographic-first)
+        // the same kernel-node assignments.
+        for net in ["lenet5", "alexnet", "resnet18"] {
+            let t = tables_for(net, 2);
+            let full = optimize(&t);
+            let red = reduce(&t);
+            assert_eq!(red.nodes.len(), full.stats.final_nodes);
+            assert_eq!(red.tables.configs.len(), red.nodes.len());
+            let brute = dfs::dfs_optimal(&red.tables, None);
+            assert!(brute.complete);
+            assert!(
+                (full.cost - brute.cost).abs() <= 1e-9 * full.cost,
+                "{net}: full {} vs kernel {}",
+                full.cost,
+                brute.cost
+            );
+            let kernel = brute.strategy.unwrap();
+            for (p, &node) in red.nodes.iter().enumerate() {
+                assert_eq!(
+                    kernel.configs[p], full.strategy.configs[node],
+                    "{net}: kernel node {node} assignment diverged"
+                );
+            }
+        }
     }
 
     #[test]

@@ -132,7 +132,7 @@ mod tests {
         for ndev in [2usize, 4] {
             let g = nets::inception_v3(32 * ndev).unwrap();
             let d = DeviceGraph::p100_cluster(ndev).unwrap();
-            let t = CostTables::build(&CostModel::new(&g, &d), ndev);
+            let t = CostTables::build(&CostModel::new(&g, &d), ndev).unwrap();
             for name in BASELINE_NAMES {
                 let s = by_name(name, &g, ndev).unwrap();
                 for (l, c) in s.configs.iter().enumerate() {

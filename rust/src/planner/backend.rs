@@ -154,7 +154,7 @@ mod tests {
         let g = nets::lenet5(64).unwrap();
         let d = DeviceGraph::p100_cluster(2).unwrap();
         // tables only borrow the graph/devices during build
-        CostTables::build(&CostModel::new(&g, &d), 2)
+        CostTables::build(&CostModel::new(&g, &d), 2).unwrap()
     }
 
     #[test]

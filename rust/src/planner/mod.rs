@@ -74,7 +74,8 @@ use std::fmt;
 use std::str::FromStr;
 use std::sync::Arc;
 
-use crate::cost::{BuildOptions, CostModel, CostTables, TableMemo};
+use crate::audit::AuditReport;
+use crate::cost::{resolved_build_workers, BuildOptions, CostModel, CostTables, TableMemo};
 use crate::device::DeviceGraph;
 use crate::error::{OptError, Result};
 use crate::graph::{nets, CompGraph};
@@ -383,6 +384,12 @@ pub struct SessionStats {
     pub memo_hits: u64,
     /// Per-layer/per-edge cost-table memo lookups that ran a build.
     pub memo_misses: u64,
+    /// Worker threads the cost-table build resolved to (`0` until the
+    /// tables are built; [`crate::cost::resolved_build_workers`]).
+    pub build_workers: u64,
+    /// Configurations removed by dominance pruning
+    /// ([`PlannerBuilder::prune_dominated`]; `0` unless enabled).
+    pub pruned_configs: u64,
 }
 
 /// How the session's per-device memory budget is specified.
@@ -407,6 +414,7 @@ pub struct PlannerBuilder {
     plan_cache_cap: usize,
     mem_limit: Option<MemLimit>,
     build_threads: usize,
+    prune_dominated: bool,
 }
 
 impl PlannerBuilder {
@@ -470,6 +478,17 @@ impl PlannerBuilder {
     /// unconstrained search.
     pub fn mem_limit(mut self, bytes: u64) -> PlannerBuilder {
         self.mem_limit = Some(MemLimit::Bytes(bytes));
+        self
+    }
+
+    /// Remove dominance-certified configurations from the session's cost
+    /// tables before the search ([`crate::audit::prune_tables`],
+    /// DESIGN.md §12). Exact: a dominated configuration can never appear
+    /// in a first-minimum optimum, so the searched strategy is
+    /// byte-identical with or without pruning — only the enumerated
+    /// space shrinks. Off by default (`--prune-dominated` on the CLI).
+    pub fn prune_dominated(mut self, on: bool) -> PlannerBuilder {
+        self.prune_dominated = on;
         self
     }
 
@@ -547,6 +566,7 @@ impl PlannerBuilder {
             backend: self.backend,
             mem_limit,
             build_threads: self.build_threads,
+            prune_dominated: self.prune_dominated,
             memo: Arc::new(TableMemo::new()),
             tables: None,
             layerwise: None,
@@ -554,6 +574,7 @@ impl PlannerBuilder {
             plans: PlanCache::new(self.plan_cache_cap),
             table_builds: 0,
             searches: 0,
+            pruned_configs: 0,
         })
     }
 }
@@ -569,6 +590,7 @@ pub struct Planner {
     backend: Box<dyn SearchBackend>,
     mem_limit: Option<u64>,
     build_threads: usize,
+    prune_dominated: bool,
     memo: Arc<TableMemo>,
     tables: Option<CostTables>,
     layerwise: Option<Optimized>,
@@ -576,6 +598,7 @@ pub struct Planner {
     plans: PlanCache,
     table_builds: u64,
     searches: u64,
+    pruned_configs: u64,
 }
 
 impl Planner {
@@ -591,6 +614,7 @@ impl Planner {
             plan_cache_cap: 8,
             mem_limit: None,
             build_threads: 0,
+            prune_dominated: false,
         }
     }
 
@@ -650,14 +674,21 @@ impl Planner {
     /// session's lifetime (the expensive per-session step). Under a
     /// [`PlannerBuilder::mem_limit`] the build masks memory-infeasible
     /// configurations and can fail with [`OptError::Infeasible`]; with no
-    /// budget it cannot fail.
+    /// budget it cannot fail. With
+    /// [`PlannerBuilder::prune_dominated`] the cached tables are the
+    /// dominance-pruned ones every search consumes.
     pub fn tables(&mut self) -> Result<&CostTables> {
         if self.tables.is_none() {
             let cm = CostModel::new(&self.graph, &self.devices);
             let budget = self.mem_limit.map(MemBudget::new);
             let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
-            let built =
+            let mut built =
                 CostTables::build_opts(&cm, self.devices.num_devices(), budget, &opts)?;
+            if self.prune_dominated {
+                let (pruned, removed) = crate::audit::prune_tables(&cm, &built);
+                built = pruned;
+                self.pruned_configs = removed as u64;
+            }
             self.tables = Some(built);
             self.table_builds += 1;
         }
@@ -696,6 +727,36 @@ impl Planner {
             self.devices.num_devices(),
             self.mem_limit.map(MemBudget::new),
         )
+    }
+
+    /// Statically audit this session's cost tables (DESIGN.md §12):
+    /// prove every [`crate::error::TableCheck`] invariant, compute the
+    /// per-layer dominance certificates, and differentially cross-check
+    /// the two search backends over the elimination-reduced residual
+    /// kernel. The audit always runs over freshly built **unpruned**
+    /// tables — the budget-mask check re-derives the canonical
+    /// enumeration, which dominance-pruned tables intentionally fail —
+    /// so it neither consumes nor populates the session's table cache
+    /// (the shared [`TableMemo`] still makes the build cheap after
+    /// [`Planner::tables`] ran). An incomplete cross-check (the DFS hit
+    /// its [`backend::AUTO_DFS_BUDGET`]) certifies nothing and comes
+    /// back as a report warning, not an error.
+    pub fn audit(&mut self) -> Result<AuditReport> {
+        let cm = CostModel::new(&self.graph, &self.devices);
+        let budget = self.mem_limit.map(MemBudget::new);
+        let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
+        let tables = CostTables::build_opts(&cm, self.devices.num_devices(), budget, &opts)?;
+        let mut report = crate::audit::audit_tables(&cm, &tables)?;
+        let cross = crate::audit::cross_check(&cm, &tables, Some(backend::AUTO_DFS_BUDGET))?;
+        if !cross.complete {
+            report.warnings.push(format!(
+                "backend cross-check incomplete: exhaustive DFS hit its {:?} budget after \
+                 {} search-tree nodes, so backend agreement is not certified",
+                backend::AUTO_DFS_BUDGET, cross.visited
+            ));
+        }
+        report.cross = Some(cross);
+        Ok(report)
     }
 
     /// Resolve a strategy: baselines are derived from the graph shape,
@@ -756,6 +817,12 @@ impl Planner {
             plan_misses: self.plans.misses(),
             memo_hits: memo.hits,
             memo_misses: memo.misses,
+            build_workers: if self.table_builds > 0 {
+                resolved_build_workers(self.build_threads) as u64
+            } else {
+                0
+            },
+            pruned_configs: self.pruned_configs,
         }
     }
 }
@@ -855,6 +922,35 @@ mod tests {
         assert_eq!(s2.plan_hits, 1);
         assert_eq!(a.estimate, b.estimate);
         assert_eq!(a.sim.step_time, b.sim.step_time);
+    }
+
+    #[test]
+    fn pruned_session_matches_unpruned_and_reports_workers() {
+        let mut plain = Planner::builder(Network::AlexNet).devices(2).build().unwrap();
+        let mut pruned = Planner::builder(Network::AlexNet)
+            .devices(2)
+            .prune_dominated(true)
+            .build()
+            .unwrap();
+        let a = plain.optimize().unwrap();
+        let b = pruned.optimize().unwrap();
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.strategy.configs, b.strategy.configs);
+        let (sp, sq) = (plain.session_stats(), pruned.session_stats());
+        assert_eq!(sp.pruned_configs, 0);
+        assert!(sq.pruned_configs > 0, "alexnet@2 has dominated configs");
+        assert!(sp.build_workers >= 1 && sq.build_workers >= 1);
+    }
+
+    #[test]
+    fn audit_certifies_a_session() {
+        let mut p = Planner::builder(Network::LeNet5).devices(2).build().unwrap();
+        let report = p.audit().unwrap();
+        assert!(report.cross.as_ref().is_some_and(|c| c.complete));
+        assert!(report.warnings.is_empty());
+        // auditing builds its own unpruned tables without touching the
+        // session's cache
+        assert_eq!(p.session_stats().table_builds, 0);
     }
 
     #[test]

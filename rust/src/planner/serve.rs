@@ -48,6 +48,14 @@
 //! ([`MAX_RESIDUAL_SPACE_LOG2`](super::MAX_RESIDUAL_SPACE_LOG2)), which
 //! plan/evaluate requests enforce before any table is built.
 //!
+//! `{"want": "audit"}` statically audits the request's cost tables
+//! (DESIGN.md §12): the typed table-invariant checks, the per-layer
+//! dominance certificates, and the differential backend cross-check
+//! ([`crate::audit`]). Like `analyze`, `"strategy"` does not combine
+//! with it; unlike `analyze`, the probe builds (unpruned) cost tables,
+//! so the pre-planning enumeration cap applies to it exactly as it does
+//! to planning requests.
+//!
 //! `{"want": "verify"}` is the server's plan-ingestion trust boundary
 //! (DESIGN.md §10): the required `"plan"` object is an execution-plan
 //! document (the exact JSON `optcnn plan --out` writes), statically
@@ -102,6 +110,9 @@ pub enum Request {
     /// Return the pre-planning static analysis ([`crate::analyze`])
     /// of the request's (network, cluster, budget) — no tables built.
     Analyze(PlanRequest),
+    /// Statically audit the request's cost tables ([`crate::audit`]):
+    /// table invariants, dominance certificates, backend cross-check.
+    Audit(PlanRequest),
     /// Return the service's aggregate counters ([`ServiceStats`]);
     /// carries no plan request at all.
     Stats,
@@ -193,6 +204,18 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
             Ok(Request::Analyze(parse_plan_request(&v)?))
         }
+        Some(Some("audit")) => {
+            if v.get("plan").is_some() {
+                return Err(bad("`plan` only combines with want=\"verify\""));
+            }
+            if v.get("strategy").is_some() {
+                return Err(bad(
+                    "`strategy` does not combine with want=\"audit\" — the audit \
+                     is about the cost tables, not one strategy",
+                ));
+            }
+            Ok(Request::Audit(parse_plan_request(&v)?))
+        }
         None | Some(Some("plan")) | Some(Some("evaluate")) => {
             if v.get("plan").is_some() {
                 return Err(bad("`plan` only combines with want=\"verify\""));
@@ -204,8 +227,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
         }
         Some(other) => Err(bad(&format!(
-            "`want` must be \"plan\", \"evaluate\", \"analyze\", \"stats\", or \
-             \"verify\", got {other:?}"
+            "`want` must be \"plan\", \"evaluate\", \"analyze\", \"audit\", \
+             \"stats\", or \"verify\", got {other:?}"
         ))),
     }
 }
@@ -453,6 +476,8 @@ fn stats_json(s: &ServiceStats) -> Json {
         ("states_cached", Json::Num(s.states_cached as f64)),
         ("memo_hits", Json::Num(s.memo_hits as f64)),
         ("memo_misses", Json::Num(s.memo_misses as f64)),
+        ("build_workers", Json::Num(s.build_workers as f64)),
+        ("pruned_configs", Json::Num(s.pruned_configs as f64)),
     ])
 }
 
@@ -473,6 +498,10 @@ fn respond(service: &PlanService, line: &str) -> Result<Json> {
         Request::Analyze(req) => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("analysis", service.analyze(&req)?.to_json()),
+        ])),
+        Request::Audit(req) => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("audit", service.audit(&req)?.to_json()),
         ])),
         Request::Verify(req, plan) => {
             let outcome = service.ingest(&req, &plan)?;
@@ -916,6 +945,33 @@ mod tests {
             assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{raw}");
             let msg = v.get("error").and_then(Json::as_str).unwrap();
             assert!(!msg.is_empty() && !msg.contains('\n'), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn audit_want_certifies_the_tables_over_the_wire() {
+        let service = PlanService::new();
+        let reply = handle_line(&service, r#"{"net": "lenet5", "devices": 2, "want": "audit"}"#);
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        let audit = v.get("audit").unwrap();
+        let checks = match audit.get("checks").unwrap() {
+            Json::Arr(a) => a.clone(),
+            other => panic!("checks must be an array, got {other:?}"),
+        };
+        assert_eq!(checks.len(), 5);
+        assert!(checks.iter().all(|c| c.get("ok").and_then(Json::as_bool) == Some(true)));
+        let cross = v.get("audit").unwrap().get("cross_check").unwrap();
+        assert_eq!(cross.get("complete").and_then(Json::as_bool), Some(true));
+        // the probe builds its own tables outside the state memo
+        assert_eq!(service.stats().states_cached, 0);
+        // field rules: no strategy, no plan document
+        for raw in [
+            r#"{"net": "lenet5", "devices": 2, "want": "audit", "strategy": "data"}"#,
+            r#"{"want": "audit", "plan": {"version": 1}}"#,
+        ] {
+            let v = Json::parse(&handle_line(&service, raw)).unwrap();
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{raw}");
         }
     }
 

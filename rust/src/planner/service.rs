@@ -51,7 +51,8 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::cost::{BuildOptions, CostModel, CostTables, TableMemo};
+use crate::audit::AuditReport;
+use crate::cost::{resolved_build_workers, BuildOptions, CostModel, CostTables, TableMemo};
 use crate::device::{ClusterFingerprint, DeviceGraph};
 use crate::error::{OptError, Result};
 use crate::graph::{CompGraph, GraphDigest};
@@ -177,6 +178,7 @@ pub struct PlanServiceBuilder {
     backend: Box<dyn SearchBackend>,
     build_threads: usize,
     verify_loaded: bool,
+    prune_dominated: bool,
 }
 
 impl PlanServiceBuilder {
@@ -215,6 +217,15 @@ impl PlanServiceBuilder {
     /// tables — the knob trades wall time only.
     pub fn build_threads(mut self, threads: usize) -> PlanServiceBuilder {
         self.build_threads = threads;
+        self
+    }
+
+    /// Remove dominance-certified configurations from every memoized
+    /// cost table before its search ([`crate::audit::prune_tables`],
+    /// DESIGN.md §12). Exact — searched strategies are byte-identical
+    /// with or without it. Off by default.
+    pub fn prune_dominated(mut self, on: bool) -> PlanServiceBuilder {
+        self.prune_dominated = on;
         self
     }
 
@@ -260,9 +271,11 @@ impl PlanServiceBuilder {
             memo: Arc::new(TableMemo::new()),
             build_threads: self.build_threads,
             verify_loaded: self.verify_loaded,
+            prune_dominated: self.prune_dominated,
             table_builds: AtomicU64::new(0),
             searches: AtomicU64::new(0),
             build_waits: AtomicU64::new(0),
+            pruned_configs: AtomicU64::new(0),
         }
     }
 }
@@ -299,6 +312,13 @@ pub struct ServiceStats {
     /// Per-layer/per-edge cost-table memo lookups that ran a build —
     /// with single flight, exactly one per distinct layer/edge key.
     pub memo_misses: u64,
+    /// Worker threads each cost-table build resolves to (`0` until the
+    /// first build; [`crate::cost::resolved_build_workers`]).
+    pub build_workers: u64,
+    /// Configurations removed by dominance pruning, summed over state
+    /// builds ([`PlanServiceBuilder::prune_dominated`]; `0` unless
+    /// enabled).
+    pub pruned_configs: u64,
 }
 
 /// A thread-safe plan-serving façade over the planning pipeline.
@@ -316,9 +336,11 @@ pub struct PlanService {
     memo: Arc<TableMemo>,
     build_threads: usize,
     verify_loaded: bool,
+    prune_dominated: bool,
     table_builds: AtomicU64,
     searches: AtomicU64,
     build_waits: AtomicU64,
+    pruned_configs: AtomicU64,
 }
 
 /// How [`PlanService::ingest`] admitted an externally supplied plan.
@@ -353,6 +375,7 @@ impl PlanService {
             backend: Box::new(Elimination),
             build_threads: 0,
             verify_loaded: true,
+            prune_dominated: false,
         }
     }
 
@@ -438,7 +461,12 @@ impl PlanService {
             self.table_builds.fetch_add(1, Ordering::Relaxed);
             let cm = CostModel::new(graph, devices);
             let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
-            let tables = CostTables::build_opts(&cm, devices.num_devices(), budget, &opts)?;
+            let mut tables = CostTables::build_opts(&cm, devices.num_devices(), budget, &opts)?;
+            if self.prune_dominated {
+                let (pruned, removed) = crate::audit::prune_tables(&cm, &tables);
+                tables = pruned;
+                self.pruned_configs.fetch_add(removed as u64, Ordering::Relaxed);
+            }
             let optimized = self.backend.search(&tables)?;
             self.searches.fetch_add(1, Ordering::Relaxed);
             Ok(Arc::new(TableState { tables, optimized }))
@@ -535,6 +563,40 @@ impl PlanService {
         Ok(analyze::analyze(&graph, &devices, devices.num_devices(), budget))
     }
 
+    /// Statically audit a request's cost tables (DESIGN.md §12): table
+    /// invariants, dominance certificates, and the differential backend
+    /// cross-check — the `{"want":"audit"}` wire probe. The audit always
+    /// builds fresh **unpruned** tables (a dominance-pruned table
+    /// legitimately fails the budget-mask re-derivation), so it bypasses
+    /// the state memo; the shared per-layer [`TableMemo`] still dedupes
+    /// the work against prior builds. The same pre-planning gate as a
+    /// planning request applies first, so a hostile graph cannot pin a
+    /// worker in the cross-check's enumeration.
+    pub fn audit(&self, req: &PlanRequest) -> Result<AuditReport> {
+        let (graph, devices, _) = self.session(req)?;
+        let budget = req.mem_limit.map(MemBudget::new);
+        analyze::precheck(&graph, devices.num_devices(), budget, MAX_RESIDUAL_SPACE_LOG2)?;
+        let cm = CostModel::new(&graph, &devices);
+        let opts = BuildOptions { threads: self.build_threads, memo: Some(&self.memo) };
+        let tables = CostTables::build_opts(&cm, devices.num_devices(), budget, &opts)?;
+        let mut report = crate::audit::audit_tables(&cm, &tables)?;
+        let cross = crate::audit::cross_check(
+            &cm,
+            &tables,
+            Some(super::backend::AUTO_DFS_BUDGET),
+        )?;
+        if !cross.complete {
+            report.warnings.push(format!(
+                "backend cross-check incomplete: exhaustive DFS hit its {:?} budget after \
+                 {} search-tree nodes, so backend agreement is not certified",
+                super::backend::AUTO_DFS_BUDGET,
+                cross.visited
+            ));
+        }
+        report.cross = Some(cross);
+        Ok(report)
+    }
+
     /// The memoized layer-wise optimum (strategy, cost, search stats)
     /// for the request's (network, batch, cluster), built on first use.
     pub fn optimized(&self, req: &PlanRequest) -> Result<Optimized> {
@@ -563,16 +625,23 @@ impl PlanService {
         }
         let states_cached = lock(&self.states).len();
         let memo = self.memo.stats();
+        let table_builds = self.table_builds.load(Ordering::Relaxed);
         ServiceStats {
             plan_hits,
             plan_misses,
-            table_builds: self.table_builds.load(Ordering::Relaxed),
+            table_builds,
             searches: self.searches.load(Ordering::Relaxed),
             build_waits: self.build_waits.load(Ordering::Relaxed),
             plans_cached,
             states_cached,
             memo_hits: memo.hits,
             memo_misses: memo.misses,
+            build_workers: if table_builds > 0 {
+                resolved_build_workers(self.build_threads) as u64
+            } else {
+                0
+            },
+            pruned_configs: self.pruned_configs.load(Ordering::Relaxed),
         }
     }
 
@@ -760,6 +829,31 @@ mod tests {
             trusting.ingest(&req, &plan).unwrap(),
             VerifyOutcome::AcceptedUnchecked
         );
+    }
+
+    #[test]
+    fn pruned_service_serves_identical_strategies() {
+        let plain = PlanService::new();
+        let pruned = PlanService::builder().prune_dominated(true).build().unwrap();
+        let req = PlanRequest::new(Network::AlexNet, 2).unwrap();
+        let a = plain.optimized(&req).unwrap();
+        let b = pruned.optimized(&req).unwrap();
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.strategy.configs, b.strategy.configs);
+        assert_eq!(plain.stats().pruned_configs, 0);
+        assert!(pruned.stats().pruned_configs > 0);
+        assert!(plain.stats().build_workers >= 1);
+    }
+
+    #[test]
+    fn audit_probe_certifies_without_touching_the_state_memo() {
+        let service = PlanService::new();
+        let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        let report = service.audit(&req).unwrap();
+        assert!(report.cross.as_ref().is_some_and(|c| c.complete));
+        assert!(report.warnings.is_empty());
+        let s = service.stats();
+        assert_eq!((s.table_builds, s.states_cached), (0, 0));
     }
 
     #[test]

@@ -20,9 +20,11 @@
 //! 6. `Planner::analyze` is observable as table-free through
 //!    `SessionStats`.
 
+mod common;
+
+use common::{p100, random_series_parallel};
 use optcnn::analyze::{self, Reducibility};
 use optcnn::cost::{CostModel, CostTables};
-use optcnn::device::DeviceGraph;
 use optcnn::error::OptError;
 use optcnn::graph::{CompGraph, GraphBuilder};
 use optcnn::memory::MemBudget;
@@ -30,40 +32,8 @@ use optcnn::parallel::enumerate_configs;
 use optcnn::planner::backend::{Elimination, ExhaustiveDfs, SearchBackend};
 use optcnn::planner::serve::handle_line;
 use optcnn::planner::{Network, PlanService, Planner, MAX_RESIDUAL_SPACE_LOG2};
-use optcnn::prop::{forall, Gen};
+use optcnn::prop::forall;
 use optcnn::util::json::Json;
-
-fn p100(n: usize) -> DeviceGraph {
-    DeviceGraph::p100_cluster(n).unwrap()
-}
-
-/// A random series-parallel CNN: a chain of segments, each either a
-/// single conv or a two-branch diamond re-joined by add/concat. Every
-/// such graph must collapse under node+edge elimination (the diamond's
-/// branches are (1,1)-degree nodes; the parallel edges they leave merge).
-/// Odd extents (channels 3, spatial 5) keep per-layer config counts at
-/// 2-3 for ndev=2, so the exhaustive DFS below stays small.
-fn random_series_parallel(g: &mut Gen) -> CompGraph {
-    let mut b = GraphBuilder::new("sp");
-    let mut cur = b.input(2, 3, 5, 5).unwrap();
-    let segs = g.usize_in(1, 5);
-    for i in 0..segs {
-        if g.bool() {
-            let l = b.conv2d(&format!("dl{i}"), cur, 3, (3, 3), (1, 1), (1, 1)).unwrap();
-            let r = b.conv2d(&format!("dr{i}"), cur, 3, (1, 1), (1, 1), (0, 0)).unwrap();
-            cur = if g.bool() {
-                b.add(&format!("j{i}"), l, r).unwrap()
-            } else {
-                b.concat(&format!("j{i}"), &[l, r]).unwrap()
-            };
-        } else {
-            cur = b.conv2d(&format!("c{i}"), cur, 3, (3, 3), (1, 1), (1, 1)).unwrap();
-        }
-    }
-    let f = b.fully_connected("fc", cur, 10).unwrap();
-    b.softmax("sm", f).unwrap();
-    b.finish().unwrap()
-}
 
 /// Cost tables on which branch-and-bound can never prune, so the DFS
 /// walks its entire search tree and `visited` becomes exactly
@@ -87,7 +57,7 @@ fn no_prune_tables(g: &CompGraph, ndev: usize) -> CostTables {
             (0..c_l).map(|c| (weight[l] * (c_l - 1 - c) as u128) as f64).collect()
         })
         .collect();
-    CostTables { configs, node_cost, edges: vec![] }
+    CostTables { configs, node_cost, edges: vec![], ndev, budget: None }
 }
 
 /// `stages` copies of the cross-linked double-diamond from the analyze
@@ -173,7 +143,7 @@ fn series_parallel_graphs_reduce_and_certificate_predicts_dfs_exactly() {
         // and on *real* tables, the elimination backend's final space is
         // the certified residual enumeration
         let cm = CostModel::new(&net, &d);
-        let real = CostTables::build(&cm, ndev);
+        let real = CostTables::build(&cm, ndev).unwrap();
         let elim = Elimination.search(&real).unwrap();
         assert_eq!(elim.stats.final_nodes, r.kernel.nodes.len());
         assert_eq!(elim.stats.space_size, r.certificate.residual_space);
@@ -301,7 +271,7 @@ fn irreducible_graph_certificate_matches_brute_force_exactly() {
     // the elimination backend, run for real, brute-forces exactly the
     // certified space — and every evaluated leaf is counted within it
     let cm = CostModel::new(&g, &d);
-    let tables = CostTables::build(&cm, ndev);
+    let tables = CostTables::build(&cm, ndev).unwrap();
     let opt = Elimination.search(&tables).unwrap();
     assert_eq!(opt.stats.final_nodes, r.kernel.nodes.len());
     assert_eq!(opt.stats.space_size, Some(brute));

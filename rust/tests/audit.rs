@@ -1,0 +1,301 @@
+//! End-to-end pins for the cost-table audit (DESIGN.md §12):
+//!
+//! 1. a **mutation corpus**: for every named [`TableCheck`], at least one
+//!    targeted corruption of an honestly built table that fails the audit
+//!    with exactly that check — the auditor's checks are falsifiable, not
+//!    decorative;
+//! 2. all seven builtin networks audit clean at 2/4/8 devices, both
+//!    unbudgeted and under a 16 GB budget, and the differential backend
+//!    cross-check certifies agreement on every one (release grid);
+//! 3. dominance pruning is **exact**: the exhaustive DFS over pruned
+//!    tables visits strictly fewer search-tree nodes and returns the
+//!    byte-identical optimum;
+//! 4. property: random series-parallel graphs built honestly audit clean
+//!    at 2/4/8 devices, and pruned-vs-unpruned search is byte-identical.
+
+mod common;
+
+use common::{p100, random_series_parallel};
+use optcnn::audit::{audit_tables, cross_check, prune_tables};
+use optcnn::cost::{CostModel, CostTables};
+use optcnn::device::DeviceGraph;
+use optcnn::error::{OptError, TableCheck};
+use optcnn::graph::{nets, CompGraph};
+use optcnn::memory::MemBudget;
+use optcnn::optimizer;
+use optcnn::parallel::param_sharding;
+use optcnn::planner::backend::{ExhaustiveDfs, SearchBackend};
+use optcnn::planner::Network;
+use optcnn::prop::forall;
+
+fn lenet(ndev: usize) -> (CompGraph, DeviceGraph) {
+    (nets::lenet5(32 * ndev).unwrap(), p100(ndev))
+}
+
+/// Assert the audit fails with exactly the named check.
+fn expect_check(cm: &CostModel, t: &CostTables, want: TableCheck) {
+    match audit_tables(cm, t) {
+        Err(OptError::InvalidTables { check, detail }) => {
+            assert_eq!(check, want, "wrong check for: {detail}");
+            // exit-code contract: the CLI prints `invalid tables [name]: ...`
+            let msg = OptError::InvalidTables { check, detail }.to_string();
+            assert!(
+                msg.contains(&format!("[{}]", want.name())),
+                "message must name the check: {msg}"
+            );
+        }
+        Err(other) => panic!("expected invalid tables [{}], got: {other}", want.name()),
+        Ok(_) => panic!("mutation expected to fail [{}] audited clean", want.name()),
+    }
+}
+
+// ---- mutation corpus: each named check must be falsifiable ----
+
+#[test]
+fn corpus_infinite_node_cost_fails_finite_costs() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    t.node_cost[1][0] = f64::INFINITY;
+    expect_check(&cm, &t, TableCheck::FiniteCosts);
+}
+
+#[test]
+fn corpus_negative_transfer_cost_fails_finite_costs() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    t.edges[0].cost[0] = -1e-12;
+    expect_check(&cm, &t, TableCheck::FiniteCosts);
+}
+
+#[test]
+fn corpus_out_of_order_configs_fail_config_canonical() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    let l = (0..t.configs.len())
+        .find(|&l| t.configs[l].len() >= 2)
+        .expect("some layer has at least two configs");
+    t.configs[l].swap(0, 1);
+    expect_check(&cm, &t, TableCheck::ConfigCanonical);
+}
+
+#[test]
+fn corpus_duplicated_config_fails_config_canonical() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    let l = (0..t.configs.len())
+        .find(|&l| t.configs[l].len() >= 2)
+        .expect("some layer has at least two configs");
+    t.configs[l][1] = t.configs[l][0];
+    expect_check(&cm, &t, TableCheck::ConfigCanonical);
+}
+
+#[test]
+fn corpus_illegal_degree_fails_config_canonical() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    // a degree product of 3 can never run on 2 devices
+    t.configs[1][0].deg[0] = 3;
+    expect_check(&cm, &t, TableCheck::ConfigCanonical);
+}
+
+#[test]
+fn corpus_device_count_mismatch_fails_config_canonical() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    t.ndev = 3;
+    expect_check(&cm, &t, TableCheck::ConfigCanonical);
+}
+
+#[test]
+fn corpus_truncated_edge_row_fails_edge_dims() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    t.edges[0].cost.pop();
+    expect_check(&cm, &t, TableCheck::EdgeDims);
+}
+
+#[test]
+fn corpus_swapped_edge_order_fails_edge_dims() {
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    assert!(t.edges.len() >= 2, "lenet5 is a chain of more than two layers");
+    t.edges.swap(0, 1);
+    expect_check(&cm, &t, TableCheck::EdgeDims);
+}
+
+#[test]
+fn corpus_underpriced_transfers_fail_lower_bounds() {
+    // Zero every transfer entry: some (producer, consumer) pair must move
+    // bytes between devices, and free remote bytes violate physics.
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    for e in &mut t.edges {
+        for v in &mut e.cost {
+            *v = 0.0;
+        }
+    }
+    expect_check(&cm, &t, TableCheck::LowerBounds);
+}
+
+#[test]
+fn corpus_underpriced_sync_fails_lower_bounds() {
+    // Zero the node cost of a replicated parameterized config: its
+    // round-trip gradient/parameter exchange cannot be free.
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    let mut found = None;
+    for (l, gl) in g.layers.iter().enumerate() {
+        for (c, cfg) in t.configs[l].iter().enumerate() {
+            if gl.has_params() && param_sharding(gl, cfg).replicas > 1 {
+                found = Some((l, c));
+            }
+        }
+    }
+    let (l, c) = found.expect("lenet5@2 has a replicated parameterized config");
+    t.node_cost[l][c] = 0.0;
+    expect_check(&cm, &t, TableCheck::LowerBounds);
+}
+
+#[test]
+fn corpus_stale_budget_mask_fails_budget_mask() {
+    // Claim a 1-byte budget over an unmasked table: the recorded config
+    // lists no longer match what the budget admits.
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build(&cm, 2).unwrap();
+    t.budget = Some(MemBudget::new(1));
+    expect_check(&cm, &t, TableCheck::BudgetMask);
+}
+
+#[test]
+fn corpus_perturbed_budgeted_entry_fails_budget_mask() {
+    // A budgeted table must be *bitwise* the surviving subset of the
+    // unbudgeted build — a perturbation too small to trip the lower
+    // bounds still fails the subset comparison.
+    let (g, d) = lenet(2);
+    let cm = CostModel::new(&g, &d);
+    let mut t = CostTables::build_budgeted(&cm, 2, Some(MemBudget::new(16 << 30))).unwrap();
+    t.node_cost[1][0] += 1.0;
+    expect_check(&cm, &t, TableCheck::BudgetMask);
+}
+
+#[test]
+fn corpus_covers_every_named_check() {
+    // The corpus above exercises each TableCheck variant; pin the list so
+    // adding a check forces adding a mutation for it.
+    assert_eq!(
+        TableCheck::ALL.map(|c| c.name()),
+        ["finite-costs", "config-canonical", "edge-dims", "lower-bounds", "budget-mask"]
+    );
+}
+
+// ---- exactness of dominance pruning ----
+
+#[test]
+fn pruned_tables_shrink_the_exhaustive_search_and_preserve_its_optimum() {
+    // Small builtins where a complete DFS is cheap either way. At least
+    // one must certify dominated configs (FC layers' replicated configs);
+    // on each that does, the pruned search must visit strictly fewer
+    // search-tree nodes and land on the byte-identical optimum.
+    let mut reduced_somewhere = false;
+    for net in ["minicnn", "lenet5"] {
+        let g = nets::by_name(net, 64).unwrap();
+        let d = p100(2);
+        let cm = CostModel::new(&g, &d);
+        let t = CostTables::build(&cm, 2).unwrap();
+        let (pt, removed) = prune_tables(&cm, &t);
+        if removed == 0 {
+            continue;
+        }
+        let full = ExhaustiveDfs::default().search(&t).unwrap();
+        let slim = ExhaustiveDfs::default().search(&pt).unwrap();
+        assert_eq!(
+            full.cost.to_bits(),
+            slim.cost.to_bits(),
+            "{net}: {} vs {}",
+            full.cost,
+            slim.cost
+        );
+        assert_eq!(full.strategy.configs, slim.strategy.configs, "{net}");
+        assert!(
+            slim.stats.enumerated < full.stats.enumerated,
+            "{net}: pruned DFS visited {} of the full search's {}",
+            slim.stats.enumerated,
+            full.stats.enumerated
+        );
+        reduced_somewhere = true;
+    }
+    assert!(reduced_somewhere, "no small builtin certified a dominated config");
+}
+
+// ---- the release grid: every builtin, every device count, both budgets ----
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "heavy grid; the release CI steps run it")]
+fn builtin_grid_audits_clean_and_backends_agree() {
+    for net in Network::ALL {
+        for ndev in [2usize, 4, 8] {
+            let g = net.graph(32 * ndev).unwrap();
+            let d = p100(ndev);
+            let cm = CostModel::new(&g, &d);
+
+            let free = CostTables::build(&cm, ndev).unwrap();
+            let report = audit_tables(&cm, &free).unwrap();
+            assert_eq!(report.checks.len(), TableCheck::ALL.len(), "{net} x{ndev}");
+
+            let capped =
+                CostTables::build_budgeted(&cm, ndev, Some(MemBudget::new(16 << 30))).unwrap();
+            audit_tables(&cm, &capped)
+                .unwrap_or_else(|e| panic!("{net} x{ndev} under 16 GB: {e}"));
+
+            let c = cross_check(&cm, &free, None).unwrap();
+            assert!(c.complete, "{net} x{ndev}");
+            assert!(c.kernel_nodes <= 2, "{net} x{ndev}: K = {}", c.kernel_nodes);
+        }
+    }
+}
+
+// ---- property: honest builds audit clean, pruning is exact ----
+
+#[test]
+fn honest_series_parallel_builds_audit_clean_and_prune_exactly() {
+    forall("audit on random series-parallel nets", 6, |g| {
+        let net = random_series_parallel(g);
+        for ndev in [2usize, 4, 8] {
+            let d = p100(ndev);
+            let cm = CostModel::new(&net, &d);
+            let t = CostTables::build(&cm, ndev).unwrap();
+
+            let report = audit_tables(&cm, &t)
+                .unwrap_or_else(|e| panic!("honest build failed audit at {ndev} devices: {e}"));
+            assert_eq!(report.checks.len(), TableCheck::ALL.len());
+            assert_eq!(report.configs_total, t.configs.iter().map(|c| c.len()).sum::<usize>());
+
+            let c = cross_check(&cm, &t, None).unwrap();
+            assert!(c.complete, "{ndev} devices");
+
+            let (pt, _removed) = prune_tables(&cm, &t);
+            let a = optimizer::optimize(&t);
+            let b = optimizer::optimize(&pt);
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{ndev} devices");
+            assert_eq!(a.strategy.configs, b.strategy.configs, "{ndev} devices");
+        }
+
+        // a budgeted build of the same graph audits clean too (the mask
+        // re-derivation proves it bitwise consistent with the free build)
+        let d = p100(2);
+        let cm = CostModel::new(&net, &d);
+        let t = CostTables::build_budgeted(&cm, 2, Some(MemBudget::new(16 << 30))).unwrap();
+        audit_tables(&cm, &t).unwrap();
+    });
+}

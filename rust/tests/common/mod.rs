@@ -1,0 +1,40 @@
+//! Helpers shared across the integration-test binaries. Every test
+//! target that declares `mod common;` compiles this file independently,
+//! so a helper unused by one target is expected dead code there.
+#![allow(dead_code)]
+
+use optcnn::device::DeviceGraph;
+use optcnn::graph::{CompGraph, GraphBuilder};
+use optcnn::prop::Gen;
+
+pub fn p100(n: usize) -> DeviceGraph {
+    DeviceGraph::p100_cluster(n).unwrap()
+}
+
+/// A random series-parallel CNN: a chain of segments, each either a
+/// single conv or a two-branch diamond re-joined by add/concat. Every
+/// such graph must collapse under node+edge elimination (the diamond's
+/// branches are (1,1)-degree nodes; the parallel edges they leave merge).
+/// Odd extents (channels 3, spatial 5) keep per-layer config counts at
+/// 2-3 for ndev=2, so exhaustive searches over these graphs stay small.
+pub fn random_series_parallel(g: &mut Gen) -> CompGraph {
+    let mut b = GraphBuilder::new("sp");
+    let mut cur = b.input(2, 3, 5, 5).unwrap();
+    let segs = g.usize_in(1, 5);
+    for i in 0..segs {
+        if g.bool() {
+            let l = b.conv2d(&format!("dl{i}"), cur, 3, (3, 3), (1, 1), (1, 1)).unwrap();
+            let r = b.conv2d(&format!("dr{i}"), cur, 3, (1, 1), (1, 1), (0, 0)).unwrap();
+            cur = if g.bool() {
+                b.add(&format!("j{i}"), l, r).unwrap()
+            } else {
+                b.concat(&format!("j{i}"), &[l, r]).unwrap()
+            };
+        } else {
+            cur = b.conv2d(&format!("c{i}"), cur, 3, (3, 3), (1, 1), (1, 1)).unwrap();
+        }
+    }
+    let f = b.fully_connected("fc", cur, 10).unwrap();
+    b.softmax("sm", f).unwrap();
+    b.finish().unwrap()
+}

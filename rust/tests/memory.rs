@@ -68,7 +68,7 @@ fn infinite_budget_reproduces_unconstrained_tables_exactly() {
     let g = nets::vgg16(64).unwrap();
     let d = DeviceGraph::p100_cluster(2).unwrap();
     let cm = CostModel::new(&g, &d);
-    let free = CostTables::build(&cm, 2);
+    let free = CostTables::build(&cm, 2).unwrap();
     let inf = CostTables::build_budgeted(&cm, 2, Some(MemBudget::unlimited())).unwrap();
     assert_eq!(free.configs, inf.configs);
     assert_eq!(free.node_cost, inf.node_cost);
@@ -131,7 +131,7 @@ fn tight_budget_masks_configs_and_the_optimum_stays_feasible() {
     let g = nets::vgg16(32 * 4).unwrap();
     let d = DeviceGraph::p100_cluster(4).unwrap();
     let cm = CostModel::new(&g, &d);
-    let free = CostTables::build(&cm, 4);
+    let free = CostTables::build(&cm, 4).unwrap();
     let tight =
         CostTables::build_budgeted(&cm, 4, Some(MemBudget { bytes_per_dev: budget }))
             .unwrap();

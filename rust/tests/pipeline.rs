@@ -157,7 +157,7 @@ fn central_ps_changes_the_optimum_but_not_correctness() {
     let g = nets::alexnet(32 * 4).unwrap();
     let d = DeviceGraph::p100_cluster(4).unwrap();
     let cm = CostModel::new(&g, &d).with_sync(SyncModel::Central);
-    let tables = CostTables::build(&cm, 4);
+    let tables = CostTables::build(&cm, 4).unwrap();
     let opt = optimizer::optimize(&tables);
     for name in ["data", "model", "owt"] {
         let s = strategies::by_name(name, &g, 4).unwrap();
@@ -171,11 +171,11 @@ fn measured_tc_override_flows_through() {
     let g = nets::lenet5(32).unwrap();
     let d = DeviceGraph::p100_cluster(2).unwrap();
     let mut cm = CostModel::new(&g, &d);
-    let base_tables = CostTables::build(&cm, 2);
+    let base_tables = CostTables::build(&cm, 2).unwrap();
     let zeroed: Vec<Vec<f64>> =
         base_tables.configs.iter().map(|cfgs| vec![0.0; cfgs.len()]).collect();
     cm.measured_tc = Some(zeroed);
-    let tables = CostTables::build(&cm, 2);
+    let tables = CostTables::build(&cm, 2).unwrap();
     let opt = optimizer::optimize(&tables);
     let base = optimizer::optimize(&base_tables);
     assert!(opt.cost < base.cost, "zeroed compute must lower the optimum");

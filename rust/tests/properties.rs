@@ -48,7 +48,7 @@ fn elimination_dp_equals_exhaustive_search() {
         let ndev = 2;
         let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&net, &d);
-        let tables = CostTables::build(&cm, ndev);
+        let tables = CostTables::build(&cm, ndev).unwrap();
         let dp = optimizer::optimize(&tables);
         let brute = dfs::dfs_optimal(&tables, None);
         assert!(brute.complete, "random net too large for exhaustive search");
@@ -69,7 +69,7 @@ fn optimum_never_worse_than_baselines() {
         let ndev = 2;
         let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&net, &d);
-        let tables = CostTables::build(&cm, ndev);
+        let tables = CostTables::build(&cm, ndev).unwrap();
         let opt = optimizer::optimize(&tables);
         for name in ["data", "model", "owt"] {
             let s = strategies::by_name(name, &net, ndev).unwrap();
@@ -252,7 +252,7 @@ fn strategy_cost_table_consistency() {
         let ndev = 2;
         let d = DeviceGraph::p100_cluster(ndev).unwrap();
         let cm = CostModel::new(&net, &d);
-        let tables = CostTables::build(&cm, ndev);
+        let tables = CostTables::build(&cm, ndev).unwrap();
         let idx: Vec<usize> =
             (0..net.num_layers()).map(|l| g.usize_in(0, tables.num_configs(l))).collect();
         let s = tables.strategy_from_indices(&idx);
