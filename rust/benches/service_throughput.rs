@@ -1,14 +1,22 @@
-//! Plan-serving throughput: requests/s through one shared `PlanService`,
-//! cold (first touch pays tables + search + plan build) versus warm
-//! (cache hits), single- versus multi-threaded.
+//! Plan-serving throughput and latency: the in-process `PlanService`
+//! hammer (cold/warm, single/multi-threaded), plus a real TCP load test
+//! against `optcnn serve`'s bounded worker pool — hundreds of concurrent
+//! connections, client-measured p50/p99 request latency, the
+//! store-backed warm-restart path (asserted to build zero tables), and
+//! a deterministic overload-shedding scenario.
 //!
 //! Run: `cargo bench --bench service_throughput`
+//! `OPTCNN_BENCH_JSON=<path>` additionally writes the measurements as a
+//! machine-readable document (the CI `bench-serve` artifact).
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
-use optcnn::planner::{Network, PlanRequest, PlanService, StrategyKind};
-use optcnn::util::benchkit::time_once;
+use optcnn::planner::{serve, Network, PlanRequest, PlanService, StrategyKind};
+use optcnn::util::benchkit::{bench_json, time_once};
 use optcnn::util::table::Table;
 
 /// The working set: {lenet5, alexnet} x {2, 4} devices x all 4
@@ -23,6 +31,21 @@ fn grid() -> Vec<PlanRequest> {
         }
     }
     reqs
+}
+
+/// The same grid as newline-delimited wire requests.
+fn wire_grid() -> Vec<String> {
+    let mut lines = Vec::new();
+    for net in [Network::LeNet5, Network::AlexNet] {
+        for ndev in [2usize, 4] {
+            for kind in StrategyKind::ALL {
+                lines.push(format!(
+                    r#"{{"net":"{net}","devices":{ndev},"strategy":"{kind}","want":"evaluate"}}"#
+                ));
+            }
+        }
+    }
+    lines
 }
 
 /// Answer `total` requests round-robin over `reqs` from `threads`
@@ -45,35 +68,85 @@ fn hammer(service: &PlanService, reqs: &[PlanRequest], total: usize, threads: us
     dt
 }
 
+/// Drive `clients` concurrent connections against the server, each
+/// sending `per_client` grid requests on one connection and measuring
+/// the write-to-reply wall latency of every request. Returns the sorted
+/// per-request latencies in seconds.
+fn load(addr: SocketAddr, lines: &[String], clients: usize, per_client: usize) -> Vec<f64> {
+    let mut latencies: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let stream = TcpStream::connect(addr).expect("connect");
+                    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                    let mut writer = stream;
+                    let mut out = Vec::with_capacity(per_client);
+                    for r in 0..per_client {
+                        let line = &lines[(c + r) % lines.len()];
+                        let t0 = Instant::now();
+                        writer.write_all(line.as_bytes()).expect("write");
+                        writer.write_all(b"\n").expect("write");
+                        writer.flush().expect("flush");
+                        let mut reply = String::new();
+                        reader.read_line(&mut reply).expect("read");
+                        out.push(t0.elapsed().as_secs_f64());
+                        assert!(
+                            reply.contains(r#""ok":true"#),
+                            "load-test request failed: {reply}"
+                        );
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    latencies
+}
+
+/// The `q`-quantile (nearest-rank) of an ascending non-empty slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Generous pool bounds for the latency scenarios: the point there is
+/// queueing behavior under a bounded worker count, not shedding.
+fn roomy() -> serve::ServeOptions {
+    serve::ServeOptions { queue_cap: 512, max_conns: 4096, ..Default::default() }
+}
+
 fn main() {
     let reqs = grid();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut json: Vec<(String, f64)> = Vec::new();
     let mut table = Table::new(
         "plan-service throughput ({lenet5, alexnet} x {2, 4} devices x 4 strategies)",
         &["scenario", "requests", "seconds", "req/s"],
     );
-    let mut row = |name: String, n: usize, dt: f64| {
+    let mut row = |table: &mut Table, name: String, n: usize, dt: f64| {
         table.row(vec![name, n.to_string(), format!("{dt:.3}"), format!("{:.0}", n as f64 / dt)]);
     };
 
     // cold, single-threaded: every request is a first touch
     let service = Arc::new(PlanService::new());
     let cold1 = hammer(&service, &reqs, reqs.len(), 1);
-    row("cold, 1 thread".into(), reqs.len(), cold1);
+    row(&mut table, "cold, 1 thread".into(), reqs.len(), cold1);
 
     // warm: the same grid over and over, everything served from caches
     let rounds = 50;
     let total = reqs.len() * rounds;
     let warm1 = hammer(&service, &reqs, total, 1);
-    row("warm, 1 thread".into(), total, warm1);
+    row(&mut table, "warm, 1 thread".into(), total, warm1);
     let warm_n = hammer(&service, &reqs, total, threads);
-    row(format!("warm, {threads} threads"), total, warm_n);
+    row(&mut table, format!("warm, {threads} threads"), total, warm_n);
 
     // cold, multi-threaded: N workers racing on fresh state exercises
     // the single-flight memo (duplicate misses block on one build)
     let fresh = Arc::new(PlanService::new());
     let cold_n = hammer(&fresh, &reqs, reqs.len(), threads);
-    row(format!("cold, {threads} threads"), reqs.len(), cold_n);
+    row(&mut table, format!("cold, {threads} threads"), reqs.len(), cold_n);
 
     table.print();
     let s = fresh.stats();
@@ -84,4 +157,99 @@ fn main() {
     );
     assert_eq!(s.table_builds, 4, "one build per distinct (network, cluster) state");
     assert_eq!(s.plan_hits + s.plan_misses, reqs.len() as u64);
+    json.push(("inprocess/cold_1t_s".into(), cold1));
+    json.push(("inprocess/warm_1t_s".into(), warm1));
+    json.push((format!("inprocess/warm_{threads}t_s"), warm_n));
+
+    // == TCP load test against the bounded worker pool ==
+    let lines = wire_grid();
+    let clients = 200;
+    let per_client = 4;
+    println!("\n== serve: {clients} concurrent connections x {per_client} requests ==");
+    let mut serve_table =
+        Table::new("optcnn serve latency (client-measured)", &["scenario", "p50", "p99", "max"]);
+
+    // cold server: the first touches pay table builds inside requests
+    let svc = Arc::new(PlanService::new());
+    let handle = serve::spawn_opts("127.0.0.1:0", Arc::clone(&svc), roomy()).expect("spawn");
+    let cold = load(handle.local_addr(), &lines, clients, per_client);
+    // warm server: identical traffic, everything answered from shards
+    let warm = load(handle.local_addr(), &lines, clients, per_client);
+    handle.shutdown();
+
+    // store-backed warm restart: a *fresh* service over a primed plan
+    // store serves the whole grid from disk — zero table builds
+    let store_dir =
+        std::env::temp_dir().join(format!("optcnn-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let primer = PlanService::builder().plan_store(&store_dir).build().expect("primer");
+    for req in &reqs {
+        primer.plan(req).expect("prime store");
+    }
+    drop(primer);
+    let restarted =
+        Arc::new(PlanService::builder().plan_store(&store_dir).build().expect("restart"));
+    let handle =
+        serve::spawn_opts("127.0.0.1:0", Arc::clone(&restarted), roomy()).expect("spawn");
+    let store_warm = load(handle.local_addr(), &lines, clients, per_client);
+    handle.shutdown();
+    let s = restarted.stats();
+    assert_eq!(
+        s.table_builds, 0,
+        "a store-backed restart must serve the whole grid without building"
+    );
+    assert_eq!(s.store_hits, reqs.len() as u64, "every grid point loaded from disk once");
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    for (name, lat) in [("cold", &cold), ("warm", &warm), ("store_warm", &store_warm)] {
+        let (p50, p99) = (quantile(lat, 0.50), quantile(lat, 0.99));
+        let max = *lat.last().expect("nonempty");
+        serve_table.row(vec![
+            name.to_string(),
+            format!("{:.1}ms", p50 * 1e3),
+            format!("{:.1}ms", p99 * 1e3),
+            format!("{:.1}ms", max * 1e3),
+        ]);
+        json.push((format!("serve/{name}/p50_s"), p50));
+        json.push((format!("serve/{name}/p99_s"), p99));
+    }
+    serve_table.print();
+
+    // overload: a single parked worker with a rendezvous queue must shed
+    // every extra connection with the typed reply, deterministically
+    let svc = Arc::new(PlanService::new());
+    let tiny = serve::ServeOptions { workers: 1, queue_cap: 0, ..Default::default() };
+    let handle = serve::spawn_opts("127.0.0.1:0", Arc::clone(&svc), tiny).expect("spawn");
+    let addr = handle.local_addr();
+    let holder = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(holder.try_clone().expect("clone"));
+    let mut writer = holder;
+    writer.write_all(b"{\"want\": \"stats\"}\n").expect("write");
+    writer.flush().expect("flush");
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("read");
+    let flood = 64;
+    let mut shed_seen = 0usize;
+    for _ in 0..flood {
+        let mut r = BufReader::new(TcpStream::connect(addr).expect("connect"));
+        let mut line = String::new();
+        r.read_line(&mut line).expect("read");
+        if line.contains(r#""error":"overloaded""#) {
+            shed_seen += 1;
+        }
+    }
+    let frac = shed_seen as f64 / flood as f64;
+    println!("overload: {shed_seen}/{flood} connections shed with the typed reply");
+    assert_eq!(shed_seen, flood, "a saturated rendezvous pool sheds every extra connection");
+    assert_eq!(handle.metrics().shed.load(Ordering::Relaxed), flood as u64);
+    json.push(("serve/overload/shed_fraction".into(), frac));
+    drop(writer);
+    drop(reader);
+    handle.shutdown();
+
+    if let Ok(path) = std::env::var("OPTCNN_BENCH_JSON") {
+        let doc = bench_json("serve", &json).expect("serve bench measured nothing");
+        std::fs::write(&path, doc.to_string()).expect("writing bench JSON");
+        println!("wrote machine-readable results to {path}");
+    }
 }

@@ -324,6 +324,43 @@ pub struct ClusterFingerprint {
     compute: [u64; 5],
 }
 
+impl ClusterFingerprint {
+    /// The fingerprint's canonical textual form: every field the cost
+    /// model reads, serialized deterministically (f64s as hex bit
+    /// patterns, so `-0.0` vs `0.0` and NaN payloads survive). Two
+    /// fingerprints are equal exactly when their canonical strings are —
+    /// this is the cluster half of the on-disk plan store's content
+    /// address ([`crate::store`]), so it must stay stable across
+    /// processes, architectures, and compiler versions (unlike
+    /// `DefaultHasher` output, which is only stable within one process).
+    pub fn canonical(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(32 + 17 * self.bw_bits.len());
+        s.push_str("nodes=");
+        for (i, n) in self.node_of.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{n}");
+        }
+        s.push_str(";bw=");
+        for (i, b) in self.bw_bits.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{b:016x}");
+        }
+        let _ = write!(s, ";host={:016x};node={:016x};compute=", self.host_bw, self.node_bw);
+        for (i, c) in self.compute.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{c:016x}");
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

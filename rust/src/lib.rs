@@ -57,6 +57,7 @@ pub mod planner;
 pub mod prop;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod tensor;
 pub mod util;
 pub mod verify;

@@ -67,6 +67,8 @@ USAGE:
                   [--prune-dominated]
   optcnn serve    [--addr 127.0.0.1:7878] [--shards 8] [--cache-cap 8]
                   [--build-threads <n>] [--no-verify] [--prune-dominated]
+                  [--workers <n>] [--queue-cap 64] [--max-conns 1024]
+                  [--request-timeout <ms>] [--plan-store <dir>]
   optcnn train    [--steps 100] [--devices 4] [--strategy layerwise]
                   [--lr 0.01] [--artifacts artifacts]
   optcnn profile  [--devices 4] [--reps 3]   (measured-t_C search, minicnn)
@@ -859,25 +861,44 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let cap = args.usize_or("cache-cap", 8)?;
     let build_threads = args.usize_or("build-threads", 0)?;
     let verify_loaded = !args.flag("no-verify");
-    let service = Arc::new(
-        PlanService::builder()
-            .shards(shards)
-            .shard_capacity(cap)
-            .build_threads(build_threads)
-            .verify_loaded(verify_loaded)
-            .prune_dominated(args.flag("prune-dominated"))
-            .build()?,
-    );
-    let handle = serve::spawn(addr, service)?;
+    let defaults = serve::ServeOptions::default();
+    let opts = serve::ServeOptions {
+        workers: args.usize_or("workers", defaults.workers)?,
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap)?,
+        max_conns: args.usize_or("max-conns", defaults.max_conns)?,
+        request_timeout: match args.get("request-timeout") {
+            None => defaults.request_timeout,
+            Some(ms) => std::time::Duration::from_millis(ms.parse().map_err(|_| {
+                OptError::InvalidArgument(format!(
+                    "--request-timeout: expected milliseconds, got `{ms}`"
+                ))
+            })?),
+        },
+    };
+    let mut builder = PlanService::builder()
+        .shards(shards)
+        .shard_capacity(cap)
+        .build_threads(build_threads)
+        .verify_loaded(verify_loaded)
+        .prune_dominated(args.flag("prune-dominated"));
+    if let Some(dir) = args.get("plan-store") {
+        builder = builder.plan_store(dir);
+    }
+    let service = Arc::new(builder.build()?);
+    let handle = serve::spawn_opts(addr, service, opts)?;
     println!(
         "optcnn serve: listening on {} ({shards} shards x {cap} plans)",
         handle.local_addr()
     );
+    if let Some(dir) = args.get("plan-store") {
+        println!("plan store: {dir} (content-addressed, verified on load)");
+    }
     println!("protocol: one JSON request per line, e.g.");
     println!(r#"  {{"net":"alexnet","devices":4,"strategy":"layerwise","want":"evaluate"}}"#);
     println!(r#"  optional "mem_limit": <bytes/device> bounds the layer-wise search"#);
     println!(r#"  {{"want":"analyze",...}} reports the pre-planning static analysis"#);
     println!(r#"  {{"want":"audit",...}} audits the cost tables + cross-checks backends"#);
+    println!(r#"  {{"want":"stats"}} / {{"want":"metrics"}} report counters + latency"#);
     if verify_loaded {
         println!(r#"  {{"want":"verify","plan":{{...}}}} checks a plan before caching it"#);
     } else {

@@ -1,0 +1,204 @@
+//! Lock-free serving metrics: a log-bucketed latency histogram and a
+//! balanced gauge, both plain atomics so the request hot path never
+//! takes a lock to record an observation (DESIGN.md §13).
+//!
+//! The histogram trades precision for a fixed footprint: one `AtomicU64`
+//! per power-of-two microsecond bucket. A reported quantile is the upper
+//! bound of the bucket holding the target rank, so it is exact to within
+//! a factor of two — the right resolution for spotting a p99 that moved
+//! from microseconds to milliseconds, which is what the `{"want":
+//! "metrics"}` probe exists for. Recording is a single `fetch_add`;
+//! reading sweeps the 64 buckets without stopping writers, so a quantile
+//! taken under load is a consistent-enough snapshot, never a torn one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of power-of-two buckets: bucket `i` holds observations in
+/// `[2^i, 2^(i+1))` microseconds (bucket 0 also absorbs sub-microsecond
+/// observations). 64 buckets cover any `u64` microsecond value.
+const BUCKETS: usize = 64;
+
+/// A fixed-size, lock-free histogram of durations in microseconds.
+///
+/// Writers call [`record`](LatencyHistogram::record) concurrently from
+/// any number of threads; readers call
+/// [`quantile`](LatencyHistogram::quantile) / [`count`](LatencyHistogram::count)
+/// at any time. All operations are wait-free single atomics per bucket.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+/// The bucket index of a microsecond observation: its bit length, so
+/// values in `[2^i, 2^(i+1))` share bucket `i`.
+fn bucket_of(us: u64) -> usize {
+    (63 - us.max(1).leading_zeros()) as usize
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one observation.
+    pub fn record(&self, elapsed: Duration) {
+        let us = u64::try_from(elapsed.as_micros()).unwrap_or(u64::MAX);
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations, in microseconds (mean = `sum_us / count`).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// The largest observation recorded, in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`) in microseconds: the upper bound
+    /// of the bucket containing the target rank, so exact to within 2x.
+    /// `None` on an empty histogram (there is no honest number to give).
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        // rank 1..=total: p50 of 10 observations is the 5th smallest
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // upper bound of bucket i, saturating for the top bucket
+                return Some((2u64 << i).wrapping_sub(1).max(1));
+            }
+        }
+        Some(u64::MAX)
+    }
+}
+
+/// A balanced up/down counter for in-flight work. Increments and
+/// decrements must pair (use a guard); the value is a point-in-time
+/// snapshot, exact only in quiescence.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// A gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Increment; returns the new value.
+    pub fn inc(&self) -> u64 {
+        self.value.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Decrement. Saturates at zero instead of wrapping, so an unpaired
+    /// decrement cannot turn the gauge into 2^64.
+    pub fn dec(&self) {
+        let mut cur = self.value.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.value.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// The current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn quantiles_bound_the_observations_within_2x() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), None, "empty histogram has no quantile");
+        for us in [10u64, 20, 30, 40, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_us(), 1100);
+        assert_eq!(h.max_us(), 1000);
+        // p50 rank is the 3rd smallest (30us, bucket [16,32) -> 31)
+        assert_eq!(h.quantile(0.5), Some(31));
+        // p99 rank is the 5th (1000us, bucket [512,1024) -> 1023)
+        assert_eq!(h.quantile(0.99), Some(1023));
+        // every quantile upper-bounds the true value and is within 2x
+        for (q, truth) in [(0.2, 10u64), (0.4, 20), (0.6, 30), (0.8, 40), (1.0, 1000)] {
+            let est = h.quantile(q).unwrap();
+            assert!(est >= truth && est < truth * 2, "q{q}: {est} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn histogram_is_safe_under_concurrent_recording() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for us in 1..=1000u64 {
+                        h.record(Duration::from_micros(us));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.max_us(), 1000);
+        assert!(h.quantile(0.5).unwrap() >= 500);
+    }
+
+    #[test]
+    fn gauge_saturates_at_zero() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.inc(), 1);
+        assert_eq!(g.inc(), 2);
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // unpaired: must not wrap
+        assert_eq!(g.get(), 0);
+    }
+}

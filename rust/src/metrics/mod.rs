@@ -1,4 +1,10 @@
-//! Throughput and communication-cost accounting (Figures 7 & 8).
+//! Throughput and communication-cost accounting (Figures 7 & 8), plus
+//! the lock-free serving metrics ([`latency`]) behind `optcnn serve`'s
+//! `{"want": "metrics"}` probe (DESIGN.md §13).
+
+pub mod latency;
+
+pub use latency::{Gauge, LatencyHistogram};
 
 use crate::cost::CostModel;
 use crate::parallel::Strategy;

@@ -60,6 +60,7 @@
 
 pub mod backend;
 pub mod cluster;
+pub mod pool;
 pub mod serve;
 pub mod service;
 

@@ -1,0 +1,186 @@
+//! A bounded worker pool with explicit backpressure (DESIGN.md §13).
+//!
+//! `optcnn serve` used to spawn one unbounded thread per connection — a
+//! burst of N clients meant N threads and N in-flight table builds, with
+//! the queueing happening implicitly (and invisibly) in the kernel's
+//! scheduler. This pool makes both resources explicit: a fixed number of
+//! worker threads pull jobs from a bounded queue, and when the queue is
+//! full [`try_execute`](WorkerPool::try_execute) **fails fast**, handing
+//! the job back so the caller can shed load with a typed overload reply
+//! instead of queueing unboundedly. Built on
+//! [`std::sync::mpsc::sync_channel`] — no new dependencies, and the
+//! rendezvous semantics at capacity 0 are exactly the "no queue at all"
+//! degenerate case.
+//!
+//! Shutdown is graceful by construction: dropping the sender disconnects
+//! the channel, workers drain every job already accepted, then exit —
+//! so a request the server said yes to is always answered, and a request
+//! it cannot take is refused *loudly* at the accept loop.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::util::sync::lock;
+
+/// A queued unit of work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed worker threads over a bounded job queue. See the [module
+/// docs](self).
+pub struct WorkerPool {
+    /// `Some` while accepting; taken (dropped) to initiate drain.
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (at least 1) over a queue holding at most
+    /// `queue_cap` pending jobs. `queue_cap == 0` is a rendezvous: a job
+    /// is accepted only if a worker is ready to take it right now.
+    pub fn new(workers: usize, queue_cap: usize) -> WorkerPool {
+        let (tx, rx) = sync_channel::<Job>(queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || worker_loop(&rx))
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue `job`, or hand it back if the queue is full — the
+    /// backpressure signal. The caller owns the rejected job again and
+    /// decides what shedding means (for the server: an `overloaded`
+    /// reply). Also rejects after [`shutdown`](WorkerPool::shutdown)
+    /// has begun.
+    pub fn try_execute(&self, job: Job) -> std::result::Result<(), Job> {
+        let Some(tx) = &self.tx else { return Err(job) };
+        match tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(job) | TrySendError::Disconnected(job)) => Err(job),
+        }
+    }
+
+    /// Stop accepting, drain every queued job, and join the workers.
+    /// Blocks until in-flight and queued work has finished.
+    pub fn shutdown(&mut self) {
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One worker: pull until the channel is closed *and* drained. The lock
+/// guard is a temporary inside the `recv` expression, so it is released
+/// before the job runs — dequeueing is serialized, execution is not.
+fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        let job = lock(rx).recv();
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // sender dropped and queue empty
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_jobs_and_drains_on_shutdown() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkerPool::new(4, 64);
+        assert_eq!(pool.workers(), 4);
+        for _ in 0..50 {
+            let done = Arc::clone(&done);
+            pool.try_execute(Box::new(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            }))
+            .unwrap_or_else(|_| panic!("queue of 64 rejected a burst of 50"));
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 50, "shutdown drains accepted jobs");
+        // after shutdown, new jobs are refused, not lost silently
+        assert!(pool.try_execute(Box::new(|| {})).is_err());
+    }
+
+    #[test]
+    fn full_queue_hands_the_job_back() {
+        // one worker parked on a gate + capacity-1 queue: the 3rd job
+        // must come back as backpressure, deterministically
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let mut pool = WorkerPool::new(1, 1);
+        pool.try_execute(Box::new(move || {
+            started_tx.send(()).unwrap();
+            gate_rx.recv().unwrap();
+        }))
+        .unwrap_or_else(|_| panic!("first job must be accepted"));
+        // wait until the worker holds job 1, so job 2 sits in the queue
+        started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        pool.try_execute(Box::new(|| {})).unwrap_or_else(|_| panic!("queue slot is free"));
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = Arc::clone(&ran);
+        let rejected = pool.try_execute(Box::new(move || {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert!(rejected.is_err(), "full queue must reject");
+        // the rejected closure is handed back intact and still runnable
+        rejected.unwrap_err()();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        gate_tx.send(()).unwrap();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_still_means_one() {
+        let mut pool = WorkerPool::new(0, 1);
+        assert_eq!(pool.workers(), 1);
+        let (tx, rx) = mpsc::channel();
+        pool.try_execute(Box::new(move || tx.send(7).unwrap()))
+            .unwrap_or_else(|_| panic!("accepted"));
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)).unwrap(), 7);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn jobs_run_concurrently_across_workers() {
+        // two workers must be able to hold two jobs at once: each job
+        // waits for the other via a barrier — impossible serially
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let (tx, rx) = mpsc::channel();
+        let mut pool = WorkerPool::new(2, 2);
+        for _ in 0..2 {
+            let barrier = Arc::clone(&barrier);
+            let tx = tx.clone();
+            pool.try_execute(Box::new(move || {
+                barrier.wait();
+                tx.send(()).unwrap();
+            }))
+            .unwrap_or_else(|_| panic!("accepted"));
+        }
+        for _ in 0..2 {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        pool.shutdown();
+    }
+}

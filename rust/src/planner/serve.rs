@@ -73,27 +73,52 @@
 //! a server started with `--no-verify` admits plans unchecked
 //! (`"verified": false`).
 //!
-//! Every connection gets its own thread; all connections share one
-//! [`PlanService`], so a plan primed by any client is a cache hit for
-//! every other. Malformed requests answer `{"ok": false, ...}` on the
-//! same connection instead of dropping it.
+//! A bare `{"want": "metrics"}` probe answers the wire-level serving
+//! metrics (DESIGN.md §13): request count and p50/p99/max latency from
+//! the lock-free histogram ([`crate::metrics::latency`]), the in-flight
+//! and open-connection gauges, the shed and accept-error counters, and
+//! the plan-store counters — without planning anything.
+//!
+//! **Serving model.** Connections are handled by a bounded
+//! [`WorkerPool`](super::pool::WorkerPool) (`--workers` threads pulling
+//! from a `--queue-cap`-bounded queue) instead of one unbounded thread
+//! per connection, and all workers share one [`PlanService`], so a plan
+//! primed by any client is a cache hit for every other. When the queue
+//! is full — or more than `--max-conns` connections are open — the
+//! accept loop **sheds load** with the typed reply
+//! `{"ok": false, "error": "overloaded", "retry_after_ms": N}` and
+//! closes, instead of queueing unboundedly. Every accepted stream gets
+//! `TCP_NODELAY` plus read/write deadlines (`--request-timeout`): a
+//! client that stalls mid-line, or never reads its reply, is
+//! disconnected rather than parking a worker forever (the planning work
+//! itself is already bounded by the pre-planning search-space cap).
+//! Accept errors are counted ([`ServiceStats::accept_errors`]), never
+//! silently swallowed. Shutdown is graceful: in-flight requests finish
+//! and their replies are written; parked connections are closed.
+//! Malformed requests answer `{"ok": false, ...}` on the same
+//! connection instead of dropping it.
 
 // Wire-facing request path: a malformed or hostile request must come
 // back as a typed `OptError`, never a panic in a serving thread.
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::device::ComputeModel;
 use crate::error::{OptError, Result};
 use crate::graph::CompGraph;
+use crate::metrics::{Gauge, LatencyHistogram};
 use crate::plan::ExecutionPlan;
 use crate::util::json::Json;
+use crate::util::sync::lock;
 
+use super::pool::WorkerPool;
 use super::service::{PlanRequest, PlanService, ServiceStats, VerifyOutcome};
 use super::{ClusterSpec, Network, NetworkSpec, StrategyKind, PER_GPU_BATCH};
 
@@ -116,6 +141,9 @@ pub enum Request {
     /// Return the service's aggregate counters ([`ServiceStats`]);
     /// carries no plan request at all.
     Stats,
+    /// Return the wire-level serving metrics ([`ServeMetrics`]) plus the
+    /// plan-store and accept-error counters; carries no plan request.
+    Metrics,
     /// Statically verify the carried plan document against the request's
     /// (network, cluster) and admit it into the plan cache
     /// ([`PlanService::ingest`]).
@@ -179,17 +207,17 @@ pub fn parse_request(line: &str) -> Result<Request> {
     let v = Json::parse(line).map_err(|e| bad(&format!("malformed request JSON: {e}")))?;
     let want = v.get("want").map(Json::as_str);
     match want {
-        Some(Some("stats")) => {
-            // a stats probe carries no planning fields — reject them so a
+        Some(Some(probe @ ("stats" | "metrics"))) => {
+            // a counter probe carries no planning fields — reject them so a
             // mangled plan request cannot silently answer as a counter dump
             let keys =
                 ["net", "graph", "devices", "cluster", "strategy", "batch", "mem_limit", "plan"];
             for key in keys {
                 if v.get(key).is_some() {
-                    return Err(bad(&format!("`{key}` does not combine with want=\"stats\"")));
+                    return Err(bad(&format!("`{key}` does not combine with want=\"{probe}\"")));
                 }
             }
-            Ok(Request::Stats)
+            Ok(if probe == "stats" { Request::Stats } else { Request::Metrics })
         }
         Some(Some("verify")) => Ok(parse_verify(&v)?),
         Some(Some("analyze")) => {
@@ -228,7 +256,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }
         Some(other) => Err(bad(&format!(
             "`want` must be \"plan\", \"evaluate\", \"analyze\", \"audit\", \
-             \"stats\", or \"verify\", got {other:?}"
+             \"stats\", \"metrics\", or \"verify\", got {other:?}"
         ))),
     }
 }
@@ -277,10 +305,10 @@ fn parse_plan_request(v: &Json) -> Result<PlanRequest> {
         // bytes fit u64 exactly only up to 2^53 off an f64 wire — more
         // HBM than any cluster; reject the rest rather than round
         let bytes = m
-            .as_f64()
-            .filter(|b| b.fract() == 0.0 && *b >= 1.0 && *b <= (1u64 << 53) as f64)
+            .as_exact_u64()
+            .filter(|b| *b >= 1 && *b <= 1u64 << 53)
             .ok_or_else(|| bad("`mem_limit` must be a whole number of bytes (>= 1)"))?;
-        req = req.mem_limit(bytes as u64);
+        req = req.mem_limit(bytes);
     }
     Ok(req)
 }
@@ -478,14 +506,66 @@ fn stats_json(s: &ServiceStats) -> Json {
         ("memo_misses", Json::Num(s.memo_misses as f64)),
         ("build_workers", Json::Num(s.build_workers as f64)),
         ("pruned_configs", Json::Num(s.pruned_configs as f64)),
+        ("store_hits", Json::Num(s.store_hits as f64)),
+        ("store_misses", Json::Num(s.store_misses as f64)),
+        ("store_writes", Json::Num(s.store_writes as f64)),
+        ("store_rejects", Json::Num(s.store_rejects as f64)),
+        ("store_errors", Json::Num(s.store_errors as f64)),
+        ("accept_errors", Json::Num(s.accept_errors as f64)),
     ])
 }
 
-fn respond(service: &PlanService, line: &str) -> Result<Json> {
+/// Wire-level serving metrics (DESIGN.md §13), shared by the accept
+/// loop, the workers, and the `{"want": "metrics"}` probe. Every field
+/// is lock-free — recording a latency or bumping a gauge never blocks a
+/// serving thread, and the probe reads a consistent-enough snapshot
+/// without stopping the world.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Per-request wall latency: the `handle_line` span, parse to reply.
+    pub requests: LatencyHistogram,
+    /// Requests being handled right now.
+    pub in_flight: Gauge,
+    /// Connections currently open (queued or active).
+    pub open_conns: Gauge,
+    /// Connections accepted over the server's lifetime.
+    pub connections: AtomicU64,
+    /// Connections refused with the typed `overloaded` reply.
+    pub shed: AtomicU64,
+}
+
+/// JSON form of [`ServeMetrics`] + the service's store/accept counters —
+/// the `{"want": "metrics"}` payload. Latency quantiles are `null`
+/// until the first request has been recorded.
+fn metrics_json(m: &ServeMetrics, s: &ServiceStats) -> Json {
+    let quant = |q: f64| m.requests.quantile(q).map_or(Json::Null, |us| Json::Num(us as f64));
+    Json::obj(vec![
+        ("requests", Json::Num(m.requests.count() as f64)),
+        ("p50_us", quant(0.50)),
+        ("p99_us", quant(0.99)),
+        ("max_us", Json::Num(m.requests.max_us() as f64)),
+        ("in_flight", Json::Num(m.in_flight.get() as f64)),
+        ("open_conns", Json::Num(m.open_conns.get() as f64)),
+        ("connections", Json::Num(m.connections.load(Ordering::Relaxed) as f64)),
+        ("shed", Json::Num(m.shed.load(Ordering::Relaxed) as f64)),
+        ("accept_errors", Json::Num(s.accept_errors as f64)),
+        ("store_hits", Json::Num(s.store_hits as f64)),
+        ("store_misses", Json::Num(s.store_misses as f64)),
+        ("store_writes", Json::Num(s.store_writes as f64)),
+        ("store_rejects", Json::Num(s.store_rejects as f64)),
+        ("store_errors", Json::Num(s.store_errors as f64)),
+    ])
+}
+
+fn respond(service: &PlanService, metrics: &ServeMetrics, line: &str) -> Result<Json> {
     match parse_request(line)? {
         Request::Stats => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("stats", stats_json(&service.stats())),
+        ])),
+        Request::Metrics => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", metrics_json(metrics, &service.stats())),
         ])),
         Request::Plan(req) => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
@@ -534,15 +614,38 @@ fn error_reply(msg: &str) -> String {
 }
 
 /// Handle one request line, always producing a single-line JSON reply —
-/// the pure core of the server, also usable without a socket.
-pub fn handle_line(service: &PlanService, line: &str) -> String {
-    match respond(service, line) {
+/// the pure core of the server, also usable without a socket. The span
+/// is recorded into `metrics` (latency histogram + in-flight gauge), and
+/// a `{"want": "metrics"}` line answers from the same `metrics`.
+pub fn handle_line(service: &PlanService, metrics: &ServeMetrics, line: &str) -> String {
+    let start = Instant::now();
+    metrics.in_flight.inc();
+    let reply = match respond(service, metrics, line) {
         Ok(body) => body.to_string(),
         Err(e) => error_reply(&e.to_string()),
+    };
+    metrics.in_flight.dec();
+    metrics.requests.record(start.elapsed());
+    reply
+}
+
+/// Serve one connection until EOF, I/O error, or deadline. Runs on a
+/// pool worker; `registry` lets [`ServeHandle::shutdown`] unpark the
+/// blocking read so drain never waits out a `--request-timeout`.
+fn handle_conn(
+    stream: TcpStream,
+    service: &PlanService,
+    metrics: &ServeMetrics,
+    registry: &ConnRegistry,
+) {
+    let id = registry.register(&stream);
+    conn_loop(stream, service, metrics);
+    if let Some(id) = id {
+        registry.deregister(id);
     }
 }
 
-fn handle_conn(stream: TcpStream, service: &PlanService) {
+fn conn_loop(stream: TcpStream, service: &PlanService, metrics: &ServeMetrics) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = BufWriter::new(stream);
@@ -571,7 +674,7 @@ fn handle_conn(stream: TcpStream, service: &PlanService) {
         if line.is_empty() {
             continue;
         }
-        let reply = handle_line(service, line);
+        let reply = handle_line(service, metrics, line);
         let io = writer
             .write_all(reply.as_bytes())
             .and_then(|()| writer.write_all(b"\n"))
@@ -582,12 +685,142 @@ fn handle_conn(stream: TcpStream, service: &PlanService) {
     }
 }
 
-/// A running server: the accept-loop thread plus one thread per open
-/// connection, all sharing one [`PlanService`].
+/// How long a shed client should wait before retrying, carried in the
+/// typed overload reply as `retry_after_ms`.
+pub const RETRY_AFTER_MS: u64 = 100;
+
+/// The typed backpressure reply the accept loop sheds load with.
+fn overloaded_reply() -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("overloaded".to_string())),
+        ("retry_after_ms", Json::Num(RETRY_AFTER_MS as f64)),
+    ])
+    .to_string()
+}
+
+/// Refuse `stream` with the overload reply and close it. Runs on the
+/// accept thread — the whole point is that shedding never waits for a
+/// worker.
+fn shed(mut stream: TcpStream, metrics: &ServeMetrics) {
+    metrics.shed.fetch_add(1, Ordering::Relaxed);
+    let reply = overloaded_reply();
+    let _ = stream
+        .write_all(reply.as_bytes())
+        .and_then(|()| stream.write_all(b"\n"))
+        .and_then(|()| stream.flush());
+}
+
+/// Tuning knobs for [`spawn_opts`] — the CLI flags of `optcnn serve`.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads handling connections; `0` means one per core.
+    pub workers: usize,
+    /// Bound on connections accepted but not yet picked up by a worker;
+    /// `0` is a rendezvous queue (accept only if a worker is idle).
+    pub queue_cap: usize,
+    /// Bound on open connections (queued + active); connections beyond
+    /// it are shed even if the queue has room.
+    pub max_conns: usize,
+    /// Read/write deadline on every connection: a client that stalls
+    /// mid-line or never drains its reply is disconnected.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            workers: 0,
+            queue_cap: 64,
+            max_conns: 1024,
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl ServeOptions {
+    /// The worker count after resolving `0` to the core count.
+    fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map_or(4, std::num::NonZeroUsize::get)
+    }
+}
+
+/// Open-connection registry: a read-shutdown handle per live connection,
+/// so graceful shutdown can unpark workers blocked in `read_until`
+/// without killing in-flight replies (`Shutdown::Read` leaves the write
+/// half alone — a reply being computed is still delivered).
+struct ConnRegistry {
+    draining: AtomicBool,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next: AtomicU64,
+}
+
+impl ConnRegistry {
+    fn new() -> ConnRegistry {
+        ConnRegistry {
+            draining: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    /// Track `stream`; returns `None` (untracked) only if the fd cannot
+    /// be duplicated. A registration after drain has begun is read-shut
+    /// immediately, closing the race with [`ConnRegistry::drain`].
+    fn register(&self, stream: &TcpStream) -> Option<u64> {
+        let clone = stream.try_clone().ok()?;
+        if self.draining.load(Ordering::SeqCst) {
+            let _ = clone.shutdown(Shutdown::Read);
+        }
+        let id = self.next.fetch_add(1, Ordering::SeqCst);
+        lock(&self.conns).insert(id, clone);
+        Some(id)
+    }
+
+    fn deregister(&self, id: u64) {
+        lock(&self.conns).remove(&id);
+    }
+
+    /// Read-shutdown every live connection: parked reads return EOF, so
+    /// workers finish their current request and exit their conn loops.
+    fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        for stream in lock(&self.conns).values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+    }
+}
+
+/// Decrements the open-connection gauge when the connection ends, on
+/// every exit path — including a job dropped unrun by a dying pool.
+struct ConnGuard {
+    metrics: Arc<ServeMetrics>,
+}
+
+impl ConnGuard {
+    fn new(metrics: &Arc<ServeMetrics>) -> ConnGuard {
+        metrics.open_conns.inc();
+        ConnGuard { metrics: Arc::clone(metrics) }
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.metrics.open_conns.dec();
+    }
+}
+
+/// A running server: the accept-loop thread feeding a bounded
+/// [`WorkerPool`], all sharing one [`PlanService`].
 pub struct ServeHandle {
     local: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    registry: Arc<ConnRegistry>,
 }
 
 impl ServeHandle {
@@ -597,6 +830,12 @@ impl ServeHandle {
         self.local
     }
 
+    /// The server's live wire metrics — what `{"want": "metrics"}`
+    /// reads, for callers holding the handle.
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Block until the accept loop exits — i.e. forever, for the CLI.
     pub fn join(mut self) {
         if let Some(h) = self.accept.take() {
@@ -604,10 +843,12 @@ impl ServeHandle {
         }
     }
 
-    /// Stop accepting new connections and join the accept loop. Open
-    /// connections finish naturally when their client disconnects.
+    /// Graceful shutdown: stop accepting, unpark blocked reads
+    /// (in-flight requests still finish and their replies are written),
+    /// then join the accept thread — which drains the worker pool.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.registry.drain();
         // wake the blocking accept with a throwaway connection
         let _ = TcpStream::connect(self.local);
         if let Some(h) = self.accept.take() {
@@ -616,34 +857,91 @@ impl ServeHandle {
     }
 }
 
-/// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 for ephemeral) and answer
-/// requests against `service` until [`ServeHandle::shutdown`].
+/// [`spawn_opts`] with default [`ServeOptions`].
 pub fn spawn(addr: &str, service: Arc<PlanService>) -> Result<ServeHandle> {
+    spawn_opts(addr, service, ServeOptions::default())
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 for ephemeral) and answer
+/// requests against `service` until [`ServeHandle::shutdown`], on a
+/// bounded worker pool per `opts` (see the module docs' serving model).
+pub fn spawn_opts(
+    addr: &str,
+    service: Arc<PlanService>,
+    opts: ServeOptions,
+) -> Result<ServeHandle> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| OptError::Io(format!("bind {addr}: {e}")))?;
     let local = listener
         .local_addr()
         .map_err(|e| OptError::Io(format!("local addr of {addr}: {e}")))?;
     let stop = Arc::new(AtomicBool::new(false));
+    let metrics = Arc::new(ServeMetrics::default());
+    let registry = Arc::new(ConnRegistry::new());
     let stop_flag = Arc::clone(&stop);
+    let shared_metrics = Arc::clone(&metrics);
+    let shared_registry = Arc::clone(&registry);
+    let mut pool = WorkerPool::new(opts.resolved_workers(), opts.queue_cap);
     let accept = std::thread::spawn(move || {
         for conn in listener.incoming() {
             if stop_flag.load(Ordering::SeqCst) {
                 break;
             }
-            if let Ok(stream) = conn {
-                let svc = Arc::clone(&service);
-                std::thread::spawn(move || handle_conn(stream, &svc));
+            let stream = match conn {
+                Ok(stream) => stream,
+                Err(_) => {
+                    // count it — a persistent accept failure (fd
+                    // exhaustion, say) must be visible on the stats
+                    // probe, and the pause keeps a hard error from
+                    // spinning this loop at 100% CPU
+                    service.note_accept_error();
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+            };
+            shared_metrics.connections.fetch_add(1, Ordering::Relaxed);
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_read_timeout(Some(opts.request_timeout));
+            let _ = stream.set_write_timeout(Some(opts.request_timeout));
+            if shared_metrics.open_conns.get() >= opts.max_conns as u64 {
+                shed(stream, &shared_metrics);
+                continue;
+            }
+            // duplicate handle so a queue-full rejection can still write
+            // the overload reply after the stream has moved into the job
+            let shed_handle = stream.try_clone();
+            let guard = ConnGuard::new(&shared_metrics);
+            let svc = Arc::clone(&service);
+            let m = Arc::clone(&shared_metrics);
+            let reg = Arc::clone(&shared_registry);
+            let job: super::pool::Job = Box::new(move || {
+                let _open = guard;
+                handle_conn(stream, &svc, &m, &reg);
+            });
+            if let Err(job) = pool.try_execute(job) {
+                if let Ok(stream) = shed_handle {
+                    shed(stream, &shared_metrics);
+                }
+                drop(job); // closes the moved stream, releases the guard
             }
         }
+        // graceful drain: accepted connections are still answered
+        pool.shutdown();
     });
-    Ok(ServeHandle { local, stop, accept: Some(accept) })
+    Ok(ServeHandle { local, stop, accept: Some(accept), metrics, registry })
 }
 
 #[cfg(test)]
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+
+    /// Drive the pure core without a socket, with a throwaway metrics
+    /// sink — shadows the glob-imported [`super::handle_line`] so the
+    /// existing protocol tests stay signature-free.
+    fn handle_line(service: &PlanService, line: &str) -> String {
+        super::handle_line(service, &ServeMetrics::default(), line)
+    }
 
     /// The planning payload of a line that must parse as plan/evaluate.
     fn planning(line: &str) -> PlanRequest {
@@ -888,6 +1186,47 @@ mod tests {
             stats.get("memo_misses").and_then(Json::as_f64),
             Some(direct.memo_misses as f64)
         );
+    }
+
+    #[test]
+    fn metrics_want_reports_wire_counters() {
+        let service = PlanService::new();
+        let metrics = ServeMetrics::default();
+        // a cold probe parses and answers all-zero wire counters
+        assert!(matches!(parse_request(r#"{"want": "metrics"}"#).unwrap(), Request::Metrics));
+        let v =
+            Json::parse(&super::handle_line(&service, &metrics, r#"{"want": "metrics"}"#)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        let m = v.get("metrics").unwrap();
+        // the probe itself was in flight while the snapshot was taken
+        assert_eq!(m.get("in_flight").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(m.get("requests").and_then(Json::as_f64), Some(0.0));
+        assert!(matches!(m.get("p50_us"), Some(Json::Null)), "no latency before any request");
+        assert_eq!(m.get("shed").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(m.get("store_hits").and_then(Json::as_f64), Some(0.0));
+        // after a real request the histogram has a sample and quantiles
+        super::handle_line(&service, &metrics, r#"{"net": "lenet5", "devices": 2}"#);
+        let v =
+            Json::parse(&super::handle_line(&service, &metrics, r#"{"want": "metrics"}"#)).unwrap();
+        let m = v.get("metrics").unwrap();
+        assert_eq!(m.get("requests").and_then(Json::as_f64), Some(2.0));
+        let p50 = m.get("p50_us").and_then(Json::as_f64).unwrap();
+        let p99 = m.get("p99_us").and_then(Json::as_f64).unwrap();
+        let max = m.get("max_us").and_then(Json::as_f64).unwrap();
+        assert!(p50 >= 1.0 && p50 <= p99 && p99 >= max, "p50 {p50}, p99 {p99}, max {max}");
+        assert_eq!(m.get("in_flight").and_then(Json::as_f64), Some(1.0));
+        // planning fields do not combine with a metrics probe
+        let reply = handle_line(&service, r#"{"net": "lenet5", "want": "metrics"}"#);
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{reply}");
+    }
+
+    #[test]
+    fn overload_reply_is_typed_and_parseable() {
+        let v = Json::parse(&overloaded_reply()).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(v.get("error").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(v.get("retry_after_ms").and_then(Json::as_f64), Some(RETRY_AFTER_MS as f64));
     }
 
     #[test]

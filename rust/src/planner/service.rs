@@ -47,7 +47,9 @@
 #![deny(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -60,6 +62,7 @@ use crate::memory::MemBudget;
 use crate::optimizer::{strategies, Optimized};
 use crate::parallel::Strategy;
 use crate::plan::{ExecutionPlan, PlanCache, PlanKey};
+use crate::store::{PlanStore, StoreKey};
 use crate::util::sync::{lock, SingleFlightLru};
 use crate::verify::{verify_plan, VerifyReport};
 
@@ -179,6 +182,7 @@ pub struct PlanServiceBuilder {
     build_threads: usize,
     verify_loaded: bool,
     prune_dominated: bool,
+    store_dir: Option<PathBuf>,
 }
 
 impl PlanServiceBuilder {
@@ -232,9 +236,23 @@ impl PlanServiceBuilder {
     /// Whether externally supplied plans are statically verified before
     /// being admitted into the plan cache (default `true`; see
     /// [`PlanService::ingest`]). Disabling this trusts the artifact —
-    /// only sensible when every client is the planner itself.
+    /// only sensible when every client is the planner itself. Also
+    /// governs the on-disk [`plan_store`](PlanServiceBuilder::plan_store)
+    /// load gate (a store entry is an external artifact too).
     pub fn verify_loaded(mut self, verify: bool) -> PlanServiceBuilder {
         self.verify_loaded = verify;
+        self
+    }
+
+    /// Persist plans in (and serve them from) a content-addressed
+    /// on-disk store rooted at `dir` ([`crate::store`], DESIGN.md §13).
+    /// The plan path becomes shards → disk → build: a warm restart
+    /// answers previously planned requests byte-identically with zero
+    /// table builds. Loaded entries pass the [`verify_plan`] gate before
+    /// being served (unless verify-on-load is disabled); entries that
+    /// fail it are evicted, never served. Off by default.
+    pub fn plan_store(mut self, dir: impl Into<PathBuf>) -> PlanServiceBuilder {
+        self.store_dir = Some(dir.into());
         self
     }
 
@@ -255,13 +273,21 @@ impl PlanServiceBuilder {
                 "state memo capacity must be at least 1".into(),
             ));
         }
-        Ok(self.assemble())
+        let store = match &self.store_dir {
+            Some(dir) => Some(PlanStore::open(dir.clone())?),
+            None => None,
+        };
+        Ok(self.assemble(store))
     }
 
     /// Assemble without validating. Callers guarantee the counts are
     /// nonzero (`build` validates; `PlanService::new` uses the default
-    /// configuration, which is nonzero by construction).
-    fn assemble(self) -> PlanService {
+    /// configuration, which is nonzero by construction) and hand in the
+    /// already-opened store (`build` opens it; `new` has none).
+    fn assemble(self, store: Option<PlanStore>) -> PlanService {
+        // index every plan the shards can hold: a resident plan whose
+        // request key fell out of the index would be re-read from disk
+        let index_cap = self.shards.saturating_mul(self.shard_capacity).max(1);
         PlanService {
             backend: self.backend,
             shards: (0..self.shards)
@@ -272,11 +298,73 @@ impl PlanServiceBuilder {
             build_threads: self.build_threads,
             verify_loaded: self.verify_loaded,
             prune_dominated: self.prune_dominated,
+            store,
+            plan_index: Mutex::new(PlanIndex::new(index_cap)),
             table_builds: AtomicU64::new(0),
             searches: AtomicU64::new(0),
             build_waits: AtomicU64::new(0),
             pruned_configs: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            store_misses: AtomicU64::new(0),
+            store_writes: AtomicU64::new(0),
+            store_rejects: AtomicU64::new(0),
+            store_errors: AtomicU64::new(0),
+            accept_errors: AtomicU64::new(0),
         }
+    }
+}
+
+/// Request-level identity of a plan query: everything that determines
+/// the served bytes. Unlike [`PlanKey`] (which needs the resolved
+/// strategy's per-layer degrees), this key is computable *before* any
+/// table is built — which is what lets the disk fast path skip the
+/// resolve step entirely. Mirrors the on-disk [`StoreKey`] minus the
+/// service-constant pruning flag.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct RequestKey {
+    graph: GraphDigest,
+    cluster: ClusterFingerprint,
+    mem_limit: Option<u64>,
+    strategy: StrategyKind,
+}
+
+/// A bounded LRU from [`RequestKey`] to the [`PlanKey`] that answered it
+/// — the bridge between "what the client asked" and "where the plan
+/// lives", so warm requests go straight to their shard without resolving
+/// a strategy (and without re-reading the store).
+struct PlanIndex {
+    cap: usize,
+    tick: u64,
+    map: HashMap<RequestKey, (u64, PlanKey)>,
+}
+
+impl PlanIndex {
+    fn new(cap: usize) -> PlanIndex {
+        PlanIndex { cap, tick: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, key: &RequestKey) -> Option<PlanKey> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|(last_used, pkey)| {
+            *last_used = tick;
+            pkey.clone()
+        })
+    }
+
+    fn put(&mut self, key: RequestKey, pkey: PlanKey) {
+        self.tick += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (last_used, _))| *last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+            }
+        }
+        self.map.insert(key, (self.tick, pkey));
     }
 }
 
@@ -319,6 +407,25 @@ pub struct ServiceStats {
     /// builds ([`PlanServiceBuilder::prune_dominated`]; `0` unless
     /// enabled).
     pub pruned_configs: u64,
+    /// Plans served from the on-disk store, verified on load — each one
+    /// a whole (tables + search + build) pipeline skipped
+    /// ([`PlanServiceBuilder::plan_store`]; `0` without a store).
+    pub store_hits: u64,
+    /// Disk lookups that found no entry (counted only when a store is
+    /// configured; the request fell through to a build).
+    pub store_misses: u64,
+    /// Freshly built plans persisted to the store.
+    pub store_writes: u64,
+    /// Store entries rejected — unreadable, truncated, tampered, or
+    /// failing a [`verify_plan`] check on load — and evicted from disk,
+    /// so a bad entry is rebuilt once, never retried forever.
+    pub store_rejects: u64,
+    /// Store write failures (full disk, permissions): the plan was still
+    /// served from memory; only the persistence was lost.
+    pub store_errors: u64,
+    /// TCP accept errors observed by `optcnn serve`'s listener
+    /// ([`PlanService::note_accept_error`]; `0` off the wire).
+    pub accept_errors: u64,
 }
 
 /// A thread-safe plan-serving façade over the planning pipeline.
@@ -337,10 +444,22 @@ pub struct PlanService {
     build_threads: usize,
     verify_loaded: bool,
     prune_dominated: bool,
+    /// The optional on-disk plan store (DESIGN.md §13); the second tier
+    /// of the shards → disk → build lookup order.
+    store: Option<PlanStore>,
+    /// Request-key → plan-key bridge for the warm fast path (see
+    /// [`PlanIndex`]).
+    plan_index: Mutex<PlanIndex>,
     table_builds: AtomicU64,
     searches: AtomicU64,
     build_waits: AtomicU64,
     pruned_configs: AtomicU64,
+    store_hits: AtomicU64,
+    store_misses: AtomicU64,
+    store_writes: AtomicU64,
+    store_rejects: AtomicU64,
+    store_errors: AtomicU64,
+    accept_errors: AtomicU64,
 }
 
 /// How [`PlanService::ingest`] admitted an externally supplied plan.
@@ -362,8 +481,8 @@ impl PlanService {
     /// 32-entry state memo, [`Elimination`] search.
     pub fn new() -> PlanService {
         // The defaults are nonzero by construction, so this skips
-        // `build`'s validation and cannot fail.
-        PlanService::builder().assemble()
+        // `build`'s validation and cannot fail (no store to open).
+        PlanService::builder().assemble(None)
     }
 
     /// Start configuring a service.
@@ -376,6 +495,7 @@ impl PlanService {
             build_threads: 0,
             verify_loaded: true,
             prune_dominated: false,
+            store_dir: None,
         }
     }
 
@@ -489,13 +609,120 @@ impl PlanService {
         &self.shards[(h.finish() as usize) % self.shards.len()]
     }
 
-    /// Fetch-or-build through the sharded cache. The shard mutex spans
-    /// the build, so concurrent misses on one key build once (the
-    /// plan-level single flight) while other shards proceed untouched.
-    fn cached_plan(&self, cm: &CostModel<'_>, strategy: &Strategy) -> Arc<ExecutionPlan> {
-        let key = PlanKey::of(cm, strategy);
-        let mut shard = lock(self.shard_of(&key));
-        shard.get_or_build(cm, strategy)
+    /// The plan lookup order: **shards → disk → build** (DESIGN.md §13).
+    ///
+    /// 1. *Shards.* The [`PlanIndex`] maps the request key to the
+    ///    structural [`PlanKey`] that answered it before; a resident
+    ///    plan returns without resolving a strategy or touching disk.
+    /// 2. *Disk.* With a [`plan_store`](PlanServiceBuilder::plan_store)
+    ///    configured, a stored entry is loaded, re-verified, admitted
+    ///    into its shard, and served — **zero table builds**: this is
+    ///    the warm-restart path.
+    /// 3. *Build.* Resolve the strategy (tables + search for
+    ///    layer-wise), build through the sharded cache — whose mutex
+    ///    spans the build, so concurrent misses on one key build once —
+    ///    and persist the result for the next restart or replica.
+    fn fetch_plan(
+        &self,
+        req: &PlanRequest,
+        graph: &CompGraph,
+        devices: &DeviceGraph,
+    ) -> Result<Arc<ExecutionPlan>> {
+        let rkey = RequestKey {
+            graph: graph.digest().clone(),
+            cluster: devices.fingerprint(),
+            mem_limit: req.mem_limit,
+            strategy: req.strategy,
+        };
+        if let Some(pkey) = lock(&self.plan_index).get(&rkey) {
+            if let Some(plan) = lock(self.shard_of(&pkey)).lookup(&pkey) {
+                return Ok(plan);
+            }
+        }
+        if let Some(plan) = self.load_stored(&rkey, graph, devices) {
+            return Ok(plan);
+        }
+        let strategy = self.resolve(req, graph, devices)?;
+        let cm = CostModel::new(graph, devices);
+        let pkey = PlanKey::of(&cm, &strategy);
+        let plan = lock(self.shard_of(&pkey)).get_or_build(&cm, &strategy);
+        lock(&self.plan_index).put(rkey.clone(), pkey);
+        self.persist(&rkey, &plan);
+        Ok(plan)
+    }
+
+    /// The on-disk [`StoreKey`] for a request against this service (the
+    /// service-level pruning flag completes the content address).
+    fn store_key_of(&self, rkey: &RequestKey) -> StoreKey {
+        StoreKey::new(
+            &rkey.graph,
+            &rkey.cluster,
+            rkey.mem_limit,
+            rkey.strategy.name(),
+            self.prune_dominated,
+        )
+    }
+
+    /// The disk tier of [`fetch_plan`](Self::fetch_plan): load the
+    /// stored entry, gate it through [`verify_plan`] (the same trust
+    /// boundary as [`ingest`](Self::ingest), unless verify-on-load is
+    /// disabled), and admit it into its shard. Every failure mode —
+    /// absent, corrupt, tampered — degrades to `None` so the build path
+    /// always remains available; bad entries are evicted, never retried.
+    fn load_stored(
+        &self,
+        rkey: &RequestKey,
+        graph: &CompGraph,
+        devices: &DeviceGraph,
+    ) -> Option<Arc<ExecutionPlan>> {
+        let store = self.store.as_ref()?;
+        let skey = self.store_key_of(rkey);
+        let loaded = match store.load(&skey) {
+            Ok(Some(plan)) => plan,
+            Ok(None) => {
+                self.store_misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            Err(_) => {
+                // unreadable or corrupt: the store evicted it already
+                self.store_rejects.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        let cm = CostModel::new(graph, devices);
+        if self.verify_loaded && verify_plan(&cm, &loaded).is_err() {
+            store.evict(&skey);
+            self.store_rejects.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let plan = Arc::new(loaded);
+        let pkey = PlanKey::of(&cm, &plan.strategy());
+        lock(self.shard_of(&pkey)).insert(pkey.clone(), Arc::clone(&plan));
+        lock(&self.plan_index).put(rkey.clone(), pkey);
+        self.store_hits.fetch_add(1, Ordering::Relaxed);
+        Some(plan)
+    }
+
+    /// Best-effort persistence after a fresh build: the plan is already
+    /// in hand, so a full disk or bad permissions must not fail the
+    /// request — the loss is counted, not propagated.
+    fn persist(&self, rkey: &RequestKey, plan: &ExecutionPlan) {
+        let Some(store) = &self.store else { return };
+        match store.save_if_absent(&self.store_key_of(rkey), plan) {
+            Ok(true) => {
+                self.store_writes.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(false) => {}
+            Err(_) => {
+                self.store_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record one TCP accept failure (called by the `optcnn serve`
+    /// listener, which must count errors rather than silently retry).
+    pub fn note_accept_error(&self) {
+        self.accept_errors.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Admit an externally supplied plan at the service's trust boundary
@@ -530,23 +757,24 @@ impl PlanService {
         Ok(VerifyOutcome::Verified(report))
     }
 
-    /// The materialized execution plan for a request, served from the
-    /// sharded cache.
+    /// The materialized execution plan for a request, served shards →
+    /// disk → build ([`fetch_plan`](Self::fetch_plan)).
     pub fn plan(&self, req: &PlanRequest) -> Result<Arc<ExecutionPlan>> {
         let (graph, devices, _) = self.session(req)?;
-        let strategy = self.resolve(req, &graph, &devices)?;
-        let cm = CostModel::new(&graph, &devices);
-        Ok(self.cached_plan(&cm, &strategy))
+        self.fetch_plan(req, &graph, &devices)
     }
 
     /// Evaluate a request: Eq. 1 estimate, steady-state simulation, and
     /// communication volume — the same numbers a single-threaded
     /// [`Planner`](crate::planner::Planner) produces for the same query.
+    /// The strategy is read off the plan itself ([`ExecutionPlan::strategy`]
+    /// is exact — a plan records every per-layer configuration), so a
+    /// plan served from the store evaluates without resolving anything.
     pub fn evaluate(&self, req: &PlanRequest) -> Result<Evaluation> {
         let (graph, devices, global_batch) = self.session(req)?;
-        let strategy = self.resolve(req, &graph, &devices)?;
+        let plan = self.fetch_plan(req, &graph, &devices)?;
         let cm = CostModel::new(&graph, &devices);
-        let plan = self.cached_plan(&cm, &strategy);
+        let strategy = plan.strategy();
         Ok(evaluate_plan(&cm, &plan, &strategy, global_batch))
     }
 
@@ -642,6 +870,12 @@ impl PlanService {
                 0
             },
             pruned_configs: self.pruned_configs.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            store_misses: self.store_misses.load(Ordering::Relaxed),
+            store_writes: self.store_writes.load(Ordering::Relaxed),
+            store_rejects: self.store_rejects.load(Ordering::Relaxed),
+            store_errors: self.store_errors.load(Ordering::Relaxed),
+            accept_errors: self.accept_errors.load(Ordering::Relaxed),
         }
     }
 
@@ -682,15 +916,31 @@ mod tests {
 
     #[test]
     fn state_memo_is_lru_bounded() {
+        // `optimized` always consults the state memo (no plan-index fast
+        // path in front of it), so alternation shows the LRU bound
         let service = PlanService::builder().state_capacity(1).build().unwrap();
         let small = PlanRequest::new(Network::LeNet5, 2).unwrap();
         let big = PlanRequest::new(Network::LeNet5, 2).unwrap().per_gpu_batch(16);
-        service.plan(&small).unwrap(); // build #1
-        service.plan(&big).unwrap(); // evicts `small`'s state: build #2
-        service.plan(&small).unwrap(); // re-entered the memo: build #3
+        service.optimized(&small).unwrap(); // build #1
+        service.optimized(&big).unwrap(); // evicts `small`'s state: build #2
+        service.optimized(&small).unwrap(); // re-entered the memo: build #3
         let s = service.stats();
         assert_eq!(s.table_builds, 3, "capacity 1 forces re-builds on alternation");
         assert_eq!(s.states_cached, 1, "the memo never exceeds its capacity");
+    }
+
+    #[test]
+    fn warm_plans_skip_the_state_memo_entirely() {
+        // the request->plan index answers repeat plans without touching
+        // the (capacity-1) state memo: no rebuild on alternation
+        let service = PlanService::builder().state_capacity(1).build().unwrap();
+        let small = PlanRequest::new(Network::LeNet5, 2).unwrap();
+        let big = PlanRequest::new(Network::LeNet5, 2).unwrap().per_gpu_batch(16);
+        let first = service.plan(&small).unwrap(); // build #1
+        service.plan(&big).unwrap(); // evicts `small`'s state: build #2
+        let again = service.plan(&small).unwrap(); // plan-index hit: no build
+        assert!(Arc::ptr_eq(&first, &again), "served the resident plan object");
+        assert_eq!(service.stats().table_builds, 2, "warm plans never rebuild state");
     }
 
     #[test]

@@ -26,7 +26,7 @@ impl Engine {
         bail!(
             "optcnn was built without the `pjrt` feature: PJRT execution of AOT \
              artifacts is unavailable (vendor the `xla` crate and rebuild with \
-             `--features pjrt`; see DESIGN.md §13)"
+             `--features pjrt`; see DESIGN.md §14)"
         )
     }
 

@@ -14,7 +14,7 @@
 //! bindings crate is not in the offline registry); the default build
 //! ships a stub [`Engine`] with the same API that errors at construction,
 //! so the rest of the system — cost model, optimizer, simulator, plans —
-//! builds and tests with zero external native dependencies (DESIGN.md §13).
+//! builds and tests with zero external native dependencies (DESIGN.md §14).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

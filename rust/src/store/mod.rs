@@ -1,0 +1,309 @@
+//! The content-addressed on-disk plan store (DESIGN.md §13).
+//!
+//! A materialized [`ExecutionPlan`] is the expensive artifact of the
+//! whole pipeline — tables, search, plan build — yet it is exact and
+//! deterministic for its inputs, so it is worth persisting: a restarted
+//! or horizontally scaled `optcnn serve` can answer a previously planned
+//! request with **zero table builds** by reading the plan back instead
+//! of re-deriving it. The store is a flat directory of single-plan JSON
+//! documents (the exact plan-JSON-v3 `optcnn plan --out` writes, wrapped
+//! in a small envelope), content-addressed by everything that determines
+//! the plan's bytes:
+//!
+//! * the graph's structural [`GraphDigest`] canonical form (which
+//!   already encodes the global batch via the input shape),
+//! * the cluster's [`ClusterFingerprint`] canonical form,
+//! * the optional per-device memory limit,
+//! * the strategy kind, and
+//! * whether dominance pruning was enabled (exact either way, but part
+//!   of the key so the provenance of an entry is never ambiguous).
+//!
+//! The file name is an FNV-1a 128 hash of that canonical key string —
+//! hand-rolled because `DefaultHasher` promises nothing across Rust
+//! versions, and a store must outlive the binary that wrote it. The full
+//! key string is embedded in the envelope and compared on load, so even
+//! a hash collision (or a misfiled entry) reads back as "not this plan",
+//! never as the wrong plan.
+//!
+//! **Durability and concurrency.** Writes go to a temp file in the store
+//! directory followed by an atomic `rename`, so readers and concurrent
+//! writers only ever observe complete entries — two servers racing to
+//! persist the same plan both write valid bytes and the last rename
+//! wins, losing nothing (the bytes are identical by determinism).
+//!
+//! **Trust boundary.** The store itself only checks well-formedness and
+//! the content address. A loaded plan is *served* only after the caller
+//! re-verifies it against the freshly built cost model
+//! ([`crate::verify::verify_plan`], DESIGN.md §10) — the same gate
+//! externally supplied plans pass through — so a tampered entry is
+//! rejected and [`evicted`](PlanStore::evict), never served and never
+//! retried forever. [`PlanService`](crate::planner::PlanService) wires
+//! this up behind [`plan_store`](crate::planner::service::PlanServiceBuilder::plan_store);
+//! its lookup order is shards → disk → build.
+
+// Disk-facing load path: a corrupt or hostile store entry must come
+// back as a typed `OptError`, never a panic in a serving thread.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::device::ClusterFingerprint;
+use crate::error::{OptError, Result};
+use crate::graph::GraphDigest;
+use crate::plan::ExecutionPlan;
+use crate::util::json::Json;
+
+/// Version of the on-disk envelope (the `plan` payload inside it is
+/// versioned separately by the plan-JSON document itself).
+const FORMAT_VERSION: usize = 1;
+
+/// The content address of one stored plan: the canonical key string
+/// (embedded in the entry and compared on load) plus the file name
+/// derived from its stable hash.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreKey {
+    canon: String,
+    file: String,
+}
+
+impl StoreKey {
+    /// Build the key for a (graph, cluster, memory limit, strategy,
+    /// pruning) request. `strategy` is the canonical
+    /// [`StrategyKind::name`](crate::planner::StrategyKind::name).
+    pub fn new(
+        graph: &GraphDigest,
+        cluster: &ClusterFingerprint,
+        mem_limit: Option<u64>,
+        strategy: &str,
+        prune_dominated: bool,
+    ) -> StoreKey {
+        let mem = match mem_limit {
+            None => "none".to_string(),
+            Some(b) => format!("{b:016x}"),
+        };
+        let canon = format!(
+            "v{FORMAT_VERSION};strategy={strategy};mem={mem};prune={};cluster={};graph={}",
+            u8::from(prune_dominated),
+            cluster.canonical(),
+            graph.canonical(),
+        );
+        let file = format!("plan-{:032x}.json", fnv1a_128(canon.as_bytes()));
+        StoreKey { canon, file }
+    }
+
+    /// The canonical key string this entry is addressed by.
+    pub fn canonical(&self) -> &str {
+        &self.canon
+    }
+
+    /// The entry's file name inside the store directory.
+    pub fn file_name(&self) -> &str {
+        &self.file
+    }
+}
+
+/// FNV-1a, 128-bit: stable across processes, architectures, and Rust
+/// versions (the reason `DefaultHasher` is not used here), and wide
+/// enough that accidental collisions are negligible — deliberate ones
+/// are caught by the embedded-key comparison on load.
+fn fnv1a_128(bytes: &[u8]) -> u128 {
+    const OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+    const PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= u128::from(b);
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// A directory of content-addressed plan entries. `Send + Sync`; all
+/// methods take `&self`, so one store is shared by every serving thread.
+#[derive(Debug)]
+pub struct PlanStore {
+    dir: PathBuf,
+    /// Uniquifies temp-file names within this process (the pid
+    /// distinguishes processes), so concurrent writers never share a
+    /// temp file even for the same key.
+    seq: AtomicU64,
+}
+
+impl PlanStore {
+    /// Open (creating if needed) the store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<PlanStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| OptError::Io(format!("plan store mkdir {}: {e}", dir.display())))?;
+        Ok(PlanStore { dir, seq: AtomicU64::new(0) })
+    }
+
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The path an entry for `key` lives at (whether or not it exists).
+    pub fn path(&self, key: &StoreKey) -> PathBuf {
+        self.dir.join(&key.file)
+    }
+
+    /// Whether an entry for `key` exists on disk (without reading it).
+    pub fn contains(&self, key: &StoreKey) -> bool {
+        self.path(key).exists()
+    }
+
+    /// Number of plan entries currently on disk (temp files excluded).
+    pub fn len(&self) -> usize {
+        let Ok(entries) = fs::read_dir(&self.dir) else { return 0 };
+        entries
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                name.starts_with("plan-") && name.ends_with(".json")
+            })
+            .count()
+    }
+
+    /// Whether the store holds no plan entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load the entry for `key`.
+    ///
+    /// * `Ok(Some(plan))` — present, well-formed, and its embedded key
+    ///   matches. **Not yet verified**: callers must gate it through
+    ///   [`verify_plan`](crate::verify::verify_plan) before serving.
+    /// * `Ok(None)` — no entry.
+    /// * `Err(_)` — the entry was unreadable, malformed, truncated, or
+    ///   carried a mismatched key; it has been evicted from disk so the
+    ///   next request rebuilds instead of retrying the same bad bytes.
+    pub fn load(&self, key: &StoreKey) -> Result<Option<ExecutionPlan>> {
+        let path = self.path(key);
+        let text = match fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(OptError::Io(format!("plan store read {}: {e}", path.display())));
+            }
+        };
+        match decode(&text, key) {
+            Ok(plan) => Ok(Some(plan)),
+            Err(why) => {
+                let _ = fs::remove_file(&path);
+                Err(OptError::Io(format!("plan store entry {}: {why}; evicted", key.file)))
+            }
+        }
+    }
+
+    /// Persist `plan` under `key` via temp file + atomic rename.
+    /// Overwrites any existing entry (by determinism the bytes are the
+    /// same unless the old entry was corrupt — either way the new write
+    /// is the truth).
+    pub fn save(&self, key: &StoreKey, plan: &ExecutionPlan) -> Result<()> {
+        let doc = Json::obj(vec![
+            ("version", Json::Num(FORMAT_VERSION as f64)),
+            ("key", Json::Str(key.canon.clone())),
+            ("plan", plan.to_json()),
+        ]);
+        let mut text = doc.to_string();
+        text.push('\n');
+        let tmp = self.dir.join(format!(
+            ".{}.tmp-{}-{}",
+            key.file,
+            std::process::id(),
+            self.seq.fetch_add(1, Ordering::Relaxed),
+        ));
+        fs::write(&tmp, text.as_bytes())
+            .map_err(|e| OptError::Io(format!("plan store write {}: {e}", tmp.display())))?;
+        fs::rename(&tmp, self.path(key)).map_err(|e| {
+            let _ = fs::remove_file(&tmp);
+            OptError::Io(format!("plan store commit {}: {e}", key.file))
+        })
+    }
+
+    /// [`save`](PlanStore::save) only when no entry exists yet; returns
+    /// whether a write happened. The existence check is advisory (a racy
+    /// duplicate write is harmless — identical bytes, atomic rename);
+    /// its purpose is to keep warm traffic from re-serializing plans.
+    pub fn save_if_absent(&self, key: &StoreKey, plan: &ExecutionPlan) -> Result<bool> {
+        if self.contains(key) {
+            return Ok(false);
+        }
+        self.save(key, plan)?;
+        Ok(true)
+    }
+
+    /// Remove the entry for `key`; reports whether one existed. Used by
+    /// the service when a loaded plan fails verification — the entry
+    /// must not be retried forever.
+    pub fn evict(&self, key: &StoreKey) -> bool {
+        fs::remove_file(self.path(key)).is_ok()
+    }
+}
+
+/// Decode and authenticate one entry against the key it was looked up
+/// under. String errors here become the eviction reason.
+fn decode(text: &str, key: &StoreKey) -> std::result::Result<ExecutionPlan, String> {
+    let v = Json::parse(text).map_err(|e| format!("malformed JSON: {e}"))?;
+    match v.get("version").and_then(Json::as_exact_usize) {
+        Some(FORMAT_VERSION) => {}
+        other => return Err(format!("unsupported store version {other:?}")),
+    }
+    let embedded = v.get("key").and_then(Json::as_str).ok_or("missing `key` string")?;
+    if embedded != key.canon {
+        return Err("content-address mismatch (collision or misfiled entry)".to_string());
+    }
+    let doc = v.get("plan").ok_or("missing `plan` object")?;
+    ExecutionPlan::from_json(doc)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_published_vectors() {
+        // the canonical 128-bit FNV-1a test vectors (fnvhash.com)
+        assert_eq!(fnv1a_128(b""), 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d);
+        assert_eq!(fnv1a_128(b"a"), 0xd228_cb69_6f1a_8caf_78912b704e4a8964);
+    }
+
+    #[test]
+    fn keys_are_stable_and_field_sensitive() {
+        let d = crate::device::DeviceGraph::p100_cluster(2).unwrap();
+        let g = crate::graph::nets::lenet5(64).unwrap();
+        let base = StoreKey::new(g.digest(), &d.fingerprint(), None, "layerwise", false);
+        let again = StoreKey::new(g.digest(), &d.fingerprint(), None, "layerwise", false);
+        assert_eq!(base, again, "key construction is deterministic");
+        assert!(base.file_name().starts_with("plan-") && base.file_name().ends_with(".json"));
+        // every key ingredient separates the address
+        for other in [
+            StoreKey::new(g.digest(), &d.fingerprint(), Some(1 << 30), "layerwise", false),
+            StoreKey::new(g.digest(), &d.fingerprint(), None, "data", false),
+            StoreKey::new(g.digest(), &d.fingerprint(), None, "layerwise", true),
+            StoreKey::new(
+                crate::graph::nets::lenet5(128).unwrap().digest(),
+                &d.fingerprint(),
+                None,
+                "layerwise",
+                false,
+            ),
+            StoreKey::new(
+                g.digest(),
+                &crate::device::DeviceGraph::p100_cluster(4).unwrap().fingerprint(),
+                None,
+                "layerwise",
+                false,
+            ),
+        ] {
+            assert_ne!(base.file_name(), other.file_name());
+            assert_ne!(base.canonical(), other.canonical());
+        }
+    }
+}

@@ -72,6 +72,22 @@ impl Json {
         }
     }
 
+    /// Strict non-negative integer as `u64`, mirroring
+    /// [`Json::as_exact_usize`] for byte counts that are `u64` on every
+    /// platform. An `f64` wire value is exact only up to 2^53, so the
+    /// practical range is identical; the point of a dedicated accessor
+    /// is that the caller never writes the `fract()`/bound dance inline.
+    pub fn as_exact_u64(&self) -> Option<u64> {
+        let n = self.as_f64()?;
+        // exclusive upper bound: `u64::MAX as f64` rounds UP to 2^64,
+        // which an inclusive check would accept and then saturate
+        if n.fract() == 0.0 && n >= 0.0 && n < u64::MAX as f64 {
+            Some(n as u64)
+        } else {
+            None
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -388,6 +404,18 @@ mod tests {
         assert_eq!(Json::Num(18446744073709551616.0).as_exact_usize(), None);
         assert_eq!(Json::Num(f64::INFINITY).as_exact_usize(), None);
         assert_eq!(Json::Num(f64::NAN).as_exact_usize(), None);
+    }
+
+    #[test]
+    fn exact_u64_mirrors_exact_usize() {
+        assert_eq!(Json::Num(3.0).as_exact_u64(), Some(3));
+        assert_eq!(Json::Num(0.0).as_exact_u64(), Some(0));
+        assert_eq!(Json::Num(9007199254740992.0).as_exact_u64(), Some(1 << 53));
+        assert_eq!(Json::Num(2.5).as_exact_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_exact_u64(), None);
+        assert_eq!(Json::Num(18446744073709551616.0).as_exact_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_exact_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_exact_u64(), None);
     }
 
     #[test]

@@ -30,10 +30,16 @@ use optcnn::graph::{CompGraph, GraphBuilder};
 use optcnn::memory::MemBudget;
 use optcnn::parallel::enumerate_configs;
 use optcnn::planner::backend::{Elimination, ExhaustiveDfs, SearchBackend};
-use optcnn::planner::serve::handle_line;
+use optcnn::planner::serve::{handle_line as serve_handle_line, ServeMetrics};
 use optcnn::planner::{Network, PlanService, Planner, MAX_RESIDUAL_SPACE_LOG2};
 use optcnn::prop::forall;
 use optcnn::util::json::Json;
+
+/// The serving core with a throwaway metrics sink — these tests are
+/// about the analyze protocol, not wire latency.
+fn handle_line(service: &PlanService, line: &str) -> String {
+    serve_handle_line(service, &ServeMetrics::default(), line)
+}
 
 /// Cost tables on which branch-and-bound can never prune, so the DFS
 /// walks its entire search tree and `visited` becomes exactly

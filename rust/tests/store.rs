@@ -1,0 +1,238 @@
+//! Integration suite for the content-addressed plan store (DESIGN.md
+//! §13): round-trip byte identity, the warm-restart zero-build path,
+//! rejection + eviction of truncated/corrupted/tampered entries behind
+//! the verify gate, content-address authentication of misfiled entries,
+//! and atomic-rename safety under concurrent writers.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+
+use optcnn::device::DeviceGraph;
+use optcnn::planner::{Network, PlanRequest, PlanService, StrategyKind};
+use optcnn::store::{PlanStore, StoreKey};
+use optcnn::util::json::Json;
+
+/// A fresh per-(test, process) scratch directory. Tests remove it on
+/// success; a failure leaves it behind for inspection.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("optcnn-store-test-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn service_with_store(dir: &Path) -> PlanService {
+    PlanService::builder().plan_store(dir).build().unwrap()
+}
+
+/// The store key the service computes for a default LeNet-5 request at
+/// 2 devices (per-GPU batch 32 -> global batch 64) with `strategy`.
+fn lenet5_key(strategy: StrategyKind) -> StoreKey {
+    let graph = optcnn::graph::nets::lenet5(64).unwrap();
+    let devices = DeviceGraph::p100_cluster(2).unwrap();
+    StoreKey::new(graph.digest(), &devices.fingerprint(), None, strategy.name(), false)
+}
+
+#[test]
+fn round_trips_are_byte_identical() {
+    let dir = scratch("roundtrip");
+    let service = service_with_store(&dir);
+    let req = PlanRequest::new(Network::LeNet5, 2).unwrap().strategy(StrategyKind::Data);
+    let built = service.plan(&req).unwrap();
+
+    let store = PlanStore::open(&dir).unwrap();
+    let key = lenet5_key(StrategyKind::Data);
+    assert!(store.contains(&key), "the service persisted under the documented content address");
+    assert_eq!(store.len(), 1);
+    let loaded = store.load(&key).unwrap().unwrap();
+    assert_eq!(
+        loaded.to_json().to_string(),
+        built.to_json().to_string(),
+        "a stored plan reads back byte-identical"
+    );
+    // absent keys are a clean miss, and eviction reports honestly
+    let other = lenet5_key(StrategyKind::Owt);
+    assert!(store.load(&other).unwrap().is_none());
+    assert!(store.evict(&key));
+    assert!(!store.evict(&key), "double eviction finds nothing");
+    assert!(store.load(&key).unwrap().is_none());
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_restart_serves_with_zero_table_builds() {
+    let dir = scratch("warm-restart");
+    let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+
+    // cold service: builds tables, runs the search, persists the plan
+    let cold = service_with_store(&dir);
+    let built = cold.plan(&req).unwrap();
+    let s = cold.stats();
+    assert_eq!(s.table_builds, 1);
+    assert_eq!(s.store_misses, 1, "the cold request checked disk before building");
+    assert_eq!(s.store_writes, 1, "the fresh build was persisted");
+    drop(cold);
+
+    // "restarted" service on the same directory: the plan comes off
+    // disk through the verify gate — no tables, no search
+    let warm = service_with_store(&dir);
+    let served = warm.plan(&req).unwrap();
+    assert_eq!(
+        served.to_json().to_string(),
+        built.to_json().to_string(),
+        "warm restart serves byte-identical bytes"
+    );
+    let s = warm.stats();
+    assert_eq!(s.table_builds, 0, "warm restart must build nothing");
+    assert_eq!(s.searches, 0);
+    assert_eq!(s.store_hits, 1);
+    assert_eq!(s.store_rejects, 0);
+
+    // repeat traffic is answered by the in-memory tier: the disk is
+    // not re-read, and still nothing is built
+    let again = warm.plan(&req).unwrap();
+    assert!(Arc::ptr_eq(&served, &again));
+    let s = warm.stats();
+    assert_eq!((s.table_builds, s.store_hits), (0, 1), "one disk read serves all warm repeats");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn evaluate_also_rides_the_store_and_matches_the_cold_numbers() {
+    let dir = scratch("warm-evaluate");
+    let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+    let cold = service_with_store(&dir);
+    let reference = cold.evaluate(&req).unwrap();
+    drop(cold);
+
+    let warm = service_with_store(&dir);
+    let eval = warm.evaluate(&req).unwrap();
+    assert_eq!(eval.estimate, reference.estimate);
+    assert_eq!(eval.sim.step_time, reference.sim.step_time);
+    assert_eq!(eval.throughput, reference.throughput);
+    assert_eq!(warm.stats().table_builds, 0, "evaluation of a stored plan builds nothing");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Every way an entry can be bad on disk: unparsable, truncated, and
+/// well-formed-but-tampered (which only the verify gate can catch). In
+/// each case the service must reject, evict, rebuild correctly, and
+/// re-persist — never serve the bad bytes, never retry them forever.
+#[test]
+fn bad_entries_are_rejected_evicted_and_rebuilt() {
+    let key = lenet5_key(StrategyKind::Layerwise);
+    let req = PlanRequest::new(Network::LeNet5, 2).unwrap();
+
+    // the pristine reference entry, written once
+    let dir = scratch("bad-entries");
+    let reference = service_with_store(&dir).plan(&req).unwrap().to_json().to_string();
+    let store = PlanStore::open(&dir).unwrap();
+    let pristine = fs::read_to_string(store.path(&key)).unwrap();
+
+    let corruptions: Vec<(&str, String)> = vec![
+        ("garbage", "not json at all".to_string()),
+        ("truncated", pristine[..pristine.len() / 2].to_string()),
+        ("tampered", tamper_cost(&pristine)),
+    ];
+    for (what, bytes) in corruptions {
+        fs::write(store.path(&key), bytes).unwrap();
+        let service = service_with_store(&dir);
+        let served = service.plan(&req).unwrap();
+        assert_eq!(served.to_json().to_string(), reference, "{what}: rebuilt correctly");
+        let s = service.stats();
+        assert_eq!(s.store_rejects, 1, "{what}: the bad entry was rejected");
+        assert_eq!(s.store_hits, 0, "{what}: a bad entry is never a hit");
+        assert_eq!(s.table_builds, 1, "{what}: rejection falls back to a real build");
+        // the rebuild re-persisted a pristine entry (eviction, not
+        // permanent poisoning): the next restart is warm again
+        assert_eq!(fs::read_to_string(store.path(&key)).unwrap(), pristine, "{what}");
+        let healed = service_with_store(&dir);
+        healed.plan(&req).unwrap();
+        let s = healed.stats();
+        assert_eq!((s.table_builds, s.store_hits), (0, 1), "{what}: healed store is warm");
+    }
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Flip one bit of the plan's recorded cost inside an otherwise
+/// well-formed envelope: the store's own decoding accepts it, so only
+/// the `verify_plan` gate stands between it and a client.
+fn tamper_cost(pristine: &str) -> String {
+    let mut v = Json::parse(pristine).unwrap();
+    let Json::Obj(envelope) = &mut v else { panic!("envelope must be an object") };
+    let Some(Json::Obj(plan)) = envelope.get_mut("plan") else { panic!("plan must be an object") };
+    let Some(Json::Num(cost)) = plan.get_mut("cost_s") else { panic!("cost_s must be a number") };
+    *cost += 1.0;
+    v.to_string()
+}
+
+#[test]
+fn misfiled_entries_fail_the_content_address_check() {
+    let dir = scratch("misfiled");
+    let service = service_with_store(&dir);
+    let data = PlanRequest::new(Network::LeNet5, 2).unwrap().strategy(StrategyKind::Data);
+    service.plan(&data).unwrap();
+    drop(service);
+
+    // file the data-parallel entry under the OWT address: a hash
+    // collision or an operator mixing up files looks exactly like this
+    let store = PlanStore::open(&dir).unwrap();
+    let data_key = lenet5_key(StrategyKind::Data);
+    let owt_key = lenet5_key(StrategyKind::Owt);
+    fs::copy(store.path(&data_key), store.path(&owt_key)).unwrap();
+
+    // the embedded canonical key disagrees with the address: the load
+    // is an eviction, and the service rebuilds the real OWT plan
+    let owt = PlanRequest::new(Network::LeNet5, 2).unwrap().strategy(StrategyKind::Owt);
+    let service = service_with_store(&dir);
+    let plan = service.plan(&owt).unwrap();
+    let expected = PlanService::new().plan(&owt).unwrap();
+    assert_eq!(plan.to_json().to_string(), expected.to_json().to_string());
+    assert_eq!(service.stats().store_rejects, 1);
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_writers_race_safely_through_atomic_renames() {
+    let dir = scratch("writers");
+    // one plan, built without a store, written by many racing threads
+    let req = PlanRequest::new(Network::LeNet5, 2).unwrap().strategy(StrategyKind::Data);
+    let plan = PlanService::new().plan(&req).unwrap();
+    let key = lenet5_key(StrategyKind::Data);
+
+    let store = Arc::new(PlanStore::open(&dir).unwrap());
+    let threads = 8;
+    let barrier = Arc::new(Barrier::new(threads));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let store = Arc::clone(&store);
+            let barrier = Arc::clone(&barrier);
+            let plan = Arc::clone(&plan);
+            let key = key.clone();
+            scope.spawn(move || {
+                barrier.wait();
+                store.save(&key, &plan).unwrap();
+                // readers racing the writers see complete entries or
+                // nothing — never a torn file
+                if let Some(loaded) = store.load(&key).unwrap() {
+                    assert_eq!(loaded.to_json().to_string(), plan.to_json().to_string());
+                }
+            });
+        }
+    });
+
+    // exactly one entry, no leaked temp files, and it reads back clean
+    assert_eq!(store.len(), 1);
+    let leftovers = fs::read_dir(&dir).unwrap().count();
+    assert_eq!(leftovers, 1, "no temp files survive the race");
+    let loaded = store.load(&key).unwrap().unwrap();
+    assert_eq!(loaded.to_json().to_string(), plan.to_json().to_string());
+    assert!(!store.save_if_absent(&key, &plan).unwrap(), "present entries are not re-written");
+
+    let _ = fs::remove_dir_all(&dir);
+}
